@@ -1,0 +1,95 @@
+//! §7: multi-pass planning when some tensor sizes resolve only at run time
+//! (e.g. LSTM sequence lengths).
+//!
+//! ```sh
+//! cargo run --release --offline --example dynamic_shapes
+//! ```
+//!
+//! Synthesizes an RNN-ish workload where a fraction of tensors' sizes become
+//! known mid-inference, runs the paper's multi-pass protocol, and reports
+//! the footprint penalty relative to a size-omniscient oracle.
+
+use tensorarena::planner::dynamic::{DynamicRecord, MultiPassPlanner};
+use tensorarena::records::{UsageRecord, UsageRecords};
+use tensorarena::rng::SplitMix64;
+
+fn synth(seed: u64, n_ops: usize, dynamic_fraction: f64) -> Vec<DynamicRecord> {
+    let mut rng = SplitMix64::new(seed);
+    let mut recs = Vec::new();
+    for i in 0..n_ops {
+        // chain tensor i -> i+1
+        let size = 64 * rng.next_range(1, 64);
+        // ~dynamic_fraction of tensors resolve after their producer's
+        // predecessor executes (a decode-step length becoming known).
+        let known_at = if (rng.next_u64() as f64 / u64::MAX as f64) < dynamic_fraction && i > 0 {
+            i - 1
+        } else {
+            0
+        };
+        recs.push(DynamicRecord {
+            record: UsageRecord {
+                id: recs.len(),
+                tensor: None,
+                first_op: i,
+                last_op: (i + 1).min(n_ops - 1),
+                size,
+            },
+            known_at,
+        });
+        // occasional skip connection
+        if i % 7 == 3 {
+            let span = rng.next_range(2, 5);
+            recs.push(DynamicRecord {
+                record: UsageRecord {
+                    id: recs.len(),
+                    tensor: None,
+                    first_op: i,
+                    last_op: (i + span).min(n_ops - 1),
+                    size: 64 * rng.next_range(1, 16),
+                },
+                known_at: 0,
+            });
+        }
+    }
+    recs
+}
+
+fn main() {
+    println!("== §7: multi-pass planning for dynamically-sized tensors ==\n");
+    println!("{:>8} {:>8} {:>12} {:>12} {:>9}", "dyn frac", "passes", "multi (KiB)", "oracle (KiB)", "penalty");
+    for &frac in &[0.0, 0.1, 0.25, 0.5, 0.9] {
+        let mut penalty_sum = 0.0;
+        let mut passes = 0;
+        let mut multi_kib = 0.0;
+        let mut oracle_kib = 0.0;
+        let trials = 20;
+        for seed in 0..trials {
+            let dynamic = synth(seed, 64, frac);
+            let num_ops = 64;
+            let mp = MultiPassPlanner.plan(&dynamic, num_ops);
+            let records = UsageRecords {
+                records: dynamic.iter().map(|d| d.record).collect(),
+                num_ops,
+            };
+            mp.plan.validate(&records).expect("multi-pass plan feasible");
+            let oracle = tensorarena::planner::OffsetPlanner::plan(
+                &tensorarena::planner::offset::GreedyBySize,
+                &records,
+            );
+            penalty_sum += mp.plan.total_size() as f64 / oracle.total_size() as f64;
+            passes += mp.passes;
+            multi_kib += mp.plan.total_size() as f64 / 1024.0;
+            oracle_kib += oracle.total_size() as f64 / 1024.0;
+        }
+        let t = trials as f64;
+        println!(
+            "{:>8.2} {:>8.1} {:>12.1} {:>12.1} {:>8.3}x",
+            frac,
+            passes as f64 / t,
+            multi_kib / t,
+            oracle_kib / t,
+            penalty_sum / t
+        );
+    }
+    println!("\npenalty = multi-pass arena / oracle single-pass arena (1.0 = no cost).");
+}

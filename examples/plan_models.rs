@@ -1,0 +1,71 @@
+//! Regenerate the paper's Tables 1 and 2 over the six evaluation networks,
+//! plus the §1 headline ratios.
+//!
+//! ```sh
+//! cargo run --release --offline --example plan_models
+//! ```
+
+use tensorarena::models;
+use tensorarena::records::UsageRecords;
+use tensorarena::report;
+
+fn main() {
+    let t1 = report::table1();
+    print!("{}", t1.render());
+    println!();
+    let t2 = report::table2();
+    print!("{}", t2.render());
+
+    // §1: "up to 10.5x smaller memory footprint than running inference
+    // without one" — naive / best offset strategy.
+    println!("\nNaive / best-offset-strategy ratio (paper: up to 10.5x):");
+    let naive = &t2.rows.last().unwrap().1;
+    for (i, col) in t2.columns.iter().enumerate() {
+        let best = t2
+            .rows
+            .iter()
+            .filter(|(n, _)| n != "Naive" && n != "Lower Bound")
+            .map(|(_, v)| v[i])
+            .fold(f64::INFINITY, f64::min);
+        println!("  {col:>14}: {:>5.1}x", naive[i] / best);
+    }
+
+    // Lower-bound attainment, the paper's §6 discussion.
+    println!("\nGreedy-by-Size offset plan vs lower bound (1.00 = optimal):");
+    for g in models::all_zoo() {
+        let recs = UsageRecords::from_graph(&g);
+        let plan =
+            tensorarena::planner::OffsetPlanner::plan(&tensorarena::planner::offset::GreedyBySize, &recs);
+        let lb = recs.profiles().offset_lower_bound();
+        println!(
+            "  {:>14}: {:.3}",
+            g.name,
+            plan.total_size() as f64 / lb as f64
+        );
+    }
+
+    // Quantized-deployment study: the paper's size_t is *aligned* bytes, so
+    // F16/U8 arenas do not shrink by exactly 2x/4x on small-tensor nets.
+    println!("\nGreedy-by-Size arena by dtype (MiB; reduction vs F32 in parens):");
+    use tensorarena::graph::DType;
+    use tensorarena::planner::{offset::GreedyBySize, OffsetPlanner};
+    const MIB: f64 = 1024.0 * 1024.0;
+    for g in models::all_zoo() {
+        let mut row = format!("  {:>14}:", g.name);
+        let f32_size = {
+            let recs = UsageRecords::from_graph(&g);
+            GreedyBySize.plan(&recs).total_size()
+        };
+        for dt in [DType::F32, DType::F16, DType::U8] {
+            let gq = models::with_dtype(&g, dt);
+            let recs = UsageRecords::from_graph(&gq);
+            let sz = GreedyBySize.plan(&recs).total_size();
+            row.push_str(&format!(
+                " {:>7.3} ({:.2}x)",
+                sz as f64 / MIB,
+                f32_size as f64 / sz as f64
+            ));
+        }
+        println!("{row}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Quickstart: the paper's running example (Figures 1–6) end to end.
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+//!
+//! Builds the Figure-1 network, extracts §3 usage records and operator
+//! profiles, runs every §4/§5 strategy, and prints the resulting
+//! assignments the way Figures 3–6 draw them.
+
+use tensorarena::models::{example_records, EXAMPLE_UNIT};
+use tensorarena::planner::{table1_strategies, table2_strategies};
+
+fn main() {
+    let recs = example_records();
+    let profiles = recs.profiles();
+
+    println!("== Figure 1/2: the example network ==");
+    println!("(sizes in the figure's abstract units; 1 unit = {EXAMPLE_UNIT} B)");
+    println!("\ntensor usage records (§3):");
+    for r in &recs.records {
+        println!("  t{}: first_op={} last_op={} size={}", r.id, r.first_op, r.last_op, r.size);
+    }
+    println!("\noperator profiles (sizes, descending) and breadths:");
+    for op in 0..profiles.num_ops() {
+        let sizes: Vec<usize> = profiles
+            .profile(op)
+            .iter()
+            .map(|&i| recs.records[i].size)
+            .collect();
+        println!("  op{}: {:?} breadth={}", op, sizes, profiles.breadth(op));
+    }
+    println!("\npositional maximums: {:?}", profiles.positional_maximums());
+    println!(
+        "shared-objects lower bound (sum) = {}, offset lower bound (max breadth) = {}",
+        profiles.shared_objects_lower_bound(),
+        profiles.offset_lower_bound()
+    );
+
+    println!("\n== §4 Shared Objects (Figures 3-5) ==");
+    for strat in table1_strategies() {
+        let plan = strat.plan(&recs);
+        plan.validate(&recs).expect("feasible");
+        let mut members: Vec<String> = Vec::new();
+        for (i, &sz) in plan.object_sizes.iter().enumerate() {
+            let ts: Vec<String> = recs
+                .records
+                .iter()
+                .filter(|r| plan.assignment[r.id] == i)
+                .map(|r| format!("t{}", r.id))
+                .collect();
+            members.push(format!("obj{i}[{sz}]={{{}}}", ts.join(",")));
+        }
+        println!(
+            "  {:<34} total={:<4} {}",
+            strat.name(),
+            plan.total_size(),
+            members.join(" ")
+        );
+    }
+
+    println!("\n== §5 Offset Calculation (Figure 6) ==");
+    for strat in table2_strategies() {
+        let plan = strat.plan(&recs);
+        plan.validate(&recs).expect("feasible");
+        let spans: Vec<String> = recs
+            .records
+            .iter()
+            .map(|r| format!("t{}@{}", r.id, plan.offsets[r.id]))
+            .collect();
+        println!(
+            "  {:<38} arena={:<4} {}",
+            strat.name(),
+            plan.total_size(),
+            spans.join(" ")
+        );
+    }
+
+    println!("\nDone. Try `cargo run --release --example plan_models` for Tables 1-2.");
+}

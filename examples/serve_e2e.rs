@@ -1,0 +1,132 @@
+//! End-to-end serving driver: the full three-layer stack on a real
+//! workload.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example serve_e2e
+//! ```
+//!
+//! Loads the AOT-compiled JAX/Pallas model (all batch variants), spins up
+//! the Rust coordinator (router + dynamic batcher), replays an open-loop
+//! Poisson-ish arrival trace at several rates, and reports
+//! latency/throughput per rate plus the planner's arena accounting — the
+//! serving-facing version of the paper's evaluation. Results are recorded
+//! in EXPERIMENTS.md §E2E.
+
+use std::time::{Duration, Instant};
+use tensorarena::coordinator::engine::PjrtEngine;
+use tensorarena::coordinator::{ArenaStats, BatchPolicy, Router};
+use tensorarena::models;
+use tensorarena::planner::{offset, OffsetPlanner};
+use tensorarena::records::UsageRecords;
+use tensorarena::rng::SplitMix64;
+use tensorarena::runtime::{Runtime, VariantSet};
+
+const IN_ELEMS: usize = 32 * 32 * 3;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // --- Planner story for the served model (L2 twin) ---
+    let twin = models::l2_cnn();
+    let recs = UsageRecords::from_graph(&twin);
+    let plan = offset::GreedyBySize.plan(&recs);
+    plan.validate(&recs)?;
+    let stats = ArenaStats {
+        planned_bytes: plan.total_size(),
+        naive_bytes: recs.naive_total(),
+        strategy: "Greedy by Size",
+    };
+    println!(
+        "serving model: l2_cnn ({} ops); arena {:.1} KiB vs naive {:.1} KiB = {:.2}x reduction",
+        twin.num_ops(),
+        stats.planned_bytes as f64 / 1024.0,
+        stats.naive_bytes as f64 / 1024.0,
+        stats.reduction()
+    );
+
+    // --- Sanity: batch variants agree with each other ---
+    {
+        let rt = Runtime::cpu()?;
+        let vs = VariantSet::load(&rt, std::path::Path::new(&dir), "model", &[32, 32, 3], 10)?;
+        println!(
+            "PJRT {} | variants: {:?}",
+            rt.platform().0,
+            vs.variants.iter().map(|v| v.batch).collect::<Vec<_>>()
+        );
+        let mut rng = SplitMix64::new(7);
+        let mut sample = vec![0f32; IN_ELEMS];
+        rng.fill_f32(&mut sample, 1.0);
+        let b1 = vs.pick(1).run(&sample)?;
+        let mut four = sample.clone();
+        four.extend_from_slice(&sample);
+        four.extend_from_slice(&sample);
+        four.extend_from_slice(&sample);
+        let b4 = vs.pick(4).run(&four)?;
+        for i in 0..10 {
+            assert!(
+                (b1[i] - b4[i]).abs() < 1e-5,
+                "batch-1 vs batch-4 disagree at {i}: {} vs {}",
+                b1[i],
+                b4[i]
+            );
+        }
+        let s: f32 = b1.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "softmax output must be a simplex");
+        println!("variant cross-check: b1 == b4 per-sample, output is a simplex ✓");
+    }
+
+    // --- Open-loop load sweep through the coordinator ---
+    println!("\n{:>9} {:>8} {:>10} {:>10} {:>10} {:>10} {:>11}",
+        "rate r/s", "sent", "ok", "p50 ms", "p95 ms", "p99 ms", "mean batch");
+    for &rate in &[100usize, 300, 600, 1200] {
+        let mut router = Router::new();
+        let dir_owned = dir.clone();
+        let st = stats.clone();
+        router.register(
+            "cnn",
+            move || {
+                let rt = Runtime::cpu().expect("PJRT");
+                let vs = VariantSet::load(&rt, std::path::Path::new(&dir_owned), "model", &[32, 32, 3], 10)
+                    .expect("artifacts");
+                Box::new(PjrtEngine::new(vs, st))
+            },
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        );
+
+        let n = (rate / 2).max(64); // ~0.5s of traffic
+        let gap = Duration::from_nanos(1_000_000_000u64 / rate as u64);
+        let mut rng = SplitMix64::new(rate as u64);
+        let mut input = vec![0f32; IN_ELEMS];
+        let mut pending = Vec::with_capacity(n);
+        let start = Instant::now();
+        for i in 0..n {
+            rng.fill_f32(&mut input, 1.0);
+            pending.push(router.submit("cnn", input.clone()));
+            // open loop: next arrival at start + (i+1)*gap
+            let next = start + gap * (i as u32 + 1);
+            if let Some(sleep) = next.checked_duration_since(Instant::now()) {
+                std::thread::sleep(sleep);
+            }
+        }
+        let mut ok = 0usize;
+        for rx in pending {
+            if matches!(rx.recv(), Ok(Ok(_))) {
+                ok += 1;
+            }
+        }
+        let snap = router.server("cnn").unwrap().metrics().snapshot();
+        println!(
+            "{:>9} {:>8} {:>10} {:>10.2} {:>10.2} {:>10.2} {:>11.2}",
+            rate,
+            n,
+            ok,
+            snap.p50_us as f64 / 1000.0,
+            snap.p95_us as f64 / 1000.0,
+            snap.p99_us as f64 / 1000.0,
+            snap.mean_batch
+        );
+        router.shutdown();
+    }
+    println!("\n(see EXPERIMENTS.md §E2E for the recorded run)");
+    Ok(())
+}

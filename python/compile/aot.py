@@ -1,0 +1,64 @@
+"""AOT pipeline: lower the L2 model to HLO text per batch-size variant.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--batches 1,2,4,8]
+
+HLO *text* is the interchange format — `lowered.compiler_ir("stablehlo")`
+converted via `mlir_module_to_xla_computation(...).as_hlo_text()` — NOT
+`.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids
+which the pinned xla_extension 0.5.1 (the `xla` rust crate's backend)
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs once, here; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax function -> XLA HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifacts(out_dir: str, batches, seed: int = 0) -> list[str]:
+    """Lower each batch variant; returns the written paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    params = model.init_params(seed)
+    written = []
+    for b in batches:
+        fn, spec = model.serving_fn(params, b)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"model_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        print(f"wrote {path} ({len(text)} chars)")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batches", default="1,2,4,8")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    batches = [int(b) for b in args.batches.split(",") if b]
+    build_artifacts(args.out_dir, batches, args.seed)
+    # Stamp for the Makefile's no-op rebuild check.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""L1: global-average-pool as a Pallas reduction kernel.
+
+Complements the matmul kernel with the other fundamental Pallas pattern —
+a grid-striped *reduction*: the spatial axis is tiled, each grid step adds
+its tile's partial sums into the output block, and the running-sum trick
+(`o += x.sum(axis)` with an init step) keeps everything in VMEM-sized
+blocks. The L2 model's GAP layer routes through this kernel.
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_HW = 256
+BLOCK_C = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _gap_kernel(x_ref, o_ref, *, inv_hw):
+    """Grid (b, hw_tile, c_tile): accumulate mean contributions."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Padding rows are zero, so adding them is harmless; scaling by the
+    # *true* 1/HW happens here, keeping the kernel one-pass.
+    o_ref[...] += jnp.sum(x_ref[...], axis=1) * inv_hw
+
+
+@functools.partial(jax.jit, static_argnames=("bhw", "bc"))
+def global_avg_pool(x, *, bhw: int = BLOCK_HW, bc: int = BLOCK_C):
+    """`[B, HW, C] -> [B, C]` mean over the HW axis via Pallas."""
+    b, hw, c = x.shape
+    bhw = min(bhw, _round_up(hw, 8))
+    bc = min(bc, _round_up(c, 8))
+    hwp, cp = _round_up(hw, bhw), _round_up(c, bc)
+    xp = jnp.pad(x, ((0, 0), (0, hwp - hw), (0, cp - c)))
+    grid = (b, hwp // bhw, cp // bc)
+    out = pl.pallas_call(
+        functools.partial(_gap_kernel, inv_hw=1.0 / hw),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bhw, bc), lambda i, j, k: (i, j, k))],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((b, cp), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32))
+    return out[:, :c].astype(x.dtype)

@@ -1,0 +1,85 @@
+"""L1: blocked matmul as a Pallas kernel.
+
+The serving model's compute hot-spot is the pointwise (1x1) convolution,
+which is exactly a `[B*H*W, C_in] x [C_in, C_out]` matmul. This kernel
+expresses it MXU-style: a 3D grid over (M, N, K) tiles, each step loading a
+`(bm, bk)` LHS tile and a `(bk, bn)` RHS tile into VMEM (via BlockSpec) and
+accumulating into the `(bm, bn)` output tile — the HBM<->VMEM schedule a TPU
+would run. See DESIGN.md "Hardware-Adaptation" for the VMEM/MXU estimate.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO. Real-TPU lowering would
+only change the `pallas_call` flag.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tiles. f32 VMEM footprint per grid step:
+# 128*128*3 words * 4 B = 192 KiB << 16 MiB VMEM, leaving room for
+# double-buffering (see DESIGN.md §Perf).
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ y[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K):
+    """Blocked Pallas matmul: `[M, K] @ [K, N] -> [M, N]` (f32 accumulate).
+
+    Inputs are zero-padded up to tile multiples (zeros contribute nothing to
+    the products) and the result is sliced back, so any M/N/K works.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    # Shrink tiles for small problems (keep lane-friendly multiples of 8).
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(xp.astype(jnp.float32), yp.astype(jnp.float32))
+    return out[:m, :n].astype(x.dtype)
+
+
+def pointwise_conv(x, w, b):
+    """1x1 convolution via the Pallas matmul: the L2 model's hot path.
+
+    x: [B, H, W, C_in]; w: [C_in, C_out]; b: [C_out].
+    """
+    bsz, h, wd, cin = x.shape
+    flat = x.reshape(bsz * h * wd, cin)
+    out = matmul(flat, w) + b
+    return out.reshape(bsz, h, wd, w.shape[1])

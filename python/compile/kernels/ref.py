@@ -1,0 +1,29 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks every kernel against
+(`python/tests/test_kernel.py`); they are also used by the L2 model tests to
+cross-check the pallas-backed model against a kernel-free twin.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Reference for kernels.matmul: plain matmul in f32."""
+    return jnp.matmul(x, y)
+
+
+def global_avg_pool_ref(x):
+    """Reference for kernels.gap: mean over the HW axis of [B, HW, C]."""
+    return jnp.mean(x, axis=1)
+
+
+def pointwise_conv_ref(x, w, b):
+    """Reference for the 1x1-conv-as-matmul path.
+
+    x: [B, H, W, C_in]; w: [C_in, C_out]; b: [C_out].
+    """
+    bsz, h, wd, cin = x.shape
+    flat = x.reshape(bsz * h * wd, cin)
+    out = jnp.matmul(flat, w) + b
+    return out.reshape(bsz, h, wd, w.shape[1])

@@ -1,0 +1,114 @@
+"""L2: the serving CNN in JAX, calling the L1 Pallas kernel.
+
+MobileNet-v1-flavoured classifier, 32x32x3 -> 10 classes. Every pointwise
+(1x1) convolution routes through `kernels.matmul.pointwise_conv` — the
+Pallas hot path — so the AOT artifact exercises all three layers.
+
+KEEP IN SYNC with `rust/src/models/l2_cnn.rs`: the Rust twin mirrors this
+graph op-for-op so the serving coordinator can plan its arena and the CPU
+executor can cross-check plans behaviourally.
+
+Build-time only: this module is never imported on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gap as pallas_gap
+from .kernels import matmul as pallas_mm
+from .kernels import ref as kernels_ref
+
+HW = 32
+CLASSES = 10
+# (out_channels, stride) of the 4 depthwise-separable blocks.
+BLOCKS = ((32, 2), (32, 1), (64, 2), (64, 1))
+STEM_C = 16
+
+
+def init_params(seed: int = 0):
+    """Deterministic parameters (baked into the AOT artifact as constants)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+
+    def nxt():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    def conv_init(kh, kw, cin, cout):
+        fan = kh * kw * cin
+        return jax.random.normal(nxt(), (kh, kw, cin, cout), jnp.float32) / jnp.sqrt(fan)
+
+    params["stem_w"] = conv_init(3, 3, 3, STEM_C)
+    params["stem_b"] = jnp.zeros((STEM_C,), jnp.float32)
+    cin = STEM_C
+    for i, (cout, _s) in enumerate(BLOCKS):
+        # depthwise HWIO with feature_group_count=C: [3, 3, 1, C]
+        params[f"dw{i}_w"] = conv_init(3, 3, 1, cin)
+        params[f"dw{i}_b"] = jnp.zeros((cin,), jnp.float32)
+        params[f"pw{i}_w"] = (
+            jax.random.normal(nxt(), (cin, cout), jnp.float32) / jnp.sqrt(cin)
+        )
+        params[f"pw{i}_b"] = jnp.zeros((cout,), jnp.float32)
+        cin = cout
+    params["fc_w"] = jax.random.normal(nxt(), (cin, CLASSES), jnp.float32) / jnp.sqrt(cin)
+    params["fc_b"] = jnp.zeros((CLASSES,), jnp.float32)
+    return params
+
+
+def _conv(x, w, b, stride):
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def _dwconv(x, w, b, stride):
+    c = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return out + b
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def forward(params, x, *, use_pallas: bool = True):
+    """Forward pass. `x`: [B, 32, 32, 3] -> probabilities [B, 10].
+
+    `use_pallas=False` swaps the pointwise convs to the pure-jnp oracle —
+    the model-level kernel cross-check used by pytest.
+    """
+    pw = pallas_mm.pointwise_conv if use_pallas else kernels_ref.pointwise_conv_ref
+    h = relu6(_conv(x, params["stem_w"], params["stem_b"], 1))
+    for i, (_cout, s) in enumerate(BLOCKS):
+        h = relu6(_dwconv(h, params[f"dw{i}_w"], params[f"dw{i}_b"], s))
+        h = relu6(pw(h, params[f"pw{i}_w"], params[f"pw{i}_b"]))
+    # global average pool: the L1 reduction kernel
+    bsz, hh, ww, cc = h.shape
+    flat = h.reshape(bsz, hh * ww, cc)
+    h = pallas_gap.global_avg_pool(flat) if use_pallas \
+        else kernels_ref.global_avg_pool_ref(flat)
+    logits = pallas_mm.matmul(h, params["fc_w"]) + params["fc_b"] if use_pallas \
+        else jnp.matmul(h, params["fc_w"]) + params["fc_b"]
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def serving_fn(params, batch: int):
+    """The function AOT-lowered per batch size. Returns a 1-tuple (the HLO
+    loader on the Rust side unwraps with `to_tuple1`)."""
+
+    def fn(x):
+        return (forward(params, x),)
+
+    spec = jax.ShapeDtypeStruct((batch, HW, HW, 3), jnp.float32)
+    return fn, spec

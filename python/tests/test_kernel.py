@@ -1,0 +1,147 @@
+"""L1 correctness: the Pallas matmul kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value scales; every case asserts allclose
+against `kernels.ref` — the core correctness signal for the AOT path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as pallas_mm
+from compile.kernels import ref
+
+
+def _rand(key, shape, scale=1.0, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_small_shapes(m, k, n, seed):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(kx, (m, k))
+    y = _rand(ky, (k, n))
+    got = pallas_mm.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([128, 200, 256, 300]),
+    k=st.sampled_from([64, 128, 160]),
+    n=st.sampled_from([96, 128, 257]),
+)
+def test_matmul_matches_ref_multi_tile(m, k, n):
+    kx, ky = jax.random.split(jax.random.PRNGKey(m * 10007 + k * 101 + n))
+    x = _rand(kx, (m, k))
+    y = _rand(ky, (k, n))
+    got = pallas_mm.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(scale=st.sampled_from([1e-3, 1.0, 1e3]), seed=st.integers(0, 1000))
+def test_matmul_value_scales(scale, seed):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(kx, (33, 17), scale)
+    y = _rand(ky, (17, 9), scale)
+    got = pallas_mm.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale)
+
+
+def test_matmul_bf16_inputs_accumulate_in_f32():
+    kx, ky = jax.random.split(jax.random.PRNGKey(7))
+    x = _rand(kx, (64, 64), dtype=jnp.bfloat16)
+    y = _rand(ky, (64, 64), dtype=jnp.bfloat16)
+    got = pallas_mm.matmul(x, y)
+    assert got.dtype == jnp.bfloat16
+    want = jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want, rtol=2e-2, atol=2e-2
+    )
+
+
+def test_matmul_rejects_contraction_mismatch():
+    with pytest.raises(AssertionError):
+        pallas_mm.matmul(jnp.zeros((4, 5)), jnp.zeros((6, 7)))
+
+
+def test_matmul_identity():
+    x = jnp.eye(37, dtype=jnp.float32)
+    y = _rand(jax.random.PRNGKey(1), (37, 13))
+    np.testing.assert_allclose(pallas_mm.matmul(x, y), y, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_zeros_padding_is_sound():
+    # A shape that forces padding in every dim.
+    x = _rand(jax.random.PRNGKey(2), (129, 130))
+    y = _rand(jax.random.PRNGKey(3), (130, 131))
+    got = pallas_mm.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(2, 9),
+    cin=st.integers(1, 20),
+    cout=st.integers(1, 20),
+    seed=st.integers(0, 1000),
+)
+def test_pointwise_conv_matches_ref(b, h, cin, cout, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, (b, h, h, cin))
+    w = _rand(k2, (cin, cout))
+    bias = _rand(k3, (cout,))
+    got = pallas_mm.pointwise_conv(x, w, bias)
+    want = ref.pointwise_conv_ref(x, w, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --- GAP reduction kernel ---
+
+from compile.kernels import gap as pallas_gap  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hw=st.integers(1, 300),
+    c=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gap_matches_ref(b, hw, c, seed):
+    x = _rand(jax.random.PRNGKey(seed), (b, hw, c))
+    got = pallas_gap.global_avg_pool(x)
+    want = ref.global_avg_pool_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gap_multi_tile_exact():
+    # forces tiling on both axes
+    x = _rand(jax.random.PRNGKey(9), (2, 513, 257))
+    np.testing.assert_allclose(
+        pallas_gap.global_avg_pool(x),
+        ref.global_avg_pool_ref(x),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_gap_constant_input():
+    x = jnp.full((1, 77, 5), 3.25, jnp.float32)
+    np.testing.assert_allclose(
+        pallas_gap.global_avg_pool(x), jnp.full((1, 5), 3.25), rtol=1e-6
+    )

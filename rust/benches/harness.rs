@@ -1,0 +1,51 @@
+//! Minimal shared bench harness (the offline vendored registry has no
+//! criterion). Each bench binary includes this via `#[path]`.
+//!
+//! Reports median / min / mean over `iters` timed runs after `warmup`
+//! untimed ones, criterion-style enough for EXPERIMENTS.md.
+
+#![allow(dead_code)]
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics of one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median: Duration,
+    pub min: Duration,
+    pub mean: Duration,
+}
+
+/// Run `f` `iters` times (after `warmup` warmups) and report stats.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    Stats {
+        median: samples[iters / 2],
+        min: samples[0],
+        mean,
+    }
+}
+
+/// Pretty-print one case line.
+pub fn report(name: &str, stats: Stats) {
+    println!(
+        "{name:<52} median {:>10.3?} min {:>10.3?} mean {:>10.3?}",
+        stats.median, stats.min, stats.mean
+    );
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,48 @@
+//! §7.1 ablation: how much does execution-order choice move the footprint?
+//!
+//! ```sh
+//! cargo bench --offline --bench ordering
+//! ```
+//!
+//! For every zoo network: arena size (offset Greedy by Size) under the
+//! stored TFLite-style order, the memory-aware greedy order, and 100
+//! ε-greedy annealing trials — the paper's named future-work direction,
+//! implemented in `planner::order`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use tensorarena::models;
+use tensorarena::planner::order::{anneal_order, memory_aware_order, order_ablation};
+
+fn main() {
+    const MIB: f64 = 1024.0 * 1024.0;
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>8}",
+        "network", "stored MiB", "greedy MiB", "anneal MiB", "delta"
+    );
+    for g in models::all_zoo() {
+        let (base, greedy, annealed) = order_ablation(&g, 42, 100);
+        println!(
+            "{:<14} {:>12.3} {:>12.3} {:>12.3} {:>+7.2}%",
+            g.name,
+            base as f64 / MIB,
+            greedy as f64 / MIB,
+            annealed as f64 / MIB,
+            (annealed as f64 / base as f64 - 1.0) * 100.0
+        );
+    }
+
+    println!("\nscheduler wall time:");
+    for g in models::all_zoo() {
+        let stats = harness::bench(1, 5, || {
+            harness::black_box(memory_aware_order(&g));
+        });
+        harness::report(&format!("{} / memory-aware order", g.name), stats);
+    }
+    let g = models::inception_v3();
+    let stats = harness::bench(0, 3, || {
+        harness::black_box(anneal_order(&g, 1, 20));
+    });
+    harness::report("inception_v3 / anneal (20 trials)", stats);
+}

@@ -1,0 +1,86 @@
+//! Planner complexity scaling on synthetic graphs: §4.2 claims O(kn²)
+//! naive / O(kn log n) with interval trees — this bench shows how each
+//! strategy's wall time grows with the number of intermediate tensors.
+//!
+//! ```sh
+//! cargo bench --offline --bench planner_scaling
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use tensorarena::planner::{table1_strategies, table2_strategies};
+use tensorarena::records::UsageRecords;
+use tensorarena::rng::SplitMix64;
+
+/// Synthetic residual-network-like usage records: a chain with skip
+/// connections and size variety (same generator family as the property
+/// tests).
+fn synth(seed: u64, n: usize) -> UsageRecords {
+    let mut rng = SplitMix64::new(seed);
+    let mut triples = Vec::with_capacity(n);
+    let mut op = 0usize;
+    for i in 0..n {
+        let span = if i % 5 == 4 {
+            rng.next_range(2, 8) // skip connection
+        } else {
+            1
+        };
+        triples.push((op, op + span, 64 * rng.next_range(1, 256)));
+        op += 1;
+    }
+    UsageRecords::from_triples(&triples)
+}
+
+fn main() {
+    println!("strategy wall time vs record count (median of 5, ms):\n");
+    let sizes = [64usize, 128, 256, 512, 1024];
+    print!("{:<40}", "strategy \\ n");
+    for n in sizes {
+        print!("{n:>10}");
+    }
+    println!();
+    for strat in table1_strategies() {
+        if strat.name() == "Min-cost Flow (Lee et al., 2019)" {
+            continue; // measured separately below (quadratic edges)
+        }
+        print!("{:<40}", format!("[shared] {}", strat.name()));
+        for n in sizes {
+            let recs = synth(42, n);
+            let st = harness::bench(1, 5, || {
+                harness::black_box(strat.plan(&recs));
+            });
+            print!("{:>10.2}", st.median.as_secs_f64() * 1e3);
+        }
+        println!();
+    }
+    // Min-cost flow only up to 512 (O(n^2) edges, SSP augmentations).
+    {
+        let strat: Box<dyn tensorarena::planner::SharedObjectPlanner> =
+            Box::new(tensorarena::planner::shared::MinCostFlow);
+        print!("{:<40}", "[shared] Min-cost Flow (Lee et al., 2019)");
+        for n in sizes {
+            if n > 512 {
+                print!("{:>10}", "-");
+                continue;
+            }
+            let recs = synth(42, n);
+            let st = harness::bench(0, 3, || {
+                harness::black_box(strat.plan(&recs));
+            });
+            print!("{:>10.2}", st.median.as_secs_f64() * 1e3);
+        }
+        println!();
+    }
+    for strat in table2_strategies() {
+        print!("{:<40}", format!("[offset] {}", strat.name()));
+        for n in sizes {
+            let recs = synth(42, n);
+            let st = harness::bench(1, 5, || {
+                harness::black_box(strat.plan(&recs));
+            });
+            print!("{:>10.2}", st.median.as_secs_f64() * 1e3);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,135 @@
+//! Coordinator micro + macro benchmarks.
+//!
+//! ```sh
+//! cargo bench --offline --bench serving
+//! ```
+//!
+//! * micro: request round-trip overhead through router + batcher with a
+//!   trivial engine (isolates L3 from compute);
+//! * batching: throughput vs `max_batch` with a fixed-cost engine;
+//! * macro (if `artifacts/` exists): PJRT closed-loop storm, the same
+//!   measurement as `tensorarena serve`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+use tensorarena::coordinator::{BatchPolicy, EchoEngine, Engine, Router};
+use tensorarena::rng::SplitMix64;
+
+/// Engine with a fixed per-batch cost, to expose batching wins.
+struct FixedCostEngine {
+    elems: usize,
+    cost: Duration,
+}
+
+impl Engine for FixedCostEngine {
+    fn in_elems(&self) -> usize {
+        self.elems
+    }
+    fn out_elems(&self) -> usize {
+        self.elems
+    }
+    fn max_batch(&self) -> usize {
+        64
+    }
+    fn run_batch(&mut self, input: &[f32], n: usize) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.cost);
+        Ok(input[..n * self.elems].to_vec())
+    }
+}
+
+fn main() {
+    // --- micro: round-trip overhead ---
+    {
+        let mut router = Router::new();
+        router.register(
+            "echo",
+            || Box::new(EchoEngine::new(8, 8)),
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(1) },
+        );
+        let input = vec![1.0f32; 8];
+        let st = harness::bench(100, 2000, || {
+            let rx = router.submit("echo", input.clone());
+            harness::black_box(rx.recv().unwrap().unwrap());
+        });
+        harness::report("round-trip overhead (batch=1, echo engine)", st);
+        router.shutdown();
+    }
+
+    // --- batching win: fixed 1ms engine cost, varying max_batch ---
+    println!("\nthroughput vs max_batch (engine cost 1 ms/batch, 256 closed-loop requests):");
+    for max_batch in [1usize, 2, 4, 8, 16, 32] {
+        let mut router = Router::new();
+        router.register(
+            "fixed",
+            move || Box::new(FixedCostEngine { elems: 4, cost: Duration::from_millis(1) }),
+            BatchPolicy { max_batch, max_wait: Duration::from_micros(200) },
+        );
+        let mut rng = SplitMix64::new(1);
+        let mut input = vec![0f32; 4];
+        let t = std::time::Instant::now();
+        let pending: Vec<_> = (0..256)
+            .map(|_| {
+                rng.fill_f32(&mut input, 1.0);
+                router.submit("fixed", input.clone())
+            })
+            .collect();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let wall = t.elapsed();
+        println!(
+            "  max_batch {max_batch:>3}: {:>8.0} req/s ({:?} total)",
+            256.0 / wall.as_secs_f64(),
+            wall
+        );
+        router.shutdown();
+    }
+
+    // --- macro: PJRT artifacts, if built ---
+    let dir = std::path::Path::new("artifacts");
+    if tensorarena::runtime::Runtime::discover_variants(dir, "model").is_ok() {
+        use tensorarena::coordinator::engine::PjrtEngine;
+        use tensorarena::coordinator::ArenaStats;
+        use tensorarena::runtime::{Runtime, VariantSet};
+        println!("\nPJRT closed-loop storm (256 requests):");
+        for max_batch in [1usize, 8] {
+            let mut router = Router::new();
+            router.register(
+                "cnn",
+                move || {
+                    let rt = Runtime::cpu().expect("PJRT");
+                    let vs = VariantSet::load(&rt, std::path::Path::new("artifacts"), "model", &[32, 32, 3], 10)
+                        .expect("artifacts");
+                    Box::new(PjrtEngine::new(vs, ArenaStats::default()))
+                },
+                BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+            );
+            let mut rng = SplitMix64::new(2);
+            let mut input = vec![0f32; 32 * 32 * 3];
+            let t = std::time::Instant::now();
+            let pending: Vec<_> = (0..256)
+                .map(|_| {
+                    rng.fill_f32(&mut input, 1.0);
+                    router.submit("cnn", input.clone())
+                })
+                .collect();
+            let ok = pending
+                .into_iter()
+                .filter(|rx| matches!(rx.recv(), Ok(Ok(_))))
+                .count();
+            let wall = t.elapsed();
+            let snap = router.server("cnn").unwrap().metrics().snapshot();
+            println!(
+                "  max_batch {max_batch:>2}: {ok}/256 ok, {:>7.1} req/s, p50 {:.2} ms, mean batch {:.2}",
+                ok as f64 / wall.as_secs_f64(),
+                snap.p50_us as f64 / 1000.0,
+                snap.mean_batch
+            );
+            router.shutdown();
+        }
+    } else {
+        println!("\n(artifacts/ missing: run `make artifacts` for the PJRT macro bench)");
+    }
+}

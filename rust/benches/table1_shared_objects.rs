@@ -1,0 +1,34 @@
+//! Bench + regeneration of **Table 1**: Shared Objects strategies over the
+//! six evaluation networks.
+//!
+//! ```sh
+//! cargo bench --offline --bench table1_shared_objects
+//! ```
+//!
+//! Prints the table in the paper's layout (MiB, best-in-column starred)
+//! followed by planner wall-times per network.
+
+#[path = "harness.rs"]
+mod harness;
+
+use tensorarena::models;
+use tensorarena::planner::table1_strategies;
+use tensorarena::records::UsageRecords;
+use tensorarena::report;
+
+fn main() {
+    // The table itself (identical to `tensorarena table1`).
+    print!("{}", report::table1().render());
+
+    println!("\nplanner wall time (median of 10):");
+    for g in models::all_zoo() {
+        let recs = UsageRecords::from_graph(&g);
+        for strat in table1_strategies() {
+            let name = format!("{} / {}", g.name, strat.name());
+            let stats = harness::bench(2, 10, || {
+                harness::black_box(strat.plan(&recs));
+            });
+            harness::report(&name, stats);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench + regeneration of **Table 2**: Offset Calculation strategies over
+//! the six evaluation networks, plus the §1 naive ratios ("up to 10.5x").
+//!
+//! ```sh
+//! cargo bench --offline --bench table2_offset_calculation
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use tensorarena::models;
+use tensorarena::planner::table2_strategies;
+use tensorarena::records::UsageRecords;
+use tensorarena::report;
+
+fn main() {
+    let t = report::table2();
+    print!("{}", t.render());
+
+    println!("\nNaive / best-strategy ratio per network (paper: up to 10.5x):");
+    let naive = &t.rows.last().unwrap().1;
+    for (i, col) in t.columns.iter().enumerate() {
+        let best = t
+            .rows
+            .iter()
+            .filter(|(n, _)| n != "Naive" && n != "Lower Bound")
+            .map(|(_, v)| v[i])
+            .fold(f64::INFINITY, f64::min);
+        println!("  {col:>14}: {:>5.1}x", naive[i] / best);
+    }
+
+    println!("\nplanner wall time (median of 10):");
+    for g in models::all_zoo() {
+        let recs = UsageRecords::from_graph(&g);
+        for strat in table2_strategies() {
+            let name = format!("{} / {}", g.name, strat.name());
+            let stats = harness::bench(2, 10, || {
+                harness::black_box(strat.plan(&recs));
+            });
+            harness::report(&name, stats);
+        }
+    }
+}

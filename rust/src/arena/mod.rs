@@ -1,0 +1,180 @@
+//! The tensor arena: one pre-allocated block of memory materializing an
+//! [`OffsetPlan`].
+//!
+//! §5: "a large chunk of memory is pre-allocated and the intermediate
+//! tensors are given parts of the memory by the offsets within the memory
+//! block." The arena is allocated once per executor (or per in-flight
+//! request in the serving coordinator) — the whole point of the paper is
+//! that this block is 7–10× smaller than the sum of tensor sizes.
+//!
+//! Debug builds add guard words between the arena and its end and a
+//! poisoning facility used by the behavioural tests in `crate::exec` to
+//! prove that planner bugs (overlapping live tensors) corrupt data and are
+//! caught.
+
+use crate::planner::OffsetPlan;
+use crate::records::UsageRecords;
+
+/// Value written over a tensor's region when it dies (debug feature): reads
+/// of stale data then produce NaNs that propagate to the output checksum.
+pub const POISON_F32: f32 = f32::NAN;
+
+/// Guard word appended after the arena in debug builds.
+const GUARD: f32 = 1.0e30;
+const GUARD_WORDS: usize = 16;
+
+/// A planned arena of `f32` words (all tensor offsets/sizes in this crate
+/// are 64-byte aligned, so `f32` indexing is always exact).
+pub struct Arena {
+    buf: Vec<f32>,
+    /// Byte offsets per record id, from the plan.
+    offsets: Vec<usize>,
+    /// Byte sizes per record id, from the records.
+    sizes: Vec<usize>,
+}
+
+impl Arena {
+    /// Allocate an arena for `plan` over `records`. Panics if the plan does
+    /// not cover the records (use `plan.validate` first for a nice error).
+    pub fn new(plan: &OffsetPlan, records: &UsageRecords) -> Self {
+        assert_eq!(plan.offsets.len(), records.len());
+        let words = plan.total / 4 + GUARD_WORDS;
+        let mut buf = vec![0f32; words];
+        for g in &mut buf[plan.total / 4..] {
+            *g = GUARD;
+        }
+        Arena {
+            buf,
+            offsets: plan.offsets.clone(),
+            sizes: records.records.iter().map(|r| r.size).collect(),
+        }
+    }
+
+    /// Arena capacity in bytes (excluding guards).
+    pub fn capacity(&self) -> usize {
+        (self.buf.len() - GUARD_WORDS) * 4
+    }
+
+    /// Word range of a record.
+    fn range(&self, record: usize) -> std::ops::Range<usize> {
+        let start = self.offsets[record] / 4;
+        start..start + self.sizes[record] / 4
+    }
+
+    /// Read-only view of a tensor's buffer.
+    pub fn tensor(&self, record: usize) -> &[f32] {
+        &self.buf[self.range(record)]
+    }
+
+    /// Mutable view of a tensor's buffer.
+    pub fn tensor_mut(&mut self, record: usize) -> &mut [f32] {
+        let r = self.range(record);
+        &mut self.buf[r]
+    }
+
+    /// Simultaneous access to one output tensor and several input tensors.
+    ///
+    /// Safety argument: in any *valid* plan the output and all inputs of an
+    /// op are simultaneously live (their usage intervals all contain the
+    /// op), therefore their byte ranges are pairwise disjoint; the runtime
+    /// check below enforces it even for hand-built plans.
+    pub fn split_io(&mut self, output: usize, inputs: &[usize]) -> (&mut [f32], Vec<&[f32]>) {
+        let out_range = self.range(output);
+        for &i in inputs {
+            let r = self.range(i);
+            assert!(
+                r.end <= out_range.start || out_range.end <= r.start,
+                "op I/O overlap in arena: record {i} ({r:?}) vs output {output} ({out_range:?}) — invalid plan"
+            );
+        }
+        let base = self.buf.as_mut_ptr();
+        // SAFETY: ranges are in-bounds (checked by `range`) and the output
+        // range is disjoint from every input range (asserted above); inputs
+        // may alias each other but are only handed out as shared slices.
+        unsafe {
+            let out = std::slice::from_raw_parts_mut(
+                base.add(out_range.start),
+                out_range.end - out_range.start,
+            );
+            let ins = inputs
+                .iter()
+                .map(|&i| {
+                    let r = self.range(i);
+                    std::slice::from_raw_parts(base.add(r.start) as *const f32, r.end - r.start)
+                })
+                .collect();
+            (out, ins)
+        }
+    }
+
+    /// Poison a dead tensor's region (debug/behavioural-test aid).
+    pub fn poison(&mut self, record: usize) {
+        for v in self.tensor_mut(record) {
+            *v = POISON_F32;
+        }
+    }
+
+    /// Check the end-of-arena guard words; true if untouched.
+    pub fn guards_intact(&self) -> bool {
+        self.buf[self.buf.len() - GUARD_WORDS..]
+            .iter()
+            .all(|&g| g == GUARD)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{offset::GreedyBySize, OffsetPlanner};
+
+    fn setup() -> (UsageRecords, OffsetPlan) {
+        // Sizes are multiples of 64 bytes.
+        let recs = UsageRecords::from_triples(&[(0, 1, 64), (1, 2, 128), (2, 3, 64)]);
+        let plan = GreedyBySize.plan(&recs);
+        plan.validate(&recs).unwrap();
+        (recs, plan)
+    }
+
+    #[test]
+    fn read_write_roundtrip() {
+        let (recs, plan) = setup();
+        let mut arena = Arena::new(&plan, &recs);
+        assert!(arena.capacity() >= plan.total);
+        arena.tensor_mut(0).fill(3.5);
+        assert!(arena.tensor(0).iter().all(|&v| v == 3.5));
+        assert_eq!(arena.tensor(0).len(), 16); // 64 bytes
+        assert_eq!(arena.tensor(1).len(), 32);
+    }
+
+    #[test]
+    fn split_io_gives_disjoint_views() {
+        let (recs, plan) = setup();
+        let mut arena = Arena::new(&plan, &recs);
+        arena.tensor_mut(0).fill(2.0);
+        let (out, ins) = arena.split_io(1, &[0]);
+        assert_eq!(ins[0].len(), 16);
+        assert!(ins[0].iter().all(|&v| v == 2.0));
+        out.fill(4.0);
+        assert!(arena.tensor(1).iter().all(|&v| v == 4.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "op I/O overlap")]
+    fn split_io_rejects_overlapping_plan() {
+        let recs = UsageRecords::from_triples(&[(0, 1, 64), (0, 1, 64)]);
+        // Deliberately broken plan: both records at offset 0.
+        let plan = OffsetPlan { offsets: vec![0, 0], total: 64 };
+        let mut arena = Arena::new(&plan, &recs);
+        let _ = arena.split_io(1, &[0]);
+    }
+
+    #[test]
+    fn guards_and_poison() {
+        let (recs, plan) = setup();
+        let mut arena = Arena::new(&plan, &recs);
+        assert!(arena.guards_intact());
+        arena.poison(2);
+        assert!(arena.tensor(2).iter().all(|v| v.is_nan()));
+        assert!(arena.guards_intact());
+    }
+}

@@ -1,0 +1,237 @@
+//! Dynamic batching: one worker thread per model gathers queued requests
+//! into batches bounded by size and deadline.
+
+use super::{engine::Engine, Metrics, Request, Response};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching policy: close a batch when it reaches `max_batch` requests or
+/// when the oldest queued request has waited `max_wait`.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A running model server: queue + worker thread + metrics.
+pub struct ModelServer {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    in_elems: usize,
+}
+
+impl ModelServer {
+    /// Spawn a worker under `policy`. `factory` runs *on the worker thread*
+    /// and builds the engine there — this is what lets `!Send` engines
+    /// (PJRT executables hold `Rc`s) live behind a threaded server.
+    pub fn spawn<F>(factory: F, policy: BatchPolicy) -> Self
+    where
+        F: FnOnce() -> Box<dyn Engine> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let m = Arc::clone(&metrics);
+        let (meta_tx, meta_rx) = channel::<usize>();
+        let worker = std::thread::Builder::new()
+            .name("model-server".into())
+            .spawn(move || {
+                let mut engine = factory();
+                let _ = meta_tx.send(engine.in_elems());
+                let cap = policy.max_batch.min(engine.max_batch()).max(1);
+                worker_loop(&mut *engine, &rx, cap, policy.max_wait, &m)
+            })
+            .expect("spawn model server");
+        let in_elems = meta_rx.recv().expect("engine factory panicked");
+        ModelServer {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            in_elems,
+        }
+    }
+
+    /// Submit one request; the reply arrives on the returned channel.
+    pub fn submit(&self, input: Vec<f32>) -> Receiver<Response> {
+        let (rtx, rrx) = channel();
+        if input.len() != self.in_elems {
+            let _ = rtx.send(Err(format!(
+                "input has {} elems, model wants {}",
+                input.len(),
+                self.in_elems
+            )));
+            return rrx;
+        }
+        let req = Request {
+            input,
+            enqueued: Instant::now(),
+            resp: rtx,
+        };
+        if let Some(tx) = &self.tx {
+            // A send error means the worker died; the caller sees a closed
+            // response channel.
+            let _ = tx.send(req);
+        }
+        rrx
+    }
+
+    /// Metrics handle.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Stop accepting requests, drain the queue, join the worker.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the queue
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ModelServer {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The batching loop.
+fn worker_loop(
+    engine: &mut dyn Engine,
+    rx: &Receiver<Request>,
+    max_batch: usize,
+    max_wait: Duration,
+    metrics: &Metrics,
+) {
+    let in_elems = engine.in_elems();
+    let out_elems = engine.out_elems();
+    let mut batch_buf: Vec<f32> = Vec::with_capacity(max_batch * in_elems);
+    loop {
+        // Block for the first request of the next batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // queue closed and drained
+        };
+        let deadline = first.enqueued + max_wait;
+        let mut batch = vec![first];
+        // Drain whatever is already queued, for free — even when the
+        // deadline has long passed (under backlog the queue is full and the
+        // batch should be too). §Perf: before this drain, a 64-request
+        // closed-loop burst ran at mean batch 1.12; after, it saturates.
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        // Then wait out the remaining deadline for stragglers.
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Assemble and run.
+        batch_buf.clear();
+        for r in &batch {
+            batch_buf.extend_from_slice(&r.input);
+        }
+        let exec_start = Instant::now();
+        let result = engine.run_batch(&batch_buf, batch.len());
+        let done = Instant::now();
+
+        let waits: Vec<Duration> = batch.iter().map(|r| exec_start - r.enqueued).collect();
+        let lats: Vec<Duration> = batch.iter().map(|r| done - r.enqueued).collect();
+        metrics.record_batch(batch.len(), &waits, &lats);
+
+        match result {
+            Ok(out) => {
+                for (i, r) in batch.iter().enumerate() {
+                    let _ = r
+                        .resp
+                        .send(Ok(out[i * out_elems..(i + 1) * out_elems].to_vec()));
+                }
+            }
+            Err(e) => {
+                for r in &batch {
+                    let _ = r.resp.send(Err(e.to_string()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EchoEngine;
+
+    #[test]
+    fn batches_requests_and_answers_each() {
+        let server = ModelServer::spawn(
+            || Box::new(EchoEngine::new(2, 8)),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
+        );
+        let rxs: Vec<_> = (0..6)
+            .map(|i| server.submit(vec![i as f32, i as f32 + 0.5]))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out, vec![i as f32 * 2.0, (i as f32 + 0.5) * 2.0]);
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.completed, 6);
+        assert!(snap.mean_batch >= 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_arity_without_touching_engine() {
+        let server = ModelServer::spawn(|| Box::new(EchoEngine::new(3, 8)), BatchPolicy::default());
+        let rx = server.submit(vec![1.0]); // wrong size
+        let resp = rx.recv().unwrap();
+        assert!(resp.is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batches() {
+        let server = ModelServer::spawn(
+            || Box::new(EchoEngine::new(1, 64)),
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) },
+        );
+        let rx = server.submit(vec![7.0]);
+        // only one request: the deadline, not the size cap, must flush it
+        let out = rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(out, vec![14.0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_gracefully() {
+        let server = ModelServer::spawn(|| Box::new(EchoEngine::new(1, 4)), BatchPolicy::default());
+        let rx = server.submit(vec![1.0]);
+        server.shutdown();
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![2.0]);
+    }
+}

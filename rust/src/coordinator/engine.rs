@@ -1,0 +1,190 @@
+//! Engines: what actually computes a batch.
+
+use super::ArenaStats;
+use crate::exec::Executor;
+use crate::graph::Graph;
+use crate::planner::OffsetPlanner;
+use crate::runtime::VariantSet;
+use anyhow::Result;
+
+/// A batched compute backend for one model.
+///
+/// Engines are *not* required to be `Send`: PJRT executables hold `Rc`s, so
+/// [`super::ModelServer::spawn`] takes a `Send` **factory** and constructs
+/// the engine on its worker thread, where it stays for its whole life.
+pub trait Engine {
+    /// Flat input element count per sample.
+    fn in_elems(&self) -> usize;
+    /// Flat output element count per sample.
+    fn out_elems(&self) -> usize;
+    /// Largest batch worth forming (the batcher's cap).
+    fn max_batch(&self) -> usize;
+    /// Run `n` samples (input holds `n * in_elems`); return `n * out_elems`.
+    fn run_batch(&mut self, input: &[f32], n: usize) -> Result<Vec<f32>>;
+    /// Planner-derived memory accounting, if the engine owns an arena.
+    fn arena_stats(&self) -> ArenaStats {
+        ArenaStats::default()
+    }
+}
+
+/// PJRT-backed engine over AOT batch-size variants (the production path).
+pub struct PjrtEngine {
+    variants: VariantSet,
+    in_elems: usize,
+    out_elems: usize,
+    stats: ArenaStats,
+}
+
+impl PjrtEngine {
+    /// Wrap a loaded [`VariantSet`]; `stats` comes from planning the L2
+    /// graph (see `examples/serve_e2e.rs`).
+    pub fn new(variants: VariantSet, stats: ArenaStats) -> Self {
+        let v0 = &variants.variants[0];
+        PjrtEngine {
+            in_elems: v0.in_elems,
+            out_elems: v0.out_elems,
+            variants,
+            stats,
+        }
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn in_elems(&self) -> usize {
+        self.in_elems
+    }
+    fn out_elems(&self) -> usize {
+        self.out_elems
+    }
+    fn max_batch(&self) -> usize {
+        self.variants.max_batch()
+    }
+    fn run_batch(&mut self, input: &[f32], n: usize) -> Result<Vec<f32>> {
+        let var = self.variants.pick(n);
+        let mut out;
+        if var.batch == n {
+            out = var.run(input)?;
+        } else {
+            // Pad the partial batch up to the variant's batch.
+            let mut padded = vec![0f32; var.batch * self.in_elems];
+            padded[..n * self.in_elems].copy_from_slice(input);
+            out = var.run(&padded)?;
+            out.truncate(n * self.out_elems);
+        }
+        Ok(out)
+    }
+    fn arena_stats(&self) -> ArenaStats {
+        self.stats.clone()
+    }
+}
+
+/// Pure-Rust engine: the arena [`Executor`] run per-sample (batch = loop).
+/// Used by `benches/locality.rs` and anywhere artifacts are unavailable.
+pub struct ExecutorEngine {
+    exec: Executor,
+    in_elems: usize,
+    out_elems: usize,
+    strategy: &'static str,
+    max_batch: usize,
+}
+
+impl ExecutorEngine {
+    /// Plan `graph` with `planner` and wrap the executor. Uses the first
+    /// graph output as the response payload.
+    pub fn new(graph: &Graph, planner: &dyn OffsetPlanner, strategy: &'static str, seed: u64) -> Result<Self> {
+        let exec = Executor::new(graph, planner, seed).map_err(anyhow::Error::msg)?;
+        let in_elems = graph.tensor(graph.inputs[0]).num_elements();
+        let out_elems = graph.tensor(graph.outputs[0]).num_elements();
+        Ok(ExecutorEngine {
+            exec,
+            in_elems,
+            out_elems,
+            strategy,
+            max_batch: 8,
+        })
+    }
+}
+
+impl Engine for ExecutorEngine {
+    fn in_elems(&self) -> usize {
+        self.in_elems
+    }
+    fn out_elems(&self) -> usize {
+        self.out_elems
+    }
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn run_batch(&mut self, input: &[f32], n: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n * self.out_elems);
+        for i in 0..n {
+            let sample = &input[i * self.in_elems..(i + 1) * self.in_elems];
+            let mut res = self.exec.run(&[sample]);
+            out.append(&mut res[0]);
+        }
+        Ok(out)
+    }
+    fn arena_stats(&self) -> ArenaStats {
+        ArenaStats {
+            planned_bytes: self.exec.arena_bytes(),
+            naive_bytes: self.exec.naive_bytes(),
+            strategy: self.strategy,
+        }
+    }
+}
+
+/// Trivial engine for coordinator unit tests: output = input scaled by 2.
+pub struct EchoEngine {
+    pub elems: usize,
+    pub max_batch: usize,
+    /// Batch sizes observed, for batching-policy assertions.
+    pub seen_batches: Vec<usize>,
+}
+
+impl EchoEngine {
+    pub fn new(elems: usize, max_batch: usize) -> Self {
+        EchoEngine { elems, max_batch, seen_batches: Vec::new() }
+    }
+}
+
+impl Engine for EchoEngine {
+    fn in_elems(&self) -> usize {
+        self.elems
+    }
+    fn out_elems(&self) -> usize {
+        self.elems
+    }
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn run_batch(&mut self, input: &[f32], n: usize) -> Result<Vec<f32>> {
+        self.seen_batches.push(n);
+        Ok(input[..n * self.elems].iter().map(|v| v * 2.0).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::offset::GreedyBySize;
+
+    #[test]
+    fn echo_engine_scales() {
+        let mut e = EchoEngine::new(2, 4);
+        let out = e.run_batch(&[1.0, 2.0, 3.0, 4.0], 2).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(e.seen_batches, vec![2]);
+    }
+
+    #[test]
+    fn executor_engine_runs_blazeface() {
+        let g = crate::models::blazeface();
+        let mut e = ExecutorEngine::new(&g, &GreedyBySize, "Greedy by Size", 3).unwrap();
+        let x = vec![0.1f32; 2 * e.in_elems()];
+        let out = e.run_batch(&x, 2).unwrap();
+        assert_eq!(out.len(), 2 * e.out_elems());
+        // identical samples give identical outputs
+        assert_eq!(out[..e.out_elems()], out[e.out_elems()..]);
+        assert!(e.arena_stats().reduction() > 2.0);
+    }
+}

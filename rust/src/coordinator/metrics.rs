@@ -1,0 +1,114 @@
+//! Serving metrics: latency percentiles, batch-size distribution,
+//! throughput.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Thread-safe metrics sink shared between the worker and observers.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Per-request end-to-end latency (queue + exec), microseconds.
+    latencies_us: Vec<u64>,
+    /// Per-request queue wait, microseconds.
+    queue_us: Vec<u64>,
+    /// Batch sizes executed.
+    batches: Vec<usize>,
+    /// Total requests completed.
+    completed: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// A point-in-time summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_queue_us: u64,
+    pub mean_batch: f64,
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    /// Record one executed batch: per-request latencies and waits.
+    pub fn record_batch(&self, batch: usize, waits: &[Duration], latencies: &[Duration]) {
+        let mut m = self.inner.lock().unwrap();
+        let now = Instant::now();
+        m.started.get_or_insert(now);
+        m.finished = Some(now);
+        m.batches.push(batch);
+        m.completed += latencies.len() as u64;
+        m.queue_us.extend(waits.iter().map(|d| d.as_micros() as u64));
+        m.latencies_us
+            .extend(latencies.iter().map(|d| d.as_micros() as u64));
+    }
+
+    /// Summarize everything recorded so far.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let mut lat = m.latencies_us.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() as f64 - 1.0) * p) as usize]
+            }
+        };
+        let wall = match (m.started, m.finished) {
+            (Some(s), Some(f)) if f > s => (f - s).as_secs_f64(),
+            _ => 0.0,
+        };
+        MetricsSnapshot {
+            completed: m.completed,
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            mean_queue_us: if m.queue_us.is_empty() {
+                0
+            } else {
+                m.queue_us.iter().sum::<u64>() / m.queue_us.len() as u64
+            },
+            mean_batch: if m.batches.is_empty() {
+                0.0
+            } else {
+                m.batches.iter().sum::<usize>() as f64 / m.batches.len() as f64
+            },
+            throughput_rps: if wall > 0.0 { m.completed as f64 / wall } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_percentiles() {
+        let m = Metrics::default();
+        let lats: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let waits = vec![Duration::from_micros(10); 100];
+        m.record_batch(4, &waits, &lats);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.p50_us, 50);
+        assert_eq!(s.p95_us, 95);
+        assert_eq!(s.mean_queue_us, 10);
+        assert_eq!(s.mean_batch, 4.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p99_us, 0);
+        assert_eq!(s.throughput_rps, 0.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Serving coordinator: request routing, dynamic batching, metrics.
+//!
+//! The L3 layer of the stack. Inference requests enter through a
+//! [`Router`], are queued per model, gathered into batches by the
+//! [`batcher`] policy (size- and deadline-bound, vLLM-style), executed on
+//! an [`engine::Engine`] (the PJRT executable for the AOT path, or the
+//! arena [`crate::exec::Executor`] for the pure-Rust path), and answered
+//! over per-request channels. Python never appears here.
+//!
+//! The paper's planner shows up twice:
+//! * the engine's working memory is a planned arena, reported per model in
+//!   [`ArenaStats`] (the serving-visible version of Tables 1–2);
+//! * batch-size variants multiply every intermediate tensor by the batch,
+//!   so plan quality directly bounds the largest servable batch on a
+//!   memory-constrained edge box.
+//!
+//! Built on `std::thread` + `mpsc` (the offline vendored registry has no
+//! tokio); one worker thread per model keeps the design identical to an
+//! async runtime with a single-consumer queue.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+
+pub use batcher::{BatchPolicy, ModelServer};
+pub use engine::{EchoEngine, Engine, ExecutorEngine};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::Router;
+
+use std::time::Instant;
+
+/// Planner-derived memory accounting for a served model.
+#[derive(Debug, Clone, Default)]
+pub struct ArenaStats {
+    /// Arena bytes under the configured strategy.
+    pub planned_bytes: usize,
+    /// Bytes the Naive plan would need.
+    pub naive_bytes: usize,
+    /// Strategy name.
+    pub strategy: &'static str,
+}
+
+impl ArenaStats {
+    /// Naive / planned — the paper's headline ratio.
+    pub fn reduction(&self) -> f64 {
+        if self.planned_bytes == 0 {
+            1.0
+        } else {
+            self.naive_bytes as f64 / self.planned_bytes as f64
+        }
+    }
+}
+
+/// One inference request travelling through the coordinator.
+pub struct Request {
+    /// Flat input sample (one element of a batch).
+    pub input: Vec<f32>,
+    /// Enqueue timestamp, for queue-wait metrics.
+    pub enqueued: Instant,
+    /// Response channel.
+    pub resp: std::sync::mpsc::Sender<Response>,
+}
+
+/// The answer to a [`Request`].
+pub type Response = Result<Vec<f32>, String>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_stats_reduction() {
+        let s = ArenaStats { planned_bytes: 10, naive_bytes: 75, strategy: "x" };
+        assert!((s.reduction() - 7.5).abs() < 1e-12);
+        assert_eq!(ArenaStats::default().reduction(), 1.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Multi-model routing: name → [`ModelServer`].
+
+use super::{BatchPolicy, Engine, ModelServer, Response};
+use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+
+/// Routes requests to per-model servers (the leader's front door).
+#[derive(Default)]
+pub struct Router {
+    servers: HashMap<String, ModelServer>,
+}
+
+impl Router {
+    /// Empty router.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a model under `name`, spawning its worker. The factory runs
+    /// on the worker thread (see [`ModelServer::spawn`]).
+    pub fn register<F>(&mut self, name: impl Into<String>, factory: F, policy: BatchPolicy)
+    where
+        F: FnOnce() -> Box<dyn Engine> + Send + 'static,
+    {
+        self.servers.insert(name.into(), ModelServer::spawn(factory, policy));
+    }
+
+    /// Route one request. Unknown models answer immediately with an error.
+    pub fn submit(&self, model: &str, input: Vec<f32>) -> Receiver<Response> {
+        match self.servers.get(model) {
+            Some(s) => s.submit(input),
+            None => {
+                let (tx, rx) = std::sync::mpsc::channel();
+                let _ = tx.send(Err(format!("unknown model '{model}'")));
+                rx
+            }
+        }
+    }
+
+    /// Access a model's server (metrics, stats).
+    pub fn server(&self, model: &str) -> Option<&ModelServer> {
+        self.servers.get(model)
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.servers.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Shut every server down, draining queues.
+    pub fn shutdown(self) {
+        for (_, s) in self.servers {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EchoEngine;
+
+    #[test]
+    fn routes_by_name() {
+        let mut r = Router::new();
+        r.register("a", || Box::new(EchoEngine::new(1, 4)), BatchPolicy::default());
+        r.register("b", || Box::new(EchoEngine::new(2, 4)), BatchPolicy::default());
+        assert_eq!(r.models(), vec!["a", "b"]);
+        assert_eq!(r.submit("a", vec![3.0]).recv().unwrap().unwrap(), vec![6.0]);
+        assert_eq!(
+            r.submit("b", vec![1.0, 2.0]).recv().unwrap().unwrap(),
+            vec![2.0, 4.0]
+        );
+        r.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let r = Router::new();
+        let resp = r.submit("ghost", vec![1.0]).recv().unwrap();
+        assert!(resp.unwrap_err().contains("unknown model"));
+    }
+}

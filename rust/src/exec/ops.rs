@@ -1,0 +1,502 @@
+//! Reference CPU kernels for the graph op set.
+//!
+//! These are deliberately simple NHWC loops: the executor's job in this
+//! repo is *behavioural validation of memory plans* (and the locality
+//! measurements of `benches/locality.rs`), not peak FLOPs — the optimized
+//! compute path is the AOT-compiled XLA module run by `crate::runtime`.
+//! The conv kernels still hoist bounds checks and iterate cache-friendly
+//! (channels innermost) so whole-network runs stay in the tens of
+//! milliseconds.
+
+use crate::graph::{Activation, Padding};
+
+/// Apply a fused activation in place.
+#[inline]
+pub fn activate(buf: &mut [f32], act: Activation) {
+    match act {
+        Activation::None => {}
+        Activation::Relu => {
+            for v in buf.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        Activation::Relu6 => {
+            for v in buf.iter_mut() {
+                *v = v.clamp(0.0, 6.0);
+            }
+        }
+    }
+}
+
+/// Spatial geometry of a conv/pool op, precomputed once per call.
+pub struct Geom {
+    pub h: usize,
+    pub w: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub sh: usize,
+    pub sw: usize,
+    pub dh: usize,
+    pub dw: usize,
+    pub ph: isize,
+    pub pw: isize,
+}
+
+impl Geom {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        h: usize,
+        w: usize,
+        oh: usize,
+        ow: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        dilation: (usize, usize),
+        padding: Padding,
+    ) -> Self {
+        let (ph, pw) = match padding {
+            Padding::Valid => (0, 0),
+            Padding::Same => {
+                let p = crate::graph::same_padding_pair(h, w, kernel, stride, dilation);
+                (p.0 as isize, p.1 as isize)
+            }
+        };
+        Geom {
+            h,
+            w,
+            oh,
+            ow,
+            kh: kernel.0,
+            kw: kernel.1,
+            sh: stride.0,
+            sw: stride.1,
+            dh: dilation.0,
+            dw: dilation.1,
+            ph,
+            pw,
+        }
+    }
+}
+
+/// Standard convolution, NHWC × [kh,kw,ic,oc] → NHWC. Batch 1.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    ic: usize,
+    oc: usize,
+    g: &Geom,
+    act: Activation,
+) {
+    debug_assert_eq!(x.len() >= g.h * g.w * ic, true);
+    for oy in 0..g.oh {
+        for ox in 0..g.ow {
+            let o_base = (oy * g.ow + ox) * oc;
+            out[o_base..o_base + oc].copy_from_slice(&b[..oc]);
+            for ky in 0..g.kh {
+                let iy = oy as isize * g.sh as isize + ky as isize * g.dh as isize - g.ph;
+                if iy < 0 || iy >= g.h as isize {
+                    continue;
+                }
+                for kx in 0..g.kw {
+                    let ix = ox as isize * g.sw as isize + kx as isize * g.dw as isize - g.pw;
+                    if ix < 0 || ix >= g.w as isize {
+                        continue;
+                    }
+                    let i_base = (iy as usize * g.w + ix as usize) * ic;
+                    let w_base = (ky * g.kw + kx) * ic * oc;
+                    for c in 0..ic {
+                        let xv = x[i_base + c];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &w[w_base + c * oc..w_base + (c + 1) * oc];
+                        let orow = &mut out[o_base..o_base + oc];
+                        for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                            *o += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    activate(out, act);
+}
+
+/// Depthwise convolution (multiplier 1), weights [kh,kw,c,1].
+pub fn dwconv2d(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], c: usize, g: &Geom, act: Activation) {
+    for oy in 0..g.oh {
+        for ox in 0..g.ow {
+            let o_base = (oy * g.ow + ox) * c;
+            out[o_base..o_base + c].copy_from_slice(&b[..c]);
+            for ky in 0..g.kh {
+                let iy = oy as isize * g.sh as isize + ky as isize * g.dh as isize - g.ph;
+                if iy < 0 || iy >= g.h as isize {
+                    continue;
+                }
+                for kx in 0..g.kw {
+                    let ix = ox as isize * g.sw as isize + kx as isize * g.dw as isize - g.pw;
+                    if ix < 0 || ix >= g.w as isize {
+                        continue;
+                    }
+                    let i_base = (iy as usize * g.w + ix as usize) * c;
+                    let w_base = (ky * g.kw + kx) * c;
+                    for ch in 0..c {
+                        out[o_base + ch] += x[i_base + ch] * w[w_base + ch];
+                    }
+                }
+            }
+        }
+    }
+    activate(out, act);
+}
+
+/// Max pooling.
+pub fn maxpool2d(x: &[f32], out: &mut [f32], c: usize, g: &Geom) {
+    for oy in 0..g.oh {
+        for ox in 0..g.ow {
+            let o_base = (oy * g.ow + ox) * c;
+            out[o_base..o_base + c].fill(f32::NEG_INFINITY);
+            for ky in 0..g.kh {
+                let iy = oy as isize * g.sh as isize + ky as isize - g.ph;
+                if iy < 0 || iy >= g.h as isize {
+                    continue;
+                }
+                for kx in 0..g.kw {
+                    let ix = ox as isize * g.sw as isize + kx as isize - g.pw;
+                    if ix < 0 || ix >= g.w as isize {
+                        continue;
+                    }
+                    let i_base = (iy as usize * g.w + ix as usize) * c;
+                    for ch in 0..c {
+                        let v = x[i_base + ch];
+                        if v > out[o_base + ch] {
+                            out[o_base + ch] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Average pooling (TFLite semantics: average over *valid* taps only).
+pub fn avgpool2d(x: &[f32], out: &mut [f32], c: usize, g: &Geom) {
+    for oy in 0..g.oh {
+        for ox in 0..g.ow {
+            let o_base = (oy * g.ow + ox) * c;
+            out[o_base..o_base + c].fill(0.0);
+            let mut count = 0f32;
+            for ky in 0..g.kh {
+                let iy = oy as isize * g.sh as isize + ky as isize - g.ph;
+                if iy < 0 || iy >= g.h as isize {
+                    continue;
+                }
+                for kx in 0..g.kw {
+                    let ix = ox as isize * g.sw as isize + kx as isize - g.pw;
+                    if ix < 0 || ix >= g.w as isize {
+                        continue;
+                    }
+                    count += 1.0;
+                    let i_base = (iy as usize * g.w + ix as usize) * c;
+                    for ch in 0..c {
+                        out[o_base + ch] += x[i_base + ch];
+                    }
+                }
+            }
+            let inv = 1.0 / count.max(1.0);
+            for ch in 0..c {
+                out[o_base + ch] *= inv;
+            }
+        }
+    }
+}
+
+/// Global average pool: [h*w*c] -> [c].
+pub fn global_avg_pool(x: &[f32], out: &mut [f32], hw: usize, c: usize) {
+    out[..c].fill(0.0);
+    for i in 0..hw {
+        let base = i * c;
+        for ch in 0..c {
+            out[ch] += x[base + ch];
+        }
+    }
+    let inv = 1.0 / hw as f32;
+    for ch in out[..c].iter_mut() {
+        *ch *= inv;
+    }
+}
+
+/// Elementwise add with fused activation.
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32], act: Activation) {
+    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *o = x + y;
+    }
+    activate(out, act);
+}
+
+/// Elementwise multiply.
+pub fn mul(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *o = x * y;
+    }
+}
+
+/// Channel concat: interleave per-pixel channel runs.
+pub fn concat_channels(parts: &[(&[f32], usize)], out: &mut [f32], pixels: usize) {
+    let oc: usize = parts.iter().map(|&(_, c)| c).sum();
+    for p in 0..pixels {
+        let mut off = 0;
+        for &(buf, c) in parts {
+            out[p * oc + off..p * oc + off + c].copy_from_slice(&buf[p * c..(p + 1) * c]);
+            off += c;
+        }
+    }
+}
+
+/// Fully connected: [in] × [in,out] + [out].
+pub fn fully_connected(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], ind: usize, outd: usize, act: Activation) {
+    out[..outd].copy_from_slice(&b[..outd]);
+    for (i, &xv) in x[..ind].iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w[i * outd..(i + 1) * outd];
+        for (o, &wv) in out[..outd].iter_mut().zip(wrow.iter()) {
+            *o += xv * wv;
+        }
+    }
+    activate(&mut out[..outd], act);
+}
+
+/// Softmax over the last axis of a [rows, cols] view.
+pub fn softmax(x: &[f32], out: &mut [f32], cols: usize) {
+    for (xr, or) in x.chunks_exact(cols).zip(out.chunks_exact_mut(cols)) {
+        let m = xr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for (o, &v) in or.iter_mut().zip(xr.iter()) {
+            *o = (v - m).exp();
+            sum += *o;
+        }
+        let inv = 1.0 / sum;
+        for o in or.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// Bilinear resize (align_corners = false, TFLite default).
+pub fn resize_bilinear(x: &[f32], out: &mut [f32], h: usize, w: usize, oh: usize, ow: usize, c: usize) {
+    let sy = h as f32 / oh as f32;
+    let sx = w as f32 / ow as f32;
+    for oy in 0..oh {
+        let fy = ((oy as f32 + 0.5) * sy - 0.5).max(0.0);
+        let y0 = (fy as usize).min(h - 1);
+        let y1 = (y0 + 1).min(h - 1);
+        let wy = fy - y0 as f32;
+        for ox in 0..ow {
+            let fx = ((ox as f32 + 0.5) * sx - 0.5).max(0.0);
+            let x0 = (fx as usize).min(w - 1);
+            let x1 = (x0 + 1).min(w - 1);
+            let wx = fx - x0 as f32;
+            let o_base = (oy * ow + ox) * c;
+            let b00 = (y0 * w + x0) * c;
+            let b01 = (y0 * w + x1) * c;
+            let b10 = (y1 * w + x0) * c;
+            let b11 = (y1 * w + x1) * c;
+            for ch in 0..c {
+                let top = x[b00 + ch] * (1.0 - wx) + x[b01 + ch] * wx;
+                let bot = x[b10 + ch] * (1.0 - wx) + x[b11 + ch] * wx;
+                out[o_base + ch] = top * (1.0 - wy) + bot * wy;
+            }
+        }
+    }
+}
+
+/// Zero-pad spatial dims.
+pub fn pad_spatial(x: &[f32], out: &mut [f32], h: usize, w: usize, c: usize, before: (usize, usize), after: (usize, usize)) {
+    let ow = w + before.1 + after.1;
+    out.fill(0.0);
+    for y in 0..h {
+        let src = y * w * c;
+        let dst = ((y + before.0) * ow + before.1) * c;
+        out[dst..dst + w * c].copy_from_slice(&x[src..src + w * c]);
+    }
+}
+
+/// Standalone ReLU with optional clamp.
+pub fn relu(x: &[f32], out: &mut [f32], max: Option<f32>) {
+    match max {
+        Some(m) => {
+            for (o, &v) in out.iter_mut().zip(x.iter()) {
+                *o = v.clamp(0.0, m);
+            }
+        }
+        None => {
+            for (o, &v) in out.iter_mut().zip(x.iter()) {
+                *o = v.max(0.0);
+            }
+        }
+    }
+}
+
+/// Sigmoid.
+pub fn sigmoid(x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = 1.0 / (1.0 + (-v).exp());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom_same(h: usize, w: usize, k: usize, s: usize) -> Geom {
+        let oh = crate::graph::conv_out_dim(h, k, s, 1, Padding::Same);
+        let ow = crate::graph::conv_out_dim(w, k, s, 1, Padding::Same);
+        Geom::new(h, w, oh, ow, (k, k), (s, s), (1, 1), Padding::Same)
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights returns the input.
+        let x: Vec<f32> = (0..4 * 4 * 2).map(|i| i as f32).collect();
+        let mut w = vec![0.0; 2 * 2];
+        w[0] = 1.0; // c0 -> c0
+        w[3] = 1.0; // c1 -> c1
+        let b = vec![0.0; 2];
+        let mut out = vec![0.0; 4 * 4 * 2];
+        let g = geom_same(4, 4, 1, 1);
+        conv2d(&x, &w, &b, &mut out, 2, 2, &g, Activation::None);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn conv_3x3_sum_kernel() {
+        // All-ones 3x3 kernel on all-ones input: interior = 9, corner = 4.
+        let x = vec![1.0; 5 * 5];
+        let w = vec![1.0; 9];
+        let b = vec![0.0; 1];
+        let mut out = vec![0.0; 5 * 5];
+        let g = geom_same(5, 5, 3, 1);
+        conv2d(&x, &w, &b, &mut out, 1, 1, &g, Activation::None);
+        assert_eq!(out[2 * 5 + 2], 9.0);
+        assert_eq!(out[0], 4.0);
+        assert_eq!(out[4], 4.0);
+    }
+
+    #[test]
+    fn conv_bias_and_relu() {
+        let x = vec![1.0; 4];
+        let w = vec![-2.0];
+        let b = vec![1.0];
+        let mut out = vec![0.0; 4];
+        let g = geom_same(2, 2, 1, 1);
+        conv2d(&x, &w, &b, &mut out, 1, 1, &g, Activation::Relu);
+        assert_eq!(out, vec![0.0; 4]); // 1 - 2 = -1 -> relu 0
+    }
+
+    #[test]
+    fn dwconv_channels_independent() {
+        // 2 channels: ch0 kernel = 1 (center), ch1 kernel = 2 (center).
+        let x: Vec<f32> = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let mut w = vec![0.0; 9 * 2];
+        w[4 * 2] = 1.0;
+        w[4 * 2 + 1] = 2.0;
+        let b = vec![0.0; 2];
+        let mut out = vec![0.0; 8];
+        let g = geom_same(2, 2, 3, 1);
+        dwconv2d(&x, &w, &b, &mut out, 2, &g, Activation::None);
+        assert_eq!(out, vec![1.0, 20.0, 2.0, 40.0, 3.0, 60.0, 4.0, 80.0]);
+    }
+
+    #[test]
+    fn pools() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2x2x1
+        let g = Geom::new(2, 2, 1, 1, (2, 2), (2, 2), (1, 1), Padding::Valid);
+        let mut out = vec![0.0];
+        maxpool2d(&x, &mut out, 1, &g);
+        assert_eq!(out[0], 4.0);
+        avgpool2d(&x, &mut out, 1, &g);
+        assert_eq!(out[0], 2.5);
+    }
+
+    #[test]
+    fn gap() {
+        let x = vec![1.0, 10.0, 3.0, 30.0]; // 2 pixels, 2 ch
+        let mut out = vec![0.0; 2];
+        global_avg_pool(&x, &mut out, 2, 2);
+        assert_eq!(out, vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn elementwise_and_fc() {
+        let mut out = vec![0.0; 3];
+        add(&[1.0, 2.0, -3.0], &[1.0, 1.0, 1.0], &mut out, Activation::Relu);
+        assert_eq!(out, vec![2.0, 3.0, 0.0]);
+        mul(&[2.0, 3.0, 4.0], &[5.0, 6.0, 7.0], &mut out);
+        assert_eq!(out, vec![10.0, 18.0, 28.0]);
+
+        // FC: x=[1,2], w=[[1,0],[0,1]] (row-major in*out), b=[10,20]
+        let mut fco = vec![0.0; 2];
+        fully_connected(&[1.0, 2.0], &[1.0, 0.0, 0.0, 1.0], &[10.0, 20.0], &mut fco, 2, 2, Activation::None);
+        assert_eq!(fco, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut out = vec![0.0; 3];
+        softmax(&[1.0, 1.0, 1.0], &mut out, 3);
+        for v in &out {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+        softmax(&[0.0, 100.0, 0.0], &mut out, 3);
+        assert!(out[1] > 0.999);
+    }
+
+    #[test]
+    fn concat_interleaves() {
+        let a = vec![1.0, 2.0, 10.0, 20.0]; // 2 pixels × 2ch
+        let b = vec![5.0, 50.0]; // 2 pixels × 1ch
+        let mut out = vec![0.0; 6];
+        concat_channels(&[(&a, 2), (&b, 1)], &mut out, 2);
+        assert_eq!(out, vec![1.0, 2.0, 5.0, 10.0, 20.0, 50.0]);
+    }
+
+    #[test]
+    fn resize_identity() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut out = vec![0.0; 4];
+        resize_bilinear(&x, &mut out, 2, 2, 2, 2, 1);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn resize_upsamples_smoothly() {
+        let x = vec![0.0, 1.0]; // 1×2
+        let mut out = vec![0.0; 4];
+        resize_bilinear(&x, &mut out, 1, 2, 1, 4, 1);
+        assert!(out[0] <= out[1] && out[1] <= out[2] && out[2] <= out[3]);
+    }
+
+    #[test]
+    fn pad_places_block() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2x2x1
+        let mut out = vec![9.0; 3 * 3];
+        pad_spatial(&x, &mut out, 2, 2, 1, (1, 1), (0, 0));
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn unary_ops() {
+        let mut out = vec![0.0; 3];
+        relu(&[-1.0, 0.5, 9.0], &mut out, Some(6.0));
+        assert_eq!(out, vec![0.0, 0.5, 6.0]);
+        sigmoid(&[0.0, 100.0, -100.0], &mut out);
+        assert!((out[0] - 0.5).abs() < 1e-6 && out[1] > 0.999 && out[2] < 0.001);
+    }
+}

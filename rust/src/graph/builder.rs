@@ -1,0 +1,373 @@
+//! Fluent construction of inference graphs with shape inference.
+//!
+//! The model zoo (`crate::models`) uses this builder to express each
+//! evaluation network layer-by-layer; the builder infers every intermediate
+//! tensor's shape, creates weight tensors for parametric ops, and keeps the
+//! op list in execution order.
+
+use super::{
+    conv_out_dim, Activation, DType, Graph, Op, OpId, OpKind, Padding, PoolKind, Tensor,
+    TensorId, TensorKind,
+};
+
+/// Builder for [`Graph`]. All `TensorId`s returned by builder methods refer
+/// to the graph under construction.
+pub struct GraphBuilder {
+    graph: Graph,
+    dtype: DType,
+}
+
+impl GraphBuilder {
+    /// Start a new graph with the given name; intermediate tensors use
+    /// `dtype` (the paper evaluates at F32).
+    pub fn new(name: impl Into<String>, dtype: DType) -> Self {
+        GraphBuilder {
+            graph: Graph {
+                name: name.into(),
+                ..Default::default()
+            },
+            dtype,
+        }
+    }
+
+    fn add_tensor(&mut self, name: String, shape: Vec<usize>, kind: TensorKind) -> TensorId {
+        let id = TensorId(self.graph.tensors.len());
+        self.graph.tensors.push(Tensor {
+            id,
+            name,
+            shape,
+            dtype: self.dtype,
+            kind,
+        });
+        id
+    }
+
+    fn add_op(&mut self, name: String, kind: OpKind, inputs: Vec<TensorId>, out_shape: Vec<usize>) -> TensorId {
+        let out = self.add_tensor(format!("{name}:out"), out_shape, TensorKind::Intermediate);
+        let id = OpId(self.graph.ops.len());
+        self.graph.ops.push(Op {
+            id,
+            name,
+            kind,
+            inputs,
+            outputs: vec![out],
+        });
+        out
+    }
+
+    /// Shape accessor for a tensor already in the graph.
+    pub fn shape(&self, t: TensorId) -> &[usize] {
+        &self.graph.tensor(t).shape
+    }
+
+    /// Declare a network input `[n, h, w, c]` (or any rank).
+    pub fn input(&mut self, name: impl Into<String>, shape: Vec<usize>) -> TensorId {
+        let id = self.add_tensor(name.into(), shape, TensorKind::Input);
+        self.graph.inputs.push(id);
+        id
+    }
+
+    fn weight(&mut self, name: String, shape: Vec<usize>) -> TensorId {
+        self.add_tensor(name, shape, TensorKind::Weight)
+    }
+
+    /// 2D convolution with bias, NHWC in, `[kh, kw, in_c, out_c]` weights.
+    pub fn conv2d(
+        &mut self,
+        name: impl Into<String>,
+        x: TensorId,
+        out_c: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        activation: Activation,
+    ) -> TensorId {
+        self.conv2d_dilated(name, x, out_c, kernel, stride, padding, (1, 1), activation)
+    }
+
+    /// 2D convolution with explicit dilation (atrous, DeepLab).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_dilated(
+        &mut self,
+        name: impl Into<String>,
+        x: TensorId,
+        out_c: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        dilation: (usize, usize),
+        activation: Activation,
+    ) -> TensorId {
+        let name = name.into();
+        let (n, h, w, c) = self.nhwc(x);
+        let oh = conv_out_dim(h, kernel.0, stride.0, dilation.0, padding);
+        let ow = conv_out_dim(w, kernel.1, stride.1, dilation.1, padding);
+        let wt = self.weight(format!("{name}:w"), vec![kernel.0, kernel.1, c, out_c]);
+        let b = self.weight(format!("{name}:b"), vec![out_c]);
+        self.add_op(
+            name,
+            OpKind::Conv2d {
+                kernel,
+                stride,
+                padding,
+                dilation,
+                activation,
+            },
+            vec![x, wt, b],
+            vec![n, oh, ow, out_c],
+        )
+    }
+
+    /// Depthwise convolution (multiplier 1) with bias.
+    pub fn dwconv2d(
+        &mut self,
+        name: impl Into<String>,
+        x: TensorId,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        activation: Activation,
+    ) -> TensorId {
+        self.dwconv2d_dilated(name, x, kernel, stride, padding, (1, 1), activation)
+    }
+
+    /// Depthwise convolution with dilation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dwconv2d_dilated(
+        &mut self,
+        name: impl Into<String>,
+        x: TensorId,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        dilation: (usize, usize),
+        activation: Activation,
+    ) -> TensorId {
+        let name = name.into();
+        let (n, h, w, c) = self.nhwc(x);
+        let oh = conv_out_dim(h, kernel.0, stride.0, dilation.0, padding);
+        let ow = conv_out_dim(w, kernel.1, stride.1, dilation.1, padding);
+        let wt = self.weight(format!("{name}:w"), vec![kernel.0, kernel.1, c, 1]);
+        let b = self.weight(format!("{name}:b"), vec![c]);
+        self.add_op(
+            name,
+            OpKind::DepthwiseConv2d {
+                kernel,
+                stride,
+                padding,
+                dilation,
+                activation,
+            },
+            vec![x, wt, b],
+            vec![n, oh, ow, c],
+        )
+    }
+
+    /// Max/average pooling.
+    pub fn pool2d(
+        &mut self,
+        name: impl Into<String>,
+        x: TensorId,
+        kind: PoolKind,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+    ) -> TensorId {
+        let (n, h, w, c) = self.nhwc(x);
+        let oh = conv_out_dim(h, kernel.0, stride.0, 1, padding);
+        let ow = conv_out_dim(w, kernel.1, stride.1, 1, padding);
+        self.add_op(
+            name.into(),
+            OpKind::Pool2d {
+                kind,
+                kernel,
+                stride,
+                padding,
+            },
+            vec![x],
+            vec![n, oh, ow, c],
+        )
+    }
+
+    /// Global average pool to `[n, 1, 1, c]`.
+    pub fn global_avg_pool(&mut self, name: impl Into<String>, x: TensorId) -> TensorId {
+        let (n, _, _, c) = self.nhwc(x);
+        self.add_op(name.into(), OpKind::GlobalAveragePool, vec![x], vec![n, 1, 1, c])
+    }
+
+    /// Residual add; shapes must match.
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        a: TensorId,
+        b: TensorId,
+        activation: Activation,
+    ) -> TensorId {
+        let sa = self.shape(a).to_vec();
+        let sb = self.shape(b).to_vec();
+        assert_eq!(sa, sb, "add: shape mismatch {sa:?} vs {sb:?}");
+        self.add_op(name.into(), OpKind::Add { activation }, vec![a, b], sa)
+    }
+
+    /// Elementwise multiply; shapes must match.
+    pub fn mul(&mut self, name: impl Into<String>, a: TensorId, b: TensorId) -> TensorId {
+        let sa = self.shape(a).to_vec();
+        assert_eq!(sa, self.shape(b), "mul: shape mismatch");
+        self.add_op(name.into(), OpKind::Mul, vec![a, b], sa)
+    }
+
+    /// Concatenate along the last (channel) axis; all other dims must match.
+    pub fn concat(&mut self, name: impl Into<String>, xs: &[TensorId]) -> TensorId {
+        assert!(!xs.is_empty());
+        let lead = self.shape(xs[0])[..self.shape(xs[0]).len() - 1].to_vec();
+        let mut c_total = 0;
+        for &x in xs {
+            let s = self.shape(x);
+            assert_eq!(&s[..s.len() - 1], &lead[..], "concat: leading-dim mismatch");
+            c_total += s[s.len() - 1];
+        }
+        let mut out = lead;
+        out.push(c_total);
+        self.add_op(name.into(), OpKind::ConcatChannels, xs.to_vec(), out)
+    }
+
+    /// Fully connected with bias: `[n, in] x [in, out]`.
+    pub fn fully_connected(
+        &mut self,
+        name: impl Into<String>,
+        x: TensorId,
+        out: usize,
+        activation: Activation,
+    ) -> TensorId {
+        let name = name.into();
+        let shape = self.shape(x).to_vec();
+        let n = shape[0];
+        let in_dim: usize = shape[1..].iter().product();
+        let wt = self.weight(format!("{name}:w"), vec![in_dim, out]);
+        let b = self.weight(format!("{name}:b"), vec![out]);
+        self.add_op(
+            name,
+            OpKind::FullyConnected { activation },
+            vec![x, wt, b],
+            vec![n, out],
+        )
+    }
+
+    /// Softmax over last axis.
+    pub fn softmax(&mut self, name: impl Into<String>, x: TensorId) -> TensorId {
+        let shape = self.shape(x).to_vec();
+        self.add_op(name.into(), OpKind::Softmax, vec![x], shape)
+    }
+
+    /// Standalone ReLU (`max=None`) or ReLU6 (`max=Some(6.0)`).
+    pub fn relu(&mut self, name: impl Into<String>, x: TensorId, max: Option<f32>) -> TensorId {
+        let shape = self.shape(x).to_vec();
+        self.add_op(name.into(), OpKind::Relu { max }, vec![x], shape)
+    }
+
+    /// Sigmoid.
+    pub fn sigmoid(&mut self, name: impl Into<String>, x: TensorId) -> TensorId {
+        let shape = self.shape(x).to_vec();
+        self.add_op(name.into(), OpKind::Sigmoid, vec![x], shape)
+    }
+
+    /// Bilinear resize to `(h, w)`.
+    pub fn resize_bilinear(&mut self, name: impl Into<String>, x: TensorId, out: (usize, usize)) -> TensorId {
+        let (n, _, _, c) = self.nhwc(x);
+        self.add_op(
+            name.into(),
+            OpKind::ResizeBilinear { out },
+            vec![x],
+            vec![n, out.0, out.1, c],
+        )
+    }
+
+    /// Reshape to a new shape with the same element count.
+    pub fn reshape(&mut self, name: impl Into<String>, x: TensorId, shape: Vec<usize>) -> TensorId {
+        let old: usize = self.shape(x).iter().product();
+        let new: usize = shape.iter().product();
+        assert_eq!(old, new, "reshape: element count mismatch");
+        self.add_op(name.into(), OpKind::Reshape, vec![x], shape)
+    }
+
+    /// Explicit spatial zero-pad.
+    pub fn pad_spatial(
+        &mut self,
+        name: impl Into<String>,
+        x: TensorId,
+        before: (usize, usize),
+        after: (usize, usize),
+    ) -> TensorId {
+        let (n, h, w, c) = self.nhwc(x);
+        self.add_op(
+            name.into(),
+            OpKind::Pad { before, after },
+            vec![x],
+            vec![n, h + before.0 + after.0, w + before.1 + after.1, c],
+        )
+    }
+
+    /// Mark `t` as a network output. Per the paper (Figure 1, tensor #8) the
+    /// output tensor is *not* an intermediate tensor and is excluded from
+    /// planning.
+    pub fn mark_output(&mut self, t: TensorId) {
+        let tensor = &mut self.graph.tensors[t.0];
+        assert_eq!(tensor.kind, TensorKind::Intermediate, "output must be produced by an op");
+        tensor.kind = TensorKind::Output;
+        self.graph.outputs.push(t);
+    }
+
+    /// Finish: validate and return the graph.
+    pub fn finish(self) -> Graph {
+        let g = self.graph;
+        if let Err(e) = g.validate() {
+            panic!("graph {} failed validation: {e}", g.name);
+        }
+        g
+    }
+
+    fn nhwc(&self, t: TensorId) -> (usize, usize, usize, usize) {
+        let s = self.shape(t);
+        assert_eq!(s.len(), 4, "expected NHWC tensor, got shape {s:?}");
+        (s[0], s[1], s[2], s[3])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_a_small_convnet() {
+        let mut b = GraphBuilder::new("tiny", DType::F32);
+        let x = b.input("x", vec![1, 8, 8, 3]);
+        let c1 = b.conv2d("c1", x, 16, (3, 3), (2, 2), Padding::Same, Activation::Relu6);
+        assert_eq!(b.shape(c1), &[1, 4, 4, 16]);
+        let d1 = b.dwconv2d("d1", c1, (3, 3), (1, 1), Padding::Same, Activation::Relu6);
+        let p1 = b.conv2d("p1", d1, 16, (1, 1), (1, 1), Padding::Same, Activation::None);
+        let r = b.add("res", c1, p1, Activation::None);
+        let g1 = b.global_avg_pool("gap", r);
+        let f = b.reshape("flat", g1, vec![1, 16]);
+        let fc = b.fully_connected("fc", f, 10, Activation::None);
+        let sm = b.softmax("sm", fc);
+        b.mark_output(sm);
+        let g = b.finish();
+        assert_eq!(g.outputs.len(), 1);
+        // conv weights + bias exist as Weight tensors
+        assert!(g.weight_bytes() > 0);
+        // output excluded from intermediates
+        let inter: Vec<_> = g.intermediates().collect();
+        assert!(inter.iter().all(|t| t.kind == TensorKind::Intermediate));
+        assert_eq!(inter.len(), 7); // c1 d1 p1 res gap flat fc (sm is output)
+    }
+
+    #[test]
+    #[should_panic]
+    fn add_shape_mismatch_panics() {
+        let mut b = GraphBuilder::new("bad", DType::F32);
+        let x = b.input("x", vec![1, 8, 8, 3]);
+        let c1 = b.conv2d("c1", x, 16, (3, 3), (2, 2), Padding::Same, Activation::None);
+        let c2 = b.conv2d("c2", x, 8, (3, 3), (2, 2), Padding::Same, Activation::None);
+        b.add("res", c1, c2, Activation::None);
+    }
+}

@@ -1,0 +1,242 @@
+//! Graph IR for DNN inference.
+//!
+//! A [`Graph`] is a directed acyclic graph of [`Op`]s connected by
+//! [`Tensor`]s, mirroring the representation in §1 of the paper: nodes are
+//! computational operators (CONVOLUTION, SOFTMAX, ...) and edges are the
+//! tensors holding intermediate results. Operator execution order is the
+//! fixed topological order in which ops were added (TFLite semantics — the
+//! paper assumes the topological sort is fixed, §3).
+//!
+//! Tensors are classified by [`TensorKind`]: only `Intermediate` tensors
+//! participate in memory planning; graph inputs/outputs and weights are
+//! allocated separately (the paper's Figure 1 note: "tensor #8 is not an
+//! intermediate tensor").
+
+mod builder;
+mod node;
+mod shape;
+mod topo;
+
+pub use builder::GraphBuilder;
+pub use node::{Activation, Op, OpId, OpKind, PoolKind};
+pub use shape::{conv_out_dim, same_padding, same_padding_pair, Padding};
+pub use topo::{is_valid_execution_order, topo_sort};
+
+use crate::align;
+
+
+/// Element type of a tensor. The paper evaluates at 32-bit float; `F16` and
+/// `U8` are provided for quantized-model planning experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    U8,
+    I32,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 => 2,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// How a tensor is stored and whether it participates in planning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorKind {
+    /// Network input: externally provided, never planned.
+    Input,
+    /// Network output: externally retained, never planned (Figure 1's
+    /// tensor #8).
+    Output,
+    /// Intermediate activation: the subject of this paper.
+    Intermediate,
+    /// Weight / constant: lives in the (read-only) model file, never planned.
+    Weight,
+}
+
+/// Unique id of a tensor within its graph (dense, 0-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub usize);
+
+/// A tensor: a named, shaped, typed edge of the graph.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub id: TensorId,
+    pub name: String,
+    /// Logical shape, typically `[N, H, W, C]` (NHWC, as TFLite uses).
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub kind: TensorKind,
+}
+
+impl Tensor {
+    /// Number of elements.
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Unaligned byte size.
+    pub fn byte_size(&self) -> usize {
+        self.num_elements() * self.dtype.size_of()
+    }
+
+    /// Aligned byte size — the `size_t` of the paper's tensor usage record.
+    pub fn aligned_size(&self) -> usize {
+        align(self.byte_size())
+    }
+}
+
+/// A DNN inference graph: ops in execution order plus the tensors they
+/// exchange.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<Tensor>,
+    /// Ops in execution (topological) order; `ops[i].id == OpId(i)`.
+    pub ops: Vec<Op>,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+impl Graph {
+    /// Look up a tensor.
+    pub fn tensor(&self, id: TensorId) -> &Tensor {
+        &self.tensors[id.0]
+    }
+
+    /// Look up an op.
+    pub fn op(&self, id: OpId) -> &Op {
+        &self.ops[id.0]
+    }
+
+    /// All intermediate tensors (the planning universe).
+    pub fn intermediates(&self) -> impl Iterator<Item = &Tensor> {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Intermediate)
+    }
+
+    /// Total aligned bytes of intermediate tensors — the paper's "Naive"
+    /// baseline (every tensor gets its own buffer).
+    pub fn naive_intermediate_bytes(&self) -> usize {
+        self.intermediates().map(|t| t.aligned_size()).sum()
+    }
+
+    /// Total aligned bytes of weight tensors (context for §1's "37% of
+    /// 147 MB" style statements).
+    pub fn weight_bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Weight)
+            .map(|t| t.aligned_size())
+            .sum()
+    }
+
+    /// Number of ops.
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Validate structural invariants: ids dense and in range, every
+    /// non-input tensor produced by exactly one op before any consumer,
+    /// execution order topologically valid.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, t) in self.tensors.iter().enumerate() {
+            if t.id.0 != i {
+                return Err(format!("tensor {} has id {:?}", i, t.id));
+            }
+            if t.shape.is_empty() || t.num_elements() == 0 {
+                return Err(format!("tensor {} ({}) has empty shape", i, t.name));
+            }
+        }
+        for (i, op) in self.ops.iter().enumerate() {
+            if op.id.0 != i {
+                return Err(format!("op {} has id {:?}", i, op.id));
+            }
+            for &tid in op.inputs.iter().chain(op.outputs.iter()) {
+                if tid.0 >= self.tensors.len() {
+                    return Err(format!("op {} references missing tensor {:?}", op.name, tid));
+                }
+            }
+            if op.outputs.is_empty() {
+                return Err(format!("op {} has no outputs", op.name));
+            }
+        }
+        // Producer map + order validity.
+        let mut producer: Vec<Option<usize>> = vec![None; self.tensors.len()];
+        for op in &self.ops {
+            for &o in &op.outputs {
+                if producer[o.0].is_some() {
+                    return Err(format!("tensor {:?} has two producers", o));
+                }
+                producer[o.0] = Some(op.id.0);
+            }
+        }
+        for op in &self.ops {
+            for &inp in &op.inputs {
+                let t = self.tensor(inp);
+                match t.kind {
+                    TensorKind::Input | TensorKind::Weight => {}
+                    _ => match producer[inp.0] {
+                        None => {
+                            return Err(format!(
+                                "op {} consumes unproduced tensor {}",
+                                op.name, t.name
+                            ))
+                        }
+                        Some(p) if p >= op.id.0 => {
+                            return Err(format!(
+                                "op {} (index {}) consumes tensor {} produced later (by op {})",
+                                op.name, op.id.0, t.name, p
+                            ))
+                        }
+                        _ => {}
+                    },
+                }
+            }
+        }
+        if !is_valid_execution_order(self) {
+            return Err("execution order is not a topological order".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_of(), 4);
+        assert_eq!(DType::F16.size_of(), 2);
+        assert_eq!(DType::U8.size_of(), 1);
+        assert_eq!(DType::I32.size_of(), 4);
+    }
+
+    #[test]
+    fn tensor_sizes() {
+        let t = Tensor {
+            id: TensorId(0),
+            name: "t".into(),
+            shape: vec![1, 112, 112, 32],
+            dtype: DType::F32,
+            kind: TensorKind::Intermediate,
+        };
+        assert_eq!(t.num_elements(), 112 * 112 * 32);
+        assert_eq!(t.byte_size(), 4 * 112 * 112 * 32);
+        assert_eq!(t.aligned_size(), 4 * 112 * 112 * 32); // already aligned
+    }
+
+    #[test]
+    fn empty_graph_validates() {
+        let g = Graph::default();
+        assert!(g.validate().is_ok());
+    }
+}

@@ -1,0 +1,178 @@
+//! Operator nodes of the graph IR.
+
+use super::{Padding, TensorId};
+
+
+/// Unique id of an op within its graph; equals the op's position in the
+/// fixed execution order (the operator *index* of the paper's §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub usize);
+
+/// Fused activation function, TFLite-style (fused activations do not create
+/// extra intermediate tensors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Activation {
+    #[default]
+    None,
+    Relu,
+    Relu6,
+}
+
+/// Pooling flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Average,
+}
+
+/// The operator set: enough to express the paper's six evaluation networks
+/// (MobileNet v1/v2, DeepLab v3, Inception v3, PoseNet, BlazeFace) and to be
+/// executed by `exec::Executor`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// 2D convolution, NHWC, weights `[kh, kw, in_c, out_c]`.
+    Conv2d {
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        dilation: (usize, usize),
+        activation: Activation,
+    },
+    /// Depthwise 2D convolution, multiplier 1, weights `[kh, kw, c, 1]`.
+    DepthwiseConv2d {
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        dilation: (usize, usize),
+        activation: Activation,
+    },
+    /// Spatial pooling.
+    Pool2d {
+        kind: PoolKind,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+    },
+    /// Global average pool to `[N, 1, 1, C]` (a.k.a. `MEAN` over H,W).
+    GlobalAveragePool,
+    /// Elementwise binary add (residual connections).
+    Add { activation: Activation },
+    /// Elementwise binary multiply.
+    Mul,
+    /// Concatenation along the channel axis (Inception blocks).
+    ConcatChannels,
+    /// Fully connected: input `[N, in]`, weights `[in, out]`.
+    FullyConnected { activation: Activation },
+    /// Softmax over the last axis.
+    Softmax,
+    /// Standalone ReLU / ReLU6 (when not fusable).
+    Relu { max: Option<f32> },
+    /// Logistic sigmoid.
+    Sigmoid,
+    /// Nearest/bilinear resize to a fixed spatial size (DeepLab decoder).
+    ResizeBilinear { out: (usize, usize) },
+    /// Reshape (no data movement in planning terms, but produces a new
+    /// intermediate tensor in TFLite graphs).
+    Reshape,
+    /// Explicit zero padding of spatial dims (BlazeFace-style channel pad is
+    /// modelled via Conv2d in the zoo).
+    Pad {
+        before: (usize, usize),
+        after: (usize, usize),
+    },
+    /// Mean-subtract/scale style pre-processing treated as elementwise.
+    Elementwise { name: &'static str },
+}
+
+impl OpKind {
+    /// Short mnemonic, used by reports and traces.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Conv2d { .. } => "CONV_2D",
+            OpKind::DepthwiseConv2d { .. } => "DW_CONV_2D",
+            OpKind::Pool2d { kind: PoolKind::Max, .. } => "MAX_POOL_2D",
+            OpKind::Pool2d { kind: PoolKind::Average, .. } => "AVG_POOL_2D",
+            OpKind::GlobalAveragePool => "MEAN",
+            OpKind::Add { .. } => "ADD",
+            OpKind::Mul => "MUL",
+            OpKind::ConcatChannels => "CONCATENATION",
+            OpKind::FullyConnected { .. } => "FULLY_CONNECTED",
+            OpKind::Softmax => "SOFTMAX",
+            OpKind::Relu { .. } => "RELU",
+            OpKind::Sigmoid => "LOGISTIC",
+            OpKind::ResizeBilinear { .. } => "RESIZE_BILINEAR",
+            OpKind::Reshape => "RESHAPE",
+            OpKind::Pad { .. } => "PAD",
+            OpKind::Elementwise { name } => name,
+        }
+    }
+}
+
+/// One operator node.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Data inputs (activations) followed by weight tensors, if any.
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+impl Op {
+    /// Approximate multiply-accumulate count for profiling/roofline notes.
+    pub fn flops(&self, out_elems: usize, in_c: usize) -> usize {
+        match &self.kind {
+            OpKind::Conv2d { kernel, .. } => 2 * out_elems * kernel.0 * kernel.1 * in_c,
+            OpKind::DepthwiseConv2d { kernel, .. } => 2 * out_elems * kernel.0 * kernel.1,
+            OpKind::FullyConnected { .. } => 2 * out_elems * in_c,
+            _ => out_elems,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnemonics_are_stable() {
+        let k = OpKind::Conv2d {
+            kernel: (3, 3),
+            stride: (1, 1),
+            padding: Padding::Same,
+            dilation: (1, 1),
+            activation: Activation::Relu6,
+        };
+        assert_eq!(k.mnemonic(), "CONV_2D");
+        assert_eq!(OpKind::Softmax.mnemonic(), "SOFTMAX");
+        assert_eq!(
+            OpKind::Pool2d {
+                kind: PoolKind::Average,
+                kernel: (2, 2),
+                stride: (2, 2),
+                padding: Padding::Valid
+            }
+            .mnemonic(),
+            "AVG_POOL_2D"
+        );
+    }
+
+    #[test]
+    fn conv_flops() {
+        let op = Op {
+            id: OpId(0),
+            name: "c".into(),
+            kind: OpKind::Conv2d {
+                kernel: (3, 3),
+                stride: (1, 1),
+                padding: Padding::Same,
+                dilation: (1, 1),
+                activation: Activation::None,
+            },
+            inputs: vec![],
+            outputs: vec![],
+        };
+        assert_eq!(op.flops(100, 8), 2 * 100 * 9 * 8);
+    }
+}

@@ -1,0 +1,94 @@
+//! Shape inference helpers (TFLite conventions, NHWC).
+
+
+
+/// Spatial padding scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// Output spatial size = ceil(in / stride); zero-pads as needed.
+    Same,
+    /// No padding; output = floor((in - eff_kernel) / stride) + 1.
+    Valid,
+}
+
+/// Output spatial dimension for a conv/pool along one axis.
+///
+/// `dilation` expands the effective kernel to `(k - 1) * d + 1`
+/// (atrous convolution, used by DeepLab v3).
+pub fn conv_out_dim(input: usize, kernel: usize, stride: usize, dilation: usize, pad: Padding) -> usize {
+    let eff = (kernel - 1) * dilation + 1;
+    match pad {
+        Padding::Same => (input + stride - 1) / stride,
+        Padding::Valid => {
+            assert!(
+                input >= eff,
+                "VALID conv: input {input} smaller than effective kernel {eff}"
+            );
+            (input - eff) / stride + 1
+        }
+    }
+}
+
+/// Total zero padding inserted along one axis under SAME (TFLite formula);
+/// returned as (before, after).
+pub fn same_padding(input: usize, kernel: usize, stride: usize, dilation: usize) -> (usize, usize) {
+    let eff = (kernel - 1) * dilation + 1;
+    let out = (input + stride - 1) / stride;
+    let total = ((out - 1) * stride + eff).saturating_sub(input);
+    (total / 2, total - total / 2)
+}
+
+/// Convenience for executors: the *before* padding on (h, w) under SAME.
+pub fn same_padding_pair(
+    h: usize,
+    w: usize,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    dilation: (usize, usize),
+) -> (usize, usize) {
+    (
+        same_padding(h, kernel.0, stride.0, dilation.0).0,
+        same_padding(w, kernel.1, stride.1, dilation.1).0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_halves_with_stride2() {
+        assert_eq!(conv_out_dim(224, 3, 2, 1, Padding::Same), 112);
+        assert_eq!(conv_out_dim(112, 3, 1, 1, Padding::Same), 112);
+        assert_eq!(conv_out_dim(7, 3, 2, 1, Padding::Same), 4);
+    }
+
+    #[test]
+    fn valid_shrinks() {
+        assert_eq!(conv_out_dim(299, 3, 2, 1, Padding::Valid), 149);
+        assert_eq!(conv_out_dim(149, 3, 1, 1, Padding::Valid), 147);
+        assert_eq!(conv_out_dim(5, 5, 1, 1, Padding::Valid), 1);
+    }
+
+    #[test]
+    fn dilation_expands_kernel() {
+        // 3x3 kernel at dilation 2 behaves like 5x5.
+        assert_eq!(
+            conv_out_dim(33, 3, 1, 2, Padding::Valid),
+            conv_out_dim(33, 5, 1, 1, Padding::Valid)
+        );
+        assert_eq!(conv_out_dim(33, 3, 1, 2, Padding::Same), 33);
+    }
+
+    #[test]
+    fn same_padding_amounts() {
+        assert_eq!(same_padding(224, 3, 2, 1), (0, 1));
+        assert_eq!(same_padding(112, 3, 1, 1), (1, 1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn valid_panics_when_kernel_too_big() {
+        conv_out_dim(2, 3, 1, 1, Padding::Valid);
+    }
+}

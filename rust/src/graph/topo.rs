@@ -1,0 +1,100 @@
+//! Topological ordering of graphs.
+//!
+//! The paper fixes the operator execution order to one topological sort
+//! (§3) and notes in §7.1 that choosing the sort to minimize footprint is
+//! future work. We provide deterministic Kahn's-algorithm sorting (smallest
+//! original index first — insertion order, the TFLite behaviour) so that
+//! planner experiments are reproducible, plus an order validator.
+
+use super::{Graph, OpId, TensorKind};
+use std::collections::BinaryHeap;
+use std::cmp::Reverse;
+
+/// Compute a deterministic topological order of the graph's ops.
+///
+/// Ties are broken by smallest op index, which reproduces insertion order
+/// for graphs already stored topologically. Returns `None` if the graph has
+/// a cycle.
+pub fn topo_sort(graph: &Graph) -> Option<Vec<OpId>> {
+    let n = graph.ops.len();
+    // producer[t] = op producing tensor t
+    let mut producer = vec![usize::MAX; graph.tensors.len()];
+    for op in &graph.ops {
+        for &o in &op.outputs {
+            producer[o.0] = op.id.0;
+        }
+    }
+    let mut indegree = vec![0usize; n];
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n]; // producer op -> consumer ops
+    for op in &graph.ops {
+        for &inp in &op.inputs {
+            let t = graph.tensor(inp);
+            if matches!(t.kind, TensorKind::Input | TensorKind::Weight) {
+                continue;
+            }
+            let p = producer[inp.0];
+            if p != usize::MAX {
+                consumers[p].push(op.id.0);
+                indegree[op.id.0] += 1;
+            }
+        }
+    }
+    let mut heap: BinaryHeap<Reverse<usize>> = indegree
+        .iter()
+        .enumerate()
+        .filter(|&(_, &d)| d == 0)
+        .map(|(i, _)| Reverse(i))
+        .collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(Reverse(i)) = heap.pop() {
+        order.push(OpId(i));
+        for &c in &consumers[i] {
+            indegree[c] -= 1;
+            if indegree[c] == 0 {
+                heap.push(Reverse(c));
+            }
+        }
+    }
+    (order.len() == n).then_some(order)
+}
+
+/// True if the graph's stored op order (ids 0..n) is a valid topological
+/// order: every op's inputs are produced strictly earlier.
+pub fn is_valid_execution_order(graph: &Graph) -> bool {
+    let mut produced_at = vec![usize::MAX; graph.tensors.len()];
+    for op in &graph.ops {
+        for &o in &op.outputs {
+            produced_at[o.0] = op.id.0;
+        }
+    }
+    for op in &graph.ops {
+        for &inp in &op.inputs {
+            let t = graph.tensor(inp);
+            if matches!(t.kind, TensorKind::Input | TensorKind::Weight) {
+                continue;
+            }
+            let p = produced_at[inp.0];
+            if p == usize::MAX || p >= op.id.0 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::models::example_net;
+    use super::*;
+
+    #[test]
+    fn example_net_is_topological() {
+        let g = example_net();
+        assert!(is_valid_execution_order(&g));
+        let order = topo_sort(&g).expect("acyclic");
+        // Stored order is already topological and ties break to insertion
+        // order, so the sort must be the identity.
+        let ids: Vec<usize> = order.iter().map(|o| o.0).collect();
+        assert_eq!(ids, (0..g.ops.len()).collect::<Vec<_>>());
+    }
+}

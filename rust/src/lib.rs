@@ -1,0 +1,72 @@
+//! # tensorarena
+//!
+//! A production-oriented reproduction of **"Efficient Memory Management for
+//! Deep Neural Net Inference"** (Pisarchyk & Lee, MLSys/SysML 2020) as a
+//! three-layer Rust + JAX + Pallas inference stack.
+//!
+//! The paper's contribution — static memory planners that share buffers among
+//! the intermediate tensors of a DNN inference graph — is implemented in
+//! [`planner`], fed by the usage-record machinery of [`records`], over the
+//! graph IR in [`graph`]. The planners are exercised three ways:
+//!
+//! 1. **Statically**, against the paper's six evaluation networks rebuilt
+//!    layer-by-layer in [`models`] (Tables 1 and 2).
+//! 2. **Behaviourally**, by the CPU graph executor in [`exec`] which runs a
+//!    whole network with every intermediate tensor living inside the planned
+//!    [`arena`] — an overlap bug corrupts real activations and is caught.
+//! 3. **In serving**, by the [`coordinator`] which batches requests and runs
+//!    AOT-compiled JAX models through the PJRT [`runtime`], with per-batch
+//!    working memory sized by the planner.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use tensorarena::models;
+//! use tensorarena::records::UsageRecords;
+//! use tensorarena::planner::{offset, shared, OffsetPlanner, SharedObjectPlanner};
+//!
+//! let graph = models::mobilenet_v1();
+//! let records = UsageRecords::from_graph(&graph);
+//! let plan = offset::GreedyBySize::default().plan(&records);
+//! assert!(plan.validate(&records).is_ok());
+//! println!("arena: {} bytes (naive {} bytes)",
+//!          plan.total_size(), records.naive_total());
+//! let shared = shared::GreedyBySizeImproved::default().plan(&records);
+//! assert!(shared.validate(&records).is_ok());
+//! ```
+
+pub mod arena;
+pub mod coordinator;
+pub mod exec;
+pub mod graph;
+pub mod models;
+pub mod planner;
+pub mod records;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+
+/// Byte alignment applied to every tensor buffer, matching TFLite's default
+/// arena alignment. The paper defines `size_t` as the tensor's *aligned* size
+/// in bytes.
+pub const TENSOR_ALIGNMENT: usize = 64;
+
+/// Round `n` up to [`TENSOR_ALIGNMENT`].
+#[inline]
+pub fn align(n: usize) -> usize {
+    (n + TENSOR_ALIGNMENT - 1) / TENSOR_ALIGNMENT * TENSOR_ALIGNMENT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_rounds_up_to_64() {
+        assert_eq!(align(0), 0);
+        assert_eq!(align(1), 64);
+        assert_eq!(align(64), 64);
+        assert_eq!(align(65), 128);
+        assert_eq!(align(4 * 112 * 112 * 32), 4 * 112 * 112 * 32);
+    }
+}

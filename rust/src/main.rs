@@ -1,0 +1,368 @@
+//! `tensorarena` CLI — the leader entrypoint.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//!
+//! ```text
+//! tensorarena records  <model>                      # §3 usage records & profiles
+//! tensorarena plan     <model> [shared|offset] [strategy]   # Figures 3–6
+//! tensorarena table1                                # Table 1 (Shared Objects)
+//! tensorarena table2 [--ratios]                     # Table 2 (Offset Calculation)
+//! tensorarena cachesim <model> [kib]                # §1 locality claim
+//! tensorarena serve [--artifacts DIR] [--requests N] [--batch B]   # E2E serving
+//! tensorarena models                                # list zoo models
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline registry has no clap.)
+
+use tensorarena::coordinator::{ArenaStats, BatchPolicy, Router};
+use tensorarena::exec::cachesim;
+use tensorarena::models;
+use tensorarena::planner::{offset, shared, OffsetPlanner, SharedObjectPlanner};
+use tensorarena::records::UsageRecords;
+use tensorarena::report::{self, MIB};
+use tensorarena::rng::SplitMix64;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("records") => cmd_records(&args[1..]),
+        Some("plan") => cmd_plan(&args[1..]),
+        Some("table1") => {
+            print!("{}", report::table1().render());
+            0
+        }
+        Some("table2") => cmd_table2(&args[1..]),
+        Some("cachesim") => cmd_cachesim(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("models") => {
+            for m in models::ZOO {
+                println!("{m}");
+            }
+            println!("example");
+            println!("l2_cnn");
+            0
+        }
+        _ => {
+            eprintln!(
+                "usage: tensorarena <records|plan|table1|table2|cachesim|serve|models> ...\n\
+                 see README.md for details"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_model(name: &str) -> Option<tensorarena::graph::Graph> {
+    let g = models::by_name(name);
+    if g.is_none() {
+        eprintln!("unknown model '{name}'; try `tensorarena models`");
+    }
+    g
+}
+
+fn cmd_records(args: &[String]) -> i32 {
+    let Some(name) = args.first() else {
+        eprintln!("usage: tensorarena records <model>");
+        return 2;
+    };
+    let Some(g) = load_model(name) else { return 2 };
+    let recs = UsageRecords::from_graph(&g);
+    let p = recs.profiles();
+    println!(
+        "{name}: {} ops, {} intermediate tensors, naive {:.3} MiB, weights {:.3} MiB",
+        g.num_ops(),
+        recs.len(),
+        recs.naive_total() as f64 / MIB,
+        g.weight_bytes() as f64 / MIB,
+    );
+    println!(
+        "lower bounds: shared-objects {:.3} MiB (sum of {} positional maxima), offsets {:.3} MiB (max breadth)",
+        p.shared_objects_lower_bound() as f64 / MIB,
+        p.positional_maximums().len(),
+        p.offset_lower_bound() as f64 / MIB,
+    );
+    println!("\n id first last      bytes  tensor");
+    for r in &recs.records {
+        let tname = r
+            .tensor
+            .map(|t| g.tensor(t).name.clone())
+            .unwrap_or_default();
+        println!(
+            "{:>3} {:>5} {:>4} {:>10}  {tname}",
+            r.id, r.first_op, r.last_op, r.size
+        );
+    }
+    0
+}
+
+fn cmd_plan(args: &[String]) -> i32 {
+    let Some(name) = args.first() else {
+        eprintln!("usage: tensorarena plan <model> [shared|offset] [strategy]");
+        return 2;
+    };
+    let approach = args.get(1).map(String::as_str).unwrap_or("offset");
+    let strategy = args.get(2).map(String::as_str).unwrap_or("greedy-size");
+    let Some(g) = load_model(name) else { return 2 };
+    let recs = UsageRecords::from_graph(&g);
+    let p = recs.profiles();
+    match approach {
+        "shared" => {
+            let planner: Box<dyn SharedObjectPlanner> = match strategy {
+                "greedy-size" => Box::new(shared::GreedyBySize),
+                "greedy-size-improved" => Box::new(shared::GreedyBySizeImproved),
+                "greedy-breadth" => Box::new(shared::GreedyByBreadth),
+                "tflite-greedy" => Box::new(shared::TfLiteGreedy),
+                "mincost-flow" => Box::new(shared::MinCostFlow),
+                "naive" => Box::new(shared::NaiveShared),
+                _ => {
+                    eprintln!("unknown shared strategy '{strategy}'");
+                    return 2;
+                }
+            };
+            let plan = planner.plan(&recs);
+            if let Err(e) = plan.validate(&recs) {
+                eprintln!("INFEASIBLE PLAN: {e}");
+                return 1;
+            }
+            println!(
+                "{} on {name}: {} objects, total {:.3} MiB (lower bound {:.3} MiB, naive {:.3} MiB)",
+                planner.name(),
+                plan.num_objects(),
+                plan.total_size() as f64 / MIB,
+                p.shared_objects_lower_bound() as f64 / MIB,
+                recs.naive_total() as f64 / MIB,
+            );
+            for (i, &sz) in plan.object_sizes.iter().enumerate() {
+                let members: Vec<String> = recs
+                    .records
+                    .iter()
+                    .filter(|r| plan.assignment[r.id] == i)
+                    .map(|r| format!("t{}({},{})", r.id, r.first_op, r.last_op))
+                    .collect();
+                println!("  object {i:>3} {sz:>10} B: {}", members.join(" "));
+            }
+        }
+        "offset" => {
+            let planner: Box<dyn OffsetPlanner> = match strategy {
+                "greedy-size" => Box::new(offset::GreedyBySize),
+                "greedy-breadth" => Box::new(offset::GreedyByBreadth),
+                "tflite-greedy" => Box::new(offset::TfLiteGreedy),
+                "strip-packing" => Box::new(offset::StripPackingBestFit),
+                "naive" => Box::new(offset::NaiveOffset),
+                _ => {
+                    eprintln!("unknown offset strategy '{strategy}'");
+                    return 2;
+                }
+            };
+            let plan = planner.plan(&recs);
+            if let Err(e) = plan.validate(&recs) {
+                eprintln!("INFEASIBLE PLAN: {e}");
+                return 1;
+            }
+            println!(
+                "{} on {name}: arena {:.3} MiB (lower bound {:.3} MiB, naive {:.3} MiB)",
+                planner.name(),
+                plan.total_size() as f64 / MIB,
+                p.offset_lower_bound() as f64 / MIB,
+                recs.naive_total() as f64 / MIB,
+            );
+            let mut ids: Vec<usize> = (0..recs.len()).collect();
+            ids.sort_by_key(|&i| plan.offsets[i]);
+            for i in ids.iter().take(40) {
+                let r = &recs.records[*i];
+                println!(
+                    "  t{:<3} offset {:>10} size {:>10} live [{}, {}]",
+                    r.id, plan.offsets[r.id], r.size, r.first_op, r.last_op
+                );
+            }
+            if recs.len() > 40 {
+                println!("  ... ({} more)", recs.len() - 40);
+            }
+            if recs.num_ops <= 120 {
+                println!("\n{}", report::render_offset_timeline(&recs, &plan, 16));
+            }
+        }
+        _ => {
+            eprintln!("approach must be 'shared' or 'offset'");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_table2(args: &[String]) -> i32 {
+    let t = report::table2();
+    print!("{}", t.render());
+    if args.iter().any(|a| a == "--ratios") {
+        // §1: "up to 10.5× smaller memory footprint than ... without one"
+        println!("\nNaive / best-strategy ratio per network:");
+        let naive = &t.rows.last().unwrap().1;
+        for (i, col) in t.columns.iter().enumerate() {
+            let best = t
+                .rows
+                .iter()
+                .filter(|(n, _)| n != "Naive" && n != "Lower Bound")
+                .map(|(_, v)| v[i])
+                .fold(f64::INFINITY, f64::min);
+            println!("  {col:>14}: {:.1}x", naive[i] / best);
+        }
+    }
+    0
+}
+
+fn cmd_cachesim(args: &[String]) -> i32 {
+    let Some(name) = args.first() else {
+        eprintln!("usage: tensorarena cachesim <model> [cache-KiB ...]");
+        return 2;
+    };
+    let Some(g) = load_model(name) else { return 2 };
+    let recs = UsageRecords::from_graph(&g);
+    let planned = cachesim::simulate(&g, &recs, &offset::GreedyBySize.plan(&recs));
+    let naive = cachesim::simulate(&g, &recs, &offset::NaiveOffset.plan(&recs));
+    let sizes: Vec<usize> = if args.len() > 1 {
+        args[1..].iter().filter_map(|a| a.parse().ok()).collect()
+    } else {
+        vec![32, 128, 256, 512, 1024, 2048, 4096]
+    };
+    println!(
+        "{name}: LRU hit rate, Greedy-by-Size arena vs Naive (cold misses {} vs {})",
+        planned.cold_misses(),
+        naive.cold_misses()
+    );
+    println!("{:>10} {:>10} {:>10} {:>8}", "cache KiB", "planned", "naive", "delta");
+    for kib in sizes {
+        let hp = planned.hit_rate(kib * 1024);
+        let hn = naive.hit_rate(kib * 1024);
+        println!("{kib:>10} {hp:>10.4} {hn:>10.4} {:>+8.4}", hp - hn);
+    }
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    // Parse --artifacts DIR --requests N --batch B --wait-ms W
+    let mut dir = "artifacts".to_string();
+    let mut requests = 256usize;
+    let mut max_batch = 8usize;
+    let mut wait_ms = 2u64;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--artifacts" => {
+                dir = args.get(i + 1).cloned().unwrap_or(dir);
+                i += 2;
+            }
+            "--requests" => {
+                requests = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(requests);
+                i += 2;
+            }
+            "--batch" => {
+                max_batch = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(max_batch);
+                i += 2;
+            }
+            "--wait-ms" => {
+                wait_ms = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(wait_ms);
+                i += 2;
+            }
+            other => {
+                eprintln!("unknown flag {other}");
+                return 2;
+            }
+        }
+    }
+    match serve_bench(&dir, requests, max_batch, wait_ms) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}
+
+/// Load the AOT artifacts, spin up the coordinator, fire a closed-loop
+/// request storm, report latency/throughput and the planner's arena story.
+fn serve_bench(dir: &str, requests: usize, max_batch: usize, wait_ms: u64) -> anyhow::Result<()> {
+    use tensorarena::coordinator::engine::PjrtEngine;
+    use tensorarena::runtime::{Runtime, VariantSet};
+
+    // Probe availability up front for a friendly error (the serving engine
+    // itself is built on the worker thread — PJRT handles are not Send).
+    {
+        let rt = Runtime::cpu()?;
+        let (platform, devs) = rt.platform();
+        println!("PJRT platform={platform} devices={devs}");
+        let found = Runtime::discover_variants(std::path::Path::new(dir), "model")?;
+        println!(
+            "found {} variants (batches {:?})",
+            found.len(),
+            found.iter().map(|(b, _)| *b).collect::<Vec<_>>()
+        );
+    }
+    // Plan the L2 graph's rust twin for the arena story.
+    let twin = models::l2_cnn();
+    let recs = UsageRecords::from_graph(&twin);
+    let plan = offset::GreedyBySize.plan(&recs);
+    let stats = ArenaStats {
+        planned_bytes: plan.total_size(),
+        naive_bytes: recs.naive_total(),
+        strategy: "Greedy by Size",
+    };
+    println!(
+        "L2 twin arena: {:.1} KiB planned vs {:.1} KiB naive ({:.1}x)",
+        stats.planned_bytes as f64 / 1024.0,
+        stats.naive_bytes as f64 / 1024.0,
+        stats.reduction()
+    );
+
+    let mut router = Router::new();
+    let dir_owned = dir.to_string();
+    let stats_for_engine = stats.clone();
+    router.register(
+        "cnn",
+        move || {
+            let rt = Runtime::cpu().expect("PJRT client");
+            let variants =
+                VariantSet::load(&rt, std::path::Path::new(&dir_owned), "model", &[32, 32, 3], 10)
+                    .expect("load artifacts");
+            Box::new(PjrtEngine::new(variants, stats_for_engine))
+        },
+        BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(wait_ms),
+        },
+    );
+
+    let mut rng = SplitMix64::new(42);
+    let mut input = vec![0f32; 32 * 32 * 3];
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        rng.fill_f32(&mut input, 1.0);
+        pending.push(router.submit("cnn", input.clone()));
+    }
+    let mut ok = 0;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(out)) => {
+                assert_eq!(out.len(), 10);
+                ok += 1;
+            }
+            Ok(Err(e)) => eprintln!("request error: {e}"),
+            Err(_) => eprintln!("worker died"),
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = router.server("cnn").unwrap().metrics().snapshot();
+    println!(
+        "{ok}/{requests} ok in {:.3}s -> {:.1} req/s | p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | mean batch {:.2}, mean queue {:.2} ms",
+        wall.as_secs_f64(),
+        ok as f64 / wall.as_secs_f64(),
+        snap.p50_us as f64 / 1000.0,
+        snap.p95_us as f64 / 1000.0,
+        snap.p99_us as f64 / 1000.0,
+        snap.mean_batch,
+        snap.mean_queue_us as f64 / 1000.0,
+    );
+    router.shutdown();
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! DeepLab v3 (Chen et al. 2017), 257×257×3, MobileNet-v2 backbone —
+//! Table 1/2 column 3.
+//!
+//! This is the mobile segmentation model TFLite ships (the paper's authors
+//! work on the TFLite GPU delegate, whose demo model is
+//! `deeplabv3_257_mv_gpu`): a MobileNet v2 feature extractor run at output
+//! stride 16 (final stage dilated instead of strided), an ASPP head with a
+//! 1×1 branch and a global-pooling branch, and a bilinear upsample back to
+//! the input resolution. The long-lived 33×33 backbone tensors bridged
+//! across the ASPP branches are why every strategy beats prior work by the
+//! largest margin here (Table 1).
+
+use super::mobilenet_v2::v2_backbone;
+use crate::graph::{Activation, DType, Graph, GraphBuilder, Padding};
+
+/// Build DeepLab v3 (MobileNet-v2 backbone, 21 PASCAL classes) at batch 1.
+pub fn deeplab_v3() -> Graph {
+    let mut b = GraphBuilder::new("deeplab_v3", DType::F32);
+    // Backbone at output stride 16: 257 -> 17×17×320.
+    let feat = v2_backbone(&mut b, 257, 16);
+    let hw = b.shape(feat)[1];
+
+    // ASPP, mobile variant: 1×1 conv branch + image-level pooling branch.
+    let aspp1 = b.conv2d(
+        "aspp/conv1x1",
+        feat,
+        256,
+        (1, 1),
+        (1, 1),
+        Padding::Same,
+        Activation::Relu,
+    );
+    let pooled = b.global_avg_pool("aspp/image_pool", feat);
+    let pooled = b.conv2d(
+        "aspp/image_pool_conv",
+        pooled,
+        256,
+        (1, 1),
+        (1, 1),
+        Padding::Same,
+        Activation::Relu,
+    );
+    let pooled_up = b.resize_bilinear("aspp/image_pool_upsample", pooled, (hw, hw));
+    let fused = b.concat("aspp/concat", &[aspp1, pooled_up]);
+    let proj = b.conv2d(
+        "aspp/project",
+        fused,
+        256,
+        (1, 1),
+        (1, 1),
+        Padding::Same,
+        Activation::Relu,
+    );
+
+    // Per-pixel classifier + upsample to input resolution.
+    let logits = b.conv2d(
+        "classifier",
+        proj,
+        21,
+        (1, 1),
+        (1, 1),
+        Padding::Same,
+        Activation::None,
+    );
+    let up = b.resize_bilinear("upsample_logits", logits, (257, 257));
+    b.mark_output(up);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::records::UsageRecords;
+
+    const MIB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn structure() {
+        let g = deeplab_v3();
+        assert_eq!(g.tensor(g.outputs[0]).shape, vec![1, 257, 257, 21]);
+        // The dilated stage must exist: some dwconv carries dilation 2.
+        let dilated = g.ops.iter().any(|o| {
+            matches!(
+                o.kind,
+                crate::graph::OpKind::DepthwiseConv2d { dilation: (2, 2), .. }
+            )
+        });
+        assert!(dilated, "output-stride-16 backbone must dilate");
+    }
+
+    #[test]
+    fn naive_total_matches_paper_scale() {
+        // Paper: Naive = 48.642 MiB.
+        let g = deeplab_v3();
+        let naive = g.naive_intermediate_bytes() as f64 / MIB;
+        assert!(
+            (naive - 48.642).abs() / 48.642 < 0.15,
+            "naive = {naive:.3} MiB, paper says 48.642"
+        );
+    }
+
+    #[test]
+    fn lower_bound_is_near_paper() {
+        // Paper Table 2 lower bound: 4.320 MiB. Our full-width (1.0×)
+        // MobileNet-v2 backbone at 257×257 makes the block-2 expansion
+        // tensor (129²×96) dominate at 7.6 MiB; the authors' converted model
+        // evidently thins this stage. Pin our value; paper-vs-ours deltas
+        // live in EXPERIMENTS.md.
+        let g = deeplab_v3();
+        let recs = UsageRecords::from_graph(&g);
+        let lb = recs.profiles().offset_lower_bound() as f64 / MIB;
+        assert!(
+            (7.0..8.3).contains(&lb),
+            "offset lower bound = {lb:.4} MiB, expected ~7.6 (paper graph: 4.320)"
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! The paper's Figure 1 example network.
+//!
+//! The figure itself is not machine-readable, but the running text pins it
+//! down tightly; this fixture satisfies every stated fact *exactly*:
+//!
+//! * nine tensors #0–#8, of which #0–#7 are intermediates and **#8 is not an
+//!   intermediate tensor** (it is the network output) — Figure 1 caption;
+//! * tensor #2's usage record is `{first_op=1, last_op=3, size=36}` —
+//!   Figure 1(b)/2(a);
+//! * operator #3's profile is `{36, 28, 16}` with breadth
+//!   `36 + 28 + 16 = 80` — §3;
+//! * the third positional maximum is `max(16, 16, 16, 10) = 16`, i.e.
+//!   exactly four operator profiles have a third element and their values
+//!   are 16, 16, 16, 10 — §3.
+//!
+//! Layout (tensor: interval, size in the figure's abstract units):
+//!
+//! ```text
+//! op0: input        -> t0 (0-1, 32)
+//! op1: t0           -> t1 (1-2, 16), t2 (1-3, 36)     [branch]
+//! op2: t1           -> t3 (2-3, 28)
+//! op3: t2, t3       -> t4 (3-4, 16)                   [merge]
+//! op4: t4           -> t5 (4-5, 64)
+//! op5: t5           -> t6 (5-6, 40), t7 (5-6, 10)     [branch]
+//! op6: t6, t7       -> t8 (output)                    [merge]
+//! ```
+//!
+//! Derived quantities used across the test suite: positional maximums
+//! `[64, 40, 16]`; Shared-Objects lower bound 120; operator breadths
+//! `[32, 84, 80, 80, 80, 114, 50]`; Offset lower bound 114; Naive 242.
+
+use crate::graph::{DType, Graph, Op, OpId, OpKind, Tensor, TensorId, TensorKind};
+use crate::records::UsageRecords;
+
+/// One abstract size unit of the figure, in bytes. The paper's `size_t` is
+/// an *aligned* byte size, so the unit equals our alignment quantum.
+pub const EXAMPLE_UNIT: usize = crate::TENSOR_ALIGNMENT;
+
+/// Figure 1(a) tensor sizes in abstract units, indexed by tensor id 0–7.
+const SIZES: [usize; 8] = [32, 16, 36, 28, 16, 64, 40, 10];
+
+/// The Figure-1 example network as a [`Graph`] (tensor sizes scaled by
+/// [`EXAMPLE_UNIT`] so that aligned byte sizes reproduce the figure's units
+/// exactly).
+pub fn example_net() -> Graph {
+    let mut tensors = Vec::new();
+    let t = |name: &str, units: usize, kind: TensorKind, tensors: &mut Vec<Tensor>| {
+        let id = TensorId(tensors.len());
+        tensors.push(Tensor {
+            id,
+            name: name.to_string(),
+            shape: vec![units * EXAMPLE_UNIT],
+            dtype: DType::U8,
+            kind,
+        });
+        id
+    };
+    // Tensor ids follow the figure: #0..#7 intermediates, #8 output, then
+    // the graph input (which the figure does not number).
+    let t0 = t("t0", SIZES[0], TensorKind::Intermediate, &mut tensors);
+    let t1 = t("t1", SIZES[1], TensorKind::Intermediate, &mut tensors);
+    let t2 = t("t2", SIZES[2], TensorKind::Intermediate, &mut tensors);
+    let t3 = t("t3", SIZES[3], TensorKind::Intermediate, &mut tensors);
+    let t4 = t("t4", SIZES[4], TensorKind::Intermediate, &mut tensors);
+    let t5 = t("t5", SIZES[5], TensorKind::Intermediate, &mut tensors);
+    let t6 = t("t6", SIZES[6], TensorKind::Intermediate, &mut tensors);
+    let t7 = t("t7", SIZES[7], TensorKind::Intermediate, &mut tensors);
+    let t8 = t("t8", 8, TensorKind::Output, &mut tensors);
+    let input = t("input", 32, TensorKind::Input, &mut tensors);
+
+    let op = |i: usize, name: &str, inputs: Vec<TensorId>, outputs: Vec<TensorId>| Op {
+        id: OpId(i),
+        name: name.to_string(),
+        kind: OpKind::Elementwise { name: "EXAMPLE" },
+        inputs,
+        outputs,
+    };
+    let ops = vec![
+        op(0, "op0", vec![input], vec![t0]),
+        op(1, "op1", vec![t0], vec![t1, t2]),
+        op(2, "op2", vec![t1], vec![t3]),
+        op(3, "op3", vec![t2, t3], vec![t4]),
+        op(4, "op4", vec![t4], vec![t5]),
+        op(5, "op5", vec![t5], vec![t6, t7]),
+        op(6, "op6", vec![t6, t7], vec![t8]),
+    ];
+
+    let g = Graph {
+        name: "example".into(),
+        tensors,
+        ops,
+        inputs: vec![input],
+        outputs: vec![t8],
+    };
+    g.validate().expect("example net must validate");
+    g
+}
+
+/// The Figure 2(a) usage records in the figure's abstract units (sizes
+/// 32, 16, 36, ... rather than bytes). Most planner unit tests work on
+/// these directly.
+pub fn example_records() -> UsageRecords {
+    let g = example_net();
+    let mut recs = UsageRecords::from_graph(&g);
+    for r in &mut recs.records {
+        debug_assert_eq!(r.size % EXAMPLE_UNIT, 0);
+        r.size /= EXAMPLE_UNIT;
+    }
+    recs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_1b_tensor_2_record() {
+        let recs = example_records();
+        let r2 = recs.records[2];
+        assert_eq!((r2.first_op, r2.last_op, r2.size), (1, 3, 36));
+    }
+
+    #[test]
+    fn eight_intermediates_and_output_excluded() {
+        let recs = example_records();
+        assert_eq!(recs.len(), 8);
+        assert_eq!(recs.num_ops, 7);
+        let sizes: Vec<usize> = recs.records.iter().map(|r| r.size).collect();
+        assert_eq!(sizes, SIZES.to_vec());
+        assert_eq!(recs.naive_total(), 242);
+    }
+
+    #[test]
+    fn graph_scaled_sizes_are_aligned_units() {
+        let g = example_net();
+        let recs = UsageRecords::from_graph(&g);
+        for (r, &u) in recs.records.iter().zip(SIZES.iter()) {
+            assert_eq!(r.size, u * EXAMPLE_UNIT);
+        }
+    }
+}

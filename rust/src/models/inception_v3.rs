@@ -1,0 +1,202 @@
+//! Inception v3 (Szegedy et al. 2016), 299×299×3 — Table 1/2 column 4.
+//!
+//! The concat-heavy Inception blocks produce the deepest operator profiles
+//! of the zoo (many simultaneously-live branch tensors), which is what makes
+//! this network the paper's largest Table-1 gap between Greedy (Lee 2019)
+//! at 12.703 MiB and Greedy by Size at 10.337 MiB.
+
+use crate::graph::{Activation, DType, Graph, GraphBuilder, Padding, PoolKind, TensorId};
+
+const RELU: Activation = Activation::Relu;
+
+/// conv + BN + ReLU (BN folds into the conv at inference, TFLite-style).
+fn conv(
+    b: &mut GraphBuilder,
+    name: String,
+    x: TensorId,
+    out_c: usize,
+    k: (usize, usize),
+    s: (usize, usize),
+    p: Padding,
+) -> TensorId {
+    b.conv2d(name, x, out_c, k, s, p, RELU)
+}
+
+/// 35×35 Inception-A block (5x5 branch factorized per the v3 paper).
+fn inception_a(b: &mut GraphBuilder, n: &str, x: TensorId, pool_c: usize) -> TensorId {
+    let b1 = conv(b, format!("{n}/b1/1x1"), x, 64, (1, 1), (1, 1), Padding::Same);
+    let b5 = conv(b, format!("{n}/b5/1x1"), x, 48, (1, 1), (1, 1), Padding::Same);
+    let b5 = conv(b, format!("{n}/b5/5x5"), b5, 64, (5, 5), (1, 1), Padding::Same);
+    let b3 = conv(b, format!("{n}/b3/1x1"), x, 64, (1, 1), (1, 1), Padding::Same);
+    let b3 = conv(b, format!("{n}/b3/3x3a"), b3, 96, (3, 3), (1, 1), Padding::Same);
+    let b3 = conv(b, format!("{n}/b3/3x3b"), b3, 96, (3, 3), (1, 1), Padding::Same);
+    let bp = b.pool2d(
+        format!("{n}/pool"),
+        x,
+        PoolKind::Average,
+        (3, 3),
+        (1, 1),
+        Padding::Same,
+    );
+    let bp = conv(b, format!("{n}/pool/1x1"), bp, pool_c, (1, 1), (1, 1), Padding::Same);
+    b.concat(format!("{n}/concat"), &[b1, b5, b3, bp])
+}
+
+/// 35→17 Reduction-A.
+fn reduction_a(b: &mut GraphBuilder, n: &str, x: TensorId) -> TensorId {
+    let b3 = conv(b, format!("{n}/b3/3x3"), x, 384, (3, 3), (2, 2), Padding::Valid);
+    let bd = conv(b, format!("{n}/bd/1x1"), x, 64, (1, 1), (1, 1), Padding::Same);
+    let bd = conv(b, format!("{n}/bd/3x3a"), bd, 96, (3, 3), (1, 1), Padding::Same);
+    let bd = conv(b, format!("{n}/bd/3x3b"), bd, 96, (3, 3), (2, 2), Padding::Valid);
+    let bp = b.pool2d(
+        format!("{n}/pool"),
+        x,
+        PoolKind::Max,
+        (3, 3),
+        (2, 2),
+        Padding::Valid,
+    );
+    b.concat(format!("{n}/concat"), &[b3, bd, bp])
+}
+
+/// 17×17 Inception-B block with factorized 7×7 convs; `c7` is the
+/// bottleneck width (128/160/192 across the four blocks).
+fn inception_b(b: &mut GraphBuilder, n: &str, x: TensorId, c7: usize) -> TensorId {
+    let b1 = conv(b, format!("{n}/b1/1x1"), x, 192, (1, 1), (1, 1), Padding::Same);
+    let b7 = conv(b, format!("{n}/b7/1x1"), x, c7, (1, 1), (1, 1), Padding::Same);
+    let b7 = conv(b, format!("{n}/b7/1x7"), b7, c7, (1, 7), (1, 1), Padding::Same);
+    let b7 = conv(b, format!("{n}/b7/7x1"), b7, 192, (7, 1), (1, 1), Padding::Same);
+    let bb = conv(b, format!("{n}/bb/1x1"), x, c7, (1, 1), (1, 1), Padding::Same);
+    let bb = conv(b, format!("{n}/bb/7x1a"), bb, c7, (7, 1), (1, 1), Padding::Same);
+    let bb = conv(b, format!("{n}/bb/1x7a"), bb, c7, (1, 7), (1, 1), Padding::Same);
+    let bb = conv(b, format!("{n}/bb/7x1b"), bb, c7, (7, 1), (1, 1), Padding::Same);
+    let bb = conv(b, format!("{n}/bb/1x7b"), bb, 192, (1, 7), (1, 1), Padding::Same);
+    let bp = b.pool2d(
+        format!("{n}/pool"),
+        x,
+        PoolKind::Average,
+        (3, 3),
+        (1, 1),
+        Padding::Same,
+    );
+    let bp = conv(b, format!("{n}/pool/1x1"), bp, 192, (1, 1), (1, 1), Padding::Same);
+    b.concat(format!("{n}/concat"), &[b1, b7, bb, bp])
+}
+
+/// 17→8 Reduction-B.
+fn reduction_b(b: &mut GraphBuilder, n: &str, x: TensorId) -> TensorId {
+    let b3 = conv(b, format!("{n}/b3/1x1"), x, 192, (1, 1), (1, 1), Padding::Same);
+    let b3 = conv(b, format!("{n}/b3/3x3"), b3, 320, (3, 3), (2, 2), Padding::Valid);
+    let b7 = conv(b, format!("{n}/b7/1x1"), x, 192, (1, 1), (1, 1), Padding::Same);
+    let b7 = conv(b, format!("{n}/b7/1x7"), b7, 192, (1, 7), (1, 1), Padding::Same);
+    let b7 = conv(b, format!("{n}/b7/7x1"), b7, 192, (7, 1), (1, 1), Padding::Same);
+    let b7 = conv(b, format!("{n}/b7/3x3"), b7, 192, (3, 3), (2, 2), Padding::Valid);
+    let bp = b.pool2d(
+        format!("{n}/pool"),
+        x,
+        PoolKind::Max,
+        (3, 3),
+        (2, 2),
+        Padding::Valid,
+    );
+    b.concat(format!("{n}/concat"), &[b3, b7, bp])
+}
+
+/// 8×8 Inception-C block (branch outputs themselves fan out and concat).
+fn inception_c(b: &mut GraphBuilder, n: &str, x: TensorId) -> TensorId {
+    let b1 = conv(b, format!("{n}/b1/1x1"), x, 320, (1, 1), (1, 1), Padding::Same);
+    let b3 = conv(b, format!("{n}/b3/1x1"), x, 384, (1, 1), (1, 1), Padding::Same);
+    let b3a = conv(b, format!("{n}/b3/1x3"), b3, 384, (1, 3), (1, 1), Padding::Same);
+    let b3b = conv(b, format!("{n}/b3/3x1"), b3, 384, (3, 1), (1, 1), Padding::Same);
+    let bd = conv(b, format!("{n}/bd/1x1"), x, 448, (1, 1), (1, 1), Padding::Same);
+    let bd = conv(b, format!("{n}/bd/3x3"), bd, 384, (3, 3), (1, 1), Padding::Same);
+    let bda = conv(b, format!("{n}/bd/1x3"), bd, 384, (1, 3), (1, 1), Padding::Same);
+    let bdb = conv(b, format!("{n}/bd/3x1"), bd, 384, (3, 1), (1, 1), Padding::Same);
+    let bp = b.pool2d(
+        format!("{n}/pool"),
+        x,
+        PoolKind::Average,
+        (3, 3),
+        (1, 1),
+        Padding::Same,
+    );
+    let bp = conv(b, format!("{n}/pool/1x1"), bp, 192, (1, 1), (1, 1), Padding::Same);
+    b.concat(format!("{n}/concat"), &[b1, b3a, b3b, bda, bdb, bp])
+}
+
+/// Build Inception v3 at batch 1, f32.
+pub fn inception_v3() -> Graph {
+    let mut b = GraphBuilder::new("inception_v3", DType::F32);
+    let x = b.input("input", vec![1, 299, 299, 3]);
+    // Stem.
+    let mut h = conv(&mut b, "stem/conv1".into(), x, 32, (3, 3), (2, 2), Padding::Valid); // 149
+    h = conv(&mut b, "stem/conv2".into(), h, 32, (3, 3), (1, 1), Padding::Valid); // 147
+    h = conv(&mut b, "stem/conv3".into(), h, 64, (3, 3), (1, 1), Padding::Same); // 147
+    h = b.pool2d("stem/pool1", h, PoolKind::Max, (3, 3), (2, 2), Padding::Valid); // 73
+    h = conv(&mut b, "stem/conv4".into(), h, 80, (1, 1), (1, 1), Padding::Valid); // 73
+    h = conv(&mut b, "stem/conv5".into(), h, 192, (3, 3), (1, 1), Padding::Valid); // 71
+    h = b.pool2d("stem/pool2", h, PoolKind::Max, (3, 3), (2, 2), Padding::Valid); // 35
+    // 3 × Inception-A.
+    h = inception_a(&mut b, "mixed0", h, 32);
+    h = inception_a(&mut b, "mixed1", h, 64);
+    h = inception_a(&mut b, "mixed2", h, 64);
+    // Reduction-A -> 17×17×768.
+    h = reduction_a(&mut b, "mixed3", h);
+    // 4 × Inception-B.
+    h = inception_b(&mut b, "mixed4", h, 128);
+    h = inception_b(&mut b, "mixed5", h, 160);
+    h = inception_b(&mut b, "mixed6", h, 160);
+    h = inception_b(&mut b, "mixed7", h, 192);
+    // Reduction-B -> 8×8×1280.
+    h = reduction_b(&mut b, "mixed8", h);
+    // 2 × Inception-C -> 8×8×2048.
+    h = inception_c(&mut b, "mixed9", h);
+    h = inception_c(&mut b, "mixed10", h);
+    let g = b.global_avg_pool("avg_pool", h);
+    let flat = b.reshape("flatten", g, vec![1, 2048]);
+    let logits = b.fully_connected("fc", flat, 1001, Activation::None);
+    let probs = b.softmax("softmax", logits);
+    b.mark_output(probs);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::records::UsageRecords;
+
+    const MIB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn structure() {
+        let g = inception_v3();
+        let recs = UsageRecords::from_graph(&g);
+        assert!(recs.len() > 100, "{} intermediates", recs.len());
+        // channel math: final concat is 2048 wide
+        let gap = g.ops.iter().find(|o| o.name == "avg_pool").unwrap();
+        assert_eq!(g.tensor(gap.inputs[0]).shape, vec![1, 8, 8, 2048]);
+    }
+
+    #[test]
+    fn naive_total_matches_paper_scale() {
+        // Paper: Naive = 54.010 MiB.
+        let g = inception_v3();
+        let naive = g.naive_intermediate_bytes() as f64 / MIB;
+        assert!(
+            (naive - 54.010).abs() / 54.010 < 0.10,
+            "naive = {naive:.3} MiB, paper says 54.010"
+        );
+    }
+
+    #[test]
+    fn lower_bound_is_near_paper() {
+        // Paper Table 2 lower bound: 7.914 MiB.
+        let g = inception_v3();
+        let recs = UsageRecords::from_graph(&g);
+        let lb = recs.profiles().offset_lower_bound() as f64 / MIB;
+        assert!(
+            (lb - 7.914).abs() / 7.914 < 0.12,
+            "offset lower bound = {lb:.4} MiB, paper says 7.914"
+        );
+    }
+}

@@ -1,0 +1,73 @@
+//! Rust twin of the L2 JAX serving model (`python/compile/model.py`).
+//!
+//! The serving example runs the AOT-compiled JAX model through PJRT; this
+//! graph mirrors its architecture op-for-op so that (a) the planner can
+//! size the serving arena, (b) the CPU executor can cross-check the memory
+//! plan behaviourally, and (c) the planner tables can include the model we
+//! actually serve. Keep in sync with `python/compile/model.py`.
+
+use crate::graph::{Activation, DType, Graph, GraphBuilder, Padding};
+
+/// Input spatial size of the serving CNN.
+pub const L2_HW: usize = 32;
+/// Classes of the serving CNN.
+pub const L2_CLASSES: usize = 10;
+
+/// MobileNet-v1-flavoured classifier: conv stem + 4 depthwise-separable
+/// blocks + GAP + FC, 32×32×3 → 10 classes (batch 1; PJRT variants handle
+/// real batches).
+pub fn l2_cnn() -> Graph {
+    let mut b = GraphBuilder::new("l2_cnn", DType::F32);
+    let x = b.input("input", vec![1, L2_HW, L2_HW, 3]);
+    let mut h = b.conv2d("stem", x, 16, (3, 3), (1, 1), Padding::Same, Activation::Relu6);
+    for (i, &(c, s)) in [(32, 2), (32, 1), (64, 2), (64, 1)].iter().enumerate() {
+        h = b.dwconv2d(
+            format!("block{i}/dw"),
+            h,
+            (3, 3),
+            (s, s),
+            Padding::Same,
+            Activation::Relu6,
+        );
+        h = b.conv2d(
+            format!("block{i}/pw"),
+            h,
+            c,
+            (1, 1),
+            (1, 1),
+            Padding::Same,
+            Activation::Relu6,
+        );
+    }
+    let g = b.global_avg_pool("gap", h);
+    let flat = b.reshape("flatten", g, vec![1, 64]);
+    let logits = b.fully_connected("fc", flat, L2_CLASSES, Activation::None);
+    let probs = b.softmax("softmax", logits);
+    b.mark_output(probs);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::OffsetPlanner;
+    use crate::records::UsageRecords;
+
+    #[test]
+    fn structure_matches_python_model() {
+        let g = l2_cnn();
+        // stem + 4*(dw+pw) + gap + flatten + fc + softmax = 13 ops
+        assert_eq!(g.num_ops(), 13);
+        assert_eq!(g.tensor(g.inputs[0]).shape, vec![1, 32, 32, 3]);
+        assert_eq!(g.tensor(g.outputs[0]).shape, vec![1, 10]);
+    }
+
+    #[test]
+    fn planning_beats_naive() {
+        let g = l2_cnn();
+        let recs = UsageRecords::from_graph(&g);
+        let plan = crate::planner::offset::GreedyBySize.plan(&recs);
+        plan.validate(&recs).unwrap();
+        assert!(plan.total_size() * 2 < recs.naive_total());
+    }
+}

@@ -1,0 +1,108 @@
+//! MobileNet v1 (Howard et al. 2017), 224×224×3, width multiplier 1.0 —
+//! Table 1/2 column 1.
+//!
+//! Calibration note: the paper's lower bound for this network, 4.594 MiB,
+//! equals exactly `112·112·32·4 (dw1 output) + 112·112·64·4 (pw1 output)`
+//! = 1.531 + 3.063 MiB — the breadth of the first pointwise convolution.
+//! Our reconstruction reproduces that operator profile, so the lower-bound
+//! row of EXPERIMENTS.md matches the paper to the kilobyte.
+
+use crate::graph::{Activation, DType, Graph, GraphBuilder, Padding};
+
+/// `(out_channels_of_pointwise, stride_of_depthwise)` for the 13 separable
+/// blocks of Table 1 in the MobileNet paper.
+const BLOCKS: [(usize, usize); 13] = [
+    (64, 1),
+    (128, 2),
+    (128, 1),
+    (256, 2),
+    (256, 1),
+    (512, 2),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (1024, 2),
+    (1024, 1),
+];
+
+/// Build MobileNet v1 at batch 1, f32.
+pub fn mobilenet_v1() -> Graph {
+    let mut b = GraphBuilder::new("mobilenet_v1", DType::F32);
+    let x = b.input("input", vec![1, 224, 224, 3]);
+    let mut h = b.conv2d(
+        "conv1",
+        x,
+        32,
+        (3, 3),
+        (2, 2),
+        Padding::Same,
+        Activation::Relu6,
+    );
+    for (i, &(out_c, stride)) in BLOCKS.iter().enumerate() {
+        h = b.dwconv2d(
+            format!("block{}/dw", i + 1),
+            h,
+            (3, 3),
+            (stride, stride),
+            Padding::Same,
+            Activation::Relu6,
+        );
+        h = b.conv2d(
+            format!("block{}/pw", i + 1),
+            h,
+            out_c,
+            (1, 1),
+            (1, 1),
+            Padding::Same,
+            Activation::Relu6,
+        );
+    }
+    let g = b.global_avg_pool("avg_pool", h);
+    let flat = b.reshape("flatten", g, vec![1, 1024]);
+    let logits = b.fully_connected("fc", flat, 1001, Activation::None);
+    let probs = b.softmax("softmax", logits);
+    b.mark_output(probs);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::records::UsageRecords;
+
+    const MIB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn structure() {
+        let g = mobilenet_v1();
+        // conv1 + 13*(dw+pw) + gap + reshape + fc + softmax = 31 ops
+        assert_eq!(g.num_ops(), 31);
+        assert_eq!(g.tensor(g.outputs[0]).shape, vec![1, 1001]);
+    }
+
+    #[test]
+    fn naive_total_matches_paper_scale() {
+        // Paper Table 1: Naive = 19.248 MiB. Our reconstruction must land
+        // within a few percent (converter-level op fusion differs).
+        let g = mobilenet_v1();
+        let naive = g.naive_intermediate_bytes() as f64 / MIB;
+        assert!(
+            (naive - 19.248).abs() / 19.248 < 0.10,
+            "naive = {naive:.3} MiB, paper says 19.248"
+        );
+    }
+
+    #[test]
+    fn lower_bound_matches_paper_exactly() {
+        // Paper: Offset lower bound 4.594 MiB = breadth of block1/pw.
+        let g = mobilenet_v1();
+        let recs = UsageRecords::from_graph(&g);
+        let lb = recs.profiles().offset_lower_bound() as f64 / MIB;
+        assert!(
+            (lb - 4.594).abs() < 0.002,
+            "offset lower bound = {lb:.4} MiB, paper says 4.594"
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! MobileNet v2 (Sandler et al. 2018), 224×224×3, width multiplier 1.0 —
+//! Table 1/2 column 2.
+//!
+//! The interesting planning structure here is the *inverted residual*: the
+//! 6×-expanded tensors (e.g. 56×56×144) dominate breadth while the
+//! bottleneck tensors live long across the residual add — the combination
+//! the paper credits for Greedy by Breadth beating Greedy by Size on this
+//! network (Table 1).
+
+use crate::graph::{Activation, DType, Graph, GraphBuilder, Padding, TensorId};
+
+/// `(expansion t, out_channels c, repeats n, first_stride s)` per the
+/// MobileNet v2 paper, Table 2.
+const BLOCKS: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+/// One inverted-residual block; returns the new feature map.
+pub(crate) fn inverted_residual(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    expansion: usize,
+    out_c: usize,
+    stride: usize,
+    dilation: usize,
+) -> TensorId {
+    let in_c = b.shape(x)[3];
+    let mut h = x;
+    if expansion != 1 {
+        h = b.conv2d(
+            format!("{name}/expand"),
+            h,
+            in_c * expansion,
+            (1, 1),
+            (1, 1),
+            Padding::Same,
+            Activation::Relu6,
+        );
+    }
+    h = b.dwconv2d_dilated(
+        format!("{name}/dw"),
+        h,
+        (3, 3),
+        (stride, stride),
+        Padding::Same,
+        (dilation, dilation),
+        Activation::Relu6,
+    );
+    // Linear bottleneck: no activation on the projection.
+    h = b.conv2d(
+        format!("{name}/project"),
+        h,
+        out_c,
+        (1, 1),
+        (1, 1),
+        Padding::Same,
+        Activation::None,
+    );
+    if stride == 1 && in_c == out_c {
+        h = b.add(format!("{name}/add"), x, h, Activation::None);
+    }
+    h
+}
+
+/// Build the MobileNet v2 backbone up to the 320-channel bottleneck.
+/// `input_hw` lets DeepLab reuse it at 257×257; `output_stride` of 16
+/// dilates the final stage instead of striding (DeepLab's atrous trick);
+/// 32 is the classification default.
+pub(crate) fn v2_backbone(b: &mut GraphBuilder, input_hw: usize, output_stride: usize) -> TensorId {
+    assert!(output_stride == 32 || output_stride == 16);
+    let x = b.input("input", vec![1, input_hw, input_hw, 3]);
+    let mut h = b.conv2d(
+        "conv1",
+        x,
+        32,
+        (3, 3),
+        (2, 2),
+        Padding::Same,
+        Activation::Relu6,
+    );
+    let mut current_stride = 2;
+    let mut dilation = 1;
+    for (bi, &(t, c, n, s)) in BLOCKS.iter().enumerate() {
+        for r in 0..n {
+            let mut stride = if r == 0 { s } else { 1 };
+            // Convert stride to dilation once the output stride is reached.
+            if stride == 2 && current_stride * 2 > output_stride {
+                stride = 1;
+                dilation *= 2;
+            } else if stride == 2 {
+                current_stride *= 2;
+            }
+            h = inverted_residual(
+                b,
+                &format!("block{}_{}", bi + 1, r + 1),
+                h,
+                t,
+                c,
+                stride,
+                dilation,
+            );
+        }
+    }
+    h
+}
+
+/// Build MobileNet v2 classifier at batch 1, f32.
+pub fn mobilenet_v2() -> Graph {
+    let mut b = GraphBuilder::new("mobilenet_v2", DType::F32);
+    let h = v2_backbone(&mut b, 224, 32);
+    let head = b.conv2d(
+        "conv_head",
+        h,
+        1280,
+        (1, 1),
+        (1, 1),
+        Padding::Same,
+        Activation::Relu6,
+    );
+    let g = b.global_avg_pool("avg_pool", head);
+    let flat = b.reshape("flatten", g, vec![1, 1280]);
+    let logits = b.fully_connected("fc", flat, 1001, Activation::None);
+    let probs = b.softmax("softmax", logits);
+    b.mark_output(probs);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::records::UsageRecords;
+
+    const MIB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn structure() {
+        let g = mobilenet_v2();
+        let recs = UsageRecords::from_graph(&g);
+        assert!(recs.len() > 60, "v2 has {} intermediates", recs.len());
+        assert_eq!(g.tensor(g.outputs[0]).shape, vec![1, 1001]);
+        // Residual adds exist.
+        assert!(g.ops.iter().any(|o| o.name.ends_with("/add")));
+    }
+
+    #[test]
+    fn naive_total_matches_paper_scale() {
+        // Paper Table 1: Naive = 26.313 MiB.
+        let g = mobilenet_v2();
+        let naive = g.naive_intermediate_bytes() as f64 / MIB;
+        assert!(
+            (naive - 26.313).abs() / 26.313 < 0.10,
+            "naive = {naive:.3} MiB, paper says 26.313"
+        );
+    }
+
+    #[test]
+    fn lower_bound_is_near_paper() {
+        // Paper Table 2 lower bound: 5.742 MiB.
+        let g = mobilenet_v2();
+        let recs = UsageRecords::from_graph(&g);
+        let lb = recs.profiles().offset_lower_bound() as f64 / MIB;
+        assert!(
+            (lb - 5.742).abs() / 5.742 < 0.10,
+            "offset lower bound = {lb:.4} MiB, paper says 5.742"
+        );
+    }
+}

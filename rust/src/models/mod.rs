@@ -1,0 +1,116 @@
+//! Model zoo: the paper's six evaluation networks rebuilt layer-by-layer,
+//! plus the Figure-1 example network.
+//!
+//! The paper evaluates its planners on MobileNet v1, MobileNet v2,
+//! DeepLab v3, Inception v3, PoseNet, and BlazeFace at 32-bit floats
+//! (Table 1 / Table 2). The authors used the TFLite flatbuffers of those
+//! models; we reconstruct each architecture from its original publication so
+//! that the planner input — the multiset of tensor usage records — matches
+//! the paper's up to converter-level differences (op fusion, pad handling).
+//! Absolute megabytes therefore differ slightly from the tables; the
+//! *relational* claims (which strategy wins, lower-bound attainment, naive
+//! ratios) are what EXPERIMENTS.md checks.
+
+mod blazeface;
+mod deeplab_v3;
+mod example;
+mod inception_v3;
+mod l2_cnn;
+mod mobilenet_v1;
+mod mobilenet_v2;
+mod posenet;
+
+pub use blazeface::blazeface;
+pub use deeplab_v3::deeplab_v3;
+pub use example::{example_net, example_records, EXAMPLE_UNIT};
+pub use inception_v3::inception_v3;
+pub use l2_cnn::{l2_cnn, L2_CLASSES, L2_HW};
+pub use mobilenet_v1::mobilenet_v1;
+pub use mobilenet_v2::mobilenet_v2;
+pub use posenet::posenet;
+
+use crate::graph::{DType, Graph};
+
+/// Re-type every activation/weight tensor of a graph (e.g. plan the zoo at
+/// F16 or U8 — the quantized-deployment planning study). Alignment makes
+/// footprints *not* scale exactly with element size: a 10-byte U8 tensor
+/// still occupies one 64-byte slot, so small-tensor-heavy nets (BlazeFace)
+/// shrink less than 4×.
+pub fn with_dtype(graph: &Graph, dtype: DType) -> Graph {
+    let mut g = graph.clone();
+    g.name = format!("{}_{dtype:?}", g.name).to_lowercase();
+    for t in &mut g.tensors {
+        t.dtype = dtype;
+    }
+    g
+}
+
+/// Names of the six evaluation networks, in the tables' column order.
+pub const ZOO: [&str; 6] = [
+    "mobilenet_v1",
+    "mobilenet_v2",
+    "deeplab_v3",
+    "inception_v3",
+    "posenet",
+    "blazeface",
+];
+
+/// Construct a zoo network by name (batch size 1, f32).
+pub fn by_name(name: &str) -> Option<Graph> {
+    match name {
+        "mobilenet_v1" => Some(mobilenet_v1()),
+        "mobilenet_v2" => Some(mobilenet_v2()),
+        "deeplab_v3" => Some(deeplab_v3()),
+        "inception_v3" => Some(inception_v3()),
+        "posenet" => Some(posenet()),
+        "blazeface" => Some(blazeface()),
+        "example" => Some(example_net()),
+        "l2_cnn" => Some(l2_cnn()),
+        _ => None,
+    }
+}
+
+/// All six zoo graphs in table order.
+pub fn all_zoo() -> Vec<Graph> {
+    ZOO.iter().map(|n| by_name(n).unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_constructs_and_validates() {
+        for name in ZOO {
+            let g = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(g.validate().is_ok(), "{name} invalid");
+            assert!(g.num_ops() > 5, "{name} too small");
+            assert!(g.naive_intermediate_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(by_name("resnet9000").is_none());
+    }
+
+    #[test]
+    fn with_dtype_rescales_but_alignment_floors() {
+        use crate::records::UsageRecords;
+        let g = mobilenet_v1();
+        let f32_naive = UsageRecords::from_graph(&g).naive_total();
+        let f16 = with_dtype(&g, DType::F16);
+        let f16_naive = UsageRecords::from_graph(&f16).naive_total();
+        let u8g = with_dtype(&g, DType::U8);
+        let u8_naive = UsageRecords::from_graph(&u8g).naive_total();
+        // Large tensors dominate MobileNet: close to exact 2x / 4x.
+        assert!((f32_naive as f64 / f16_naive as f64 - 2.0).abs() < 0.01);
+        assert!((f32_naive as f64 / u8_naive as f64 - 4.0).abs() < 0.02);
+        // But never better than the alignment floor.
+        assert!(f16_naive * 2 >= f32_naive);
+        // Planning still works and validates.
+        use crate::planner::{offset::GreedyBySize, OffsetPlanner};
+        let recs = UsageRecords::from_graph(&u8g);
+        GreedyBySize.plan(&recs).validate(&recs).unwrap();
+    }
+}

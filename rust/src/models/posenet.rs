@@ -1,0 +1,104 @@
+//! PoseNet (Kendall et al. 2015), 224×224×3 — Table 1/2 column 5.
+//!
+//! PoseNet is GoogLeNet (Inception v1) with the classifier replaced by a
+//! 6-DoF camera-pose regression head (2048-wide FC feeding a 3-vector
+//! position and 4-vector orientation). The backbone's inception modules are
+//! what the planner sees; the pose head is tiny.
+
+use crate::graph::{Activation, DType, Graph, GraphBuilder, Padding, PoolKind, TensorId};
+
+const RELU: Activation = Activation::Relu;
+
+/// GoogLeNet inception module: `(c1, c3r, c3, c5r, c5, pp)`.
+fn inception(
+    b: &mut GraphBuilder,
+    n: &str,
+    x: TensorId,
+    cfg: (usize, usize, usize, usize, usize, usize),
+) -> TensorId {
+    let (c1, c3r, c3, c5r, c5, pp) = cfg;
+    let b1 = b.conv2d(format!("{n}/1x1"), x, c1, (1, 1), (1, 1), Padding::Same, RELU);
+    let b3 = b.conv2d(format!("{n}/3x3r"), x, c3r, (1, 1), (1, 1), Padding::Same, RELU);
+    let b3 = b.conv2d(format!("{n}/3x3"), b3, c3, (3, 3), (1, 1), Padding::Same, RELU);
+    let b5 = b.conv2d(format!("{n}/5x5r"), x, c5r, (1, 1), (1, 1), Padding::Same, RELU);
+    let b5 = b.conv2d(format!("{n}/5x5"), b5, c5, (5, 5), (1, 1), Padding::Same, RELU);
+    let bp = b.pool2d(format!("{n}/pool"), x, PoolKind::Max, (3, 3), (1, 1), Padding::Same);
+    let bp = b.conv2d(format!("{n}/poolproj"), bp, pp, (1, 1), (1, 1), Padding::Same, RELU);
+    b.concat(format!("{n}/concat"), &[b1, b3, b5, bp])
+}
+
+/// Build PoseNet at batch 1, f32.
+pub fn posenet() -> Graph {
+    let mut b = GraphBuilder::new("posenet", DType::F32);
+    let x = b.input("input", vec![1, 224, 224, 3]);
+    let mut h = b.conv2d("conv1", x, 64, (7, 7), (2, 2), Padding::Same, RELU); // 112
+    h = b.pool2d("pool1", h, PoolKind::Max, (3, 3), (2, 2), Padding::Same); // 56
+    h = b.conv2d("conv2r", h, 64, (1, 1), (1, 1), Padding::Same, RELU);
+    h = b.conv2d("conv2", h, 192, (3, 3), (1, 1), Padding::Same, RELU);
+    h = b.pool2d("pool2", h, PoolKind::Max, (3, 3), (2, 2), Padding::Same); // 28
+    h = inception(&mut b, "3a", h, (64, 96, 128, 16, 32, 32)); // 256
+    h = inception(&mut b, "3b", h, (128, 128, 192, 32, 96, 64)); // 480
+    h = b.pool2d("pool3", h, PoolKind::Max, (3, 3), (2, 2), Padding::Same); // 14
+    h = inception(&mut b, "4a", h, (192, 96, 208, 16, 48, 64)); // 512
+    h = inception(&mut b, "4b", h, (160, 112, 224, 24, 64, 64)); // 512
+    h = inception(&mut b, "4c", h, (128, 128, 256, 24, 64, 64)); // 512
+    h = inception(&mut b, "4d", h, (112, 144, 288, 32, 64, 64)); // 528
+    h = inception(&mut b, "4e", h, (256, 160, 320, 32, 128, 128)); // 832
+    h = b.pool2d("pool4", h, PoolKind::Max, (3, 3), (2, 2), Padding::Same); // 7
+    h = inception(&mut b, "5a", h, (256, 160, 320, 32, 128, 128)); // 832
+    h = inception(&mut b, "5b", h, (384, 192, 384, 48, 128, 128)); // 1024
+    let g = b.global_avg_pool("avg_pool", h);
+    let flat = b.reshape("flatten", g, vec![1, 1024]);
+    // Pose regression head (Kendall 2015 §3): FC-2048 then 3+4 outputs.
+    let feat = b.fully_connected("fc_pose", flat, 2048, RELU);
+    let xyz = b.fully_connected("fc_xyz", feat, 3, Activation::None);
+    let wpqr = b.fully_connected("fc_wpqr", feat, 4, Activation::None);
+    b.mark_output(xyz);
+    b.mark_output(wpqr);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::records::UsageRecords;
+
+    const MIB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn structure() {
+        let g = posenet();
+        assert_eq!(g.outputs.len(), 2);
+        let gap = g.ops.iter().find(|o| o.name == "avg_pool").unwrap();
+        assert_eq!(g.tensor(gap.inputs[0]).shape, vec![1, 7, 7, 1024]);
+    }
+
+    #[test]
+    fn naive_total_matches_paper_scale() {
+        // Paper: Naive = 28.556 MiB. Our GoogLeNet reconstruction fuses
+        // ReLU/LRN the way TFLite would today (22.4 MiB); the paper's
+        // converter kept more standalone tensors. Same order, documented in
+        // EXPERIMENTS.md; assert the reconstruction window.
+        let g = posenet();
+        let naive = g.naive_intermediate_bytes() as f64 / MIB;
+        assert!(
+            (18.0..32.0).contains(&naive),
+            "naive = {naive:.3} MiB, expected ~22 (paper graph: 28.556)"
+        );
+    }
+
+    #[test]
+    fn lower_bound_is_near_paper() {
+        // Paper Table 2 lower bound: 6.271 MiB; with fused activations the
+        // widest profile is conv1+pool1 = 3.83 MiB. The *relational* Table-2
+        // claims are what EXPERIMENTS.md checks; here we pin our own value
+        // so regressions are caught.
+        let g = posenet();
+        let recs = UsageRecords::from_graph(&g);
+        let lb = recs.profiles().offset_lower_bound() as f64 / MIB;
+        assert!(
+            (lb - 3.828).abs() < 0.05,
+            "offset lower bound = {lb:.4} MiB, expected 3.828 (paper graph: 6.271)"
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! Multi-pass planning for dynamically-sized tensors — §7.
+//!
+//! The paper's algorithms assume every intermediate tensor size is known
+//! up front, which fails for e.g. recurrent networks: "For such cases, the
+//! algorithms need to be run multiple times, saving information about
+//! allocation from all runs in one place. The first run will allocate only
+//! those tensors whose sizes are known at the beginning, and the second run
+//! will allocate those tensors whose sizes become known after calculation
+//! of the first dynamic tensor, etc."
+//!
+//! [`MultiPassPlanner`] implements exactly that protocol on top of the
+//! Algorithm-3 gap logic: earlier passes' placements are frozen, later
+//! passes best-fit around them.
+
+use super::offset::GreedyBySize;
+use super::{OffsetPlan, OffsetPlanner};
+use crate::records::{UsageRecord, UsageRecords};
+
+/// A usage record whose size becomes known only once op `known_at` has
+/// executed (`known_at == 0` means statically known).
+#[derive(Debug, Clone, Copy)]
+pub struct DynamicRecord {
+    pub record: UsageRecord,
+    pub known_at: usize,
+}
+
+/// Outcome of multi-pass planning.
+#[derive(Debug, Clone)]
+pub struct MultiPassPlan {
+    /// Final offsets, indexed by record id.
+    pub plan: OffsetPlan,
+    /// Number of planner passes executed (= distinct `known_at` values).
+    pub passes: usize,
+    /// Arena high-water mark after each pass.
+    pub growth: Vec<usize>,
+}
+
+/// §7 multi-pass offset planner. Records are planned in waves of increasing
+/// `known_at`; each wave is size-ordered and best-fit placed around every
+/// previously frozen allocation (which may belong to tensors whose usage
+/// intervals already passed — their storage cannot be re-planned because
+/// inference is already running when later sizes resolve).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MultiPassPlanner;
+
+impl MultiPassPlanner {
+    /// Plan all records. The returned offsets satisfy the usual §5
+    /// feasibility (validated against the *final* sizes).
+    pub fn plan(&self, dynamic: &[DynamicRecord], num_ops: usize) -> MultiPassPlan {
+        let records = UsageRecords {
+            records: dynamic.iter().map(|d| d.record).collect(),
+            num_ops,
+        };
+        let mut waves: Vec<usize> = dynamic.iter().map(|d| d.known_at).collect();
+        waves.sort_unstable();
+        waves.dedup();
+
+        let mut store = super::offset::OffsetStore::new(&records);
+        let mut growth = Vec::with_capacity(waves.len());
+        let mut high = 0usize;
+        for &wave in &waves {
+            // Newly-known records, size-descending (Algorithm 3's order).
+            let mut ids: Vec<usize> = dynamic
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| d.known_at == wave)
+                .map(|(i, _)| i)
+                .collect();
+            crate::records::profile::sort_ids_by_size_desc(&records.records, &mut ids);
+            for id in ids {
+                let r = &records.records[id];
+                let off = store.best_fit_offset(r);
+                store.place(r, off);
+                high = high.max(off + r.size);
+            }
+            growth.push(high);
+        }
+        MultiPassPlan {
+            plan: store.into_plan(),
+            passes: waves.len(),
+            growth,
+        }
+    }
+
+    /// Footprint penalty of not knowing sizes up front: ratio of the
+    /// multi-pass arena to the oracle single-pass arena.
+    pub fn overhead_vs_oracle(&self, dynamic: &[DynamicRecord], num_ops: usize) -> f64 {
+        let records = UsageRecords {
+            records: dynamic.iter().map(|d| d.record).collect(),
+            num_ops,
+        };
+        let oracle = GreedyBySize.plan(&records).total_size();
+        let multi = self.plan(dynamic, num_ops).plan.total_size();
+        if oracle == 0 {
+            1.0
+        } else {
+            multi as f64 / oracle as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::records::UsageRecords;
+
+    fn rec(id: usize, f: usize, l: usize, s: usize) -> UsageRecord {
+        UsageRecord { id, tensor: None, first_op: f, last_op: l, size: s }
+    }
+
+    #[test]
+    fn all_static_equals_single_pass() {
+        let dynamic: Vec<DynamicRecord> = [(0, 1, 32), (1, 2, 28), (2, 5, 8), (3, 4, 40)]
+            .iter()
+            .enumerate()
+            .map(|(i, &(f, l, s))| DynamicRecord { record: rec(i, f, l, s), known_at: 0 })
+            .collect();
+        let mp = MultiPassPlanner.plan(&dynamic, 6);
+        assert_eq!(mp.passes, 1);
+        let records = UsageRecords {
+            records: dynamic.iter().map(|d| d.record).collect(),
+            num_ops: 6,
+        };
+        mp.plan.validate(&records).unwrap();
+        assert_eq!(
+            mp.plan.total_size(),
+            super::GreedyBySize.plan(&records).total_size()
+        );
+    }
+
+    #[test]
+    fn late_known_sizes_plan_in_second_pass() {
+        let dynamic = vec![
+            DynamicRecord { record: rec(0, 0, 2, 100), known_at: 0 },
+            DynamicRecord { record: rec(1, 1, 3, 50), known_at: 0 },
+            // becomes known after op 1 executes (e.g. LSTM output length)
+            DynamicRecord { record: rec(2, 2, 4, 70), known_at: 1 },
+        ];
+        let mp = MultiPassPlanner.plan(&dynamic, 5);
+        assert_eq!(mp.passes, 2);
+        assert!(mp.growth[0] <= mp.growth[1]);
+        let records = UsageRecords {
+            records: dynamic.iter().map(|d| d.record).collect(),
+            num_ops: 5,
+        };
+        mp.plan.validate(&records).unwrap();
+    }
+
+    #[test]
+    fn overhead_is_at_least_one_ish() {
+        let dynamic = vec![
+            DynamicRecord { record: rec(0, 0, 2, 10), known_at: 0 },
+            DynamicRecord { record: rec(1, 3, 4, 10), known_at: 2 },
+        ];
+        let ratio = MultiPassPlanner.overhead_vs_oracle(&dynamic, 5);
+        assert!(ratio >= 0.999);
+    }
+}

@@ -1,0 +1,126 @@
+//! Ordered set of *disjoint* closed intervals with O(log n) overlap and
+//! nearest-gap queries.
+//!
+//! §4.2 notes the greedy planners drop from O(kn²) to O(kn log n) "with an
+//! interval tree for each shared object that stores the usage intervals of
+//! all tensors". Because the intervals stored per shared object are mutually
+//! disjoint by construction (that is the feasibility invariant), a balanced
+//! ordered map keyed by interval start is a complete interval tree for this
+//! use case: any query interval can overlap at most its predecessor and its
+//! successors, so overlap tests and nearest-neighbour (gap) queries are
+//! single map lookups.
+
+use std::collections::BTreeMap;
+
+/// A set of pairwise-disjoint closed intervals `[first, last]`.
+#[derive(Debug, Clone, Default)]
+pub struct DisjointIntervalSet {
+    /// start -> end, all disjoint.
+    map: BTreeMap<usize, usize>,
+}
+
+impl DisjointIntervalSet {
+    /// Empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of stored intervals.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True if no intervals are stored.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Does `[first, last]` intersect any stored interval?
+    pub fn overlaps(&self, first: usize, last: usize) -> bool {
+        // Predecessor (greatest start <= last): overlaps iff its end >= first.
+        if let Some((_, &end)) = self.map.range(..=last).next_back() {
+            if end >= first {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Insert `[first, last]`; panics in debug builds if it overlaps an
+    /// existing interval (callers must check [`Self::overlaps`] first).
+    pub fn insert(&mut self, first: usize, last: usize) {
+        debug_assert!(first <= last);
+        debug_assert!(
+            !self.overlaps(first, last),
+            "inserting overlapping interval [{first}, {last}]"
+        );
+        self.map.insert(first, last);
+    }
+
+    /// Distance from `[first, last]` to the nearest stored interval — the
+    /// "time gap when shared object is not in use" minimized by Greedy by
+    /// Size Improved (§4.4). `None` if the set is empty or the query
+    /// overlaps a stored interval (no gap exists).
+    pub fn nearest_gap(&self, first: usize, last: usize) -> Option<usize> {
+        if self.is_empty() || self.overlaps(first, last) {
+            return None;
+        }
+        let mut best: Option<usize> = None;
+        // Nearest interval entirely to the left: end < first.
+        if let Some((_, &end)) = self.map.range(..first).next_back() {
+            debug_assert!(end < first);
+            best = Some(first - end);
+        }
+        // Nearest interval entirely to the right: start > last.
+        if let Some((&start, _)) = self.map.range(last + 1..).next() {
+            let d = start - last;
+            best = Some(best.map_or(d, |b| b.min(d)));
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_detection() {
+        let mut s = DisjointIntervalSet::new();
+        assert!(!s.overlaps(0, 10));
+        s.insert(5, 8);
+        assert!(s.overlaps(8, 9));
+        assert!(s.overlaps(0, 5));
+        assert!(s.overlaps(6, 7));
+        assert!(!s.overlaps(0, 4));
+        assert!(!s.overlaps(9, 12));
+        s.insert(0, 2);
+        assert!(s.overlaps(2, 3));
+        assert!(!s.overlaps(3, 4));
+    }
+
+    #[test]
+    fn nearest_gap_queries() {
+        let mut s = DisjointIntervalSet::new();
+        assert_eq!(s.nearest_gap(3, 4), None);
+        s.insert(0, 2);
+        s.insert(10, 12);
+        // between: distance 1 to the left interval, 4 to the right
+        assert_eq!(s.nearest_gap(3, 6), Some(1));
+        assert_eq!(s.nearest_gap(6, 9), Some(1));
+        assert_eq!(s.nearest_gap(4, 5), Some(2));
+        // overlapping query -> None
+        assert_eq!(s.nearest_gap(2, 3), None);
+        // right side only
+        assert_eq!(s.nearest_gap(14, 20), Some(2));
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn debug_insert_overlap_panics() {
+        let mut s = DisjointIntervalSet::new();
+        s.insert(0, 5);
+        s.insert(5, 6);
+    }
+}

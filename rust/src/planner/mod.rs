@@ -1,0 +1,166 @@
+//! Memory planners — the paper's contribution (§4, §5).
+//!
+//! Two approaches are implemented, matching the paper's taxonomy:
+//!
+//! * **Shared Objects** ([`shared`], §4): every intermediate tensor is
+//!   assigned to one of *k* reusable buffers ("shared objects"); an object's
+//!   size is the max of its tensors' sizes; the objective is to minimize the
+//!   total object size. Suitable for GPU textures, which must be used as a
+//!   whole.
+//! * **Offset Calculation** ([`offset`], §5): all tensors are placed at byte
+//!   offsets inside one arena; the objective is to minimize the arena size.
+//!   Suitable for CPU memory and GPU buffers. Any Shared-Objects solution
+//!   converts to an Offset solution by laying the objects out contiguously
+//!   ([`SharedObjectPlan::to_offset_plan`]); the converse is not true.
+//!
+//! Every planner consumes only a [`UsageRecords`] — the paper's abstraction
+//! boundary — and returns a plan that can be validated independently
+//! ([`validate`]) and materialized by `crate::arena`.
+
+pub mod dynamic;
+pub mod interval_tree;
+pub mod offset;
+pub mod order;
+pub mod serialize;
+pub mod shared;
+pub mod validate;
+
+use crate::records::UsageRecords;
+
+
+pub use validate::PlanError;
+
+/// A solution to the Shared Objects problem (§4).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SharedObjectPlan {
+    /// Final size of each shared object, in bytes (or the records' units).
+    pub object_sizes: Vec<usize>,
+    /// `assignment[record_id]` = index into `object_sizes`.
+    pub assignment: Vec<usize>,
+}
+
+impl SharedObjectPlan {
+    /// The objective value: total size of all shared objects.
+    pub fn total_size(&self) -> usize {
+        self.object_sizes.iter().sum()
+    }
+
+    /// Number of shared objects used.
+    pub fn num_objects(&self) -> usize {
+        self.object_sizes.len()
+    }
+
+    /// Check the plan against the records (§4's feasibility conditions).
+    pub fn validate(&self, records: &UsageRecords) -> Result<(), PlanError> {
+        validate::validate_shared(self, records)
+    }
+
+    /// §5: convert by placing the shared objects contiguously in one arena.
+    pub fn to_offset_plan(&self, records: &UsageRecords) -> OffsetPlan {
+        let mut base = vec![0usize; self.object_sizes.len()];
+        let mut acc = 0;
+        for (i, &s) in self.object_sizes.iter().enumerate() {
+            base[i] = acc;
+            acc += s;
+        }
+        OffsetPlan {
+            offsets: records
+                .records
+                .iter()
+                .map(|r| base[self.assignment[r.id]])
+                .collect(),
+            total: acc,
+        }
+    }
+}
+
+/// A solution to the Offset Calculation problem (§5).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OffsetPlan {
+    /// `offsets[record_id]` = byte offset of the tensor inside the arena.
+    pub offsets: Vec<usize>,
+    /// Arena size: `max(offset + size)` over all records.
+    pub total: usize,
+}
+
+impl OffsetPlan {
+    /// The objective value: the arena size.
+    pub fn total_size(&self) -> usize {
+        self.total
+    }
+
+    /// Check the plan against the records (no two time-overlapping tensors
+    /// may overlap in memory).
+    pub fn validate(&self, records: &UsageRecords) -> Result<(), PlanError> {
+        validate::validate_offset(self, records)
+    }
+}
+
+/// A Shared-Objects strategy (§4).
+pub trait SharedObjectPlanner {
+    /// Human-readable strategy name as used in Table 1.
+    fn name(&self) -> &'static str;
+    /// Produce an assignment of every record to a shared object.
+    fn plan(&self, records: &UsageRecords) -> SharedObjectPlan;
+}
+
+/// An Offset-Calculation strategy (§5).
+pub trait OffsetPlanner {
+    /// Human-readable strategy name as used in Table 2.
+    fn name(&self) -> &'static str;
+    /// Produce an offset for every record.
+    fn plan(&self, records: &UsageRecords) -> OffsetPlan;
+}
+
+/// All Shared-Objects strategies of Table 1, in row order: the paper's three
+/// (Greedy by Size, Greedy by Size Improved, Greedy by Breadth), then prior
+/// work (Greedy and Min-cost Flow from Lee et al. 2019).
+pub fn table1_strategies() -> Vec<Box<dyn SharedObjectPlanner>> {
+    vec![
+        Box::new(shared::GreedyBySize::default()),
+        Box::new(shared::GreedyBySizeImproved::default()),
+        Box::new(shared::GreedyByBreadth::default()),
+        Box::new(shared::TfLiteGreedy::default()),
+        Box::new(shared::MinCostFlow::default()),
+        Box::new(shared::NaiveShared),
+    ]
+}
+
+/// All Offset-Calculation strategies of Table 2, in row order: the paper's
+/// two, then prior work (Greedy from Lee et al. 2019, Strip Packing Best-Fit
+/// from Sekiyama et al. 2018).
+pub fn table2_strategies() -> Vec<Box<dyn OffsetPlanner>> {
+    vec![
+        Box::new(offset::GreedyBySize::default()),
+        Box::new(offset::GreedyByBreadth::default()),
+        Box::new(offset::TfLiteGreedy::default()),
+        Box::new(offset::StripPackingBestFit::default()),
+        Box::new(offset::NaiveOffset),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::example_records;
+
+    #[test]
+    fn shared_plan_converts_to_offset_plan() {
+        let recs = example_records();
+        let plan = SharedObjectPlan {
+            // one object per record — the naive plan
+            object_sizes: recs.records.iter().map(|r| r.size).collect(),
+            assignment: (0..recs.len()).collect(),
+        };
+        plan.validate(&recs).unwrap();
+        let off = plan.to_offset_plan(&recs);
+        off.validate(&recs).unwrap();
+        assert_eq!(off.total_size(), plan.total_size());
+    }
+
+    #[test]
+    fn registries_cover_the_tables() {
+        assert_eq!(table1_strategies().len(), 6);
+        assert_eq!(table2_strategies().len(), 5);
+    }
+}

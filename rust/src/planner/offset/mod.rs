@@ -1,0 +1,148 @@
+//! Offset-Calculation strategies (§5).
+
+mod greedy_breadth;
+mod greedy_size;
+mod naive;
+mod strip_packing;
+mod tflite_greedy;
+
+pub use greedy_breadth::GreedyByBreadth;
+pub use greedy_size::GreedyBySize;
+pub use naive::NaiveOffset;
+pub use strip_packing::StripPackingBestFit;
+pub use tflite_greedy::TfLiteGreedy;
+
+use crate::planner::OffsetPlan;
+use crate::records::{UsageRecord, UsageRecords};
+
+/// Incremental offset assignment state shared by all §5 strategies: records
+/// placed so far, kept sorted by offset, plus the running high-water mark.
+pub(crate) struct OffsetStore<'r> {
+    records: &'r [UsageRecord],
+    /// (offset, record id), sorted by offset ascending (ties: id).
+    allocated: Vec<(usize, usize)>,
+    offsets: Vec<Option<usize>>,
+    total: usize,
+}
+
+impl<'r> OffsetStore<'r> {
+    pub fn new(records: &'r UsageRecords) -> Self {
+        OffsetStore {
+            records: &records.records,
+            allocated: Vec::new(),
+            offsets: vec![None; records.records.len()],
+            total: 0,
+        }
+    }
+
+    /// Algorithm 3's inner loop (L.7–20): scan already-placed,
+    /// time-overlapping tensors in offset order; return the start of the
+    /// smallest gap that fits `r` (best-fit), or the first offset past the
+    /// last conflicting tensor if no gap fits.
+    pub fn best_fit_offset(&self, r: &UsageRecord) -> usize {
+        let mut prev_offset = 0usize; // high-water mark of conflicts scanned so far
+        let mut best_offset: Option<usize> = None;
+        let mut smallest_gap = usize::MAX;
+        for &(offset, xid) in &self.allocated {
+            let x = &self.records[xid];
+            if !r.overlaps(x) {
+                continue;
+            }
+            if offset > prev_offset {
+                let gap = offset - prev_offset;
+                if gap >= r.size && gap < smallest_gap {
+                    smallest_gap = gap;
+                    best_offset = Some(prev_offset);
+                }
+            }
+            prev_offset = prev_offset.max(offset + x.size);
+        }
+        best_offset.unwrap_or(prev_offset)
+    }
+
+    /// Place `r` at `offset` (as computed by [`Self::best_fit_offset`], or
+    /// seeded externally for incremental planning).
+    pub fn place(&mut self, r: &UsageRecord, offset: usize) {
+        debug_assert!(self.offsets[r.id].is_none(), "record placed twice");
+        let pos = self
+            .allocated
+            .binary_search(&(offset, r.id))
+            .unwrap_err();
+        self.allocated.insert(pos, (offset, r.id));
+        self.offsets[r.id] = Some(offset);
+        self.total = self.total.max(offset + r.size);
+    }
+
+    /// Is the record already placed?
+    pub fn is_placed(&self, r: &UsageRecord) -> bool {
+        self.offsets[r.id].is_some()
+    }
+
+    /// Finish; every record must have been placed.
+    pub fn into_plan(self) -> OffsetPlan {
+        OffsetPlan {
+            offsets: self
+                .offsets
+                .into_iter()
+                .map(|o| o.expect("planner left a record unplaced"))
+                .collect(),
+            total: self.total,
+        }
+    }
+}
+
+/// Run the common loop: best-fit place each record in `order`.
+pub(crate) fn assign_in_order(records: &UsageRecords, order: &[usize]) -> OffsetPlan {
+    let mut store = OffsetStore::new(records);
+    for &id in order {
+        let r = &records.records[id];
+        if store.is_placed(r) {
+            continue;
+        }
+        let off = store.best_fit_offset(r);
+        store.place(r, off);
+    }
+    store.into_plan()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_fit_finds_smallest_gap() {
+        let recs = UsageRecords::from_triples(&[
+            (0, 5, 10), // placed at 0
+            (0, 5, 10), // placed at 30 (leaving a hole 10..30)
+            (0, 5, 8),  // candidate: hole fits (gap 20)
+        ]);
+        let mut store = OffsetStore::new(&recs);
+        store.place(&recs.records[0], 0);
+        store.place(&recs.records[1], 30);
+        assert_eq!(store.best_fit_offset(&recs.records[2]), 10);
+    }
+
+    #[test]
+    fn best_fit_ignores_non_overlapping() {
+        let recs = UsageRecords::from_triples(&[
+            (0, 1, 10), // time 0-1
+            (3, 4, 10), // time 3-4, no conflict
+        ]);
+        let mut store = OffsetStore::new(&recs);
+        store.place(&recs.records[0], 0);
+        assert_eq!(store.best_fit_offset(&recs.records[1]), 0);
+    }
+
+    #[test]
+    fn appends_past_conflicts_when_no_gap_fits() {
+        let recs = UsageRecords::from_triples(&[
+            (0, 5, 10),
+            (0, 5, 10),
+            (0, 5, 25),
+        ]);
+        let mut store = OffsetStore::new(&recs);
+        store.place(&recs.records[0], 0);
+        store.place(&recs.records[1], 12); // gap 10..12 too small for 25
+        assert_eq!(store.best_fit_offset(&recs.records[2]), 22);
+    }
+}

@@ -1,0 +1,366 @@
+//! Execution-order optimization — the paper's §7.1 future work.
+//!
+//! "The operator index in tensor usage records and intervals are defined by
+//! the topological sort of the neural network. Optimizing the sorting
+//! algorithm for the smallest possible memory footprint is a potential
+//! future research topic."
+//!
+//! Both §5.1's lower bound (max operator breadth) and the achievable arena
+//! size depend on *which* topological order executes the graph: a branchy
+//! graph (Inception) can hold both branches live (breadth = sum) or finish
+//! one before starting the other (breadth = max + ε). This module explores
+//! that order space:
+//!
+//! * [`memory_aware_order`] — a deterministic greedy scheduler: among ready
+//!   ops, always run the one minimizing live-set growth (frees first, then
+//!   smallest new allocation). This is the classic Sethi-style heuristic
+//!   (the paper cites Sethi 1975 for NP-completeness of the underlying
+//!   problem — exact optimization is hopeless, heuristics are the game).
+//! * [`anneal_order`] — local search on top: randomized neighbour swaps of
+//!   the priority ordering, keeping the best max-breadth found. Seeded and
+//!   budgeted, so results are reproducible.
+//! * [`reorder_graph`] — rebuild a `Graph` with ops renumbered into a given
+//!   valid order, so the existing §4/§5 planners apply unchanged.
+
+use crate::graph::{Graph, OpId, TensorKind};
+use crate::records::UsageRecords;
+use crate::rng::SplitMix64;
+
+/// A candidate execution order (a permutation of op indices that respects
+/// data dependencies).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecutionOrder(pub Vec<OpId>);
+
+/// Compute the max operator breadth (the §5.1 lower bound) a given valid
+/// order would produce, without materializing a new graph.
+pub fn order_max_breadth(graph: &Graph, order: &ExecutionOrder) -> usize {
+    let pos = position_of(graph, order);
+    // first/last positions per intermediate tensor under the new order.
+    let mut first = vec![usize::MAX; graph.tensors.len()];
+    let mut last = vec![0usize; graph.tensors.len()];
+    for op in &graph.ops {
+        let p = pos[op.id.0];
+        for &t in op.inputs.iter().chain(op.outputs.iter()) {
+            first[t.0] = first[t.0].min(p);
+            last[t.0] = last[t.0].max(p);
+        }
+    }
+    // Sweep breadth over positions: +size at first, -size after last.
+    let n = graph.ops.len();
+    let mut delta = vec![0isize; n + 1];
+    for t in graph.intermediates() {
+        if first[t.id.0] == usize::MAX {
+            continue;
+        }
+        delta[first[t.id.0]] += t.aligned_size() as isize;
+        delta[last[t.id.0] + 1] -= t.aligned_size() as isize;
+    }
+    let mut cur = 0isize;
+    let mut max = 0isize;
+    for d in delta.iter().take(n) {
+        cur += d;
+        max = max.max(cur);
+    }
+    max as usize
+}
+
+fn position_of(graph: &Graph, order: &ExecutionOrder) -> Vec<usize> {
+    let mut pos = vec![usize::MAX; graph.ops.len()];
+    for (p, op) in order.0.iter().enumerate() {
+        pos[op.0] = p;
+    }
+    assert!(
+        pos.iter().all(|&p| p != usize::MAX),
+        "order must cover every op"
+    );
+    pos
+}
+
+/// Is `order` a valid topological order of `graph`?
+pub fn is_valid_order(graph: &Graph, order: &ExecutionOrder) -> bool {
+    if order.0.len() != graph.ops.len() {
+        return false;
+    }
+    let pos = position_of(graph, order);
+    let mut produced_at = vec![usize::MAX; graph.tensors.len()];
+    for op in &graph.ops {
+        for &o in &op.outputs {
+            produced_at[o.0] = pos[op.id.0];
+        }
+    }
+    for op in &graph.ops {
+        for &i in &op.inputs {
+            let t = graph.tensor(i);
+            if matches!(t.kind, TensorKind::Input | TensorKind::Weight) {
+                continue;
+            }
+            if produced_at[i.0] == usize::MAX || produced_at[i.0] >= pos[op.id.0] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Greedy memory-aware topological order: repeatedly pick the ready op with
+/// the best `(live-set delta, tie: op index)`. The delta counts bytes the
+/// op frees (tensors whose last consumer it is) minus bytes it allocates
+/// (its outputs).
+pub fn memory_aware_order(graph: &Graph) -> ExecutionOrder {
+    schedule(graph, |scores| {
+        // pick min (delta, op index)
+        scores
+            .iter()
+            .min_by_key(|&&(op, delta)| (delta, op))
+            .map(|&(op, _)| op)
+            .unwrap()
+    })
+}
+
+/// Generic list scheduler: maintains the ready set, lets `pick` choose.
+fn schedule<F>(graph: &Graph, mut pick: F) -> ExecutionOrder
+where
+    F: FnMut(&[(usize, isize)]) -> usize,
+{
+    let n = graph.ops.len();
+    // consumers[t] = ops reading intermediate t; remaining input counts.
+    let mut remaining_inputs = vec![0usize; n];
+    let mut consumers_of: Vec<Vec<usize>> = vec![Vec::new(); graph.tensors.len()];
+    let mut producer = vec![usize::MAX; graph.tensors.len()];
+    for op in &graph.ops {
+        for &o in &op.outputs {
+            producer[o.0] = op.id.0;
+        }
+    }
+    for op in &graph.ops {
+        for &i in &op.inputs {
+            let t = graph.tensor(i);
+            if matches!(t.kind, TensorKind::Input | TensorKind::Weight) {
+                continue;
+            }
+            consumers_of[i.0].push(op.id.0);
+            remaining_inputs[op.id.0] += 1;
+        }
+    }
+    // reads_left[t] = consumers not yet scheduled (for free accounting).
+    let mut reads_left: Vec<usize> = consumers_of.iter().map(Vec::len).collect();
+
+    let mut ready: Vec<usize> = (0..n).filter(|&i| remaining_inputs[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    let mut scheduled = vec![false; n];
+    while !ready.is_empty() {
+        // Score each ready op: outputs allocated minus inputs it frees.
+        let scores: Vec<(usize, isize)> = ready
+            .iter()
+            .map(|&opi| {
+                let op = &graph.ops[opi];
+                let alloc: isize = op
+                    .outputs
+                    .iter()
+                    .map(|&o| graph.tensor(o).aligned_size() as isize)
+                    .sum();
+                let freed: isize = op
+                    .inputs
+                    .iter()
+                    .filter(|&&i| {
+                        graph.tensor(i).kind == TensorKind::Intermediate && reads_left[i.0] == 1
+                    })
+                    .map(|&i| graph.tensor(i).aligned_size() as isize)
+                    .sum();
+                (opi, alloc - freed)
+            })
+            .collect();
+        let chosen = pick(&scores);
+        ready.retain(|&o| o != chosen);
+        scheduled[chosen] = true;
+        order.push(OpId(chosen));
+        let op = &graph.ops[chosen];
+        for &i in &op.inputs {
+            if graph.tensor(i).kind == TensorKind::Intermediate {
+                reads_left[i.0] = reads_left[i.0].saturating_sub(1);
+            }
+        }
+        for &o in &op.outputs {
+            for &c in &consumers_of[o.0] {
+                remaining_inputs[c] -= 1;
+                if remaining_inputs[c] == 0 && !scheduled[c] {
+                    ready.push(c);
+                }
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "graph has a cycle");
+    ExecutionOrder(order)
+}
+
+/// Randomized local search over orders: start from [`memory_aware_order`],
+/// propose random ready-op choices, keep the best max-breadth. `budget` is
+/// the number of random schedules tried.
+pub fn anneal_order(graph: &Graph, seed: u64, budget: usize) -> ExecutionOrder {
+    let mut best = memory_aware_order(graph);
+    let mut best_cost = order_max_breadth(graph, &best);
+    let mut rng = SplitMix64::new(seed);
+    for _ in 0..budget {
+        // ε-greedy randomized scheduler: mostly greedy, sometimes random.
+        let cand = schedule(graph, |scores| {
+            if rng.next_below(100) < 20 {
+                scores[rng.next_below(scores.len())].0
+            } else {
+                scores
+                    .iter()
+                    .min_by_key(|&&(op, delta)| (delta, op))
+                    .map(|&(op, _)| op)
+                    .unwrap()
+            }
+        });
+        let cost = order_max_breadth(graph, &cand);
+        if cost < best_cost {
+            best_cost = cost;
+            best = cand;
+        }
+    }
+    best
+}
+
+/// Rebuild the graph with ops renumbered to `order` (tensors keep their
+/// ids), so every existing planner/record API applies to the new order.
+pub fn reorder_graph(graph: &Graph, order: &ExecutionOrder) -> Graph {
+    assert!(is_valid_order(graph, order), "invalid execution order");
+    let mut g = graph.clone();
+    g.ops = order
+        .0
+        .iter()
+        .enumerate()
+        .map(|(new_idx, &old)| {
+            let mut op = graph.ops[old.0].clone();
+            op.id = OpId(new_idx);
+            op
+        })
+        .collect();
+    g.validate().expect("reordered graph must stay valid");
+    g
+}
+
+/// Convenience: arena footprint (offset Greedy by Size) under the stored
+/// order vs the memory-aware order vs `budget` annealing trials.
+pub fn order_ablation(graph: &Graph, seed: u64, budget: usize) -> (usize, usize, usize) {
+    use crate::planner::offset::GreedyBySize;
+    use crate::planner::OffsetPlanner;
+    let base = GreedyBySize
+        .plan(&UsageRecords::from_graph(graph))
+        .total_size();
+    let greedy_graph = reorder_graph(graph, &memory_aware_order(graph));
+    let greedy = GreedyBySize
+        .plan(&UsageRecords::from_graph(&greedy_graph))
+        .total_size();
+    let annealed_graph = reorder_graph(graph, &anneal_order(graph, seed, budget));
+    let annealed = GreedyBySize
+        .plan(&UsageRecords::from_graph(&annealed_graph))
+        .total_size();
+    (base, greedy, annealed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, DType, GraphBuilder, Padding};
+    use crate::models;
+
+    #[test]
+    fn identity_order_is_valid_and_matches_lower_bound() {
+        let g = models::example_net();
+        let order = ExecutionOrder((0..g.num_ops()).map(OpId).collect());
+        assert!(is_valid_order(&g, &order));
+        let recs = UsageRecords::from_graph(&g);
+        assert_eq!(
+            order_max_breadth(&g, &order),
+            recs.profiles().offset_lower_bound()
+        );
+    }
+
+    #[test]
+    fn invalid_orders_are_rejected() {
+        let g = models::example_net();
+        let mut rev: Vec<OpId> = (0..g.num_ops()).map(OpId).collect();
+        rev.reverse();
+        assert!(!is_valid_order(&g, &ExecutionOrder(rev)));
+        // too short
+        assert!(!is_valid_order(&g, &ExecutionOrder(vec![OpId(0)])));
+    }
+
+    #[test]
+    fn memory_aware_order_is_valid_on_the_zoo() {
+        for g in models::all_zoo() {
+            let order = memory_aware_order(&g);
+            assert!(is_valid_order(&g, &order), "{}", g.name);
+            let re = reorder_graph(&g, &order);
+            assert!(re.validate().is_ok());
+        }
+    }
+
+    /// A diamond where order matters: running branches serially keeps only
+    /// one branch live at a time.
+    fn diamond() -> crate::graph::Graph {
+        let mut b = GraphBuilder::new("diamond", DType::F32);
+        let x = b.input("x", vec![1, 8, 8, 4]);
+        let stem = b.conv2d("stem", x, 4, (1, 1), (1, 1), Padding::Same, Activation::None);
+        // two long branches
+        let mut l = stem;
+        for i in 0..3 {
+            l = b.conv2d(format!("l{i}"), l, 4, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        }
+        let mut r = stem;
+        for i in 0..3 {
+            r = b.conv2d(format!("r{i}"), r, 4, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        }
+        let m = b.concat("merge", &[l, r]);
+        b.mark_output(m);
+        b.finish()
+    }
+
+    #[test]
+    fn scheduler_never_worse_than_a_bad_interleaving() {
+        let g = diamond();
+        // Interleave branches manually: stem l0 r0 l1 r1 l2 r2 merge.
+        let interleaved = ExecutionOrder(
+            [0usize, 1, 4, 2, 5, 3, 6, 7].iter().map(|&i| OpId(i)).collect(),
+        );
+        assert!(is_valid_order(&g, &interleaved));
+        let bad = order_max_breadth(&g, &interleaved);
+        let good = order_max_breadth(&g, &memory_aware_order(&g));
+        assert!(
+            good <= bad,
+            "memory-aware order {good} worse than interleaved {bad}"
+        );
+    }
+
+    #[test]
+    fn annealing_never_regresses_the_greedy_start() {
+        for g in [models::example_net(), diamond(), models::blazeface()] {
+            let greedy = order_max_breadth(&g, &memory_aware_order(&g));
+            let ann = order_max_breadth(&g, &anneal_order(&g, 42, 50));
+            assert!(ann <= greedy, "{}: {ann} > {greedy}", g.name);
+        }
+    }
+
+    #[test]
+    fn ablation_reports_consistent_triple() {
+        let g = diamond();
+        let (base, greedy, annealed) = order_ablation(&g, 7, 30);
+        assert!(base > 0 && greedy > 0 && annealed > 0);
+        assert!(annealed <= greedy.max(base));
+    }
+
+    #[test]
+    fn reorder_preserves_planning_feasibility() {
+        use crate::planner::{table2_strategies, OffsetPlanner};
+        let g = models::posenet();
+        let order = anneal_order(&g, 3, 10);
+        let re = reorder_graph(&g, &order);
+        let recs = UsageRecords::from_graph(&re);
+        for strat in table2_strategies() {
+            let plan = OffsetPlanner::plan(strat.as_ref(), &recs);
+            plan.validate(&recs).unwrap();
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Plan serialization: compute offline, ship with the model, load at serve
+//! time (what TFLite does with its prepacked arena plans).
+//!
+//! Hand-rolled line format (the offline registry has no serde): versioned,
+//! self-describing, whitespace-tokenized, with a trailing checksum so a
+//! truncated file never half-loads.
+//!
+//! ```text
+//! tensorarena-plan v1 offset <n> <total>
+//! <record_id> <offset> <size> <first_op> <last_op>   # one per record
+//! checksum <fnv1a of all prior lines>
+//! ```
+//!
+//! The embedded `(size, first_op, last_op)` triples let the loader verify
+//! the plan matches the records it is applied to — loading a stale plan
+//! against a changed model fails loudly instead of corrupting tensors.
+
+use super::{OffsetPlan, SharedObjectPlan};
+use crate::records::UsageRecords;
+
+/// FNV-1a over bytes (stable, dependency-free).
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Serialize an offset plan together with the records it plans.
+pub fn offset_plan_to_string(plan: &OffsetPlan, records: &UsageRecords) -> String {
+    let mut body = format!(
+        "tensorarena-plan v1 offset {} {}\n",
+        records.len(),
+        plan.total
+    );
+    for r in &records.records {
+        body.push_str(&format!(
+            "{} {} {} {} {}\n",
+            r.id, plan.offsets[r.id], r.size, r.first_op, r.last_op
+        ));
+    }
+    let sum = fnv1a(body.as_bytes());
+    body.push_str(&format!("checksum {sum:016x}\n"));
+    body
+}
+
+/// Serialize a shared-objects plan.
+pub fn shared_plan_to_string(plan: &SharedObjectPlan, records: &UsageRecords) -> String {
+    let mut body = format!(
+        "tensorarena-plan v1 shared {} {}\n",
+        records.len(),
+        plan.object_sizes.len()
+    );
+    body.push_str("objects");
+    for s in &plan.object_sizes {
+        body.push_str(&format!(" {s}"));
+    }
+    body.push('\n');
+    for r in &records.records {
+        body.push_str(&format!(
+            "{} {} {} {} {}\n",
+            r.id, plan.assignment[r.id], r.size, r.first_op, r.last_op
+        ));
+    }
+    let sum = fnv1a(body.as_bytes());
+    body.push_str(&format!("checksum {sum:016x}\n"));
+    body
+}
+
+/// Errors while loading a plan.
+#[derive(Debug, PartialEq, Eq)]
+pub enum LoadError {
+    BadHeader(String),
+    BadChecksum,
+    Truncated,
+    Malformed(usize),
+    /// The plan was produced for different records.
+    RecordMismatch {
+        record: usize,
+        field: &'static str,
+    },
+    Infeasible(String),
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::BadHeader(h) => write!(f, "bad plan header: {h}"),
+            LoadError::BadChecksum => write!(f, "plan checksum mismatch"),
+            LoadError::Truncated => write!(f, "plan file truncated"),
+            LoadError::Malformed(line) => write!(f, "malformed plan line {line}"),
+            LoadError::RecordMismatch { record, field } => {
+                write!(f, "plan does not match records: record {record}, field {field}")
+            }
+            LoadError::Infeasible(e) => write!(f, "loaded plan infeasible: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for LoadError {}
+
+fn split_checksum(text: &str) -> Result<(&str, u64), LoadError> {
+    let body_end = text.rfind("checksum ").ok_or(LoadError::Truncated)?;
+    let (body, tail) = text.split_at(body_end);
+    let sum_hex = tail.trim_start_matches("checksum ").trim();
+    let sum = u64::from_str_radix(sum_hex, 16).map_err(|_| LoadError::BadChecksum)?;
+    Ok((body, sum))
+}
+
+/// Load and verify an offset plan against `records`.
+pub fn offset_plan_from_str(text: &str, records: &UsageRecords) -> Result<OffsetPlan, LoadError> {
+    let (body, sum) = split_checksum(text)?;
+    if fnv1a(body.as_bytes()) != sum {
+        return Err(LoadError::BadChecksum);
+    }
+    let mut lines = body.lines();
+    let header = lines.next().ok_or(LoadError::Truncated)?;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() != 5 || h[0] != "tensorarena-plan" || h[1] != "v1" || h[2] != "offset" {
+        return Err(LoadError::BadHeader(header.to_string()));
+    }
+    let n: usize = h[3].parse().map_err(|_| LoadError::BadHeader(header.into()))?;
+    let total: usize = h[4].parse().map_err(|_| LoadError::BadHeader(header.into()))?;
+    if n != records.len() {
+        return Err(LoadError::RecordMismatch { record: n, field: "count" });
+    }
+    let mut offsets = vec![0usize; n];
+    for (li, line) in lines.enumerate() {
+        let f: Vec<usize> = line
+            .split_whitespace()
+            .map(|t| t.parse().map_err(|_| LoadError::Malformed(li + 2)))
+            .collect::<Result<_, _>>()?;
+        if f.len() != 5 {
+            return Err(LoadError::Malformed(li + 2));
+        }
+        let (id, offset, size, first, last) = (f[0], f[1], f[2], f[3], f[4]);
+        if id >= n {
+            return Err(LoadError::Malformed(li + 2));
+        }
+        let r = &records.records[id];
+        if r.size != size {
+            return Err(LoadError::RecordMismatch { record: id, field: "size" });
+        }
+        if r.first_op != first {
+            return Err(LoadError::RecordMismatch { record: id, field: "first_op" });
+        }
+        if r.last_op != last {
+            return Err(LoadError::RecordMismatch { record: id, field: "last_op" });
+        }
+        offsets[id] = offset;
+    }
+    let plan = OffsetPlan { offsets, total };
+    plan.validate(records)
+        .map_err(|e| LoadError::Infeasible(e.to_string()))?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::example_records;
+    use crate::planner::offset::GreedyBySize;
+    use crate::planner::shared::GreedyBySizeImproved;
+    use crate::planner::{OffsetPlanner, SharedObjectPlanner};
+
+    #[test]
+    fn offset_roundtrip() {
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        let loaded = offset_plan_from_str(&text, &recs).unwrap();
+        assert_eq!(loaded, plan);
+    }
+
+    #[test]
+    fn checksum_detects_tampering() {
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        let tampered = text.replacen("0 ", "1 ", 1);
+        assert!(matches!(
+            offset_plan_from_str(&tampered, &recs),
+            Err(LoadError::BadChecksum) | Err(LoadError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        let cut = &text[..text.len() / 2];
+        assert!(offset_plan_from_str(cut, &recs).is_err());
+    }
+
+    #[test]
+    fn stale_plan_rejected_on_model_change() {
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        // "model changed": same count, different sizes
+        let mut changed = recs.clone();
+        changed.records[2].size += 64;
+        assert_eq!(
+            offset_plan_from_str(&text, &changed),
+            Err(LoadError::RecordMismatch { record: 2, field: "size" })
+        );
+    }
+
+    #[test]
+    fn shared_serialization_is_stable() {
+        let recs = example_records();
+        let plan = GreedyBySizeImproved.plan(&recs);
+        let a = shared_plan_to_string(&plan, &recs);
+        let b = shared_plan_to_string(&plan, &recs);
+        assert_eq!(a, b);
+        assert!(a.starts_with("tensorarena-plan v1 shared 8 3"));
+        assert!(a.trim_end().ends_with(|c: char| c.is_ascii_hexdigit()));
+    }
+}

@@ -1,0 +1,104 @@
+//! Greedy by Size for Shared Objects — Algorithm 2 (§4.3).
+
+use super::greedy_assign;
+#[cfg(test)]
+use super::ObjectStore;
+use crate::planner::{SharedObjectPlan, SharedObjectPlanner};
+use crate::records::{profile::sort_ids_by_size_desc, UsageRecords};
+
+/// §4.3: iterate tensors in non-increasing order of size; assign each to the
+/// smallest suitable shared object, creating a new object when none is
+/// suitable. Because tensors are visited largest-first, object sizes never
+/// grow after creation.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GreedyBySize;
+
+impl SharedObjectPlanner for GreedyBySize {
+    fn name(&self) -> &'static str {
+        "Greedy by Size"
+    }
+
+    fn plan(&self, records: &UsageRecords) -> SharedObjectPlan {
+        let mut order: Vec<usize> = (0..records.len()).collect();
+        sort_ids_by_size_desc(&records.records, &mut order);
+        greedy_assign(records, &order)
+    }
+}
+
+/// Internal invariant check used by tests: with size-descending order, no
+/// object ever grows, so every object's final size equals the size of the
+/// first tensor assigned to it.
+#[cfg(test)]
+pub(crate) fn object_sizes_monotone(records: &UsageRecords) -> bool {
+    let mut order: Vec<usize> = (0..records.len()).collect();
+    sort_ids_by_size_desc(&records.records, &mut order);
+    let mut store = ObjectStore::new(records.len());
+    for &id in &order {
+        let r = &records.records[id];
+        match super::best_fit_object(&store, r) {
+            Some(obj) => {
+                if store.size(obj) < r.size {
+                    return false; // would have grown
+                }
+                store.assign(obj, r);
+            }
+            None => {
+                store.create_for(r);
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::example_records;
+
+    #[test]
+    fn example_plan_is_feasible_and_small() {
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        plan.validate(&recs).unwrap();
+        let lb = recs.profiles().shared_objects_lower_bound();
+        assert!(plan.total_size() >= lb);
+        // Figure 4 achieves three objects on the example; our fixture's
+        // optimum is the lower bound 120 = 64 + 40 + 16, and Greedy by Size
+        // reaches it: 64 hosts {t5,t2-or...}, etc.
+        assert_eq!(plan.total_size(), 120, "objects: {:?}", plan.object_sizes);
+        assert_eq!(plan.num_objects(), 3);
+    }
+
+    #[test]
+    fn never_grows_objects() {
+        assert!(object_sizes_monotone(&example_records()));
+    }
+
+    #[test]
+    fn single_tensor() {
+        let recs = UsageRecords::from_triples(&[(0, 1, 7)]);
+        let plan = GreedyBySize.plan(&recs);
+        plan.validate(&recs).unwrap();
+        assert_eq!(plan.total_size(), 7);
+        assert_eq!(plan.num_objects(), 1);
+    }
+
+    #[test]
+    fn chain_reuses_two_buffers() {
+        // A pure chain: t_i = (i, i+1, 10). Alternating reuse needs 2 objects.
+        let triples: Vec<(usize, usize, usize)> = (0..20).map(|i| (i, i + 1, 10)).collect();
+        let recs = UsageRecords::from_triples(&triples);
+        let plan = GreedyBySize.plan(&recs);
+        plan.validate(&recs).unwrap();
+        assert_eq!(plan.num_objects(), 2);
+        assert_eq!(plan.total_size(), 20);
+    }
+
+    #[test]
+    fn empty_records_empty_plan() {
+        let recs = UsageRecords::from_triples(&[]);
+        let plan = GreedyBySize.plan(&recs);
+        plan.validate(&recs).unwrap();
+        assert_eq!(plan.total_size(), 0);
+    }
+}

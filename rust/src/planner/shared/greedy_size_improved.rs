@@ -1,0 +1,251 @@
+//! Greedy by Size Improved for Shared Objects — §4.4.
+
+use super::ObjectStore;
+use crate::planner::{SharedObjectPlan, SharedObjectPlanner};
+use crate::records::UsageRecords;
+
+/// §4.4's two refinements over Greedy by Size:
+///
+/// 1. **Stages by positional maximum.** The lower bound (§4.1) is the sum of
+///    positional maximums, and observed near-optimal solutions use objects
+///    of exactly those sizes. Tensors are therefore processed in stages:
+///    first all tensors with size equal to the largest positional maximum,
+///    then all tensors strictly between the first and second maxima, then
+///    those equal to the second maximum, and so on. Tensors within one stage
+///    have "almost equal significance".
+/// 2. **Gap-minimizing pairing inside a stage.** Within a stage, repeatedly
+///    assign the (tensor, suitable object) pair whose usage interval sits
+///    closest to an interval already on the object — minimizing the time the
+///    object would sit idle. Tensors for which no suitable object exists get
+///    fresh objects.
+///
+/// The paper reports this strategy "provides us with better or the same
+/// result, compared to the original without improvements". The staged
+/// heuristic alone cannot *guarantee* that on adversarial graphs (our
+/// property tests found rare 0.2%-worse cases on random residual graphs),
+/// so `plan` computes both and returns the better one — which makes the
+/// paper's statement hold by construction while leaving the staged result
+/// in place whenever it wins or ties (always, on the six zoo networks).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GreedyBySizeImproved;
+
+impl SharedObjectPlanner for GreedyBySizeImproved {
+    fn name(&self) -> &'static str {
+        "Greedy by Size Improved"
+    }
+
+    fn plan(&self, records: &UsageRecords) -> SharedObjectPlan {
+        let staged = self.plan_staged(records);
+        // §Perf: when the staged plan hits the §4.1 lower bound it is
+        // provably optimal — skip the fallback comparison entirely (this is
+        // the common case on the six zoo networks).
+        if staged.total_size() == records.profiles().shared_objects_lower_bound() {
+            return staged;
+        }
+        let plain = super::GreedyBySize.plan(records);
+        if plain.total_size() < staged.total_size() {
+            plain
+        } else {
+            staged
+        }
+    }
+}
+
+impl GreedyBySizeImproved {
+    /// The §4.4 staged algorithm itself (no fallback).
+    pub fn plan_staged(&self, records: &UsageRecords) -> SharedObjectPlan {
+        let profiles = records.profiles();
+        let mut maxima: Vec<usize> = profiles.positional_maximums().to_vec();
+        maxima.dedup(); // already non-increasing by construction
+        let stages = stage_of_sizes(records, &maxima);
+
+        let mut store = ObjectStore::new(records.len());
+        for stage in stages {
+            assign_stage(records, &mut store, stage);
+        }
+        store.into_plan()
+    }
+}
+
+/// Partition record ids into §4.4 stages: for positional maxima
+/// `p1 > p2 > ...`, the stages are `{size == p1}`, `{p2 < size < p1}`,
+/// `{size == p2}`, ... followed by `{size < p_last}`.
+fn stage_of_sizes(records: &UsageRecords, maxima: &[usize]) -> Vec<Vec<usize>> {
+    let mut stages: Vec<Vec<usize>> = vec![Vec::new(); 2 * maxima.len() + 1];
+    for r in &records.records {
+        let mut stage = 2 * maxima.len(); // below all maxima
+        for (i, &p) in maxima.iter().enumerate() {
+            if r.size == p {
+                stage = 2 * i;
+                break;
+            }
+            if r.size > p {
+                // strictly between p_{i-1} and p_i (i>0 guaranteed: sizes
+                // cannot exceed the first positional maximum).
+                debug_assert!(i > 0, "tensor larger than first positional maximum");
+                stage = 2 * i - 1;
+                break;
+            }
+        }
+        stages[stage].push(r.id);
+    }
+    stages.retain(|s| !s.is_empty());
+    stages
+}
+
+/// Assign all records of one stage using the gap-minimizing pairing.
+///
+/// §Perf: a per-tensor cache of the best `(gap, object)` replaces the naive
+/// full rescan per assignment. Assigning to object *o* only changes *o*'s
+/// interval set, so a cached best on another object stays valid as long as
+/// *o* is re-compared (it may have become better) and entries whose best
+/// *was* *o* are recomputed. Recorded in EXPERIMENTS.md §Perf: 41.5 ms →
+/// 3.9 ms on a 1024-record synthetic graph, identical plans.
+fn assign_stage(records: &UsageRecords, store: &mut ObjectStore, mut pending: Vec<usize>) {
+    // Deterministic base order: size desc, then id.
+    pending.sort_by(|&a, &b| {
+        let (ra, rb) = (&records.records[a], &records.records[b]);
+        rb.size.cmp(&ra.size).then(ra.id.cmp(&rb.id))
+    });
+
+    // Best suitable (gap, obj) per pending tensor, min over all objects with
+    // (gap, obj) lexicographic ordering (ties to the older object, exactly
+    // like the rescan formulation).
+    let full_best = |store: &ObjectStore, id: usize| -> Option<(usize, usize)> {
+        let r = &records.records[id];
+        let mut best: Option<(usize, usize)> = None;
+        for obj in 0..store.num_objects() {
+            if !store.suitable(obj, r) {
+                continue;
+            }
+            if let Some(gap) = store.nearest_gap(obj, r) {
+                let cand = (gap, obj);
+                if best.map_or(true, |b| cand < b) {
+                    best = Some(cand);
+                }
+            }
+        }
+        best
+    };
+    let mut best: Vec<Option<(usize, usize)>> =
+        pending.iter().map(|&id| full_best(store, id)).collect();
+
+    while !pending.is_empty() {
+        // Smallest (gap, pending position, obj) — same tie order as the
+        // rescan version: gap, then larger tensor (earlier position), then
+        // lower object index (already folded into `best`).
+        let mut pick: Option<(usize, usize, usize)> = None; // (gap, pi, obj)
+        for (pi, b) in best.iter().enumerate() {
+            if let Some((gap, obj)) = *b {
+                let cand = (gap, pi, obj);
+                if pick.map_or(true, |p| cand < p) {
+                    pick = Some(cand);
+                }
+            }
+        }
+        let changed_obj = match pick {
+            Some((_, pi, obj)) => {
+                let id = pending.remove(pi);
+                best.remove(pi);
+                store.assign(obj, &records.records[id]);
+                obj
+            }
+            None => {
+                // No tensor in the stage fits any existing object: open a
+                // new object for the largest pending tensor and loop (later
+                // stage members may now pair with it).
+                let id = pending.remove(0);
+                best.remove(0);
+                store.create_for(&records.records[id])
+            }
+        };
+        // Repair the cache against the one object whose intervals changed.
+        for (pi, &id) in pending.iter().enumerate() {
+            match best[pi] {
+                Some((_, obj)) if obj == changed_obj => {
+                    best[pi] = full_best(store, id);
+                }
+                cached => {
+                    let r = &records.records[id];
+                    if store.suitable(changed_obj, r) {
+                        if let Some(gap) = store.nearest_gap(changed_obj, r) {
+                            let cand = (gap, changed_obj);
+                            if cached.map_or(true, |b| cand < b) {
+                                best[pi] = Some(cand);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::example_records;
+    use crate::planner::shared::GreedyBySize;
+
+    #[test]
+    fn example_reaches_lower_bound() {
+        let recs = example_records();
+        let plan = GreedyBySizeImproved.plan(&recs);
+        plan.validate(&recs).unwrap();
+        assert_eq!(plan.total_size(), 120); // sum of positional maxima
+        let mut sizes = plan.object_sizes.clone();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(sizes, vec![64, 40, 16]);
+    }
+
+    #[test]
+    fn stages_partition_all_records() {
+        let recs = example_records();
+        let maxima = vec![64, 40, 16];
+        let stages = stage_of_sizes(&recs, &maxima);
+        let total: usize = stages.iter().map(Vec::len).sum();
+        assert_eq!(total, recs.len());
+        // stage boundaries: {64}, {40<s<64}, {40}, {16<s<40}, {16}, {10<s<16}∅, {<16 rest}
+        // sizes: 64 | — | 40 | 36,32,28 | 16,16 | 10
+        let stage_sizes: Vec<Vec<usize>> = stages
+            .iter()
+            .map(|s| s.iter().map(|&i| recs.records[i].size).collect())
+            .collect();
+        assert_eq!(stage_sizes[0], vec![64]);
+        assert_eq!(stage_sizes[1], vec![40]);
+        assert_eq!(
+            {
+                let mut v = stage_sizes[2].clone();
+                v.sort_unstable_by(|a, b| b.cmp(a));
+                v
+            },
+            vec![36, 32, 28]
+        );
+        assert_eq!(stage_sizes[3], vec![16, 16]);
+        assert_eq!(stage_sizes[4], vec![10]);
+    }
+
+    #[test]
+    fn not_worse_than_greedy_by_size_on_example() {
+        let recs = example_records();
+        let a = GreedyBySizeImproved.plan(&recs).total_size();
+        let b = GreedyBySize.plan(&recs).total_size();
+        assert!(a <= b);
+    }
+
+    #[test]
+    fn handles_all_equal_sizes() {
+        let recs = UsageRecords::from_triples(&[(0, 1, 8), (1, 2, 8), (2, 3, 8), (3, 4, 8)]);
+        let plan = GreedyBySizeImproved.plan(&recs);
+        plan.validate(&recs).unwrap();
+        assert_eq!(plan.total_size(), 16); // two alternating objects
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        let recs = UsageRecords::from_triples(&[]);
+        let plan = GreedyBySizeImproved.plan(&recs);
+        plan.validate(&recs).unwrap();
+        assert_eq!(plan.num_objects(), 0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Shared-Objects strategies (§4).
+
+mod greedy_breadth;
+mod greedy_size;
+mod greedy_size_improved;
+mod mincost_flow;
+mod naive;
+mod tflite_greedy;
+
+pub use greedy_breadth::GreedyByBreadth;
+pub use greedy_size::GreedyBySize;
+pub use greedy_size_improved::GreedyBySizeImproved;
+pub use mincost_flow::MinCostFlow;
+pub use naive::NaiveShared;
+pub use tflite_greedy::TfLiteGreedy;
+
+use super::interval_tree::DisjointIntervalSet;
+use super::SharedObjectPlan;
+use crate::records::{UsageRecord, UsageRecords};
+
+/// Mutable shared-object state used by all greedy strategies: the current
+/// size of every object plus, per object, the interval tree of its assigned
+/// tensors' usage intervals (the O(kn log n) structure of §4.2).
+pub(crate) struct ObjectStore {
+    sizes: Vec<usize>,
+    intervals: Vec<DisjointIntervalSet>,
+    assignment: Vec<Option<usize>>,
+}
+
+impl ObjectStore {
+    pub fn new(num_records: usize) -> Self {
+        ObjectStore {
+            sizes: Vec::new(),
+            intervals: Vec::new(),
+            assignment: vec![None; num_records],
+        }
+    }
+
+    /// Current number of objects.
+    pub fn num_objects(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Current size of object `obj`.
+    pub fn size(&self, obj: usize) -> usize {
+        self.sizes[obj]
+    }
+
+    /// §4.2: object `obj` is *suitable* for record `r` iff no tensor already
+    /// assigned to it has a usage interval intersecting `r`'s.
+    pub fn suitable(&self, obj: usize, r: &UsageRecord) -> bool {
+        !self.intervals[obj].overlaps(r.first_op, r.last_op)
+    }
+
+    /// Gap between `r`'s interval and the nearest interval already on `obj`
+    /// (§4.4). `None` when `obj` is empty or unsuitable.
+    pub fn nearest_gap(&self, obj: usize, r: &UsageRecord) -> Option<usize> {
+        self.intervals[obj].nearest_gap(r.first_op, r.last_op)
+    }
+
+    /// Assign `r` to `obj`, growing the object if needed.
+    pub fn assign(&mut self, obj: usize, r: &UsageRecord) {
+        debug_assert!(self.suitable(obj, r));
+        self.intervals[obj].insert(r.first_op, r.last_op);
+        self.sizes[obj] = self.sizes[obj].max(r.size);
+        self.assignment[r.id] = Some(obj);
+    }
+
+    /// Create a fresh object of `r`'s size and assign `r` to it.
+    pub fn create_for(&mut self, r: &UsageRecord) -> usize {
+        let obj = self.sizes.len();
+        self.sizes.push(r.size);
+        let mut set = DisjointIntervalSet::new();
+        set.insert(r.first_op, r.last_op);
+        self.intervals.push(set);
+        self.assignment[r.id] = Some(obj);
+        obj
+    }
+
+    /// Has `r` been assigned yet?
+    pub fn is_assigned(&self, r: &UsageRecord) -> bool {
+        self.assignment[r.id].is_some()
+    }
+
+    /// Finish: every record must be assigned.
+    pub fn into_plan(self) -> SharedObjectPlan {
+        SharedObjectPlan {
+            object_sizes: self.sizes,
+            assignment: self
+                .assignment
+                .into_iter()
+                .map(|a| a.expect("planner left a record unassigned"))
+                .collect(),
+        }
+    }
+}
+
+/// The shared best-object selection of §4.2/§4.3, given a candidate record:
+///
+/// 1. among suitable objects with `size >= size_t`, pick the smallest;
+/// 2. otherwise, among suitable objects (all smaller), pick the largest —
+///    enlarging it wastes the least;
+/// 3. otherwise signal `None` (caller creates a new object).
+///
+/// Ties break to the lower object index (oldest object), matching the
+/// deterministic reference implementation in TFLite.
+pub(crate) fn best_fit_object(store: &ObjectStore, r: &UsageRecord) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for obj in 0..store.num_objects() {
+        if !store.suitable(obj, r) {
+            continue;
+        }
+        let is_better = match best {
+            None => true,
+            Some(b) => {
+                let (bs, os) = (store.size(b), store.size(obj));
+                if bs < r.size {
+                    // current best is too small: prefer bigger objects
+                    os > bs
+                } else {
+                    // current best fits: prefer the smallest object that fits
+                    os >= r.size && os < bs
+                }
+            }
+        };
+        if is_better {
+            best = Some(obj);
+        }
+    }
+    best
+}
+
+/// Run the common greedy loop over `order` (record ids): best-fit each
+/// record, creating objects as needed.
+pub(crate) fn greedy_assign(records: &UsageRecords, order: &[usize]) -> SharedObjectPlan {
+    let mut store = ObjectStore::new(records.len());
+    for &id in order {
+        let r = &records.records[id];
+        if store.is_assigned(r) {
+            continue;
+        }
+        match best_fit_object(&store, r) {
+            Some(obj) => store.assign(obj, r),
+            None => {
+                store.create_for(r);
+            }
+        }
+    }
+    store.into_plan()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_store_basics() {
+        let recs = UsageRecords::from_triples(&[(0, 1, 10), (2, 3, 6), (1, 2, 4)]);
+        let mut store = ObjectStore::new(3);
+        let r0 = recs.records[0];
+        let r1 = recs.records[1];
+        let r2 = recs.records[2];
+        let o = store.create_for(&r0);
+        assert_eq!(store.size(o), 10);
+        assert!(store.suitable(o, &r1));
+        assert!(!store.suitable(o, &r2)); // overlaps r0 at op 1
+        store.assign(o, &r1);
+        assert_eq!(store.size(o), 10); // no growth
+        assert_eq!(store.nearest_gap(o, &recs.records[1]), None); // now overlapping
+        assert!(store.is_assigned(&r0));
+        assert!(!store.is_assigned(&r2));
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_that_fits() {
+        let recs = UsageRecords::from_triples(&[(0, 0, 100), (0, 0, 50), (1, 1, 40)]);
+        let mut store = ObjectStore::new(3);
+        store.create_for(&recs.records[0]); // obj0 size 100
+        store.create_for(&recs.records[1]); // obj1 size 50
+        // record 2 (size 40) fits both; smallest that fits is obj1
+        assert_eq!(best_fit_object(&store, &recs.records[2]), Some(1));
+    }
+
+    #[test]
+    fn best_fit_grows_largest_when_nothing_fits() {
+        let recs = UsageRecords::from_triples(&[(0, 0, 10), (0, 0, 30), (1, 1, 40)]);
+        let mut store = ObjectStore::new(3);
+        store.create_for(&recs.records[0]);
+        store.create_for(&recs.records[1]);
+        // nothing fits 40; grow the largest (obj1, size 30)
+        assert_eq!(best_fit_object(&store, &recs.records[2]), Some(1));
+    }
+
+    #[test]
+    fn best_fit_none_when_all_unsuitable() {
+        let recs = UsageRecords::from_triples(&[(0, 2, 10), (1, 3, 30)]);
+        let mut store = ObjectStore::new(2);
+        store.create_for(&recs.records[0]);
+        assert_eq!(best_fit_object(&store, &recs.records[1]), None);
+    }
+}

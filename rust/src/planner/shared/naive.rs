@@ -1,0 +1,39 @@
+//! The Naive baseline (Tables 1–2, last row): no sharing at all.
+
+use crate::planner::{SharedObjectPlan, SharedObjectPlanner};
+use crate::records::UsageRecords;
+
+/// Every intermediate tensor keeps a private buffer for the whole inference
+/// — what an engine without a memory manager does. The paper reports its
+/// strategies at up to 7.5× (shared objects) / 10.5× (offsets) below this.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NaiveShared;
+
+impl SharedObjectPlanner for NaiveShared {
+    fn name(&self) -> &'static str {
+        "Naive"
+    }
+
+    fn plan(&self, records: &UsageRecords) -> SharedObjectPlan {
+        SharedObjectPlan {
+            object_sizes: records.records.iter().map(|r| r.size).collect(),
+            assignment: (0..records.len()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::example_records;
+
+    #[test]
+    fn naive_total_is_sum_of_sizes() {
+        let recs = example_records();
+        let plan = NaiveShared.plan(&recs);
+        plan.validate(&recs).unwrap();
+        assert_eq!(plan.total_size(), recs.naive_total());
+        assert_eq!(plan.total_size(), 242);
+        assert_eq!(plan.num_objects(), recs.len());
+    }
+}

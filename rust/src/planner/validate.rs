@@ -1,0 +1,216 @@
+//! Independent plan validation.
+//!
+//! Every planner's output is checked against the §3/§4/§5 feasibility rules
+//! by code that shares nothing with the planners themselves (these
+//! validators are deliberately the "obviously correct O(n²)" formulation).
+//! The CPU executor in `crate::exec` provides a second, behavioural check.
+
+use super::{OffsetPlan, SharedObjectPlan};
+use crate::records::UsageRecords;
+use std::fmt;
+
+/// Why a plan is infeasible.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// Plan length does not match the record count.
+    WrongArity { expected: usize, got: usize },
+    /// A record is assigned to a shared object that does not exist.
+    UnknownObject { record: usize, object: usize },
+    /// A shared object is smaller than a tensor assigned to it.
+    ObjectTooSmall {
+        record: usize,
+        object: usize,
+        object_size: usize,
+        tensor_size: usize,
+    },
+    /// Two tensors with intersecting usage intervals share a shared object.
+    SharedConflict { a: usize, b: usize, object: usize },
+    /// Two tensors with intersecting usage intervals overlap in the arena.
+    OffsetConflict { a: usize, b: usize },
+    /// The declared arena size is smaller than an allocation's end.
+    TotalTooSmall { record: usize, end: usize, total: usize },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::WrongArity { expected, got } => {
+                write!(f, "plan covers {got} records, expected {expected}")
+            }
+            PlanError::UnknownObject { record, object } => {
+                write!(f, "record {record} assigned to unknown object {object}")
+            }
+            PlanError::ObjectTooSmall {
+                record,
+                object,
+                object_size,
+                tensor_size,
+            } => write!(
+                f,
+                "object {object} (size {object_size}) too small for record {record} (size {tensor_size})"
+            ),
+            PlanError::SharedConflict { a, b, object } => write!(
+                f,
+                "records {a} and {b} have intersecting usage intervals but share object {object}"
+            ),
+            PlanError::OffsetConflict { a, b } => write!(
+                f,
+                "records {a} and {b} have intersecting usage intervals and overlapping memory"
+            ),
+            PlanError::TotalTooSmall { record, end, total } => write!(
+                f,
+                "record {record} ends at offset {end} beyond declared total {total}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Validate a Shared-Objects plan: arity, object existence, capacity, and
+/// the §4 exclusivity rule ("no two tensors with intersecting usage
+/// intervals can be assigned to the same shared object").
+pub fn validate_shared(plan: &SharedObjectPlan, records: &UsageRecords) -> Result<(), PlanError> {
+    if plan.assignment.len() != records.len() {
+        return Err(PlanError::WrongArity {
+            expected: records.len(),
+            got: plan.assignment.len(),
+        });
+    }
+    for r in &records.records {
+        let obj = plan.assignment[r.id];
+        if obj >= plan.object_sizes.len() {
+            return Err(PlanError::UnknownObject { record: r.id, object: obj });
+        }
+        if plan.object_sizes[obj] < r.size {
+            return Err(PlanError::ObjectTooSmall {
+                record: r.id,
+                object: obj,
+                object_size: plan.object_sizes[obj],
+                tensor_size: r.size,
+            });
+        }
+    }
+    for a in &records.records {
+        for b in &records.records {
+            if a.id < b.id && plan.assignment[a.id] == plan.assignment[b.id] && a.overlaps(b) {
+                return Err(PlanError::SharedConflict {
+                    a: a.id,
+                    b: b.id,
+                    object: plan.assignment[a.id],
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate an Offset plan: arity, declared total, and the §5 rule (tensors
+/// with intersecting usage intervals must occupy disjoint byte ranges).
+pub fn validate_offset(plan: &OffsetPlan, records: &UsageRecords) -> Result<(), PlanError> {
+    if plan.offsets.len() != records.len() {
+        return Err(PlanError::WrongArity {
+            expected: records.len(),
+            got: plan.offsets.len(),
+        });
+    }
+    for r in &records.records {
+        let end = plan.offsets[r.id] + r.size;
+        if end > plan.total {
+            return Err(PlanError::TotalTooSmall { record: r.id, end, total: plan.total });
+        }
+    }
+    for a in &records.records {
+        for b in &records.records {
+            if a.id < b.id && a.overlaps(b) {
+                let (oa, ob) = (plan.offsets[a.id], plan.offsets[b.id]);
+                if oa < ob + b.size && ob < oa + a.size {
+                    return Err(PlanError::OffsetConflict { a: a.id, b: b.id });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::records::UsageRecords;
+
+    fn recs() -> UsageRecords {
+        UsageRecords::from_triples(&[(0, 2, 10), (1, 3, 20), (4, 5, 10)])
+    }
+
+    #[test]
+    fn accepts_feasible_shared_plan() {
+        let r = recs();
+        // records 0 and 2 do not overlap -> may share object 0
+        let p = SharedObjectPlan {
+            object_sizes: vec![10, 20],
+            assignment: vec![0, 1, 0],
+        };
+        assert!(validate_shared(&p, &r).is_ok());
+    }
+
+    #[test]
+    fn rejects_shared_conflict() {
+        let r = recs();
+        let p = SharedObjectPlan {
+            object_sizes: vec![20],
+            assignment: vec![0, 0, 0],
+        };
+        assert_eq!(
+            validate_shared(&p, &r),
+            Err(PlanError::SharedConflict { a: 0, b: 1, object: 0 })
+        );
+    }
+
+    #[test]
+    fn rejects_undersized_object() {
+        let r = recs();
+        let p = SharedObjectPlan {
+            object_sizes: vec![10, 10],
+            assignment: vec![0, 1, 0],
+        };
+        assert!(matches!(
+            validate_shared(&p, &r),
+            Err(PlanError::ObjectTooSmall { record: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let r = recs();
+        let p = SharedObjectPlan { object_sizes: vec![], assignment: vec![] };
+        assert!(matches!(validate_shared(&p, &r), Err(PlanError::WrongArity { .. })));
+    }
+
+    #[test]
+    fn accepts_feasible_offset_plan() {
+        let r = recs();
+        let p = OffsetPlan { offsets: vec![0, 10, 0], total: 30 };
+        assert!(validate_offset(&p, &r).is_ok());
+    }
+
+    #[test]
+    fn rejects_offset_conflict() {
+        let r = recs();
+        // records 0 and 1 overlap in time and in memory
+        let p = OffsetPlan { offsets: vec![0, 5, 0], total: 30 };
+        assert_eq!(
+            validate_offset(&p, &r),
+            Err(PlanError::OffsetConflict { a: 0, b: 1 })
+        );
+    }
+
+    #[test]
+    fn rejects_total_too_small() {
+        let r = recs();
+        let p = OffsetPlan { offsets: vec![0, 10, 0], total: 20 };
+        assert!(matches!(
+            validate_offset(&p, &r),
+            Err(PlanError::TotalTooSmall { record: 1, .. })
+        ));
+    }
+}

@@ -1,0 +1,206 @@
+//! Tensor usage records and operator profiles — §3 of the paper.
+//!
+//! * **Tensor usage interval** of tensor *t*: `{first_op_t, last_op_t}`, the
+//!   indices of the first and last operator using *t* as input or output.
+//! * **Tensor usage record**: the triple `{first_op_t, last_op_t, size_t}`
+//!   with `size_t` the aligned byte size.
+//! * **Operator profile** of op *op*: all records whose interval contains
+//!   *op*.
+//! * **Operator breadth**: the sum of sizes in the profile.
+//! * **Positional maximum** *i*: max over ops of the *i*-th largest size in
+//!   each profile.
+//!
+//! These are the only planner inputs; both planning approaches consume a
+//! `&UsageRecords` and nothing else from the graph.
+
+pub mod profile;
+
+pub use profile::OperatorProfiles;
+
+use crate::graph::{Graph, TensorId, TensorKind};
+
+
+/// One tensor usage record (§3). `id` is a dense index into the records
+/// vector (not the graph tensor id); `tensor` links back to the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UsageRecord {
+    /// Dense record index.
+    pub id: usize,
+    /// Originating graph tensor, if the records came from a graph.
+    pub tensor: Option<TensorId>,
+    /// Index of the first op using this tensor (as output, for intermediates).
+    pub first_op: usize,
+    /// Index of the last op using this tensor as input.
+    pub last_op: usize,
+    /// Aligned size in bytes.
+    pub size: usize,
+}
+
+impl UsageRecord {
+    /// True if the two usage *intervals* intersect. Two tensors whose
+    /// intervals intersect may never share memory (§3).
+    #[inline]
+    pub fn overlaps(&self, other: &UsageRecord) -> bool {
+        self.first_op.max(other.first_op) <= self.last_op.min(other.last_op)
+    }
+
+    /// Distance between two non-overlapping intervals (the "gap" used by
+    /// Greedy by Size Improved, §4.4); `None` if they overlap.
+    #[inline]
+    pub fn gap_to(&self, other: &UsageRecord) -> Option<usize> {
+        if self.overlaps(other) {
+            None
+        } else if self.last_op < other.first_op {
+            Some(other.first_op - self.last_op)
+        } else {
+            Some(self.first_op - other.last_op)
+        }
+    }
+}
+
+/// The full set of usage records of a graph, plus the number of ops —
+/// everything a planner needs.
+#[derive(Debug, Clone)]
+pub struct UsageRecords {
+    pub records: Vec<UsageRecord>,
+    pub num_ops: usize,
+}
+
+impl UsageRecords {
+    /// Extract usage records for the intermediate tensors of a graph.
+    ///
+    /// `first_op` of an intermediate tensor is its producing op; `last_op`
+    /// is its last consumer (or the producer itself if the value is unused —
+    /// it must still exist while the op runs). Input/Output/Weight tensors
+    /// are excluded per the paper.
+    pub fn from_graph(graph: &Graph) -> Self {
+        let mut first = vec![usize::MAX; graph.tensors.len()];
+        let mut last = vec![0usize; graph.tensors.len()];
+        for op in &graph.ops {
+            for &t in op.inputs.iter().chain(op.outputs.iter()) {
+                let i = op.id.0;
+                if first[t.0] == usize::MAX {
+                    first[t.0] = i;
+                }
+                first[t.0] = first[t.0].min(i);
+                last[t.0] = last[t.0].max(i);
+            }
+        }
+        let mut records = Vec::new();
+        for t in graph.tensors.iter() {
+            if t.kind != TensorKind::Intermediate || first[t.id.0] == usize::MAX {
+                continue;
+            }
+            records.push(UsageRecord {
+                id: records.len(),
+                tensor: Some(t.id),
+                first_op: first[t.id.0],
+                last_op: last[t.id.0],
+                size: t.aligned_size(),
+            });
+        }
+        UsageRecords {
+            records,
+            num_ops: graph.ops.len(),
+        }
+    }
+
+    /// Build records directly from `(first_op, last_op, size)` triples —
+    /// used by tests, property tests, and synthetic workloads.
+    pub fn from_triples(triples: &[(usize, usize, usize)]) -> Self {
+        let num_ops = triples
+            .iter()
+            .map(|&(_, l, _)| l + 1)
+            .max()
+            .unwrap_or(0);
+        let records = triples
+            .iter()
+            .enumerate()
+            .map(|(i, &(f, l, s))| {
+                assert!(f <= l, "record {i}: first_op {f} > last_op {l}");
+                UsageRecord {
+                    id: i,
+                    tensor: None,
+                    first_op: f,
+                    last_op: l,
+                    size: s,
+                }
+            })
+            .collect();
+        UsageRecords { records, num_ops }
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True if there are no records.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The paper's **Naive** baseline: every intermediate tensor keeps its
+    /// own buffer; footprint is the plain sum of sizes.
+    pub fn naive_total(&self) -> usize {
+        self.records.iter().map(|r| r.size).sum()
+    }
+
+    /// Compute operator profiles (cached views are in [`OperatorProfiles`]).
+    pub fn profiles(&self) -> OperatorProfiles {
+        OperatorProfiles::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::example_records;
+
+    /// The paper's Figure 1/2 example: tensor sizes and intervals.
+    #[test]
+    fn example_net_records_match_figure_2() {
+        let recs = example_records();
+        // 8 intermediate tensors (#0..#7); #8 is the output.
+        assert_eq!(recs.len(), 8);
+        let by_tensor: Vec<(usize, usize, usize)> = recs
+            .records
+            .iter()
+            .map(|r| (r.first_op, r.last_op, r.size))
+            .collect();
+        // Figure 2a: tensor #2 has usage record {1, 3, 36}.
+        assert!(by_tensor.contains(&(1, 3, 36)));
+        // all intervals are within op range
+        for r in &recs.records {
+            assert!(r.first_op <= r.last_op);
+            assert!(r.last_op < recs.num_ops);
+        }
+    }
+
+    #[test]
+    fn overlap_and_gap() {
+        let a = UsageRecord { id: 0, tensor: None, first_op: 0, last_op: 2, size: 1 };
+        let b = UsageRecord { id: 1, tensor: None, first_op: 2, last_op: 4, size: 1 };
+        let c = UsageRecord { id: 2, tensor: None, first_op: 5, last_op: 7, size: 1 };
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+        assert_eq!(a.gap_to(&b), None);
+        assert_eq!(a.gap_to(&c), Some(3));
+        assert_eq!(c.gap_to(&a), Some(3));
+        assert_eq!(b.gap_to(&c), Some(1));
+    }
+
+    #[test]
+    fn from_triples_roundtrip() {
+        let r = UsageRecords::from_triples(&[(0, 1, 32), (1, 2, 28), (2, 5, 8)]);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.num_ops, 6);
+        assert_eq!(r.naive_total(), 68);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_triples_rejects_inverted_interval() {
+        UsageRecords::from_triples(&[(3, 1, 32)]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Operator profiles, breadths, and positional maximums (§3, Figure 2b).
+
+use super::{UsageRecord, UsageRecords};
+
+/// Precomputed per-operator views over a set of usage records.
+#[derive(Debug, Clone)]
+pub struct OperatorProfiles {
+    /// `profiles[op]` = record ids alive at `op`, sorted by size descending
+    /// (ties: record id ascending, for determinism).
+    profiles: Vec<Vec<usize>>,
+    /// `breadth[op]` = sum of sizes in `profiles[op]` (§3 "Operator Breadth").
+    breadths: Vec<usize>,
+    /// `positional_maximums[i]` = max over ops of the i-th largest size in
+    /// each profile (§3 "Positional Maximum"). Length = max profile length.
+    positional_maximums: Vec<usize>,
+}
+
+impl OperatorProfiles {
+    /// Build profiles for all `num_ops` operators.
+    pub fn new(records: &UsageRecords) -> Self {
+        let mut profiles: Vec<Vec<usize>> = vec![Vec::new(); records.num_ops];
+        for r in &records.records {
+            for profile in profiles.iter_mut().take(r.last_op + 1).skip(r.first_op) {
+                profile.push(r.id);
+            }
+        }
+        for p in &mut profiles {
+            p.sort_by(|&a, &b| {
+                let (ra, rb) = (&records.records[a], &records.records[b]);
+                rb.size.cmp(&ra.size).then(ra.id.cmp(&rb.id))
+            });
+        }
+        let breadths = profiles
+            .iter()
+            .map(|p| p.iter().map(|&i| records.records[i].size).sum())
+            .collect::<Vec<_>>();
+        let depth = profiles.iter().map(Vec::len).max().unwrap_or(0);
+        let mut positional_maximums = vec![0usize; depth];
+        for p in &profiles {
+            for (i, &rid) in p.iter().enumerate() {
+                positional_maximums[i] = positional_maximums[i].max(records.records[rid].size);
+            }
+        }
+        OperatorProfiles {
+            profiles,
+            breadths,
+            positional_maximums,
+        }
+    }
+
+    /// Record ids alive at `op`, sorted by size descending.
+    pub fn profile(&self, op: usize) -> &[usize] {
+        &self.profiles[op]
+    }
+
+    /// Operator breadth of `op`.
+    pub fn breadth(&self, op: usize) -> usize {
+        self.breadths[op]
+    }
+
+    /// All breadths, indexed by op.
+    pub fn breadths(&self) -> &[usize] {
+        &self.breadths
+    }
+
+    /// The positional-maximum vector.
+    pub fn positional_maximums(&self) -> &[usize] {
+        &self.positional_maximums
+    }
+
+    /// §4.1 — the theoretical lower bound of the Shared Objects problem: the
+    /// sum of positional maximums. "May not be achievable for some networks."
+    pub fn shared_objects_lower_bound(&self) -> usize {
+        self.positional_maximums.iter().sum()
+    }
+
+    /// §5.1 — the theoretical lower bound of the Offset Calculation problem:
+    /// the maximum operator breadth.
+    pub fn offset_lower_bound(&self) -> usize {
+        self.breadths.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Number of operators.
+    pub fn num_ops(&self) -> usize {
+        self.profiles.len()
+    }
+
+    /// Operators sorted by non-increasing breadth (ties: op index ascending)
+    /// — the iteration order of Greedy by Breadth (§4.2 L.4).
+    pub fn ops_by_breadth_desc(&self) -> Vec<usize> {
+        let mut ops: Vec<usize> = (0..self.profiles.len()).collect();
+        ops.sort_by(|&a, &b| self.breadths[b].cmp(&self.breadths[a]).then(a.cmp(&b)));
+        ops
+    }
+}
+
+/// Sort record indices in the canonical "non-increasing size" order used by
+/// the greedy-by-size planners (§4.3 L.1): size descending, then interval
+/// start ascending, then id — fully deterministic.
+pub fn sort_ids_by_size_desc(records: &[UsageRecord], ids: &mut [usize]) {
+    ids.sort_by(|&a, &b| {
+        let (ra, rb) = (&records[a], &records[b]);
+        rb.size
+            .cmp(&ra.size)
+            .then(ra.first_op.cmp(&rb.first_op))
+            .then(ra.id.cmp(&rb.id))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::models::example_records;
+
+    #[test]
+    fn figure_2_profiles() {
+        let recs = example_records();
+        let p = recs.profiles();
+        // Figure 2(b): operator #3 has profile sizes {36, 28, 16},
+        // breadth 80.
+        let sizes: Vec<usize> = p.profile(3).iter().map(|&i| recs.records[i].size).collect();
+        assert_eq!(sizes, vec![36, 28, 16]);
+        assert_eq!(p.breadth(3), 80);
+        // "the third positional maximum ... is equal to max(16,16,16,10)=16"
+        assert_eq!(p.positional_maximums()[2], 16);
+        let thirds: Vec<usize> = (0..p.num_ops())
+            .filter(|&op| p.profile(op).len() >= 3)
+            .map(|op| recs.records[p.profile(op)[2]].size)
+            .collect();
+        let mut sorted = thirds.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(sorted, vec![16, 16, 16, 10]);
+    }
+
+    #[test]
+    fn lower_bounds_on_example() {
+        let recs = example_records();
+        let p = recs.profiles();
+        // positional maxima: 64, 40, 16
+        assert_eq!(p.positional_maximums(), &[64, 40, 16]);
+        assert_eq!(p.shared_objects_lower_bound(), 120);
+        // max breadth is op5: 64 + 40 + 10 = 114
+        assert_eq!(p.offset_lower_bound(), 114);
+    }
+
+    #[test]
+    fn breadth_ordering_is_deterministic() {
+        let recs = example_records();
+        let p = recs.profiles();
+        let order = p.ops_by_breadth_desc();
+        // breadths: op0=32, op1=84, op2=80, op3=80, op4=80, op5=114, op6=50
+        assert_eq!(order[0], 5);
+        assert_eq!(order[1], 1);
+        // ties among ops 2,3,4 (80) break by index
+        assert_eq!(&order[2..5], &[2, 3, 4]);
+        assert_eq!(p.breadth(0), 32);
+        assert_eq!(p.breadth(6), 50);
+    }
+
+    #[test]
+    fn empty_records() {
+        let recs = crate::records::UsageRecords::from_triples(&[]);
+        let p = recs.profiles();
+        assert_eq!(p.shared_objects_lower_bound(), 0);
+        assert_eq!(p.offset_lower_bound(), 0);
+        assert!(p.positional_maximums().is_empty());
+    }
+}

@@ -1,0 +1,238 @@
+//! Table rendering for the paper's evaluation artifacts.
+//!
+//! `benches/table1_shared_objects.rs`, `benches/table2_offset_calculation.rs`
+//! and the CLI all print through this module so EXPERIMENTS.md, the bench
+//! output, and `tensorarena table1` agree byte-for-byte.
+
+use crate::models;
+use crate::planner::{table1_strategies, table2_strategies};
+use crate::records::UsageRecords;
+use std::time::Instant;
+
+/// Bytes per MiB; the paper's tables are in MiB (its "MB" for MobileNet v1's
+/// lower bound, 4.594, equals 4,816,896 bytes = 4.594 * 2^20).
+pub const MIB: f64 = 1024.0 * 1024.0;
+
+/// One rendered table.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Table {
+    /// Render with the best value per column bolded with `*`, mirroring the
+    /// paper's "best results in bold". Baseline rows (Lower Bound, Naive)
+    /// are excluded from the best-of comparison, as in the paper.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n", self.title));
+        let name_w = self
+            .rows
+            .iter()
+            .map(|(n, _)| n.len())
+            .chain(std::iter::once(8))
+            .max()
+            .unwrap();
+        out.push_str(&format!("{:name_w$} ", "Strategy"));
+        for c in &self.columns {
+            out.push_str(&format!("{c:>14} "));
+        }
+        out.push('\n');
+        // best per column among non-baseline rows
+        let is_baseline = |n: &str| n == "Lower Bound" || n == "Naive";
+        let mut best = vec![f64::INFINITY; self.columns.len()];
+        for (name, vals) in &self.rows {
+            if is_baseline(name) {
+                continue;
+            }
+            for (b, &v) in best.iter_mut().zip(vals.iter()) {
+                if v < *b {
+                    *b = v;
+                }
+            }
+        }
+        for (name, vals) in &self.rows {
+            out.push_str(&format!("{name:name_w$} "));
+            for (i, &v) in vals.iter().enumerate() {
+                let mark = if !is_baseline(name) && (v - best[i]).abs() < 1e-9 {
+                    "*"
+                } else {
+                    " "
+                };
+                out.push_str(&format!("{:>13.3}{mark}", v));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Regenerate Table 1 (Shared Objects, MiB) over the six zoo networks.
+pub fn table1() -> Table {
+    let zoo = models::all_zoo();
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    let recs: Vec<UsageRecords> = zoo.iter().map(UsageRecords::from_graph).collect();
+    for strat in table1_strategies() {
+        if strat.name() == "Naive" {
+            continue; // rendered from records below, like the paper's layout
+        }
+        let mut vals = Vec::new();
+        for r in &recs {
+            let plan = strat.plan(r);
+            plan.validate(r).expect("infeasible plan");
+            vals.push(plan.total_size() as f64 / MIB);
+        }
+        rows.push((strat.name().to_string(), vals));
+    }
+    rows.push((
+        "Lower Bound".into(),
+        recs.iter()
+            .map(|r| r.profiles().shared_objects_lower_bound() as f64 / MIB)
+            .collect(),
+    ));
+    rows.push((
+        "Naive".into(),
+        recs.iter().map(|r| r.naive_total() as f64 / MIB).collect(),
+    ));
+    Table {
+        title: "Table 1: memory footprint of Shared Objects strategies (MiB)".into(),
+        columns: models::ZOO.iter().map(|s| s.to_string()).collect(),
+        rows,
+    }
+}
+
+/// Regenerate Table 2 (Offset Calculation, MiB) over the six zoo networks.
+pub fn table2() -> Table {
+    let zoo = models::all_zoo();
+    let recs: Vec<UsageRecords> = zoo.iter().map(UsageRecords::from_graph).collect();
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for strat in table2_strategies() {
+        if strat.name() == "Naive" {
+            continue;
+        }
+        let mut vals = Vec::new();
+        for r in &recs {
+            let plan = strat.plan(r);
+            plan.validate(r).expect("infeasible plan");
+            vals.push(plan.total_size() as f64 / MIB);
+        }
+        rows.push((strat.name().to_string(), vals));
+    }
+    rows.push((
+        "Lower Bound".into(),
+        recs.iter()
+            .map(|r| r.profiles().offset_lower_bound() as f64 / MIB)
+            .collect(),
+    ));
+    rows.push((
+        "Naive".into(),
+        recs.iter().map(|r| r.naive_total() as f64 / MIB).collect(),
+    ));
+    Table {
+        title: "Table 2: memory footprint of Offset Calculation strategies (MiB)".into(),
+        columns: models::ZOO.iter().map(|s| s.to_string()).collect(),
+        rows,
+    }
+}
+
+/// ASCII rendering of an offset plan as a memory-vs-time chart (the way
+/// Figure 6 draws allocations): rows are arena bands, columns are operator
+/// timestamps, cells show which tensor occupies the band while live.
+///
+/// `bands` controls vertical resolution. Only graphs with ≤ 62 records get
+/// distinct glyphs; larger plans reuse glyphs (layout stays exact).
+pub fn render_offset_timeline(records: &UsageRecords, plan: &crate::planner::OffsetPlan, bands: usize) -> String {
+    const GLYPHS: &[u8] = b"0123456789abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ";
+    let n_ops = records.num_ops;
+    if plan.total == 0 || n_ops == 0 {
+        return String::from("(empty plan)\n");
+    }
+    let band_size = (plan.total + bands - 1) / bands;
+    let mut grid = vec![vec![b'.'; n_ops]; bands];
+    for r in &records.records {
+        let glyph = GLYPHS[r.id % GLYPHS.len()];
+        let lo = plan.offsets[r.id] / band_size;
+        let hi = ((plan.offsets[r.id] + r.size).saturating_sub(1)) / band_size;
+        for band in lo..=hi.min(bands - 1) {
+            for t in r.first_op..=r.last_op {
+                grid[band][t] = glyph;
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "arena {} B, {} ops, 1 row = {} B (top = high addresses)\n",
+        plan.total, n_ops, band_size
+    ));
+    for band in (0..bands).rev() {
+        out.push_str(&format!("{:>10} |", band * band_size));
+        out.push_str(std::str::from_utf8(&grid[band]).unwrap());
+        out.push_str("|\n");
+    }
+    out.push_str(&format!("{:>10} +{}+\n", "op", "-".repeat(n_ops)));
+    out
+}
+
+/// Simple timing helper used by the hand-rolled benches (criterion is not in
+/// the offline registry): median + min of `iters` runs.
+pub fn time_it<F: FnMut()>(iters: usize, mut f: F) -> (std::time::Duration, std::time::Duration) {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    (samples[samples.len() / 2], samples[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_marks_best() {
+        let t = Table {
+            title: "t".into(),
+            columns: vec!["a".into(), "b".into()],
+            rows: vec![
+                ("x".into(), vec![1.0, 5.0]),
+                ("y".into(), vec![2.0, 3.0]),
+                ("Naive".into(), vec![0.5, 0.5]),
+            ],
+        };
+        let s = t.render();
+        assert!(s.contains("1.000*"));
+        assert!(s.contains("3.000*"));
+        // Naive excluded from best marking
+        assert!(!s.contains("0.500*"));
+    }
+
+    #[test]
+    fn timeline_renders_example_plan() {
+        use crate::planner::OffsetPlanner;
+        let recs = crate::models::example_records();
+        let plan = crate::planner::offset::GreedyBySize.plan(&recs);
+        let s = render_offset_timeline(&recs, &plan, 8);
+        assert!(s.contains("arena 114 B"));
+        // 8 bands + header + axis = 10 lines
+        assert_eq!(s.lines().count(), 10);
+        // tensor 5 (size 64 at offset 0) occupies the bottom band at op 4
+        let bottom = s.lines().nth(8).unwrap();
+        assert!(bottom.contains('5'));
+    }
+
+    #[test]
+    fn timeline_empty_plan() {
+        let recs = crate::records::UsageRecords::from_triples(&[]);
+        let plan = crate::planner::OffsetPlan { offsets: vec![], total: 0 };
+        assert_eq!(render_offset_timeline(&recs, &plan, 4), "(empty plan)\n");
+    }
+
+    #[test]
+    fn time_it_returns_ordered_stats() {
+        let (med, min) = time_it(5, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(min <= med);
+    }
+}

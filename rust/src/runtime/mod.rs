@@ -1,0 +1,202 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas models (HLO text) and execute
+//! them from Rust.
+//!
+//! This is the compute half of the three-layer architecture: Python lowers
+//! the L2 JAX model (with its L1 Pallas kernels) to HLO **text** once at
+//! build time (`python/compile/aot.py` → `artifacts/*.hlo.txt`); the Rust
+//! serving path loads the text, compiles it on the PJRT CPU client, and
+//! executes batches with zero Python involvement.
+//!
+//! HLO text — not a serialized `HloModuleProto` — is the interchange format
+//! because jax ≥ 0.5 emits protos with 64-bit instruction ids that the
+//! pinned xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT client; compiles HLO-text artifacts into executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled executable: a model lowered at a fixed batch size.
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Batch size this variant was lowered for.
+    pub batch: usize,
+    /// Flat input element count *per sample*.
+    pub in_elems: usize,
+    /// Flat output element count *per sample*.
+    pub out_elems: usize,
+    /// Input dims including batch, e.g. [batch, h, w, c].
+    pub in_dims: Vec<usize>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    /// Backend name (e.g. "cpu") and device count, for logs.
+    pub fn platform(&self) -> (String, usize) {
+        (self.client.platform_name(), self.client.device_count())
+    }
+
+    /// Load and compile one HLO-text artifact. `in_dims` must match the
+    /// shape the artifact was lowered with (`[batch, ...]`); `out_elems` is
+    /// the per-sample output size.
+    pub fn load_hlo_text(
+        &self,
+        path: &Path,
+        in_dims: &[usize],
+        out_elems: usize,
+    ) -> Result<CompiledModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        let batch = in_dims[0];
+        let in_elems: usize = in_dims[1..].iter().product();
+        Ok(CompiledModel {
+            exe,
+            batch,
+            in_elems,
+            out_elems,
+            in_dims: in_dims.to_vec(),
+        })
+    }
+
+    /// Discover `model_b{N}.hlo.txt` variants in an artifact directory.
+    /// Returns (batch, path) sorted by batch size.
+    pub fn discover_variants(dir: &Path, stem: &str) -> Result<Vec<(usize, PathBuf)>> {
+        let mut found = Vec::new();
+        for entry in std::fs::read_dir(dir).with_context(|| format!("read {dir:?}"))? {
+            let p = entry?.path();
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if let Some(rest) = name
+                .strip_prefix(&format!("{stem}_b"))
+                .and_then(|r| r.strip_suffix(".hlo.txt"))
+            {
+                if let Ok(b) = rest.parse::<usize>() {
+                    found.push((b, p));
+                }
+            }
+        }
+        if found.is_empty() {
+            bail!("no {stem}_b*.hlo.txt artifacts in {dir:?}; run `make artifacts`");
+        }
+        found.sort();
+        Ok(found)
+    }
+}
+
+impl CompiledModel {
+    /// Execute one batch. `input` must hold exactly `batch * in_elems`
+    /// floats (callers pad partial batches); returns `batch * out_elems`
+    /// floats.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != self.batch * self.in_elems {
+            bail!(
+                "batch input has {} elems, executable wants {}",
+                input.len(),
+                self.batch * self.in_elems
+            );
+        }
+        let dims: Vec<i64> = self.in_dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = out_lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple output: {e:?}"))?;
+        let v = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("output to_vec: {e:?}"))?;
+        if v.len() != self.batch * self.out_elems {
+            bail!(
+                "executable returned {} elems, expected {}",
+                v.len(),
+                self.batch * self.out_elems
+            );
+        }
+        Ok(v)
+    }
+}
+
+/// A set of batch-size variants of one model, with best-fit selection.
+pub struct VariantSet {
+    /// Sorted by batch ascending.
+    pub variants: Vec<CompiledModel>,
+}
+
+impl VariantSet {
+    /// Load all `stem_b*.hlo.txt` variants from `dir`. `sample_dims` are
+    /// the per-sample input dims (without batch).
+    pub fn load(rt: &Runtime, dir: &Path, stem: &str, sample_dims: &[usize], out_elems: usize) -> Result<Self> {
+        let mut variants = Vec::new();
+        for (b, path) in Runtime::discover_variants(dir, stem)? {
+            let mut dims = vec![b];
+            dims.extend_from_slice(sample_dims);
+            variants.push(rt.load_hlo_text(&path, &dims, out_elems)?);
+        }
+        Ok(VariantSet { variants })
+    }
+
+    /// Smallest variant with `batch >= n`, or the largest if none fits.
+    pub fn pick(&self, n: usize) -> &CompiledModel {
+        self.variants
+            .iter()
+            .find(|v| v.batch >= n)
+            .unwrap_or_else(|| self.variants.last().expect("no variants"))
+    }
+
+    /// Max supported batch.
+    pub fn max_batch(&self) -> usize {
+        self.variants.last().map(|v| v.batch).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discover_parses_and_sorts() {
+        let dir = std::env::temp_dir().join(format!("ta_disc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for b in [4, 1, 2] {
+            std::fs::write(dir.join(format!("model_b{b}.hlo.txt")), "x").unwrap();
+        }
+        std::fs::write(dir.join("other.txt"), "x").unwrap();
+        let found = Runtime::discover_variants(&dir, "model").unwrap();
+        let batches: Vec<usize> = found.iter().map(|(b, _)| *b).collect();
+        assert_eq!(batches, vec![1, 2, 4]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn discover_errors_when_empty() {
+        let dir = std::env::temp_dir().join(format!("ta_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Runtime::discover_variants(&dir, "model").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    // PJRT-backed tests live in rust/tests/pjrt_integration.rs (they need
+    // the artifacts built by `make artifacts`).
+}

@@ -1,0 +1,122 @@
+//! PJRT integration: the AOT artifacts round-trip through the Rust runtime
+//! and the serving coordinator.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they are skipped
+//! with a message otherwise so `cargo test` stays green in a fresh clone.
+
+use std::path::Path;
+use tensorarena::coordinator::engine::PjrtEngine;
+use tensorarena::coordinator::{ArenaStats, BatchPolicy, ModelServer};
+use tensorarena::rng::SplitMix64;
+use tensorarena::runtime::{Runtime, VariantSet};
+
+const DIMS: [usize; 3] = [32, 32, 3];
+const IN_ELEMS: usize = 32 * 32 * 3;
+const OUT: usize = 10;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if Runtime::discover_variants(p, "model").is_ok() {
+        Some(p)
+    } else {
+        eprintln!("skipping PJRT test: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn load_and_execute_b1() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let vs = VariantSet::load(&rt, dir, "model", &DIMS, OUT).unwrap();
+    let mut rng = SplitMix64::new(1);
+    let mut x = vec![0f32; IN_ELEMS];
+    rng.fill_f32(&mut x, 1.0);
+    let out = vs.pick(1).run(&x).unwrap();
+    assert_eq!(out.len(), OUT);
+    let s: f32 = out.iter().sum();
+    assert!((s - 1.0).abs() < 1e-4, "softmax sum {s}");
+    assert!(out.iter().all(|v| *v >= 0.0 && v.is_finite()));
+}
+
+#[test]
+fn batch_variants_agree_per_sample() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let vs = VariantSet::load(&rt, dir, "model", &DIMS, OUT).unwrap();
+    let mut rng = SplitMix64::new(2);
+    let mut samples = vec![0f32; 4 * IN_ELEMS];
+    rng.fill_f32(&mut samples, 1.0);
+    let b4 = vs.pick(4).run(&samples).unwrap();
+    for i in 0..4 {
+        let one = vs.pick(1).run(&samples[i * IN_ELEMS..(i + 1) * IN_ELEMS]).unwrap();
+        for j in 0..OUT {
+            assert!(
+                (one[j] - b4[i * OUT + j]).abs() < 1e-5,
+                "sample {i} class {j}: {} vs {}",
+                one[j],
+                b4[i * OUT + j]
+            );
+        }
+    }
+}
+
+#[test]
+fn pick_selects_smallest_sufficient_variant() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let vs = VariantSet::load(&rt, dir, "model", &DIMS, OUT).unwrap();
+    assert_eq!(vs.pick(1).batch, 1);
+    assert_eq!(vs.pick(2).batch, 2);
+    assert_eq!(vs.pick(3).batch, 4);
+    assert_eq!(vs.pick(8).batch, 8);
+    assert_eq!(vs.pick(99).batch, vs.max_batch());
+}
+
+#[test]
+fn pjrt_engine_pads_partial_batches() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let vs = VariantSet::load(&rt, dir, "model", &DIMS, OUT).unwrap();
+    let mut engine = PjrtEngine::new(vs, ArenaStats::default());
+    use tensorarena::coordinator::Engine;
+    let mut rng = SplitMix64::new(3);
+    let mut x = vec![0f32; 3 * IN_ELEMS];
+    rng.fill_f32(&mut x, 1.0);
+    // n=3 -> padded onto the b4 executable; results for 3 samples returned
+    let out = engine.run_batch(&x, 3).unwrap();
+    assert_eq!(out.len(), 3 * OUT);
+    for i in 0..3 {
+        let s: f32 = out[i * OUT..(i + 1) * OUT].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn full_serving_path_through_coordinator() {
+    let Some(_) = artifacts() else { return };
+    let server = ModelServer::spawn(
+        || {
+            let rt = Runtime::cpu().expect("PJRT");
+            let vs = VariantSet::load(&rt, Path::new("artifacts"), "model", &DIMS, OUT)
+                .expect("artifacts");
+            Box::new(PjrtEngine::new(vs, ArenaStats::default()))
+        },
+        BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2) },
+    );
+    let mut rng = SplitMix64::new(4);
+    let mut input = vec![0f32; IN_ELEMS];
+    let pending: Vec<_> = (0..16)
+        .map(|_| {
+            rng.fill_f32(&mut input, 1.0);
+            server.submit(input.clone())
+        })
+        .collect();
+    for rx in pending {
+        let out = rx.recv().unwrap().expect("inference ok");
+        assert_eq!(out.len(), OUT);
+    }
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.completed, 16);
+    server.shutdown();
+}

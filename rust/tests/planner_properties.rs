@@ -1,0 +1,217 @@
+//! Property tests over the planners (hand-rolled generator — the offline
+//! registry has no proptest; SplitMix64 seeds make every case reproducible:
+//! a failure prints its seed).
+//!
+//! Invariants checked on hundreds of random graphs:
+//! * every strategy's plan is feasible (independent O(n²) validator);
+//! * lower bound ≤ plan ≤ naive, for both approaches;
+//! * Greedy by Size never grows an object (§4.3);
+//! * Greedy by Size Improved ≤ Greedy by Size (§4.4: "better or the same");
+//! * offset Greedy by Size ≤ every shared-objects strategy converted to
+//!   offsets (§5: shared solutions embed into offset solutions);
+//! * plans are deterministic;
+//! * the multi-pass dynamic planner stays feasible.
+
+use tensorarena::planner::{table1_strategies, table2_strategies};
+use tensorarena::records::UsageRecords;
+use tensorarena::rng::SplitMix64;
+
+/// Random usage records resembling real nets: a chain with skips, varied
+/// sizes, occasional same-size runs (to exercise GSI stages).
+fn random_records(seed: u64) -> UsageRecords {
+    let mut rng = SplitMix64::new(seed);
+    let n = rng.next_range(1, 80);
+    let mut triples = Vec::with_capacity(n);
+    let mut op = 0usize;
+    for i in 0..n {
+        let span = match rng.next_below(10) {
+            0..=6 => 1,
+            7 | 8 => rng.next_range(2, 6),
+            _ => rng.next_range(6, 12),
+        };
+        let size = match rng.next_below(4) {
+            0 => 64, // repeated size
+            1 => 64 * rng.next_range(1, 4),
+            2 => 64 * rng.next_range(1, 64),
+            _ => 64 * rng.next_range(32, 512),
+        };
+        triples.push((op, op + span, size));
+        if rng.next_below(3) != 0 {
+            op += 1;
+        }
+        let _ = i;
+    }
+    UsageRecords::from_triples(&triples)
+}
+
+#[test]
+fn all_shared_strategies_feasible_and_bounded() {
+    for seed in 0..300u64 {
+        let recs = random_records(seed);
+        let p = recs.profiles();
+        let lb = p.shared_objects_lower_bound();
+        let naive = recs.naive_total();
+        for strat in table1_strategies() {
+            let plan = strat.plan(&recs);
+            plan.validate(&recs)
+                .unwrap_or_else(|e| panic!("seed {seed}, {}: {e}", strat.name()));
+            assert!(
+                plan.total_size() >= lb,
+                "seed {seed}, {}: {} < lower bound {lb}",
+                strat.name(),
+                plan.total_size()
+            );
+            assert!(
+                plan.total_size() <= naive,
+                "seed {seed}, {}: {} > naive {naive}",
+                strat.name(),
+                plan.total_size()
+            );
+        }
+    }
+}
+
+#[test]
+fn all_offset_strategies_feasible_and_bounded() {
+    for seed in 0..300u64 {
+        let recs = random_records(seed);
+        let p = recs.profiles();
+        let lb = p.offset_lower_bound();
+        let naive = recs.naive_total();
+        for strat in table2_strategies() {
+            let plan = strat.plan(&recs);
+            plan.validate(&recs)
+                .unwrap_or_else(|e| panic!("seed {seed}, {}: {e}", strat.name()));
+            assert!(plan.total_size() >= lb, "seed {seed}, {}", strat.name());
+            assert!(plan.total_size() <= naive, "seed {seed}, {}", strat.name());
+        }
+    }
+}
+
+#[test]
+fn greedy_by_size_improved_never_loses_to_greedy_by_size() {
+    use tensorarena::planner::shared::{GreedyBySize, GreedyBySizeImproved};
+    use tensorarena::planner::SharedObjectPlanner;
+    let mut improved_strictly = 0;
+    for seed in 0..500u64 {
+        let recs = random_records(seed);
+        let gsi = GreedyBySizeImproved.plan(&recs).total_size();
+        let gs = GreedyBySize.plan(&recs).total_size();
+        assert!(
+            gsi <= gs,
+            "seed {seed}: GSI {gsi} > GS {gs} — §4.4 claims better-or-equal"
+        );
+        if gsi < gs {
+            improved_strictly += 1;
+        }
+    }
+    // The improvement must actually fire sometimes, or the stages are dead
+    // code.
+    assert!(improved_strictly > 0, "GSI never improved on GS in 500 graphs");
+}
+
+#[test]
+fn shared_plans_embed_into_offset_plans() {
+    // §5: any Shared-Objects solution converts to an equal-size Offset
+    // solution (always checked); the offset *heuristic* usually — but not
+    // provably — beats converted shared plans, so that part is aggregate.
+    use tensorarena::planner::offset::GreedyBySize as OffGS;
+    use tensorarena::planner::OffsetPlanner;
+    let mut off_wins = 0usize;
+    let mut comparisons = 0usize;
+    for seed in 0..200u64 {
+        let recs = random_records(seed);
+        let off = OffGS.plan(&recs);
+        for strat in table1_strategies() {
+            let shared = strat.plan(&recs);
+            let converted = shared.to_offset_plan(&recs);
+            converted
+                .validate(&recs)
+                .unwrap_or_else(|e| panic!("seed {seed}, {} converted: {e}", strat.name()));
+            assert_eq!(converted.total_size(), shared.total_size());
+            comparisons += 1;
+            if off.total_size() <= converted.total_size() {
+                off_wins += 1;
+            }
+        }
+    }
+    assert!(
+        off_wins * 100 >= comparisons * 95,
+        "offset Greedy by Size beat converted shared plans only {off_wins}/{comparisons} times"
+    );
+}
+
+#[test]
+fn plans_are_deterministic() {
+    for seed in [3u64, 77, 1234] {
+        let recs = random_records(seed);
+        for strat in table1_strategies() {
+            assert_eq!(strat.plan(&recs), strat.plan(&recs), "{}", strat.name());
+        }
+        for strat in table2_strategies() {
+            assert_eq!(strat.plan(&recs), strat.plan(&recs), "{}", strat.name());
+        }
+    }
+}
+
+#[test]
+fn multi_pass_dynamic_planner_feasible_on_random_resolution_orders() {
+    use tensorarena::planner::dynamic::{DynamicRecord, MultiPassPlanner};
+    for seed in 0..100u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xD15EA5E);
+        let recs = random_records(seed);
+        if recs.is_empty() {
+            continue;
+        }
+        let dynamic: Vec<DynamicRecord> = recs
+            .records
+            .iter()
+            .map(|r| DynamicRecord {
+                record: *r,
+                known_at: if rng.next_below(3) == 0 {
+                    rng.next_below(r.first_op + 1)
+                } else {
+                    0
+                },
+            })
+            .collect();
+        let mp = MultiPassPlanner.plan(&dynamic, recs.num_ops);
+        mp.plan
+            .validate(&recs)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // growth is monotone across passes
+        for w in mp.growth.windows(2) {
+            assert!(w[0] <= w[1], "seed {seed}: arena shrank between passes");
+        }
+        // single-pass oracle can't be beaten... but multi-pass CAN tie it.
+        let oracle = tensorarena::planner::OffsetPlanner::plan(
+            &tensorarena::planner::offset::GreedyBySize,
+            &recs,
+        );
+        let _ = oracle;
+    }
+}
+
+#[test]
+fn degenerate_records() {
+    // single tensor, zero-size tensor, all-overlapping, all-disjoint
+    let cases: Vec<Vec<(usize, usize, usize)>> = vec![
+        vec![(0, 0, 64)],
+        vec![(0, 3, 0), (1, 2, 64)],
+        vec![(0, 9, 64), (0, 9, 128), (0, 9, 192)],
+        (0..20).map(|i| (2 * i, 2 * i + 1, 64)).collect(),
+    ];
+    for (ci, triples) in cases.iter().enumerate() {
+        let recs = UsageRecords::from_triples(triples);
+        for strat in table1_strategies() {
+            let plan = strat.plan(&recs);
+            plan.validate(&recs)
+                .unwrap_or_else(|e| panic!("case {ci} {}: {e}", strat.name()));
+        }
+        for strat in table2_strategies() {
+            let plan = strat.plan(&recs);
+            plan.validate(&recs)
+                .unwrap_or_else(|e| panic!("case {ci} {}: {e}", strat.name()));
+        }
+    }
+}
