@@ -34,7 +34,8 @@ fn main() -> anyhow::Result<()> {
     let stats = ArenaStats {
         planned_bytes: plan.total_size(),
         naive_bytes: recs.naive_total(),
-        strategy: "Greedy by Size",
+        strategy: "Greedy by Size".into(),
+        ..ArenaStats::default()
     };
     println!(
         "serving model: l2_cnn ({} ops); arena {:.1} KiB vs naive {:.1} KiB = {:.2}x reduction",

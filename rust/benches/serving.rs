@@ -7,14 +7,23 @@
 //! * micro: request round-trip overhead through router + batcher with a
 //!   trivial engine (isolates L3 from compute);
 //! * batching: throughput vs `max_batch` with a fixed-cost engine;
-//! * macro (if `artifacts/` exists): PJRT closed-loop storm, the same
-//!   measurement as `tensorarena serve`.
+//! * plan reuse: ExecutorEngine replicas behind one PlanService — reports
+//!   the plan-cache hit rate and arena-pool reuse that make replica spin-up
+//!   and batch swaps cheap;
+//! * macro (with the `pjrt` feature and `artifacts/`): PJRT closed-loop
+//!   storm, the same measurement as `tensorarena serve`.
 
 #[path = "harness.rs"]
 mod harness;
 
+use std::sync::Arc;
 use std::time::Duration;
-use tensorarena::coordinator::{BatchPolicy, EchoEngine, Engine, Router};
+use tensorarena::coordinator::engine::ExecutorEngine;
+use tensorarena::coordinator::{
+    render_arena_stats, ArenaStats, BatchPolicy, EchoEngine, Engine, Router,
+};
+use tensorarena::planner::PlanService;
+use tensorarena::records::UsageRecords;
 use tensorarena::rng::SplitMix64;
 
 /// Engine with a fixed per-batch cost, to expose batching wins.
@@ -87,11 +96,78 @@ fn main() {
         router.shutdown();
     }
 
+    // --- plan reuse: replicas + batch swaps through one PlanService ---
+    {
+        let service = PlanService::shared();
+        let model = "blazeface";
+        let g = tensorarena::models::by_name(model).unwrap();
+        let in_elems = g.tensor(g.inputs[0]).num_elements();
+        let recs = UsageRecords::from_graph(&g);
+        let naive = recs.naive_total();
+        let planned = service
+            .plan_records(&recs, 1, Some("greedy-size"))
+            .expect("plan")
+            .total;
+        println!("\nplan reuse: 3 {model} replicas, bursts at batch 1/2/4, then a replica restart:");
+        let mut rng = SplitMix64::new(3);
+        let mut input = vec![0f32; in_elems];
+        // Phase 1 spins the replicas up and grows their arenas; phase 2
+        // restarts them — every plan is a cache hit and every arena buffer
+        // comes back out of the pool.
+        for phase in 0..2 {
+            let mut router = Router::new();
+            for i in 0..3 {
+                let service = Arc::clone(&service);
+                router.register(
+                    format!("{model}-{i}"),
+                    move || {
+                        let g = tensorarena::models::by_name("blazeface").unwrap();
+                        Box::new(ExecutorEngine::new(&g, service, "greedy-size", 7).expect("engine"))
+                    },
+                    BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                );
+            }
+            for burst in [1usize, 2, 4, 2, 1] {
+                for i in 0..3 {
+                    let pending: Vec<_> = (0..burst)
+                        .map(|_| {
+                            rng.fill_f32(&mut input, 1.0);
+                            router.submit(&format!("{model}-{i}"), input.clone())
+                        })
+                        .collect();
+                    for rx in pending {
+                        rx.recv().unwrap().unwrap();
+                    }
+                }
+            }
+            router.shutdown();
+            let st = service.stats();
+            println!(
+                "  phase {}: cache {} hit / {} miss, pool {} reused / {} allocated",
+                phase + 1,
+                st.cache_hits,
+                st.cache_misses,
+                st.pool_reused,
+                st.pool_allocated,
+            );
+        }
+        let st = service.stats();
+        let stats = ArenaStats::from_service(planned, naive, "greedy-size", st);
+        println!("  {}", render_arena_stats(&stats));
+        println!(
+            "  cache hit rate {:.1}% | pool reuse {}/{} acquisitions",
+            st.cache_hit_rate() * 100.0,
+            st.pool_reused,
+            st.pool_reused + st.pool_allocated,
+        );
+    }
+
     // --- macro: PJRT artifacts, if built ---
+    #[cfg(feature = "pjrt")]
     let dir = std::path::Path::new("artifacts");
+    #[cfg(feature = "pjrt")]
     if tensorarena::runtime::Runtime::discover_variants(dir, "model").is_ok() {
         use tensorarena::coordinator::engine::PjrtEngine;
-        use tensorarena::coordinator::ArenaStats;
         use tensorarena::runtime::{Runtime, VariantSet};
         println!("\nPJRT closed-loop storm (256 requests):");
         for max_batch in [1usize, 8] {

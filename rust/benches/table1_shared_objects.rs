@@ -12,7 +12,7 @@
 mod harness;
 
 use tensorarena::models;
-use tensorarena::planner::table1_strategies;
+use tensorarena::planner::registry;
 use tensorarena::records::UsageRecords;
 use tensorarena::report;
 
@@ -23,7 +23,7 @@ fn main() {
     println!("\nplanner wall time (median of 10):");
     for g in models::all_zoo() {
         let recs = UsageRecords::from_graph(&g);
-        for strat in table1_strategies() {
+        for strat in registry::shared_strategies() {
             let name = format!("{} / {}", g.name, strat.name());
             let stats = harness::bench(2, 10, || {
                 harness::black_box(strat.plan(&recs));

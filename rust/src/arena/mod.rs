@@ -1,11 +1,19 @@
 //! The tensor arena: one pre-allocated block of memory materializing an
-//! [`OffsetPlan`].
+//! [`OffsetPlan`], plus the [`ArenaPool`] that recycles those blocks.
 //!
 //! §5: "a large chunk of memory is pre-allocated and the intermediate
 //! tensors are given parts of the memory by the offsets within the memory
 //! block." The arena is allocated once per executor (or per in-flight
 //! request in the serving coordinator) — the whole point of the paper is
-//! that this block is 7–10× smaller than the sum of tensor sizes.
+//! that this block is 7–10× smaller than the sum of tensor sizes. The pool
+//! extends "allocated once" across executors and batch-size swaps: a
+//! retired arena's buffer goes back on a size-classed freelist instead of
+//! to the allocator.
+//!
+//! **Lanes**: an arena built for batch-scaled records (every size
+//! multiplied by the batch, see `UsageRecords::scaled`) is striped into
+//! `batch` equal lanes per tensor; sample *i* of a batch reads and writes
+//! lane *i*, so a whole batch lives in one resident arena planned once.
 //!
 //! Debug builds add guard words between the arena and its end and a
 //! poisoning facility used by the behavioural tests in `crate::exec` to
@@ -14,6 +22,8 @@
 
 use crate::planner::OffsetPlan;
 use crate::records::UsageRecords;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Value written over a tensor's region when it dies (debug feature): reads
 /// of stale data then produce NaNs that propagate to the output checksum.
@@ -23,74 +33,262 @@ pub const POISON_F32: f32 = f32::NAN;
 const GUARD: f32 = 1.0e30;
 const GUARD_WORDS: usize = 16;
 
+/// Most buffers kept per size class; beyond this, released buffers are
+/// dropped (bounds pool memory under engine churn).
+const POOL_SHELF_CAP: usize = 8;
+
+/// Size-classed freelist of arena buffers. Buffers are allocated at their
+/// exact requested length (no power-of-two rounding — a pooled arena costs
+/// the same memory as a fresh one) and shelved by the power-of-two class of
+/// that length; `acquire` best-fits within the request's class and the one
+/// above it. Shared across executors through `Arc`, with counters that
+/// make reuse visible in serving metrics.
+#[derive(Default)]
+pub struct ArenaPool {
+    /// `shelves[class]` holds buffers with `2^class <= len < 2^(class+1)`.
+    shelves: Mutex<Vec<Vec<Vec<f32>>>>,
+    reused: AtomicU64,
+    allocated: AtomicU64,
+}
+
+impl ArenaPool {
+    /// Empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size class of a word count: floor of log2.
+    fn class_of(words: usize) -> usize {
+        (usize::BITS - 1 - words.max(1).leading_zeros()) as usize
+    }
+
+    /// A buffer with `len >= words` whose first `words` elements are zero,
+    /// recycled if a fitting one is shelved. Probes the request's own
+    /// class (where an identically-sized buffer — the batch-swap and
+    /// replica-restart case — always fits) and the class above (where
+    /// every buffer fits); allocates exactly `words` on miss, so a pooled
+    /// arena costs no more memory than a fresh one.
+    pub fn acquire(&self, words: usize) -> Vec<f32> {
+        let class = Self::class_of(words.max(1));
+        {
+            let mut shelves = self.shelves.lock().unwrap();
+            for c in [class, class + 1] {
+                if let Some(shelf) = shelves.get_mut(c) {
+                    if let Some(i) = shelf.iter().position(|b| b.len() >= words) {
+                        self.reused.fetch_add(1, Ordering::Relaxed);
+                        let mut buf = shelf.swap_remove(i);
+                        drop(shelves);
+                        // Clear the previous arena's data; the tail past
+                        // `words` is the caller's guard region.
+                        buf[..words].fill(0.0);
+                        return buf;
+                    }
+                }
+            }
+        }
+        self.allocated.fetch_add(1, Ordering::Relaxed);
+        vec![0f32; words]
+    }
+
+    /// Shelve a buffer for reuse; buffers of any length are accepted.
+    pub fn release(&self, buf: Vec<f32>) {
+        if buf.is_empty() {
+            return;
+        }
+        let class = Self::class_of(buf.len());
+        let mut shelves = self.shelves.lock().unwrap();
+        if shelves.len() <= class {
+            shelves.resize_with(class + 1, Vec::new);
+        }
+        let shelf = &mut shelves[class];
+        if shelf.len() < POOL_SHELF_CAP {
+            shelf.push(buf);
+        }
+    }
+
+    /// Buffers recycled so far.
+    pub fn reused(&self) -> u64 {
+        self.reused.load(Ordering::Relaxed)
+    }
+
+    /// Buffers freshly allocated so far.
+    pub fn allocated(&self) -> u64 {
+        self.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Buffers currently shelved (for tests and pool introspection).
+    pub fn idle_buffers(&self) -> usize {
+        self.shelves.lock().unwrap().iter().map(Vec::len).sum()
+    }
+}
+
 /// A planned arena of `f32` words (all tensor offsets/sizes in this crate
 /// are 64-byte aligned, so `f32` indexing is always exact).
 pub struct Arena {
     buf: Vec<f32>,
     /// Byte offsets per record id, from the plan.
     offsets: Vec<usize>,
-    /// Byte sizes per record id, from the records.
+    /// Byte sizes per record id, from the records (batch-scaled when
+    /// `lanes > 1`).
     sizes: Vec<usize>,
+    /// Batch lanes each record's region is striped into.
+    lanes: usize,
+    /// First guard word; everything from here to `buf.len()` is guard.
+    guard_from: usize,
 }
 
 impl Arena {
-    /// Allocate an arena for `plan` over `records`. Panics if the plan does
-    /// not cover the records (use `plan.validate` first for a nice error).
+    /// Allocate a fresh (unpooled) arena for `plan` over `records`. Panics
+    /// if the plan does not cover the records (use `plan.validate` first
+    /// for a nice error).
     pub fn new(plan: &OffsetPlan, records: &UsageRecords) -> Self {
-        assert_eq!(plan.offsets.len(), records.len());
         let words = plan.total / 4 + GUARD_WORDS;
-        let mut buf = vec![0f32; words];
-        for g in &mut buf[plan.total / 4..] {
+        Self::build(plan, records, 1, vec![0f32; words])
+    }
+
+    /// Arena from a pooled buffer, striped into `lanes` batch lanes.
+    /// `records` must be the lane-scaled records matching `plan` (every
+    /// size divisible by `4 * lanes`). Return the buffer with
+    /// [`Arena::recycle`] when the arena is retired.
+    pub fn from_pool(
+        plan: &OffsetPlan,
+        records: &UsageRecords,
+        lanes: usize,
+        pool: &ArenaPool,
+    ) -> Self {
+        let words = plan.total / 4 + GUARD_WORDS;
+        let buf = pool.acquire(words);
+        debug_assert!(buf.len() >= words);
+        Self::build(plan, records, lanes, buf)
+    }
+
+    fn build(plan: &OffsetPlan, records: &UsageRecords, lanes: usize, mut buf: Vec<f32>) -> Self {
+        assert_eq!(plan.offsets.len(), records.len());
+        assert!(lanes >= 1, "an arena needs at least one lane");
+        for r in &records.records {
+            // Hard bound: the lane/range arithmetic below feeds unchecked
+            // raw-pointer slices in `split_io_lane`, so every record must
+            // provably fit inside the arena.
+            assert!(
+                plan.offsets[r.id] + r.size <= plan.total,
+                "record {} at {}..{} exceeds arena total {}",
+                r.id,
+                plan.offsets[r.id],
+                plan.offsets[r.id] + r.size,
+                plan.total
+            );
+            debug_assert!(
+                r.size % (4 * lanes) == 0,
+                "record {} size {} not striping into {lanes} lanes",
+                r.id,
+                r.size
+            );
+        }
+        let guard_from = plan.total / 4;
+        for g in &mut buf[guard_from..] {
             *g = GUARD;
         }
         Arena {
             buf,
             offsets: plan.offsets.clone(),
             sizes: records.records.iter().map(|r| r.size).collect(),
+            lanes,
+            guard_from,
         }
+    }
+
+    /// A zero-capacity placeholder (used while swapping arenas).
+    pub fn empty() -> Self {
+        Arena {
+            buf: Vec::new(),
+            offsets: Vec::new(),
+            sizes: Vec::new(),
+            lanes: 1,
+            guard_from: 0,
+        }
+    }
+
+    /// Retire the arena, shelving its buffer for the next one.
+    pub fn recycle(self, pool: &ArenaPool) {
+        pool.release(self.buf);
     }
 
     /// Arena capacity in bytes (excluding guards).
     pub fn capacity(&self) -> usize {
-        (self.buf.len() - GUARD_WORDS) * 4
+        self.guard_from * 4
     }
 
-    /// Word range of a record.
+    /// Number of batch lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Word range of a record's whole (all-lane) region.
     fn range(&self, record: usize) -> std::ops::Range<usize> {
         let start = self.offsets[record] / 4;
         start..start + self.sizes[record] / 4
     }
 
-    /// Read-only view of a tensor's buffer.
+    /// Word range of one lane's stripe of a record. The lane bound is a
+    /// hard assert: these ranges feed the raw-pointer slices of
+    /// [`Self::split_io_lane`], so an out-of-range lane must never produce
+    /// a range past the record's region.
+    fn lane_range(&self, record: usize, lane: usize) -> std::ops::Range<usize> {
+        assert!(lane < self.lanes, "lane {lane} of a {}-lane arena", self.lanes);
+        let stripe = self.sizes[record] / self.lanes / 4;
+        let start = self.offsets[record] / 4 + lane * stripe;
+        start..start + stripe
+    }
+
+    /// Read-only view of a tensor's whole region (all lanes).
     pub fn tensor(&self, record: usize) -> &[f32] {
         &self.buf[self.range(record)]
     }
 
-    /// Mutable view of a tensor's buffer.
+    /// Mutable view of a tensor's whole region (all lanes).
     pub fn tensor_mut(&mut self, record: usize) -> &mut [f32] {
         let r = self.range(record);
         &mut self.buf[r]
     }
 
-    /// Simultaneous access to one output tensor and several input tensors.
+    /// Read-only view of one lane's stripe of a tensor.
+    pub fn tensor_lane(&self, record: usize, lane: usize) -> &[f32] {
+        &self.buf[self.lane_range(record, lane)]
+    }
+
+    /// Simultaneous access to one output tensor and several input tensors
+    /// (lane 0 — the single-sample path).
+    pub fn split_io(&mut self, output: usize, inputs: &[usize]) -> (&mut [f32], Vec<&[f32]>) {
+        self.split_io_lane(output, inputs, 0)
+    }
+
+    /// Simultaneous access to one output stripe and several input stripes
+    /// of batch lane `lane`.
     ///
     /// Safety argument: in any *valid* plan the output and all inputs of an
     /// op are simultaneously live (their usage intervals all contain the
-    /// op), therefore their byte ranges are pairwise disjoint; the runtime
-    /// check below enforces it even for hand-built plans.
-    pub fn split_io(&mut self, output: usize, inputs: &[usize]) -> (&mut [f32], Vec<&[f32]>) {
-        let out_range = self.range(output);
+    /// op), therefore their byte ranges — and a fortiori their same-lane
+    /// stripes — are pairwise disjoint; the runtime check below enforces it
+    /// even for hand-built plans.
+    pub fn split_io_lane(
+        &mut self,
+        output: usize,
+        inputs: &[usize],
+        lane: usize,
+    ) -> (&mut [f32], Vec<&[f32]>) {
+        let out_range = self.lane_range(output, lane);
         for &i in inputs {
-            let r = self.range(i);
+            let r = self.lane_range(i, lane);
             assert!(
                 r.end <= out_range.start || out_range.end <= r.start,
                 "op I/O overlap in arena: record {i} ({r:?}) vs output {output} ({out_range:?}) — invalid plan"
             );
         }
         let base = self.buf.as_mut_ptr();
-        // SAFETY: ranges are in-bounds (checked by `range`) and the output
-        // range is disjoint from every input range (asserted above); inputs
-        // may alias each other but are only handed out as shared slices.
+        // SAFETY: ranges are in-bounds (checked by `lane_range`) and the
+        // output range is disjoint from every input range (asserted above);
+        // inputs may alias each other but are only handed out as shared
+        // slices.
         unsafe {
             let out = std::slice::from_raw_parts_mut(
                 base.add(out_range.start),
@@ -99,7 +297,7 @@ impl Arena {
             let ins = inputs
                 .iter()
                 .map(|&i| {
-                    let r = self.range(i);
+                    let r = self.lane_range(i, lane);
                     std::slice::from_raw_parts(base.add(r.start) as *const f32, r.end - r.start)
                 })
                 .collect();
@@ -107,18 +305,24 @@ impl Arena {
         }
     }
 
-    /// Poison a dead tensor's region (debug/behavioural-test aid).
+    /// Poison a dead tensor's whole region (debug/behavioural-test aid).
     pub fn poison(&mut self, record: usize) {
         for v in self.tensor_mut(record) {
             *v = POISON_F32;
         }
     }
 
+    /// Poison one lane's stripe of a dead tensor.
+    pub fn poison_lane(&mut self, record: usize, lane: usize) {
+        let r = self.lane_range(record, lane);
+        for v in &mut self.buf[r] {
+            *v = POISON_F32;
+        }
+    }
+
     /// Check the end-of-arena guard words; true if untouched.
     pub fn guards_intact(&self) -> bool {
-        self.buf[self.buf.len() - GUARD_WORDS..]
-            .iter()
-            .all(|&g| g == GUARD)
+        self.buf[self.guard_from..].iter().all(|&g| g == GUARD)
     }
 }
 
@@ -176,5 +380,77 @@ mod tests {
         arena.poison(2);
         assert!(arena.tensor(2).iter().all(|v| v.is_nan()));
         assert!(arena.guards_intact());
+    }
+
+    #[test]
+    fn lanes_stripe_each_record_disjointly() {
+        let base = UsageRecords::from_triples(&[(0, 1, 64), (1, 2, 128)]);
+        let scaled = base.scaled(4);
+        let plan = GreedyBySize.plan(&scaled);
+        plan.validate(&scaled).unwrap();
+        let pool = ArenaPool::new();
+        let mut arena = Arena::from_pool(&plan, &scaled, 4, &pool);
+        assert_eq!(arena.lanes(), 4);
+        assert_eq!(arena.tensor_lane(0, 0).len(), 16); // one 64-byte stripe
+        assert_eq!(arena.tensor(0).len(), 64); // 4 lanes
+        // Write each lane a distinct value; no lane may clobber another.
+        for lane in 0..4 {
+            let (out, _) = arena.split_io_lane(0, &[], lane);
+            out.fill(lane as f32 + 1.0);
+        }
+        for lane in 0..4 {
+            assert!(
+                arena.tensor_lane(0, lane).iter().all(|&v| v == lane as f32 + 1.0),
+                "lane {lane} clobbered"
+            );
+        }
+        assert!(arena.guards_intact());
+        // Lane poison touches one stripe only.
+        arena.poison_lane(0, 2);
+        assert!(arena.tensor_lane(0, 2).iter().all(|v| v.is_nan()));
+        assert!(arena.tensor_lane(0, 1).iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn pool_recycles_buffers_and_counts() {
+        let (recs, plan) = setup();
+        let pool = ArenaPool::new();
+        let a = Arena::from_pool(&plan, &recs, 1, &pool);
+        assert_eq!((pool.allocated(), pool.reused()), (1, 0));
+        a.recycle(&pool);
+        assert_eq!(pool.idle_buffers(), 1);
+        // Same size class: the buffer comes back.
+        let b = Arena::from_pool(&plan, &recs, 1, &pool);
+        assert_eq!((pool.allocated(), pool.reused()), (1, 1));
+        assert_eq!(pool.idle_buffers(), 0);
+        // A fresh pooled arena must not see the old arena's data.
+        assert!(b.tensor(0).iter().all(|&v| v == 0.0));
+        assert!(b.guards_intact());
+        b.recycle(&pool);
+    }
+
+    #[test]
+    fn pool_acquire_covers_requested_words() {
+        let pool = ArenaPool::new();
+        for words in [1usize, 2, 3, 16, 17, 1000] {
+            let buf = pool.acquire(words);
+            assert!(buf.len() >= words, "{words} words got {}", buf.len());
+            pool.release(buf);
+        }
+        // Shelf cap bounds retained buffers.
+        for _ in 0..20 {
+            pool.release(vec![0f32; 64]);
+        }
+        assert!(pool.idle_buffers() <= 20);
+    }
+
+    #[test]
+    fn empty_arena_is_inert() {
+        let arena = Arena::empty();
+        assert_eq!(arena.capacity(), 0);
+        assert!(arena.guards_intact());
+        let pool = ArenaPool::new();
+        arena.recycle(&pool); // empty buffers are not shelved
+        assert_eq!(pool.idle_buffers(), 0);
     }
 }

@@ -3,9 +3,11 @@
 use super::ArenaStats;
 use crate::exec::Executor;
 use crate::graph::Graph;
-use crate::planner::OffsetPlanner;
+use crate::planner::{registry, PlanService};
+#[cfg(feature = "pjrt")]
 use crate::runtime::VariantSet;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// A batched compute backend for one model.
 ///
@@ -28,6 +30,7 @@ pub trait Engine {
 }
 
 /// PJRT-backed engine over AOT batch-size variants (the production path).
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     variants: VariantSet,
     in_elems: usize,
@@ -35,6 +38,7 @@ pub struct PjrtEngine {
     stats: ArenaStats,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Wrap a loaded [`VariantSet`]; `stats` comes from planning the L2
     /// graph (see `examples/serve_e2e.rs`).
@@ -49,6 +53,7 @@ impl PjrtEngine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine for PjrtEngine {
     fn in_elems(&self) -> usize {
         self.in_elems
@@ -78,30 +83,65 @@ impl Engine for PjrtEngine {
     }
 }
 
-/// Pure-Rust engine: the arena [`Executor`] run per-sample (batch = loop).
-/// Used by `benches/locality.rs` and anywhere artifacts are unavailable.
+/// Default batch cap for [`ExecutorEngine`] (override with
+/// [`ExecutorEngine::with_max_batch`]).
+pub const DEFAULT_EXECUTOR_MAX_BATCH: usize = 8;
+
+/// Pure-Rust engine: the arena [`Executor`] run batched against one
+/// lane-striped resident arena. Plans come from the shared
+/// [`PlanService`]'s cache and arena buffers from its pool, so replicas of
+/// the same model plan once and recycle memory. Used by
+/// `benches/locality.rs`, the `serve` CLI's artifact-free path, and
+/// anywhere PJRT artifacts are unavailable.
 pub struct ExecutorEngine {
     exec: Executor,
     in_elems: usize,
     out_elems: usize,
     strategy: &'static str,
+    service: Arc<PlanService>,
     max_batch: usize,
 }
 
 impl ExecutorEngine {
-    /// Plan `graph` with `planner` and wrap the executor. Uses the first
-    /// graph output as the response payload.
-    pub fn new(graph: &Graph, planner: &dyn OffsetPlanner, strategy: &'static str, seed: u64) -> Result<Self> {
-        let exec = Executor::new(graph, planner, seed).map_err(anyhow::Error::msg)?;
+    /// Plan `graph` under `strategy` (any registry key or display name)
+    /// through `service` and wrap the executor. Uses the first graph output
+    /// as the response payload.
+    pub fn new(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        strategy: &str,
+        seed: u64,
+    ) -> Result<Self> {
+        let key = registry::offset_key(strategy)
+            .ok_or_else(|| anyhow::anyhow!("unknown offset strategy '{strategy}'"))?;
+        if graph.inputs.len() != 1 || graph.outputs.is_empty() {
+            anyhow::bail!(
+                "ExecutorEngine serves single-input graphs with at least one output; \
+                 '{}' has {} inputs / {} outputs",
+                graph.name,
+                graph.inputs.len(),
+                graph.outputs.len()
+            );
+        }
+        let exec = Executor::with_service(graph, Arc::clone(&service), key, seed)
+            .map_err(anyhow::Error::msg)?;
         let in_elems = graph.tensor(graph.inputs[0]).num_elements();
         let out_elems = graph.tensor(graph.outputs[0]).num_elements();
         Ok(ExecutorEngine {
             exec,
             in_elems,
             out_elems,
-            strategy,
-            max_batch: 8,
+            strategy: key,
+            service,
+            max_batch: DEFAULT_EXECUTOR_MAX_BATCH,
         })
+    }
+
+    /// Cap the batches the batcher may form (default
+    /// [`DEFAULT_EXECUTOR_MAX_BATCH`]); clamped to at least 1.
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch.max(1);
+        self
     }
 }
 
@@ -116,20 +156,15 @@ impl Engine for ExecutorEngine {
         self.max_batch
     }
     fn run_batch(&mut self, input: &[f32], n: usize) -> Result<Vec<f32>> {
-        let mut out = Vec::with_capacity(n * self.out_elems);
-        for i in 0..n {
-            let sample = &input[i * self.in_elems..(i + 1) * self.in_elems];
-            let mut res = self.exec.run(&[sample]);
-            out.append(&mut res[0]);
-        }
-        Ok(out)
+        self.exec.run_batch(input, n).map_err(anyhow::Error::msg)
     }
     fn arena_stats(&self) -> ArenaStats {
-        ArenaStats {
-            planned_bytes: self.exec.arena_bytes(),
-            naive_bytes: self.exec.naive_bytes(),
-            strategy: self.strategy,
-        }
+        ArenaStats::from_service(
+            self.exec.arena_bytes(),
+            self.exec.naive_bytes(),
+            self.strategy,
+            self.service.stats(),
+        )
     }
 }
 
@@ -166,7 +201,6 @@ impl Engine for EchoEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::planner::offset::GreedyBySize;
 
     #[test]
     fn echo_engine_scales() {
@@ -179,12 +213,36 @@ mod tests {
     #[test]
     fn executor_engine_runs_blazeface() {
         let g = crate::models::blazeface();
-        let mut e = ExecutorEngine::new(&g, &GreedyBySize, "Greedy by Size", 3).unwrap();
+        let svc = PlanService::shared();
+        let mut e = ExecutorEngine::new(&g, svc, "Greedy by Size", 3)
+            .unwrap()
+            .with_max_batch(4);
+        assert_eq!(e.max_batch(), 4);
         let x = vec![0.1f32; 2 * e.in_elems()];
         let out = e.run_batch(&x, 2).unwrap();
         assert_eq!(out.len(), 2 * e.out_elems());
         // identical samples give identical outputs
         assert_eq!(out[..e.out_elems()], out[e.out_elems()..]);
         assert!(e.arena_stats().reduction() > 2.0);
+    }
+
+    #[test]
+    fn two_engines_same_batch_plan_once() {
+        // The acceptance check behind the PlanService refactor: a second
+        // engine for the same (model, batch, strategy) must not invoke the
+        // planner again.
+        let svc = PlanService::shared();
+        let g = crate::models::blazeface();
+        let _a = ExecutorEngine::new(&g, Arc::clone(&svc), "greedy-size", 1).unwrap();
+        let _b = ExecutorEngine::new(&g, Arc::clone(&svc), "greedy-size", 2).unwrap();
+        let st = svc.stats();
+        assert_eq!(st.cache_misses, 1, "second engine re-ran the planner");
+        assert_eq!(st.cache_hits, 1);
+    }
+
+    #[test]
+    fn unknown_strategy_rejected_at_construction() {
+        let g = crate::models::blazeface();
+        assert!(ExecutorEngine::new(&g, PlanService::shared(), "belady", 1).is_err());
     }
 }

@@ -1,8 +1,28 @@
 //! Serving metrics: latency percentiles, batch-size distribution,
-//! throughput.
+//! throughput, and the planner's memory accounting line.
 
+use super::ArenaStats;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// One-line serving-visible rendering of a model's [`ArenaStats`]: arena
+/// footprint vs naive, plan-cache hit rate, arena-pool reuse. The `serve`
+/// CLI and `benches/serving.rs` both print through this so their output
+/// agrees.
+pub fn render_arena_stats(s: &ArenaStats) -> String {
+    format!(
+        "arena {:.1} KiB planned vs {:.1} KiB naive ({:.1}x, {}) | plan cache {} hit / {} miss ({:.0}% hit) | arena pool {} reused / {} allocated",
+        s.planned_bytes as f64 / 1024.0,
+        s.naive_bytes as f64 / 1024.0,
+        s.reduction(),
+        s.strategy,
+        s.cache_hits,
+        s.cache_misses,
+        s.cache_hit_rate() * 100.0,
+        s.pool_reused,
+        s.pool_allocated,
+    )
+}
 
 /// Thread-safe metrics sink shared between the worker and observers.
 #[derive(Default)]
@@ -102,6 +122,24 @@ mod tests {
         assert_eq!(s.p95_us, 95);
         assert_eq!(s.mean_queue_us, 10);
         assert_eq!(s.mean_batch, 4.0);
+    }
+
+    #[test]
+    fn arena_stats_render_includes_counters() {
+        let s = ArenaStats {
+            planned_bytes: 10 * 1024,
+            naive_bytes: 75 * 1024,
+            strategy: "greedy-size".into(),
+            cache_hits: 3,
+            cache_misses: 1,
+            pool_reused: 2,
+            pool_allocated: 2,
+        };
+        let line = render_arena_stats(&s);
+        assert!(line.contains("7.5x"), "{line}");
+        assert!(line.contains("3 hit / 1 miss"), "{line}");
+        assert!(line.contains("75% hit"), "{line}");
+        assert!(line.contains("2 reused / 2 allocated"), "{line}");
     }
 
     #[test]

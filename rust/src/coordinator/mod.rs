@@ -25,12 +25,16 @@ pub mod router;
 
 pub use batcher::{BatchPolicy, ModelServer};
 pub use engine::{EchoEngine, Engine, ExecutorEngine};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{render_arena_stats, Metrics, MetricsSnapshot};
 pub use router::Router;
 
 use std::time::Instant;
 
-/// Planner-derived memory accounting for a served model.
+/// Planner-derived memory accounting for a served model, including the
+/// plan-cache and arena-pool reuse counters of the [`PlanService`] behind
+/// the engine (the serving-visible version of Tables 1–2).
+///
+/// [`PlanService`]: crate::planner::PlanService
 #[derive(Debug, Clone, Default)]
 pub struct ArenaStats {
     /// Arena bytes under the configured strategy.
@@ -38,16 +42,56 @@ pub struct ArenaStats {
     /// Bytes the Naive plan would need.
     pub naive_bytes: usize,
     /// Strategy name.
-    pub strategy: &'static str,
+    pub strategy: String,
+    /// Plan-cache hits (planner invocations avoided).
+    pub cache_hits: u64,
+    /// Plan-cache misses (planner invocations).
+    pub cache_misses: u64,
+    /// Arena buffers recycled from the pool.
+    pub pool_reused: u64,
+    /// Arena buffers freshly allocated.
+    pub pool_allocated: u64,
 }
 
 impl ArenaStats {
+    /// Accounting line for a served model: footprint numbers plus the
+    /// shared [`PlanService`]'s reuse counters — the one way counters flow
+    /// from the planner layer into serving stats.
+    ///
+    /// [`PlanService`]: crate::planner::PlanService
+    pub fn from_service(
+        planned_bytes: usize,
+        naive_bytes: usize,
+        strategy: impl Into<String>,
+        service: crate::planner::PlanServiceStats,
+    ) -> Self {
+        ArenaStats {
+            planned_bytes,
+            naive_bytes,
+            strategy: strategy.into(),
+            cache_hits: service.cache_hits,
+            cache_misses: service.cache_misses,
+            pool_reused: service.pool_reused,
+            pool_allocated: service.pool_allocated,
+        }
+    }
+
     /// Naive / planned — the paper's headline ratio.
     pub fn reduction(&self) -> f64 {
         if self.planned_bytes == 0 {
             1.0
         } else {
             self.naive_bytes as f64 / self.planned_bytes as f64
+        }
+    }
+
+    /// Plan-cache hits / lookups, or 0.0 before the first lookup.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
         }
     }
 }
@@ -71,8 +115,16 @@ mod tests {
 
     #[test]
     fn arena_stats_reduction() {
-        let s = ArenaStats { planned_bytes: 10, naive_bytes: 75, strategy: "x" };
+        let s = ArenaStats {
+            planned_bytes: 10,
+            naive_bytes: 75,
+            strategy: "x".into(),
+            ..ArenaStats::default()
+        };
         assert!((s.reduction() - 7.5).abs() < 1e-12);
         assert_eq!(ArenaStats::default().reduction(), 1.0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        let t = ArenaStats { cache_hits: 3, cache_misses: 1, ..ArenaStats::default() };
+        assert!((t.cache_hit_rate() - 0.75).abs() < 1e-12);
     }
 }

@@ -82,4 +82,38 @@ mod tests {
         let resp = r.submit("ghost", vec![1.0]).recv().unwrap();
         assert!(resp.unwrap_err().contains("unknown model"));
     }
+
+    #[test]
+    fn serving_same_model_twice_plans_once() {
+        // Acceptance: two served replicas of one model at the same batch
+        // size share a single planner invocation through the PlanService.
+        use crate::coordinator::engine::ExecutorEngine;
+        use crate::planner::PlanService;
+        use std::sync::Arc;
+
+        let svc = PlanService::shared();
+        let mut r = Router::new();
+        for name in ["blaze-a", "blaze-b"] {
+            let svc = Arc::clone(&svc);
+            r.register(
+                name,
+                move || {
+                    let g = crate::models::blazeface();
+                    Box::new(ExecutorEngine::new(&g, svc, "greedy-size", 7).expect("engine"))
+                },
+                BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_micros(10) },
+            );
+        }
+        let in_elems = crate::models::blazeface()
+            .tensor(crate::models::blazeface().inputs[0])
+            .num_elements();
+        let x = vec![0.1f32; in_elems];
+        let a = r.submit("blaze-a", x.clone()).recv().unwrap().unwrap();
+        let b = r.submit("blaze-b", x).recv().unwrap().unwrap();
+        assert_eq!(a, b, "replicas disagree");
+        let st = svc.stats();
+        assert_eq!(st.cache_misses, 1, "replica re-ran the planner");
+        assert_eq!(st.cache_hits, 1);
+        r.shutdown();
+    }
 }

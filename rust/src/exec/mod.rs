@@ -16,12 +16,13 @@
 pub mod cachesim;
 pub mod ops;
 
-use crate::arena::Arena;
+use crate::arena::{Arena, ArenaPool};
 use crate::graph::{Graph, OpKind, PoolKind, TensorKind};
-use crate::planner::{OffsetPlan, OffsetPlanner, PlanError};
+use crate::planner::{registry, OffsetPlan, OffsetPlanner, PlanError, PlanService};
 use crate::records::UsageRecords;
 use crate::rng::SplitMix64;
 use ops::Geom;
+use std::sync::Arc;
 
 /// Where a tensor's storage lives at run time.
 #[derive(Debug, Clone, Copy)]
@@ -74,6 +75,18 @@ pub struct Executor {
     plan_total: usize,
     naive_total: usize,
     poison_dead: bool,
+    /// Batch-1 records, kept for batch-scaled re-planning.
+    base_records: UsageRecords,
+    /// Registry name of the planning strategy (None for explicit plans —
+    /// such executors cannot change batch size).
+    strategy: Option<String>,
+    /// Shared plan cache, when constructed through one.
+    service: Option<Arc<PlanService>>,
+    /// Arena buffer pool (the service's, or a private one).
+    pool: Arc<ArenaPool>,
+    /// Current batch: the arena is planned for `base_records.scaled(batch)`
+    /// and striped into `batch` lanes.
+    batch: usize,
 }
 
 impl Executor {
@@ -83,16 +96,78 @@ impl Executor {
         let records = UsageRecords::from_graph(graph);
         let plan = planner.plan(&records);
         plan.validate(&records).map_err(|e| e.to_string())?;
-        Self::with_plan(graph, &records, &plan, seed).map_err(|e| e.to_string())
+        Self::build(
+            graph,
+            records,
+            &plan,
+            seed,
+            Some(planner.name().to_string()),
+            None,
+            Arc::new(ArenaPool::new()),
+        )
+        .map_err(|e| e.to_string())
     }
 
-    /// Build with an explicit (already validated) plan.
+    /// Plan `graph` through a shared [`PlanService`]: the plan comes from
+    /// the service's cache (one planner invocation per `(model, batch,
+    /// strategy)` across every executor sharing the handle) and the arena
+    /// buffer from its pool. `strategy` is any registry key or display
+    /// name.
+    pub fn with_service(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        strategy: &str,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let key = registry::offset_key(strategy)
+            .ok_or_else(|| format!("unknown offset strategy '{strategy}'"))?;
+        let records = UsageRecords::from_graph(graph);
+        let plan = service
+            .plan_records(&records, 1, Some(key))
+            .map_err(|e| e.to_string())?;
+        let pool = Arc::clone(service.pool());
+        Self::build(
+            graph,
+            records,
+            &plan,
+            seed,
+            Some(key.to_string()),
+            Some(service),
+            pool,
+        )
+        .map_err(|e| e.to_string())
+    }
+
+    /// Build with an explicit (already validated) plan. Such executors are
+    /// pinned to batch 1: without a registry strategy there is nothing to
+    /// re-plan batch-scaled records with.
     pub fn with_plan(
         graph: &Graph,
         records: &UsageRecords,
         plan: &OffsetPlan,
         seed: u64,
     ) -> Result<Self, PlanError> {
+        Self::build(
+            graph,
+            records.clone(),
+            plan,
+            seed,
+            None,
+            None,
+            Arc::new(ArenaPool::new()),
+        )
+    }
+
+    fn build(
+        graph: &Graph,
+        base_records: UsageRecords,
+        plan: &OffsetPlan,
+        seed: u64,
+        strategy: Option<String>,
+        service: Option<Arc<PlanService>>,
+        pool: Arc<ArenaPool>,
+    ) -> Result<Self, PlanError> {
+        let records = &base_records;
         plan.validate(records)?;
         // tensor id -> record id
         let mut rec_of = vec![None; graph.tensors.len()];
@@ -226,27 +301,39 @@ impl Executor {
             })
             .collect();
 
+        let arena = Arena::from_pool(plan, records, 1, &pool);
+        let naive_total = records.naive_total();
         Ok(Executor {
             steps,
-            arena: Arena::new(plan, records),
+            arena,
             weights,
             io,
             input_io,
             output_io,
             plan_total: plan.total,
-            naive_total: records.naive_total(),
+            naive_total,
             poison_dead: false,
+            base_records,
+            strategy,
+            service,
+            pool,
+            batch: 1,
         })
     }
 
-    /// Arena footprint in bytes.
+    /// Arena footprint in bytes (of the current batch's plan).
     pub fn arena_bytes(&self) -> usize {
         self.plan_total
     }
 
-    /// What the Naive plan would have used.
+    /// What the Naive plan would have used at the current batch.
     pub fn naive_bytes(&self) -> usize {
         self.naive_total
+    }
+
+    /// Batch size the resident arena is planned for.
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 
     /// Enable poisoning of dead tensors: any read-after-free becomes NaN.
@@ -257,12 +344,97 @@ impl Executor {
     /// Run one inference. `inputs` in graph-input order; returns outputs in
     /// graph-output order.
     pub fn run(&mut self, inputs: &[&[f32]]) -> Vec<Vec<f32>> {
+        self.run_lane(inputs, 0)
+    }
+
+    /// Re-plan for `batch` (through the service cache when available) and
+    /// swap the resident arena through the pool. No-op when the batch is
+    /// already resident.
+    pub fn ensure_batch(&mut self, batch: usize) -> Result<(), String> {
+        if batch == 0 {
+            return Err("batch must be positive".into());
+        }
+        if batch == self.batch {
+            return Ok(());
+        }
+        let scaled = self.base_records.scaled(batch);
+        let plan: Arc<OffsetPlan> = match (&self.service, &self.strategy) {
+            (Some(svc), _) => svc
+                .plan_records(&self.base_records, batch, self.strategy.as_deref())
+                .map_err(|e| e.to_string())?,
+            (None, Some(name)) => {
+                let planner = registry::offset_strategy(name)
+                    .ok_or_else(|| format!("unknown offset strategy '{name}'"))?;
+                let p = planner.plan(&scaled);
+                p.validate(&scaled).map_err(|e| e.to_string())?;
+                Arc::new(p)
+            }
+            (None, None) => {
+                return Err(
+                    "executor was built with an explicit plan; it cannot re-plan for a new batch"
+                        .into(),
+                )
+            }
+        };
+        // Retire the old arena first so its buffer is available for the new
+        // one when the size classes match.
+        let old = std::mem::replace(&mut self.arena, Arena::empty());
+        old.recycle(&self.pool);
+        self.arena = Arena::from_pool(&plan, &scaled, batch, &self.pool);
+        self.plan_total = plan.total;
+        self.naive_total = scaled.naive_total();
+        self.batch = batch;
+        Ok(())
+    }
+
+    /// Run a whole batch against one resident arena: the batch-scaled
+    /// records are planned once (cached across executors when a
+    /// [`PlanService`] is attached) and each sample executes in its own
+    /// arena lane. The resident arena only ever *grows* — serving `n`
+    /// smaller than the largest batch seen runs in the first `n` lanes, so
+    /// fluctuating batch sizes cost no re-planning, no arena swap, and no
+    /// buffer zeroing on the hot path. `input` holds `n` concatenated
+    /// samples of the (single) graph input; returns the `n` concatenated
+    /// first graph outputs — the serving payload.
+    pub fn run_batch(&mut self, input: &[f32], n: usize) -> Result<Vec<f32>, String> {
+        if n == 0 {
+            return Err("batch must be positive".into());
+        }
+        if self.input_io.len() != 1 {
+            return Err(format!(
+                "run_batch supports single-input graphs; this graph has {} inputs",
+                self.input_io.len()
+            ));
+        }
+        let in_elems = self.io[self.input_io[0]].len();
+        let out_elems = self.io[self.output_io[0]].len();
+        if input.len() != n * in_elems {
+            return Err(format!(
+                "batch input has {} elems, expected {n} x {in_elems}",
+                input.len()
+            ));
+        }
+        if n > self.batch {
+            self.ensure_batch(n)?;
+        }
+        let mut out = Vec::with_capacity(n * out_elems);
+        for i in 0..n {
+            let sample = &input[i * in_elems..(i + 1) * in_elems];
+            let res = self.run_lane(&[sample], i);
+            out.extend_from_slice(&res[0]);
+        }
+        Ok(out)
+    }
+
+    /// Run one sample in arena lane `lane` (see [`Arena::split_io_lane`]).
+    fn run_lane(&mut self, inputs: &[&[f32]], lane: usize) -> Vec<Vec<f32>> {
+        debug_assert!(lane < self.batch);
         assert_eq!(inputs.len(), self.input_io.len(), "wrong input count");
         for (&ioi, data) in self.input_io.iter().zip(inputs.iter()) {
             self.io[ioi].copy_from_slice(data);
         }
         for si in 0..self.steps.len() {
-            self.exec_step(si);
+            self.exec_step(si, lane);
         }
         self.output_io
             .iter()
@@ -270,7 +442,7 @@ impl Executor {
             .collect()
     }
 
-    fn exec_step(&mut self, si: usize) {
+    fn exec_step(&mut self, si: usize, lane: usize) {
         // Split borrows: steps are read-only during execution.
         let step = &self.steps[si];
         let poison = self.poison_dead;
@@ -287,7 +459,7 @@ impl Executor {
                         _ => None,
                     })
                     .collect();
-                let (out, arena_slices) = self.arena.split_io(orec, &arena_in);
+                let (out, arena_slices) = self.arena.split_io_lane(orec, &arena_in, lane);
                 let mut it = arena_slices.into_iter();
                 let ins: Vec<&[f32]> = step
                     .ins
@@ -307,7 +479,7 @@ impl Executor {
                         .ins
                         .iter()
                         .map(|l| match l {
-                            Loc::Arena(r) => self.arena.tensor(*r),
+                            Loc::Arena(r) => self.arena.tensor_lane(*r, lane),
                             Loc::Io(i) => self.io[*i].as_slice(),
                             Loc::Weight(w) => self.weights[*w].as_slice(),
                         })
@@ -322,10 +494,19 @@ impl Executor {
         if poison {
             let dies = self.steps[si].dies.clone();
             for r in dies {
-                self.arena.poison(r);
+                self.arena.poison_lane(r, lane);
             }
         }
         debug_assert!(self.arena.guards_intact(), "arena guard overwritten");
+    }
+}
+
+impl Drop for Executor {
+    /// Return the arena buffer to the pool, so a replaced or restarted
+    /// executor (engine churn in the coordinator) hands its memory to the
+    /// next one instead of the allocator.
+    fn drop(&mut self) {
+        std::mem::replace(&mut self.arena, Arena::empty()).recycle(&self.pool);
     }
 }
 
@@ -463,5 +644,95 @@ mod tests {
         assert_eq!(out.len(), 2);
         assert!(out[0].iter().all(|v| v.is_finite()));
         assert!(ex.arena_bytes() * 2 < ex.naive_bytes());
+    }
+
+    #[test]
+    fn run_batch_matches_per_sample_runs() {
+        let g = tiny_net();
+        let n_in = g.tensor(g.inputs[0]).num_elements();
+        let n = 3usize;
+        let mut rng = SplitMix64::new(21);
+        let mut flat = vec![0f32; n * n_in];
+        rng.fill_f32(&mut flat, 1.0);
+
+        let mut single = Executor::new(&g, &GreedyBySize, 7).unwrap();
+        let mut batched = Executor::new(&g, &GreedyBySize, 7).unwrap();
+        batched.set_poison_dead(true);
+        let out = batched.run_batch(&flat, n).unwrap();
+        assert_eq!(batched.batch(), n);
+        let out_elems = out.len() / n;
+        for i in 0..n {
+            let expect = single.run(&[&flat[i * n_in..(i + 1) * n_in]]);
+            assert_eq!(
+                out[i * out_elems..(i + 1) * out_elems],
+                expect[0][..],
+                "sample {i} diverged in the batched arena"
+            );
+        }
+        // The batched arena is one block planned for the scaled records.
+        assert!(batched.arena_bytes() >= single.arena_bytes());
+    }
+
+    #[test]
+    fn run_batch_grows_but_never_shrinks_the_resident_arena() {
+        let g = tiny_net();
+        let n_in = g.tensor(g.inputs[0]).num_elements();
+        let svc = PlanService::shared();
+        let mut ex = Executor::with_service(&g, Arc::clone(&svc), "greedy-size", 7).unwrap();
+        let x = vec![0.25f32; 4 * n_in];
+        ex.run_batch(&x[..2 * n_in], 2).unwrap();
+        let grown = ex.arena_bytes();
+        // A smaller batch runs in the first lane of the resident arena:
+        // no re-plan, no swap.
+        ex.run_batch(&x[..n_in], 1).unwrap();
+        assert_eq!(ex.batch(), 2);
+        assert_eq!(ex.arena_bytes(), grown);
+        ex.run_batch(&x[..2 * n_in], 2).unwrap();
+        let st = svc.stats();
+        // Construction planned batch 1, the growth planned batch 2; the
+        // fluctuating batch sizes afterwards planned nothing.
+        assert_eq!(st.cache_misses, 2, "planner ran more than once per batch");
+    }
+
+    #[test]
+    fn explicit_batch_swaps_recycle_arena_buffers() {
+        let g = tiny_net();
+        let svc = PlanService::shared();
+        let mut ex = Executor::with_service(&g, Arc::clone(&svc), "greedy-size", 7).unwrap();
+        ex.ensure_batch(2).unwrap();
+        ex.ensure_batch(1).unwrap();
+        ex.ensure_batch(2).unwrap();
+        let st = svc.stats();
+        // Batches 1 and 2 were each planned exactly once; the swaps back
+        // hit the cache and reused pooled buffers.
+        assert_eq!(st.cache_misses, 2, "planner ran more than once per batch");
+        assert!(st.cache_hits >= 2);
+        assert!(st.pool_reused >= 2, "arena pool never reused a buffer");
+    }
+
+    #[test]
+    fn dropping_an_executor_returns_its_arena_to_the_pool() {
+        let g = tiny_net();
+        let svc = PlanService::shared();
+        let a = Executor::with_service(&g, Arc::clone(&svc), "greedy-size", 7).unwrap();
+        let bytes = a.arena_bytes();
+        drop(a);
+        // A restarted replica of the same model reuses the retired buffer.
+        let b = Executor::with_service(&g, Arc::clone(&svc), "greedy-size", 8).unwrap();
+        assert_eq!(b.arena_bytes(), bytes);
+        let st = svc.stats();
+        assert_eq!(st.cache_misses, 1);
+        assert_eq!(st.cache_hits, 1);
+        assert!(st.pool_reused >= 1, "restart did not reuse the retired arena");
+    }
+
+    #[test]
+    fn explicit_plan_executor_cannot_change_batch() {
+        let g = tiny_net();
+        let records = UsageRecords::from_graph(&g);
+        let plan = GreedyBySize.plan(&records);
+        let mut ex = Executor::with_plan(&g, &records, &plan, 7).unwrap();
+        assert!(ex.ensure_batch(2).is_err());
+        assert!(ex.ensure_batch(1).is_ok()); // resident batch is fine
     }
 }

@@ -34,6 +34,27 @@
 //! let shared = shared::GreedyBySizeImproved::default().plan(&records);
 //! assert!(shared.validate(&records).is_ok());
 //! ```
+//!
+//! For serving, go through the [`planner::PlanService`] instead of a
+//! planner directly: plans are cached per `(model, batch, strategy)`,
+//! arena buffers are recycled through a pool, and strategies are addressed
+//! by their [`planner::registry`] names:
+//!
+//! ```no_run
+//! use tensorarena::models;
+//! use tensorarena::planner::PlanService;
+//! use tensorarena::records::UsageRecords;
+//!
+//! let service = PlanService::shared();
+//! let records = UsageRecords::from_graph(&models::mobilenet_v1());
+//! // Plan batch 8 once; every executor sharing the handle reuses it.
+//! let plan = service.plan_records(&records, 8, None).unwrap();
+//! println!("batch-8 arena: {} bytes", plan.total_size());
+//! // Largest batch whose *planned* footprint fits a 64 MiB budget.
+//! let max = service.max_servable_batch(&records, 64 << 20, None).unwrap();
+//! println!("max servable batch in 64 MiB: {max}");
+//! println!("{:?}", service.stats());
+//! ```
 
 pub mod arena;
 pub mod coordinator;
@@ -44,6 +65,9 @@ pub mod planner;
 pub mod records;
 pub mod report;
 pub mod rng;
+/// PJRT runtime (needs the vendored `xla` crate; enable the `pjrt`
+/// feature).
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 
 /// Byte alignment applied to every tensor buffer, matching TFLite's default

@@ -8,19 +8,24 @@
 //! tensorarena table1                                # Table 1 (Shared Objects)
 //! tensorarena table2 [--ratios]                     # Table 2 (Offset Calculation)
 //! tensorarena cachesim <model> [kib]                # §1 locality claim
-//! tensorarena serve [--artifacts DIR] [--requests N] [--batch B]   # E2E serving
+//! tensorarena serve [--model M] [--strategy S] [--requests N]
+//!                   [--max-batch B] [--wait-ms W] [--artifacts DIR]  # E2E serving
 //! tensorarena models                                # list zoo models
 //! ```
 //!
+//! Strategy names come from `planner::registry` — the single list the
+//! tables, the plan cache, and this CLI all share.
+//!
 //! (Hand-rolled argument parsing: the offline registry has no clap.)
 
-use tensorarena::coordinator::{ArenaStats, BatchPolicy, Router};
+use tensorarena::coordinator::{self, ArenaStats, BatchPolicy, Router};
 use tensorarena::exec::cachesim;
 use tensorarena::models;
-use tensorarena::planner::{offset, shared, OffsetPlanner, SharedObjectPlanner};
+use tensorarena::planner::{offset, registry, OffsetPlanner, PlanService, SharedObjectPlanner};
 use tensorarena::records::UsageRecords;
 use tensorarena::report::{self, MIB};
 use tensorarena::rng::SplitMix64;
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -108,17 +113,12 @@ fn cmd_plan(args: &[String]) -> i32 {
     let p = recs.profiles();
     match approach {
         "shared" => {
-            let planner: Box<dyn SharedObjectPlanner> = match strategy {
-                "greedy-size" => Box::new(shared::GreedyBySize),
-                "greedy-size-improved" => Box::new(shared::GreedyBySizeImproved),
-                "greedy-breadth" => Box::new(shared::GreedyByBreadth),
-                "tflite-greedy" => Box::new(shared::TfLiteGreedy),
-                "mincost-flow" => Box::new(shared::MinCostFlow),
-                "naive" => Box::new(shared::NaiveShared),
-                _ => {
-                    eprintln!("unknown shared strategy '{strategy}'");
-                    return 2;
-                }
+            let Some(planner) = registry::shared_strategy(strategy) else {
+                eprintln!(
+                    "unknown shared strategy '{strategy}' (known: {})",
+                    registry::SHARED_KEYS.join(", ")
+                );
+                return 2;
             };
             let plan = planner.plan(&recs);
             if let Err(e) = plan.validate(&recs) {
@@ -144,16 +144,12 @@ fn cmd_plan(args: &[String]) -> i32 {
             }
         }
         "offset" => {
-            let planner: Box<dyn OffsetPlanner> = match strategy {
-                "greedy-size" => Box::new(offset::GreedyBySize),
-                "greedy-breadth" => Box::new(offset::GreedyByBreadth),
-                "tflite-greedy" => Box::new(offset::TfLiteGreedy),
-                "strip-packing" => Box::new(offset::StripPackingBestFit),
-                "naive" => Box::new(offset::NaiveOffset),
-                _ => {
-                    eprintln!("unknown offset strategy '{strategy}'");
-                    return 2;
-                }
+            let Some(planner) = registry::offset_strategy(strategy) else {
+                eprintln!(
+                    "unknown offset strategy '{strategy}' (known: {})",
+                    registry::OFFSET_KEYS.join(", ")
+                );
+                return 2;
             };
             let plan = planner.plan(&recs);
             if let Err(e) = plan.validate(&recs) {
@@ -240,28 +236,43 @@ fn cmd_cachesim(args: &[String]) -> i32 {
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
-    // Parse --artifacts DIR --requests N --batch B --wait-ms W
+    // Parse --artifacts DIR --requests N --max-batch B --wait-ms W
+    // --model M --strategy S. With PJRT artifacts (and the `pjrt` feature)
+    // the AOT path runs; otherwise the pure-Rust ExecutorEngine path
+    // serves `--model` through a shared PlanService.
     let mut dir = "artifacts".to_string();
+    let mut dir_given = false;
     let mut requests = 256usize;
     let mut max_batch = 8usize;
     let mut wait_ms = 2u64;
+    let mut model = "blazeface".to_string();
+    let mut strategy = PlanService::DEFAULT_STRATEGY.to_string();
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--artifacts" => {
                 dir = args.get(i + 1).cloned().unwrap_or(dir);
+                dir_given = true;
                 i += 2;
             }
             "--requests" => {
                 requests = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(requests);
                 i += 2;
             }
-            "--batch" => {
+            "--batch" | "--max-batch" => {
                 max_batch = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(max_batch);
                 i += 2;
             }
             "--wait-ms" => {
                 wait_ms = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(wait_ms);
+                i += 2;
+            }
+            "--model" => {
+                model = args.get(i + 1).cloned().unwrap_or(model);
+                i += 2;
+            }
+            "--strategy" => {
+                strategy = args.get(i + 1).cloned().unwrap_or(strategy);
                 i += 2;
             }
             other => {
@@ -270,17 +281,139 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         }
     }
-    match serve_bench(&dir, requests, max_batch, wait_ms) {
+    #[cfg(feature = "pjrt")]
+    {
+        if tensorarena::runtime::Runtime::discover_variants(std::path::Path::new(&dir), "model")
+            .is_ok()
+        {
+            return match serve_bench(&dir, requests, max_batch, wait_ms) {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("serve failed: {e:#}");
+                    1
+                }
+            };
+        }
+        eprintln!("no artifacts in {dir}; serving the pure-Rust executor path");
+    }
+    if dir_given && !cfg!(feature = "pjrt") {
+        eprintln!(
+            "--artifacts {dir} ignored: this build has no PJRT runtime (enable the `pjrt` \
+             feature); serving the pure-Rust executor path"
+        );
+    }
+    match serve_pure(&model, &strategy, requests, max_batch, wait_ms) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("serve failed: {e:#}");
+            eprintln!("serve failed: {e}");
             1
         }
     }
 }
 
+/// Artifact-free serving: the arena [`tensorarena::exec::Executor`] behind
+/// the coordinator, planned through one shared [`PlanService`] whose
+/// cache-hit and pool-reuse counters are reported next to the latency
+/// numbers.
+fn serve_pure(
+    model: &str,
+    strategy: &str,
+    requests: usize,
+    max_batch: usize,
+    wait_ms: u64,
+) -> Result<(), String> {
+    use tensorarena::coordinator::engine::ExecutorEngine;
+
+    let Some(g) = load_model(model) else {
+        return Err(format!("unknown model '{model}'"));
+    };
+    let service = PlanService::shared();
+    let recs = UsageRecords::from_graph(&g);
+    let plan = service
+        .plan_records(&recs, 1, Some(strategy))
+        .map_err(|e| e.to_string())?;
+    println!(
+        "{model} arena: {:.1} KiB planned vs {:.1} KiB naive ({:.1}x)",
+        plan.total_size() as f64 / 1024.0,
+        recs.naive_total() as f64 / 1024.0,
+        recs.naive_total() as f64 / plan.total_size().max(1) as f64,
+    );
+    let in_elems = g.tensor(g.inputs[0]).num_elements();
+
+    let mut router = Router::new();
+    {
+        let service = Arc::clone(&service);
+        let model_name = model.to_string();
+        let strategy = strategy.to_string();
+        router.register(
+            model,
+            move || {
+                let g = models::by_name(&model_name).expect("model exists");
+                Box::new(
+                    ExecutorEngine::new(&g, service, &strategy, 42)
+                        .expect("engine")
+                        .with_max_batch(max_batch),
+                )
+            },
+            BatchPolicy {
+                max_batch,
+                max_wait: std::time::Duration::from_millis(wait_ms),
+            },
+        );
+    }
+
+    let mut rng = SplitMix64::new(42);
+    let mut input = vec![0f32; in_elems];
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        rng.fill_f32(&mut input, 1.0);
+        pending.push(router.submit(model, input.clone()));
+    }
+    let mut ok = 0;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(e)) => eprintln!("request error: {e}"),
+            Err(_) => eprintln!("worker died"),
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = router.server(model).unwrap().metrics().snapshot();
+    println!(
+        "{ok}/{requests} ok in {:.3}s -> {:.1} req/s | p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | mean batch {:.2}, mean queue {:.2} ms",
+        wall.as_secs_f64(),
+        ok as f64 / wall.as_secs_f64(),
+        snap.p50_us as f64 / 1000.0,
+        snap.p95_us as f64 / 1000.0,
+        snap.p99_us as f64 / 1000.0,
+        snap.mean_batch,
+        snap.mean_queue_us as f64 / 1000.0,
+    );
+    router.shutdown();
+    let st = service.stats();
+    // Report the arena at the engine's batch cap — what the serving box
+    // actually hosts — not the batch-1 plan.
+    let plan_max = service
+        .plan_records(&recs, max_batch.max(1), Some(strategy))
+        .map_err(|e| e.to_string())?;
+    let stats = ArenaStats::from_service(
+        plan_max.total_size(),
+        recs.naive_total() * max_batch.max(1),
+        registry::offset_key(strategy).unwrap_or("?"),
+        st,
+    );
+    println!(
+        "at max batch {}: {}",
+        max_batch.max(1),
+        coordinator::render_arena_stats(&stats)
+    );
+    Ok(())
+}
+
 /// Load the AOT artifacts, spin up the coordinator, fire a closed-loop
 /// request storm, report latency/throughput and the planner's arena story.
+#[cfg(feature = "pjrt")]
 fn serve_bench(dir: &str, requests: usize, max_batch: usize, wait_ms: u64) -> anyhow::Result<()> {
     use tensorarena::coordinator::engine::PjrtEngine;
     use tensorarena::runtime::{Runtime, VariantSet};
@@ -305,7 +438,8 @@ fn serve_bench(dir: &str, requests: usize, max_batch: usize, wait_ms: u64) -> an
     let stats = ArenaStats {
         planned_bytes: plan.total_size(),
         naive_bytes: recs.naive_total(),
-        strategy: "Greedy by Size",
+        strategy: "Greedy by Size".into(),
+        ..ArenaStats::default()
     };
     println!(
         "L2 twin arena: {:.1} KiB planned vs {:.1} KiB naive ({:.1}x)",

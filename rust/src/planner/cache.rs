@@ -1,0 +1,308 @@
+//! Batch-aware plan cache: plan once per `(graph, batch, strategy)`, reuse
+//! forever.
+//!
+//! The paper's arena is planned once and cheaply reused for every inference
+//! (§5); serving multiplies that by batch-size variants and engine
+//! replicas. The cache keys plans by the FNV-1a fingerprint of the usage
+//! records (the planner's entire input), the batch the records are scaled
+//! to, and the registry strategy key, so two executors serving the same
+//! model at the same batch share one `Arc<OffsetPlan>` and the planner runs
+//! exactly once.
+//!
+//! Plans can be spilled to / loaded from the [`super::serialize`] text
+//! format (compute offline, ship with the model), and
+//! [`PlanCache::max_servable_batch`] answers the serving-era question the
+//! follow-up work (FlashMem, MAFAT) poses: what is the largest batch whose
+//! *planned* footprint fits a byte budget?
+
+use super::serialize::{self, LoadError};
+use super::{registry, OffsetPlan, PlanError};
+use crate::records::UsageRecords;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Errors from the plan cache / plan service.
+#[derive(Debug)]
+pub enum PlanServiceError {
+    /// The strategy name is not in the registry.
+    UnknownStrategy(String),
+    /// The strategy produced an infeasible plan (a planner bug).
+    Infeasible(PlanError),
+    /// A spilled plan failed to load.
+    Load(LoadError),
+}
+
+impl std::fmt::Display for PlanServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanServiceError::UnknownStrategy(s) => {
+                write!(
+                    f,
+                    "unknown offset strategy '{s}' (known: {})",
+                    registry::OFFSET_KEYS.join(", ")
+                )
+            }
+            PlanServiceError::Infeasible(e) => write!(f, "strategy produced infeasible plan: {e}"),
+            PlanServiceError::Load(e) => write!(f, "loading spilled plan: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanServiceError {}
+
+/// Cache key: records fingerprint × batch × canonical strategy key.
+type Key = (u64, usize, &'static str);
+
+/// Thread-safe memoization of offset plans, keyed by
+/// `(records fingerprint, batch, strategy)`.
+#[derive(Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<Key, Arc<OffsetPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (= planner invocations) so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct plans resident.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    /// True if no plan has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn key(records: &UsageRecords, batch: usize, strategy: &str) -> Result<Key, PlanServiceError> {
+        let key = registry::offset_key(strategy)
+            .ok_or_else(|| PlanServiceError::UnknownStrategy(strategy.to_string()))?;
+        Ok((serialize::records_fingerprint(records), batch, key))
+    }
+
+    /// The plan for `records` scaled to `batch` under `strategy`, planning
+    /// (and validating) on first use. `records` are always the *batch-1*
+    /// records; scaling is the cache's job so every caller agrees on the
+    /// key. Planning happens under the cache lock, which guarantees exactly
+    /// one planner invocation per key even under concurrent lookups.
+    pub fn get_or_plan(
+        &self,
+        records: &UsageRecords,
+        batch: usize,
+        strategy: &str,
+    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
+        let key = Self::key(records, batch, strategy)?;
+        let mut plans = self.plans.lock().unwrap();
+        if let Some(plan) = plans.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(plan));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let planner = registry::offset_strategy(key.2).expect("canonical key resolves");
+        let scaled = records.scaled(batch);
+        let plan = planner.plan(&scaled);
+        plan.validate(&scaled).map_err(PlanServiceError::Infeasible)?;
+        let plan = Arc::new(plan);
+        plans.insert(key, Arc::clone(&plan));
+        Ok(plan)
+    }
+
+    /// Serialize the plan for `(records, batch, strategy)` in the
+    /// [`super::serialize`] text format, planning it first if not resident —
+    /// ship the result next to the model and [`Self::load`] it at serve
+    /// time.
+    pub fn spill(
+        &self,
+        records: &UsageRecords,
+        batch: usize,
+        strategy: &str,
+    ) -> Result<String, PlanServiceError> {
+        let plan = self.get_or_plan(records, batch, strategy)?;
+        Ok(serialize::offset_plan_to_string(&plan, &records.scaled(batch)))
+    }
+
+    /// Seed the cache from a previously spilled plan. The text is verified
+    /// against the batch-scaled records (checksum, record match,
+    /// feasibility) before insertion, so a stale plan for a changed model
+    /// fails loudly instead of serving corrupted offsets.
+    ///
+    /// The v1 text format carries no strategy tag, so the caller's
+    /// `strategy` names the slot the plan is filed under — loading a spill
+    /// produced by a different strategy is not detectable (it is still a
+    /// *valid* plan, just not that strategy's); keep spill files per
+    /// strategy.
+    pub fn load(
+        &self,
+        text: &str,
+        records: &UsageRecords,
+        batch: usize,
+        strategy: &str,
+    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
+        let key = Self::key(records, batch, strategy)?;
+        let scaled = records.scaled(batch);
+        let plan = Arc::new(
+            serialize::offset_plan_from_str(text, &scaled).map_err(PlanServiceError::Load)?,
+        );
+        self.plans
+            .lock()
+            .unwrap()
+            .insert(key, Arc::clone(&plan));
+        Ok(plan)
+    }
+
+    /// Largest batch whose **planned** (not naive) footprint under
+    /// `strategy` fits in `budget_bytes`; 0 if even batch 1 does not fit.
+    ///
+    /// Uses the bound `planned(b) >= b * max_tensor_size` to cap the search
+    /// range, then binary-searches with real plans (each probe lands in the
+    /// cache, so a later `get_or_plan` at the answer is free). Planned
+    /// footprints grow monotonically with batch for every registry strategy
+    /// — uniform scaling preserves every size comparison the heuristics
+    /// make.
+    pub fn max_servable_batch(
+        &self,
+        records: &UsageRecords,
+        strategy: &str,
+        budget_bytes: usize,
+    ) -> Result<usize, PlanServiceError> {
+        if registry::offset_key(strategy).is_none() {
+            return Err(PlanServiceError::UnknownStrategy(strategy.to_string()));
+        }
+        let max_size = records.records.iter().map(|r| r.size).max().unwrap_or(0);
+        if max_size == 0 {
+            // Nothing to place: any batch fits.
+            return Ok(usize::MAX);
+        }
+        // Cap the probe range twice: `planned(b) >= b * max_size` bounds
+        // what can fit the budget, and `b * naive_total <= usize::MAX`
+        // keeps every size, offset, and total computed for a probed batch
+        // free of overflow (all are bounded by the scaled naive sum).
+        let cap = (budget_bytes / max_size).min(usize::MAX / records.naive_total());
+        if cap == 0 {
+            return Ok(0);
+        }
+        let fits = |b: usize| -> Result<bool, PlanServiceError> {
+            Ok(self.get_or_plan(records, b, strategy)?.total <= budget_bytes)
+        };
+        if !fits(1)? {
+            return Ok(0);
+        }
+        // Invariant: fits(lo), !fits(hi). hi = cap + 1 cannot fit by the
+        // max_size bound above.
+        let (mut lo, mut hi) = (1usize, cap + 1);
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if fits(mid)? {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Ok(lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::example_records;
+
+    #[test]
+    fn second_lookup_is_a_hit_and_shares_the_plan() {
+        let recs = example_records();
+        let cache = PlanCache::new();
+        let a = cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
+        let b = cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn display_name_and_key_share_a_cache_slot() {
+        let recs = example_records();
+        let cache = PlanCache::new();
+        let a = cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
+        let b = cache.get_or_plan(&recs, 1, "Greedy by Size").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn distinct_batches_get_distinct_plans() {
+        let recs = example_records();
+        let cache = PlanCache::new();
+        let p1 = cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
+        let p4 = cache.get_or_plan(&recs, 4, "greedy-size").unwrap();
+        assert_eq!(cache.misses(), 2);
+        assert!(p4.total > p1.total);
+        p4.validate(&recs.scaled(4)).unwrap();
+    }
+
+    #[test]
+    fn unknown_strategy_is_an_error() {
+        let recs = example_records();
+        let cache = PlanCache::new();
+        let err = cache.get_or_plan(&recs, 1, "belady").unwrap_err();
+        assert!(matches!(err, PlanServiceError::UnknownStrategy(_)));
+        assert_eq!(cache.misses(), 0);
+    }
+
+    #[test]
+    fn spill_load_roundtrip_seeds_a_fresh_cache() {
+        let recs = example_records();
+        let warm = PlanCache::new();
+        let text = warm.spill(&recs, 2, "greedy-size").unwrap();
+        let cold = PlanCache::new();
+        let loaded = cold.load(&text, &recs, 2, "greedy-size").unwrap();
+        assert_eq!(*loaded, *warm.get_or_plan(&recs, 2, "greedy-size").unwrap());
+        // The load seeded the cache: the next lookup is a hit, no planning.
+        let again = cold.get_or_plan(&recs, 2, "greedy-size").unwrap();
+        assert!(Arc::ptr_eq(&loaded, &again));
+        assert_eq!(cold.misses(), 0);
+        assert_eq!(cold.hits(), 1);
+    }
+
+    #[test]
+    fn stale_spill_fails_to_load() {
+        let recs = example_records();
+        let cache = PlanCache::new();
+        let text = cache.spill(&recs, 1, "greedy-size").unwrap();
+        let mut changed = recs.clone();
+        changed.records[0].size += 64;
+        assert!(matches!(
+            PlanCache::new().load(&text, &changed, 1, "greedy-size"),
+            Err(PlanServiceError::Load(_))
+        ));
+    }
+
+    #[test]
+    fn max_servable_batch_boundaries() {
+        let recs = example_records();
+        let cache = PlanCache::new();
+        let t1 = cache.get_or_plan(&recs, 1, "greedy-size").unwrap().total;
+        // Exactly the batch-1 footprint: batch 1 fits, batch 2 cannot.
+        assert_eq!(cache.max_servable_batch(&recs, "greedy-size", t1).unwrap(), 1);
+        // Below the batch-1 footprint: nothing fits.
+        assert_eq!(cache.max_servable_batch(&recs, "greedy-size", t1 - 1).unwrap(), 0);
+        // A generous budget fits proportionally more.
+        let b = cache.max_servable_batch(&recs, "greedy-size", 10 * t1).unwrap();
+        assert!(b >= 10, "10x budget fits only batch {b}");
+        assert!(cache.get_or_plan(&recs, b, "greedy-size").unwrap().total <= 10 * t1);
+    }
+}

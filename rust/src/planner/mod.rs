@@ -17,17 +17,21 @@
 //! boundary — and returns a plan that can be validated independently
 //! ([`validate`]) and materialized by `crate::arena`.
 
+pub mod cache;
 pub mod dynamic;
 pub mod interval_tree;
 pub mod offset;
 pub mod order;
+pub mod registry;
 pub mod serialize;
+pub mod service;
 pub mod shared;
 pub mod validate;
 
 use crate::records::UsageRecords;
 
-
+pub use cache::{PlanCache, PlanServiceError};
+pub use service::{PlanService, PlanServiceStats};
 pub use validate::PlanError;
 
 /// A solution to the Shared Objects problem (§4).
@@ -112,31 +116,17 @@ pub trait OffsetPlanner {
     fn plan(&self, records: &UsageRecords) -> OffsetPlan;
 }
 
-/// All Shared-Objects strategies of Table 1, in row order: the paper's three
-/// (Greedy by Size, Greedy by Size Improved, Greedy by Breadth), then prior
-/// work (Greedy and Min-cost Flow from Lee et al. 2019).
+/// All Shared-Objects strategies of Table 1, in row order. Thin alias for
+/// [`registry::shared_strategies`] — the registry is the single source of
+/// truth for which strategies exist.
 pub fn table1_strategies() -> Vec<Box<dyn SharedObjectPlanner>> {
-    vec![
-        Box::new(shared::GreedyBySize::default()),
-        Box::new(shared::GreedyBySizeImproved::default()),
-        Box::new(shared::GreedyByBreadth::default()),
-        Box::new(shared::TfLiteGreedy::default()),
-        Box::new(shared::MinCostFlow::default()),
-        Box::new(shared::NaiveShared),
-    ]
+    registry::shared_strategies()
 }
 
-/// All Offset-Calculation strategies of Table 2, in row order: the paper's
-/// two, then prior work (Greedy from Lee et al. 2019, Strip Packing Best-Fit
-/// from Sekiyama et al. 2018).
+/// All Offset-Calculation strategies of Table 2, in row order. Thin alias
+/// for [`registry::offset_strategies`].
 pub fn table2_strategies() -> Vec<Box<dyn OffsetPlanner>> {
-    vec![
-        Box::new(offset::GreedyBySize::default()),
-        Box::new(offset::GreedyByBreadth::default()),
-        Box::new(offset::TfLiteGreedy::default()),
-        Box::new(offset::StripPackingBestFit::default()),
-        Box::new(offset::NaiveOffset),
-    ]
+    registry::offset_strategies()
 }
 
 #[cfg(test)]

@@ -1,0 +1,144 @@
+//! Name-keyed strategy registry — the single source of truth for which
+//! planning strategies exist.
+//!
+//! Every consumer of "the list of strategies" (the CLI's `plan`/`table1`/
+//! `table2` commands, `crate::report`, the benches, the plan cache) routes
+//! through this module, so adding a strategy is a one-file change. Each
+//! strategy is addressable by a stable kebab-case key (what the CLI and the
+//! [`crate::planner::cache::PlanCache`] use) and by its human-readable
+//! Table 1/2 display name (what `Planner::name()` returns).
+
+use super::offset;
+use super::shared;
+use super::{OffsetPlanner, SharedObjectPlanner};
+
+/// Stable keys of the Shared-Objects strategies, in Table 1 row order: the
+/// paper's three, then prior work (Lee et al. 2019), then the Naive
+/// baseline.
+pub const SHARED_KEYS: [&str; 6] = [
+    "greedy-size",
+    "greedy-size-improved",
+    "greedy-breadth",
+    "tflite-greedy",
+    "mincost-flow",
+    "naive",
+];
+
+/// Stable keys of the Offset-Calculation strategies, in Table 2 row order:
+/// the paper's two, then prior work (Lee et al. 2019; Sekiyama et al.
+/// 2018), then the Naive baseline.
+pub const OFFSET_KEYS: [&str; 5] = [
+    "greedy-size",
+    "greedy-breadth",
+    "tflite-greedy",
+    "strip-packing",
+    "naive",
+];
+
+fn shared_entry(name: &str) -> Option<(&'static str, Box<dyn SharedObjectPlanner>)> {
+    let (key, planner): (&'static str, Box<dyn SharedObjectPlanner>) = match name {
+        "greedy-size" | "Greedy by Size" => ("greedy-size", Box::new(shared::GreedyBySize)),
+        "greedy-size-improved" | "Greedy by Size Improved" => {
+            ("greedy-size-improved", Box::new(shared::GreedyBySizeImproved))
+        }
+        "greedy-breadth" | "Greedy by Breadth" => {
+            ("greedy-breadth", Box::new(shared::GreedyByBreadth))
+        }
+        "tflite-greedy" | "Greedy (Lee et al., 2019)" => {
+            ("tflite-greedy", Box::new(shared::TfLiteGreedy))
+        }
+        "mincost-flow" | "Min-cost Flow (Lee et al., 2019)" => {
+            ("mincost-flow", Box::new(shared::MinCostFlow))
+        }
+        "naive" | "Naive" => ("naive", Box::new(shared::NaiveShared)),
+        _ => return None,
+    };
+    Some((key, planner))
+}
+
+fn offset_entry(name: &str) -> Option<(&'static str, Box<dyn OffsetPlanner>)> {
+    let (key, planner): (&'static str, Box<dyn OffsetPlanner>) = match name {
+        "greedy-size" | "Greedy by Size" => ("greedy-size", Box::new(offset::GreedyBySize)),
+        "greedy-breadth" | "Greedy by Breadth" => {
+            ("greedy-breadth", Box::new(offset::GreedyByBreadth))
+        }
+        "tflite-greedy" | "Greedy (Lee et al., 2019)" => {
+            ("tflite-greedy", Box::new(offset::TfLiteGreedy))
+        }
+        "strip-packing" | "Strip Packing (Sekiyama et al., 2018)" => {
+            ("strip-packing", Box::new(offset::StripPackingBestFit))
+        }
+        "naive" | "Naive" => ("naive", Box::new(offset::NaiveOffset)),
+        _ => return None,
+    };
+    Some((key, planner))
+}
+
+/// Look up a Shared-Objects strategy by key or display name.
+pub fn shared_strategy(name: &str) -> Option<Box<dyn SharedObjectPlanner>> {
+    shared_entry(name).map(|(_, p)| p)
+}
+
+/// Look up an Offset-Calculation strategy by key or display name.
+pub fn offset_strategy(name: &str) -> Option<Box<dyn OffsetPlanner>> {
+    offset_entry(name).map(|(_, p)| p)
+}
+
+/// Canonical key of a Shared-Objects strategy (accepts key or display name).
+pub fn shared_key(name: &str) -> Option<&'static str> {
+    shared_entry(name).map(|(k, _)| k)
+}
+
+/// Canonical key of an Offset-Calculation strategy (accepts key or display
+/// name).
+pub fn offset_key(name: &str) -> Option<&'static str> {
+    offset_entry(name).map(|(k, _)| k)
+}
+
+/// All Shared-Objects strategies, in Table 1 row order.
+pub fn shared_strategies() -> Vec<Box<dyn SharedObjectPlanner>> {
+    SHARED_KEYS
+        .iter()
+        .map(|k| shared_strategy(k).expect("registry key resolves"))
+        .collect()
+}
+
+/// All Offset-Calculation strategies, in Table 2 row order.
+pub fn offset_strategies() -> Vec<Box<dyn OffsetPlanner>> {
+    OFFSET_KEYS
+        .iter()
+        .map(|k| offset_strategy(k).expect("registry key resolves"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_key_resolves_and_roundtrips_through_display_name() {
+        for key in SHARED_KEYS {
+            let p = shared_strategy(key).unwrap_or_else(|| panic!("shared key {key}"));
+            assert_eq!(shared_key(p.name()), Some(key), "display name of {key}");
+            assert_eq!(shared_key(key), Some(key));
+        }
+        for key in OFFSET_KEYS {
+            let p = offset_strategy(key).unwrap_or_else(|| panic!("offset key {key}"));
+            assert_eq!(offset_key(p.name()), Some(key), "display name of {key}");
+            assert_eq!(offset_key(key), Some(key));
+        }
+    }
+
+    #[test]
+    fn unknown_names_are_rejected() {
+        assert!(shared_strategy("belady").is_none());
+        assert!(offset_strategy("belady").is_none());
+        assert!(offset_key("").is_none());
+    }
+
+    #[test]
+    fn registries_cover_the_tables() {
+        assert_eq!(shared_strategies().len(), 6);
+        assert_eq!(offset_strategies().len(), 5);
+    }
+}

@@ -18,14 +18,30 @@
 use super::{OffsetPlan, SharedObjectPlan};
 use crate::records::UsageRecords;
 
-/// FNV-1a over bytes (stable, dependency-free).
-fn fnv1a(data: &[u8]) -> u64 {
+/// FNV-1a over bytes (stable, dependency-free). Also the hash behind
+/// [`records_fingerprint`] and therefore the plan cache's keys.
+pub fn fnv1a(data: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for &b in data {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
     h
+}
+
+/// FNV-1a fingerprint of a record set — everything a planner consumes
+/// (`num_ops` plus every `(first_op, last_op, size)` triple, in record
+/// order). Two graphs with equal fingerprints get identical plans, which is
+/// what lets `planner::cache::PlanCache` key on it.
+pub fn records_fingerprint(records: &UsageRecords) -> u64 {
+    let mut buf = Vec::with_capacity(8 + records.len() * 24);
+    buf.extend_from_slice(&(records.num_ops as u64).to_le_bytes());
+    for r in &records.records {
+        buf.extend_from_slice(&(r.first_op as u64).to_le_bytes());
+        buf.extend_from_slice(&(r.last_op as u64).to_le_bytes());
+        buf.extend_from_slice(&(r.size as u64).to_le_bytes());
+    }
+    fnv1a(&buf)
 }
 
 /// Serialize an offset plan together with the records it plans.
@@ -207,6 +223,65 @@ mod tests {
             offset_plan_from_str(&text, &changed),
             Err(LoadError::RecordMismatch { record: 2, field: "size" })
         );
+    }
+
+    #[test]
+    fn corrupted_checksum_line_rejected() {
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        // Flip one hex digit of the checksum itself (keep it valid hex).
+        let pos = text.rfind("checksum ").unwrap() + "checksum ".len();
+        let mut bytes = text.into_bytes();
+        bytes[pos] = if bytes[pos] == b'0' { b'1' } else { b'0' };
+        let corrupted = String::from_utf8(bytes).unwrap();
+        assert_eq!(
+            offset_plan_from_str(&corrupted, &recs),
+            Err(LoadError::BadChecksum)
+        );
+        // Non-hex garbage in the checksum is also a checksum error.
+        let plan2 = GreedyBySize.plan(&recs);
+        let mut garbled = offset_plan_to_string(&plan2, &recs);
+        garbled.truncate(garbled.rfind("checksum ").unwrap());
+        garbled.push_str("checksum zzzz\n");
+        assert_eq!(
+            offset_plan_from_str(&garbled, &recs),
+            Err(LoadError::BadChecksum)
+        );
+    }
+
+    #[test]
+    fn missing_checksum_is_truncation() {
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        let cut = text.split("checksum").next().unwrap();
+        assert_eq!(offset_plan_from_str(cut, &recs), Err(LoadError::Truncated));
+    }
+
+    #[test]
+    fn stale_plan_rejected_on_interval_change() {
+        // Same sizes, shifted liveness: the loader must still refuse.
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        let mut changed = recs.clone();
+        changed.records[1].last_op += 1;
+        assert_eq!(
+            offset_plan_from_str(&text, &changed),
+            Err(LoadError::RecordMismatch { record: 1, field: "last_op" })
+        );
+    }
+
+    #[test]
+    fn fingerprint_tracks_planner_relevant_fields_only() {
+        let a = crate::records::UsageRecords::from_triples(&[(0, 1, 64), (1, 2, 128)]);
+        let b = crate::records::UsageRecords::from_triples(&[(0, 1, 64), (1, 2, 128)]);
+        assert_eq!(records_fingerprint(&a), records_fingerprint(&b));
+        let c = crate::records::UsageRecords::from_triples(&[(0, 1, 64), (1, 2, 192)]);
+        assert_ne!(records_fingerprint(&a), records_fingerprint(&c));
+        let d = crate::records::UsageRecords::from_triples(&[(0, 1, 64), (1, 3, 128)]);
+        assert_ne!(records_fingerprint(&a), records_fingerprint(&d));
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! `PlanService`: the single path from graph to planned memory.
+//!
+//! One shared handle bundles the three pieces every layer needs:
+//! the strategy [`registry`](super::registry) (which strategies exist), the
+//! batch-aware [`PlanCache`] (plan once per `(model, batch, strategy)`),
+//! and the [`ArenaPool`] (recycle arena buffers instead of reallocating
+//! them per executor). The coordinator's engines, the CPU executor, the
+//! `serve` CLI, and the benches all take an `Arc<PlanService>` so their
+//! plans and arenas — and the hit/reuse counters that prove the reuse —
+//! come from one place.
+
+use super::cache::{PlanCache, PlanServiceError};
+use super::{registry, OffsetPlan};
+use crate::arena::ArenaPool;
+use crate::graph::Graph;
+use crate::records::UsageRecords;
+use std::sync::Arc;
+
+/// Shared planning façade: registry + plan cache + arena pool.
+pub struct PlanService {
+    cache: PlanCache,
+    pool: Arc<ArenaPool>,
+    default_strategy: &'static str,
+}
+
+/// Point-in-time counters, the serving-visible proof of plan/arena reuse.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanServiceStats {
+    /// Plan-cache hits (a planner invocation avoided).
+    pub cache_hits: u64,
+    /// Plan-cache misses (a planner actually ran).
+    pub cache_misses: u64,
+    /// Arena buffers recycled from the pool.
+    pub pool_reused: u64,
+    /// Arena buffers freshly allocated.
+    pub pool_allocated: u64,
+}
+
+impl PlanServiceStats {
+    /// Cache hits / lookups, or 0.0 before the first lookup.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+impl Default for PlanService {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlanService {
+    /// The §6-recommended default offset strategy.
+    pub const DEFAULT_STRATEGY: &'static str = "greedy-size";
+
+    /// Service with the default strategy and a fresh cache/pool.
+    pub fn new() -> Self {
+        Self::with_default_strategy(Self::DEFAULT_STRATEGY).expect("default strategy registered")
+    }
+
+    /// Service defaulting to `strategy` (any registry key or display name).
+    pub fn with_default_strategy(strategy: &str) -> Result<Self, PlanServiceError> {
+        let key = registry::offset_key(strategy)
+            .ok_or_else(|| PlanServiceError::UnknownStrategy(strategy.to_string()))?;
+        Ok(PlanService {
+            cache: PlanCache::new(),
+            pool: Arc::new(ArenaPool::new()),
+            default_strategy: key,
+        })
+    }
+
+    /// The usual way to construct: one shared handle for all engines.
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::new())
+    }
+
+    /// Canonical key of the default strategy.
+    pub fn default_strategy(&self) -> &'static str {
+        self.default_strategy
+    }
+
+    /// The underlying plan cache.
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// The shared arena pool.
+    pub fn pool(&self) -> &Arc<ArenaPool> {
+        &self.pool
+    }
+
+    /// Plan `records` (batch-1 form) scaled to `batch` under `strategy`
+    /// (`None` = the service default), through the cache.
+    pub fn plan_records(
+        &self,
+        records: &UsageRecords,
+        batch: usize,
+        strategy: Option<&str>,
+    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
+        self.cache
+            .get_or_plan(records, batch, strategy.unwrap_or(self.default_strategy))
+    }
+
+    /// Extract usage records from `graph` and plan them at `batch`.
+    pub fn plan_graph(
+        &self,
+        graph: &Graph,
+        batch: usize,
+        strategy: Option<&str>,
+    ) -> Result<(UsageRecords, Arc<OffsetPlan>), PlanServiceError> {
+        let records = UsageRecords::from_graph(graph);
+        let plan = self.plan_records(&records, batch, strategy)?;
+        Ok((records, plan))
+    }
+
+    /// Largest batch whose planned footprint fits `budget_bytes`; see
+    /// [`PlanCache::max_servable_batch`].
+    pub fn max_servable_batch(
+        &self,
+        records: &UsageRecords,
+        budget_bytes: usize,
+        strategy: Option<&str>,
+    ) -> Result<usize, PlanServiceError> {
+        self.cache.max_servable_batch(
+            records,
+            strategy.unwrap_or(self.default_strategy),
+            budget_bytes,
+        )
+    }
+
+    /// Current reuse counters.
+    pub fn stats(&self) -> PlanServiceStats {
+        PlanServiceStats {
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            pool_reused: self.pool.reused(),
+            pool_allocated: self.pool.allocated(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::example_records;
+
+    #[test]
+    fn default_strategy_is_registered_and_used() {
+        let svc = PlanService::new();
+        assert_eq!(svc.default_strategy(), "greedy-size");
+        let recs = example_records();
+        let a = svc.plan_records(&recs, 1, None).unwrap();
+        let b = svc.plan_records(&recs, 1, Some("greedy-size")).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let st = svc.stats();
+        assert_eq!((st.cache_misses, st.cache_hits), (1, 1));
+        assert!((st.cache_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_default_strategy_rejected() {
+        assert!(PlanService::with_default_strategy("belady").is_err());
+        assert!(PlanService::with_default_strategy("Greedy by Breadth").is_ok());
+    }
+
+    #[test]
+    fn plan_graph_plans_the_extracted_records() {
+        let svc = PlanService::new();
+        let g = crate::models::example_net();
+        let (records, plan) = svc.plan_graph(&g, 1, None).unwrap();
+        assert_eq!(plan.offsets.len(), records.len());
+        plan.validate(&records).unwrap();
+    }
+}

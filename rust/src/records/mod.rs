@@ -79,9 +79,6 @@ impl UsageRecords {
         for op in &graph.ops {
             for &t in op.inputs.iter().chain(op.outputs.iter()) {
                 let i = op.id.0;
-                if first[t.0] == usize::MAX {
-                    first[t.0] = i;
-                }
                 first[t.0] = first[t.0].min(i);
                 last[t.0] = last[t.0].max(i);
             }
@@ -128,6 +125,26 @@ impl UsageRecords {
             })
             .collect();
         UsageRecords { records, num_ops }
+    }
+
+    /// The same records with every size multiplied by `batch` — what a
+    /// batched inference uses per intermediate tensor (§3's records are
+    /// per-sample; batching scales sizes, not liveness). Planners run on
+    /// the scaled records; `crate::arena::Arena` then stripes each region
+    /// into `batch` lanes.
+    pub fn scaled(&self, batch: usize) -> UsageRecords {
+        assert!(batch > 0, "batch must be positive");
+        UsageRecords {
+            records: self
+                .records
+                .iter()
+                .map(|r| UsageRecord {
+                    size: r.size.checked_mul(batch).expect("batch-scaled size overflows"),
+                    ..*r
+                })
+                .collect(),
+            num_ops: self.num_ops,
+        }
     }
 
     /// Number of records.
@@ -202,5 +219,25 @@ mod tests {
     #[should_panic]
     fn from_triples_rejects_inverted_interval() {
         UsageRecords::from_triples(&[(3, 1, 32)]);
+    }
+
+    #[test]
+    fn scaled_multiplies_sizes_only() {
+        let r = UsageRecords::from_triples(&[(0, 1, 32), (1, 2, 28), (2, 5, 8)]);
+        let s = r.scaled(4);
+        assert_eq!(s.num_ops, r.num_ops);
+        assert_eq!(s.naive_total(), 4 * r.naive_total());
+        for (a, b) in r.records.iter().zip(s.records.iter()) {
+            assert_eq!((a.id, a.tensor, a.first_op, a.last_op), (b.id, b.tensor, b.first_op, b.last_op));
+            assert_eq!(b.size, 4 * a.size);
+        }
+        // batch 1 is the identity
+        assert_eq!(r.scaled(1).naive_total(), r.naive_total());
+    }
+
+    #[test]
+    #[should_panic(expected = "batch must be positive")]
+    fn scaled_rejects_zero_batch() {
+        UsageRecords::from_triples(&[(0, 1, 32)]).scaled(0);
     }
 }

@@ -5,7 +5,7 @@
 //! output, and `tensorarena table1` agree byte-for-byte.
 
 use crate::models;
-use crate::planner::{table1_strategies, table2_strategies};
+use crate::planner::registry;
 use crate::records::UsageRecords;
 use std::time::Instant;
 
@@ -73,7 +73,7 @@ pub fn table1() -> Table {
     let zoo = models::all_zoo();
     let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
     let recs: Vec<UsageRecords> = zoo.iter().map(UsageRecords::from_graph).collect();
-    for strat in table1_strategies() {
+    for strat in registry::shared_strategies() {
         if strat.name() == "Naive" {
             continue; // rendered from records below, like the paper's layout
         }
@@ -107,7 +107,7 @@ pub fn table2() -> Table {
     let zoo = models::all_zoo();
     let recs: Vec<UsageRecords> = zoo.iter().map(UsageRecords::from_graph).collect();
     let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
-    for strat in table2_strategies() {
+    for strat in registry::offset_strategies() {
         if strat.name() == "Naive" {
             continue;
         }

@@ -1,8 +1,11 @@
 //! PJRT integration: the AOT artifacts round-trip through the Rust runtime
 //! and the serving coordinator.
 //!
-//! These tests need `artifacts/` (run `make artifacts`); they are skipped
-//! with a message otherwise so `cargo test` stays green in a fresh clone.
+//! These tests need the `pjrt` feature and `artifacts/` (run
+//! `make artifacts`); they are skipped with a message otherwise so
+//! `cargo test` stays green in a fresh clone.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 use tensorarena::coordinator::engine::PjrtEngine;

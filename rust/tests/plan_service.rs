@@ -1,0 +1,144 @@
+//! Integration tests for the PlanService stack: the batch-aware plan
+//! cache, batch scaling, the spill/load path, and the memory-budget query.
+//!
+//! Property tests use the same hand-rolled SplitMix64 generator as
+//! `planner_properties.rs` (the offline registry has no proptest); every
+//! failure prints its seed.
+
+use std::sync::Arc;
+use tensorarena::models;
+use tensorarena::planner::{registry, OffsetPlanner, PlanCache, PlanService};
+use tensorarena::records::UsageRecords;
+use tensorarena::rng::SplitMix64;
+
+/// Random usage records resembling real nets (64-byte-aligned sizes).
+fn random_records(seed: u64) -> UsageRecords {
+    let mut rng = SplitMix64::new(seed);
+    let n = rng.next_range(1, 60);
+    let mut triples = Vec::with_capacity(n);
+    let mut op = 0usize;
+    for _ in 0..n {
+        let span = match rng.next_below(10) {
+            0..=6 => 1,
+            7 | 8 => rng.next_range(2, 6),
+            _ => rng.next_range(6, 12),
+        };
+        let size = 64 * rng.next_range(1, 256);
+        triples.push((op, op + span, size));
+        if rng.next_below(3) != 0 {
+            op += 1;
+        }
+    }
+    UsageRecords::from_triples(&triples)
+}
+
+#[test]
+fn cache_hit_plans_are_byte_identical_to_fresh_plans_for_every_strategy() {
+    use tensorarena::planner::serialize::offset_plan_to_string;
+    for seed in 0..40u64 {
+        let recs = random_records(seed);
+        let cache = PlanCache::new();
+        for key in registry::OFFSET_KEYS {
+            let planner = registry::offset_strategy(key).unwrap();
+            let fresh = planner.plan(&recs);
+            let warm = cache.get_or_plan(&recs, 1, key).unwrap();
+            let hit = cache.get_or_plan(&recs, 1, key).unwrap();
+            assert!(Arc::ptr_eq(&warm, &hit), "seed {seed}, {key}: hit re-planned");
+            assert_eq!(*hit, fresh, "seed {seed}, {key}: cached plan diverged");
+            // Byte-identical through the wire format too.
+            assert_eq!(
+                offset_plan_to_string(&hit, &recs),
+                offset_plan_to_string(&fresh, &recs),
+                "seed {seed}, {key}: serialized plans differ"
+            );
+        }
+        assert_eq!(cache.misses(), registry::OFFSET_KEYS.len() as u64);
+        assert_eq!(cache.hits(), registry::OFFSET_KEYS.len() as u64);
+    }
+}
+
+#[test]
+fn scaled_plans_validate_against_scaled_records_for_every_strategy() {
+    for seed in 0..40u64 {
+        let recs = random_records(seed);
+        let cache = PlanCache::new();
+        for key in registry::OFFSET_KEYS {
+            for batch in [2usize, 3, 8] {
+                let plan = cache.get_or_plan(&recs, batch, key).unwrap();
+                let scaled = recs.scaled(batch);
+                plan.validate(&scaled)
+                    .unwrap_or_else(|e| panic!("seed {seed}, {key}, batch {batch}: {e}"));
+                assert!(
+                    plan.total >= batch * recs.profiles().offset_lower_bound(),
+                    "seed {seed}, {key}, batch {batch}: below scaled lower bound"
+                );
+                assert!(
+                    plan.total <= scaled.naive_total(),
+                    "seed {seed}, {key}, batch {batch}: worse than naive"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fingerprint_isolates_different_models_in_one_cache() {
+    let a = random_records(1);
+    let b = random_records(2);
+    let cache = PlanCache::new();
+    let pa = cache.get_or_plan(&a, 1, "greedy-size").unwrap();
+    let pb = cache.get_or_plan(&b, 1, "greedy-size").unwrap();
+    assert_eq!(cache.misses(), 2, "distinct record sets shared a slot");
+    pa.validate(&a).unwrap();
+    pb.validate(&b).unwrap();
+}
+
+#[test]
+fn spill_load_roundtrips_across_caches_at_batch() {
+    let recs = random_records(7);
+    let warm = PlanCache::new();
+    for batch in [1usize, 4] {
+        let text = warm.spill(&recs, batch, "greedy-size").unwrap();
+        let cold = PlanCache::new();
+        let loaded = cold.load(&text, &recs, batch, "greedy-size").unwrap();
+        assert_eq!(*loaded, *warm.get_or_plan(&recs, batch, "greedy-size").unwrap());
+        assert_eq!(cold.misses(), 0, "load should seed, not plan");
+    }
+}
+
+#[test]
+fn max_servable_batch_fits_budget_on_mobilenet_v1() {
+    // Acceptance: the largest batch whose *planned* footprint fits a byte
+    // budget — planned, not naive, which is the whole point of planning.
+    let recs = UsageRecords::from_graph(&models::mobilenet_v1());
+    let cache = PlanCache::new();
+    let strategy = "greedy-size";
+    let t1 = cache.get_or_plan(&recs, 1, strategy).unwrap().total;
+    let budget = t1 * 3 + t1 / 2; // ~3.5x the batch-1 arena
+
+    let b = cache.max_servable_batch(&recs, strategy, budget).unwrap();
+    assert!(b >= 3, "3.5x budget only fits batch {b}");
+    // Maximality: b fits, b+1 does not.
+    assert!(cache.get_or_plan(&recs, b, strategy).unwrap().total <= budget);
+    assert!(cache.get_or_plan(&recs, b + 1, strategy).unwrap().total > budget);
+    // The naive layout could not serve batch b in this budget (MobileNet's
+    // naive footprint is >2x its planned arena).
+    assert!(
+        recs.naive_total() * b > budget,
+        "naive would also fit batch {b} — budget not planner-bound"
+    );
+    // Degenerate budgets.
+    assert_eq!(cache.max_servable_batch(&recs, strategy, 0).unwrap(), 0);
+    assert_eq!(cache.max_servable_batch(&recs, strategy, t1 - 1).unwrap(), 0);
+}
+
+#[test]
+fn service_default_strategy_flows_through_max_servable_batch() {
+    let svc = PlanService::new();
+    let recs = UsageRecords::from_graph(&models::blazeface());
+    let t1 = svc.plan_records(&recs, 1, None).unwrap().total;
+    let b = svc.max_servable_batch(&recs, 8 * t1, None).unwrap();
+    assert!(b >= 8, "8x budget only fits batch {b}");
+    let st = svc.stats();
+    assert!(st.cache_misses >= 1);
+}
