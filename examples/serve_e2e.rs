@@ -91,7 +91,7 @@ fn main() -> anyhow::Result<()> {
                     .expect("artifacts");
                 Box::new(PjrtEngine::new(vs, st))
             },
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2), ..BatchPolicy::default() },
         );
 
         let n = (rate / 2).max(64); // ~0.5s of traffic

@@ -10,8 +10,16 @@
 //! * plan reuse: ExecutorEngine replicas behind one PlanService — reports
 //!   the plan-cache hit rate and arena-pool reuse that make replica spin-up
 //!   and batch swaps cheap;
+//! * budgeted admission: a byte budget below the batch-8 planned peak —
+//!   the server clamps batches and refuses an oversized burst instead of
+//!   OOMing;
+//! * warm vs cold start: planner invocations and time-to-planned across a
+//!   plan-directory restart (`persist_dir` → `warm_start`);
 //! * macro (with the `pjrt` feature and `artifacts/`): PJRT closed-loop
 //!   storm, the same measurement as `tensorarena serve`.
+//!
+//! Pass `--smoke` (CI tier-2) to shrink every closed loop to a seconds-long
+//! correctness pass.
 
 #[path = "harness.rs"]
 mod harness;
@@ -49,16 +57,24 @@ impl Engine for FixedCostEngine {
 }
 
 fn main() {
+    // --smoke (CI tier-2): same code paths, seconds-long loops.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
     // --- micro: round-trip overhead ---
     {
         let mut router = Router::new();
         router.register(
             "echo",
             || Box::new(EchoEngine::new(8, 8)),
-            BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(1) },
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_micros(1),
+                ..BatchPolicy::default()
+            },
         );
         let input = vec![1.0f32; 8];
-        let st = harness::bench(100, 2000, || {
+        let (warmup, iters) = if smoke { (10, 100) } else { (100, 2000) };
+        let st = harness::bench(warmup, iters, || {
             let rx = router.submit("echo", input.clone());
             harness::black_box(rx.recv().unwrap().unwrap());
         });
@@ -67,18 +83,24 @@ fn main() {
     }
 
     // --- batching win: fixed 1ms engine cost, varying max_batch ---
-    println!("\nthroughput vs max_batch (engine cost 1 ms/batch, 256 closed-loop requests):");
-    for max_batch in [1usize, 2, 4, 8, 16, 32] {
+    let storm = if smoke { 64 } else { 256 };
+    let caps: &[usize] = if smoke { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
+    println!("\nthroughput vs max_batch (engine cost 1 ms/batch, {storm} closed-loop requests):");
+    for &max_batch in caps {
         let mut router = Router::new();
         router.register(
             "fixed",
             move || Box::new(FixedCostEngine { elems: 4, cost: Duration::from_millis(1) }),
-            BatchPolicy { max_batch, max_wait: Duration::from_micros(200) },
+            BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_micros(200),
+                ..BatchPolicy::default()
+            },
         );
         let mut rng = SplitMix64::new(1);
         let mut input = vec![0f32; 4];
         let t = std::time::Instant::now();
-        let pending: Vec<_> = (0..256)
+        let pending: Vec<_> = (0..storm)
             .map(|_| {
                 rng.fill_f32(&mut input, 1.0);
                 router.submit("fixed", input.clone())
@@ -90,7 +112,7 @@ fn main() {
         let wall = t.elapsed();
         println!(
             "  max_batch {max_batch:>3}: {:>8.0} req/s ({:?} total)",
-            256.0 / wall.as_secs_f64(),
+            storm as f64 / wall.as_secs_f64(),
             wall
         );
         router.shutdown();
@@ -124,7 +146,11 @@ fn main() {
                         let g = tensorarena::models::by_name("blazeface").unwrap();
                         Box::new(ExecutorEngine::new(&g, service, "greedy-size", 7).expect("engine"))
                     },
-                    BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                    BatchPolicy {
+                        max_batch: 4,
+                        max_wait: Duration::from_millis(1),
+                        ..BatchPolicy::default()
+                    },
                 );
             }
             for burst in [1usize, 2, 4, 2, 1] {
@@ -162,6 +188,113 @@ fn main() {
         );
     }
 
+    // --- budgeted admission: clamp + refuse instead of OOM ---
+    {
+        let service = PlanService::shared();
+        let g = tensorarena::models::by_name("blazeface").unwrap();
+        let in_elems = g.tensor(g.inputs[0]).num_elements();
+        let recs = UsageRecords::from_graph(&g);
+        let t1 = service
+            .plan_records(&recs, 1, Some("greedy-size"))
+            .expect("plan")
+            .total;
+        // ~3.5x the batch-1 arena: well below the batch-8 planned peak, so
+        // an 8-cap policy must be clamped by the budget.
+        let budget = 3 * t1 + t1 / 2;
+        println!(
+            "\nbudgeted admission: blazeface, budget {:.1} KiB (~3.5x batch-1 arena), policy max_batch 8:",
+            budget as f64 / 1024.0
+        );
+        let mut router = Router::new();
+        {
+            let service = Arc::clone(&service);
+            router.register(
+                "blaze",
+                move || {
+                    let g = tensorarena::models::by_name("blazeface").unwrap();
+                    Box::new(ExecutorEngine::new(&g, service, "greedy-size", 7).expect("engine"))
+                },
+                BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(1),
+                    mem_budget: Some(budget),
+                },
+            );
+        }
+        let burst = if smoke { 16 } else { 64 };
+        let mut rng = SplitMix64::new(5);
+        let mut input = vec![0f32; in_elems];
+        let t = std::time::Instant::now();
+        let pending: Vec<_> = (0..burst)
+            .map(|_| {
+                rng.fill_f32(&mut input, 1.0);
+                router.submit("blaze", input.clone())
+            })
+            .collect();
+        let ok = pending
+            .into_iter()
+            .filter(|rx| matches!(rx.recv(), Ok(Ok(_))))
+            .count();
+        let wall = t.elapsed();
+        // One pre-batched burst at the nominal cap: must be refused, typed.
+        let refusal = router
+            .submit("blaze", vec![0f32; 8 * in_elems])
+            .recv()
+            .expect("worker alive");
+        let snap = router.server("blaze").unwrap().metrics().snapshot();
+        println!(
+            "  {ok}/{burst} singles served in {:?} at max batch {} (<= budget cap), {} rejected",
+            wall, snap.max_batch_seen, snap.rejected
+        );
+        match refusal {
+            Err(e) => println!("  oversized burst of 8: refused — {e}"),
+            Ok(_) => println!("  oversized burst of 8: UNEXPECTEDLY admitted"),
+        }
+        router.shutdown();
+    }
+
+    // --- warm vs cold start: a plan-directory restart ---
+    {
+        let model = if smoke { "blazeface" } else { "mobilenet_v1" };
+        let dir = std::env::temp_dir().join(format!(
+            "tensorarena-bench-plandir-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let g = tensorarena::models::by_name(model).unwrap();
+        let recs = UsageRecords::from_graph(&g);
+        let batches = [1usize, 2, 4, 8];
+        println!("\nwarm vs cold start ({model}, batches {batches:?}):");
+
+        let cold = PlanService::new();
+        let t = std::time::Instant::now();
+        for &b in &batches {
+            cold.plan_records(&recs, b, None).expect("plan");
+        }
+        let cold_time = t.elapsed();
+        let persisted = cold.persist_dir(&dir).expect("persist");
+        println!(
+            "  cold: {cold_time:?}, {} planner invocations ({} plans persisted)",
+            cold.stats().cache_misses,
+            persisted.written
+        );
+
+        let warm = PlanService::new();
+        let t = std::time::Instant::now();
+        let report = warm.warm_start(&dir, &recs).expect("warm start");
+        for &b in &batches {
+            warm.plan_records(&recs, b, None).expect("plan");
+        }
+        let warm_time = t.elapsed();
+        println!(
+            "  warm: {warm_time:?}, {} planner invocations ({} plans loaded, {} skipped)",
+            warm.stats().cache_misses,
+            report.loaded,
+            report.skipped()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // --- macro: PJRT artifacts, if built ---
     #[cfg(feature = "pjrt")]
     let dir = std::path::Path::new("artifacts");
@@ -180,7 +313,7 @@ fn main() {
                         .expect("artifacts");
                     Box::new(PjrtEngine::new(vs, ArenaStats::default()))
                 },
-                BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+                BatchPolicy { max_batch, max_wait: Duration::from_millis(2), ..BatchPolicy::default() },
             );
             let mut rng = SplitMix64::new(2);
             let mut input = vec![0f32; 32 * 32 * 3];

@@ -1,18 +1,31 @@
 //! Dynamic batching: one worker thread per model gathers queued requests
-//! into batches bounded by size and deadline.
+//! into batches bounded by size, deadline, and — when a byte budget is
+//! configured — the planned arena peak.
+//!
+//! Budget-driven admission (MAFAT-style): at spawn the worker asks the
+//! engine for the largest batch whose *planned* footprint fits
+//! [`BatchPolicy::mem_budget`] and clamps the batch cap to it, so an edge
+//! box never forms a batch it cannot host. A pre-batched request larger
+//! than the cap is refused with a typed [`ServeError`] instead of OOMing,
+//! and every refusal is counted in [`Metrics`].
 
-use super::{engine::Engine, Metrics, Request, Response};
+use super::{engine::Engine, Metrics, Request, Response, ServeError};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Batching policy: close a batch when it reaches `max_batch` requests or
-/// when the oldest queued request has waited `max_wait`.
+/// Batching policy: close a batch when it reaches `max_batch` samples or
+/// when the oldest queued request has waited `max_wait`. With `mem_budget`
+/// set, the effective cap is further clamped to the largest batch whose
+/// planned arena peak fits the budget (see [`Engine::max_servable_batch`]).
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Byte budget for the engine's planned working memory; `None` means
+    /// unbounded. Enforced only for engines that can report planned peaks.
+    pub mem_budget: Option<usize>,
 }
 
 impl Default for BatchPolicy {
@@ -20,6 +33,7 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            mem_budget: None,
         }
     }
 }
@@ -49,8 +63,27 @@ impl ModelServer {
             .spawn(move || {
                 let mut engine = factory();
                 let _ = meta_tx.send(engine.in_elems());
-                let cap = policy.max_batch.min(engine.max_batch()).max(1);
-                worker_loop(&mut *engine, &rx, cap, policy.max_wait, &m)
+                // Resolve the admission cap once: policy bound, engine
+                // bound, then the budget bound (the largest batch whose
+                // planned peak fits). A budget below the batch-1 peak
+                // yields cap 0: every batch is refused, none is OOMed.
+                let mut cap = policy.max_batch.min(engine.max_batch()).max(1);
+                if let Some(budget) = policy.mem_budget {
+                    if let Some(fit) = engine.max_servable_batch(budget) {
+                        cap = cap.min(fit);
+                    }
+                    // Pre-resolve the whole admission envelope: plan every
+                    // admissible batch size — plus cap+1, the only size the
+                    // refusal path ever probes — now (each lands in the
+                    // shared plan cache, and so in any plan directory
+                    // persisted later), so the budgeted hot path never
+                    // invokes the planner — and a warm-started restart
+                    // never re-plans.
+                    for b in 1..=cap.saturating_add(1) {
+                        let _ = engine.planned_peak(b);
+                    }
+                }
+                worker_loop(&mut *engine, &rx, cap, policy.mem_budget, policy.max_wait, &m)
             })
             .expect("spawn model server");
         let in_elems = meta_rx.recv().expect("engine factory panicked");
@@ -63,14 +96,18 @@ impl ModelServer {
     }
 
     /// Submit one request; the reply arrives on the returned channel.
+    ///
+    /// `input` is one sample, or a client-side pre-batched burst of `k`
+    /// concatenated samples. A burst is admitted or refused whole: if its
+    /// planned peak does not fit the server's budget (or it exceeds the
+    /// batch cap) the reply is a typed [`ServeError`], never a panic.
     pub fn submit(&self, input: Vec<f32>) -> Receiver<Response> {
         let (rtx, rrx) = channel();
-        if input.len() != self.in_elems {
-            let _ = rtx.send(Err(format!(
-                "input has {} elems, model wants {}",
-                input.len(),
-                self.in_elems
-            )));
+        if self.in_elems == 0 || input.is_empty() || input.len() % self.in_elems != 0 {
+            let _ = rtx.send(Err(ServeError::BadInput {
+                got: input.len(),
+                expect: self.in_elems,
+            }));
             return rrx;
         }
         let req = Request {
@@ -109,45 +146,131 @@ impl Drop for ModelServer {
     }
 }
 
-/// The batching loop.
+/// Refuse one request that cannot fit any admissible batch, with the error
+/// that names the binding constraint.
+fn refuse(
+    engine: &dyn Engine,
+    metrics: &Metrics,
+    req: Request,
+    samples: usize,
+    cap: usize,
+    budget: Option<usize>,
+) {
+    // Probe the *smallest* refused size, never the client-chosen one: the
+    // planner must not run (and cache, and later persist, a plan) for an
+    // arbitrary attacker-sized batch as a side effect of refusing it. The
+    // probe peak is a lower bound on what `samples` would need, and it
+    // exceeds the budget exactly when the budget is the binding constraint.
+    let err = match budget {
+        Some(b) => {
+            let probe = samples.min(cap.saturating_add(1));
+            match engine.planned_peak(probe) {
+                Some(peak) if peak > b => ServeError::BudgetExceeded {
+                    batch: samples,
+                    planned_bytes: peak,
+                    budget_bytes: b,
+                },
+                _ => ServeError::BatchTooLarge { batch: samples, cap },
+            }
+        }
+        None => ServeError::BatchTooLarge { batch: samples, cap },
+    };
+    metrics.record_rejected(1);
+    let _ = req.resp.send(Err(err));
+}
+
+/// The batching loop. `cap` is the resolved sample cap (0 = nothing fits
+/// the budget); `budget` is re-checked per formed batch as defense in
+/// depth.
 fn worker_loop(
     engine: &mut dyn Engine,
     rx: &Receiver<Request>,
-    max_batch: usize,
+    cap: usize,
+    budget: Option<usize>,
     max_wait: Duration,
     metrics: &Metrics,
 ) {
     let in_elems = engine.in_elems();
     let out_elems = engine.out_elems();
-    let mut batch_buf: Vec<f32> = Vec::with_capacity(max_batch * in_elems);
+    let mut batch_buf: Vec<f32> = Vec::with_capacity(cap.max(1) * in_elems);
+    // A request drained from the queue that no longer fits the batch being
+    // formed; it opens the next batch instead of being dropped or split.
+    let mut carry: Option<Request> = None;
     loop {
-        // Block for the first request of the next batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // queue closed and drained
+        let first = match carry.take() {
+            Some(r) => r,
+            None => match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return, // queue closed and drained
+            },
         };
+        // Admission: refuse a burst that can never fit (budget- or
+        // cap-bound) before it occupies the batch.
+        let first_samples = first.input.len() / in_elems;
+        if first_samples > cap {
+            refuse(&*engine, metrics, first, first_samples, cap, budget);
+            continue;
+        }
         let deadline = first.enqueued + max_wait;
+        let mut samples = first_samples;
         let mut batch = vec![first];
+        // Admit `r` into the forming batch, stash it for the next batch,
+        // or refuse it outright — shared by the drain and deadline loops.
+        let gather = |r: Request,
+                          samples: &mut usize,
+                          batch: &mut Vec<Request>,
+                          carry: &mut Option<Request>,
+                          engine: &dyn Engine| {
+            let s = r.input.len() / in_elems;
+            if s > cap {
+                refuse(engine, metrics, r, s, cap, budget);
+            } else if *samples + s > cap {
+                *carry = Some(r);
+            } else {
+                *samples += s;
+                batch.push(r);
+            }
+        };
         // Drain whatever is already queued, for free — even when the
         // deadline has long passed (under backlog the queue is full and the
         // batch should be too). §Perf: before this drain, a 64-request
         // closed-loop burst ran at mean batch 1.12; after, it saturates.
-        while batch.len() < max_batch {
+        while samples < cap && carry.is_none() {
             match rx.try_recv() {
-                Ok(r) => batch.push(r),
+                Ok(r) => gather(r, &mut samples, &mut batch, &mut carry, &*engine),
                 Err(_) => break,
             }
         }
         // Then wait out the remaining deadline for stragglers.
-        while batch.len() < max_batch {
+        while samples < cap && carry.is_none() {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
+                Ok(r) => gather(r, &mut samples, &mut batch, &mut carry, &*engine),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Defense in depth: the cap already encodes the budget, but a
+        // planner-managed engine gets the final say before any memory is
+        // committed. (Skipped entirely when no budget is set, so the
+        // planner is never consulted on the unbudgeted hot path.)
+        if let Some(b) = budget {
+            if let Some(peak) = engine.planned_peak(samples) {
+                if peak > b {
+                    metrics.record_rejected(batch.len());
+                    for r in &batch {
+                        let _ = r.resp.send(Err(ServeError::BudgetExceeded {
+                            batch: samples,
+                            planned_bytes: peak,
+                            budget_bytes: b,
+                        }));
+                    }
+                    continue;
+                }
             }
         }
 
@@ -157,24 +280,27 @@ fn worker_loop(
             batch_buf.extend_from_slice(&r.input);
         }
         let exec_start = Instant::now();
-        let result = engine.run_batch(&batch_buf, batch.len());
+        let result = engine.run_batch(&batch_buf, samples);
         let done = Instant::now();
 
         let waits: Vec<Duration> = batch.iter().map(|r| exec_start - r.enqueued).collect();
         let lats: Vec<Duration> = batch.iter().map(|r| done - r.enqueued).collect();
-        metrics.record_batch(batch.len(), &waits, &lats);
+        metrics.record_batch(samples, &waits, &lats);
 
         match result {
             Ok(out) => {
-                for (i, r) in batch.iter().enumerate() {
+                let mut off = 0;
+                for r in &batch {
+                    let k = r.input.len() / in_elems;
                     let _ = r
                         .resp
-                        .send(Ok(out[i * out_elems..(i + 1) * out_elems].to_vec()));
+                        .send(Ok(out[off * out_elems..(off + k) * out_elems].to_vec()));
+                    off += k;
                 }
             }
             Err(e) => {
                 for r in &batch {
-                    let _ = r.resp.send(Err(e.to_string()));
+                    let _ = r.resp.send(Err(ServeError::Engine(e.to_string())));
                 }
             }
         }
@@ -190,7 +316,11 @@ mod tests {
     fn batches_requests_and_answers_each() {
         let server = ModelServer::spawn(
             || Box::new(EchoEngine::new(2, 8)),
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(20),
+                ..BatchPolicy::default()
+            },
         );
         let rxs: Vec<_> = (0..6)
             .map(|i| server.submit(vec![i as f32, i as f32 + 0.5]))
@@ -208,9 +338,9 @@ mod tests {
     #[test]
     fn rejects_wrong_arity_without_touching_engine() {
         let server = ModelServer::spawn(|| Box::new(EchoEngine::new(3, 8)), BatchPolicy::default());
-        let rx = server.submit(vec![1.0]); // wrong size
+        let rx = server.submit(vec![1.0]); // not a multiple of 3
         let resp = rx.recv().unwrap();
-        assert!(resp.is_err());
+        assert!(matches!(resp, Err(ServeError::BadInput { got: 1, expect: 3 })));
         server.shutdown();
     }
 
@@ -218,7 +348,11 @@ mod tests {
     fn deadline_flushes_partial_batches() {
         let server = ModelServer::spawn(
             || Box::new(EchoEngine::new(1, 64)),
-            BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) },
+            BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(5),
+                ..BatchPolicy::default()
+            },
         );
         let rx = server.submit(vec![7.0]);
         // only one request: the deadline, not the size cap, must flush it
@@ -233,5 +367,102 @@ mod tests {
         let rx = server.submit(vec![1.0]);
         server.shutdown();
         assert_eq!(rx.recv().unwrap().unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn pre_batched_request_is_answered_whole() {
+        let server = ModelServer::spawn(
+            || Box::new(EchoEngine::new(2, 8)),
+            BatchPolicy { max_batch: 8, ..BatchPolicy::default() },
+        );
+        // 3 samples of 2 elements in one request.
+        let rx = server.submit(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0, 10.0, 12.0]);
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.max_batch_seen, 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn budget_clamps_batches_and_refuses_oversized_bursts() {
+        // Budget fits 3 samples (peak 100 B/sample, budget 350 B) against a
+        // policy cap of 8: the server must clamp every executed batch to
+        // <= 3 and refuse a pre-batched burst of 8 with BudgetExceeded.
+        let server = ModelServer::spawn(
+            || Box::new(EchoEngine::new(1, 64).with_peak_per_sample(100)),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+                mem_budget: Some(350),
+            },
+        );
+        let rxs: Vec<_> = (0..64).map(|i| server.submit(vec![i as f32])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32 * 2.0]);
+        }
+        let oversized = server.submit(vec![0.5f32; 8]);
+        match oversized.recv().unwrap() {
+            Err(ServeError::BudgetExceeded { batch, planned_bytes, budget_bytes }) => {
+                assert_eq!(batch, 8);
+                // The refusal probes the smallest over-budget size (cap+1 =
+                // 4 samples), never the client-chosen 8.
+                assert_eq!(planned_bytes, 400);
+                assert_eq!(budget_bytes, 350);
+            }
+            other => panic!("expected BudgetExceeded, got {other:?}"),
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.completed, 64, "the whole burst must be served");
+        assert!(
+            snap.max_batch_seen <= 3,
+            "batch {} formed over the budget cap",
+            snap.max_batch_seen
+        );
+        assert_eq!(snap.rejected, 1, "the oversized burst must be counted");
+        server.shutdown();
+    }
+
+    #[test]
+    fn budget_below_batch_one_refuses_everything() {
+        let server = ModelServer::spawn(
+            || Box::new(EchoEngine::new(1, 8).with_peak_per_sample(1000)),
+            BatchPolicy { mem_budget: Some(999), ..BatchPolicy::default() },
+        );
+        for i in 0..4 {
+            let resp = server.submit(vec![i as f32]).recv().unwrap();
+            assert!(
+                matches!(resp, Err(ServeError::BudgetExceeded { .. })),
+                "request {i} was not refused: {resp:?}"
+            );
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.rejected, 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_burst_without_budget_is_batch_too_large() {
+        let server = ModelServer::spawn(
+            || Box::new(EchoEngine::new(1, 4)),
+            BatchPolicy { max_batch: 4, ..BatchPolicy::default() },
+        );
+        let resp = server.submit(vec![0.0f32; 5]).recv().unwrap();
+        assert!(matches!(resp, Err(ServeError::BatchTooLarge { batch: 5, cap: 4 })));
+        assert_eq!(server.metrics().snapshot().rejected, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn budget_is_ignored_for_engines_that_cannot_report_peaks() {
+        // EchoEngine without peaks: the budget cannot bind, requests serve.
+        let server = ModelServer::spawn(
+            || Box::new(EchoEngine::new(1, 8)),
+            BatchPolicy { mem_budget: Some(1), ..BatchPolicy::default() },
+        );
+        assert_eq!(server.submit(vec![4.0]).recv().unwrap().unwrap(), vec![8.0]);
+        server.shutdown();
     }
 }

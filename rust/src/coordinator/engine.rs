@@ -4,6 +4,7 @@ use super::ArenaStats;
 use crate::exec::Executor;
 use crate::graph::Graph;
 use crate::planner::{registry, PlanService};
+use crate::records::UsageRecords;
 #[cfg(feature = "pjrt")]
 use crate::runtime::VariantSet;
 use anyhow::Result;
@@ -26,6 +27,22 @@ pub trait Engine {
     /// Planner-derived memory accounting, if the engine owns an arena.
     fn arena_stats(&self) -> ArenaStats {
         ArenaStats::default()
+    }
+    /// Planned arena peak (bytes) for a batch of `batch` samples, if the
+    /// engine's working memory is planner-managed. `None` means the engine
+    /// cannot predict its footprint, so a memory budget cannot bind it.
+    fn planned_peak(&self, batch: usize) -> Option<usize> {
+        let _ = batch;
+        None
+    }
+    /// Largest batch whose planned peak fits `budget_bytes`: the
+    /// admission cap [`super::ModelServer`] resolves at spawn when
+    /// [`super::BatchPolicy::mem_budget`] is set. `Some(0)` means even a
+    /// single sample does not fit; `None` means the engine cannot answer
+    /// (no planning), so the budget is not enforced.
+    fn max_servable_batch(&self, budget_bytes: usize) -> Option<usize> {
+        let _ = budget_bytes;
+        None
     }
 }
 
@@ -100,6 +117,8 @@ pub struct ExecutorEngine {
     strategy: &'static str,
     service: Arc<PlanService>,
     max_batch: usize,
+    /// Batch-1 usage records, the input to every budget query.
+    records: UsageRecords,
 }
 
 impl ExecutorEngine {
@@ -127,6 +146,7 @@ impl ExecutorEngine {
             .map_err(anyhow::Error::msg)?;
         let in_elems = graph.tensor(graph.inputs[0]).num_elements();
         let out_elems = graph.tensor(graph.outputs[0]).num_elements();
+        let records = exec.base_records().clone();
         Ok(ExecutorEngine {
             exec,
             in_elems,
@@ -134,6 +154,7 @@ impl ExecutorEngine {
             strategy: key,
             service,
             max_batch: DEFAULT_EXECUTOR_MAX_BATCH,
+            records,
         })
     }
 
@@ -166,6 +187,27 @@ impl Engine for ExecutorEngine {
             self.service.stats(),
         )
     }
+    fn planned_peak(&self, batch: usize) -> Option<usize> {
+        if batch == 0 {
+            return Some(0);
+        }
+        // A batch whose scaled footprint cannot even be represented would
+        // overflow inside planning; it certainly fits no budget, and `None`
+        // keeps the refusal path panic-free.
+        let naive = self.records.naive_total().max(1);
+        if batch > usize::MAX / naive {
+            return None;
+        }
+        self.service
+            .plan_records(&self.records, batch, Some(self.strategy))
+            .ok()
+            .map(|p| p.total)
+    }
+    fn max_servable_batch(&self, budget_bytes: usize) -> Option<usize> {
+        self.service
+            .max_servable_batch(&self.records, budget_bytes, Some(self.strategy))
+            .ok()
+    }
 }
 
 /// Trivial engine for coordinator unit tests: output = input scaled by 2.
@@ -174,11 +216,20 @@ pub struct EchoEngine {
     pub max_batch: usize,
     /// Batch sizes observed, for batching-policy assertions.
     pub seen_batches: Vec<usize>,
+    /// Pretend planned peak per sample, so budget-admission tests get a
+    /// linear, fully predictable footprint without a real model.
+    pub peak_per_sample: Option<usize>,
 }
 
 impl EchoEngine {
     pub fn new(elems: usize, max_batch: usize) -> Self {
-        EchoEngine { elems, max_batch, seen_batches: Vec::new() }
+        EchoEngine { elems, max_batch, seen_batches: Vec::new(), peak_per_sample: None }
+    }
+
+    /// Report a linear planned peak of `bytes` per sample.
+    pub fn with_peak_per_sample(mut self, bytes: usize) -> Self {
+        self.peak_per_sample = Some(bytes);
+        self
     }
 }
 
@@ -195,6 +246,12 @@ impl Engine for EchoEngine {
     fn run_batch(&mut self, input: &[f32], n: usize) -> Result<Vec<f32>> {
         self.seen_batches.push(n);
         Ok(input[..n * self.elems].iter().map(|v| v * 2.0).collect())
+    }
+    fn planned_peak(&self, batch: usize) -> Option<usize> {
+        self.peak_per_sample.map(|p| p * batch)
+    }
+    fn max_servable_batch(&self, budget_bytes: usize) -> Option<usize> {
+        self.peak_per_sample.map(|p| if p == 0 { usize::MAX } else { budget_bytes / p })
     }
 }
 
@@ -244,5 +301,27 @@ mod tests {
     fn unknown_strategy_rejected_at_construction() {
         let g = crate::models::blazeface();
         assert!(ExecutorEngine::new(&g, PlanService::shared(), "belady", 1).is_err());
+    }
+
+    #[test]
+    fn executor_engine_reports_planned_peaks_for_budget_admission() {
+        let g = crate::models::blazeface();
+        let svc = PlanService::shared();
+        let e = ExecutorEngine::new(&g, Arc::clone(&svc), "greedy-size", 3).unwrap();
+        let p1 = e.planned_peak(1).unwrap();
+        let p4 = e.planned_peak(4).unwrap();
+        assert!(p4 > p1, "peak must grow with batch ({p1} vs {p4})");
+        // The resolved cap fits the budget; the next batch would not.
+        let cap = e.max_servable_batch(2 * p1).unwrap();
+        assert!(cap >= 1);
+        assert!(e.planned_peak(cap).unwrap() <= 2 * p1);
+        assert!(e.planned_peak(cap + 1).unwrap() > 2 * p1);
+        assert_eq!(e.max_servable_batch(p1 - 1), Some(0));
+        // Engines without planning cannot answer, so budgets cannot bind.
+        assert_eq!(EchoEngine::new(1, 4).planned_peak(2), None);
+        assert_eq!(EchoEngine::new(1, 4).max_servable_batch(1024), None);
+        let echo = EchoEngine::new(1, 4).with_peak_per_sample(100);
+        assert_eq!(echo.planned_peak(3), Some(300));
+        assert_eq!(echo.max_servable_batch(350), Some(3));
     }
 }

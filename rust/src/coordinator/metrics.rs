@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 /// CLI and `benches/serving.rs` both print through this so their output
 /// agrees.
 pub fn render_arena_stats(s: &ArenaStats) -> String {
-    format!(
+    let mut line = format!(
         "arena {:.1} KiB planned vs {:.1} KiB naive ({:.1}x, {}) | plan cache {} hit / {} miss ({:.0}% hit) | arena pool {} reused / {} allocated",
         s.planned_bytes as f64 / 1024.0,
         s.naive_bytes as f64 / 1024.0,
@@ -21,7 +21,14 @@ pub fn render_arena_stats(s: &ArenaStats) -> String {
         s.cache_hit_rate() * 100.0,
         s.pool_reused,
         s.pool_allocated,
-    )
+    );
+    if s.warm_loaded > 0 || s.warm_skipped > 0 {
+        line.push_str(&format!(
+            " | warm start {} loaded / {} skipped",
+            s.warm_loaded, s.warm_skipped
+        ));
+    }
+    line
 }
 
 /// Thread-safe metrics sink shared between the worker and observers.
@@ -40,6 +47,8 @@ struct Inner {
     batches: Vec<usize>,
     /// Total requests completed.
     completed: u64,
+    /// Requests refused by budget-driven admission (never executed).
+    rejected: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -48,11 +57,18 @@ struct Inner {
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
     pub completed: u64,
+    /// Requests refused by admission control ([`crate::coordinator::ServeError::BudgetExceeded`]
+    /// / [`crate::coordinator::ServeError::BatchTooLarge`]) — the count the
+    /// paper's edge box reports instead of OOMing.
+    pub rejected: u64,
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
     pub mean_queue_us: u64,
     pub mean_batch: f64,
+    /// Largest batch actually executed — under a memory budget this stays
+    /// at or below the budget-clamped cap.
+    pub max_batch_seen: usize,
     pub throughput_rps: f64,
 }
 
@@ -68,6 +84,11 @@ impl Metrics {
         m.queue_us.extend(waits.iter().map(|d| d.as_micros() as u64));
         m.latencies_us
             .extend(latencies.iter().map(|d| d.as_micros() as u64));
+    }
+
+    /// Count `requests` refused by admission control.
+    pub fn record_rejected(&self, requests: usize) {
+        self.inner.lock().unwrap().rejected += requests as u64;
     }
 
     /// Summarize everything recorded so far.
@@ -88,6 +109,7 @@ impl Metrics {
         };
         MetricsSnapshot {
             completed: m.completed,
+            rejected: m.rejected,
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
@@ -101,6 +123,7 @@ impl Metrics {
             } else {
                 m.batches.iter().sum::<usize>() as f64 / m.batches.len() as f64
             },
+            max_batch_seen: m.batches.iter().copied().max().unwrap_or(0),
             throughput_rps: if wall > 0.0 { m.completed as f64 / wall } else { 0.0 },
         }
     }
@@ -122,6 +145,10 @@ mod tests {
         assert_eq!(s.p95_us, 95);
         assert_eq!(s.mean_queue_us, 10);
         assert_eq!(s.mean_batch, 4.0);
+        assert_eq!(s.max_batch_seen, 4);
+        assert_eq!(s.rejected, 0);
+        m.record_rejected(3);
+        assert_eq!(m.snapshot().rejected, 3);
     }
 
     #[test]
@@ -134,12 +161,19 @@ mod tests {
             cache_misses: 1,
             pool_reused: 2,
             pool_allocated: 2,
+            ..ArenaStats::default()
         };
         let line = render_arena_stats(&s);
         assert!(line.contains("7.5x"), "{line}");
         assert!(line.contains("3 hit / 1 miss"), "{line}");
         assert!(line.contains("75% hit"), "{line}");
         assert!(line.contains("2 reused / 2 allocated"), "{line}");
+        // The warm-start segment only appears once a plan directory was
+        // actually touched.
+        assert!(!line.contains("warm start"), "{line}");
+        let warmed = ArenaStats { warm_loaded: 4, warm_skipped: 1, ..s };
+        let line = render_arena_stats(&warmed);
+        assert!(line.contains("warm start 4 loaded / 1 skipped"), "{line}");
     }
 
     #[test]

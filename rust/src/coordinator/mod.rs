@@ -30,6 +30,69 @@ pub use router::Router;
 
 use std::time::Instant;
 
+/// Typed serving failure — what a [`Request`] can be refused with.
+///
+/// Budget-driven admission (MAFAT-style) depends on the refusal being
+/// machine-readable: a client that receives [`ServeError::BudgetExceeded`]
+/// can re-shard its burst below the reported budget instead of parsing a
+/// message string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Input length is not a non-zero multiple of the model's per-sample
+    /// arity.
+    BadInput {
+        /// Elements submitted.
+        got: usize,
+        /// Elements per sample the model expects.
+        expect: usize,
+    },
+    /// No model registered under this name.
+    UnknownModel(String),
+    /// The batch's planned arena peak does not fit the server's byte
+    /// budget — the admission refusal that replaces an OOM.
+    BudgetExceeded {
+        /// Samples in the refused batch.
+        batch: usize,
+        /// Planned arena bytes of the smallest over-budget batch — a lower
+        /// bound on what `batch` would need. (The refusal path never plans
+        /// the client-chosen size itself.)
+        planned_bytes: usize,
+        /// The server's configured budget.
+        budget_bytes: usize,
+    },
+    /// A pre-batched request larger than the server's batch cap (the cap
+    /// was policy- or engine-bound, not budget-bound).
+    BatchTooLarge {
+        /// Samples in the refused request.
+        batch: usize,
+        /// Largest admissible batch.
+        cap: usize,
+    },
+    /// The engine failed while executing the batch.
+    Engine(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::BadInput { got, expect } => {
+                write!(f, "input has {got} elems, model wants a non-zero multiple of {expect}")
+            }
+            ServeError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            ServeError::BudgetExceeded { batch, planned_bytes, budget_bytes } => write!(
+                f,
+                "batch {batch} needs at least {planned_bytes} planned bytes, over the {budget_bytes}-byte budget"
+            ),
+            ServeError::BatchTooLarge { batch, cap } => {
+                write!(f, "batch {batch} exceeds the server's cap of {cap}")
+            }
+            ServeError::Engine(e) => write!(f, "engine error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Planner-derived memory accounting for a served model, including the
 /// plan-cache and arena-pool reuse counters of the [`PlanService`] behind
 /// the engine (the serving-visible version of Tables 1–2).
@@ -51,6 +114,12 @@ pub struct ArenaStats {
     pub pool_reused: u64,
     /// Arena buffers freshly allocated.
     pub pool_allocated: u64,
+    /// Plans warm-started from a plan directory (planner invocations a
+    /// restart avoided).
+    pub warm_loaded: u64,
+    /// Plan-directory files skipped at warm start (corrupt, truncated, or
+    /// stale-strategy — never served, never fatal).
+    pub warm_skipped: u64,
 }
 
 impl ArenaStats {
@@ -73,6 +142,8 @@ impl ArenaStats {
             cache_misses: service.cache_misses,
             pool_reused: service.pool_reused,
             pool_allocated: service.pool_allocated,
+            warm_loaded: service.warm_loaded,
+            warm_skipped: service.warm_skipped,
         }
     }
 
@@ -98,7 +169,10 @@ impl ArenaStats {
 
 /// One inference request travelling through the coordinator.
 pub struct Request {
-    /// Flat input sample (one element of a batch).
+    /// Flat input: one sample, or a client-side pre-batched burst of `k`
+    /// concatenated samples (the length must be a non-zero multiple of the
+    /// model's per-sample arity). A pre-batched burst is admitted or
+    /// refused as a unit — it is never split across engine batches.
     pub input: Vec<f32>,
     /// Enqueue timestamp, for queue-wait metrics.
     pub enqueued: Instant,
@@ -107,7 +181,7 @@ pub struct Request {
 }
 
 /// The answer to a [`Request`].
-pub type Response = Result<Vec<f32>, String>;
+pub type Response = Result<Vec<f32>, ServeError>;
 
 #[cfg(test)]
 mod tests {
@@ -126,5 +200,15 @@ mod tests {
         assert_eq!(s.cache_hit_rate(), 0.0);
         let t = ArenaStats { cache_hits: 3, cache_misses: 1, ..ArenaStats::default() };
         assert!((t.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_error_display_carries_the_numbers() {
+        let e = ServeError::BudgetExceeded { batch: 8, planned_bytes: 4096, budget_bytes: 1024 };
+        let s = e.to_string();
+        assert!(s.contains("batch 8"), "{s}");
+        assert!(s.contains("4096"), "{s}");
+        assert!(s.contains("1024-byte budget"), "{s}");
+        assert!(ServeError::UnknownModel("x".into()).to_string().contains("unknown model 'x'"));
     }
 }

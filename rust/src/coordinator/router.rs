@@ -1,6 +1,6 @@
 //! Multi-model routing: name → [`ModelServer`].
 
-use super::{BatchPolicy, Engine, ModelServer, Response};
+use super::{BatchPolicy, Engine, ModelServer, Response, ServeError};
 use std::collections::HashMap;
 use std::sync::mpsc::Receiver;
 
@@ -31,7 +31,7 @@ impl Router {
             Some(s) => s.submit(input),
             None => {
                 let (tx, rx) = std::sync::mpsc::channel();
-                let _ = tx.send(Err(format!("unknown model '{model}'")));
+                let _ = tx.send(Err(ServeError::UnknownModel(model.to_string())));
                 rx
             }
         }
@@ -80,7 +80,7 @@ mod tests {
     fn unknown_model_errors() {
         let r = Router::new();
         let resp = r.submit("ghost", vec![1.0]).recv().unwrap();
-        assert!(resp.unwrap_err().contains("unknown model"));
+        assert_eq!(resp.unwrap_err(), ServeError::UnknownModel("ghost".into()));
     }
 
     #[test]
@@ -101,7 +101,11 @@ mod tests {
                     let g = crate::models::blazeface();
                     Box::new(ExecutorEngine::new(&g, svc, "greedy-size", 7).expect("engine"))
                 },
-                BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_micros(10) },
+                BatchPolicy {
+                    max_batch: 1,
+                    max_wait: std::time::Duration::from_micros(10),
+                    ..BatchPolicy::default()
+                },
             );
         }
         let in_elems = crate::models::blazeface()

@@ -336,6 +336,13 @@ impl Executor {
         self.batch
     }
 
+    /// The batch-1 usage records this executor was planned from — the
+    /// input to budget queries ([`PlanService::max_servable_batch`]) and
+    /// plan-directory warm starts.
+    pub fn base_records(&self) -> &UsageRecords {
+        &self.base_records
+    }
+
     /// Enable poisoning of dead tensors: any read-after-free becomes NaN.
     pub fn set_poison_dead(&mut self, on: bool) {
         self.poison_dead = on;

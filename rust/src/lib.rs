@@ -55,6 +55,16 @@
 //! println!("max servable batch in 64 MiB: {max}");
 //! println!("{:?}", service.stats());
 //! ```
+//!
+//! The budget query drives admission in the [`coordinator`]: a
+//! [`coordinator::BatchPolicy`] with `mem_budget` set clamps batches to the
+//! planned envelope and refuses oversized bursts with a typed
+//! [`coordinator::ServeError::BudgetExceeded`] instead of OOMing. The plan
+//! cache itself persists to a *plan directory*
+//! ([`planner::PlanCache::persist_dir`] /
+//! [`planner::PlanCache::warm_start`], format documented in
+//! [`planner::serialize`]), so a restarted server performs zero planner
+//! invocations for shapes it has already served.
 
 pub mod arena;
 pub mod coordinator;

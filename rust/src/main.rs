@@ -4,14 +4,24 @@
 //!
 //! ```text
 //! tensorarena records  <model>                      # §3 usage records & profiles
-//! tensorarena plan     <model> [shared|offset] [strategy]   # Figures 3–6
+//! tensorarena plan     <model> [shared|offset] [strategy]
+//!                      [--spill-dir DIR] [--batches 1,2,4]   # Figures 3–6 + plan spills
 //! tensorarena table1                                # Table 1 (Shared Objects)
 //! tensorarena table2 [--ratios]                     # Table 2 (Offset Calculation)
 //! tensorarena cachesim <model> [kib]                # §1 locality claim
 //! tensorarena serve [--model M] [--strategy S] [--requests N]
-//!                   [--max-batch B] [--wait-ms W] [--artifacts DIR]  # E2E serving
+//!                   [--max-batch B] [--wait-ms W] [--artifacts DIR]
+//!                   [--mem-budget BYTES] [--plan-dir DIR]    # E2E serving
 //! tensorarena models                                # list zoo models
 //! ```
+//!
+//! `--mem-budget` caps the planned arena: the server clamps batches to the
+//! largest batch whose *planned* peak fits and refuses oversized bursts
+//! with a typed error instead of OOMing (`BYTES` accepts `k`/`m`/`g`
+//! suffixes). `--plan-dir` warm-starts the plan cache from a directory of
+//! spilled plans at boot and persists it back at shutdown, so a restarted
+//! server re-plans nothing it has already planned; `plan --spill-dir`
+//! pre-populates such a directory offline.
 //!
 //! Strategy names come from `planner::registry` — the single list the
 //! tables, the plan cache, and this CLI all share.
@@ -21,11 +31,26 @@
 use tensorarena::coordinator::{self, ArenaStats, BatchPolicy, Router};
 use tensorarena::exec::cachesim;
 use tensorarena::models;
-use tensorarena::planner::{offset, registry, OffsetPlanner, PlanService, SharedObjectPlanner};
+use tensorarena::planner::{
+    offset, registry, OffsetPlanner, PlanCache, PlanService, SharedObjectPlanner,
+};
 use tensorarena::records::UsageRecords;
 use tensorarena::report::{self, MIB};
 use tensorarena::rng::SplitMix64;
+use std::path::Path;
 use std::sync::Arc;
+
+/// Parse a byte count with an optional `k`/`m`/`g` (KiB/MiB/GiB) suffix.
+fn parse_bytes(s: &str) -> Option<usize> {
+    let t = s.trim();
+    let (digits, mult): (&str, usize) = match t.chars().last()? {
+        'k' | 'K' => (&t[..t.len() - 1], 1 << 10),
+        'm' | 'M' => (&t[..t.len() - 1], 1 << 20),
+        'g' | 'G' => (&t[..t.len() - 1], 1 << 30),
+        _ => (t, 1),
+    };
+    digits.parse::<usize>().ok()?.checked_mul(mult)
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -102,17 +127,59 @@ fn cmd_records(args: &[String]) -> i32 {
 }
 
 fn cmd_plan(args: &[String]) -> i32 {
-    let Some(name) = args.first() else {
-        eprintln!("usage: tensorarena plan <model> [shared|offset] [strategy]");
+    // Split flags (--spill-dir DIR, --batches CSV) from positionals.
+    let mut spill_dir: Option<String> = None;
+    let mut batches: Vec<usize> = vec![1];
+    let mut pos: Vec<&str> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--spill-dir" => {
+                let Some(d) = args.get(i + 1) else {
+                    eprintln!("--spill-dir wants a directory");
+                    return 2;
+                };
+                spill_dir = Some(d.clone());
+                i += 2;
+            }
+            "--batches" => {
+                let parsed: Option<Vec<usize>> = args.get(i + 1).and_then(|v| {
+                    v.split(',')
+                        .map(|b| b.trim().parse::<usize>().ok().filter(|&b| b > 0))
+                        .collect::<Option<Vec<usize>>>()
+                });
+                let Some(list) = parsed.filter(|l| !l.is_empty()) else {
+                    eprintln!("--batches wants a comma-separated list of positive batch sizes");
+                    return 2;
+                };
+                batches = list;
+                i += 2;
+            }
+            other => {
+                pos.push(other);
+                i += 1;
+            }
+        }
+    }
+    if batches != [1] && spill_dir.is_none() {
+        eprintln!("--batches only applies together with --spill-dir; ignoring");
+    }
+    let Some(&name) = pos.first() else {
+        eprintln!(
+            "usage: tensorarena plan <model> [shared|offset] [strategy] [--spill-dir DIR] [--batches 1,2,4]"
+        );
         return 2;
     };
-    let approach = args.get(1).map(String::as_str).unwrap_or("offset");
-    let strategy = args.get(2).map(String::as_str).unwrap_or("greedy-size");
+    let approach = pos.get(1).copied().unwrap_or("offset");
+    let strategy = pos.get(2).copied().unwrap_or("greedy-size");
     let Some(g) = load_model(name) else { return 2 };
     let recs = UsageRecords::from_graph(&g);
     let p = recs.profiles();
     match approach {
         "shared" => {
+            if spill_dir.is_some() {
+                eprintln!("--spill-dir only applies to offset plans (the arena format); ignoring");
+            }
             let Some(planner) = registry::shared_strategy(strategy) else {
                 eprintln!(
                     "unknown shared strategy '{strategy}' (known: {})",
@@ -178,6 +245,27 @@ fn cmd_plan(args: &[String]) -> i32 {
             if recs.num_ops <= 120 {
                 println!("\n{}", report::render_offset_timeline(&recs, &plan, 16));
             }
+            if let Some(dir) = &spill_dir {
+                // Populate a plan directory `serve --plan-dir` can
+                // warm-start from: one file per requested batch.
+                let cache = PlanCache::new();
+                for &b in &batches {
+                    if let Err(e) = cache.get_or_plan(&recs, b, strategy) {
+                        eprintln!("planning batch {b} for spill: {e}");
+                        return 1;
+                    }
+                }
+                match cache.persist_dir(Path::new(dir)) {
+                    Ok(report) => println!(
+                        "spilled {} plan(s) (batches {:?}) to {dir}",
+                        report.written, batches
+                    ),
+                    Err(e) => {
+                        eprintln!("spilling to {dir}: {e}");
+                        return 1;
+                    }
+                }
+            }
         }
         _ => {
             eprintln!("approach must be 'shared' or 'offset'");
@@ -237,9 +325,10 @@ fn cmd_cachesim(args: &[String]) -> i32 {
 
 fn cmd_serve(args: &[String]) -> i32 {
     // Parse --artifacts DIR --requests N --max-batch B --wait-ms W
-    // --model M --strategy S. With PJRT artifacts (and the `pjrt` feature)
-    // the AOT path runs; otherwise the pure-Rust ExecutorEngine path
-    // serves `--model` through a shared PlanService.
+    // --model M --strategy S --mem-budget BYTES --plan-dir DIR. With PJRT
+    // artifacts (and the `pjrt` feature) the AOT path runs; otherwise the
+    // pure-Rust ExecutorEngine path serves `--model` through a shared
+    // PlanService.
     let mut dir = "artifacts".to_string();
     let mut dir_given = false;
     let mut requests = 256usize;
@@ -247,6 +336,8 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut wait_ms = 2u64;
     let mut model = "blazeface".to_string();
     let mut strategy = PlanService::DEFAULT_STRATEGY.to_string();
+    let mut mem_budget: Option<usize> = None;
+    let mut plan_dir: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -273,6 +364,22 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
             "--strategy" => {
                 strategy = args.get(i + 1).cloned().unwrap_or(strategy);
+                i += 2;
+            }
+            "--mem-budget" => {
+                let Some(b) = args.get(i + 1).and_then(|v| parse_bytes(v)) else {
+                    eprintln!("--mem-budget wants a byte count (suffixes k/m/g allowed)");
+                    return 2;
+                };
+                mem_budget = Some(b);
+                i += 2;
+            }
+            "--plan-dir" => {
+                let Some(d) = args.get(i + 1) else {
+                    eprintln!("--plan-dir wants a directory");
+                    return 2;
+                };
+                plan_dir = Some(d.clone());
                 i += 2;
             }
             other => {
@@ -302,7 +409,15 @@ fn cmd_serve(args: &[String]) -> i32 {
              feature); serving the pure-Rust executor path"
         );
     }
-    match serve_pure(&model, &strategy, requests, max_batch, wait_ms) {
+    match serve_pure(
+        &model,
+        &strategy,
+        requests,
+        max_batch,
+        wait_ms,
+        mem_budget,
+        plan_dir.as_deref(),
+    ) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("serve failed: {e}");
@@ -314,13 +429,17 @@ fn cmd_serve(args: &[String]) -> i32 {
 /// Artifact-free serving: the arena [`tensorarena::exec::Executor`] behind
 /// the coordinator, planned through one shared [`PlanService`] whose
 /// cache-hit and pool-reuse counters are reported next to the latency
-/// numbers.
+/// numbers. With `mem_budget`, the server clamps batches to the planned
+/// envelope and refuses what cannot fit; with `plan_dir`, the plan cache
+/// is warm-started at boot and persisted back at shutdown.
 fn serve_pure(
     model: &str,
     strategy: &str,
     requests: usize,
     max_batch: usize,
     wait_ms: u64,
+    mem_budget: Option<usize>,
+    plan_dir: Option<&str>,
 ) -> Result<(), String> {
     use tensorarena::coordinator::engine::ExecutorEngine;
 
@@ -329,6 +448,17 @@ fn serve_pure(
     };
     let service = PlanService::shared();
     let recs = UsageRecords::from_graph(&g);
+    if let Some(dir) = plan_dir {
+        let report = service
+            .warm_start(Path::new(dir), &recs)
+            .map_err(|e| format!("warm-starting from {dir}: {e}"))?;
+        println!(
+            "plan dir {dir}: warm-started {} plan(s), skipped {} ({} foreign)",
+            report.loaded,
+            report.skipped(),
+            report.skipped_foreign,
+        );
+    }
     let plan = service
         .plan_records(&recs, 1, Some(strategy))
         .map_err(|e| e.to_string())?;
@@ -338,6 +468,16 @@ fn serve_pure(
         recs.naive_total() as f64 / 1024.0,
         recs.naive_total() as f64 / plan.total_size().max(1) as f64,
     );
+    if let Some(budget) = mem_budget {
+        let cap = service
+            .max_servable_batch(&recs, budget, Some(strategy))
+            .map_err(|e| e.to_string())?;
+        println!(
+            "mem budget {:.1} KiB: max servable batch {cap}{}",
+            budget as f64 / 1024.0,
+            if cap < max_batch { " (clamping the batcher)" } else { "" },
+        );
+    }
     let in_elems = g.tensor(g.inputs[0]).num_elements();
 
     let mut router = Router::new();
@@ -358,6 +498,7 @@ fn serve_pure(
             BatchPolicy {
                 max_batch,
                 max_wait: std::time::Duration::from_millis(wait_ms),
+                mem_budget,
             },
         );
     }
@@ -379,16 +520,33 @@ fn serve_pure(
         }
     }
     let wall = t0.elapsed();
+    // Snapshot the burst before probing, so the reported latency/batch
+    // numbers describe the measured workload, not the probe.
     let snap = router.server(model).unwrap().metrics().snapshot();
+    // Under a budget, probe the envelope: one pre-batched burst at the
+    // nominal max batch. If the budget clamped the server below it, the
+    // burst is refused with the typed admission error (and counted) —
+    // the MAFAT-style behaviour an OOMing server cannot offer.
+    if mem_budget.is_some() {
+        let probe = vec![0f32; in_elems * max_batch.max(1)];
+        match router.submit(model, probe).recv() {
+            Ok(Ok(_)) => println!("budget probe: burst of {} admitted", max_batch.max(1)),
+            Ok(Err(e)) => println!("budget probe: refused — {e}"),
+            Err(_) => eprintln!("budget probe: worker died"),
+        }
+    }
+    let rejected = router.server(model).unwrap().metrics().snapshot().rejected;
     println!(
-        "{ok}/{requests} ok in {:.3}s -> {:.1} req/s | p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | mean batch {:.2}, mean queue {:.2} ms",
+        "{ok}/{requests} ok in {:.3}s -> {:.1} req/s | p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | mean batch {:.2} (max {}), mean queue {:.2} ms | {} rejected",
         wall.as_secs_f64(),
         ok as f64 / wall.as_secs_f64(),
         snap.p50_us as f64 / 1000.0,
         snap.p95_us as f64 / 1000.0,
         snap.p99_us as f64 / 1000.0,
         snap.mean_batch,
+        snap.max_batch_seen,
         snap.mean_queue_us as f64 / 1000.0,
+        rejected,
     );
     router.shutdown();
     let st = service.stats();
@@ -408,6 +566,15 @@ fn serve_pure(
         max_batch.max(1),
         coordinator::render_arena_stats(&stats)
     );
+    if let Some(dir) = plan_dir {
+        let report = service
+            .persist_dir(Path::new(dir))
+            .map_err(|e| format!("persisting to {dir}: {e}"))?;
+        println!(
+            "plan dir {dir}: persisted {} plan(s) for the next start",
+            report.written
+        );
+    }
     Ok(())
 }
 
@@ -463,6 +630,7 @@ fn serve_bench(dir: &str, requests: usize, max_batch: usize, wait_ms: u64) -> an
         BatchPolicy {
             max_batch,
             max_wait: std::time::Duration::from_millis(wait_ms),
+            ..BatchPolicy::default()
         },
     );
 

@@ -19,6 +19,7 @@ use super::serialize::{self, LoadError};
 use super::{registry, OffsetPlan, PlanError};
 use crate::records::UsageRecords;
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -54,13 +55,56 @@ impl std::error::Error for PlanServiceError {}
 /// Cache key: records fingerprint × batch × canonical strategy key.
 type Key = (u64, usize, &'static str);
 
+/// Outcome of [`PlanCache::warm_start`]: how many plan files seeded the
+/// cache and why the rest were skipped. Skips are never fatal — a corrupt
+/// file must cost a planner invocation, not a crashed server.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WarmStartReport {
+    /// Plans loaded into the cache (planner invocations avoided).
+    pub loaded: usize,
+    /// Files whose fingerprint names a different record set (another
+    /// model's plans sharing the directory) — left alone, not a defect.
+    pub skipped_foreign: usize,
+    /// Files naming a strategy no longer in the registry.
+    pub skipped_stale_strategy: usize,
+    /// Files that failed to parse or verify (truncated, checksum-corrupt,
+    /// record-mismatched, unparseable name).
+    pub skipped_corrupt: usize,
+}
+
+impl WarmStartReport {
+    /// Everything skipped for a *suspect* reason (foreign files are not
+    /// suspect).
+    pub fn skipped(&self) -> usize {
+        self.skipped_stale_strategy + self.skipped_corrupt
+    }
+}
+
+/// Outcome of [`PlanCache::persist_dir`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PersistReport {
+    /// Plan files written (atomically) into the directory.
+    pub written: usize,
+    /// Resident plans that could not be serialized because their source
+    /// records were not retained (not produced by this cache's miss/load
+    /// paths).
+    pub skipped: usize,
+}
+
 /// Thread-safe memoization of offset plans, keyed by
 /// `(records fingerprint, batch, strategy)`.
+///
+/// Lock order: `plans` before `records`, everywhere both are held.
 #[derive(Default)]
 pub struct PlanCache {
     plans: Mutex<HashMap<Key, Arc<OffsetPlan>>>,
+    /// Batch-1 records per fingerprint — what [`Self::persist_dir`] needs
+    /// to serialize a resident plan next to the records it plans.
+    records: Mutex<HashMap<u64, UsageRecords>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    warm_loaded: AtomicU64,
+    warm_skipped: AtomicU64,
 }
 
 impl PlanCache {
@@ -77,6 +121,17 @@ impl PlanCache {
     /// Cache misses (= planner invocations) so far.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Plans seeded from a plan directory by [`Self::warm_start`] so far.
+    pub fn warm_loaded(&self) -> u64 {
+        self.warm_loaded.load(Ordering::Relaxed)
+    }
+
+    /// Plan-directory files skipped by [`Self::warm_start`] so far
+    /// (corrupt, truncated, or stale-strategy; foreign files not counted).
+    pub fn warm_skipped(&self) -> u64 {
+        self.warm_skipped.load(Ordering::Relaxed)
     }
 
     /// Number of distinct plans resident.
@@ -119,7 +174,19 @@ impl PlanCache {
         plan.validate(&scaled).map_err(PlanServiceError::Infeasible)?;
         let plan = Arc::new(plan);
         plans.insert(key, Arc::clone(&plan));
+        self.retain_records(key.0, records);
         Ok(plan)
+    }
+
+    /// Remember the batch-1 records behind `fingerprint`, so
+    /// [`Self::persist_dir`] can serialize this plan later. Caller may hold
+    /// the `plans` lock (lock order: `plans` then `records`).
+    fn retain_records(&self, fingerprint: u64, records: &UsageRecords) {
+        self.records
+            .lock()
+            .unwrap()
+            .entry(fingerprint)
+            .or_insert_with(|| records.clone());
     }
 
     /// Serialize the plan for `(records, batch, strategy)` in the
@@ -136,10 +203,13 @@ impl PlanCache {
         Ok(serialize::offset_plan_to_string(&plan, &records.scaled(batch)))
     }
 
-    /// Seed the cache from a previously spilled plan. The text is verified
-    /// against the batch-scaled records (checksum, record match,
-    /// feasibility) before insertion, so a stale plan for a changed model
-    /// fails loudly instead of serving corrupted offsets.
+    /// Seed the cache from a previously spilled plan. The caller-supplied
+    /// key is never trusted on its own: the record set embedded in the
+    /// text is verified field by field — count, full id coverage (no
+    /// dropped or duplicated lines), every `(size, first_op, last_op)` —
+    /// against `records.scaled(batch)`, which is exactly the fingerprint
+    /// input, plus checksum and feasibility. A plan spilled for one model
+    /// (or another batch) can therefore never be filed under this key.
     ///
     /// The v1 text format carries no strategy tag, so the caller's
     /// `strategy` names the slot the plan is filed under — loading a spill
@@ -162,7 +232,116 @@ impl PlanCache {
             .lock()
             .unwrap()
             .insert(key, Arc::clone(&plan));
+        self.retain_records(key.0, records);
         Ok(plan)
+    }
+
+    /// Persist every resident plan into `dir` in the plan-directory format
+    /// (see [`super::serialize`]'s module docs): one
+    /// `<fingerprint>-b<batch>-<strategy>.plan` file per cache key, each
+    /// written to a `.tmp` sibling and atomically renamed into place, so a
+    /// concurrent [`Self::warm_start`] never observes a torn file.
+    /// Existing files for the same key are replaced.
+    pub fn persist_dir(&self, dir: &Path) -> std::io::Result<PersistReport> {
+        std::fs::create_dir_all(dir)?;
+        let plans: Vec<(Key, Arc<OffsetPlan>)> = self
+            .plans
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, p)| (*k, Arc::clone(p)))
+            .collect();
+        let records = self.records.lock().unwrap().clone();
+        let mut report = PersistReport::default();
+        for ((fingerprint, batch, strategy), plan) in plans {
+            let Some(base) = records.get(&fingerprint) else {
+                report.skipped += 1;
+                continue;
+            };
+            let text = serialize::offset_plan_to_string(&plan, &base.scaled(batch));
+            let name = serialize::plan_file_name(fingerprint, batch, strategy);
+            // Per-process tmp name: two servers persisting into a shared
+            // fleet directory must not clobber each other's half-written
+            // file before the atomic rename.
+            let tmp = dir.join(format!(".{name}.{}.tmp", std::process::id()));
+            std::fs::write(&tmp, text.as_bytes())?;
+            std::fs::rename(&tmp, dir.join(&name))?;
+            report.written += 1;
+        }
+        Ok(report)
+    }
+
+    /// Seed the cache from a plan directory: every file whose name carries
+    /// `records`' fingerprint is loaded through [`Self::load`] (full
+    /// verification — checksum, field-by-field record match with exact id
+    /// coverage, bounded header fields, feasibility). Files for other
+    /// models are left alone; files that
+    /// name an unregistered strategy or fail verification are **skipped
+    /// with a warning**, never served and never fatal. A missing directory
+    /// is an ordinary cold start.
+    ///
+    /// After a warm start against the directory a previous run persisted,
+    /// every previously-seen `(batch, strategy)` plan is a cache hit: zero
+    /// planner invocations on the restart path.
+    pub fn warm_start(
+        &self,
+        dir: &Path,
+        records: &UsageRecords,
+    ) -> std::io::Result<WarmStartReport> {
+        let fingerprint = serialize::records_fingerprint(records);
+        let mut report = WarmStartReport::default();
+        let entries = match std::fs::read_dir(dir) {
+            Ok(entries) => entries,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(report),
+            Err(e) => return Err(e),
+        };
+        for entry in entries {
+            let entry = entry?;
+            let file_name = entry.file_name();
+            let Some(name) = file_name.to_str() else { continue };
+            if !name.ends_with(".plan") {
+                continue; // .tmp leftovers, READMEs, ...
+            }
+            let Some((file_fp, batch, strategy)) = serialize::parse_plan_file_name(name) else {
+                report.skipped_corrupt += 1;
+                self.warm_skipped.fetch_add(1, Ordering::Relaxed);
+                eprintln!("warm-start: skipping '{name}': unparseable plan file name");
+                continue;
+            };
+            if file_fp != fingerprint {
+                report.skipped_foreign += 1;
+                continue;
+            }
+            if registry::offset_key(&strategy) != Some(strategy.as_str()) {
+                report.skipped_stale_strategy += 1;
+                self.warm_skipped.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "warm-start: skipping '{name}': strategy '{strategy}' is not a registered key"
+                );
+                continue;
+            }
+            let text = match std::fs::read_to_string(entry.path()) {
+                Ok(text) => text,
+                Err(e) => {
+                    report.skipped_corrupt += 1;
+                    self.warm_skipped.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("warm-start: skipping '{name}': {e}");
+                    continue;
+                }
+            };
+            match self.load(&text, records, batch, &strategy) {
+                Ok(_) => {
+                    report.loaded += 1;
+                    self.warm_loaded.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    report.skipped_corrupt += 1;
+                    self.warm_skipped.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("warm-start: skipping '{name}': {e}");
+                }
+            }
+        }
+        Ok(report)
     }
 
     /// Largest batch whose **planned** (not naive) footprint under
@@ -289,6 +468,69 @@ mod tests {
             PlanCache::new().load(&text, &changed, 1, "greedy-size"),
             Err(PlanServiceError::Load(_))
         ));
+    }
+
+    fn scratch_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tensorarena-cache-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn persist_dir_then_warm_start_restores_every_plan_without_planning() {
+        let dir = scratch_dir("roundtrip");
+        let recs = example_records();
+        let warm = PlanCache::new();
+        for strategy in ["greedy-size", "greedy-breadth"] {
+            for batch in [1usize, 2, 4] {
+                warm.get_or_plan(&recs, batch, strategy).unwrap();
+            }
+        }
+        let persisted = warm.persist_dir(&dir).unwrap();
+        assert_eq!(persisted, PersistReport { written: 6, skipped: 0 });
+
+        let cold = PlanCache::new();
+        let report = cold.warm_start(&dir, &recs).unwrap();
+        assert_eq!(report.loaded, 6, "{report:?}");
+        assert_eq!(report.skipped(), 0, "{report:?}");
+        assert_eq!(cold.warm_loaded(), 6);
+        for strategy in ["greedy-size", "greedy-breadth"] {
+            for batch in [1usize, 2, 4] {
+                let a = cold.get_or_plan(&recs, batch, strategy).unwrap();
+                let b = warm.get_or_plan(&recs, batch, strategy).unwrap();
+                assert_eq!(*a, *b, "{strategy} batch {batch} diverged across restart");
+            }
+        }
+        assert_eq!(cold.misses(), 0, "warm start must avoid every planner invocation");
+        assert_eq!(cold.hits(), 6);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn warm_start_on_missing_dir_is_an_ordinary_cold_start() {
+        let dir = scratch_dir("missing");
+        let cache = PlanCache::new();
+        let report = cache.warm_start(&dir, &example_records()).unwrap();
+        assert_eq!(report, WarmStartReport::default());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn warm_started_cache_can_re_persist() {
+        // A restarted server that loads a plan dir and then shuts down must
+        // be able to write the same dir back (records retained on load).
+        let dir = scratch_dir("repersist");
+        let recs = example_records();
+        let warm = PlanCache::new();
+        warm.get_or_plan(&recs, 2, "greedy-size").unwrap();
+        warm.persist_dir(&dir).unwrap();
+
+        let cold = PlanCache::new();
+        assert_eq!(cold.warm_start(&dir, &recs).unwrap().loaded, 1);
+        let again = cold.persist_dir(&dir).unwrap();
+        assert_eq!(again, PersistReport { written: 1, skipped: 0 });
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

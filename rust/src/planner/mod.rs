@@ -30,7 +30,7 @@ pub mod validate;
 
 use crate::records::UsageRecords;
 
-pub use cache::{PlanCache, PlanServiceError};
+pub use cache::{PersistReport, PlanCache, PlanServiceError, WarmStartReport};
 pub use service::{PlanService, PlanServiceStats};
 pub use validate::PlanError;
 

@@ -14,6 +14,39 @@
 //! The embedded `(size, first_op, last_op)` triples let the loader verify
 //! the plan matches the records it is applied to — loading a stale plan
 //! against a changed model fails loudly instead of corrupting tensors.
+//! Every record id must appear **exactly once**: a file with a dropped or
+//! duplicated record line is rejected even when its checksum is consistent
+//! (FNV-1a is not cryptographic — anyone can recompute it), so a crafted
+//! or mis-merged file can never half-load into a plan the planner never
+//! produced.
+//!
+//! # On-disk plan-directory format
+//!
+//! A *plan directory* persists a whole [`super::cache::PlanCache`] so a
+//! restarted server warm-starts with zero planner invocations
+//! ([`super::cache::PlanCache::persist_dir`] /
+//! [`super::cache::PlanCache::warm_start`]). It is a flat directory with
+//! one file per cache key:
+//!
+//! ```text
+//! <dir>/
+//!   <fingerprint>-b<batch>-<strategy>.plan
+//! ```
+//!
+//! * `<fingerprint>` — 16 lowercase hex digits, [`records_fingerprint`] of
+//!   the **batch-1** records (the plan-cache key fingerprint);
+//! * `<batch>` — decimal batch size (≥ 1) the plan was scaled to;
+//! * `<strategy>` — the canonical registry key (kebab-case, may itself
+//!   contain `-`; the separators are unambiguous because hex digits and
+//!   decimals never contain `-`).
+//!
+//! Each file's *content* is the v1 text format above, serialized against
+//! the batch-scaled records. Writers create files atomically (write to a
+//! dot-prefixed, per-process `.<name>.<pid>.tmp` sibling, then rename) so
+//! readers never see a torn file even when a fleet shares the directory;
+//! loaders skip — never crash on, never serve — any file that
+//! is truncated, checksum-corrupt, fingerprint-mismatched, or names a
+//! strategy that is no longer registered, and count the skips.
 
 use super::{OffsetPlan, SharedObjectPlan};
 use crate::records::UsageRecords;
@@ -125,8 +158,12 @@ fn split_checksum(text: &str) -> Result<(&str, u64), LoadError> {
     Ok((body, sum))
 }
 
-/// Load and verify an offset plan against `records`.
-pub fn offset_plan_from_str(text: &str, records: &UsageRecords) -> Result<OffsetPlan, LoadError> {
+/// Checksum-verified parse of a v1 offset-plan text: the declared total
+/// and, per record id, `(offset, size, first_op, last_op)`. Every record
+/// id must appear exactly once — a file with a dropped or duplicated line
+/// (checksummed consistently; FNV-1a is not cryptographic) must never
+/// half-load into a plan the planner did not produce.
+fn parse_offset_plan(text: &str) -> Result<(usize, Vec<(usize, usize, usize, usize)>), LoadError> {
     let (body, sum) = split_checksum(text)?;
     if fnv1a(body.as_bytes()) != sum {
         return Err(LoadError::BadChecksum);
@@ -139,10 +176,14 @@ pub fn offset_plan_from_str(text: &str, records: &UsageRecords) -> Result<Offset
     }
     let n: usize = h[3].parse().map_err(|_| LoadError::BadHeader(header.into()))?;
     let total: usize = h[4].parse().map_err(|_| LoadError::BadHeader(header.into()))?;
-    if n != records.len() {
+    // `n` is untrusted input: bound it by the actual number of record
+    // lines (each record needs its own line) *before* allocating anything
+    // proportional to it — a crafted header count must be a skippable
+    // error for loaders, not a capacity-overflow abort.
+    if n > lines.clone().count() {
         return Err(LoadError::RecordMismatch { record: n, field: "count" });
     }
-    let mut offsets = vec![0usize; n];
+    let mut rows: Vec<Option<(usize, usize, usize, usize)>> = vec![None; n];
     for (li, line) in lines.enumerate() {
         let f: Vec<usize> = line
             .split_whitespace()
@@ -155,6 +196,36 @@ pub fn offset_plan_from_str(text: &str, records: &UsageRecords) -> Result<Offset
         if id >= n {
             return Err(LoadError::Malformed(li + 2));
         }
+        if rows[id].is_some() {
+            return Err(LoadError::RecordMismatch { record: id, field: "duplicate" });
+        }
+        rows[id] = Some((offset, size, first, last));
+    }
+    rows.into_iter()
+        .enumerate()
+        .map(|(id, row)| row.ok_or(LoadError::RecordMismatch { record: id, field: "missing" }))
+        .collect::<Result<Vec<_>, _>>()
+        .map(|rows| (total, rows))
+}
+
+/// Load and verify an offset plan against `records`.
+pub fn offset_plan_from_str(text: &str, records: &UsageRecords) -> Result<OffsetPlan, LoadError> {
+    let (total, rows) = parse_offset_plan(text)?;
+    if rows.len() != records.len() {
+        return Err(LoadError::RecordMismatch { record: rows.len(), field: "count" });
+    }
+    // The declared total is untrusted too: feasibility only bounds it from
+    // below (every tensor must fit), so an inflated total would pass every
+    // record check yet poison budget queries and arena sizing. No registry
+    // strategy ever exceeds the naive sum — reject anything above it.
+    if total > records.naive_total() {
+        return Err(LoadError::Infeasible(format!(
+            "declared arena total {total} exceeds the records' naive bound {}",
+            records.naive_total()
+        )));
+    }
+    let mut offsets = vec![0usize; rows.len()];
+    for (id, (offset, size, first, last)) in rows.into_iter().enumerate() {
         let r = &records.records[id];
         if r.size != size {
             return Err(LoadError::RecordMismatch { record: id, field: "size" });
@@ -171,6 +242,33 @@ pub fn offset_plan_from_str(text: &str, records: &UsageRecords) -> Result<Offset
     plan.validate(records)
         .map_err(|e| LoadError::Infeasible(e.to_string()))?;
     Ok(plan)
+}
+
+/// File name of one plan inside a plan directory (see the module docs):
+/// `<fingerprint>-b<batch>-<strategy>.plan`, with `fingerprint` the
+/// **batch-1** records fingerprint — exactly the plan-cache key.
+pub fn plan_file_name(fingerprint: u64, batch: usize, strategy: &str) -> String {
+    format!("{fingerprint:016x}-b{batch}-{strategy}.plan")
+}
+
+/// Parse a plan-directory file name back into `(fingerprint, batch,
+/// strategy)`; `None` for anything that is not a well-formed plan file
+/// name (loaders skip such entries).
+pub fn parse_plan_file_name(name: &str) -> Option<(u64, usize, String)> {
+    let stem = name.strip_suffix(".plan")?;
+    // Hex digits never contain '-', so the first "-b" is our separator
+    // even though strategy keys (e.g. "greedy-breadth") contain "-b".
+    let (fp_hex, rest) = stem.split_once("-b")?;
+    if fp_hex.len() != 16 || !fp_hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    let fingerprint = u64::from_str_radix(fp_hex, 16).ok()?;
+    let (batch_str, strategy) = rest.split_once('-')?;
+    let batch: usize = batch_str.parse().ok()?;
+    if batch == 0 || strategy.is_empty() {
+        return None;
+    }
+    Some((fingerprint, batch, strategy.to_string()))
 }
 
 #[cfg(test)]
@@ -282,6 +380,123 @@ mod tests {
         assert_ne!(records_fingerprint(&a), records_fingerprint(&c));
         let d = crate::records::UsageRecords::from_triples(&[(0, 1, 64), (1, 3, 128)]);
         assert_ne!(records_fingerprint(&a), records_fingerprint(&d));
+    }
+
+    /// Re-checksum a tampered body so only the *structural* defence can
+    /// catch it — FNV-1a is not cryptographic and anyone can recompute it.
+    fn rechecksum(body_and_sum: &str) -> String {
+        let body = &body_and_sum[..body_and_sum.rfind("checksum ").unwrap()];
+        let sum = fnv1a(body.as_bytes());
+        format!("{body}checksum {sum:016x}\n")
+    }
+
+    #[test]
+    fn dropped_record_line_rejected_even_with_consistent_checksum() {
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        // Drop record 3's line and recompute the checksum: without the
+        // coverage check this half-loads with record 3 at offset 0.
+        let dropped: String = text
+            .lines()
+            .filter(|l| !l.starts_with("3 "))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert_eq!(
+            offset_plan_from_str(&rechecksum(&dropped), &recs),
+            Err(LoadError::RecordMismatch { record: 3, field: "missing" })
+        );
+    }
+
+    #[test]
+    fn duplicated_record_line_rejected_even_with_consistent_checksum() {
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        let line3 = text.lines().find(|l| l.starts_with("3 ")).unwrap().to_string();
+        let duplicated: String = text
+            .lines()
+            .flat_map(|l| {
+                let mut v = vec![format!("{l}\n")];
+                if l.starts_with("3 ") {
+                    v.push(format!("{line3}\n"));
+                }
+                v
+            })
+            .collect();
+        assert_eq!(
+            offset_plan_from_str(&rechecksum(&duplicated), &recs),
+            Err(LoadError::RecordMismatch { record: 3, field: "duplicate" })
+        );
+    }
+
+    #[test]
+    fn huge_header_count_is_rejected_before_allocating() {
+        // A crafted header count (checksum recomputed) must be a load
+        // error, not a capacity-overflow abort in `vec![None; n]`.
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        let bombed = text.replacen(
+            &format!("offset {} ", recs.len()),
+            &format!("offset {} ", usize::MAX),
+            1,
+        );
+        assert_eq!(
+            offset_plan_from_str(&rechecksum(&bombed), &recs),
+            Err(LoadError::RecordMismatch { record: usize::MAX, field: "count" })
+        );
+    }
+
+    #[test]
+    fn inflated_total_is_rejected() {
+        // Feasibility only bounds the total from below; a tampered header
+        // inflating it (checksum recomputed) must not poison the cache.
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string(&plan, &recs);
+        let inflated = text.replacen(
+            &format!(" {}\n", plan.total),
+            &format!(" {}\n", recs.naive_total() + 1),
+            1,
+        );
+        assert_ne!(inflated, text, "tampering must have hit the header");
+        assert!(matches!(
+            offset_plan_from_str(&rechecksum(&inflated), &recs),
+            Err(LoadError::Infeasible(_))
+        ));
+        // The exact naive bound itself is still legal (the Naive strategy).
+        let naive_plan = crate::planner::offset::NaiveOffset.plan(&recs);
+        let naive_text = offset_plan_to_string(&naive_plan, &recs);
+        assert!(offset_plan_from_str(&naive_text, &recs).is_ok());
+    }
+
+    #[test]
+    fn plan_file_name_roundtrips() {
+        for (fp, batch, strategy) in [
+            (0u64, 1usize, "naive"),
+            (0xdeadbeefcafef00d, 8, "greedy-size"),
+            (u64::MAX, 64, "greedy-breadth"),
+            (1, 123, "strip-packing"),
+        ] {
+            let name = plan_file_name(fp, batch, strategy);
+            assert_eq!(
+                parse_plan_file_name(&name),
+                Some((fp, batch, strategy.to_string())),
+                "{name}"
+            );
+        }
+        // Junk that must not parse: tmp files, truncated names, batch 0.
+        for bad in [
+            "README.md",
+            ".0000000000000000-b1-naive.plan.tmp",
+            "0000000000000000-b0-naive.plan",
+            "0000000000000000-b1-.plan",
+            "xyz-b1-naive.plan",
+            "0000000000000000.plan",
+        ] {
+            assert_eq!(parse_plan_file_name(bad), None, "{bad}");
+        }
     }
 
     #[test]

@@ -9,11 +9,12 @@
 //! plans and arenas — and the hit/reuse counters that prove the reuse —
 //! come from one place.
 
-use super::cache::{PlanCache, PlanServiceError};
+use super::cache::{PersistReport, PlanCache, PlanServiceError, WarmStartReport};
 use super::{registry, OffsetPlan};
 use crate::arena::ArenaPool;
 use crate::graph::Graph;
 use crate::records::UsageRecords;
+use std::path::Path;
 use std::sync::Arc;
 
 /// Shared planning façade: registry + plan cache + arena pool.
@@ -34,6 +35,10 @@ pub struct PlanServiceStats {
     pub pool_reused: u64,
     /// Arena buffers freshly allocated.
     pub pool_allocated: u64,
+    /// Plans seeded from a plan directory at warm start.
+    pub warm_loaded: u64,
+    /// Plan-directory files skipped at warm start (corrupt or stale).
+    pub warm_skipped: u64,
 }
 
 impl PlanServiceStats {
@@ -133,6 +138,23 @@ impl PlanService {
         )
     }
 
+    /// Seed the plan cache from a plan directory (see
+    /// [`PlanCache::warm_start`]): a restarted server re-plans nothing it
+    /// has already planned.
+    pub fn warm_start(
+        &self,
+        dir: &Path,
+        records: &UsageRecords,
+    ) -> std::io::Result<WarmStartReport> {
+        self.cache.warm_start(dir, records)
+    }
+
+    /// Persist every resident plan into `dir` (see
+    /// [`PlanCache::persist_dir`]).
+    pub fn persist_dir(&self, dir: &Path) -> std::io::Result<PersistReport> {
+        self.cache.persist_dir(dir)
+    }
+
     /// Current reuse counters.
     pub fn stats(&self) -> PlanServiceStats {
         PlanServiceStats {
@@ -140,6 +162,8 @@ impl PlanService {
             cache_misses: self.cache.misses(),
             pool_reused: self.pool.reused(),
             pool_allocated: self.pool.allocated(),
+            warm_loaded: self.cache.warm_loaded(),
+            warm_skipped: self.cache.warm_skipped(),
         }
     }
 }

@@ -105,7 +105,7 @@ fn full_serving_path_through_coordinator() {
                 .expect("artifacts");
             Box::new(PjrtEngine::new(vs, ArenaStats::default()))
         },
-        BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2) },
+        BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2), ..BatchPolicy::default() },
     );
     let mut rng = SplitMix64::new(4);
     let mut input = vec![0f32; IN_ELEMS];

@@ -1,0 +1,276 @@
+//! Adversarial tests for the plan-directory format: a serving fleet must
+//! warm-start from whatever it finds on disk — truncated files, flipped
+//! fingerprint bytes, strategies that no longer exist — by *skipping* the
+//! damage (counted, warned) and never by crashing or serving a corrupt
+//! plan. Plus the restart acceptance test: a second cold start against the
+//! same plan dir performs zero planner invocations.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+use tensorarena::coordinator::engine::ExecutorEngine;
+use tensorarena::coordinator::{BatchPolicy, ModelServer};
+use tensorarena::models;
+use tensorarena::planner::serialize::{self, plan_file_name};
+use tensorarena::planner::{PlanCache, PlanService, WarmStartReport};
+use tensorarena::records::UsageRecords;
+
+/// Fresh scratch directory under the system temp dir (no tempfile crate in
+/// the offline registry); each test uses its own tag.
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "tensorarena-persist-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn example() -> UsageRecords {
+    UsageRecords::from_graph(&models::blazeface())
+}
+
+/// Populate a directory with genuine plans for `recs`.
+fn populate(recs: &UsageRecords, dir: &std::path::Path, batches: &[usize]) -> usize {
+    let cache = PlanCache::new();
+    for &b in batches {
+        cache.get_or_plan(recs, b, "greedy-size").unwrap();
+    }
+    cache.persist_dir(dir).unwrap().written
+}
+
+#[test]
+fn directory_roundtrip_golden() {
+    // Golden-path roundtrip: persist N plans, warm-start a fresh cache,
+    // re-request every key — zero planner invocations, byte-identical
+    // plans, and the directory contains exactly the expected file names.
+    let dir = scratch_dir("golden");
+    let recs = example();
+    let warm = PlanCache::new();
+    for b in [1usize, 2, 8] {
+        warm.get_or_plan(&recs, b, "greedy-size").unwrap();
+    }
+    warm.get_or_plan(&recs, 1, "greedy-breadth").unwrap();
+    let report = warm.persist_dir(&dir).unwrap();
+    assert_eq!(report.written, 4);
+
+    let fp = serialize::records_fingerprint(&recs);
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    let mut expected = vec![
+        plan_file_name(fp, 1, "greedy-size"),
+        plan_file_name(fp, 2, "greedy-size"),
+        plan_file_name(fp, 8, "greedy-size"),
+        plan_file_name(fp, 1, "greedy-breadth"),
+    ];
+    expected.sort();
+    assert_eq!(names, expected, "directory layout is the golden format");
+
+    let cold = PlanCache::new();
+    let report = cold.warm_start(&dir, &recs).unwrap();
+    assert_eq!(
+        report,
+        WarmStartReport { loaded: 4, ..WarmStartReport::default() }
+    );
+    let keys = [(1, "greedy-size"), (2, "greedy-size"), (8, "greedy-size"), (1, "greedy-breadth")];
+    for (b, s) in keys {
+        assert_eq!(
+            *cold.get_or_plan(&recs, b, s).unwrap(),
+            *warm.get_or_plan(&recs, b, s).unwrap(),
+            "plan ({b}, {s}) diverged across the restart"
+        );
+    }
+    assert_eq!(cold.misses(), 0, "roundtrip must avoid every planner invocation");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn truncated_file_is_skipped_not_served() {
+    let dir = scratch_dir("truncated");
+    let recs = example();
+    assert_eq!(populate(&recs, &dir, &[1, 2]), 2);
+    // Truncate the batch-2 file mid-body.
+    let victim = dir.join(plan_file_name(
+        serialize::records_fingerprint(&recs),
+        2,
+        "greedy-size",
+    ));
+    let text = std::fs::read_to_string(&victim).unwrap();
+    std::fs::write(&victim, &text[..text.len() / 2]).unwrap();
+
+    let cache = PlanCache::new();
+    let report = cache.warm_start(&dir, &recs).unwrap();
+    assert_eq!(report.loaded, 1, "{report:?}");
+    assert_eq!(report.skipped_corrupt, 1, "{report:?}");
+    assert_eq!(cache.warm_skipped(), 1, "skip must surface in the counters");
+    // The undamaged plan serves from cache; the damaged one re-plans.
+    cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
+    assert_eq!(cache.misses(), 0);
+    let replanned = cache.get_or_plan(&recs, 2, "greedy-size").unwrap();
+    assert_eq!(cache.misses(), 1, "corrupt file must cost a re-plan, not a crash");
+    replanned.validate(&recs.scaled(2)).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flipped_fingerprint_byte_is_skipped_as_foreign() {
+    let dir = scratch_dir("flipped-fp");
+    let recs = example();
+    assert_eq!(populate(&recs, &dir, &[1]), 1);
+    let fp = serialize::records_fingerprint(&recs);
+    let original = dir.join(plan_file_name(fp, 1, "greedy-size"));
+    // Flip one hex digit of the file-name fingerprint (keep it well-formed):
+    // the file now claims to belong to some other model.
+    let flipped = dir.join(plan_file_name(fp ^ 0xf, 1, "greedy-size"));
+    std::fs::rename(&original, &flipped).unwrap();
+
+    let cache = PlanCache::new();
+    let report = cache.warm_start(&dir, &recs).unwrap();
+    assert_eq!(report.loaded, 0, "{report:?}");
+    assert_eq!(report.skipped_foreign, 1, "{report:?}");
+    assert!(cache.is_empty(), "a mis-fingerprinted plan must never be served");
+
+    // And the file's *content* cannot be smuggled in under the wrong key
+    // either: loading it against different records is rejected.
+    let text = std::fs::read_to_string(&flipped).unwrap();
+    let mut other = recs.clone();
+    other.records[0].size += 64;
+    assert!(
+        cache.load(&text, &other, 1, "greedy-size").is_err(),
+        "PlanCache::load must re-validate the records, not trust the caller's key"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn stale_strategy_file_is_skipped_with_counter() {
+    let dir = scratch_dir("stale-strategy");
+    let recs = example();
+    assert_eq!(populate(&recs, &dir, &[1]), 1);
+    let fp = serialize::records_fingerprint(&recs);
+    // A plan persisted by a build whose strategy has since been removed
+    // from the registry ("annealed" does not exist).
+    let genuine = dir.join(plan_file_name(fp, 1, "greedy-size"));
+    let stale = dir.join(plan_file_name(fp, 1, "annealed"));
+    std::fs::copy(&genuine, &stale).unwrap();
+
+    let cache = PlanCache::new();
+    let report = cache.warm_start(&dir, &recs).unwrap();
+    assert_eq!(report.loaded, 1, "{report:?}");
+    assert_eq!(report.skipped_stale_strategy, 1, "{report:?}");
+    assert_eq!(report.skipped(), 1);
+    assert_eq!(cache.warm_skipped(), 1);
+    assert_eq!(cache.len(), 1, "only the registered strategy's plan is resident");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn checksum_corrupt_and_junk_files_are_skipped() {
+    let dir = scratch_dir("corrupt-mixed");
+    let recs = example();
+    assert_eq!(populate(&recs, &dir, &[1, 4]), 2);
+    let fp = serialize::records_fingerprint(&recs);
+    // Corrupt the batch-4 file's body (checksum now mismatches).
+    let victim = dir.join(plan_file_name(fp, 4, "greedy-size"));
+    let mut text = std::fs::read_to_string(&victim).unwrap();
+    text = text.replacen("offset", "OFFSET", 1);
+    std::fs::write(&victim, text).unwrap();
+    // Junk that merely *looks* like a plan file, plus ignorable noise.
+    std::fs::write(dir.join("zz-not-a-key-b1-x.plan"), "garbage").unwrap();
+    std::fs::write(dir.join("README.txt"), "not a plan").unwrap();
+    let torn = dir.join(format!(".{}.tmp", plan_file_name(fp, 9, "greedy-size")));
+    std::fs::write(torn, "torn").unwrap();
+
+    let cache = PlanCache::new();
+    let report = cache.warm_start(&dir, &recs).unwrap();
+    assert_eq!(report.loaded, 1, "{report:?}");
+    // Corrupt body + unparseable name; README/tmp are silently ignored.
+    assert_eq!(report.skipped_corrupt, 2, "{report:?}");
+    assert_eq!(cache.warm_loaded(), 1);
+    assert_eq!(cache.warm_skipped(), 2);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_start_isolates_models_sharing_one_directory() {
+    // Two models persist into one fleet-wide directory; each warm start
+    // loads only its own plans and reports the other's as foreign.
+    let dir = scratch_dir("shared-dir");
+    let blaze = UsageRecords::from_graph(&models::blazeface());
+    let mobile = UsageRecords::from_graph(&models::mobilenet_v1());
+    assert_eq!(populate(&blaze, &dir, &[1, 2]), 2);
+    assert_eq!(populate(&mobile, &dir, &[1]), 1);
+
+    let cache = PlanCache::new();
+    let report = cache.warm_start(&dir, &blaze).unwrap();
+    assert_eq!((report.loaded, report.skipped_foreign), (2, 1), "{report:?}");
+    let cache = PlanCache::new();
+    let report = cache.warm_start(&dir, &mobile).unwrap();
+    assert_eq!((report.loaded, report.skipped_foreign), (1, 2), "{report:?}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Restart acceptance: zero planner invocations on the second start.
+// ---------------------------------------------------------------------------
+
+/// One serving "process lifetime": spawn a budget-capped server against
+/// `dir`, run a burst, persist the cache back, and return the number of
+/// planner invocations the run needed.
+fn serve_once(dir: &std::path::Path, burst: usize) -> u64 {
+    let g = models::blazeface();
+    let in_elems = g.tensor(g.inputs[0]).num_elements();
+    let recs = UsageRecords::from_graph(&g);
+    let service = PlanService::shared();
+    service.warm_start(dir, &recs).unwrap();
+    let budget = 3 * service.plan_records(&recs, 1, None).unwrap().total;
+    let server = {
+        let service = Arc::clone(&service);
+        ModelServer::spawn(
+            move || {
+                let g = models::blazeface();
+                Box::new(
+                    ExecutorEngine::new(&g, service, "greedy-size", 7)
+                        .expect("engine")
+                        .with_max_batch(8),
+                )
+            },
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                mem_budget: Some(budget),
+            },
+        )
+    };
+    let pending: Vec<_> = (0..burst)
+        .map(|i| server.submit(vec![(i % 7) as f32 * 0.1; in_elems]))
+        .collect();
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    server.shutdown();
+    service.persist_dir(dir).unwrap();
+    service.stats().cache_misses
+}
+
+#[test]
+fn second_cold_start_against_plan_dir_plans_nothing() {
+    let dir = scratch_dir("restart");
+    // First lifetime: plans everything it needs (batch-1 at engine build,
+    // the budget binary-search probes, every batch the burst formed).
+    let cold_misses = serve_once(&dir, 64);
+    assert!(cold_misses >= 1, "first start must actually plan");
+    // Second lifetime, fresh PlanService, same directory: every plan —
+    // including the max_servable_batch probes — is warm-started, so the
+    // planner-invocation counter stays at zero.
+    let warm_misses = serve_once(&dir, 64);
+    assert_eq!(
+        warm_misses, 0,
+        "a restarted server must re-plan nothing for previously-seen shapes"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
