@@ -13,7 +13,9 @@
 mod harness;
 
 use tensorarena::models;
-use tensorarena::planner::order::{anneal_order, memory_aware_order, order_ablation};
+use tensorarena::planner::order::{anneal_order, apply_order, memory_aware_order, order_ablation};
+use tensorarena::planner::{registry, PlanService};
+use tensorarena::records::UsageRecords;
 
 fn main() {
     const MIB: f64 = 1024.0 * 1024.0;
@@ -31,6 +33,36 @@ fn main() {
             annealed as f64 / MIB,
             (annealed as f64 / base as f64 - 1.0) * 100.0
         );
+    }
+
+    // The same ablation through the serving stack's registry keys: one
+    // PlanService, order-keyed cache slots, breadth deltas as ArenaStats
+    // would report them. This is the path `serve --order` takes.
+    println!("\nregistry order strategies through the PlanService (greedy-size arena):");
+    println!(
+        "{:<14} {:>18} {:>12} {:>12} {:>12}",
+        "network", "order", "breadth MiB", "arena MiB", "delta br"
+    );
+    for g in models::all_zoo() {
+        let service = PlanService::shared();
+        for key in ["natural", "memory-aware", "annealed-s42-t100"] {
+            let order = registry::order_strategy(key).expect("registry order key");
+            let (ordered, applied) = apply_order(&g, order);
+            let recs = UsageRecords::from_graph(&ordered);
+            let plan = service
+                .plan_records_ordered(&recs, 1, None, order)
+                .expect("plan");
+            println!(
+                "{:<14} {:>18} {:>12.3} {:>12.3} {:>+11.3}",
+                g.name,
+                key,
+                applied.order_breadth as f64 / MIB,
+                plan.total_size() as f64 / MIB,
+                applied.breadth_delta() as f64 / MIB,
+            );
+        }
+        let st = service.stats();
+        assert_eq!(st.cache_hits, 0, "each order key must be a distinct slot");
     }
 
     println!("\nscheduler wall time:");

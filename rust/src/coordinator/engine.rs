@@ -3,7 +3,7 @@
 use super::ArenaStats;
 use crate::exec::Executor;
 use crate::graph::Graph;
-use crate::planner::{registry, PlanService};
+use crate::planner::{apply_order, registry, AppliedOrder, OrderStrategy, PlanService};
 use crate::records::UsageRecords;
 #[cfg(feature = "pjrt")]
 use crate::runtime::VariantSet;
@@ -117,18 +117,41 @@ pub struct ExecutorEngine {
     strategy: &'static str,
     service: Arc<PlanService>,
     max_batch: usize,
-    /// Batch-1 usage records, the input to every budget query.
+    /// Batch-1 usage records of the *served* (order-applied) graph, the
+    /// input to every budget query.
     records: UsageRecords,
+    /// Order-keyed cache dimension every plan lookup goes through.
+    order: OrderStrategy,
+    /// Receipt of the applied order: canonical key + breadth movement,
+    /// reported in [`ArenaStats`].
+    applied: AppliedOrder,
 }
 
 impl ExecutorEngine {
     /// Plan `graph` under `strategy` (any registry key or display name)
-    /// through `service` and wrap the executor. Uses the first graph output
-    /// as the response payload.
+    /// through `service` and wrap the executor, serving the natural
+    /// execution order. Uses the first graph output as the response
+    /// payload.
     pub fn new(
         graph: &Graph,
         service: Arc<PlanService>,
         strategy: &str,
+        seed: u64,
+    ) -> Result<Self> {
+        Self::with_order(graph, service, strategy, OrderStrategy::Natural, seed)
+    }
+
+    /// [`Self::new`] with an explicit execution-order strategy: the graph
+    /// is reordered under `order` *before* record extraction and planning,
+    /// so the executor runs ops in that order and every plan — including
+    /// the budget-admission envelope resolved at
+    /// [`super::ModelServer::spawn`] — comes from the order-keyed cache
+    /// slot.
+    pub fn with_order(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        strategy: &str,
+        order: OrderStrategy,
         seed: u64,
     ) -> Result<Self> {
         let key = registry::offset_key(strategy)
@@ -142,10 +165,11 @@ impl ExecutorEngine {
                 graph.outputs.len()
             );
         }
-        let exec = Executor::with_service(graph, Arc::clone(&service), key, seed)
+        let (ordered, applied) = apply_order(graph, order);
+        let exec = Executor::with_service_ordered(&ordered, Arc::clone(&service), key, order, seed)
             .map_err(anyhow::Error::msg)?;
-        let in_elems = graph.tensor(graph.inputs[0]).num_elements();
-        let out_elems = graph.tensor(graph.outputs[0]).num_elements();
+        let in_elems = ordered.tensor(ordered.inputs[0]).num_elements();
+        let out_elems = ordered.tensor(ordered.outputs[0]).num_elements();
         let records = exec.base_records().clone();
         Ok(ExecutorEngine {
             exec,
@@ -155,6 +179,8 @@ impl ExecutorEngine {
             service,
             max_batch: DEFAULT_EXECUTOR_MAX_BATCH,
             records,
+            order,
+            applied,
         })
     }
 
@@ -180,11 +206,22 @@ impl Engine for ExecutorEngine {
         self.exec.run_batch(input, n).map_err(anyhow::Error::msg)
     }
     fn arena_stats(&self) -> ArenaStats {
-        ArenaStats::from_service(
+        let stats = ArenaStats::from_service(
             self.exec.arena_bytes(),
             self.exec.naive_bytes(),
             self.strategy,
             self.service.stats(),
+        );
+        // Only order-planning configurations report the order segment:
+        // natural-order serving keeps `ArenaStats.order` empty (and the
+        // rendered stats line unchanged).
+        if self.order.is_natural() {
+            return stats;
+        }
+        stats.with_order(
+            self.applied.key(),
+            self.applied.natural_breadth,
+            self.applied.order_breadth,
         )
     }
     fn planned_peak(&self, batch: usize) -> Option<usize> {
@@ -199,13 +236,18 @@ impl Engine for ExecutorEngine {
             return None;
         }
         self.service
-            .plan_records(&self.records, batch, Some(self.strategy))
+            .plan_records_ordered(&self.records, batch, Some(self.strategy), self.order)
             .ok()
             .map(|p| p.total)
     }
     fn max_servable_batch(&self, budget_bytes: usize) -> Option<usize> {
         self.service
-            .max_servable_batch(&self.records, budget_bytes, Some(self.strategy))
+            .max_servable_batch_ordered(
+                &self.records,
+                budget_bytes,
+                Some(self.strategy),
+                self.order,
+            )
             .ok()
     }
 }
@@ -301,6 +343,33 @@ mod tests {
     fn unknown_strategy_rejected_at_construction() {
         let g = crate::models::blazeface();
         assert!(ExecutorEngine::new(&g, PlanService::shared(), "belady", 1).is_err());
+    }
+
+    #[test]
+    fn ordered_engine_matches_natural_outputs_and_reports_the_order() {
+        // Reordering changes *when* each op runs, never *what* it computes:
+        // the same DAG with the same synthesized weights must produce
+        // bit-identical outputs under any valid order.
+        let g = crate::models::blazeface();
+        let order = OrderStrategy::Annealed { seed: 5, budget: 20 };
+        let mut nat = ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 3).unwrap();
+        let mut ann =
+            ExecutorEngine::with_order(&g, PlanService::shared(), "greedy-size", order, 3)
+                .unwrap();
+        assert_eq!((nat.in_elems(), nat.out_elems()), (ann.in_elems(), ann.out_elems()));
+        let x = vec![0.1f32; 2 * nat.in_elems()];
+        assert_eq!(nat.run_batch(&x, 2).unwrap(), ann.run_batch(&x, 2).unwrap());
+        let st = ann.arena_stats();
+        assert_eq!(st.order, order.key());
+        assert!(
+            st.order_breadth <= st.natural_breadth,
+            "annealed breadth {} regressed natural {}",
+            st.order_breadth,
+            st.natural_breadth
+        );
+        assert!(st.breadth_delta() >= 0);
+        // Natural-order serving keeps the stats line order-free.
+        assert!(nat.arena_stats().order.is_empty());
     }
 
     #[test]

@@ -28,6 +28,16 @@ pub fn render_arena_stats(s: &ArenaStats) -> String {
             s.warm_loaded, s.warm_skipped
         ));
     }
+    if !s.order.is_empty() {
+        line.push_str(&format!(
+            " | order {} breadth {:.1} KiB vs natural {:.1} KiB ({}{:.1} KiB)",
+            s.order,
+            s.order_breadth as f64 / 1024.0,
+            s.natural_breadth as f64 / 1024.0,
+            if s.breadth_delta() >= 0 { "-" } else { "+" },
+            s.breadth_delta().unsigned_abs() as f64 / 1024.0,
+        ));
+    }
     line
 }
 
@@ -169,11 +179,28 @@ mod tests {
         assert!(line.contains("75% hit"), "{line}");
         assert!(line.contains("2 reused / 2 allocated"), "{line}");
         // The warm-start segment only appears once a plan directory was
-        // actually touched.
+        // actually touched, and the order segment only for order-planning
+        // engines.
         assert!(!line.contains("warm start"), "{line}");
+        assert!(!line.contains("order"), "{line}");
         let warmed = ArenaStats { warm_loaded: 4, warm_skipped: 1, ..s };
         let line = render_arena_stats(&warmed);
         assert!(line.contains("warm start 4 loaded / 1 skipped"), "{line}");
+    }
+
+    #[test]
+    fn arena_stats_render_includes_the_served_order() {
+        let s = ArenaStats {
+            planned_bytes: 8 * 1024,
+            naive_bytes: 32 * 1024,
+            strategy: "greedy-size".into(),
+            ..ArenaStats::default()
+        }
+        .with_order("annealed-s42-t100", 6 * 1024, 5 * 1024);
+        assert_eq!(s.breadth_delta(), 1024);
+        let line = render_arena_stats(&s);
+        assert!(line.contains("order annealed-s42-t100"), "{line}");
+        assert!(line.contains("breadth 5.0 KiB vs natural 6.0 KiB (-1.0 KiB)"), "{line}");
     }
 
     #[test]

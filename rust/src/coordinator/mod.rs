@@ -117,9 +117,18 @@ pub struct ArenaStats {
     /// Plans warm-started from a plan directory (planner invocations a
     /// restart avoided).
     pub warm_loaded: u64,
-    /// Plan-directory files skipped at warm start (corrupt, truncated, or
-    /// stale-strategy — never served, never fatal).
+    /// Plan-directory files skipped at warm start for a suspect reason
+    /// (corrupt, truncated, or stale-strategy — never served, never
+    /// fatal; foreign and stale-order files are not counted here).
     pub warm_skipped: u64,
+    /// Canonical key of the execution order the served plan was produced
+    /// under (empty when the engine does not plan orders).
+    pub order: String,
+    /// §5.1 max operator breadth under the natural (stored) order.
+    pub natural_breadth: usize,
+    /// Max operator breadth under the served order — ≤ `natural_breadth`
+    /// for annealed orders (annealing only accepts improvements).
+    pub order_breadth: usize,
 }
 
 impl ArenaStats {
@@ -144,7 +153,29 @@ impl ArenaStats {
             pool_allocated: service.pool_allocated,
             warm_loaded: service.warm_loaded,
             warm_skipped: service.warm_skipped,
+            ..ArenaStats::default()
         }
+    }
+
+    /// Record the execution order the served plan was produced under and
+    /// its §5.1 breadth movement (see
+    /// [`crate::planner::AppliedOrder`]).
+    pub fn with_order(
+        mut self,
+        order: impl Into<String>,
+        natural_breadth: usize,
+        order_breadth: usize,
+    ) -> Self {
+        self.order = order.into();
+        self.natural_breadth = natural_breadth;
+        self.order_breadth = order_breadth;
+        self
+    }
+
+    /// Bytes the served order shaved off the §5.1 lower bound (negative =
+    /// regression; 0 for the natural order).
+    pub fn breadth_delta(&self) -> i64 {
+        self.natural_breadth as i64 - self.order_breadth as i64
     }
 
     /// Naive / planned — the paper's headline ratio.

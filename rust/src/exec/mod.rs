@@ -18,7 +18,7 @@ pub mod ops;
 
 use crate::arena::{Arena, ArenaPool};
 use crate::graph::{Graph, OpKind, PoolKind, TensorKind};
-use crate::planner::{registry, OffsetPlan, OffsetPlanner, PlanError, PlanService};
+use crate::planner::{registry, OffsetPlan, OffsetPlanner, OrderStrategy, PlanError, PlanService};
 use crate::records::UsageRecords;
 use crate::rng::SplitMix64;
 use ops::Geom;
@@ -80,6 +80,10 @@ pub struct Executor {
     /// Registry name of the planning strategy (None for explicit plans —
     /// such executors cannot change batch size).
     strategy: Option<String>,
+    /// Execution-order strategy the graph was reordered under before this
+    /// executor was built — the order-keyed cache slot every batch re-plan
+    /// goes through.
+    order: OrderStrategy,
     /// Shared plan cache, when constructed through one.
     service: Option<Arc<PlanService>>,
     /// Arena buffer pool (the service's, or a private one).
@@ -102,6 +106,7 @@ impl Executor {
             &plan,
             seed,
             Some(planner.name().to_string()),
+            OrderStrategy::Natural,
             None,
             Arc::new(ArenaPool::new()),
         )
@@ -119,11 +124,27 @@ impl Executor {
         strategy: &str,
         seed: u64,
     ) -> Result<Self, String> {
+        Self::with_service_ordered(graph, service, strategy, OrderStrategy::Natural, seed)
+    }
+
+    /// [`Self::with_service`] for an order-keyed serving configuration:
+    /// `graph` must already be reordered under `order` (see
+    /// [`crate::planner::apply_order`] — the coordinator's engines do this
+    /// before construction), so this executor's steps run in that order and
+    /// every plan lookup — construction, batch growth, budget probes —
+    /// lands in the `(model, batch, strategy, order)` cache slot.
+    pub fn with_service_ordered(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        strategy: &str,
+        order: OrderStrategy,
+        seed: u64,
+    ) -> Result<Self, String> {
         let key = registry::offset_key(strategy)
             .ok_or_else(|| format!("unknown offset strategy '{strategy}'"))?;
         let records = UsageRecords::from_graph(graph);
         let plan = service
-            .plan_records(&records, 1, Some(key))
+            .plan_records_ordered(&records, 1, Some(key), order)
             .map_err(|e| e.to_string())?;
         let pool = Arc::clone(service.pool());
         Self::build(
@@ -132,6 +153,7 @@ impl Executor {
             &plan,
             seed,
             Some(key.to_string()),
+            order,
             Some(service),
             pool,
         )
@@ -153,17 +175,20 @@ impl Executor {
             plan,
             seed,
             None,
+            OrderStrategy::Natural,
             None,
             Arc::new(ArenaPool::new()),
         )
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn build(
         graph: &Graph,
         base_records: UsageRecords,
         plan: &OffsetPlan,
         seed: u64,
         strategy: Option<String>,
+        order: OrderStrategy,
         service: Option<Arc<PlanService>>,
         pool: Arc<ArenaPool>,
     ) -> Result<Self, PlanError> {
@@ -315,6 +340,7 @@ impl Executor {
             poison_dead: false,
             base_records,
             strategy,
+            order,
             service,
             pool,
             batch: 1,
@@ -367,7 +393,12 @@ impl Executor {
         let scaled = self.base_records.scaled(batch);
         let plan: Arc<OffsetPlan> = match (&self.service, &self.strategy) {
             (Some(svc), _) => svc
-                .plan_records(&self.base_records, batch, self.strategy.as_deref())
+                .plan_records_ordered(
+                    &self.base_records,
+                    batch,
+                    self.strategy.as_deref(),
+                    self.order,
+                )
                 .map_err(|e| e.to_string())?,
             (None, Some(name)) => {
                 let planner = registry::offset_strategy(name)

@@ -4,14 +4,15 @@
 //!
 //! ```text
 //! tensorarena records  <model>                      # §3 usage records & profiles
-//! tensorarena plan     <model> [shared|offset] [strategy]
+//! tensorarena plan     <model> [shared|offset] [strategy] [--order O]
 //!                      [--spill-dir DIR] [--batches 1,2,4]   # Figures 3–6 + plan spills
 //! tensorarena table1                                # Table 1 (Shared Objects)
 //! tensorarena table2 [--ratios]                     # Table 2 (Offset Calculation)
 //! tensorarena cachesim <model> [kib]                # §1 locality claim
-//! tensorarena serve [--model M] [--strategy S] [--requests N]
+//! tensorarena serve [--model M] [--strategy S] [--order O] [--requests N]
 //!                   [--max-batch B] [--wait-ms W] [--artifacts DIR]
 //!                   [--mem-budget BYTES] [--plan-dir DIR]    # E2E serving
+//! tensorarena order-ablation [model] [--seed S] [--trials N] # §7.1 order table
 //! tensorarena models                                # list zoo models
 //! ```
 //!
@@ -23,6 +24,14 @@
 //! server re-plans nothing it has already planned; `plan --spill-dir`
 //! pre-populates such a directory offline.
 //!
+//! `--order` picks the execution-order strategy (`natural`, `memory-aware`,
+//! `annealed`, or `annealed-s<seed>-t<trials>`): the graph is reordered
+//! *before* record extraction, so plans, budget admission, and the plan
+//! cache — including `--plan-dir` persistence, which keys files by the
+//! order — all resolve under the served order. `order-ablation` prints the
+//! §7.1 table (max breadth and arena per order) so you can pick an order
+//! offline.
+//!
 //! Strategy names come from `planner::registry` — the single list the
 //! tables, the plan cache, and this CLI all share.
 //!
@@ -31,8 +40,12 @@
 use tensorarena::coordinator::{self, ArenaStats, BatchPolicy, Router};
 use tensorarena::exec::cachesim;
 use tensorarena::models;
+use tensorarena::planner::order::{
+    anneal_order, apply_order, memory_aware_order, natural_order, order_max_breadth,
+    reorder_graph,
+};
 use tensorarena::planner::{
-    offset, registry, OffsetPlanner, PlanCache, PlanService, SharedObjectPlanner,
+    offset, registry, OffsetPlanner, OrderStrategy, PlanCache, PlanService, SharedObjectPlanner,
 };
 use tensorarena::records::UsageRecords;
 use tensorarena::report::{self, MIB};
@@ -64,6 +77,7 @@ fn main() {
         Some("table2") => cmd_table2(&args[1..]),
         Some("cachesim") => cmd_cachesim(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("order-ablation") => cmd_order_ablation(&args[1..]),
         Some("models") => {
             for m in models::ZOO {
                 println!("{m}");
@@ -74,7 +88,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: tensorarena <records|plan|table1|table2|cachesim|serve|models> ...\n\
+                "usage: tensorarena <records|plan|table1|table2|cachesim|serve|order-ablation|models> ...\n\
                  see README.md for details"
             );
             2
@@ -127,13 +141,27 @@ fn cmd_records(args: &[String]) -> i32 {
 }
 
 fn cmd_plan(args: &[String]) -> i32 {
-    // Split flags (--spill-dir DIR, --batches CSV) from positionals.
+    // Split flags (--spill-dir DIR, --batches CSV, --order O) from
+    // positionals.
     let mut spill_dir: Option<String> = None;
     let mut batches: Vec<usize> = vec![1];
+    let mut order = OrderStrategy::Natural;
     let mut pos: Vec<&str> = Vec::new();
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            "--order" => {
+                let Some(o) = args.get(i + 1).and_then(|v| registry::order_strategy(v)) else {
+                    eprintln!(
+                        "--order wants one of: {} (annealed also accepts \
+                         annealed-s<seed>-t<trials>)",
+                        registry::ORDER_KEYS.join(", ")
+                    );
+                    return 2;
+                };
+                order = o;
+                i += 2;
+            }
             "--spill-dir" => {
                 let Some(d) = args.get(i + 1) else {
                     eprintln!("--spill-dir wants a directory");
@@ -166,13 +194,24 @@ fn cmd_plan(args: &[String]) -> i32 {
     }
     let Some(&name) = pos.first() else {
         eprintln!(
-            "usage: tensorarena plan <model> [shared|offset] [strategy] [--spill-dir DIR] [--batches 1,2,4]"
+            "usage: tensorarena plan <model> [shared|offset] [strategy] [--order O] [--spill-dir DIR] [--batches 1,2,4]"
         );
         return 2;
     };
     let approach = pos.get(1).copied().unwrap_or("offset");
     let strategy = pos.get(2).copied().unwrap_or("greedy-size");
     let Some(g) = load_model(name) else { return 2 };
+    // Reorder *before* record extraction: every number below — and every
+    // spilled plan file — is for the ordered graph.
+    let (g, applied) = apply_order(&g, order);
+    if !order.is_natural() {
+        println!(
+            "order {}: max breadth {:.3} MiB vs natural {:.3} MiB",
+            applied.key(),
+            applied.order_breadth as f64 / MIB,
+            applied.natural_breadth as f64 / MIB,
+        );
+    }
     let recs = UsageRecords::from_graph(&g);
     let p = recs.profiles();
     match approach {
@@ -250,7 +289,7 @@ fn cmd_plan(args: &[String]) -> i32 {
                 // warm-start from: one file per requested batch.
                 let cache = PlanCache::new();
                 for &b in &batches {
-                    if let Err(e) = cache.get_or_plan(&recs, b, strategy) {
+                    if let Err(e) = cache.get_or_plan_ordered(&recs, b, strategy, order) {
                         eprintln!("planning batch {b} for spill: {e}");
                         return 1;
                     }
@@ -323,6 +362,86 @@ fn cmd_cachesim(args: &[String]) -> i32 {
     0
 }
 
+/// The §7.1 order-ablation table: for each model, the max operator breadth
+/// (the §5.1 lower bound) under the natural / memory-aware / annealed
+/// orders, plus the Greedy-by-Size arena under the natural and annealed
+/// orders — everything needed to decide whether `serve --order annealed`
+/// is worth it for a model, offline.
+fn cmd_order_ablation(args: &[String]) -> i32 {
+    let mut seed = OrderStrategy::DEFAULT_ANNEAL_SEED;
+    let mut trials = OrderStrategy::DEFAULT_ANNEAL_BUDGET;
+    let mut pos: Vec<&str> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--seed" => {
+                let Some(s) = args.get(i + 1).and_then(|v| v.parse().ok()) else {
+                    eprintln!("--seed wants a number");
+                    return 2;
+                };
+                seed = s;
+                i += 2;
+            }
+            "--trials" => {
+                let Some(t) = args.get(i + 1).and_then(|v| v.parse().ok()) else {
+                    eprintln!("--trials wants a number");
+                    return 2;
+                };
+                trials = t;
+                i += 2;
+            }
+            other => {
+                pos.push(other);
+                i += 1;
+            }
+        }
+    }
+    let graphs = match pos.first() {
+        Some(&name) => match load_model(name) {
+            Some(g) => vec![g],
+            None => return 2,
+        },
+        None => models::all_zoo(),
+    };
+    println!(
+        "order ablation (annealed-s{seed}-t{trials}); breadth = §5.1 lower bound, arena = Greedy by Size:"
+    );
+    println!(
+        "{:<14} {:>13} {:>13} {:>13} {:>13} {:>13} {:>8}",
+        "network",
+        "natural br",
+        "mem-aware br",
+        "annealed br",
+        "natural arena",
+        "annealed",
+        "delta"
+    );
+    for g in graphs {
+        let natural_br = order_max_breadth(&g, &natural_order(&g));
+        let greedy_br = order_max_breadth(&g, &memory_aware_order(&g));
+        // Anneal once; breadth and arena columns come from the same order.
+        let annealed = anneal_order(&g, seed, trials);
+        let annealed_br = order_max_breadth(&g, &annealed);
+        let base = offset::GreedyBySize
+            .plan(&UsageRecords::from_graph(&g))
+            .total_size();
+        let annealed_arena = offset::GreedyBySize
+            .plan(&UsageRecords::from_graph(&reorder_graph(&g, &annealed)))
+            .total_size();
+        println!(
+            "{:<14} {:>9.3} MiB {:>9.3} MiB {:>9.3} MiB {:>9.3} MiB {:>9.3} MiB {:>+7.2}%",
+            g.name,
+            natural_br as f64 / MIB,
+            greedy_br as f64 / MIB,
+            annealed_br as f64 / MIB,
+            base as f64 / MIB,
+            annealed_arena as f64 / MIB,
+            (annealed_arena as f64 / base as f64 - 1.0) * 100.0,
+        );
+    }
+    0
+}
+
 fn cmd_serve(args: &[String]) -> i32 {
     // Parse --artifacts DIR --requests N --max-batch B --wait-ms W
     // --model M --strategy S --mem-budget BYTES --plan-dir DIR. With PJRT
@@ -336,11 +455,24 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut wait_ms = 2u64;
     let mut model = "blazeface".to_string();
     let mut strategy = PlanService::DEFAULT_STRATEGY.to_string();
+    let mut order = OrderStrategy::Natural;
     let mut mem_budget: Option<usize> = None;
     let mut plan_dir: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            "--order" => {
+                let Some(o) = args.get(i + 1).and_then(|v| registry::order_strategy(v)) else {
+                    eprintln!(
+                        "--order wants one of: {} (annealed also accepts \
+                         annealed-s<seed>-t<trials>)",
+                        registry::ORDER_KEYS.join(", ")
+                    );
+                    return 2;
+                };
+                order = o;
+                i += 2;
+            }
             "--artifacts" => {
                 dir = args.get(i + 1).cloned().unwrap_or(dir);
                 dir_given = true;
@@ -393,6 +525,13 @@ fn cmd_serve(args: &[String]) -> i32 {
         if tensorarena::runtime::Runtime::discover_variants(std::path::Path::new(&dir), "model")
             .is_ok()
         {
+            if !order.is_natural() {
+                eprintln!(
+                    "--order {} ignored: the PJRT AOT path executes the compiled order; \
+                     ordering applies to the pure-Rust executor path only",
+                    order.key()
+                );
+            }
             return match serve_bench(&dir, requests, max_batch, wait_ms) {
                 Ok(()) => 0,
                 Err(e) => {
@@ -412,6 +551,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     match serve_pure(
         &model,
         &strategy,
+        order,
         requests,
         max_batch,
         wait_ms,
@@ -431,10 +571,15 @@ fn cmd_serve(args: &[String]) -> i32 {
 /// cache-hit and pool-reuse counters are reported next to the latency
 /// numbers. With `mem_budget`, the server clamps batches to the planned
 /// envelope and refuses what cannot fit; with `plan_dir`, the plan cache
-/// is warm-started at boot and persisted back at shutdown.
+/// is warm-started at boot and persisted back at shutdown. With a
+/// non-natural `order`, the graph is reordered before record extraction,
+/// so the arena, the admission envelope, and every plan-dir file are for
+/// the served order.
+#[allow(clippy::too_many_arguments)]
 fn serve_pure(
     model: &str,
     strategy: &str,
+    order: OrderStrategy,
     requests: usize,
     max_batch: usize,
     wait_ms: u64,
@@ -447,20 +592,34 @@ fn serve_pure(
         return Err(format!("unknown model '{model}'"));
     };
     let service = PlanService::shared();
+    // Apply the order up front: `recs` below are the *served* records, so
+    // warm starts, budget resolution, and the final stats all agree with
+    // what the engine (which re-derives the same deterministic order)
+    // plans.
+    let (g, applied) = apply_order(&g, order);
+    if !order.is_natural() {
+        println!(
+            "order {}: max breadth {:.1} KiB vs natural {:.1} KiB",
+            applied.key(),
+            applied.order_breadth as f64 / 1024.0,
+            applied.natural_breadth as f64 / 1024.0,
+        );
+    }
     let recs = UsageRecords::from_graph(&g);
     if let Some(dir) = plan_dir {
         let report = service
-            .warm_start(Path::new(dir), &recs)
+            .warm_start_ordered(Path::new(dir), &recs, order)
             .map_err(|e| format!("warm-starting from {dir}: {e}"))?;
         println!(
-            "plan dir {dir}: warm-started {} plan(s), skipped {} ({} foreign)",
+            "plan dir {dir}: warm-started {} plan(s), {} suspect skip(s), {} foreign, {} stale-order",
             report.loaded,
             report.skipped(),
             report.skipped_foreign,
+            report.skipped_stale_order,
         );
     }
     let plan = service
-        .plan_records(&recs, 1, Some(strategy))
+        .plan_records_ordered(&recs, 1, Some(strategy), order)
         .map_err(|e| e.to_string())?;
     println!(
         "{model} arena: {:.1} KiB planned vs {:.1} KiB naive ({:.1}x)",
@@ -470,7 +629,7 @@ fn serve_pure(
     );
     if let Some(budget) = mem_budget {
         let cap = service
-            .max_servable_batch(&recs, budget, Some(strategy))
+            .max_servable_batch_ordered(&recs, budget, Some(strategy), order)
             .map_err(|e| e.to_string())?;
         println!(
             "mem budget {:.1} KiB: max servable batch {cap}{}",
@@ -490,7 +649,7 @@ fn serve_pure(
             move || {
                 let g = models::by_name(&model_name).expect("model exists");
                 Box::new(
-                    ExecutorEngine::new(&g, service, &strategy, 42)
+                    ExecutorEngine::with_order(&g, service, &strategy, order, 42)
                         .expect("engine")
                         .with_max_batch(max_batch),
                 )
@@ -553,7 +712,7 @@ fn serve_pure(
     // Report the arena at the engine's batch cap — what the serving box
     // actually hosts — not the batch-1 plan.
     let plan_max = service
-        .plan_records(&recs, max_batch.max(1), Some(strategy))
+        .plan_records_ordered(&recs, max_batch.max(1), Some(strategy), order)
         .map_err(|e| e.to_string())?;
     let stats = ArenaStats::from_service(
         plan_max.total_size(),
@@ -561,6 +720,17 @@ fn serve_pure(
         registry::offset_key(strategy).unwrap_or("?"),
         st,
     );
+    // The order segment is reported only when an order was actually
+    // applied — plain serving keeps the PR-2 stats line unchanged.
+    let stats = if order.is_natural() {
+        stats
+    } else {
+        stats.with_order(
+            applied.key(),
+            applied.natural_breadth,
+            applied.order_breadth,
+        )
+    };
     println!(
         "at max batch {}: {}",
         max_batch.max(1),

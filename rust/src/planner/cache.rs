@@ -1,13 +1,16 @@
-//! Batch-aware plan cache: plan once per `(graph, batch, strategy)`, reuse
-//! forever.
+//! Batch-aware plan cache: plan once per `(graph, batch, strategy, order)`,
+//! reuse forever.
 //!
 //! The paper's arena is planned once and cheaply reused for every inference
 //! (§5); serving multiplies that by batch-size variants and engine
 //! replicas. The cache keys plans by the FNV-1a fingerprint of the usage
 //! records (the planner's entire input), the batch the records are scaled
-//! to, and the registry strategy key, so two executors serving the same
-//! model at the same batch share one `Arc<OffsetPlan>` and the planner runs
-//! exactly once.
+//! to, the registry strategy key, and the execution-order strategy the
+//! records were extracted under, so two executors serving the same model at
+//! the same batch share one `Arc<OffsetPlan>` and the planner runs exactly
+//! once. The order is a key dimension in its own right: two orders that
+//! happen to coincide (annealing found nothing) still occupy distinct
+//! slots, so order-keyed persistence stays unambiguous.
 //!
 //! Plans can be spilled to / loaded from the [`super::serialize`] text
 //! format (compute offline, ship with the model), and
@@ -15,6 +18,7 @@
 //! follow-up work (FlashMem, MAFAT) poses: what is the largest batch whose
 //! *planned* footprint fits a byte budget?
 
+use super::registry::OrderStrategy;
 use super::serialize::{self, LoadError};
 use super::{registry, OffsetPlan, PlanError};
 use crate::records::UsageRecords;
@@ -52,8 +56,9 @@ impl std::fmt::Display for PlanServiceError {
 
 impl std::error::Error for PlanServiceError {}
 
-/// Cache key: records fingerprint × batch × canonical strategy key.
-type Key = (u64, usize, &'static str);
+/// Cache key: records fingerprint × batch × canonical strategy key ×
+/// execution-order strategy.
+type Key = (u64, usize, &'static str, OrderStrategy);
 
 /// Outcome of [`PlanCache::warm_start`]: how many plan files seeded the
 /// cache and why the rest were skipped. Skips are never fatal — a corrupt
@@ -67,14 +72,21 @@ pub struct WarmStartReport {
     pub skipped_foreign: usize,
     /// Files naming a strategy no longer in the registry.
     pub skipped_stale_strategy: usize,
+    /// Files written under a different execution order than the one this
+    /// service serves — their record lifetimes (and therefore offsets) do
+    /// not apply here. A directory written by an `annealed` server is
+    /// skipped, counted, and left intact by a `natural` restart. Like
+    /// foreign files, these belong to another valid serving configuration
+    /// (fleets share directories), so they are not "suspect".
+    pub skipped_stale_order: usize,
     /// Files that failed to parse or verify (truncated, checksum-corrupt,
-    /// record-mismatched, unparseable name).
+    /// record-mismatched, unparseable or pre-bump-version name).
     pub skipped_corrupt: usize,
 }
 
 impl WarmStartReport {
-    /// Everything skipped for a *suspect* reason (foreign files are not
-    /// suspect).
+    /// Everything skipped for a *suspect* reason (foreign and stale-order
+    /// files belong to other valid configurations and are not suspect).
     pub fn skipped(&self) -> usize {
         self.skipped_stale_strategy + self.skipped_corrupt
     }
@@ -144,24 +156,44 @@ impl PlanCache {
         self.len() == 0
     }
 
-    fn key(records: &UsageRecords, batch: usize, strategy: &str) -> Result<Key, PlanServiceError> {
+    fn key(
+        records: &UsageRecords,
+        batch: usize,
+        strategy: &str,
+        order: OrderStrategy,
+    ) -> Result<Key, PlanServiceError> {
         let key = registry::offset_key(strategy)
             .ok_or_else(|| PlanServiceError::UnknownStrategy(strategy.to_string()))?;
-        Ok((serialize::records_fingerprint(records), batch, key))
+        Ok((serialize::records_fingerprint(records), batch, key, order))
     }
 
-    /// The plan for `records` scaled to `batch` under `strategy`, planning
-    /// (and validating) on first use. `records` are always the *batch-1*
-    /// records; scaling is the cache's job so every caller agrees on the
-    /// key. Planning happens under the cache lock, which guarantees exactly
-    /// one planner invocation per key even under concurrent lookups.
+    /// [`Self::get_or_plan_ordered`] for the natural execution order.
     pub fn get_or_plan(
         &self,
         records: &UsageRecords,
         batch: usize,
         strategy: &str,
     ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
-        let key = Self::key(records, batch, strategy)?;
+        self.get_or_plan_ordered(records, batch, strategy, OrderStrategy::Natural)
+    }
+
+    /// The plan for `records` scaled to `batch` under `strategy`, planning
+    /// (and validating) on first use. `records` are always the *batch-1*
+    /// records — for a non-natural `order`, the records of the graph
+    /// *reordered under that order* (the caller applies the order; the
+    /// cache keys on it so coinciding orders cannot cross-contaminate
+    /// persistence). Scaling is the cache's job so every caller agrees on
+    /// the key. Planning happens under the cache lock, which guarantees
+    /// exactly one planner invocation per key even under concurrent
+    /// lookups.
+    pub fn get_or_plan_ordered(
+        &self,
+        records: &UsageRecords,
+        batch: usize,
+        strategy: &str,
+        order: OrderStrategy,
+    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
+        let key = Self::key(records, batch, strategy, order)?;
         let mut plans = self.plans.lock().unwrap();
         if let Some(plan) = plans.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -190,9 +222,9 @@ impl PlanCache {
     }
 
     /// Serialize the plan for `(records, batch, strategy)` in the
-    /// [`super::serialize`] text format, planning it first if not resident —
-    /// ship the result next to the model and [`Self::load`] it at serve
-    /// time.
+    /// [`super::serialize`] text format (natural order), planning it first
+    /// if not resident — ship the result next to the model and
+    /// [`Self::load`] it at serve time.
     pub fn spill(
         &self,
         records: &UsageRecords,
@@ -203,19 +235,7 @@ impl PlanCache {
         Ok(serialize::offset_plan_to_string(&plan, &records.scaled(batch)))
     }
 
-    /// Seed the cache from a previously spilled plan. The caller-supplied
-    /// key is never trusted on its own: the record set embedded in the
-    /// text is verified field by field — count, full id coverage (no
-    /// dropped or duplicated lines), every `(size, first_op, last_op)` —
-    /// against `records.scaled(batch)`, which is exactly the fingerprint
-    /// input, plus checksum and feasibility. A plan spilled for one model
-    /// (or another batch) can therefore never be filed under this key.
-    ///
-    /// The v1 text format carries no strategy tag, so the caller's
-    /// `strategy` names the slot the plan is filed under — loading a spill
-    /// produced by a different strategy is not detectable (it is still a
-    /// *valid* plan, just not that strategy's); keep spill files per
-    /// strategy.
+    /// [`Self::load_ordered`] for the natural execution order.
     pub fn load(
         &self,
         text: &str,
@@ -223,10 +243,36 @@ impl PlanCache {
         batch: usize,
         strategy: &str,
     ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
-        let key = Self::key(records, batch, strategy)?;
+        self.load_ordered(text, records, batch, strategy, OrderStrategy::Natural)
+    }
+
+    /// Seed the cache from a previously spilled plan. The caller-supplied
+    /// key is never trusted on its own: the record set embedded in the
+    /// text is verified field by field — count, full id coverage (no
+    /// dropped or duplicated lines), every `(size, first_op, last_op)` —
+    /// against `records.scaled(batch)`, which is exactly the fingerprint
+    /// input, plus checksum, feasibility, and (v2) the canonical order key
+    /// in the header, which must match `order`. A plan spilled for one
+    /// model, another batch, or another execution order can therefore
+    /// never be filed under this key.
+    ///
+    /// The text format carries no strategy tag, so the caller's `strategy`
+    /// names the slot the plan is filed under — loading a spill produced by
+    /// a different strategy is not detectable (it is still a *valid* plan,
+    /// just not that strategy's); keep spill files per strategy.
+    pub fn load_ordered(
+        &self,
+        text: &str,
+        records: &UsageRecords,
+        batch: usize,
+        strategy: &str,
+        order: OrderStrategy,
+    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
+        let key = Self::key(records, batch, strategy, order)?;
         let scaled = records.scaled(batch);
         let plan = Arc::new(
-            serialize::offset_plan_from_str(text, &scaled).map_err(PlanServiceError::Load)?,
+            serialize::offset_plan_from_str_ordered(text, &scaled, &order.key())
+                .map_err(PlanServiceError::Load)?,
         );
         self.plans
             .lock()
@@ -238,9 +284,9 @@ impl PlanCache {
 
     /// Persist every resident plan into `dir` in the plan-directory format
     /// (see [`super::serialize`]'s module docs): one
-    /// `<fingerprint>-b<batch>-<strategy>.plan` file per cache key, each
-    /// written to a `.tmp` sibling and atomically renamed into place, so a
-    /// concurrent [`Self::warm_start`] never observes a torn file.
+    /// `<fingerprint>-b<batch>-<strategy>@<order>.plan` file per cache key,
+    /// each written to a `.tmp` sibling and atomically renamed into place,
+    /// so a concurrent [`Self::warm_start`] never observes a torn file.
     /// Existing files for the same key are replaced.
     pub fn persist_dir(&self, dir: &Path) -> std::io::Result<PersistReport> {
         std::fs::create_dir_all(dir)?;
@@ -253,13 +299,18 @@ impl PlanCache {
             .collect();
         let records = self.records.lock().unwrap().clone();
         let mut report = PersistReport::default();
-        for ((fingerprint, batch, strategy), plan) in plans {
+        for ((fingerprint, batch, strategy, order), plan) in plans {
             let Some(base) = records.get(&fingerprint) else {
                 report.skipped += 1;
                 continue;
             };
-            let text = serialize::offset_plan_to_string(&plan, &base.scaled(batch));
-            let name = serialize::plan_file_name(fingerprint, batch, strategy);
+            let order_key = order.key();
+            let text = serialize::offset_plan_to_string_ordered(
+                &plan,
+                &base.scaled(batch),
+                &order_key,
+            );
+            let name = serialize::plan_file_name(fingerprint, batch, strategy, &order_key);
             // Per-process tmp name: two servers persisting into a shared
             // fleet directory must not clobber each other's half-written
             // file before the atomic rename.
@@ -271,24 +322,39 @@ impl PlanCache {
         Ok(report)
     }
 
-    /// Seed the cache from a plan directory: every file whose name carries
-    /// `records`' fingerprint is loaded through [`Self::load`] (full
-    /// verification — checksum, field-by-field record match with exact id
-    /// coverage, bounded header fields, feasibility). Files for other
-    /// models are left alone; files that
-    /// name an unregistered strategy or fail verification are **skipped
-    /// with a warning**, never served and never fatal. A missing directory
-    /// is an ordinary cold start.
-    ///
-    /// After a warm start against the directory a previous run persisted,
-    /// every previously-seen `(batch, strategy)` plan is a cache hit: zero
-    /// planner invocations on the restart path.
+    /// [`Self::warm_start_ordered`] for the natural execution order.
     pub fn warm_start(
         &self,
         dir: &Path,
         records: &UsageRecords,
     ) -> std::io::Result<WarmStartReport> {
+        self.warm_start_ordered(dir, records, OrderStrategy::Natural)
+    }
+
+    /// Seed the cache from a plan directory: every file whose name carries
+    /// `records`' fingerprint **and** `order`'s canonical key is loaded
+    /// through [`Self::load_ordered`] (full verification — checksum,
+    /// field-by-field record match with exact id coverage, bounded header
+    /// fields, order match, feasibility). Files for other models are left
+    /// alone; files written under a different execution order are skipped
+    /// silently with their own counter, exactly like foreign files (their
+    /// offsets are meaningless for this service's record lifetimes, but
+    /// they belong to another valid configuration sharing the directory);
+    /// files that name an unregistered strategy or fail verification are
+    /// **skipped with a warning**, never served and never fatal. A missing
+    /// directory is an ordinary cold start.
+    ///
+    /// After a warm start against the directory a previous run persisted,
+    /// every previously-seen `(batch, strategy, order)` plan is a cache
+    /// hit: zero planner invocations on the restart path.
+    pub fn warm_start_ordered(
+        &self,
+        dir: &Path,
+        records: &UsageRecords,
+        order: OrderStrategy,
+    ) -> std::io::Result<WarmStartReport> {
         let fingerprint = serialize::records_fingerprint(records);
+        let order_key = order.key();
         let mut report = WarmStartReport::default();
         let entries = match std::fs::read_dir(dir) {
             Ok(entries) => entries,
@@ -302,12 +368,25 @@ impl PlanCache {
             if !name.ends_with(".plan") {
                 continue; // .tmp leftovers, READMEs, ...
             }
-            let Some((file_fp, batch, strategy)) = serialize::parse_plan_file_name(name) else {
+            let Some((file_fp, batch, strategy, file_order)) =
+                serialize::parse_plan_file_name(name)
+            else {
                 report.skipped_corrupt += 1;
                 self.warm_skipped.fetch_add(1, Ordering::Relaxed);
                 eprintln!("warm-start: skipping '{name}': unparseable plan file name");
                 continue;
             };
+            // The order check runs before the fingerprint check: a
+            // different order of the *same* model yields different records
+            // (and so a different fingerprint), which would otherwise be
+            // indistinguishable from a foreign model's file. Like foreign
+            // files, stale-order files belong to another valid serving
+            // configuration sharing the directory — counted in their own
+            // field, left intact, no per-file warning.
+            if file_order != order_key {
+                report.skipped_stale_order += 1;
+                continue;
+            }
             if file_fp != fingerprint {
                 report.skipped_foreign += 1;
                 continue;
@@ -329,7 +408,7 @@ impl PlanCache {
                     continue;
                 }
             };
-            match self.load(&text, records, batch, &strategy) {
+            match self.load_ordered(&text, records, batch, &strategy, order) {
                 Ok(_) => {
                     report.loaded += 1;
                     self.warm_loaded.fetch_add(1, Ordering::Relaxed);
@@ -344,8 +423,22 @@ impl PlanCache {
         Ok(report)
     }
 
+    /// [`Self::max_servable_batch_ordered`] for the natural execution
+    /// order.
+    pub fn max_servable_batch(
+        &self,
+        records: &UsageRecords,
+        strategy: &str,
+        budget_bytes: usize,
+    ) -> Result<usize, PlanServiceError> {
+        self.max_servable_batch_ordered(records, strategy, budget_bytes, OrderStrategy::Natural)
+    }
+
     /// Largest batch whose **planned** (not naive) footprint under
     /// `strategy` fits in `budget_bytes`; 0 if even batch 1 does not fit.
+    /// `records` and `order` must agree (the caller passes the reordered
+    /// graph's records), so the answer — and every probe plan it caches —
+    /// is resolved under the same order the engine will serve.
     ///
     /// Uses the bound `planned(b) >= b * max_tensor_size` to cap the search
     /// range, then binary-searches with real plans (each probe lands in the
@@ -353,11 +446,12 @@ impl PlanCache {
     /// footprints grow monotonically with batch for every registry strategy
     /// — uniform scaling preserves every size comparison the heuristics
     /// make.
-    pub fn max_servable_batch(
+    pub fn max_servable_batch_ordered(
         &self,
         records: &UsageRecords,
         strategy: &str,
         budget_bytes: usize,
+        order: OrderStrategy,
     ) -> Result<usize, PlanServiceError> {
         if registry::offset_key(strategy).is_none() {
             return Err(PlanServiceError::UnknownStrategy(strategy.to_string()));
@@ -376,7 +470,7 @@ impl PlanCache {
             return Ok(0);
         }
         let fits = |b: usize| -> Result<bool, PlanServiceError> {
-            Ok(self.get_or_plan(records, b, strategy)?.total <= budget_bytes)
+            Ok(self.get_or_plan_ordered(records, b, strategy, order)?.total <= budget_bytes)
         };
         if !fits(1)? {
             return Ok(0);
@@ -530,6 +624,52 @@ mod tests {
         assert_eq!(cold.warm_start(&dir, &recs).unwrap().loaded, 1);
         let again = cold.persist_dir(&dir).unwrap();
         assert_eq!(again, PersistReport { written: 1, skipped: 0 });
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn order_is_a_cache_dimension_even_when_records_coincide() {
+        // Identical records under two order keys occupy distinct slots: a
+        // plan produced for the natural order must never answer an annealed
+        // lookup (their persistence files are keyed apart too).
+        let recs = example_records();
+        let cache = PlanCache::new();
+        let order = OrderStrategy::Annealed { seed: 1, budget: 5 };
+        let a = cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
+        let b = cache
+            .get_or_plan_ordered(&recs, 1, "greedy-size", order)
+            .unwrap();
+        assert_eq!(*a, *b, "same records, same strategy: same plan content");
+        assert_eq!(cache.misses(), 2, "but distinct cache slots");
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn ordered_persist_then_ordered_warm_start_roundtrips() {
+        let dir = scratch_dir("ordered-roundtrip");
+        let recs = example_records();
+        let order = OrderStrategy::MemoryAware;
+        let warm = PlanCache::new();
+        warm.get_or_plan_ordered(&recs, 2, "greedy-size", order).unwrap();
+        assert_eq!(warm.persist_dir(&dir).unwrap().written, 1);
+
+        // A natural warm start skips the file with the stale-order counter…
+        let cold = PlanCache::new();
+        let report = cold.warm_start(&dir, &recs).unwrap();
+        assert_eq!(
+            (report.loaded, report.skipped_stale_order),
+            (0, 1),
+            "{report:?}"
+        );
+        // …which, like a foreign file, is not a *suspect* skip.
+        assert_eq!(report.skipped(), 0);
+        assert!(cold.is_empty());
+        // …the matching order loads it without planning.
+        let cold = PlanCache::new();
+        let report = cold.warm_start_ordered(&dir, &recs, order).unwrap();
+        assert_eq!(report.loaded, 1, "{report:?}");
+        cold.get_or_plan_ordered(&recs, 2, "greedy-size", order).unwrap();
+        assert_eq!(cold.misses(), 0, "ordered warm start must avoid the planner");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -31,6 +31,8 @@ pub mod validate;
 use crate::records::UsageRecords;
 
 pub use cache::{PersistReport, PlanCache, PlanServiceError, WarmStartReport};
+pub use order::{apply_order, AppliedOrder};
+pub use registry::{order_strategy, OrderStrategy};
 pub use service::{PlanService, PlanServiceStats};
 pub use validate::PlanError;
 

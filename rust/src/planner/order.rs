@@ -21,7 +21,12 @@
 //!   budgeted, so results are reproducible.
 //! * [`reorder_graph`] — rebuild a `Graph` with ops renumbered into a given
 //!   valid order, so the existing §4/§5 planners apply unchanged.
+//! * [`apply_order`] — the serving entry point: resolve a registry
+//!   [`OrderStrategy`] into a reordered graph plus an [`AppliedOrder`]
+//!   receipt (the breadth delta `ArenaStats` reports). This is what makes
+//!   ordering a first-class plan dimension rather than a bench toy.
 
+use super::registry::OrderStrategy;
 use crate::graph::{Graph, OpId, TensorKind};
 use crate::records::UsageRecords;
 use crate::rng::SplitMix64;
@@ -30,6 +35,77 @@ use crate::rng::SplitMix64;
 /// data dependencies).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ExecutionOrder(pub Vec<OpId>);
+
+/// The identity order — the stored (builder/TFLite) topological order.
+pub fn natural_order(graph: &Graph) -> ExecutionOrder {
+    ExecutionOrder((0..graph.ops.len()).map(OpId).collect())
+}
+
+/// Resolve a registry [`OrderStrategy`] into a concrete execution order.
+pub fn compute_order(graph: &Graph, strategy: OrderStrategy) -> ExecutionOrder {
+    match strategy {
+        OrderStrategy::Natural => natural_order(graph),
+        OrderStrategy::MemoryAware => memory_aware_order(graph),
+        OrderStrategy::Annealed { seed, budget } => anneal_order(graph, seed, budget),
+    }
+}
+
+/// Receipt of [`apply_order`]: which strategy was applied and how it moved
+/// the §5.1 lower bound (max operator breadth).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AppliedOrder {
+    /// The strategy that produced the order.
+    pub strategy: OrderStrategy,
+    /// Max operator breadth under the natural (stored) order.
+    pub natural_breadth: usize,
+    /// Max operator breadth under the applied order. Never exceeds
+    /// `natural_breadth` for [`OrderStrategy::Annealed`] (annealing starts
+    /// from the natural order and only accepts improvements).
+    pub order_breadth: usize,
+}
+
+impl AppliedOrder {
+    /// Canonical key of the applied order (see [`OrderStrategy::key`]).
+    pub fn key(&self) -> String {
+        self.strategy.key()
+    }
+
+    /// Bytes the order shaved off the §5.1 lower bound; negative means the
+    /// order regressed it (possible for `memory-aware` on adversarial
+    /// graphs, never for `annealed`).
+    pub fn breadth_delta(&self) -> i64 {
+        self.natural_breadth as i64 - self.order_breadth as i64
+    }
+}
+
+/// Apply `strategy` to `graph`: compute the order, validate it, rebuild the
+/// graph with ops renumbered into it, and report the breadth movement.
+/// `Natural` is the identity (the graph is cloned, never reordered), so
+/// record lifetimes — and plan fingerprints — are untouched.
+pub fn apply_order(graph: &Graph, strategy: OrderStrategy) -> (Graph, AppliedOrder) {
+    let natural_breadth = order_max_breadth(graph, &natural_order(graph));
+    if strategy.is_natural() {
+        let applied = AppliedOrder {
+            strategy,
+            natural_breadth,
+            order_breadth: natural_breadth,
+        };
+        return (graph.clone(), applied);
+    }
+    let order = compute_order(graph, strategy);
+    assert!(
+        is_valid_order(graph, &order),
+        "scheduler produced an invalid order for {}",
+        graph.name
+    );
+    let order_breadth = order_max_breadth(graph, &order);
+    let applied = AppliedOrder {
+        strategy,
+        natural_breadth,
+        order_breadth,
+    };
+    (reorder_graph(graph, &order), applied)
+}
 
 /// Compute the max operator breadth (the §5.1 lower bound) a given valid
 /// order would produce, without materializing a new graph.
@@ -193,12 +269,24 @@ where
     ExecutionOrder(order)
 }
 
-/// Randomized local search over orders: start from [`memory_aware_order`],
-/// propose random ready-op choices, keep the best max-breadth. `budget` is
-/// the number of random schedules tried.
+/// Randomized local search over orders: start from the better of the
+/// natural and [`memory_aware_order`] starts, propose random ready-op
+/// choices, keep the best max-breadth. `budget` is the number of random
+/// schedules tried.
+///
+/// Seeding from the *natural* order (not just the greedy one) guarantees
+/// the result never has a higher max breadth than the stored order — the
+/// invariant the ordering property tests and order-keyed serving rely on.
+/// Deterministic: equal `(graph, seed, budget)` give byte-identical orders.
 pub fn anneal_order(graph: &Graph, seed: u64, budget: usize) -> ExecutionOrder {
-    let mut best = memory_aware_order(graph);
+    let mut best = natural_order(graph);
     let mut best_cost = order_max_breadth(graph, &best);
+    let greedy = memory_aware_order(graph);
+    let greedy_cost = order_max_breadth(graph, &greedy);
+    if greedy_cost < best_cost {
+        best = greedy;
+        best_cost = greedy_cost;
+    }
     let mut rng = SplitMix64::new(seed);
     for _ in 0..budget {
         // ε-greedy randomized scheduler: mostly greedy, sometimes random.
@@ -349,6 +437,42 @@ mod tests {
         let (base, greedy, annealed) = order_ablation(&g, 7, 30);
         assert!(base > 0 && greedy > 0 && annealed > 0);
         assert!(annealed <= greedy.max(base));
+    }
+
+    #[test]
+    fn apply_order_natural_is_the_identity() {
+        let g = models::example_net();
+        let (re, applied) = apply_order(&g, OrderStrategy::Natural);
+        assert_eq!(applied.key(), "natural");
+        assert_eq!(applied.natural_breadth, applied.order_breadth);
+        assert_eq!(applied.breadth_delta(), 0);
+        let a = UsageRecords::from_graph(&g);
+        let b = UsageRecords::from_graph(&re);
+        for (x, y) in a.records.iter().zip(b.records.iter()) {
+            assert_eq!((x.first_op, x.last_op, x.size), (y.first_op, y.last_op, y.size));
+        }
+    }
+
+    #[test]
+    fn apply_order_annealed_never_regresses_the_natural_breadth() {
+        for g in [models::example_net(), diamond(), models::blazeface()] {
+            let (re, applied) = apply_order(
+                &g,
+                OrderStrategy::Annealed { seed: 11, budget: 30 },
+            );
+            assert!(re.validate().is_ok());
+            assert!(
+                applied.order_breadth <= applied.natural_breadth,
+                "{}: {} > {}",
+                g.name,
+                applied.order_breadth,
+                applied.natural_breadth
+            );
+            assert!(applied.breadth_delta() >= 0);
+            // The reordered graph's own §5.1 lower bound is the reported one.
+            let recs = UsageRecords::from_graph(&re);
+            assert_eq!(recs.profiles().offset_lower_bound(), applied.order_breadth);
+        }
     }
 
     #[test]

@@ -7,10 +7,94 @@
 //! strategy is addressable by a stable kebab-case key (what the CLI and the
 //! [`crate::planner::cache::PlanCache`] use) and by its human-readable
 //! Table 1/2 display name (what `Planner::name()` returns).
+//!
+//! Besides the allocation strategies, the registry also names the
+//! **execution-order strategies** ([`OrderStrategy`]): the paper's §7.1
+//! future-work lever, implemented in [`super::order`]. Orders change every
+//! record's lifetime, so the plan cache and the on-disk plan directory key
+//! on the canonical order key exactly like they key on the allocation
+//! strategy.
 
 use super::offset;
 use super::shared;
 use super::{OffsetPlanner, SharedObjectPlanner};
+
+/// An execution-order strategy — which topological order of the graph the
+/// usage records (and therefore every plan) are extracted under.
+///
+/// The annealed variant is parameterized by its RNG seed and trial budget;
+/// both are part of the canonical key ([`OrderStrategy::key`]) because two
+/// annealing runs with different seeds may settle on different orders, and
+/// a cached plan is only valid under the exact order that produced it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum OrderStrategy {
+    /// The stored (builder/TFLite) topological order.
+    #[default]
+    Natural,
+    /// Sethi-style greedy list scheduling: among ready ops, always run the
+    /// one minimizing live-set growth ([`super::order::memory_aware_order`]).
+    MemoryAware,
+    /// ε-greedy randomized local search seeded from the natural and
+    /// memory-aware orders, keeping the best max-breadth found
+    /// ([`super::order::anneal_order`]). Deterministic for a fixed seed.
+    Annealed { seed: u64, budget: usize },
+}
+
+/// Stable base keys of the order strategies (the annealed key is
+/// parameterized: `annealed-s<seed>-t<trials>`; the bare `annealed` resolves
+/// to the default seed/budget).
+pub const ORDER_KEYS: [&str; 3] = ["natural", "memory-aware", "annealed"];
+
+impl OrderStrategy {
+    /// Seed the bare `annealed` key resolves to.
+    pub const DEFAULT_ANNEAL_SEED: u64 = 42;
+    /// Trial budget the bare `annealed` key resolves to.
+    pub const DEFAULT_ANNEAL_BUDGET: usize = 100;
+
+    /// Canonical kebab-case key: `natural`, `memory-aware`, or
+    /// `annealed-s<seed>-t<trials>`. Filename-safe (ASCII alphanumerics and
+    /// `-` only) — it is embedded verbatim in plan-directory file names and
+    /// in the v2 plan header.
+    pub fn key(&self) -> String {
+        match self {
+            OrderStrategy::Natural => "natural".to_string(),
+            OrderStrategy::MemoryAware => "memory-aware".to_string(),
+            OrderStrategy::Annealed { seed, budget } => format!("annealed-s{seed}-t{budget}"),
+        }
+    }
+
+    /// True for the identity order (no reordering applied).
+    pub fn is_natural(&self) -> bool {
+        matches!(self, OrderStrategy::Natural)
+    }
+}
+
+/// Look up an order strategy by key: `natural`, `memory-aware`, `annealed`
+/// (default seed/budget), or the fully-parameterized
+/// `annealed-s<seed>-t<trials>`. Round-trips with [`OrderStrategy::key`].
+pub fn order_strategy(name: &str) -> Option<OrderStrategy> {
+    match name {
+        "natural" => Some(OrderStrategy::Natural),
+        "memory-aware" => Some(OrderStrategy::MemoryAware),
+        "annealed" => Some(OrderStrategy::Annealed {
+            seed: OrderStrategy::DEFAULT_ANNEAL_SEED,
+            budget: OrderStrategy::DEFAULT_ANNEAL_BUDGET,
+        }),
+        _ => {
+            let rest = name.strip_prefix("annealed-s")?;
+            let (seed, budget) = rest.split_once("-t")?;
+            Some(OrderStrategy::Annealed {
+                seed: seed.parse().ok()?,
+                budget: budget.parse().ok()?,
+            })
+        }
+    }
+}
+
+/// Canonical key of an order strategy name; `None` if unknown.
+pub fn order_key(name: &str) -> Option<String> {
+    order_strategy(name).map(|o| o.key())
+}
 
 /// Stable keys of the Shared-Objects strategies, in Table 1 row order: the
 /// paper's three, then prior work (Lee et al. 2019), then the Naive
@@ -140,5 +224,43 @@ mod tests {
     fn registries_cover_the_tables() {
         assert_eq!(shared_strategies().len(), 6);
         assert_eq!(offset_strategies().len(), 5);
+    }
+
+    #[test]
+    fn order_keys_resolve_and_roundtrip() {
+        for name in ORDER_KEYS {
+            let o = order_strategy(name).unwrap_or_else(|| panic!("order key {name}"));
+            assert_eq!(
+                order_strategy(&o.key()),
+                Some(o),
+                "canonical key of {name} must resolve back to the same strategy"
+            );
+        }
+        // Parameterized annealed keys carry their seed and budget.
+        let o = order_strategy("annealed-s7-t25").unwrap();
+        assert_eq!(o, OrderStrategy::Annealed { seed: 7, budget: 25 });
+        assert_eq!(o.key(), "annealed-s7-t25");
+        // The bare key resolves to the defaults.
+        assert_eq!(
+            order_strategy("annealed"),
+            Some(OrderStrategy::Annealed {
+                seed: OrderStrategy::DEFAULT_ANNEAL_SEED,
+                budget: OrderStrategy::DEFAULT_ANNEAL_BUDGET,
+            })
+        );
+        assert_eq!(order_key("memory-aware").as_deref(), Some("memory-aware"));
+    }
+
+    #[test]
+    fn unknown_order_names_are_rejected() {
+        for bad in ["belady", "", "annealed-s-t5", "annealed-sx-t5", "annealed-s5", "Natural"] {
+            assert_eq!(order_strategy(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn order_default_is_natural() {
+        assert!(OrderStrategy::default().is_natural());
+        assert!(!OrderStrategy::MemoryAware.is_natural());
     }
 }

@@ -6,7 +6,7 @@
 //! truncated file never half-loads.
 //!
 //! ```text
-//! tensorarena-plan v1 offset <n> <total>
+//! tensorarena-plan v2 offset <n> <total> <order>
 //! <record_id> <offset> <size> <first_op> <last_op>   # one per record
 //! checksum <fnv1a of all prior lines>
 //! ```
@@ -20,6 +20,14 @@
 //! or mis-merged file can never half-load into a plan the planner never
 //! produced.
 //!
+//! **v2** (the execution-order bump): the header carries `<order>`, the
+//! canonical [`super::registry::OrderStrategy`] key the records were
+//! extracted under. Orders change record lifetimes, so a plan is only
+//! valid under the order that produced it; the loader rejects an order
+//! mismatch ([`LoadError::OrderMismatch`]) and rejects pre-bump `v1` files
+//! cleanly ([`LoadError::UnsupportedVersion`]) instead of mistaking their
+//! total for an order key.
+//!
 //! # On-disk plan-directory format
 //!
 //! A *plan directory* persists a whole [`super::cache::PlanCache`] so a
@@ -30,23 +38,29 @@
 //!
 //! ```text
 //! <dir>/
-//!   <fingerprint>-b<batch>-<strategy>.plan
+//!   <fingerprint>-b<batch>-<strategy>@<order>.plan
 //! ```
 //!
 //! * `<fingerprint>` — 16 lowercase hex digits, [`records_fingerprint`] of
-//!   the **batch-1** records (the plan-cache key fingerprint);
+//!   the **batch-1** records (the plan-cache key fingerprint); for a
+//!   non-natural order these are the records of the *reordered* graph;
 //! * `<batch>` — decimal batch size (≥ 1) the plan was scaled to;
 //! * `<strategy>` — the canonical registry key (kebab-case, may itself
 //!   contain `-`; the separators are unambiguous because hex digits and
-//!   decimals never contain `-`).
+//!   decimals never contain `-`);
+//! * `<order>` — the canonical order key (`natural`, `memory-aware`,
+//!   `annealed-s<seed>-t<trials>`); `@` never appears in strategy or order
+//!   keys, so the last `@` splits the name unambiguously. v1-era file names
+//!   (no `@<order>` segment) fail to parse and are skipped.
 //!
-//! Each file's *content* is the v1 text format above, serialized against
+//! Each file's *content* is the v2 text format above, serialized against
 //! the batch-scaled records. Writers create files atomically (write to a
 //! dot-prefixed, per-process `.<name>.<pid>.tmp` sibling, then rename) so
 //! readers never see a torn file even when a fleet shares the directory;
 //! loaders skip — never crash on, never serve — any file that
-//! is truncated, checksum-corrupt, fingerprint-mismatched, or names a
-//! strategy that is no longer registered, and count the skips.
+//! is truncated, checksum-corrupt, fingerprint-mismatched, names a
+//! strategy that is no longer registered, or was written under a different
+//! execution order, and count the skips.
 
 use super::{OffsetPlan, SharedObjectPlan};
 use crate::records::UsageRecords;
@@ -77,10 +91,26 @@ pub fn records_fingerprint(records: &UsageRecords) -> u64 {
     fnv1a(&buf)
 }
 
-/// Serialize an offset plan together with the records it plans.
+/// Serialize an offset plan together with the records it plans, for the
+/// natural execution order.
 pub fn offset_plan_to_string(plan: &OffsetPlan, records: &UsageRecords) -> String {
+    offset_plan_to_string_ordered(plan, records, "natural")
+}
+
+/// Serialize an offset plan together with the records it plans, stamping
+/// the canonical key of the execution order the records were extracted
+/// under into the v2 header.
+pub fn offset_plan_to_string_ordered(
+    plan: &OffsetPlan,
+    records: &UsageRecords,
+    order_key: &str,
+) -> String {
+    debug_assert!(
+        !order_key.is_empty() && !order_key.contains(char::is_whitespace),
+        "order key must be a single token"
+    );
     let mut body = format!(
-        "tensorarena-plan v1 offset {} {}\n",
+        "tensorarena-plan v2 offset {} {} {order_key}\n",
         records.len(),
         plan.total
     );
@@ -122,6 +152,11 @@ pub fn shared_plan_to_string(plan: &SharedObjectPlan, records: &UsageRecords) ->
 #[derive(Debug, PartialEq, Eq)]
 pub enum LoadError {
     BadHeader(String),
+    /// The file speaks an older (or unknown) format version — e.g. a `v1`
+    /// file written before the execution-order bump. Rejected cleanly
+    /// rather than guessed at: v1 headers have no order field, so loading
+    /// one as v2 would mis-key the plan.
+    UnsupportedVersion(String),
     BadChecksum,
     Truncated,
     Malformed(usize),
@@ -130,6 +165,12 @@ pub enum LoadError {
         record: usize,
         field: &'static str,
     },
+    /// The plan was produced under a different execution order (lifetimes
+    /// differ, so its offsets are meaningless for these records).
+    OrderMismatch {
+        found: String,
+        expected: String,
+    },
     Infeasible(String),
 }
 
@@ -137,11 +178,17 @@ impl std::fmt::Display for LoadError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             LoadError::BadHeader(h) => write!(f, "bad plan header: {h}"),
+            LoadError::UnsupportedVersion(v) => {
+                write!(f, "unsupported plan format version '{v}' (this build reads v2)")
+            }
             LoadError::BadChecksum => write!(f, "plan checksum mismatch"),
             LoadError::Truncated => write!(f, "plan file truncated"),
             LoadError::Malformed(line) => write!(f, "malformed plan line {line}"),
             LoadError::RecordMismatch { record, field } => {
                 write!(f, "plan does not match records: record {record}, field {field}")
+            }
+            LoadError::OrderMismatch { found, expected } => {
+                write!(f, "plan was produced under order '{found}', not '{expected}'")
             }
             LoadError::Infeasible(e) => write!(f, "loaded plan infeasible: {e}"),
         }
@@ -158,12 +205,15 @@ fn split_checksum(text: &str) -> Result<(&str, u64), LoadError> {
     Ok((body, sum))
 }
 
-/// Checksum-verified parse of a v1 offset-plan text: the declared total
-/// and, per record id, `(offset, size, first_op, last_op)`. Every record
-/// id must appear exactly once — a file with a dropped or duplicated line
-/// (checksummed consistently; FNV-1a is not cryptographic) must never
-/// half-load into a plan the planner did not produce.
-fn parse_offset_plan(text: &str) -> Result<(usize, Vec<(usize, usize, usize, usize)>), LoadError> {
+/// Checksum-verified parse of a v2 offset-plan text: the declared total,
+/// the order key, and, per record id, `(offset, size, first_op, last_op)`.
+/// Every record id must appear exactly once — a file with a dropped or
+/// duplicated line (checksummed consistently; FNV-1a is not cryptographic)
+/// must never half-load into a plan the planner did not produce.
+#[allow(clippy::type_complexity)]
+fn parse_offset_plan(
+    text: &str,
+) -> Result<(usize, String, Vec<(usize, usize, usize, usize)>), LoadError> {
     let (body, sum) = split_checksum(text)?;
     if fnv1a(body.as_bytes()) != sum {
         return Err(LoadError::BadChecksum);
@@ -171,11 +221,20 @@ fn parse_offset_plan(text: &str) -> Result<(usize, Vec<(usize, usize, usize, usi
     let mut lines = body.lines();
     let header = lines.next().ok_or(LoadError::Truncated)?;
     let h: Vec<&str> = header.split_whitespace().collect();
-    if h.len() != 5 || h[0] != "tensorarena-plan" || h[1] != "v1" || h[2] != "offset" {
+    if h.len() < 2 || h[0] != "tensorarena-plan" {
+        return Err(LoadError::BadHeader(header.to_string()));
+    }
+    if h[1] != "v2" {
+        // A pre-bump (v1) or future-version file: reject by version, never
+        // by guessing at its field layout.
+        return Err(LoadError::UnsupportedVersion(h[1].to_string()));
+    }
+    if h.len() != 6 || h[2] != "offset" {
         return Err(LoadError::BadHeader(header.to_string()));
     }
     let n: usize = h[3].parse().map_err(|_| LoadError::BadHeader(header.into()))?;
     let total: usize = h[4].parse().map_err(|_| LoadError::BadHeader(header.into()))?;
+    let order = h[5].to_string();
     // `n` is untrusted input: bound it by the actual number of record
     // lines (each record needs its own line) *before* allocating anything
     // proportional to it — a crafted header count must be a skippable
@@ -205,12 +264,31 @@ fn parse_offset_plan(text: &str) -> Result<(usize, Vec<(usize, usize, usize, usi
         .enumerate()
         .map(|(id, row)| row.ok_or(LoadError::RecordMismatch { record: id, field: "missing" }))
         .collect::<Result<Vec<_>, _>>()
-        .map(|rows| (total, rows))
+        .map(|rows| (total, order, rows))
 }
 
-/// Load and verify an offset plan against `records`.
+/// Load and verify an offset plan against `records`, expecting the natural
+/// execution order.
 pub fn offset_plan_from_str(text: &str, records: &UsageRecords) -> Result<OffsetPlan, LoadError> {
-    let (total, rows) = parse_offset_plan(text)?;
+    offset_plan_from_str_ordered(text, records, "natural")
+}
+
+/// Load and verify an offset plan against `records`, additionally checking
+/// that the plan was serialized under the execution order whose canonical
+/// key is `expected_order` — a plan's offsets are only meaningful for the
+/// record lifetimes of the order that produced it.
+pub fn offset_plan_from_str_ordered(
+    text: &str,
+    records: &UsageRecords,
+    expected_order: &str,
+) -> Result<OffsetPlan, LoadError> {
+    let (total, order, rows) = parse_offset_plan(text)?;
+    if order != expected_order {
+        return Err(LoadError::OrderMismatch {
+            found: order,
+            expected: expected_order.to_string(),
+        });
+    }
     if rows.len() != records.len() {
         return Err(LoadError::RecordMismatch { record: rows.len(), field: "count" });
     }
@@ -245,30 +323,35 @@ pub fn offset_plan_from_str(text: &str, records: &UsageRecords) -> Result<Offset
 }
 
 /// File name of one plan inside a plan directory (see the module docs):
-/// `<fingerprint>-b<batch>-<strategy>.plan`, with `fingerprint` the
-/// **batch-1** records fingerprint — exactly the plan-cache key.
-pub fn plan_file_name(fingerprint: u64, batch: usize, strategy: &str) -> String {
-    format!("{fingerprint:016x}-b{batch}-{strategy}.plan")
+/// `<fingerprint>-b<batch>-<strategy>@<order>.plan`, with `fingerprint` the
+/// **batch-1** records fingerprint and `order` the canonical order key —
+/// exactly the plan-cache key.
+pub fn plan_file_name(fingerprint: u64, batch: usize, strategy: &str, order: &str) -> String {
+    format!("{fingerprint:016x}-b{batch}-{strategy}@{order}.plan")
 }
 
 /// Parse a plan-directory file name back into `(fingerprint, batch,
-/// strategy)`; `None` for anything that is not a well-formed plan file
-/// name (loaders skip such entries).
-pub fn parse_plan_file_name(name: &str) -> Option<(u64, usize, String)> {
+/// strategy, order)`; `None` for anything that is not a well-formed v2
+/// plan file name — including v1-era names without the `@<order>` segment
+/// (loaders skip such entries).
+pub fn parse_plan_file_name(name: &str) -> Option<(u64, usize, String, String)> {
     let stem = name.strip_suffix(".plan")?;
+    // '@' never appears in strategy or order keys, so the last '@' splits
+    // the stem unambiguously.
+    let (rest, order) = stem.rsplit_once('@')?;
     // Hex digits never contain '-', so the first "-b" is our separator
     // even though strategy keys (e.g. "greedy-breadth") contain "-b".
-    let (fp_hex, rest) = stem.split_once("-b")?;
+    let (fp_hex, rest) = rest.split_once("-b")?;
     if fp_hex.len() != 16 || !fp_hex.bytes().all(|b| b.is_ascii_hexdigit()) {
         return None;
     }
     let fingerprint = u64::from_str_radix(fp_hex, 16).ok()?;
     let (batch_str, strategy) = rest.split_once('-')?;
     let batch: usize = batch_str.parse().ok()?;
-    if batch == 0 || strategy.is_empty() {
+    if batch == 0 || strategy.is_empty() || order.is_empty() {
         return None;
     }
-    Some((fingerprint, batch, strategy.to_string()))
+    Some((fingerprint, batch, strategy.to_string(), order.to_string()))
 }
 
 #[cfg(test)]
@@ -456,8 +539,8 @@ mod tests {
         let plan = GreedyBySize.plan(&recs);
         let text = offset_plan_to_string(&plan, &recs);
         let inflated = text.replacen(
-            &format!(" {}\n", plan.total),
-            &format!(" {}\n", recs.naive_total() + 1),
+            &format!(" {} natural\n", plan.total),
+            &format!(" {} natural\n", recs.naive_total() + 1),
             1,
         );
         assert_ne!(inflated, text, "tampering must have hit the header");
@@ -473,30 +556,75 @@ mod tests {
 
     #[test]
     fn plan_file_name_roundtrips() {
-        for (fp, batch, strategy) in [
-            (0u64, 1usize, "naive"),
-            (0xdeadbeefcafef00d, 8, "greedy-size"),
-            (u64::MAX, 64, "greedy-breadth"),
-            (1, 123, "strip-packing"),
+        for (fp, batch, strategy, order) in [
+            (0u64, 1usize, "naive", "natural"),
+            (0xdeadbeefcafef00d, 8, "greedy-size", "memory-aware"),
+            (u64::MAX, 64, "greedy-breadth", "annealed-s42-t100"),
+            (1, 123, "strip-packing", "natural"),
         ] {
-            let name = plan_file_name(fp, batch, strategy);
+            let name = plan_file_name(fp, batch, strategy, order);
             assert_eq!(
                 parse_plan_file_name(&name),
-                Some((fp, batch, strategy.to_string())),
+                Some((fp, batch, strategy.to_string(), order.to_string())),
                 "{name}"
             );
         }
-        // Junk that must not parse: tmp files, truncated names, batch 0.
+        // Junk that must not parse: tmp files, truncated names, batch 0,
+        // pre-bump v1 names without the @<order> segment, empty order.
         for bad in [
             "README.md",
-            ".0000000000000000-b1-naive.plan.tmp",
-            "0000000000000000-b0-naive.plan",
-            "0000000000000000-b1-.plan",
-            "xyz-b1-naive.plan",
+            ".0000000000000000-b1-naive@natural.plan.tmp",
+            "0000000000000000-b0-naive@natural.plan",
+            "0000000000000000-b1-@natural.plan",
+            "0000000000000000-b1-naive@.plan",
+            "0000000000000000-b1-naive.plan",
+            "xyz-b1-naive@natural.plan",
             "0000000000000000.plan",
         ] {
             assert_eq!(parse_plan_file_name(bad), None, "{bad}");
         }
+    }
+
+    #[test]
+    fn order_mismatch_is_rejected() {
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let text = offset_plan_to_string_ordered(&plan, &recs, "annealed-s42-t100");
+        // The matching expectation loads...
+        assert_eq!(
+            offset_plan_from_str_ordered(&text, &recs, "annealed-s42-t100").unwrap(),
+            plan
+        );
+        // ...a different order (including the natural default) does not.
+        assert_eq!(
+            offset_plan_from_str(&text, &recs),
+            Err(LoadError::OrderMismatch {
+                found: "annealed-s42-t100".into(),
+                expected: "natural".into(),
+            })
+        );
+        assert!(matches!(
+            offset_plan_from_str_ordered(&text, &recs, "memory-aware"),
+            Err(LoadError::OrderMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn pre_bump_v1_text_is_rejected_by_version() {
+        // Reconstruct the retired v1 layout (no order field) with a
+        // consistent checksum: the loader must name the version, not guess
+        // at the field layout.
+        let recs = example_records();
+        let plan = GreedyBySize.plan(&recs);
+        let v2 = offset_plan_to_string(&plan, &recs);
+        let v1 = rechecksum(
+            &v2.replacen("tensorarena-plan v2", "tensorarena-plan v1", 1)
+                .replacen(&format!(" {} natural\n", plan.total), &format!(" {}\n", plan.total), 1),
+        );
+        assert_eq!(
+            offset_plan_from_str(&v1, &recs),
+            Err(LoadError::UnsupportedVersion("v1".into()))
+        );
     }
 
     #[test]

@@ -2,14 +2,23 @@
 //!
 //! One shared handle bundles the three pieces every layer needs:
 //! the strategy [`registry`](super::registry) (which strategies exist), the
-//! batch-aware [`PlanCache`] (plan once per `(model, batch, strategy)`),
-//! and the [`ArenaPool`] (recycle arena buffers instead of reallocating
-//! them per executor). The coordinator's engines, the CPU executor, the
-//! `serve` CLI, and the benches all take an `Arc<PlanService>` so their
-//! plans and arenas — and the hit/reuse counters that prove the reuse —
-//! come from one place.
+//! batch-aware [`PlanCache`] (plan once per `(model, batch, strategy,
+//! order)`), and the [`ArenaPool`] (recycle arena buffers instead of
+//! reallocating them per executor). The coordinator's engines, the CPU
+//! executor, the `serve` CLI, and the benches all take an
+//! `Arc<PlanService>` so their plans and arenas — and the hit/reuse
+//! counters that prove the reuse — come from one place.
+//!
+//! Execution order is a first-class plan dimension here:
+//! [`PlanService::plan_graph`] applies the requested
+//! [`OrderStrategy`](super::registry::OrderStrategy) — reorder, validate,
+//! *then* extract records — so the annealed orders of
+//! [`order`](super::order) reach the serving hot path, and every ordered
+//! plan lands in an order-keyed cache slot.
 
 use super::cache::{PersistReport, PlanCache, PlanServiceError, WarmStartReport};
+use super::order::{self, AppliedOrder};
+use super::registry::OrderStrategy;
 use super::{registry, OffsetPlan};
 use crate::arena::ArenaPool;
 use crate::graph::Graph;
@@ -100,53 +109,111 @@ impl PlanService {
     }
 
     /// Plan `records` (batch-1 form) scaled to `batch` under `strategy`
-    /// (`None` = the service default), through the cache.
+    /// (`None` = the service default), through the cache, for the natural
+    /// execution order.
     pub fn plan_records(
         &self,
         records: &UsageRecords,
         batch: usize,
         strategy: Option<&str>,
     ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
-        self.cache
-            .get_or_plan(records, batch, strategy.unwrap_or(self.default_strategy))
+        self.plan_records_ordered(records, batch, strategy, OrderStrategy::Natural)
     }
 
-    /// Extract usage records from `graph` and plan them at `batch`.
+    /// Plan `records` (batch-1 form, extracted under `order`) scaled to
+    /// `batch` under `strategy`, through the order-keyed cache slot.
+    pub fn plan_records_ordered(
+        &self,
+        records: &UsageRecords,
+        batch: usize,
+        strategy: Option<&str>,
+        order: OrderStrategy,
+    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
+        self.cache.get_or_plan_ordered(
+            records,
+            batch,
+            strategy.unwrap_or(self.default_strategy),
+            order,
+        )
+    }
+
+    /// Apply `order` to `graph` — reorder ops, validate the order, report
+    /// the §5.1 breadth movement — without planning anything. Natural is
+    /// the identity. See [`order::apply_order`].
+    pub fn apply_order(&self, graph: &Graph, order: OrderStrategy) -> (Graph, AppliedOrder) {
+        order::apply_order(graph, order)
+    }
+
+    /// Apply `order` to `graph`, extract usage records from the reordered
+    /// graph, and plan them at `batch`. The returned records are the
+    /// *ordered* records — the ones every later cache lookup, budget query,
+    /// and warm start for this serving configuration must use — and the
+    /// [`AppliedOrder`] receipt carries the breadth delta `ArenaStats`
+    /// reports.
     pub fn plan_graph(
         &self,
         graph: &Graph,
         batch: usize,
         strategy: Option<&str>,
-    ) -> Result<(UsageRecords, Arc<OffsetPlan>), PlanServiceError> {
-        let records = UsageRecords::from_graph(graph);
-        let plan = self.plan_records(&records, batch, strategy)?;
-        Ok((records, plan))
+        order: OrderStrategy,
+    ) -> Result<(UsageRecords, Arc<OffsetPlan>, AppliedOrder), PlanServiceError> {
+        let (ordered, applied) = self.apply_order(graph, order);
+        let records = UsageRecords::from_graph(&ordered);
+        let plan = self.plan_records_ordered(&records, batch, strategy, order)?;
+        Ok((records, plan, applied))
     }
 
-    /// Largest batch whose planned footprint fits `budget_bytes`; see
-    /// [`PlanCache::max_servable_batch`].
+    /// Largest batch whose planned footprint fits `budget_bytes`, for the
+    /// natural execution order; see [`PlanCache::max_servable_batch`].
     pub fn max_servable_batch(
         &self,
         records: &UsageRecords,
         budget_bytes: usize,
         strategy: Option<&str>,
     ) -> Result<usize, PlanServiceError> {
-        self.cache.max_servable_batch(
+        self.max_servable_batch_ordered(records, budget_bytes, strategy, OrderStrategy::Natural)
+    }
+
+    /// Largest batch whose planned footprint fits `budget_bytes`, resolved
+    /// under `order` (the records must be the reordered graph's); see
+    /// [`PlanCache::max_servable_batch_ordered`].
+    pub fn max_servable_batch_ordered(
+        &self,
+        records: &UsageRecords,
+        budget_bytes: usize,
+        strategy: Option<&str>,
+        order: OrderStrategy,
+    ) -> Result<usize, PlanServiceError> {
+        self.cache.max_servable_batch_ordered(
             records,
             strategy.unwrap_or(self.default_strategy),
             budget_bytes,
+            order,
         )
     }
 
     /// Seed the plan cache from a plan directory (see
-    /// [`PlanCache::warm_start`]): a restarted server re-plans nothing it
-    /// has already planned.
+    /// [`PlanCache::warm_start`]), for the natural execution order: a
+    /// restarted server re-plans nothing it has already planned.
     pub fn warm_start(
         &self,
         dir: &Path,
         records: &UsageRecords,
     ) -> std::io::Result<WarmStartReport> {
         self.cache.warm_start(dir, records)
+    }
+
+    /// Seed the plan cache from a plan directory for an order-keyed serving
+    /// configuration (see [`PlanCache::warm_start_ordered`]): only files
+    /// written under the same canonical order key are loaded; stale-order
+    /// files are skipped and counted.
+    pub fn warm_start_ordered(
+        &self,
+        dir: &Path,
+        records: &UsageRecords,
+        order: OrderStrategy,
+    ) -> std::io::Result<WarmStartReport> {
+        self.cache.warm_start_ordered(dir, records, order)
     }
 
     /// Persist every resident plan into `dir` (see
@@ -196,8 +263,44 @@ mod tests {
     fn plan_graph_plans_the_extracted_records() {
         let svc = PlanService::new();
         let g = crate::models::example_net();
-        let (records, plan) = svc.plan_graph(&g, 1, None).unwrap();
+        let (records, plan, applied) = svc
+            .plan_graph(&g, 1, None, OrderStrategy::Natural)
+            .unwrap();
         assert_eq!(plan.offsets.len(), records.len());
+        assert_eq!(applied.breadth_delta(), 0);
         plan.validate(&records).unwrap();
+    }
+
+    #[test]
+    fn plan_graph_applies_the_order_before_record_extraction() {
+        let svc = PlanService::new();
+        let g = crate::models::blazeface();
+        let order = OrderStrategy::Annealed { seed: 3, budget: 20 };
+        let (records, plan, applied) = svc.plan_graph(&g, 1, None, order).unwrap();
+        // The plan is feasible for the *ordered* records, and the reported
+        // breadth never regresses the natural order (annealing invariant).
+        plan.validate(&records).unwrap();
+        assert!(applied.order_breadth <= applied.natural_breadth);
+        assert_eq!(applied.key(), order.key());
+        // Re-planning the same configuration is an order-keyed cache hit.
+        let _ = svc.plan_graph(&g, 1, None, order).unwrap();
+        let st = svc.stats();
+        assert_eq!((st.cache_misses, st.cache_hits), (1, 1));
+        // Budget queries resolve under the same order: the cap's plan fits,
+        // the next batch's does not.
+        let budget = 2 * plan.total;
+        let cap = svc
+            .max_servable_batch_ordered(&records, budget, None, order)
+            .unwrap();
+        assert!(cap >= 1);
+        let at_cap = svc
+            .plan_records_ordered(&records, cap, None, order)
+            .unwrap()
+            .total;
+        let above = svc
+            .plan_records_ordered(&records, cap + 1, None, order)
+            .unwrap()
+            .total;
+        assert!(at_cap <= budget && above > budget);
     }
 }

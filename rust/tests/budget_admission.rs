@@ -13,9 +13,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 use tensorarena::coordinator::engine::ExecutorEngine;
-use tensorarena::coordinator::{BatchPolicy, EchoEngine, ModelServer, ServeError};
+use tensorarena::coordinator::{BatchPolicy, EchoEngine, Engine, ModelServer, ServeError};
 use tensorarena::models;
-use tensorarena::planner::{registry, PlanCache, PlanService};
+use tensorarena::planner::{apply_order, registry, OrderStrategy, PlanCache, PlanService};
 use tensorarena::records::UsageRecords;
 use tensorarena::rng::SplitMix64;
 
@@ -206,6 +206,110 @@ fn server_under_budget_clamps_batches_and_counts_refusals() {
         .unwrap()
         .total;
     assert!(peak_served <= budget);
+    server.shutdown();
+}
+
+#[test]
+fn annealed_order_serving_peak_and_admission_resolve_under_the_order() {
+    // The serving face of profile-guided ordering. Two guarantees:
+    //
+    // 1. Annealing is seeded from the natural order and only accepts
+    //    improvements, so its §5.1 breadth never regresses — and on the
+    //    zoo, the planned arena follows it (equality whenever no better
+    //    order exists, since the reordered graph is then identical).
+    // 2. Budget admission resolves its batch cap *under the served order*:
+    //    the cap's ordered plan fits, the next batch's does not, and the
+    //    engine behind a budgeted server answers with the same numbers.
+    let order = OrderStrategy::Annealed { seed: 42, budget: 60 };
+    let mut improved_or_equal = 0usize;
+    for name in ["blazeface", "mobilenet_v2", "inception_v3"] {
+        let g = models::by_name(name).unwrap();
+        let svc = PlanService::shared();
+        let (ordered, applied) = apply_order(&g, order);
+        assert!(
+            applied.order_breadth <= applied.natural_breadth,
+            "{name}: annealed breadth regressed natural"
+        );
+        let ordered_recs = UsageRecords::from_graph(&ordered);
+        let natural_recs = UsageRecords::from_graph(&g);
+        let annealed_peak = svc
+            .plan_records_ordered(&ordered_recs, 1, None, order)
+            .unwrap()
+            .total;
+        let natural_peak = svc.plan_records(&natural_recs, 1, None).unwrap().total;
+        if annealed_peak <= natural_peak {
+            improved_or_equal += 1;
+        }
+        // The planned peak can never undercut the order's own lower bound.
+        assert!(annealed_peak >= applied.order_breadth, "{name}");
+    }
+    assert!(
+        improved_or_equal >= 1,
+        "annealed-order serving must not inflate the planned peak on every zoo model"
+    );
+
+    // Budget admission under the served order, engine- and service-level.
+    let g = models::blazeface();
+    let svc = PlanService::shared();
+    let (ordered, _) = apply_order(&g, order);
+    let recs = UsageRecords::from_graph(&ordered);
+    let t1 = svc.plan_records_ordered(&recs, 1, None, order).unwrap().total;
+    let budget = 3 * t1 + t1 / 2;
+    let cap = svc
+        .max_servable_batch_ordered(&recs, budget, None, order)
+        .unwrap();
+    assert!(cap >= 1, "a 3.5x budget must admit at least batch 1");
+    let at_cap = svc
+        .plan_records_ordered(&recs, cap, None, order)
+        .unwrap()
+        .total;
+    let above = svc
+        .plan_records_ordered(&recs, cap + 1, None, order)
+        .unwrap()
+        .total;
+    assert!(at_cap <= budget && above > budget, "cap {cap} not tight under the order");
+    let engine = ExecutorEngine::with_order(&g, Arc::clone(&svc), "greedy-size", order, 7).unwrap();
+    assert_eq!(
+        engine.max_servable_batch(budget),
+        Some(cap),
+        "the engine must resolve the admission cap under its served order"
+    );
+    assert_eq!(engine.planned_peak(1), Some(t1));
+
+    // And a budgeted server built on that engine clamps batches to it.
+    let in_elems = g.tensor(g.inputs[0]).num_elements();
+    let server = {
+        let svc = Arc::clone(&svc);
+        ModelServer::spawn(
+            move || {
+                let g = models::blazeface();
+                Box::new(
+                    ExecutorEngine::with_order(&g, svc, "greedy-size", order, 7)
+                        .expect("engine")
+                        .with_max_batch(8),
+                )
+            },
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                mem_budget: Some(budget),
+            },
+        )
+    };
+    let pending: Vec<_> = (0..32)
+        .map(|i| server.submit(vec![(i as f32) / 32.0; in_elems]))
+        .collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().expect("worker alive");
+        assert!(resp.is_ok(), "request {i} failed under the ordered budget: {resp:?}");
+    }
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.completed, 32);
+    assert!(
+        snap.max_batch_seen <= cap,
+        "executed batch {} exceeds the order-resolved cap {cap}",
+        snap.max_batch_seen
+    );
     server.shutdown();
 }
 

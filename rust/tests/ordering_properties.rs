@@ -1,0 +1,250 @@
+//! Property tests for execution-order strategies — the ordering test tier.
+//!
+//! On randomized branchy DAGs (and the real zoo), every order the
+//! schedulers emit must be a valid topological order that preserves the op
+//! set exactly, and [`anneal_order`] must never report a higher max
+//! operator breadth than the natural order (it is seeded from the natural
+//! order and only accepts improvements). Determinism is load-bearing too:
+//! order-keyed plan-cache persistence is only sound if the same
+//! `(graph, seed, budget)` always reproduces byte-identical orders — and
+//! therefore stable record fingerprints — across runs.
+//!
+//! Same conventions as `planner_properties.rs`: hand-rolled SplitMix64
+//! generators (no proptest in the offline registry), every failure prints
+//! its seed, and the `#[ignore]`d sweep runs in CI tier-2 via
+//! `cargo test --release -- --include-ignored`.
+
+use std::sync::Arc;
+use tensorarena::coordinator::engine::ExecutorEngine;
+use tensorarena::coordinator::Engine;
+use tensorarena::graph::{Activation, DType, Graph, GraphBuilder, Padding};
+use tensorarena::models;
+use tensorarena::planner::order::{
+    anneal_order, apply_order, is_valid_order, memory_aware_order, natural_order,
+    order_max_breadth, reorder_graph,
+};
+use tensorarena::planner::serialize::records_fingerprint;
+use tensorarena::planner::{registry, OrderStrategy, PlanService};
+use tensorarena::records::UsageRecords;
+use tensorarena::rng::SplitMix64;
+
+/// Random branchy DAG: a pool of same-shape `[1, 8, 8, 4]` tensors grown
+/// by random conv / dwconv / residual-add / concat+project ops. Keeping
+/// every pool tensor channel-compatible means any two ends can merge, so
+/// the generator reaches diamond, fan-out, and skip-connection shapes —
+/// the graphs where order choice actually moves the footprint.
+fn random_dag(seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let mut b = GraphBuilder::new(format!("rand{seed}"), DType::F32);
+    let x = b.input("x", vec![1, 8, 8, 4]);
+    let stem = b.conv2d("stem", x, 4, (1, 1), (1, 1), Padding::Same, Activation::Relu);
+    let mut pool = vec![stem];
+    let n_ops = rng.next_range(4, 24);
+    for i in 0..n_ops {
+        let pick = pool[rng.next_below(pool.len())];
+        let t = match rng.next_below(4) {
+            0 => b.conv2d(
+                format!("c{i}"),
+                pick,
+                4,
+                (3, 3),
+                (1, 1),
+                Padding::Same,
+                Activation::Relu,
+            ),
+            1 => b.dwconv2d(
+                format!("d{i}"),
+                pick,
+                (3, 3),
+                (1, 1),
+                Padding::Same,
+                Activation::Relu,
+            ),
+            2 => {
+                let other = pool[rng.next_below(pool.len())];
+                b.add(format!("a{i}"), pick, other, Activation::None)
+            }
+            _ => {
+                let other = pool[rng.next_below(pool.len())];
+                let cat = b.concat(format!("k{i}"), &[pick, other]);
+                b.conv2d(
+                    format!("kp{i}"),
+                    cat,
+                    4,
+                    (1, 1),
+                    (1, 1),
+                    Padding::Same,
+                    Activation::None,
+                )
+            }
+        };
+        pool.push(t);
+        // Occasionally retire an end so branches terminate instead of
+        // fanning out forever.
+        if pool.len() > 3 && rng.next_below(3) == 0 {
+            pool.remove(rng.next_below(pool.len()));
+        }
+    }
+    // Merge every live end into a single output.
+    let mut acc = pool[0];
+    for (j, &t) in pool.iter().enumerate().skip(1) {
+        acc = b.add(format!("m{j}"), acc, t, Activation::None);
+    }
+    b.mark_output(acc);
+    b.finish()
+}
+
+/// Sorted op indices of an order — for the op-set-preservation check.
+fn op_multiset(order: &tensorarena::planner::order::ExecutionOrder) -> Vec<usize> {
+    let mut ops: Vec<usize> = order.0.iter().map(|o| o.0).collect();
+    ops.sort_unstable();
+    ops
+}
+
+/// The ordering properties for one graph: validity, exact op-set
+/// preservation, and the annealing never-regress-natural invariant.
+fn check_order_properties(seed: u64, g: &Graph) {
+    let identity: Vec<usize> = (0..g.num_ops()).collect();
+    let nat_breadth = order_max_breadth(g, &natural_order(g));
+
+    let greedy = memory_aware_order(g);
+    assert!(is_valid_order(g, &greedy), "seed {seed}: memory-aware order invalid");
+    assert_eq!(
+        op_multiset(&greedy),
+        identity,
+        "seed {seed}: memory-aware order dropped or duplicated ops"
+    );
+
+    let ann = anneal_order(g, seed, 30);
+    assert!(is_valid_order(g, &ann), "seed {seed}: annealed order invalid");
+    assert_eq!(
+        op_multiset(&ann),
+        identity,
+        "seed {seed}: annealed order dropped or duplicated ops"
+    );
+    let ann_breadth = order_max_breadth(g, &ann);
+    assert!(
+        ann_breadth <= nat_breadth,
+        "seed {seed}: annealed breadth {ann_breadth} regressed natural {nat_breadth}"
+    );
+
+    // Reordering round-trips: the rebuilt graph validates, and the usage
+    // records keep the same size multiset (only lifetimes move).
+    let re = reorder_graph(g, &ann);
+    re.validate().unwrap_or_else(|e| panic!("seed {seed}: reordered graph invalid: {e}"));
+    let a = UsageRecords::from_graph(g);
+    let b = UsageRecords::from_graph(&re);
+    assert_eq!(a.len(), b.len(), "seed {seed}: record count changed");
+    assert_eq!(a.naive_total(), b.naive_total(), "seed {seed}: sizes changed");
+    let mut sa: Vec<usize> = a.records.iter().map(|r| r.size).collect();
+    let mut sb: Vec<usize> = b.records.iter().map(|r| r.size).collect();
+    sa.sort_unstable();
+    sb.sort_unstable();
+    assert_eq!(sa, sb, "seed {seed}: size multiset changed");
+}
+
+#[test]
+fn order_properties_hold_on_random_dags() {
+    for seed in 0..12 {
+        check_order_properties(seed, &random_dag(seed));
+    }
+}
+
+#[test]
+fn order_properties_hold_on_the_zoo() {
+    for g in models::all_zoo() {
+        check_order_properties(999, &g);
+    }
+}
+
+#[test]
+#[ignore = "slow annealing sweep; run in CI tier-2 via --include-ignored"]
+fn order_properties_hold_across_many_seeds() {
+    for seed in 12..120 {
+        check_order_properties(seed, &random_dag(seed));
+    }
+}
+
+#[test]
+fn annealing_is_deterministic_and_fingerprints_are_stable() {
+    // Byte-identical orders for equal (graph, seed, budget) — the
+    // prerequisite for order-keyed plan-cache persistence: a restarted
+    // server must re-derive the exact records (and fingerprint) its plan
+    // directory was written under.
+    for g in [models::blazeface(), random_dag(77)] {
+        let a = anneal_order(&g, 7, 40);
+        let b = anneal_order(&g, 7, 40);
+        assert_eq!(a, b, "{}: same seed/budget diverged", g.name);
+        let fa = records_fingerprint(&UsageRecords::from_graph(&reorder_graph(&g, &a)));
+        let fb = records_fingerprint(&UsageRecords::from_graph(&reorder_graph(&g, &b)));
+        assert_eq!(fa, fb, "{}: fingerprints diverged", g.name);
+
+        // The same holds through the registry strategy / apply_order path
+        // the serving stack uses.
+        let order = OrderStrategy::Annealed { seed: 7, budget: 40 };
+        let (ga, ia) = apply_order(&g, order);
+        let (gb, ib) = apply_order(&g, order);
+        assert_eq!(ia, ib, "{}: applied-order receipts diverged", g.name);
+        assert_eq!(
+            records_fingerprint(&UsageRecords::from_graph(&ga)),
+            records_fingerprint(&UsageRecords::from_graph(&gb)),
+            "{}: apply_order fingerprints diverged",
+            g.name
+        );
+        assert_eq!(records_fingerprint(&UsageRecords::from_graph(&ga)), fa, "{}", g.name);
+    }
+    // Different parameterizations stay keyed apart even if their orders
+    // happened to coincide.
+    assert_ne!(
+        OrderStrategy::Annealed { seed: 7, budget: 40 }.key(),
+        OrderStrategy::Annealed { seed: 8, budget: 40 }.key()
+    );
+}
+
+#[test]
+fn stable_fingerprints_give_order_keyed_cache_hits() {
+    // Two engines for the same (model, strategy, order) must share one
+    // order-keyed plan: the second construction is a pure cache hit.
+    let g = models::blazeface();
+    let svc = PlanService::shared();
+    let order = OrderStrategy::Annealed { seed: 3, budget: 20 };
+    let _a = ExecutorEngine::with_order(&g, Arc::clone(&svc), "greedy-size", order, 1).unwrap();
+    let _b = ExecutorEngine::with_order(&g, Arc::clone(&svc), "greedy-size", order, 2).unwrap();
+    let st = svc.stats();
+    assert_eq!(st.cache_misses, 1, "second ordered engine re-ran the planner");
+    assert_eq!(st.cache_hits, 1);
+}
+
+#[test]
+fn registry_order_keys_reach_every_scheduler() {
+    // Each registry key resolves to an order that satisfies the validity
+    // property on a random DAG, and keys round-trip through parsing.
+    let g = random_dag(5);
+    for key in ["natural", "memory-aware", "annealed", "annealed-s9-t15"] {
+        let order = registry::order_strategy(key).unwrap_or_else(|| panic!("key {key}"));
+        let (re, applied) = apply_order(&g, order);
+        assert!(re.validate().is_ok(), "{key}");
+        assert_eq!(re.num_ops(), g.num_ops(), "{key}");
+        assert_eq!(registry::order_strategy(&applied.key()), Some(order), "{key}");
+    }
+    assert!(registry::order_strategy("annealed-s9").is_none());
+}
+
+#[test]
+fn ordered_execution_is_numerically_identical() {
+    // Reordering changes when ops run, never what they compute: the same
+    // random DAG under natural and annealed engines must produce
+    // bit-identical outputs (same synthesized weights, same DAG).
+    let g = random_dag(21);
+    let order = OrderStrategy::Annealed { seed: 13, budget: 25 };
+    let mut nat = ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 5).unwrap();
+    let mut ann =
+        ExecutorEngine::with_order(&g, PlanService::shared(), "greedy-size", order, 5).unwrap();
+    let mut rng = SplitMix64::new(1);
+    let mut x = vec![0f32; 2 * nat.in_elems()];
+    rng.fill_f32(&mut x, 1.0);
+    let a = nat.run_batch(&x, 2).unwrap();
+    let b = ann.run_batch(&x, 2).unwrap();
+    assert_eq!(a, b, "reordered execution changed the numbers");
+    assert!(a.iter().all(|v| v.is_finite()));
+}

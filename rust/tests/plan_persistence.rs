@@ -1,9 +1,11 @@
 //! Adversarial tests for the plan-directory format: a serving fleet must
 //! warm-start from whatever it finds on disk — truncated files, flipped
-//! fingerprint bytes, strategies that no longer exist — by *skipping* the
+//! fingerprint bytes, strategies that no longer exist, plans written under
+//! a different execution order, pre-bump v1 files — by *skipping* the
 //! damage (counted, warned) and never by crashing or serving a corrupt
-//! plan. Plus the restart acceptance test: a second cold start against the
-//! same plan dir performs zero planner invocations.
+//! plan. Plus the restart acceptance tests: a second cold start against
+//! the same plan dir — natural or order-keyed — performs zero planner
+//! invocations.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -11,8 +13,10 @@ use std::time::Duration;
 use tensorarena::coordinator::engine::ExecutorEngine;
 use tensorarena::coordinator::{BatchPolicy, ModelServer};
 use tensorarena::models;
-use tensorarena::planner::serialize::{self, plan_file_name};
-use tensorarena::planner::{PlanCache, PlanService, WarmStartReport};
+use tensorarena::planner::serialize::{self, plan_file_name, LoadError};
+use tensorarena::planner::{
+    apply_order, OrderStrategy, PlanCache, PlanService, WarmStartReport,
+};
 use tensorarena::records::UsageRecords;
 
 /// Fresh scratch directory under the system temp dir (no tempfile crate in
@@ -62,10 +66,10 @@ fn directory_roundtrip_golden() {
         .collect();
     names.sort();
     let mut expected = vec![
-        plan_file_name(fp, 1, "greedy-size"),
-        plan_file_name(fp, 2, "greedy-size"),
-        plan_file_name(fp, 8, "greedy-size"),
-        plan_file_name(fp, 1, "greedy-breadth"),
+        plan_file_name(fp, 1, "greedy-size", "natural"),
+        plan_file_name(fp, 2, "greedy-size", "natural"),
+        plan_file_name(fp, 8, "greedy-size", "natural"),
+        plan_file_name(fp, 1, "greedy-breadth", "natural"),
     ];
     expected.sort();
     assert_eq!(names, expected, "directory layout is the golden format");
@@ -98,6 +102,7 @@ fn truncated_file_is_skipped_not_served() {
         serialize::records_fingerprint(&recs),
         2,
         "greedy-size",
+        "natural",
     ));
     let text = std::fs::read_to_string(&victim).unwrap();
     std::fs::write(&victim, &text[..text.len() / 2]).unwrap();
@@ -122,10 +127,10 @@ fn flipped_fingerprint_byte_is_skipped_as_foreign() {
     let recs = example();
     assert_eq!(populate(&recs, &dir, &[1]), 1);
     let fp = serialize::records_fingerprint(&recs);
-    let original = dir.join(plan_file_name(fp, 1, "greedy-size"));
+    let original = dir.join(plan_file_name(fp, 1, "greedy-size", "natural"));
     // Flip one hex digit of the file-name fingerprint (keep it well-formed):
     // the file now claims to belong to some other model.
-    let flipped = dir.join(plan_file_name(fp ^ 0xf, 1, "greedy-size"));
+    let flipped = dir.join(plan_file_name(fp ^ 0xf, 1, "greedy-size", "natural"));
     std::fs::rename(&original, &flipped).unwrap();
 
     let cache = PlanCache::new();
@@ -153,9 +158,9 @@ fn stale_strategy_file_is_skipped_with_counter() {
     assert_eq!(populate(&recs, &dir, &[1]), 1);
     let fp = serialize::records_fingerprint(&recs);
     // A plan persisted by a build whose strategy has since been removed
-    // from the registry ("annealed" does not exist).
-    let genuine = dir.join(plan_file_name(fp, 1, "greedy-size"));
-    let stale = dir.join(plan_file_name(fp, 1, "annealed"));
+    // from the registry ("belady" does not exist).
+    let genuine = dir.join(plan_file_name(fp, 1, "greedy-size", "natural"));
+    let stale = dir.join(plan_file_name(fp, 1, "belady", "natural"));
     std::fs::copy(&genuine, &stale).unwrap();
 
     let cache = PlanCache::new();
@@ -175,14 +180,14 @@ fn checksum_corrupt_and_junk_files_are_skipped() {
     assert_eq!(populate(&recs, &dir, &[1, 4]), 2);
     let fp = serialize::records_fingerprint(&recs);
     // Corrupt the batch-4 file's body (checksum now mismatches).
-    let victim = dir.join(plan_file_name(fp, 4, "greedy-size"));
+    let victim = dir.join(plan_file_name(fp, 4, "greedy-size", "natural"));
     let mut text = std::fs::read_to_string(&victim).unwrap();
     text = text.replacen("offset", "OFFSET", 1);
     std::fs::write(&victim, text).unwrap();
     // Junk that merely *looks* like a plan file, plus ignorable noise.
-    std::fs::write(dir.join("zz-not-a-key-b1-x.plan"), "garbage").unwrap();
+    std::fs::write(dir.join("zz-not-a-key-b1-x@natural.plan"), "garbage").unwrap();
     std::fs::write(dir.join("README.txt"), "not a plan").unwrap();
-    let torn = dir.join(format!(".{}.tmp", plan_file_name(fp, 9, "greedy-size")));
+    let torn = dir.join(format!(".{}.tmp", plan_file_name(fp, 9, "greedy-size", "natural")));
     std::fs::write(torn, "torn").unwrap();
 
     let cache = PlanCache::new();
@@ -192,6 +197,89 @@ fn checksum_corrupt_and_junk_files_are_skipped() {
     assert_eq!(report.skipped_corrupt, 2, "{report:?}");
     assert_eq!(cache.warm_loaded(), 1);
     assert_eq!(cache.warm_skipped(), 2);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn annealed_order_plan_is_skipped_when_warm_starting_natural() {
+    // A plan directory written by an `annealed`-order server must never
+    // seed a natural-order service: the file is skipped with the dedicated
+    // stale-order counter (and left intact for the annealed server), while
+    // a warm start under the matching order loads it with zero planner
+    // invocations.
+    let dir = scratch_dir("stale-order");
+    let g = models::blazeface();
+    let order = OrderStrategy::Annealed { seed: 7, budget: 25 };
+    let (ordered, _) = apply_order(&g, order);
+    let ordered_recs = UsageRecords::from_graph(&ordered);
+    let warm = PlanCache::new();
+    warm.get_or_plan_ordered(&ordered_recs, 1, "greedy-size", order).unwrap();
+    assert_eq!(warm.persist_dir(&dir).unwrap().written, 1);
+    let written: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert!(
+        written.iter().all(|n| n.ends_with("@annealed-s7-t25.plan")),
+        "order key must be in the file name: {written:?}"
+    );
+
+    // Natural warm start: skipped with the new counter, nothing served.
+    // Like a foreign file, the skip is not *suspect* (it belongs to the
+    // annealed configuration sharing the directory) — no warm_skipped.
+    let natural_recs = UsageRecords::from_graph(&g);
+    let cache = PlanCache::new();
+    let report = cache.warm_start(&dir, &natural_recs).unwrap();
+    assert_eq!(report.loaded, 0, "{report:?}");
+    assert_eq!(report.skipped_stale_order, 1, "{report:?}");
+    assert_eq!(report.skipped(), 0);
+    assert_eq!(cache.warm_skipped(), 0);
+    assert!(cache.is_empty(), "a stale-order plan must never be served");
+    // The file is left intact for its own configuration.
+    let cache = PlanCache::new();
+    let report = cache.warm_start_ordered(&dir, &ordered_recs, order).unwrap();
+    assert_eq!(report.loaded, 1, "{report:?}");
+    cache.get_or_plan_ordered(&ordered_recs, 1, "greedy-size", order).unwrap();
+    assert_eq!(cache.misses(), 0, "order-keyed warm start must avoid the planner");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pre_bump_version_file_is_rejected_cleanly() {
+    let dir = scratch_dir("pre-bump");
+    let recs = example();
+    assert_eq!(populate(&recs, &dir, &[1]), 1);
+    let fp = serialize::records_fingerprint(&recs);
+    let genuine = dir.join(plan_file_name(fp, 1, "greedy-size", "natural"));
+    let text = std::fs::read_to_string(&genuine).unwrap();
+
+    // (a) A v1-era *file name* (no @<order> segment) does not parse:
+    // skipped as corrupt, never loaded, never fatal.
+    std::fs::write(dir.join(format!("{fp:016x}-b2-greedy-size.plan")), &text).unwrap();
+    // (b) A v1 *header* under a well-formed v2 name: rejected by version
+    // with a recomputed, self-consistent checksum — the structural check,
+    // not the checksum, must catch it.
+    let headerless = text
+        .replacen("tensorarena-plan v2", "tensorarena-plan v1", 1)
+        .replacen(" natural\n", "\n", 1);
+    let body = &headerless[..headerless.rfind("checksum ").unwrap()];
+    let sum = serialize::fnv1a(body.as_bytes());
+    let v1_text = format!("{body}checksum {sum:016x}\n");
+    assert_eq!(
+        serialize::offset_plan_from_str(&v1_text, &recs),
+        Err(LoadError::UnsupportedVersion("v1".into())),
+        "the loader must name the version"
+    );
+    std::fs::write(dir.join(plan_file_name(fp, 4, "greedy-size", "natural")), &v1_text).unwrap();
+
+    let cache = PlanCache::new();
+    let report = cache.warm_start(&dir, &recs).unwrap();
+    assert_eq!(report.loaded, 1, "{report:?}");
+    assert_eq!(report.skipped_corrupt, 2, "{report:?}");
+    assert_eq!(cache.len(), 1, "only the genuine v2 plan is resident");
+    // The pre-bump keys cost a re-plan, not a crash.
+    cache.get_or_plan(&recs, 4, "greedy-size").unwrap();
+    assert_eq!(cache.misses(), 1);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
@@ -218,23 +306,26 @@ fn warm_start_isolates_models_sharing_one_directory() {
 // Restart acceptance: zero planner invocations on the second start.
 // ---------------------------------------------------------------------------
 
-/// One serving "process lifetime": spawn a budget-capped server against
-/// `dir`, run a burst, persist the cache back, and return the number of
-/// planner invocations the run needed.
-fn serve_once(dir: &std::path::Path, burst: usize) -> u64 {
+/// One serving "process lifetime": spawn a budget-capped server for
+/// `order` against `dir`, run a burst, persist the cache back, and return
+/// the number of planner invocations the run needed.
+fn serve_once(dir: &std::path::Path, burst: usize, order: OrderStrategy) -> u64 {
     let g = models::blazeface();
     let in_elems = g.tensor(g.inputs[0]).num_elements();
-    let recs = UsageRecords::from_graph(&g);
+    // The served records are the order-applied ones — the same ones the
+    // engine derives — so warm start, budget, and persistence agree.
+    let (ordered, _) = apply_order(&g, order);
+    let recs = UsageRecords::from_graph(&ordered);
     let service = PlanService::shared();
-    service.warm_start(dir, &recs).unwrap();
-    let budget = 3 * service.plan_records(&recs, 1, None).unwrap().total;
+    service.warm_start_ordered(dir, &recs, order).unwrap();
+    let budget = 3 * service.plan_records_ordered(&recs, 1, None, order).unwrap().total;
     let server = {
         let service = Arc::clone(&service);
         ModelServer::spawn(
             move || {
                 let g = models::blazeface();
                 Box::new(
-                    ExecutorEngine::new(&g, service, "greedy-size", 7)
+                    ExecutorEngine::with_order(&g, service, "greedy-size", order, 7)
                         .expect("engine")
                         .with_max_batch(8),
                 )
@@ -262,15 +353,39 @@ fn second_cold_start_against_plan_dir_plans_nothing() {
     let dir = scratch_dir("restart");
     // First lifetime: plans everything it needs (batch-1 at engine build,
     // the budget binary-search probes, every batch the burst formed).
-    let cold_misses = serve_once(&dir, 64);
+    let cold_misses = serve_once(&dir, 64, OrderStrategy::Natural);
     assert!(cold_misses >= 1, "first start must actually plan");
     // Second lifetime, fresh PlanService, same directory: every plan —
     // including the max_servable_batch probes — is warm-started, so the
     // planner-invocation counter stays at zero.
-    let warm_misses = serve_once(&dir, 64);
+    let warm_misses = serve_once(&dir, 64, OrderStrategy::Natural);
     assert_eq!(
         warm_misses, 0,
         "a restarted server must re-plan nothing for previously-seen shapes"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn second_cold_start_under_annealed_order_plans_nothing() {
+    // The ISSUE's acceptance scenario: `serve --order annealed` with a plan
+    // dir. The annealed order is re-derived deterministically on restart,
+    // so the order-keyed files warm-start the cache and the second
+    // lifetime performs zero planner invocations.
+    let dir = scratch_dir("restart-ordered");
+    let order = OrderStrategy::Annealed { seed: 42, budget: 40 };
+    let cold_misses = serve_once(&dir, 48, order);
+    assert!(cold_misses >= 1, "first start must actually plan");
+    let warm_misses = serve_once(&dir, 48, order);
+    assert_eq!(
+        warm_misses, 0,
+        "a restarted annealed-order server must re-plan nothing"
+    );
+    // And the directory cannot leak into a natural-order restart.
+    let natural_misses = serve_once(&dir, 48, OrderStrategy::Natural);
+    assert!(
+        natural_misses >= 1,
+        "a natural-order server must not consume annealed-order plans"
     );
     std::fs::remove_dir_all(&dir).unwrap();
 }
