@@ -19,9 +19,28 @@ use std::time::{Duration, Instant};
 /// when the oldest queued request has waited `max_wait`. With `mem_budget`
 /// set, the effective cap is further clamped to the largest batch whose
 /// planned arena peak fits the budget (see [`Engine::max_servable_batch`]).
+///
+/// # Example
+///
+/// ```
+/// use std::time::Duration;
+/// use tensorarena::coordinator::{BatchPolicy, EchoEngine, ModelServer};
+///
+/// let server = ModelServer::spawn(
+///     || Box::new(EchoEngine::new(2, 8)),
+///     BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), mem_budget: None },
+/// );
+/// let out = server.submit(vec![1.0, 2.0]).recv().unwrap().unwrap();
+/// assert_eq!(out, vec![2.0, 4.0]);
+/// server.shutdown();
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
+    /// Most samples a batch may hold (further clamped by the engine's own
+    /// cap and, when set, the budget).
     pub max_batch: usize,
+    /// Longest the oldest queued request may wait before a partial batch
+    /// is flushed.
     pub max_wait: Duration,
     /// Byte budget for the engine's planned working memory; `None` means
     /// unbounded. Enforced only for engines that can report planned peaks.

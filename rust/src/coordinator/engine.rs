@@ -3,7 +3,9 @@
 use super::ArenaStats;
 use crate::exec::Executor;
 use crate::graph::Graph;
-use crate::planner::{apply_order, registry, AppliedOrder, OrderStrategy, PlanService};
+use crate::planner::{
+    apply_order, registry, AppliedOrder, DynamicRecords, OrderStrategy, PlanService,
+};
 use crate::records::UsageRecords;
 #[cfg(feature = "pjrt")]
 use crate::runtime::VariantSet;
@@ -125,6 +127,11 @@ pub struct ExecutorEngine {
     /// Receipt of the applied order: canonical key + breadth movement,
     /// reported in [`ArenaStats`].
     applied: AppliedOrder,
+    /// §7 dynamic profile of the served (order-applied) graph, when this
+    /// engine serves in wave-aware mode — the input to every dynamic budget
+    /// query (`planned_peak` / `max_servable_batch` resolve against the
+    /// worst-wave peak, not a static plan).
+    dynamic: Option<DynamicRecords>,
 }
 
 impl ExecutorEngine {
@@ -154,6 +161,38 @@ impl ExecutorEngine {
         order: OrderStrategy,
         seed: u64,
     ) -> Result<Self> {
+        Self::construct(graph, service, strategy, order, None, seed)
+    }
+
+    /// [`Self::with_order`] in the §7 **wave-aware** mode: the served
+    /// (order-applied) graph's records get the decode-tail dynamic profile
+    /// starting at `decode_from` (see [`DynamicRecords::decode_tail`]), the
+    /// executor sizes its pooled arena at the worst-wave multi-pass peak
+    /// and re-resolves offsets through the plan cache at every wave
+    /// boundary, and budget admission ([`Engine::planned_peak`] /
+    /// [`Engine::max_servable_batch`]) resolves under that worst-wave peak.
+    /// Repeat inferences over the same resolved prefixes perform zero
+    /// planner invocations — the decode-step amortization MAFAT-style
+    /// serving needs.
+    pub fn with_dynamic(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        strategy: &str,
+        order: OrderStrategy,
+        decode_from: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        Self::construct(graph, service, strategy, order, Some(decode_from), seed)
+    }
+
+    fn construct(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        strategy: &str,
+        order: OrderStrategy,
+        decode_from: Option<usize>,
+        seed: u64,
+    ) -> Result<Self> {
         let key = registry::offset_key(strategy)
             .ok_or_else(|| anyhow::anyhow!("unknown offset strategy '{strategy}'"))?;
         if graph.inputs.len() != 1 || graph.outputs.is_empty() {
@@ -166,8 +205,24 @@ impl ExecutorEngine {
             );
         }
         let (ordered, applied) = apply_order(graph, order);
-        let exec = Executor::with_service_ordered(&ordered, Arc::clone(&service), key, order, seed)
-            .map_err(anyhow::Error::msg)?;
+        let dynamic = decode_from.map(|from| {
+            DynamicRecords::decode_tail(&UsageRecords::from_graph(&ordered), from)
+        });
+        let exec = match &dynamic {
+            Some(d) => Executor::with_service_dynamic(
+                &ordered,
+                Arc::clone(&service),
+                key,
+                order,
+                d.clone(),
+                seed,
+            )
+            .map_err(anyhow::Error::msg)?,
+            None => {
+                Executor::with_service_ordered(&ordered, Arc::clone(&service), key, order, seed)
+                    .map_err(anyhow::Error::msg)?
+            }
+        };
         let in_elems = ordered.tensor(ordered.inputs[0]).num_elements();
         let out_elems = ordered.tensor(ordered.outputs[0]).num_elements();
         let records = exec.base_records().clone();
@@ -181,6 +236,7 @@ impl ExecutorEngine {
             records,
             order,
             applied,
+            dynamic,
         })
     }
 
@@ -206,15 +262,19 @@ impl Engine for ExecutorEngine {
         self.exec.run_batch(input, n).map_err(anyhow::Error::msg)
     }
     fn arena_stats(&self) -> ArenaStats {
-        let stats = ArenaStats::from_service(
+        let mut stats = ArenaStats::from_service(
             self.exec.arena_bytes(),
             self.exec.naive_bytes(),
             self.strategy,
             self.service.stats(),
         );
-        // Only order-planning configurations report the order segment:
-        // natural-order serving keeps `ArenaStats.order` empty (and the
-        // rendered stats line unchanged).
+        // Only wave-aware configurations report the dynamic segment, and
+        // only order-planning configurations the order segment:
+        // plain natural-order static serving keeps the rendered stats line
+        // unchanged.
+        if self.dynamic.is_some() {
+            stats = stats.with_waves(self.exec.wave_passes(), self.exec.wave_resolutions());
+        }
         if self.order.is_natural() {
             return stats;
         }
@@ -235,26 +295,45 @@ impl Engine for ExecutorEngine {
         if batch > usize::MAX / naive {
             return None;
         }
-        self.service
-            .plan_records_ordered(&self.records, batch, Some(self.strategy), self.order)
-            .ok()
-            .map(|p| p.total)
+        match &self.dynamic {
+            // Wave-aware serving must admit against the worst-wave peak:
+            // mid-inference waves only ever grow the arena.
+            Some(d) => self
+                .service
+                .plan_dynamic(d, batch, Some(self.strategy), self.order)
+                .ok()
+                .map(|p| p.peak),
+            None => self
+                .service
+                .plan_records_ordered(&self.records, batch, Some(self.strategy), self.order)
+                .ok()
+                .map(|p| p.total),
+        }
     }
     fn max_servable_batch(&self, budget_bytes: usize) -> Option<usize> {
-        self.service
-            .max_servable_batch_ordered(
-                &self.records,
-                budget_bytes,
-                Some(self.strategy),
-                self.order,
-            )
-            .ok()
+        match &self.dynamic {
+            Some(d) => self
+                .service
+                .max_servable_batch_dynamic(d, budget_bytes, Some(self.strategy), self.order)
+                .ok(),
+            None => self
+                .service
+                .max_servable_batch_ordered(
+                    &self.records,
+                    budget_bytes,
+                    Some(self.strategy),
+                    self.order,
+                )
+                .ok(),
+        }
     }
 }
 
 /// Trivial engine for coordinator unit tests: output = input scaled by 2.
 pub struct EchoEngine {
+    /// Elements per sample (both input and output).
     pub elems: usize,
+    /// Largest batch the engine accepts.
     pub max_batch: usize,
     /// Batch sizes observed, for batching-policy assertions.
     pub seen_batches: Vec<usize>,
@@ -264,6 +343,7 @@ pub struct EchoEngine {
 }
 
 impl EchoEngine {
+    /// Engine of `elems` elements per sample, accepting up to `max_batch`.
     pub fn new(elems: usize, max_batch: usize) -> Self {
         EchoEngine { elems, max_batch, seen_batches: Vec::new(), peak_per_sample: None }
     }
@@ -370,6 +450,69 @@ mod tests {
         assert!(st.breadth_delta() >= 0);
         // Natural-order serving keeps the stats line order-free.
         assert!(nat.arena_stats().order.is_empty());
+    }
+
+    #[test]
+    fn dynamic_engine_matches_static_outputs_and_reports_waves() {
+        let g = crate::models::blazeface();
+        let decode_from = g.num_ops() / 2;
+        let mut stat = ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 3).unwrap();
+        let svc = PlanService::shared();
+        let mut dynr = ExecutorEngine::with_dynamic(
+            &g,
+            Arc::clone(&svc),
+            "greedy-size",
+            OrderStrategy::Natural,
+            decode_from,
+            3,
+        )
+        .unwrap();
+        let x = vec![0.1f32; 2 * stat.in_elems()];
+        assert_eq!(
+            stat.run_batch(&x, 2).unwrap(),
+            dynr.run_batch(&x, 2).unwrap(),
+            "wave-aware execution changed the numbers"
+        );
+        let st = dynr.arena_stats();
+        assert!(st.waves >= 2, "decode tail must plan multiple waves: {st:?}");
+        assert!(st.wave_resolutions > 0);
+        assert!(st.dynamic_misses > 0);
+        // Static serving keeps the stats line dynamic-free.
+        assert_eq!(stat.arena_stats().waves, 0);
+        // A second burst re-resolves every wave from the cache.
+        let misses = svc.stats().dynamic_misses;
+        dynr.run_batch(&x, 2).unwrap();
+        assert_eq!(
+            svc.stats().dynamic_misses,
+            misses,
+            "repeat burst must perform zero planner invocations"
+        );
+    }
+
+    #[test]
+    fn dynamic_engine_budget_resolves_under_the_worst_wave_peak() {
+        let g = crate::models::blazeface();
+        let decode_from = g.num_ops() / 2;
+        let svc = PlanService::shared();
+        let e = ExecutorEngine::with_dynamic(
+            &g,
+            Arc::clone(&svc),
+            "greedy-size",
+            OrderStrategy::Natural,
+            decode_from,
+            3,
+        )
+        .unwrap();
+        let p1 = e.planned_peak(1).unwrap();
+        assert!(p1 > 0);
+        let cap = e.max_servable_batch(3 * p1).unwrap();
+        assert!(cap >= 1);
+        assert!(e.planned_peak(cap).unwrap() <= 3 * p1);
+        assert!(e.planned_peak(cap + 1).unwrap() > 3 * p1);
+        assert_eq!(e.max_servable_batch(p1 - 1), Some(0));
+        // The admitted peak is the multi-pass worst-wave peak — exactly
+        // what the wave-aware executor sized its resident arena to.
+        assert_eq!(p1, e.arena_stats().planned_bytes);
     }
 
     #[test]

@@ -38,6 +38,15 @@ pub fn render_arena_stats(s: &ArenaStats) -> String {
             s.breadth_delta().unsigned_abs() as f64 / 1024.0,
         ));
     }
+    if s.waves > 0 {
+        line.push_str(&format!(
+            " | dynamic {} wave(s), {} hit / {} re-plan",
+            s.waves, s.dynamic_hits, s.dynamic_misses
+        ));
+        if s.wave_resolutions > 0 {
+            line.push_str(&format!(", {} re-resolve(s)", s.wave_resolutions));
+        }
+    }
     line
 }
 
@@ -66,19 +75,26 @@ struct Inner {
 /// A point-in-time summary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Requests completed (answered with an output).
     pub completed: u64,
     /// Requests refused by admission control ([`crate::coordinator::ServeError::BudgetExceeded`]
     /// / [`crate::coordinator::ServeError::BatchTooLarge`]) — the count the
     /// paper's edge box reports instead of OOMing.
     pub rejected: u64,
+    /// Median end-to-end latency, microseconds.
     pub p50_us: u64,
+    /// 95th-percentile end-to-end latency, microseconds.
     pub p95_us: u64,
+    /// 99th-percentile end-to-end latency, microseconds.
     pub p99_us: u64,
+    /// Mean queue wait, microseconds.
     pub mean_queue_us: u64,
+    /// Mean executed batch size.
     pub mean_batch: f64,
     /// Largest batch actually executed — under a memory budget this stays
     /// at or below the budget-clamped cap.
     pub max_batch_seen: usize,
+    /// Completed requests per wall-clock second.
     pub throughput_rps: f64,
 }
 
@@ -179,13 +195,31 @@ mod tests {
         assert!(line.contains("75% hit"), "{line}");
         assert!(line.contains("2 reused / 2 allocated"), "{line}");
         // The warm-start segment only appears once a plan directory was
-        // actually touched, and the order segment only for order-planning
-        // engines.
+        // actually touched, the order segment only for order-planning
+        // engines, and the dynamic segment only for wave-aware engines.
         assert!(!line.contains("warm start"), "{line}");
         assert!(!line.contains("order"), "{line}");
+        assert!(!line.contains("dynamic"), "{line}");
         let warmed = ArenaStats { warm_loaded: 4, warm_skipped: 1, ..s };
         let line = render_arena_stats(&warmed);
         assert!(line.contains("warm start 4 loaded / 1 skipped"), "{line}");
+    }
+
+    #[test]
+    fn arena_stats_render_includes_the_dynamic_waves() {
+        let s = ArenaStats {
+            planned_bytes: 8 * 1024,
+            naive_bytes: 32 * 1024,
+            strategy: "greedy-size".into(),
+            dynamic_hits: 9,
+            dynamic_misses: 3,
+            ..ArenaStats::default()
+        }
+        .with_waves(4, 12);
+        let line = render_arena_stats(&s);
+        assert!(line.contains("dynamic 4 wave(s)"), "{line}");
+        assert!(line.contains("9 hit / 3 re-plan"), "{line}");
+        assert!(line.contains("12 re-resolve(s)"), "{line}");
     }
 
     #[test]

@@ -36,6 +36,26 @@ use std::time::Instant;
 /// machine-readable: a client that receives [`ServeError::BudgetExceeded`]
 /// can re-shard its burst below the reported budget instead of parsing a
 /// message string.
+///
+/// # Example
+///
+/// ```
+/// use tensorarena::coordinator::{BatchPolicy, EchoEngine, ModelServer, ServeError};
+///
+/// // Planned peak 100 B/sample under a 250 B budget: at most 2 samples
+/// // fit, so a pre-batched burst of 4 is refused — typed, never OOMed.
+/// let server = ModelServer::spawn(
+///     || Box::new(EchoEngine::new(1, 8).with_peak_per_sample(100)),
+///     BatchPolicy { mem_budget: Some(250), ..BatchPolicy::default() },
+/// );
+/// match server.submit(vec![0.0; 4]).recv().unwrap() {
+///     Err(ServeError::BudgetExceeded { batch, budget_bytes, .. }) => {
+///         assert_eq!((batch, budget_bytes), (4, 250));
+///     }
+///     other => panic!("expected a typed refusal, got {other:?}"),
+/// }
+/// server.shutdown();
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
     /// Input length is not a non-zero multiple of the model's per-sample
@@ -129,6 +149,18 @@ pub struct ArenaStats {
     /// Max operator breadth under the served order — ≤ `natural_breadth`
     /// for annealed orders (annealing only accepts improvements).
     pub order_breadth: usize,
+    /// Planner passes of the served §7 multi-pass plan (0 = static
+    /// serving; the `planned_bytes` of a dynamic engine is the worst-wave
+    /// peak).
+    pub waves: usize,
+    /// Wave-boundary offset re-resolutions the engine performed (each one
+    /// a decode-step plan-cache lookup).
+    pub wave_resolutions: u64,
+    /// Dynamic plan-cache hits (decode-step re-plans answered with zero
+    /// planner invocations).
+    pub dynamic_hits: u64,
+    /// Dynamic plan-cache misses (multi-pass planner invocations).
+    pub dynamic_misses: u64,
 }
 
 impl ArenaStats {
@@ -153,8 +185,19 @@ impl ArenaStats {
             pool_allocated: service.pool_allocated,
             warm_loaded: service.warm_loaded,
             warm_skipped: service.warm_skipped,
+            dynamic_hits: service.dynamic_hits,
+            dynamic_misses: service.dynamic_misses,
             ..ArenaStats::default()
         }
+    }
+
+    /// Record that the served plan is a §7 multi-pass plan: how many waves
+    /// it planned and how many wave-boundary re-resolutions the engine has
+    /// performed. `planned_bytes` is then read as the worst-wave peak.
+    pub fn with_waves(mut self, waves: usize, wave_resolutions: u64) -> Self {
+        self.waves = waves;
+        self.wave_resolutions = wave_resolutions;
+        self
     }
 
     /// Record the execution order the served plan was produced under and

@@ -18,7 +18,10 @@ pub mod ops;
 
 use crate::arena::{Arena, ArenaPool};
 use crate::graph::{Graph, OpKind, PoolKind, TensorKind};
-use crate::planner::{registry, OffsetPlan, OffsetPlanner, OrderStrategy, PlanError, PlanService};
+use crate::planner::{
+    registry, DynamicRecords, MultiPassPlan, OffsetPlan, OffsetPlanner, OrderStrategy, PlanError,
+    PlanService,
+};
 use crate::records::UsageRecords;
 use crate::rng::SplitMix64;
 use ops::Geom;
@@ -63,6 +66,32 @@ struct Step {
     dies: Vec<usize>,
 }
 
+/// State of the §7 wave-aware execution mode: the dynamic profile being
+/// served, the op indices at which waves resolve, and the resident
+/// complete multi-pass plan whose worst-wave peak sized the arena.
+struct WaveState {
+    /// Batch-1 dynamic records of the served graph.
+    dynamic: DynamicRecords,
+    /// Distinct non-zero `known_at` values, ascending: after executing op
+    /// `boundaries[i]`, a wave of sizes resolves and offsets are
+    /// re-resolved from the pre-resolved envelope below.
+    boundaries: Vec<usize>,
+    /// The resolved-prefix plan per boundary at the current batch, pulled
+    /// through the service's dynamic cache by [`Executor::prewarm_waves`]
+    /// at build and batch growth. Holding the `Arc`s here keeps the
+    /// per-sample hot path free of hashing and cache locks (and immune to
+    /// FIFO eviction); the cache remains the cross-executor amortization
+    /// layer.
+    prefix_plans: Vec<Arc<MultiPassPlan>>,
+    /// The resident complete plan at the current batch — what wave
+    /// re-resolutions are checked against (the §7 freeze invariant).
+    full: Arc<MultiPassPlan>,
+    /// Wave-boundary offset re-resolutions performed so far (each one is a
+    /// decode-step plan lookup: a dynamic cache hit after the first
+    /// inference).
+    resolutions: u64,
+}
+
 /// Graph executor over a planned arena.
 pub struct Executor {
     steps: Vec<Step>,
@@ -91,6 +120,10 @@ pub struct Executor {
     /// Current batch: the arena is planned for `base_records.scaled(batch)`
     /// and striped into `batch` lanes.
     batch: usize,
+    /// §7 wave-aware mode (None = static serving). When set, the arena is
+    /// sized at the worst-wave multi-pass peak and offsets are re-resolved
+    /// through the plan cache at every wave boundary.
+    waves: Option<WaveState>,
 }
 
 impl Executor {
@@ -344,7 +377,113 @@ impl Executor {
             service,
             pool,
             batch: 1,
+            waves: None,
         })
+    }
+
+    /// [`Self::with_service_ordered`] in the §7 **wave-aware** mode:
+    /// `dynamic` assigns each of the graph's records a `known_at` op (see
+    /// [`DynamicRecords`]), the arena is sized at the worst-wave peak of
+    /// the complete multi-pass plan (so mid-inference growth is already
+    /// hosted), and at every wave boundary the executor re-resolves the
+    /// newly-known records' offsets through the service's resolved-prefix
+    /// cache slot — a planner invocation on the first inference, a cache
+    /// hit on every repeat (the decode-step amortization of §7).
+    pub fn with_service_dynamic(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        strategy: &str,
+        order: OrderStrategy,
+        dynamic: DynamicRecords,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let key = registry::offset_key(strategy)
+            .ok_or_else(|| format!("unknown offset strategy '{strategy}'"))?;
+        let records = UsageRecords::from_graph(graph);
+        // The dynamic profile must describe exactly this graph's records —
+        // the cache keys on it, so a drifted profile would be a silent
+        // cross-model cache pollution.
+        if dynamic.len() != records.len() || dynamic.num_ops != records.num_ops {
+            return Err(format!(
+                "dynamic profile describes {} records over {} ops; the graph has {} over {}",
+                dynamic.len(),
+                dynamic.num_ops,
+                records.len(),
+                records.num_ops
+            ));
+        }
+        for (d, r) in dynamic.records.iter().zip(&records.records) {
+            if d.record.first_op != r.first_op
+                || d.record.last_op != r.last_op
+                || d.record.size != r.size
+            {
+                return Err(format!(
+                    "dynamic record {} does not match the graph's usage record",
+                    r.id
+                ));
+            }
+            if d.known_at > 0 && d.known_at >= d.record.first_op {
+                return Err(format!(
+                    "record {} resolves after op {} but is produced at op {}: \
+                     its offset would not exist in time",
+                    r.id, d.known_at, d.record.first_op
+                ));
+            }
+        }
+        let full = service
+            .plan_dynamic(&dynamic, 1, Some(key), order)
+            .map_err(|e| e.to_string())?;
+        let plan = full
+            .offset_plan()
+            .ok_or("complete dynamic plan left a record unplaced")?;
+        let pool = Arc::clone(service.pool());
+        let mut ex = Self::build(
+            graph,
+            records,
+            &plan,
+            seed,
+            Some(key.to_string()),
+            order,
+            Some(service),
+            pool,
+        )
+        .map_err(|e| e.to_string())?;
+        ex.waves = Some(WaveState {
+            boundaries: dynamic.boundaries(),
+            prefix_plans: Vec::new(),
+            dynamic,
+            full,
+            resolutions: 0,
+        });
+        // Pre-resolve the wave envelope for batch 1, so the very first
+        // inference's boundaries already have resident prefix plans.
+        ex.prewarm_waves()?;
+        Ok(ex)
+    }
+
+    /// Pre-resolve every wave prefix for the resident batch through the
+    /// service cache and pin the resulting plans in [`WaveState`] — the §7
+    /// analogue of the batcher's spawn-time envelope pre-resolution: after
+    /// this, the per-op wave boundaries on the hot path touch neither the
+    /// planner nor the cache lock. No-op in static mode.
+    fn prewarm_waves(&mut self) -> Result<(), String> {
+        let Some(ws) = self.waves.as_mut() else { return Ok(()) };
+        let Some(svc) = self.service.as_ref() else { return Ok(()) };
+        let mut plans = Vec::with_capacity(ws.boundaries.len());
+        for &b in &ws.boundaries {
+            plans.push(
+                svc.plan_dynamic_resolved(
+                    &ws.dynamic,
+                    b,
+                    self.batch,
+                    self.strategy.as_deref(),
+                    self.order,
+                )
+                .map_err(|e| e.to_string())?,
+            );
+        }
+        ws.prefix_plans = plans;
+        Ok(())
     }
 
     /// Arena footprint in bytes (of the current batch's plan).
@@ -392,14 +531,31 @@ impl Executor {
         }
         let scaled = self.base_records.scaled(batch);
         let plan: Arc<OffsetPlan> = match (&self.service, &self.strategy) {
-            (Some(svc), _) => svc
-                .plan_records_ordered(
-                    &self.base_records,
-                    batch,
-                    self.strategy.as_deref(),
-                    self.order,
-                )
-                .map_err(|e| e.to_string())?,
+            (Some(svc), _) => {
+                if let Some(ws) = &mut self.waves {
+                    // Wave-aware mode: the new batch's arena is sized at
+                    // the (batch-scaled) worst-wave peak, and the resident
+                    // full plan swaps with it so wave re-resolutions keep
+                    // checking against the right placements.
+                    let mp = svc
+                        .plan_dynamic(&ws.dynamic, batch, self.strategy.as_deref(), self.order)
+                        .map_err(|e| e.to_string())?;
+                    let plan = Arc::new(
+                        mp.offset_plan()
+                            .ok_or("complete dynamic plan left a record unplaced")?,
+                    );
+                    ws.full = mp;
+                    plan
+                } else {
+                    svc.plan_records_ordered(
+                        &self.base_records,
+                        batch,
+                        self.strategy.as_deref(),
+                        self.order,
+                    )
+                    .map_err(|e| e.to_string())?
+                }
+            }
             (None, Some(name)) => {
                 let planner = registry::offset_strategy(name)
                     .ok_or_else(|| format!("unknown offset strategy '{name}'"))?;
@@ -422,6 +578,9 @@ impl Executor {
         self.plan_total = plan.total;
         self.naive_total = scaled.naive_total();
         self.batch = batch;
+        // Wave-aware mode: pre-resolve the new batch's wave envelope so
+        // the post-swap hot path stays planner-free.
+        self.prewarm_waves()?;
         Ok(())
     }
 
@@ -473,11 +632,49 @@ impl Executor {
         }
         for si in 0..self.steps.len() {
             self.exec_step(si, lane);
+            if self.waves.is_some() {
+                self.resolve_waves_after(si);
+            }
         }
         self.output_io
             .iter()
             .map(|&ioi| self.io[ioi].clone())
             .collect()
+    }
+
+    /// §7 wave boundary: if executing op `op` resolved a wave of sizes,
+    /// re-resolve the newly-known records' offsets from the pre-resolved
+    /// envelope ([`Self::prewarm_waves`] pulled each prefix plan through
+    /// the service's resolved-prefix cache slot — one multi-pass planner
+    /// invocation per prefix for the whole service lifetime, shared by
+    /// every executor on the handle). Placements re-resolved here must
+    /// agree with the resident full plan (the freeze invariant), which
+    /// debug builds assert.
+    fn resolve_waves_after(&mut self, op: usize) {
+        let Some(ws) = self.waves.as_mut() else { return };
+        let Ok(idx) = ws.boundaries.binary_search(&op) else { return };
+        let prefix = &ws.prefix_plans[idx];
+        ws.resolutions += 1;
+        debug_assert!(
+            prefix
+                .wave_records
+                .last()
+                .map_or(true, |ids| {
+                    ids.iter().all(|&id| prefix.offset_of(id) == ws.full.offset_of(id))
+                }),
+            "wave re-resolution moved a frozen placement (freeze invariant broken)"
+        );
+    }
+
+    /// Planner passes of the resident §7 multi-pass plan (0 = static mode).
+    pub fn wave_passes(&self) -> usize {
+        self.waves.as_ref().map_or(0, |w| w.full.passes)
+    }
+
+    /// Wave-boundary offset re-resolutions performed so far (0 = static
+    /// mode); each was a decode-step plan-cache lookup.
+    pub fn wave_resolutions(&self) -> u64 {
+        self.waves.as_ref().map_or(0, |w| w.resolutions)
     }
 
     fn exec_step(&mut self, si: usize, lane: usize) {
@@ -762,6 +959,110 @@ mod tests {
         assert_eq!(st.cache_misses, 1);
         assert_eq!(st.cache_hits, 1);
         assert!(st.pool_reused >= 1, "restart did not reuse the retired arena");
+    }
+
+    #[test]
+    fn wave_aware_execution_matches_static_numbers() {
+        // Dynamic mode changes *where* tensors live (frozen multi-pass
+        // placements) and *when* offsets resolve, never what the ops
+        // compute: outputs must stay bit-identical to the static executor.
+        let g = tiny_net();
+        let x = input_for(&g, 17);
+        let records = UsageRecords::from_graph(&g);
+        let dynamic = DynamicRecords::decode_tail(&records, records.num_ops / 2);
+        assert!(dynamic.num_dynamic() > 0, "the tail must actually be dynamic");
+        let svc = PlanService::shared();
+        let mut dynamic_ex = Executor::with_service_dynamic(
+            &g,
+            Arc::clone(&svc),
+            "greedy-size",
+            OrderStrategy::Natural,
+            dynamic.clone(),
+            7,
+        )
+        .unwrap();
+        dynamic_ex.set_poison_dead(true);
+        let mut static_ex = Executor::new(&g, &GreedyBySize, 7).unwrap();
+        assert_eq!(dynamic_ex.run(&[&x]), static_ex.run(&[&x]));
+        assert!(dynamic_ex.wave_passes() >= 2);
+        assert_eq!(
+            dynamic_ex.wave_resolutions(),
+            dynamic.boundaries().len() as u64,
+            "one re-resolution per wave boundary"
+        );
+        // The arena hosts the worst-wave peak.
+        let mp = svc
+            .plan_dynamic(&dynamic, 1, Some("greedy-size"), OrderStrategy::Natural)
+            .unwrap();
+        assert_eq!(dynamic_ex.arena_bytes(), mp.peak);
+    }
+
+    #[test]
+    fn repeat_inferences_resolve_waves_from_the_cache() {
+        let g = tiny_net();
+        let records = UsageRecords::from_graph(&g);
+        let dynamic = DynamicRecords::decode_tail(&records, records.num_ops / 2);
+        let boundaries = dynamic.boundaries().len() as u64;
+        let svc = PlanService::shared();
+        let mut ex = Executor::with_service_dynamic(
+            &g,
+            Arc::clone(&svc),
+            "greedy-size",
+            OrderStrategy::Natural,
+            dynamic,
+            7,
+        )
+        .unwrap();
+        // Construction planned the full plan and pre-warmed each *proper*
+        // prefix — the last boundary resolves every size, which is exactly
+        // the full plan's fingerprint, so that pre-warm lookup already
+        // hits. Nothing is left for the hot path to plan (or even to look
+        // up: the envelope is pinned in the executor).
+        let misses_at_build = svc.stats().dynamic_misses;
+        assert_eq!(misses_at_build, boundaries);
+        let x = input_for(&g, 18);
+        ex.run(&[&x]);
+        ex.run(&[&x]);
+        ex.run(&[&x]);
+        let st = svc.stats();
+        assert_eq!(
+            st.dynamic_misses, misses_at_build,
+            "inferences must perform zero planner invocations"
+        );
+        assert_eq!(st.dynamic_hits, 1, "only the pre-warm touches the cache");
+        assert_eq!(ex.wave_resolutions(), 3 * boundaries);
+    }
+
+    #[test]
+    fn dynamic_profile_must_match_the_graph() {
+        let g = tiny_net();
+        let records = UsageRecords::from_graph(&g);
+        let svc = PlanService::shared();
+        // Wrong record count.
+        let short = DynamicRecords::new(Vec::new(), records.num_ops);
+        assert!(Executor::with_service_dynamic(
+            &g,
+            Arc::clone(&svc),
+            "greedy-size",
+            OrderStrategy::Natural,
+            short,
+            7
+        )
+        .is_err());
+        // A record resolving at (or after) its producer cannot be served.
+        let mut bad = DynamicRecords::decode_tail(&records, 1);
+        if let Some(d) = bad.records.iter_mut().find(|d| d.record.first_op > 0) {
+            d.known_at = d.record.first_op;
+        }
+        assert!(Executor::with_service_dynamic(
+            &g,
+            svc,
+            "greedy-size",
+            OrderStrategy::Natural,
+            bad,
+            7
+        )
+        .is_err());
     }
 
     #[test]

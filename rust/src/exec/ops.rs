@@ -30,21 +30,34 @@ pub fn activate(buf: &mut [f32], act: Activation) {
 
 /// Spatial geometry of a conv/pool op, precomputed once per call.
 pub struct Geom {
+    /// Input height.
     pub h: usize,
+    /// Input width.
     pub w: usize,
+    /// Output height.
     pub oh: usize,
+    /// Output width.
     pub ow: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
+    /// Vertical stride.
     pub sh: usize,
+    /// Horizontal stride.
     pub sw: usize,
+    /// Vertical dilation.
     pub dh: usize,
+    /// Horizontal dilation.
     pub dw: usize,
+    /// Top padding (negative never occurs; `isize` for the inner loops).
     pub ph: isize,
+    /// Left padding.
     pub pw: isize,
 }
 
 impl Geom {
+    /// Precompute the geometry of one conv/pool call.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         h: usize,

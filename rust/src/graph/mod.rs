@@ -29,9 +29,13 @@ use crate::align;
 /// `U8` are provided for quantized-model planning experiments.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
+    /// 32-bit IEEE float (the paper's evaluation precision).
     F32,
+    /// 16-bit float.
     F16,
+    /// 8-bit unsigned (quantized models).
     U8,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -67,11 +71,15 @@ pub struct TensorId(pub usize);
 /// A tensor: a named, shaped, typed edge of the graph.
 #[derive(Debug, Clone)]
 pub struct Tensor {
+    /// Dense id inside the owning graph.
     pub id: TensorId,
+    /// Human-readable name (layer name in the zoo models).
     pub name: String,
     /// Logical shape, typically `[N, H, W, C]` (NHWC, as TFLite uses).
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
+    /// Storage class — only [`TensorKind::Intermediate`] is planned.
     pub kind: TensorKind,
 }
 
@@ -96,11 +104,15 @@ impl Tensor {
 /// exchange.
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
+    /// Model name (zoo key).
     pub name: String,
+    /// Every tensor, indexed by [`TensorId`].
     pub tensors: Vec<Tensor>,
     /// Ops in execution (topological) order; `ops[i].id == OpId(i)`.
     pub ops: Vec<Op>,
+    /// Graph input tensors, in declaration order.
     pub inputs: Vec<TensorId>,
+    /// Graph output tensors, in declaration order.
     pub outputs: Vec<TensorId>,
 }
 

@@ -12,16 +12,21 @@ pub struct OpId(pub usize);
 /// extra intermediate tensors).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Activation {
+    /// No fused activation.
     #[default]
     None,
+    /// `max(x, 0)`.
     Relu,
+    /// `clamp(x, 0, 6)`.
     Relu6,
 }
 
 /// Pooling flavour.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PoolKind {
+    /// Max pooling.
     Max,
+    /// Average pooling.
     Average,
 }
 
@@ -32,56 +37,87 @@ pub enum PoolKind {
 pub enum OpKind {
     /// 2D convolution, NHWC, weights `[kh, kw, in_c, out_c]`.
     Conv2d {
+        /// Kernel spatial size `(kh, kw)`.
         kernel: (usize, usize),
+        /// Stride `(sh, sw)`.
         stride: (usize, usize),
+        /// Padding scheme.
         padding: Padding,
+        /// Dilation `(dh, dw)` (atrous convolution).
         dilation: (usize, usize),
+        /// Fused activation.
         activation: Activation,
     },
     /// Depthwise 2D convolution, multiplier 1, weights `[kh, kw, c, 1]`.
     DepthwiseConv2d {
+        /// Kernel spatial size `(kh, kw)`.
         kernel: (usize, usize),
+        /// Stride `(sh, sw)`.
         stride: (usize, usize),
+        /// Padding scheme.
         padding: Padding,
+        /// Dilation `(dh, dw)`.
         dilation: (usize, usize),
+        /// Fused activation.
         activation: Activation,
     },
     /// Spatial pooling.
     Pool2d {
+        /// Max or average.
         kind: PoolKind,
+        /// Window spatial size `(kh, kw)`.
         kernel: (usize, usize),
+        /// Stride `(sh, sw)`.
         stride: (usize, usize),
+        /// Padding scheme.
         padding: Padding,
     },
     /// Global average pool to `[N, 1, 1, C]` (a.k.a. `MEAN` over H,W).
     GlobalAveragePool,
     /// Elementwise binary add (residual connections).
-    Add { activation: Activation },
+    Add {
+        /// Fused activation.
+        activation: Activation,
+    },
     /// Elementwise binary multiply.
     Mul,
     /// Concatenation along the channel axis (Inception blocks).
     ConcatChannels,
     /// Fully connected: input `[N, in]`, weights `[in, out]`.
-    FullyConnected { activation: Activation },
+    FullyConnected {
+        /// Fused activation.
+        activation: Activation,
+    },
     /// Softmax over the last axis.
     Softmax,
     /// Standalone ReLU / ReLU6 (when not fusable).
-    Relu { max: Option<f32> },
+    Relu {
+        /// Upper clamp (`Some(6.0)` for ReLU6, `None` for plain ReLU).
+        max: Option<f32>,
+    },
     /// Logistic sigmoid.
     Sigmoid,
     /// Nearest/bilinear resize to a fixed spatial size (DeepLab decoder).
-    ResizeBilinear { out: (usize, usize) },
+    ResizeBilinear {
+        /// Output spatial size `(oh, ow)`.
+        out: (usize, usize),
+    },
     /// Reshape (no data movement in planning terms, but produces a new
     /// intermediate tensor in TFLite graphs).
     Reshape,
     /// Explicit zero padding of spatial dims (BlazeFace-style channel pad is
     /// modelled via Conv2d in the zoo).
     Pad {
+        /// Rows/columns added before `(top, left)`.
         before: (usize, usize),
+        /// Rows/columns added after `(bottom, right)`.
         after: (usize, usize),
     },
     /// Mean-subtract/scale style pre-processing treated as elementwise.
-    Elementwise { name: &'static str },
+    Elementwise {
+        /// Mnemonic reported by traces.
+        name: &'static str,
+    },
 }
 
 impl OpKind {
@@ -111,11 +147,15 @@ impl OpKind {
 /// One operator node.
 #[derive(Debug, Clone)]
 pub struct Op {
+    /// Position in the fixed execution order.
     pub id: OpId,
+    /// Human-readable name (layer name in the zoo models).
     pub name: String,
+    /// What the op computes.
     pub kind: OpKind,
     /// Data inputs (activations) followed by weight tensors, if any.
     pub inputs: Vec<TensorId>,
+    /// Output tensors (exactly one for every kind the executor runs).
     pub outputs: Vec<TensorId>,
 }
 

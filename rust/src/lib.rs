@@ -65,6 +65,20 @@
 //! [`planner::PlanCache::warm_start`], format documented in
 //! [`planner::serialize`]), so a restarted server performs zero planner
 //! invocations for shapes it has already served.
+//!
+//! Dynamically-sized tensors (§7) serve through the same cache: a
+//! [`planner::DynamicRecords`] profile marks which sizes resolve
+//! mid-inference, the §7 [`planner::MultiPassPlanner`] plans them in
+//! frozen waves, and decode-step re-plans are keyed by the fingerprint of
+//! the *resolved-size prefix* — repeats cost zero planner invocations
+//! ([`planner::PlanService::plan_dynamic_resolved`]), and budget admission
+//! resolves under the worst-wave peak.
+//!
+//! The full architecture — layer dataflow, the plan-cache key, the
+//! arena-pool lifecycle, and the normative `.plan` v2 directory format —
+//! is documented in `docs/ARCHITECTURE.md` at the repository root.
+
+#![warn(missing_docs)]
 
 pub mod arena;
 pub mod coordinator;

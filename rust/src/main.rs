@@ -11,8 +11,10 @@
 //! tensorarena cachesim <model> [kib]                # §1 locality claim
 //! tensorarena serve [--model M] [--strategy S] [--order O] [--requests N]
 //!                   [--max-batch B] [--wait-ms W] [--artifacts DIR]
-//!                   [--mem-budget BYTES] [--plan-dir DIR]    # E2E serving
+//!                   [--mem-budget BYTES] [--plan-dir DIR]
+//!                   [--dynamic [FRAC]]                       # E2E serving
 //! tensorarena order-ablation [model] [--seed S] [--trials N] # §7.1 order table
+//! tensorarena dynamic-ablation [model] [--frac F1,F2,...]    # §7 overhead table
 //! tensorarena models                                # list zoo models
 //! ```
 //!
@@ -32,6 +34,16 @@
 //! §7.1 table (max breadth and arena per order) so you can pick an order
 //! offline.
 //!
+//! `--dynamic [FRAC]` serves in the §7 wave-aware mode: the last `FRAC`
+//! (default 0.5) of the graph's intermediate tensors resolve their sizes
+//! just in time (one op before their producer), the arena is sized at the
+//! worst-wave multi-pass peak, budget admission resolves under that peak,
+//! and decode-step re-plans with an unchanged resolved-size prefix are
+//! plan-cache hits with zero planner invocations. `dynamic-ablation`
+//! prints the §7 overhead-vs-oracle table (multi-pass arena vs the
+//! size-omniscient oracle) per model and dynamic fraction. Dynamic plans
+//! are cached in memory only — `--plan-dir` persists static plans.
+//!
 //! Strategy names come from `planner::registry` — the single list the
 //! tables, the plan cache, and this CLI all share.
 //!
@@ -45,7 +57,8 @@ use tensorarena::planner::order::{
     reorder_graph,
 };
 use tensorarena::planner::{
-    offset, registry, OffsetPlanner, OrderStrategy, PlanCache, PlanService, SharedObjectPlanner,
+    offset, registry, DynamicRecords, OffsetPlanner, OrderStrategy, PlanCache, PlanService,
+    SharedObjectPlanner,
 };
 use tensorarena::records::UsageRecords;
 use tensorarena::report::{self, MIB};
@@ -78,6 +91,7 @@ fn main() {
         Some("cachesim") => cmd_cachesim(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("order-ablation") => cmd_order_ablation(&args[1..]),
+        Some("dynamic-ablation") => cmd_dynamic_ablation(&args[1..]),
         Some("models") => {
             for m in models::ZOO {
                 println!("{m}");
@@ -88,7 +102,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: tensorarena <records|plan|table1|table2|cachesim|serve|order-ablation|models> ...\n\
+                "usage: tensorarena <records|plan|table1|table2|cachesim|serve|order-ablation|dynamic-ablation|models> ...\n\
                  see README.md for details"
             );
             2
@@ -442,6 +456,76 @@ fn cmd_order_ablation(args: &[String]) -> i32 {
     0
 }
 
+/// The §7 overhead-vs-oracle table: for each model and decode-tail
+/// fraction, the number of tensors resolving late, the planner waves, the
+/// multi-pass (worst-wave) arena, the size-omniscient oracle arena, and
+/// the overhead ratio — everything needed to decide what dynamic shapes
+/// cost a model before turning on `serve --dynamic`.
+fn cmd_dynamic_ablation(args: &[String]) -> i32 {
+    let mut fracs: Vec<f64> = vec![0.1, 0.25, 0.5, 0.9];
+    let mut pos: Vec<&str> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--frac" => {
+                let parsed: Option<Vec<f64>> = args.get(i + 1).and_then(|v| {
+                    v.split(',')
+                        .map(|f| f.trim().parse::<f64>().ok().filter(|&f| f > 0.0 && f <= 1.0))
+                        .collect::<Option<Vec<f64>>>()
+                });
+                let Some(list) = parsed.filter(|l| !l.is_empty()) else {
+                    eprintln!("--frac wants a comma-separated list of fractions in (0, 1]");
+                    return 2;
+                };
+                fracs = list;
+                i += 2;
+            }
+            other => {
+                pos.push(other);
+                i += 1;
+            }
+        }
+    }
+    let graphs = match pos.first() {
+        Some(&name) => match load_model(name) {
+            Some(g) => vec![g],
+            None => return 2,
+        },
+        None => models::all_zoo(),
+    };
+    println!(
+        "dynamic-shape ablation (§7): decode-tail profile, multi-pass arena vs size-omniscient oracle:"
+    );
+    println!(
+        "{:<14} {:>8} {:>8} {:>6} {:>13} {:>13} {:>9}",
+        "network", "dyn frac", "dyn recs", "waves", "multi-pass", "oracle", "overhead"
+    );
+    for g in graphs {
+        let recs = UsageRecords::from_graph(&g);
+        let oracle = offset::GreedyBySize.plan(&recs).total_size();
+        for &frac in &fracs {
+            let ops = g.num_ops();
+            let decode_from = ops.saturating_sub((ops as f64 * frac).ceil() as usize);
+            let dynamic = DynamicRecords::decode_tail(&recs, decode_from);
+            let mp = registry::dynamic_planner().plan(&dynamic);
+            // The oracle is fraction-independent and already planned above;
+            // dividing here avoids re-planning both sides per row.
+            let overhead = if oracle == 0 { 1.0 } else { mp.peak as f64 / oracle as f64 };
+            println!(
+                "{:<14} {:>8.2} {:>8} {:>6} {:>9.3} MiB {:>9.3} MiB {:>8.3}x",
+                g.name,
+                frac,
+                dynamic.num_dynamic(),
+                mp.passes,
+                mp.peak as f64 / MIB,
+                oracle as f64 / MIB,
+                overhead,
+            );
+        }
+    }
+    0
+}
+
 fn cmd_serve(args: &[String]) -> i32 {
     // Parse --artifacts DIR --requests N --max-batch B --wait-ms W
     // --model M --strategy S --mem-budget BYTES --plan-dir DIR. With PJRT
@@ -458,9 +542,28 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut order = OrderStrategy::Natural;
     let mut mem_budget: Option<usize> = None;
     let mut plan_dir: Option<String> = None;
+    let mut dynamic: Option<f64> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            "--dynamic" => {
+                // Optional fraction operand: `--dynamic 0.25`. A following
+                // flag (or nothing) means the default tail fraction.
+                match args.get(i + 1).and_then(|v| v.parse::<f64>().ok()) {
+                    Some(f) if f > 0.0 && f <= 1.0 => {
+                        dynamic = Some(f);
+                        i += 2;
+                    }
+                    Some(_) => {
+                        eprintln!("--dynamic wants a fraction in (0, 1]");
+                        return 2;
+                    }
+                    None => {
+                        dynamic = Some(0.5);
+                        i += 1;
+                    }
+                }
+            }
             "--order" => {
                 let Some(o) = args.get(i + 1).and_then(|v| registry::order_strategy(v)) else {
                     eprintln!(
@@ -532,6 +635,12 @@ fn cmd_serve(args: &[String]) -> i32 {
                     order.key()
                 );
             }
+            if dynamic.is_some() {
+                eprintln!(
+                    "--dynamic ignored: the PJRT AOT path compiles static shapes; \
+                     wave-aware serving applies to the pure-Rust executor path only"
+                );
+            }
             return match serve_bench(&dir, requests, max_batch, wait_ms) {
                 Ok(()) => 0,
                 Err(e) => {
@@ -557,6 +666,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         wait_ms,
         mem_budget,
         plan_dir.as_deref(),
+        dynamic,
     ) {
         Ok(()) => 0,
         Err(e) => {
@@ -574,7 +684,10 @@ fn cmd_serve(args: &[String]) -> i32 {
 /// is warm-started at boot and persisted back at shutdown. With a
 /// non-natural `order`, the graph is reordered before record extraction,
 /// so the arena, the admission envelope, and every plan-dir file are for
-/// the served order.
+/// the served order. With `dynamic`, the last `frac` of the tensors
+/// resolve late (§7): the engine serves wave-aware, the arena and budget
+/// resolve under the worst-wave multi-pass peak, and decode-step re-plans
+/// are amortized through the resolved-prefix plan cache.
 #[allow(clippy::too_many_arguments)]
 fn serve_pure(
     model: &str,
@@ -585,6 +698,7 @@ fn serve_pure(
     wait_ms: u64,
     mem_budget: Option<usize>,
     plan_dir: Option<&str>,
+    dynamic: Option<f64>,
 ) -> Result<(), String> {
     use tensorarena::coordinator::engine::ExecutorEngine;
 
@@ -618,19 +732,53 @@ fn serve_pure(
             report.skipped_stale_order,
         );
     }
-    let plan = service
-        .plan_records_ordered(&recs, 1, Some(strategy), order)
-        .map_err(|e| e.to_string())?;
-    println!(
-        "{model} arena: {:.1} KiB planned vs {:.1} KiB naive ({:.1}x)",
-        plan.total_size() as f64 / 1024.0,
-        recs.naive_total() as f64 / 1024.0,
-        recs.naive_total() as f64 / plan.total_size().max(1) as f64,
-    );
-    if let Some(budget) = mem_budget {
-        let cap = service
-            .max_servable_batch_ordered(&recs, budget, Some(strategy), order)
+    // The decode-tail profile, when serving dynamic shapes: the last
+    // `frac` of the ops' outputs resolve one op before their producer.
+    let decode = dynamic.map(|frac| {
+        let ops = g.num_ops();
+        let decode_from = ops.saturating_sub((ops as f64 * frac).ceil() as usize);
+        (decode_from, DynamicRecords::decode_tail(&recs, decode_from))
+    });
+    if let Some((decode_from, dyn_recs)) = &decode {
+        let mp = service
+            .plan_dynamic(dyn_recs, 1, Some(strategy), order)
             .map_err(|e| e.to_string())?;
+        let oracle = offset::GreedyBySize.plan(&recs).total_size();
+        let overhead = if oracle == 0 { 1.0 } else { mp.peak as f64 / oracle as f64 };
+        println!(
+            "{model} dynamic (§7): {} of {} tensors resolve late (from op {decode_from}), \
+             {} planner waves; worst-wave peak {:.1} KiB, overhead vs oracle {:.3}x",
+            dyn_recs.num_dynamic(),
+            dyn_recs.len(),
+            mp.passes,
+            mp.peak as f64 / 1024.0,
+            overhead,
+        );
+        if plan_dir.is_some() {
+            println!(
+                "note: dynamic plans are cached in memory only; --plan-dir persists static plans"
+            );
+        }
+    } else {
+        let plan = service
+            .plan_records_ordered(&recs, 1, Some(strategy), order)
+            .map_err(|e| e.to_string())?;
+        println!(
+            "{model} arena: {:.1} KiB planned vs {:.1} KiB naive ({:.1}x)",
+            plan.total_size() as f64 / 1024.0,
+            recs.naive_total() as f64 / 1024.0,
+            recs.naive_total() as f64 / plan.total_size().max(1) as f64,
+        );
+    }
+    if let Some(budget) = mem_budget {
+        let cap = match &decode {
+            Some((_, dyn_recs)) => service
+                .max_servable_batch_dynamic(dyn_recs, budget, Some(strategy), order)
+                .map_err(|e| e.to_string())?,
+            None => service
+                .max_servable_batch_ordered(&recs, budget, Some(strategy), order)
+                .map_err(|e| e.to_string())?,
+        };
         println!(
             "mem budget {:.1} KiB: max servable batch {cap}{}",
             budget as f64 / 1024.0,
@@ -644,15 +792,18 @@ fn serve_pure(
         let service = Arc::clone(&service);
         let model_name = model.to_string();
         let strategy = strategy.to_string();
+        let decode_from = decode.as_ref().map(|(from, _)| *from);
         router.register(
             model,
             move || {
                 let g = models::by_name(&model_name).expect("model exists");
-                Box::new(
-                    ExecutorEngine::with_order(&g, service, &strategy, order, 42)
-                        .expect("engine")
-                        .with_max_batch(max_batch),
-                )
+                let engine = match decode_from {
+                    Some(from) => {
+                        ExecutorEngine::with_dynamic(&g, service, &strategy, order, from, 42)
+                    }
+                    None => ExecutorEngine::with_order(&g, service, &strategy, order, 42),
+                };
+                Box::new(engine.expect("engine").with_max_batch(max_batch))
             },
             BatchPolicy {
                 max_batch,
@@ -710,16 +861,30 @@ fn serve_pure(
     router.shutdown();
     let st = service.stats();
     // Report the arena at the engine's batch cap — what the serving box
-    // actually hosts — not the batch-1 plan.
-    let plan_max = service
-        .plan_records_ordered(&recs, max_batch.max(1), Some(strategy), order)
-        .map_err(|e| e.to_string())?;
+    // actually hosts — not the batch-1 plan. For dynamic serving that is
+    // the worst-wave multi-pass peak.
+    let (planned_max, waves) = match &decode {
+        Some((_, dyn_recs)) => {
+            let mp = service
+                .plan_dynamic(dyn_recs, max_batch.max(1), Some(strategy), order)
+                .map_err(|e| e.to_string())?;
+            (mp.peak, mp.passes)
+        }
+        None => (
+            service
+                .plan_records_ordered(&recs, max_batch.max(1), Some(strategy), order)
+                .map_err(|e| e.to_string())?
+                .total_size(),
+            0,
+        ),
+    };
     let stats = ArenaStats::from_service(
-        plan_max.total_size(),
+        planned_max,
         recs.naive_total() * max_batch.max(1),
         registry::offset_key(strategy).unwrap_or("?"),
         st,
     );
+    let stats = if waves > 0 { stats.with_waves(waves, 0) } else { stats };
     // The order segment is reported only when an order was actually
     // applied — plain serving keeps the PR-2 stats line unchanged.
     let stats = if order.is_natural() {

@@ -17,12 +17,21 @@
 //! [`PlanCache::max_servable_batch`] answers the serving-era question the
 //! follow-up work (FlashMem, MAFAT) poses: what is the largest batch whose
 //! *planned* footprint fits a byte budget?
+//!
+//! **Dynamic shapes** (§7) get their own cache dimension: multi-pass plans
+//! are keyed by the fingerprint of the **resolved-size prefix** — the
+//! static records plus the sizes known so far — so decode-step re-plans
+//! with an unchanged prefix are cache hits with zero planner invocations
+//! ([`PlanCache::get_or_plan_dynamic_resolved`]), and budget admission for
+//! dynamic engines resolves under the worst-wave peak
+//! ([`PlanCache::max_servable_batch_dynamic`]).
 
+use super::dynamic::{DynamicRecords, MultiPassPlan, MultiPassPlanner};
 use super::registry::OrderStrategy;
 use super::serialize::{self, LoadError};
 use super::{registry, OffsetPlan, PlanError};
 use crate::records::UsageRecords;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -59,6 +68,34 @@ impl std::error::Error for PlanServiceError {}
 /// Cache key: records fingerprint × batch × canonical strategy key ×
 /// execution-order strategy.
 type Key = (u64, usize, &'static str, OrderStrategy);
+
+/// Dynamic-plan cache key: **resolved-size-prefix fingerprint** × batch ×
+/// canonical strategy key × execution-order strategy. The fingerprint
+/// ([`serialize::resolved_prefix_fingerprint`]) covers the op count, every
+/// record's interval and `known_at`, and the sizes resolved so far — so
+/// decode steps between wave boundaries, and any two sequences whose
+/// resolved sizes agree, share one slot regardless of their (still
+/// unknown) tails.
+type DynamicKey = (u64, usize, &'static str, OrderStrategy);
+
+/// Most dynamic (multi-pass) plans kept resident. Static cache keys are
+/// bounded by the served model/batch/strategy set, but resolved-size
+/// prefixes are unbounded by nature — every new sequence may resolve new
+/// sizes — so without a bound a long-lived dynamic server would grow the
+/// map forever. The dynamic slots are therefore a FIFO window: inserting
+/// past the cap evicts the oldest entry (an evicted prefix simply costs
+/// one re-plan if it ever recurs). A few thousand plans of a few KiB each
+/// bound the cache to single-digit MiB while covering every
+/// (boundary × batch) pair of realistic serving.
+const DYNAMIC_PLAN_CAP: usize = 4096;
+
+/// The FIFO-bounded dynamic plan slots (see [`DYNAMIC_PLAN_CAP`]).
+#[derive(Default)]
+struct DynamicSlots {
+    plans: HashMap<DynamicKey, Arc<MultiPassPlan>>,
+    /// Insertion order, oldest first; `fifo.len() == plans.len()`.
+    fifo: VecDeque<DynamicKey>,
+}
 
 /// Outcome of [`PlanCache::warm_start`]: how many plan files seeded the
 /// cache and why the rest were skipped. Skips are never fatal — a corrupt
@@ -104,17 +141,39 @@ pub struct PersistReport {
 }
 
 /// Thread-safe memoization of offset plans, keyed by
-/// `(records fingerprint, batch, strategy)`.
+/// `(records fingerprint, batch, strategy, order)` — plus the §7 dynamic
+/// slots keyed by the resolved-size prefix.
 ///
 /// Lock order: `plans` before `records`, everywhere both are held.
+///
+/// # Example
+///
+/// ```
+/// use tensorarena::planner::PlanCache;
+/// use tensorarena::records::UsageRecords;
+///
+/// let records = UsageRecords::from_triples(&[(0, 1, 64), (1, 2, 128)]);
+/// let cache = PlanCache::new();
+/// let plan = cache.get_or_plan(&records, 4, "greedy-size").unwrap();
+/// assert!(plan.total_size() <= 4 * records.naive_total());
+/// assert_eq!((cache.misses(), cache.hits()), (1, 0));
+/// cache.get_or_plan(&records, 4, "greedy-size").unwrap(); // cache hit
+/// assert_eq!((cache.misses(), cache.hits()), (1, 1));
+/// ```
 #[derive(Default)]
 pub struct PlanCache {
     plans: Mutex<HashMap<Key, Arc<OffsetPlan>>>,
     /// Batch-1 records per fingerprint — what [`Self::persist_dir`] needs
     /// to serialize a resident plan next to the records it plans.
     records: Mutex<HashMap<u64, UsageRecords>>,
+    /// §7 multi-pass plans, keyed by the resolved-size prefix (see
+    /// [`DynamicKey`]). In-memory only: dynamic plans are not persisted to
+    /// the plan directory (their resolved sizes are transient by nature).
+    dynamic: Mutex<DynamicSlots>,
     hits: AtomicU64,
     misses: AtomicU64,
+    dynamic_hits: AtomicU64,
+    dynamic_misses: AtomicU64,
     warm_loaded: AtomicU64,
     warm_skipped: AtomicU64,
 }
@@ -133,6 +192,17 @@ impl PlanCache {
     /// Cache misses (= planner invocations) so far.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Dynamic (multi-pass) plan-cache hits so far — decode-step re-plans
+    /// answered with zero planner invocations.
+    pub fn dynamic_hits(&self) -> u64 {
+        self.dynamic_hits.load(Ordering::Relaxed)
+    }
+
+    /// Dynamic plan-cache misses (= multi-pass planner invocations) so far.
+    pub fn dynamic_misses(&self) -> u64 {
+        self.dynamic_misses.load(Ordering::Relaxed)
     }
 
     /// Plans seeded from a plan directory by [`Self::warm_start`] so far.
@@ -208,6 +278,104 @@ impl PlanCache {
         plans.insert(key, Arc::clone(&plan));
         self.retain_records(key.0, records);
         Ok(plan)
+    }
+
+    /// [`Self::get_or_plan_dynamic_resolved`] with every wave resolved: the
+    /// **complete** §7 multi-pass plan — what the wave-aware executor sizes
+    /// its arena from and what budget admission resolves against (the plan's
+    /// [`MultiPassPlan::peak`] is the worst-wave peak).
+    pub fn get_or_plan_dynamic(
+        &self,
+        dynamic: &DynamicRecords,
+        batch: usize,
+        strategy: &str,
+        order: OrderStrategy,
+    ) -> Result<Arc<MultiPassPlan>, PlanServiceError> {
+        self.get_or_plan_dynamic_resolved(dynamic, usize::MAX, batch, strategy, order)
+    }
+
+    /// The §7 multi-pass plan of the waves resolved once op
+    /// `resolved_through` has executed, through the resolved-prefix-keyed
+    /// cache slot. `dynamic` are the *batch-1* records of the (order-applied)
+    /// graph; scaling to `batch` is the cache's job, exactly as for static
+    /// plans.
+    ///
+    /// The slot key is the [`serialize::resolved_prefix_fingerprint`] — so
+    /// successive decode steps with an unchanged resolved prefix (no wave
+    /// boundary crossed, same resolved sizes) are **cache hits with zero
+    /// planner invocations**, as are later sequences whose resolved sizes
+    /// repeat; a step that resolves a new size (or a different value for a
+    /// previously-seen wave — a stale prefix) misses and re-plans. Soundness
+    /// rests on the freeze invariant (see [`super::dynamic`]): a prefix plan
+    /// never depends on unresolved sizes, so slot sharing across sequences
+    /// with different tails is exact, not approximate.
+    ///
+    /// Complete plans (every wave resolved) are validated against the final
+    /// scaled records before being cached; prefix plans are covered by the
+    /// freeze invariant (they are byte-identical prefixes of a validated
+    /// complete plan). `strategy` namespaces the slot like the static cache
+    /// key — within-wave placement itself is always Algorithm 3's
+    /// size-descending best-fit. Dynamic plans live in memory only; they are
+    /// never spilled to a plan directory.
+    pub fn get_or_plan_dynamic_resolved(
+        &self,
+        dynamic: &DynamicRecords,
+        resolved_through: usize,
+        batch: usize,
+        strategy: &str,
+        order: OrderStrategy,
+    ) -> Result<Arc<MultiPassPlan>, PlanServiceError> {
+        let strategy_key = registry::offset_key(strategy)
+            .ok_or_else(|| PlanServiceError::UnknownStrategy(strategy.to_string()))?;
+        let fp = serialize::resolved_prefix_fingerprint(dynamic, resolved_through);
+        let key: DynamicKey = (fp, batch, strategy_key, order);
+        let mut slots = self.dynamic.lock().unwrap();
+        if let Some(plan) = slots.plans.get(&key) {
+            self.dynamic_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(plan));
+        }
+        self.dynamic_misses.fetch_add(1, Ordering::Relaxed);
+        let scaled = dynamic.scaled(batch);
+        let plan = MultiPassPlanner.plan_resolved(&scaled, resolved_through);
+        if let Some(complete) = plan.offset_plan() {
+            complete
+                .validate(&scaled.final_records())
+                .map_err(PlanServiceError::Infeasible)?;
+        }
+        let plan = Arc::new(plan);
+        slots.plans.insert(key, Arc::clone(&plan));
+        slots.fifo.push_back(key);
+        if slots.fifo.len() > DYNAMIC_PLAN_CAP {
+            if let Some(oldest) = slots.fifo.pop_front() {
+                slots.plans.remove(&oldest);
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Largest batch whose **worst-wave** multi-pass peak fits
+    /// `budget_bytes` — the §7 analogue of
+    /// [`Self::max_servable_batch_ordered`]. Budget admission for a
+    /// dynamic-shape engine must resolve against this peak, not the static
+    /// plan, because mid-inference waves can only grow the arena.
+    pub fn max_servable_batch_dynamic(
+        &self,
+        dynamic: &DynamicRecords,
+        strategy: &str,
+        budget_bytes: usize,
+        order: OrderStrategy,
+    ) -> Result<usize, PlanServiceError> {
+        if registry::offset_key(strategy).is_none() {
+            return Err(PlanServiceError::UnknownStrategy(strategy.to_string()));
+        }
+        let finals = dynamic.final_records();
+        let max_size = finals.records.iter().map(|r| r.size).max().unwrap_or(0);
+        max_batch_fitting(max_size, finals.naive_total(), budget_bytes, |b| {
+            Ok(self
+                .get_or_plan_dynamic(dynamic, b, strategy, order)?
+                .peak
+                <= budget_bytes)
+        })
     }
 
     /// Remember the batch-1 records behind `fingerprint`, so
@@ -457,37 +625,48 @@ impl PlanCache {
             return Err(PlanServiceError::UnknownStrategy(strategy.to_string()));
         }
         let max_size = records.records.iter().map(|r| r.size).max().unwrap_or(0);
-        if max_size == 0 {
-            // Nothing to place: any batch fits.
-            return Ok(usize::MAX);
-        }
-        // Cap the probe range twice: `planned(b) >= b * max_size` bounds
-        // what can fit the budget, and `b * naive_total <= usize::MAX`
-        // keeps every size, offset, and total computed for a probed batch
-        // free of overflow (all are bounded by the scaled naive sum).
-        let cap = (budget_bytes / max_size).min(usize::MAX / records.naive_total());
-        if cap == 0 {
-            return Ok(0);
-        }
-        let fits = |b: usize| -> Result<bool, PlanServiceError> {
+        max_batch_fitting(max_size, records.naive_total(), budget_bytes, |b| {
             Ok(self.get_or_plan_ordered(records, b, strategy, order)?.total <= budget_bytes)
-        };
-        if !fits(1)? {
-            return Ok(0);
-        }
-        // Invariant: fits(lo), !fits(hi). hi = cap + 1 cannot fit by the
-        // max_size bound above.
-        let (mut lo, mut hi) = (1usize, cap + 1);
-        while hi - lo > 1 {
-            let mid = lo + (hi - lo) / 2;
-            if fits(mid)? {
-                lo = mid;
-            } else {
-                hi = mid;
-            }
-        }
-        Ok(lo)
+        })
     }
+}
+
+/// The monotone binary search behind every `max_servable_batch*` query:
+/// the largest batch for which `fits` holds. `planned(b) >= b * max_size`
+/// caps what can fit `budget_bytes`, and keeping `b * naive_total`
+/// representable keeps every size, offset, and total a probe computes free
+/// of overflow (all are bounded by the scaled naive sum). `usize::MAX` when
+/// `max_size == 0` (nothing to place: any batch fits); 0 when even batch 1
+/// does not fit. Every probe plans through the caller's cache, so a later
+/// lookup at the answer is free.
+fn max_batch_fitting(
+    max_size: usize,
+    naive_total: usize,
+    budget_bytes: usize,
+    mut fits: impl FnMut(usize) -> Result<bool, PlanServiceError>,
+) -> Result<usize, PlanServiceError> {
+    if max_size == 0 {
+        return Ok(usize::MAX);
+    }
+    let cap = (budget_bytes / max_size).min(usize::MAX / naive_total);
+    if cap == 0 {
+        return Ok(0);
+    }
+    if !fits(1)? {
+        return Ok(0);
+    }
+    // Invariant: fits(lo), !fits(hi). hi = cap + 1 cannot fit by the
+    // max_size bound above.
+    let (mut lo, mut hi) = (1usize, cap + 1);
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid)? {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(lo)
 }
 
 #[cfg(test)]
@@ -671,6 +850,156 @@ mod tests {
         cold.get_or_plan_ordered(&recs, 2, "greedy-size", order).unwrap();
         assert_eq!(cold.misses(), 0, "ordered warm start must avoid the planner");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn decode_dynamic() -> DynamicRecords {
+        use super::super::dynamic::DynamicRecord;
+        use crate::records::UsageRecord;
+        // A chain with a two-wave tail: sizes of records 2 and 3 resolve
+        // after ops 2 and 4 execute.
+        DynamicRecords::new(
+            vec![
+                DynamicRecord {
+                    record: UsageRecord { id: 0, tensor: None, first_op: 0, last_op: 2, size: 128 },
+                    known_at: 0,
+                },
+                DynamicRecord {
+                    record: UsageRecord { id: 1, tensor: None, first_op: 1, last_op: 3, size: 64 },
+                    known_at: 0,
+                },
+                DynamicRecord {
+                    record: UsageRecord { id: 2, tensor: None, first_op: 3, last_op: 5, size: 192 },
+                    known_at: 2,
+                },
+                DynamicRecord {
+                    record: UsageRecord { id: 3, tensor: None, first_op: 5, last_op: 6, size: 64 },
+                    known_at: 4,
+                },
+            ],
+            7,
+        )
+    }
+
+    #[test]
+    fn decode_steps_with_unchanged_prefix_hit_the_dynamic_cache() {
+        let cache = PlanCache::new();
+        let dynamic = decode_dynamic();
+        // A decode loop: one lookup per op. Steps between wave boundaries
+        // share a resolved prefix, so the first loop plans once per
+        // distinct prefix (waves 0, 2, 4 -> 3 misses)...
+        for step in 0..dynamic.num_ops {
+            let order = OrderStrategy::Natural;
+            cache
+                .get_or_plan_dynamic_resolved(&dynamic, step, 1, "greedy-size", order)
+                .unwrap();
+        }
+        assert_eq!(cache.dynamic_misses(), 3, "one planner invocation per distinct prefix");
+        let hits_after_first = cache.dynamic_hits();
+        // ...and a second pass over the same resolved prefixes performs
+        // zero planner invocations.
+        for step in 0..dynamic.num_ops {
+            let order = OrderStrategy::Natural;
+            cache
+                .get_or_plan_dynamic_resolved(&dynamic, step, 1, "greedy-size", order)
+                .unwrap();
+        }
+        assert_eq!(cache.dynamic_misses(), 3, "second decode pass must not re-plan");
+        assert_eq!(cache.dynamic_hits(), hits_after_first + dynamic.num_ops as u64);
+        // Static counters are untouched: the dimensions do not bleed.
+        assert_eq!((cache.hits(), cache.misses()), (0, 0));
+    }
+
+    #[test]
+    fn dynamic_slots_are_fifo_bounded() {
+        use super::super::dynamic::DynamicRecord;
+        use crate::records::UsageRecord;
+        let cache = PlanCache::new();
+        let order = OrderStrategy::Natural;
+        let mk = |size: usize| {
+            DynamicRecords::new(
+                vec![DynamicRecord {
+                    record: UsageRecord { id: 0, tensor: None, first_op: 0, last_op: 1, size },
+                    known_at: 0,
+                }],
+                2,
+            )
+        };
+        // One more distinct resolved prefix than the cap fits.
+        for i in 0..=DYNAMIC_PLAN_CAP {
+            cache
+                .get_or_plan_dynamic(&mk(64 * (i + 1)), 1, "greedy-size", order)
+                .unwrap();
+        }
+        let resident = cache.dynamic.lock().unwrap().plans.len();
+        assert_eq!(resident, DYNAMIC_PLAN_CAP, "cap must bound the dynamic slots");
+        // The newest entry is resident: re-requesting it is a pure hit…
+        let misses = cache.dynamic_misses();
+        cache
+            .get_or_plan_dynamic(&mk(64 * (DYNAMIC_PLAN_CAP + 1)), 1, "greedy-size", order)
+            .unwrap();
+        assert_eq!(cache.dynamic_misses(), misses);
+        // …the oldest was evicted: recurring costs one re-plan, never a
+        // wrong hit, and re-enters the window.
+        let misses = cache.dynamic_misses();
+        cache.get_or_plan_dynamic(&mk(64), 1, "greedy-size", order).unwrap();
+        assert_eq!(cache.dynamic_misses(), misses + 1);
+    }
+
+    #[test]
+    fn complete_dynamic_plan_is_validated_and_batch_scaled() {
+        let cache = PlanCache::new();
+        let dynamic = decode_dynamic();
+        let full = cache
+            .get_or_plan_dynamic(&dynamic, 1, "greedy-size", OrderStrategy::Natural)
+            .unwrap();
+        assert!(full.is_complete());
+        full.offset_plan()
+            .unwrap()
+            .validate(&dynamic.final_records())
+            .unwrap();
+        let b4 = cache
+            .get_or_plan_dynamic(&dynamic, 4, "greedy-size", OrderStrategy::Natural)
+            .unwrap();
+        assert_eq!(b4.peak, 4 * full.peak, "uniform scaling scales the multi-pass peak");
+        b4.offset_plan()
+            .unwrap()
+            .validate(&dynamic.scaled(4).final_records())
+            .unwrap();
+    }
+
+    #[test]
+    fn max_servable_batch_dynamic_resolves_under_the_worst_wave_peak() {
+        let cache = PlanCache::new();
+        let dynamic = decode_dynamic();
+        let peak1 = cache
+            .get_or_plan_dynamic(&dynamic, 1, "greedy-size", OrderStrategy::Natural)
+            .unwrap()
+            .peak;
+        let budget = 3 * peak1;
+        let cap = cache
+            .max_servable_batch_dynamic(&dynamic, "greedy-size", budget, OrderStrategy::Natural)
+            .unwrap();
+        assert!(cap >= 1);
+        let at_cap = cache
+            .get_or_plan_dynamic(&dynamic, cap, "greedy-size", OrderStrategy::Natural)
+            .unwrap()
+            .peak;
+        let above = cache
+            .get_or_plan_dynamic(&dynamic, cap + 1, "greedy-size", OrderStrategy::Natural)
+            .unwrap()
+            .peak;
+        assert!(at_cap <= budget && above > budget);
+        let order = OrderStrategy::Natural;
+        assert_eq!(
+            cache
+                .max_servable_batch_dynamic(&dynamic, "greedy-size", peak1 - 1, order)
+                .unwrap(),
+            0
+        );
+        assert!(matches!(
+            cache.max_servable_batch_dynamic(&dynamic, "belady", budget, OrderStrategy::Natural),
+            Err(PlanServiceError::UnknownStrategy(_))
+        ));
     }
 
     #[test]

@@ -10,7 +10,25 @@
 //!
 //! [`MultiPassPlanner`] implements exactly that protocol on top of the
 //! Algorithm-3 gap logic: earlier passes' placements are frozen, later
-//! passes best-fit around them.
+//! passes best-fit around them. Placement within a wave is Algorithm 3's
+//! size-descending best-fit, so a fully static record set degenerates to
+//! the §5 Greedy-by-Size plan.
+//!
+//! # The freeze invariant (what makes decode-step caching sound)
+//!
+//! A wave's placements depend only on the placements of *earlier* waves
+//! (inference is already running when later sizes resolve, so earlier
+//! storage cannot move). Therefore the plan of the resolved prefix — waves
+//! whose `known_at` has passed — is byte-identical whether or not any later
+//! wave is known yet: [`MultiPassPlanner::plan_resolved`] at wave *w* is a
+//! frozen prefix of every fuller plan of the same records. This is the
+//! property that lets the [`PlanCache`](super::cache::PlanCache) key
+//! decode-step re-plans by the fingerprint of the resolved-size prefix and
+//! answer repeats from cache with zero planner invocations (see
+//! [`PlanCache::get_or_plan_dynamic_resolved`]).
+//!
+//! [`PlanCache::get_or_plan_dynamic_resolved`]:
+//!   super::cache::PlanCache::get_or_plan_dynamic_resolved
 
 use super::offset::GreedyBySize;
 use super::{OffsetPlan, OffsetPlanner};
@@ -20,19 +38,173 @@ use crate::records::{UsageRecord, UsageRecords};
 /// executed (`known_at == 0` means statically known).
 #[derive(Debug, Clone, Copy)]
 pub struct DynamicRecord {
+    /// The underlying usage record, carrying the *final* (resolved) size.
     pub record: UsageRecord,
+    /// Index of the op whose execution resolves this record's size; 0 for
+    /// statically-known sizes. Must be `< first_op` for the wave-aware
+    /// executor to serve the record (the offset has to exist before the
+    /// producer runs).
     pub known_at: usize,
 }
 
-/// Outcome of multi-pass planning.
+/// A full set of [`DynamicRecord`]s plus the op count — the §7 analogue of
+/// [`UsageRecords`], and the input to every dynamic-planning entry point
+/// ([`MultiPassPlanner`], the dynamic slots of the plan cache, the
+/// wave-aware executor).
 #[derive(Debug, Clone)]
+pub struct DynamicRecords {
+    /// The records; `records[i].record.id == i` (dense, like
+    /// [`UsageRecords`]).
+    pub records: Vec<DynamicRecord>,
+    /// Number of ops in the graph the records were extracted from.
+    pub num_ops: usize,
+}
+
+impl DynamicRecords {
+    /// Build from records; asserts ids are dense and every `known_at` is a
+    /// valid op index.
+    pub fn new(records: Vec<DynamicRecord>, num_ops: usize) -> Self {
+        for (i, d) in records.iter().enumerate() {
+            assert_eq!(d.record.id, i, "dynamic record ids must be dense");
+            assert!(
+                num_ops == 0 || d.known_at < num_ops,
+                "record {i}: known_at {} past the {num_ops}-op range",
+                d.known_at
+            );
+        }
+        DynamicRecords { records, num_ops }
+    }
+
+    /// The decode-tail profile: every record produced at or after `from_op`
+    /// resolves its size just in time — one op before its producer runs
+    /// (`known_at = first_op - 1`) — modelling an autoregressive tail whose
+    /// step sizes become known mid-inference. Records produced before
+    /// `from_op` (and any record produced by op 0) stay static.
+    pub fn decode_tail(records: &UsageRecords, from_op: usize) -> Self {
+        Self::new(
+            records
+                .records
+                .iter()
+                .map(|r| DynamicRecord {
+                    record: *r,
+                    known_at: if r.first_op >= from_op.max(1) { r.first_op - 1 } else { 0 },
+                })
+                .collect(),
+            records.num_ops,
+        )
+    }
+
+    /// The oracle view: the same records with every (final) size known up
+    /// front — what a size-omniscient single-pass planner would consume,
+    /// and what the complete multi-pass plan is validated against.
+    pub fn final_records(&self) -> UsageRecords {
+        UsageRecords {
+            records: self.records.iter().map(|d| d.record).collect(),
+            num_ops: self.num_ops,
+        }
+    }
+
+    /// The same records with every size multiplied by `batch` (liveness and
+    /// `known_at` untouched) — mirrors [`UsageRecords::scaled`].
+    pub fn scaled(&self, batch: usize) -> DynamicRecords {
+        assert!(batch > 0, "batch must be positive");
+        DynamicRecords {
+            records: self
+                .records
+                .iter()
+                .map(|d| DynamicRecord {
+                    record: UsageRecord {
+                        size: d
+                            .record
+                            .size
+                            .checked_mul(batch)
+                            .expect("batch-scaled size overflows"),
+                        ..d.record
+                    },
+                    known_at: d.known_at,
+                })
+                .collect(),
+            num_ops: self.num_ops,
+        }
+    }
+
+    /// Distinct `known_at` values, ascending — one planner wave per entry.
+    pub fn waves(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.records.iter().map(|d| d.known_at).collect();
+        w.sort_unstable();
+        w.dedup();
+        w
+    }
+
+    /// Distinct *non-zero* `known_at` values, ascending: the op indices
+    /// after which the wave-aware executor must re-resolve offsets.
+    pub fn boundaries(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self
+            .records
+            .iter()
+            .map(|d| d.known_at)
+            .filter(|&k| k > 0)
+            .collect();
+        w.sort_unstable();
+        w.dedup();
+        w
+    }
+
+    /// Records whose size resolves only mid-inference (`known_at > 0`).
+    pub fn num_dynamic(&self) -> usize {
+        self.records.iter().filter(|d| d.known_at > 0).count()
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True if there are no records.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+/// Outcome of multi-pass planning: offsets for every record whose wave has
+/// been planned, possibly a *prefix* plan when later waves are still
+/// unresolved (see [`MultiPassPlanner::plan_resolved`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MultiPassPlan {
-    /// Final offsets, indexed by record id.
-    pub plan: OffsetPlan,
-    /// Number of planner passes executed (= distinct `known_at` values).
+    /// `offsets[record_id]` = byte offset inside the arena; `None` while
+    /// the record's wave is unresolved.
+    pub offsets: Vec<Option<usize>>,
+    /// Arena high-water mark over every placed record. For a complete plan
+    /// this is the arena size — the **worst-wave peak** budget admission
+    /// must resolve against, since growth is monotone across waves.
+    pub peak: usize,
+    /// Number of planner passes executed (= distinct resolved `known_at`
+    /// values).
     pub passes: usize,
-    /// Arena high-water mark after each pass.
+    /// Record ids placed in each planned wave (waves ascending by
+    /// `known_at`), in placement (Algorithm-3 size-descending) order.
+    pub wave_records: Vec<Vec<usize>>,
+    /// Arena high-water mark after each planned wave (monotone).
     pub growth: Vec<usize>,
+}
+
+impl MultiPassPlan {
+    /// True once every record is placed (all waves resolved).
+    pub fn is_complete(&self) -> bool {
+        self.offsets.iter().all(Option::is_some)
+    }
+
+    /// Offset of one record, `None` while its wave is unresolved.
+    pub fn offset_of(&self, record_id: usize) -> Option<usize> {
+        self.offsets.get(record_id).copied().flatten()
+    }
+
+    /// Collapse a *complete* plan into an ordinary [`OffsetPlan`] (what the
+    /// arena is built from); `None` if any wave is still unresolved.
+    pub fn offset_plan(&self) -> Option<OffsetPlan> {
+        let offsets: Option<Vec<usize>> = self.offsets.iter().copied().collect();
+        offsets.map(|offsets| OffsetPlan { offsets, total: self.peak })
+    }
 }
 
 /// §7 multi-pass offset planner. Records are planned in waves of increasing
@@ -44,53 +216,73 @@ pub struct MultiPassPlan {
 pub struct MultiPassPlanner;
 
 impl MultiPassPlanner {
-    /// Plan all records. The returned offsets satisfy the usual §5
-    /// feasibility (validated against the *final* sizes).
-    pub fn plan(&self, dynamic: &[DynamicRecord], num_ops: usize) -> MultiPassPlan {
-        let records = UsageRecords {
-            records: dynamic.iter().map(|d| d.record).collect(),
-            num_ops,
-        };
-        let mut waves: Vec<usize> = dynamic.iter().map(|d| d.known_at).collect();
+    /// Plan every wave. The returned plan is complete and its
+    /// [`MultiPassPlan::offset_plan`] satisfies the usual §5 feasibility
+    /// (validated against the *final* sizes by the plan cache).
+    pub fn plan(&self, dynamic: &DynamicRecords) -> MultiPassPlan {
+        self.plan_resolved(dynamic, usize::MAX)
+    }
+
+    /// Plan only the waves with `known_at <= resolved_through` — the §7
+    /// protocol stopped mid-decode. By the freeze invariant (module docs)
+    /// the returned offsets are a byte-identical prefix of every fuller
+    /// plan of the same records, which is what makes caching prefix plans
+    /// per resolved-size fingerprint sound.
+    pub fn plan_resolved(
+        &self,
+        dynamic: &DynamicRecords,
+        resolved_through: usize,
+    ) -> MultiPassPlan {
+        let records = dynamic.final_records();
+        let mut waves: Vec<usize> = dynamic
+            .records
+            .iter()
+            .map(|d| d.known_at)
+            .filter(|&w| w <= resolved_through)
+            .collect();
         waves.sort_unstable();
         waves.dedup();
 
         let mut store = super::offset::OffsetStore::new(&records);
         let mut growth = Vec::with_capacity(waves.len());
+        let mut wave_records: Vec<Vec<usize>> = Vec::with_capacity(waves.len());
         let mut high = 0usize;
         for &wave in &waves {
             // Newly-known records, size-descending (Algorithm 3's order).
             let mut ids: Vec<usize> = dynamic
+                .records
                 .iter()
                 .enumerate()
                 .filter(|(_, d)| d.known_at == wave)
                 .map(|(i, _)| i)
                 .collect();
             crate::records::profile::sort_ids_by_size_desc(&records.records, &mut ids);
-            for id in ids {
+            for &id in &ids {
                 let r = &records.records[id];
                 let off = store.best_fit_offset(r);
                 store.place(r, off);
                 high = high.max(off + r.size);
             }
             growth.push(high);
+            wave_records.push(ids);
         }
+        let (offsets, _) = store.into_partial();
         MultiPassPlan {
-            plan: store.into_plan(),
+            offsets,
+            peak: high,
             passes: waves.len(),
+            wave_records,
             growth,
         }
     }
 
     /// Footprint penalty of not knowing sizes up front: ratio of the
-    /// multi-pass arena to the oracle single-pass arena.
-    pub fn overhead_vs_oracle(&self, dynamic: &[DynamicRecord], num_ops: usize) -> f64 {
-        let records = UsageRecords {
-            records: dynamic.iter().map(|d| d.record).collect(),
-            num_ops,
-        };
-        let oracle = GreedyBySize.plan(&records).total_size();
-        let multi = self.plan(dynamic, num_ops).plan.total_size();
+    /// multi-pass arena to the oracle single-pass arena. Defined for every
+    /// input: an empty/zero-size record set (oracle arena 0) reports 1.0 —
+    /// no penalty — instead of `NaN`/`inf`.
+    pub fn overhead_vs_oracle(&self, dynamic: &DynamicRecords) -> f64 {
+        let oracle = GreedyBySize.plan(&dynamic.final_records()).total_size();
+        let multi = self.plan(dynamic).peak;
         if oracle == 0 {
             1.0
         } else {
@@ -102,57 +294,118 @@ impl MultiPassPlanner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::records::UsageRecords;
 
     fn rec(id: usize, f: usize, l: usize, s: usize) -> UsageRecord {
         UsageRecord { id, tensor: None, first_op: f, last_op: l, size: s }
     }
 
+    fn dyn_set(entries: &[(usize, usize, usize, usize)], num_ops: usize) -> DynamicRecords {
+        DynamicRecords::new(
+            entries
+                .iter()
+                .enumerate()
+                .map(|(i, &(f, l, s, k))| DynamicRecord { record: rec(i, f, l, s), known_at: k })
+                .collect(),
+            num_ops,
+        )
+    }
+
     #[test]
     fn all_static_equals_single_pass() {
-        let dynamic: Vec<DynamicRecord> = [(0, 1, 32), (1, 2, 28), (2, 5, 8), (3, 4, 40)]
-            .iter()
-            .enumerate()
-            .map(|(i, &(f, l, s))| DynamicRecord { record: rec(i, f, l, s), known_at: 0 })
-            .collect();
-        let mp = MultiPassPlanner.plan(&dynamic, 6);
-        assert_eq!(mp.passes, 1);
-        let records = UsageRecords {
-            records: dynamic.iter().map(|d| d.record).collect(),
-            num_ops: 6,
-        };
-        mp.plan.validate(&records).unwrap();
-        assert_eq!(
-            mp.plan.total_size(),
-            super::GreedyBySize.plan(&records).total_size()
+        let dynamic = dyn_set(
+            &[(0, 1, 32, 0), (1, 2, 28, 0), (2, 5, 8, 0), (3, 4, 40, 0)],
+            6,
         );
+        let mp = MultiPassPlanner.plan(&dynamic);
+        assert_eq!(mp.passes, 1);
+        assert!(mp.is_complete());
+        let records = dynamic.final_records();
+        let plan = mp.offset_plan().unwrap();
+        plan.validate(&records).unwrap();
+        assert_eq!(plan.total_size(), GreedyBySize.plan(&records).total_size());
     }
 
     #[test]
     fn late_known_sizes_plan_in_second_pass() {
-        let dynamic = vec![
-            DynamicRecord { record: rec(0, 0, 2, 100), known_at: 0 },
-            DynamicRecord { record: rec(1, 1, 3, 50), known_at: 0 },
-            // becomes known after op 1 executes (e.g. LSTM output length)
-            DynamicRecord { record: rec(2, 2, 4, 70), known_at: 1 },
-        ];
-        let mp = MultiPassPlanner.plan(&dynamic, 5);
+        let dynamic = dyn_set(
+            &[
+                (0, 2, 100, 0),
+                (1, 3, 50, 0),
+                // becomes known after op 1 executes (e.g. LSTM output length)
+                (2, 4, 70, 1),
+            ],
+            5,
+        );
+        let mp = MultiPassPlanner.plan(&dynamic);
         assert_eq!(mp.passes, 2);
         assert!(mp.growth[0] <= mp.growth[1]);
-        let records = UsageRecords {
-            records: dynamic.iter().map(|d| d.record).collect(),
-            num_ops: 5,
-        };
-        mp.plan.validate(&records).unwrap();
+        assert_eq!(mp.peak, *mp.growth.last().unwrap());
+        mp.offset_plan().unwrap().validate(&dynamic.final_records()).unwrap();
+    }
+
+    #[test]
+    fn prefix_plan_is_a_frozen_prefix_of_the_full_plan() {
+        let dynamic = dyn_set(
+            &[
+                (0, 2, 128, 0),
+                (1, 3, 64, 0),
+                (2, 4, 192, 1),
+                (3, 5, 64, 3),
+                (4, 6, 256, 3),
+                (5, 7, 64, 4),
+            ],
+            8,
+        );
+        let full = MultiPassPlanner.plan(&dynamic);
+        assert!(full.is_complete());
+        for &w in &dynamic.waves() {
+            let prefix = MultiPassPlanner.plan_resolved(&dynamic, w);
+            assert_eq!(prefix.passes, dynamic.waves().iter().filter(|&&x| x <= w).count());
+            for d in &dynamic.records {
+                let id = d.record.id;
+                if d.known_at <= w {
+                    assert_eq!(
+                        prefix.offset_of(id),
+                        full.offset_of(id),
+                        "wave-{w} prefix moved record {id}: the freeze invariant is broken"
+                    );
+                } else {
+                    assert_eq!(prefix.offset_of(id), None, "unresolved record {id} placed early");
+                }
+            }
+            assert!(prefix.peak <= full.peak);
+        }
     }
 
     #[test]
     fn overhead_is_at_least_one_ish() {
-        let dynamic = vec![
-            DynamicRecord { record: rec(0, 0, 2, 10), known_at: 0 },
-            DynamicRecord { record: rec(1, 3, 4, 10), known_at: 2 },
-        ];
-        let ratio = MultiPassPlanner.overhead_vs_oracle(&dynamic, 5);
+        let dynamic = dyn_set(&[(0, 2, 10, 0), (3, 4, 10, 2)], 5);
+        let ratio = MultiPassPlanner.overhead_vs_oracle(&dynamic);
         assert!(ratio >= 0.999);
+    }
+
+    #[test]
+    fn overhead_vs_oracle_is_defined_when_the_oracle_arena_is_zero() {
+        // Zero-size records (or no records at all) give the oracle a 0-byte
+        // arena; the ratio must be the defined 1.0, not NaN/inf.
+        let zero = dyn_set(&[(0, 1, 0, 0), (1, 2, 0, 1)], 3);
+        assert_eq!(MultiPassPlanner.overhead_vs_oracle(&zero), 1.0);
+        let empty = DynamicRecords::new(Vec::new(), 0);
+        assert_eq!(MultiPassPlanner.overhead_vs_oracle(&empty), 1.0);
+    }
+
+    #[test]
+    fn decode_tail_resolves_just_in_time() {
+        let records = UsageRecords::from_triples(&[(0, 2, 64), (2, 3, 64), (3, 5, 128)]);
+        let dynamic = DynamicRecords::decode_tail(&records, 2);
+        assert_eq!(dynamic.records[0].known_at, 0, "head of the graph stays static");
+        assert_eq!(dynamic.records[1].known_at, 1, "tail resolves one op early");
+        assert_eq!(dynamic.records[2].known_at, 2);
+        assert_eq!(dynamic.num_dynamic(), 2);
+        assert_eq!(dynamic.boundaries(), vec![1, 2]);
+        // Every dynamic record resolves before its producer runs.
+        for d in &dynamic.records {
+            assert!(d.known_at == 0 || d.known_at < d.record.first_op);
+        }
     }
 }

@@ -16,6 +16,13 @@
 //! Every planner consumes only a [`UsageRecords`] — the paper's abstraction
 //! boundary — and returns a plan that can be validated independently
 //! ([`validate`]) and materialized by `crate::arena`.
+//!
+//! Two further dimensions extend the taxonomy into serving:
+//! **execution order** ([`order`], §7.1 — which topological sort the
+//! records are extracted under) and **dynamic shapes** ([`dynamic`], §7 —
+//! multi-pass planning when sizes resolve mid-inference, cached per
+//! resolved-size prefix). Both are first-class key dimensions of the
+//! [`cache::PlanCache`] behind [`service::PlanService`].
 
 pub mod cache;
 pub mod dynamic;
@@ -31,6 +38,7 @@ pub mod validate;
 use crate::records::UsageRecords;
 
 pub use cache::{PersistReport, PlanCache, PlanServiceError, WarmStartReport};
+pub use dynamic::{DynamicRecord, DynamicRecords, MultiPassPlan, MultiPassPlanner};
 pub use order::{apply_order, AppliedOrder};
 pub use registry::{order_strategy, OrderStrategy};
 pub use service::{PlanService, PlanServiceStats};

@@ -26,6 +26,7 @@ pub(crate) struct OffsetStore<'r> {
 }
 
 impl<'r> OffsetStore<'r> {
+    /// Empty store over `records`, nothing placed yet.
     pub fn new(records: &'r UsageRecords) -> Self {
         OffsetStore {
             records: &records.records,
@@ -76,6 +77,14 @@ impl<'r> OffsetStore<'r> {
     /// Is the record already placed?
     pub fn is_placed(&self, r: &UsageRecord) -> bool {
         self.offsets[r.id].is_some()
+    }
+
+    /// Finish an incremental — possibly *partial* — assignment: offsets of
+    /// the records placed so far (`None` for the rest) plus the high-water
+    /// mark over them. Used by the §7 multi-pass planner, whose decode-step
+    /// prefix plans legitimately leave later-wave records unplaced.
+    pub fn into_partial(self) -> (Vec<Option<usize>>, usize) {
+        (self.offsets, self.total)
     }
 
     /// Finish; every record must have been placed.

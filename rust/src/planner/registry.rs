@@ -14,7 +14,16 @@
 //! record's lifetime, so the plan cache and the on-disk plan directory key
 //! on the canonical order key exactly like they key on the allocation
 //! strategy.
+//!
+//! The §7 **dynamic-shape** planner ([`dynamic_planner`]) is registered
+//! here too. It is not an [`OffsetPlanner`] — it consumes
+//! [`DynamicRecords`](super::dynamic::DynamicRecords), not `UsageRecords` —
+//! so it has a single fixed entry rather than a keyed family: within-wave
+//! placement is always Algorithm 3's size-descending best-fit, and the
+//! plan cache's dynamic slots reuse the *offset* strategy key purely as a
+//! namespace.
 
+use super::dynamic::MultiPassPlanner;
 use super::offset;
 use super::shared;
 use super::{OffsetPlanner, SharedObjectPlanner};
@@ -26,6 +35,21 @@ use super::{OffsetPlanner, SharedObjectPlanner};
 /// both are part of the canonical key ([`OrderStrategy::key`]) because two
 /// annealing runs with different seeds may settle on different orders, and
 /// a cached plan is only valid under the exact order that produced it.
+///
+/// # Example
+///
+/// Canonical keys round-trip through [`order_strategy`], which is what
+/// keeps plan-directory file names and CLI flags unambiguous:
+///
+/// ```
+/// use tensorarena::planner::{order_strategy, OrderStrategy};
+///
+/// assert_eq!(OrderStrategy::Natural.key(), "natural");
+/// let annealed = order_strategy("annealed-s7-t25").unwrap();
+/// assert_eq!(annealed, OrderStrategy::Annealed { seed: 7, budget: 25 });
+/// assert_eq!(order_strategy(&annealed.key()), Some(annealed)); // round-trips
+/// assert!(order_strategy("belady").is_none());
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum OrderStrategy {
     /// The stored (builder/TFLite) topological order.
@@ -185,6 +209,13 @@ pub fn shared_strategies() -> Vec<Box<dyn SharedObjectPlanner>> {
         .iter()
         .map(|k| shared_strategy(k).expect("registry key resolves"))
         .collect()
+}
+
+/// The §7 multi-pass planner — the one dynamic-shape strategy. Exposed
+/// through the registry so "which planners exist" stays a one-module
+/// question even though its input type differs.
+pub fn dynamic_planner() -> MultiPassPlanner {
+    MultiPassPlanner
 }
 
 /// All Offset-Calculation strategies, in Table 2 row order.

@@ -62,6 +62,7 @@
 //! strategy that is no longer registered, or was written under a different
 //! execution order, and count the skips.
 
+use super::dynamic::DynamicRecords;
 use super::{OffsetPlan, SharedObjectPlan};
 use crate::records::UsageRecords;
 
@@ -87,6 +88,31 @@ pub fn records_fingerprint(records: &UsageRecords) -> u64 {
         buf.extend_from_slice(&(r.first_op as u64).to_le_bytes());
         buf.extend_from_slice(&(r.last_op as u64).to_le_bytes());
         buf.extend_from_slice(&(r.size as u64).to_le_bytes());
+    }
+    fnv1a(&buf)
+}
+
+/// FNV-1a fingerprint of the **resolved-size prefix** of a dynamic record
+/// set: everything known once op `resolved_through` has executed — the op
+/// count, every record's interval and `known_at`, and the *sizes of the
+/// records resolved so far* (statically-known records, `known_at == 0`,
+/// are always resolved). Unresolved sizes are replaced by a tag byte, so
+/// two decode steps see the same fingerprint exactly when the same sizes
+/// have resolved to the same values — the §7 plan-cache key dimension
+/// (see [`super::cache::PlanCache::get_or_plan_dynamic_resolved`]).
+pub fn resolved_prefix_fingerprint(dynamic: &DynamicRecords, resolved_through: usize) -> u64 {
+    let mut buf = Vec::with_capacity(8 + dynamic.len() * 33);
+    buf.extend_from_slice(&(dynamic.num_ops as u64).to_le_bytes());
+    for d in &dynamic.records {
+        buf.extend_from_slice(&(d.record.first_op as u64).to_le_bytes());
+        buf.extend_from_slice(&(d.record.last_op as u64).to_le_bytes());
+        buf.extend_from_slice(&(d.known_at as u64).to_le_bytes());
+        if d.known_at <= resolved_through {
+            buf.push(1);
+            buf.extend_from_slice(&(d.record.size as u64).to_le_bytes());
+        } else {
+            buf.push(0);
+        }
     }
     fnv1a(&buf)
 }
@@ -151,26 +177,37 @@ pub fn shared_plan_to_string(plan: &SharedObjectPlan, records: &UsageRecords) ->
 /// Errors while loading a plan.
 #[derive(Debug, PartialEq, Eq)]
 pub enum LoadError {
+    /// The first line is not a well-formed `tensorarena-plan` header.
     BadHeader(String),
     /// The file speaks an older (or unknown) format version — e.g. a `v1`
     /// file written before the execution-order bump. Rejected cleanly
     /// rather than guessed at: v1 headers have no order field, so loading
     /// one as v2 would mis-key the plan.
     UnsupportedVersion(String),
+    /// The trailing FNV-1a checksum does not match the body.
     BadChecksum,
+    /// The checksum line (or more) is missing entirely.
     Truncated,
+    /// A record line failed to tokenize into five integers (1-based line).
     Malformed(usize),
     /// The plan was produced for different records.
     RecordMismatch {
+        /// Record id (or count) that mismatched.
         record: usize,
+        /// Which field mismatched (`size`, `first_op`, `last_op`, `count`,
+        /// `duplicate`, `missing`).
         field: &'static str,
     },
     /// The plan was produced under a different execution order (lifetimes
     /// differ, so its offsets are meaningless for these records).
     OrderMismatch {
+        /// Canonical order key found in the file's header.
         found: String,
+        /// Canonical order key of the loading configuration.
         expected: String,
     },
+    /// The plan parsed but fails §5 feasibility (or declares an arena total
+    /// above the records' naive bound).
     Infeasible(String),
 }
 
@@ -552,6 +589,67 @@ mod tests {
         let naive_plan = crate::planner::offset::NaiveOffset.plan(&recs);
         let naive_text = offset_plan_to_string(&naive_plan, &recs);
         assert!(offset_plan_from_str(&naive_text, &recs).is_ok());
+    }
+
+    #[test]
+    fn resolved_prefix_fingerprint_tracks_resolution_and_sizes() {
+        use crate::planner::dynamic::{DynamicRecord, DynamicRecords};
+        let base = |sizes: [usize; 3]| {
+            DynamicRecords::new(
+                vec![
+                    DynamicRecord {
+                        record: crate::records::UsageRecord {
+                            id: 0, tensor: None, first_op: 0, last_op: 2, size: sizes[0],
+                        },
+                        known_at: 0,
+                    },
+                    DynamicRecord {
+                        record: crate::records::UsageRecord {
+                            id: 1, tensor: None, first_op: 2, last_op: 3, size: sizes[1],
+                        },
+                        known_at: 1,
+                    },
+                    DynamicRecord {
+                        record: crate::records::UsageRecord {
+                            id: 2, tensor: None, first_op: 4, last_op: 5, size: sizes[2],
+                        },
+                        known_at: 3,
+                    },
+                ],
+                6,
+            )
+        };
+        let a = base([64, 128, 256]);
+        // Decode steps between wave boundaries share the fingerprint...
+        assert_eq!(
+            resolved_prefix_fingerprint(&a, 1),
+            resolved_prefix_fingerprint(&a, 2),
+            "no wave resolves between ops 1 and 2"
+        );
+        // ...a newly-resolved wave changes it...
+        assert_ne!(
+            resolved_prefix_fingerprint(&a, 1),
+            resolved_prefix_fingerprint(&a, 3)
+        );
+        // ...and so does a different *value* for an already-resolved size,
+        // while an unresolved size does not participate at all.
+        let b = base([64, 999, 256]);
+        assert_ne!(
+            resolved_prefix_fingerprint(&a, 1),
+            resolved_prefix_fingerprint(&b, 1),
+            "resolved size differs"
+        );
+        let c = base([64, 128, 999]);
+        assert_eq!(
+            resolved_prefix_fingerprint(&a, 1),
+            resolved_prefix_fingerprint(&c, 1),
+            "unresolved tail sizes must not leak into the prefix fingerprint"
+        );
+        // With every wave resolved, all sizes participate.
+        assert_ne!(
+            resolved_prefix_fingerprint(&a, usize::MAX),
+            resolved_prefix_fingerprint(&c, usize::MAX)
+        );
     }
 
     #[test]

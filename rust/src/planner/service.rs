@@ -15,8 +15,17 @@
 //! *then* extract records — so the annealed orders of
 //! [`order`](super::order) reach the serving hot path, and every ordered
 //! plan lands in an order-keyed cache slot.
+//!
+//! Dynamic shapes (§7) ride the same path:
+//! [`PlanService::plan_graph_dynamic`] overlays a decode-tail profile on
+//! the ordered records and plans the multi-pass plan through the
+//! resolved-prefix-keyed dynamic cache slots, so a wave-aware engine's
+//! decode-step re-plans ([`PlanService::plan_dynamic_resolved`]) and its
+//! budget admission ([`PlanService::max_servable_batch_dynamic`], resolved
+//! under the worst-wave peak) are amortized exactly like static plans.
 
 use super::cache::{PersistReport, PlanCache, PlanServiceError, WarmStartReport};
+use super::dynamic::{DynamicRecords, MultiPassPlan};
 use super::order::{self, AppliedOrder};
 use super::registry::OrderStrategy;
 use super::{registry, OffsetPlan};
@@ -27,6 +36,25 @@ use std::path::Path;
 use std::sync::Arc;
 
 /// Shared planning façade: registry + plan cache + arena pool.
+///
+/// # Example
+///
+/// Every engine sharing the handle plans each `(model, batch, strategy,
+/// order)` exactly once:
+///
+/// ```
+/// use tensorarena::models;
+/// use tensorarena::planner::PlanService;
+/// use tensorarena::records::UsageRecords;
+///
+/// let service = PlanService::shared();
+/// let records = UsageRecords::from_graph(&models::blazeface());
+/// let a = service.plan_records(&records, 2, None).unwrap();
+/// let b = service.plan_records(&records, 2, None).unwrap();
+/// assert!(std::sync::Arc::ptr_eq(&a, &b)); // planned once, shared
+/// assert_eq!(service.stats().cache_misses, 1);
+/// assert_eq!(service.stats().cache_hits, 1);
+/// ```
 pub struct PlanService {
     cache: PlanCache,
     pool: Arc<ArenaPool>,
@@ -48,6 +76,11 @@ pub struct PlanServiceStats {
     pub warm_loaded: u64,
     /// Plan-directory files skipped at warm start (corrupt or stale).
     pub warm_skipped: u64,
+    /// Dynamic (§7 multi-pass) plan-cache hits — decode-step re-plans
+    /// answered with zero planner invocations.
+    pub dynamic_hits: u64,
+    /// Dynamic plan-cache misses (multi-pass planner invocations).
+    pub dynamic_misses: u64,
 }
 
 impl PlanServiceStats {
@@ -163,6 +196,89 @@ impl PlanService {
         Ok((records, plan, applied))
     }
 
+    /// The complete §7 multi-pass plan for `dynamic` (batch-1 records of
+    /// the order-applied graph) scaled to `batch`, through the dynamic
+    /// cache slot; see [`PlanCache::get_or_plan_dynamic`]. The plan's
+    /// [`MultiPassPlan::peak`] is the worst-wave peak the wave-aware
+    /// executor sizes its pooled arena from.
+    pub fn plan_dynamic(
+        &self,
+        dynamic: &DynamicRecords,
+        batch: usize,
+        strategy: Option<&str>,
+        order: OrderStrategy,
+    ) -> Result<Arc<MultiPassPlan>, PlanServiceError> {
+        self.cache.get_or_plan_dynamic(
+            dynamic,
+            batch,
+            strategy.unwrap_or(self.default_strategy),
+            order,
+        )
+    }
+
+    /// The §7 prefix plan of the waves resolved once op `resolved_through`
+    /// has executed — the decode-step re-plan. Repeats with an unchanged
+    /// resolved prefix are cache hits with zero planner invocations; see
+    /// [`PlanCache::get_or_plan_dynamic_resolved`].
+    pub fn plan_dynamic_resolved(
+        &self,
+        dynamic: &DynamicRecords,
+        resolved_through: usize,
+        batch: usize,
+        strategy: Option<&str>,
+        order: OrderStrategy,
+    ) -> Result<Arc<MultiPassPlan>, PlanServiceError> {
+        self.cache.get_or_plan_dynamic_resolved(
+            dynamic,
+            resolved_through,
+            batch,
+            strategy.unwrap_or(self.default_strategy),
+            order,
+        )
+    }
+
+    /// Apply `order` to `graph`, extract its records, overlay the
+    /// decode-tail dynamic profile starting at `decode_from` (see
+    /// [`DynamicRecords::decode_tail`]), and plan the complete multi-pass
+    /// plan at `batch` — the dynamic analogue of [`Self::plan_graph`].
+    /// This is the one-call *library* path; `serve --dynamic` and the
+    /// wave-aware engine perform the same sequence inline because they
+    /// also need the intermediate records/ordered graph, so any change to
+    /// the overlay here must be mirrored there (the cache keys must
+    /// agree).
+    pub fn plan_graph_dynamic(
+        &self,
+        graph: &Graph,
+        batch: usize,
+        strategy: Option<&str>,
+        order: OrderStrategy,
+        decode_from: usize,
+    ) -> Result<(DynamicRecords, Arc<MultiPassPlan>, AppliedOrder), PlanServiceError> {
+        let (ordered, applied) = self.apply_order(graph, order);
+        let records = UsageRecords::from_graph(&ordered);
+        let dynamic = DynamicRecords::decode_tail(&records, decode_from);
+        let plan = self.plan_dynamic(&dynamic, batch, strategy, order)?;
+        Ok((dynamic, plan, applied))
+    }
+
+    /// Largest batch whose **worst-wave** multi-pass peak fits
+    /// `budget_bytes` — what budget admission for a dynamic-shape engine
+    /// resolves; see [`PlanCache::max_servable_batch_dynamic`].
+    pub fn max_servable_batch_dynamic(
+        &self,
+        dynamic: &DynamicRecords,
+        budget_bytes: usize,
+        strategy: Option<&str>,
+        order: OrderStrategy,
+    ) -> Result<usize, PlanServiceError> {
+        self.cache.max_servable_batch_dynamic(
+            dynamic,
+            strategy.unwrap_or(self.default_strategy),
+            budget_bytes,
+            order,
+        )
+    }
+
     /// Largest batch whose planned footprint fits `budget_bytes`, for the
     /// natural execution order; see [`PlanCache::max_servable_batch`].
     pub fn max_servable_batch(
@@ -231,6 +347,8 @@ impl PlanService {
             pool_allocated: self.pool.allocated(),
             warm_loaded: self.cache.warm_loaded(),
             warm_skipped: self.cache.warm_skipped(),
+            dynamic_hits: self.cache.dynamic_hits(),
+            dynamic_misses: self.cache.dynamic_misses(),
         }
     }
 }
@@ -269,6 +387,39 @@ mod tests {
         assert_eq!(plan.offsets.len(), records.len());
         assert_eq!(applied.breadth_delta(), 0);
         plan.validate(&records).unwrap();
+    }
+
+    #[test]
+    fn plan_graph_dynamic_amortizes_decode_step_replans() {
+        let svc = PlanService::new();
+        let g = crate::models::blazeface();
+        let decode_from = g.num_ops() / 2;
+        let (dynamic, plan, applied) = svc
+            .plan_graph_dynamic(&g, 1, None, OrderStrategy::Natural, decode_from)
+            .unwrap();
+        assert!(plan.is_complete());
+        assert!(plan.passes >= 2, "a decode tail must produce multiple waves");
+        assert_eq!(applied.breadth_delta(), 0);
+        // The complete plan is feasible for the final sizes, and the peak
+        // equals the monotone growth's high-water mark.
+        plan.offset_plan().unwrap().validate(&dynamic.final_records()).unwrap();
+        assert_eq!(plan.peak, *plan.growth.last().unwrap());
+        // A decode loop over every op: the first sequence plans once per
+        // distinct resolved prefix, the second plans nothing.
+        for step in 0..dynamic.num_ops {
+            svc.plan_dynamic_resolved(&dynamic, step, 1, None, OrderStrategy::Natural)
+                .unwrap();
+        }
+        let misses = svc.stats().dynamic_misses;
+        for step in 0..dynamic.num_ops {
+            svc.plan_dynamic_resolved(&dynamic, step, 1, None, OrderStrategy::Natural)
+                .unwrap();
+        }
+        assert_eq!(
+            svc.stats().dynamic_misses,
+            misses,
+            "a repeated decode pass must perform zero planner invocations"
+        );
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub(crate) struct ObjectStore {
 }
 
 impl ObjectStore {
+    /// Empty store over `num_records` unassigned records.
     pub fn new(num_records: usize) -> Self {
         ObjectStore {
             sizes: Vec::new(),

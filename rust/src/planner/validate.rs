@@ -13,22 +13,55 @@ use std::fmt;
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PlanError {
     /// Plan length does not match the record count.
-    WrongArity { expected: usize, got: usize },
+    WrongArity {
+        /// Records the plan should cover.
+        expected: usize,
+        /// Records it actually covers.
+        got: usize,
+    },
     /// A record is assigned to a shared object that does not exist.
-    UnknownObject { record: usize, object: usize },
+    UnknownObject {
+        /// Offending record id.
+        record: usize,
+        /// Out-of-range object index.
+        object: usize,
+    },
     /// A shared object is smaller than a tensor assigned to it.
     ObjectTooSmall {
+        /// Offending record id.
         record: usize,
+        /// Object index.
         object: usize,
+        /// The object's declared size.
         object_size: usize,
+        /// The tensor's (larger) size.
         tensor_size: usize,
     },
     /// Two tensors with intersecting usage intervals share a shared object.
-    SharedConflict { a: usize, b: usize, object: usize },
+    SharedConflict {
+        /// First record id.
+        a: usize,
+        /// Second record id.
+        b: usize,
+        /// The shared object both were assigned to.
+        object: usize,
+    },
     /// Two tensors with intersecting usage intervals overlap in the arena.
-    OffsetConflict { a: usize, b: usize },
+    OffsetConflict {
+        /// First record id.
+        a: usize,
+        /// Second record id.
+        b: usize,
+    },
     /// The declared arena size is smaller than an allocation's end.
-    TotalTooSmall { record: usize, end: usize, total: usize },
+    TotalTooSmall {
+        /// Offending record id.
+        record: usize,
+        /// `offset + size` of the allocation.
+        end: usize,
+        /// The declared arena total.
+        total: usize,
+    },
 }
 
 impl fmt::Display for PlanError {

@@ -62,7 +62,9 @@ impl UsageRecord {
 /// everything a planner needs.
 #[derive(Debug, Clone)]
 pub struct UsageRecords {
+    /// The records; `records[i].id == i` (dense).
     pub records: Vec<UsageRecord>,
+    /// Number of ops in the graph the records were extracted from.
     pub num_ops: usize,
 }
 

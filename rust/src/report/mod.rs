@@ -15,8 +15,11 @@ pub const MIB: f64 = 1024.0 * 1024.0;
 
 /// One rendered table.
 pub struct Table {
+    /// Table heading.
     pub title: String,
+    /// Column headers (network names).
     pub columns: Vec<String>,
+    /// `(row label, one value per column)` rows.
     pub rows: Vec<(String, Vec<f64>)>,
 }
 

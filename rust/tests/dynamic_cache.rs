@@ -1,0 +1,322 @@
+//! Tier-1 acceptance tests for dynamic-shape serving through the plan
+//! cache (§7): repeated decode-step plans with an unchanged resolved-size
+//! prefix must hit the cache with **zero planner invocations** (verified
+//! by counter), wave-aware execution must not change the numbers, and
+//! budget admission must resolve under the worst-wave multi-pass peak.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tensorarena::coordinator::engine::ExecutorEngine;
+use tensorarena::coordinator::{BatchPolicy, Engine, ModelServer};
+use tensorarena::models;
+use tensorarena::planner::{
+    DynamicRecord, DynamicRecords, MultiPassPlanner, OrderStrategy, PlanService,
+};
+use tensorarena::records::{UsageRecord, UsageRecords};
+use tensorarena::rng::SplitMix64;
+
+/// A synthetic decode workload: a chain whose tail sizes resolve one op
+/// before their producer, sizes drawn deterministically from `seed`.
+fn synth_decode(seed: u64, n_ops: usize, from_op: usize) -> DynamicRecords {
+    let mut rng = SplitMix64::new(seed);
+    let mut triples = Vec::new();
+    for i in 0..n_ops {
+        triples.push((i, (i + 1).min(n_ops - 1), 64 * rng.next_range(1, 64)));
+    }
+    DynamicRecords::decode_tail(&UsageRecords::from_triples(&triples), from_op)
+}
+
+#[test]
+fn second_decode_pass_over_the_same_prefix_plans_nothing() {
+    // The ISSUE's acceptance criterion, end to end at the service layer: a
+    // decode loop touches every resolved prefix once; a second pass over
+    // the same prefixes performs zero planner invocations.
+    let svc = PlanService::shared();
+    let dynamic = synth_decode(3, 48, 24);
+    assert!(dynamic.num_dynamic() > 0);
+    for step in 0..dynamic.num_ops {
+        svc.plan_dynamic_resolved(&dynamic, step, 1, None, OrderStrategy::Natural)
+            .unwrap();
+    }
+    let first_pass_misses = svc.stats().dynamic_misses;
+    assert!(
+        first_pass_misses >= 2,
+        "a decode tail must actually create multiple prefixes"
+    );
+    for step in 0..dynamic.num_ops {
+        svc.plan_dynamic_resolved(&dynamic, step, 1, None, OrderStrategy::Natural)
+            .unwrap();
+    }
+    let st = svc.stats();
+    assert_eq!(
+        st.dynamic_misses, first_pass_misses,
+        "second pass over the same resolved prefixes must plan nothing"
+    );
+    assert_eq!(st.dynamic_hits as usize, 2 * dynamic.num_ops - first_pass_misses as usize);
+}
+
+#[test]
+fn prefix_plans_are_frozen_prefixes_across_random_workloads() {
+    // The freeze invariant that makes prefix-keyed caching sound, over
+    // randomized decode workloads: every wave-w prefix plan places exactly
+    // the resolved records, at the offsets the full plan gives them.
+    for seed in 0..20u64 {
+        let dynamic = synth_decode(seed, 40, 12 + (seed as usize % 16));
+        let full = MultiPassPlanner.plan(&dynamic);
+        assert!(full.is_complete());
+        full.offset_plan()
+            .unwrap()
+            .validate(&dynamic.final_records())
+            .unwrap();
+        // Growth is monotone and peaks at the arena total.
+        assert!(full.growth.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(full.peak, *full.growth.last().unwrap());
+        for &w in &dynamic.waves() {
+            let prefix = MultiPassPlanner.plan_resolved(&dynamic, w);
+            for d in &dynamic.records {
+                let id = d.record.id;
+                if d.known_at <= w {
+                    assert_eq!(
+                        prefix.offset_of(id),
+                        full.offset_of(id),
+                        "seed {seed}: wave-{w} prefix moved record {id}"
+                    );
+                } else {
+                    assert_eq!(prefix.offset_of(id), None);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn wave_aware_serving_is_bit_identical_and_amortized() {
+    // A wave-aware server fed fixed-size pre-batched bursts (so every
+    // executed batch is deterministic): outputs match the static engine
+    // bit for bit, and the second burst performs zero planner invocations
+    // — static or dynamic.
+    let g = models::blazeface();
+    let in_elems = g.tensor(g.inputs[0]).num_elements();
+    let decode_from = g.num_ops() / 2;
+    let svc = PlanService::shared();
+    let server = {
+        let svc = Arc::clone(&svc);
+        ModelServer::spawn(
+            move || {
+                let g = models::blazeface();
+                Box::new(
+                    ExecutorEngine::with_dynamic(
+                        &g,
+                        svc,
+                        "greedy-size",
+                        OrderStrategy::Natural,
+                        decode_from,
+                        7,
+                    )
+                    .expect("engine")
+                    .with_max_batch(4),
+                )
+            },
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                mem_budget: None,
+            },
+        )
+    };
+    // Reference outputs from a static engine with the same weights seed.
+    let mut reference = ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 7).unwrap();
+    // Each request is a pre-batched burst of exactly 4 samples: it closes
+    // a batch by itself, so every engine execution is a batch of 4.
+    let burst: Vec<f32> = (0..4)
+        .flat_map(|i| vec![(i % 5) as f32 * 0.2; in_elems])
+        .collect();
+    let expected = reference.run_batch(&burst, 4).unwrap();
+    for round in 0..3 {
+        let out = server.submit(burst.clone()).recv().unwrap().unwrap();
+        assert_eq!(out, expected, "round {round} diverged under wave-aware serving");
+    }
+    let (static_misses, dynamic_misses) = {
+        let st = svc.stats();
+        (st.cache_misses, st.dynamic_misses)
+    };
+    // Steady state: everything — batch plans, decode-step re-plans — comes
+    // from the cache.
+    for _ in 0..3 {
+        server.submit(burst.clone()).recv().unwrap().unwrap();
+    }
+    let st = svc.stats();
+    assert_eq!(st.cache_misses, static_misses, "static plans re-planned");
+    assert_eq!(st.dynamic_misses, dynamic_misses, "decode-step re-plans not amortized");
+    assert!(st.dynamic_hits > 0);
+    server.shutdown();
+}
+
+#[test]
+fn dynamic_budget_admission_refuses_over_peak_bursts() {
+    // Budget resolved under the worst-wave peak: a burst whose multi-pass
+    // peak exceeds the budget is refused typed, never OOMed; admitted
+    // batches stay within the dynamic cap.
+    let g = models::blazeface();
+    let in_elems = g.tensor(g.inputs[0]).num_elements();
+    let decode_from = g.num_ops() / 2;
+    let svc = PlanService::shared();
+    let dyn_recs = DynamicRecords::decode_tail(&UsageRecords::from_graph(&g), decode_from);
+    let peak1 = svc
+        .plan_dynamic(&dyn_recs, 1, None, OrderStrategy::Natural)
+        .unwrap()
+        .peak;
+    let budget = 2 * peak1;
+    let cap = svc
+        .max_servable_batch_dynamic(&dyn_recs, budget, None, OrderStrategy::Natural)
+        .unwrap();
+    assert!(cap >= 1 && cap < 8, "budget must bind below the policy cap (cap {cap})");
+    let server = {
+        let svc = Arc::clone(&svc);
+        ModelServer::spawn(
+            move || {
+                let g = models::blazeface();
+                Box::new(
+                    ExecutorEngine::with_dynamic(
+                        &g,
+                        svc,
+                        "greedy-size",
+                        OrderStrategy::Natural,
+                        decode_from,
+                        7,
+                    )
+                    .expect("engine")
+                    .with_max_batch(8),
+                )
+            },
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                mem_budget: Some(budget),
+            },
+        )
+    };
+    // An oversized pre-batched burst is refused with the typed error.
+    let refusal = server.submit(vec![0.1f32; 8 * in_elems]).recv().unwrap();
+    match refusal {
+        Err(tensorarena::coordinator::ServeError::BudgetExceeded {
+            batch,
+            planned_bytes,
+            budget_bytes,
+        }) => {
+            assert_eq!(batch, 8);
+            assert!(planned_bytes > budget_bytes);
+            assert_eq!(budget_bytes, budget);
+        }
+        other => panic!("expected BudgetExceeded, got {other:?}"),
+    }
+    // Singles still serve, clamped to the dynamic cap.
+    let pending: Vec<_> = (0..16usize)
+        .map(|_| server.submit(vec![0.1f32; in_elems]))
+        .collect();
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.completed, 16);
+    assert!(
+        snap.max_batch_seen <= cap,
+        "batch {} formed over the worst-wave-peak cap {cap}",
+        snap.max_batch_seen
+    );
+    assert_eq!(snap.rejected, 1);
+    server.shutdown();
+}
+
+#[test]
+fn stale_resolved_sizes_miss_instead_of_serving_the_wrong_plan() {
+    // Two sequences that agree on the wave structure but resolve a
+    // *different* size for the same wave must occupy different cache slots
+    // — a stale prefix is a miss, never a wrong-plan hit.
+    let svc = PlanService::shared();
+    let base = |late_size: usize| {
+        DynamicRecords::new(
+            vec![
+                DynamicRecord {
+                    record: UsageRecord { id: 0, tensor: None, first_op: 0, last_op: 2, size: 128 },
+                    known_at: 0,
+                },
+                DynamicRecord {
+                    record: UsageRecord {
+                        id: 1,
+                        tensor: None,
+                        first_op: 2,
+                        last_op: 4,
+                        size: late_size,
+                    },
+                    known_at: 1,
+                },
+            ],
+            5,
+        )
+    };
+    let seq_a = base(64);
+    let seq_b = base(256);
+    let a = svc
+        .plan_dynamic_resolved(&seq_a, 1, 1, None, OrderStrategy::Natural)
+        .unwrap();
+    let b = svc
+        .plan_dynamic_resolved(&seq_b, 1, 1, None, OrderStrategy::Natural)
+        .unwrap();
+    assert_eq!(svc.stats().dynamic_misses, 2, "the stale prefix must be a miss");
+    assert_ne!(a.peak, b.peak, "the two sequences need different arenas");
+    // Before wave 1 resolves, the sequences are indistinguishable — and
+    // share a slot (the unresolved size is not part of the prefix).
+    let pa = svc
+        .plan_dynamic_resolved(&seq_a, 0, 1, None, OrderStrategy::Natural)
+        .unwrap();
+    let pb = svc
+        .plan_dynamic_resolved(&seq_b, 0, 1, None, OrderStrategy::Natural)
+        .unwrap();
+    assert_eq!(svc.stats().dynamic_misses, 3, "shared unresolved prefix plans once");
+    assert!(Arc::ptr_eq(&pa, &pb));
+}
+
+#[test]
+fn dynamic_plans_are_order_and_strategy_keyed() {
+    // The full cache key is (resolved prefix, batch, strategy, order):
+    // coinciding record sets under different orders or strategy namespaces
+    // must not cross-contaminate.
+    let svc = PlanService::shared();
+    let dynamic = synth_decode(9, 24, 12);
+    svc.plan_dynamic(&dynamic, 1, Some("greedy-size"), OrderStrategy::Natural)
+        .unwrap();
+    svc.plan_dynamic(&dynamic, 1, Some("greedy-size"), OrderStrategy::MemoryAware)
+        .unwrap();
+    svc.plan_dynamic(&dynamic, 1, Some("greedy-breadth"), OrderStrategy::Natural)
+        .unwrap();
+    svc.plan_dynamic(&dynamic, 2, Some("greedy-size"), OrderStrategy::Natural)
+        .unwrap();
+    assert_eq!(svc.stats().dynamic_misses, 4, "four distinct keys, four slots");
+    svc.plan_dynamic(&dynamic, 1, Some("greedy-size"), OrderStrategy::Natural)
+        .unwrap();
+    assert_eq!(svc.stats().dynamic_misses, 4);
+}
+
+#[test]
+fn dynamic_engine_planned_peaks_drive_the_envelope() {
+    // The Engine-trait view: planned_peak is the worst-wave peak and grows
+    // monotonically with batch, so ModelServer's spawn-time envelope
+    // pre-resolution works unchanged for dynamic engines.
+    let g = models::blazeface();
+    let e = ExecutorEngine::with_dynamic(
+        &g,
+        PlanService::shared(),
+        "greedy-size",
+        OrderStrategy::Natural,
+        g.num_ops() / 2,
+        3,
+    )
+    .unwrap();
+    let p1 = e.planned_peak(1).unwrap();
+    let p2 = e.planned_peak(2).unwrap();
+    let p4 = e.planned_peak(4).unwrap();
+    assert!(p1 > 0 && p1 < p2 && p2 < p4);
+    assert_eq!(e.planned_peak(0), Some(0));
+    assert_eq!(p2, 2 * p1, "uniform scaling scales the worst-wave peak");
+}

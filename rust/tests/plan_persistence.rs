@@ -15,7 +15,7 @@ use tensorarena::coordinator::{BatchPolicy, ModelServer};
 use tensorarena::models;
 use tensorarena::planner::serialize::{self, plan_file_name, LoadError};
 use tensorarena::planner::{
-    apply_order, OrderStrategy, PlanCache, PlanService, WarmStartReport,
+    apply_order, DynamicRecords, OrderStrategy, PlanCache, PlanService, WarmStartReport,
 };
 use tensorarena::records::UsageRecords;
 
@@ -299,6 +299,70 @@ fn warm_start_isolates_models_sharing_one_directory() {
     let cache = PlanCache::new();
     let report = cache.warm_start(&dir, &mobile).unwrap();
     assert_eq!((report.loaded, report.skipped_foreign), (1, 2), "{report:?}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn stale_resolved_prefix_is_a_miss_and_never_persists() {
+    // Decode-step caching (§7) at the cache layer: a second pass over the
+    // same resolved-size prefix performs zero planner invocations, while a
+    // *stale* prefix — the same wave structure resolving a different size,
+    // e.g. the next sequence's longer decode step — misses and re-plans
+    // instead of serving the previous sequence's plan. Dynamic plans also
+    // never leak into the on-disk plan directory (their resolved sizes are
+    // transient): persist_dir writes only static plans.
+    let dir = scratch_dir("stale-prefix");
+    let recs = example();
+    let cache = PlanCache::new();
+    // Sequence A: tail sizes as extracted; sequence B: one decode step
+    // resolved 64 bytes larger.
+    let from_op = recs.num_ops / 2;
+    let seq_a = DynamicRecords::decode_tail(&recs, from_op);
+    let mut bigger = recs.clone();
+    let grown_id = seq_a
+        .records
+        .iter()
+        .find(|d| d.known_at > 0)
+        .map(|d| d.record.id)
+        .expect("decode tail has a dynamic record");
+    bigger.records[grown_id].size += 64;
+    let seq_b = DynamicRecords::decode_tail(&bigger, from_op);
+    let boundary = seq_a.records[grown_id].known_at;
+
+    // A full decode pass for sequence A, repeated: second pass plans
+    // nothing.
+    for step in 0..recs.num_ops {
+        cache
+            .get_or_plan_dynamic_resolved(&seq_a, step, 1, "greedy-size", OrderStrategy::Natural)
+            .unwrap();
+    }
+    let after_first = cache.dynamic_misses();
+    for step in 0..recs.num_ops {
+        cache
+            .get_or_plan_dynamic_resolved(&seq_a, step, 1, "greedy-size", OrderStrategy::Natural)
+            .unwrap();
+    }
+    assert_eq!(
+        cache.dynamic_misses(),
+        after_first,
+        "unchanged resolved prefix must be pure cache hits"
+    );
+    // Sequence B at the boundary where its resolved size differs: a miss.
+    cache
+        .get_or_plan_dynamic_resolved(&seq_b, boundary, 1, "greedy-size", OrderStrategy::Natural)
+        .unwrap();
+    assert_eq!(
+        cache.dynamic_misses(),
+        after_first + 1,
+        "a stale resolved prefix must re-plan, never reuse the old sizes"
+    );
+    // Dynamic plans stay in memory: nothing to persist, nothing on disk.
+    let report = cache.persist_dir(&dir).unwrap();
+    assert_eq!(report.written, 0, "dynamic plans must not reach the plan directory");
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0);
+    // Static plans still persist alongside untouched.
+    cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
+    assert_eq!(cache.persist_dir(&dir).unwrap().written, 1);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
