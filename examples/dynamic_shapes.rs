@@ -18,7 +18,7 @@
 use tensorarena::coordinator::Engine;
 use tensorarena::coordinator::ExecutorEngine;
 use tensorarena::planner::dynamic::{DynamicRecord, DynamicRecords, MultiPassPlanner};
-use tensorarena::planner::{OrderStrategy, PlanService};
+use tensorarena::planner::{DynamicMode, PlanRequest, PlanService};
 use tensorarena::records::UsageRecord;
 use tensorarena::rng::SplitMix64;
 
@@ -112,7 +112,10 @@ fn main() {
     for sequence in 0..3 {
         for step in 0..dynamic.num_ops {
             service
-                .plan_dynamic_resolved(&dynamic, step, 1, None, OrderStrategy::Natural)
+                .plan_dynamic(
+                    &dynamic,
+                    &service.request().with_dynamic(DynamicMode::Resolved(step)),
+                )
                 .expect("decode-step plan");
         }
         let st = service.stats();
@@ -134,11 +137,10 @@ fn main() {
     let g = tensorarena::models::blazeface();
     let decode_from = g.num_ops() / 2;
     let service = PlanService::shared();
-    let mut engine = ExecutorEngine::with_dynamic(
+    let mut engine = ExecutorEngine::for_request_dynamic(
         &g,
         std::sync::Arc::clone(&service),
-        "greedy-size",
-        OrderStrategy::Natural,
+        &PlanRequest::new(),
         decode_from,
         42,
     )

@@ -12,11 +12,12 @@
 //! serving-facing version of the paper's evaluation. Results are recorded
 //! in EXPERIMENTS.md §E2E.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tensorarena::coordinator::engine::PjrtEngine;
-use tensorarena::coordinator::{ArenaStats, BatchPolicy, Router};
+use tensorarena::coordinator::{BatchPolicy, Router};
 use tensorarena::models;
-use tensorarena::planner::{offset, OffsetPlanner};
+use tensorarena::planner::{PlanRequest, PlanService};
 use tensorarena::records::UsageRecords;
 use tensorarena::rng::SplitMix64;
 use tensorarena::runtime::{Runtime, VariantSet};
@@ -26,23 +27,19 @@ const IN_ELEMS: usize = 32 * 32 * 3;
 fn main() -> anyhow::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
 
-    // --- Planner story for the served model (L2 twin) ---
+    // --- Planner story for the served model (L2 twin), through the one
+    // shared PlanService every engine replica below also uses ---
+    let service = PlanService::shared();
+    let req = PlanRequest::new().with_batch(8);
     let twin = models::l2_cnn();
     let recs = UsageRecords::from_graph(&twin);
-    let plan = offset::GreedyBySize.plan(&recs);
-    plan.validate(&recs)?;
-    let stats = ArenaStats {
-        planned_bytes: plan.total_size(),
-        naive_bytes: recs.naive_total(),
-        strategy: "Greedy by Size".into(),
-        ..ArenaStats::default()
-    };
+    let plan = service.plan(&recs, &req.with_batch(1)).map_err(anyhow::Error::msg)?;
     println!(
         "serving model: l2_cnn ({} ops); arena {:.1} KiB vs naive {:.1} KiB = {:.2}x reduction",
         twin.num_ops(),
-        stats.planned_bytes as f64 / 1024.0,
-        stats.naive_bytes as f64 / 1024.0,
-        stats.reduction()
+        plan.total_size() as f64 / 1024.0,
+        recs.naive_total() as f64 / 1024.0,
+        recs.naive_total() as f64 / plan.total_size().max(1) as f64,
     );
 
     // --- Sanity: batch variants agree with each other ---
@@ -82,14 +79,18 @@ fn main() -> anyhow::Result<()> {
     for &rate in &[100usize, 300, 600, 1200] {
         let mut router = Router::new();
         let dir_owned = dir.clone();
-        let st = stats.clone();
+        let engine_service = Arc::clone(&service);
+        let engine_recs = recs.clone();
         router.register(
             "cnn",
             move || {
                 let rt = Runtime::cpu().expect("PJRT");
                 let vs = VariantSet::load(&rt, std::path::Path::new(&dir_owned), "model", &[32, 32, 3], 10)
                     .expect("artifacts");
-                Box::new(PjrtEngine::new(vs, st))
+                Box::new(
+                    PjrtEngine::with_request(vs, engine_service, engine_recs, &req)
+                        .expect("twin plan"),
+                )
             },
             BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2), ..BatchPolicy::default() },
         );
@@ -128,6 +129,11 @@ fn main() -> anyhow::Result<()> {
         );
         router.shutdown();
     }
-    println!("\n(see EXPERIMENTS.md §E2E for the recorded run)");
+    let st = service.stats();
+    println!(
+        "\nshared plan cache across every rate's engine replica: {} miss(es), {} hit(s)",
+        st.cache_misses, st.cache_hits
+    );
+    println!("(see EXPERIMENTS.md §E2E for the recorded run)");
     Ok(())
 }

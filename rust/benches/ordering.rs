@@ -50,7 +50,7 @@ fn main() {
             let (ordered, applied) = apply_order(&g, order);
             let recs = UsageRecords::from_graph(&ordered);
             let plan = service
-                .plan_records_ordered(&recs, 1, None, order)
+                .plan(&recs, &service.request().with_order(order))
                 .expect("plan");
             println!(
                 "{:<14} {:>18} {:>12.3} {:>12.3} {:>+11.3}",

@@ -36,7 +36,7 @@ use tensorarena::coordinator::engine::ExecutorEngine;
 use tensorarena::coordinator::{
     render_arena_stats, ArenaStats, BatchPolicy, EchoEngine, Engine, Router,
 };
-use tensorarena::planner::{registry, OrderStrategy, PlanService};
+use tensorarena::planner::{registry, PlanRequest, PlanService};
 use tensorarena::records::UsageRecords;
 use tensorarena::rng::SplitMix64;
 
@@ -132,10 +132,7 @@ fn main() {
         let in_elems = g.tensor(g.inputs[0]).num_elements();
         let recs = UsageRecords::from_graph(&g);
         let naive = recs.naive_total();
-        let planned = service
-            .plan_records(&recs, 1, Some("greedy-size"))
-            .expect("plan")
-            .total;
+        let planned = service.plan(&recs, &service.request()).expect("plan").total;
         println!("\nplan reuse: 3 {model} replicas, bursts at batch 1/2/4, then a replica restart:");
         let mut rng = SplitMix64::new(3);
         let mut input = vec![0f32; in_elems];
@@ -200,10 +197,7 @@ fn main() {
         let g = tensorarena::models::by_name("blazeface").unwrap();
         let in_elems = g.tensor(g.inputs[0]).num_elements();
         let recs = UsageRecords::from_graph(&g);
-        let t1 = service
-            .plan_records(&recs, 1, Some("greedy-size"))
-            .expect("plan")
-            .total;
+        let t1 = service.plan(&recs, &service.request()).expect("plan").total;
         // ~3.5x the batch-1 arena: well below the batch-8 planned peak, so
         // an 8-cap policy must be clamped by the budget.
         let budget = 3 * t1 + t1 / 2;
@@ -278,9 +272,14 @@ fn main() {
                     move || {
                         let g = tensorarena::models::by_name("blazeface").unwrap();
                         Box::new(
-                            ExecutorEngine::with_order(&g, service, "greedy-size", order, 7)
-                                .expect("engine")
-                                .with_max_batch(4),
+                            ExecutorEngine::for_request(
+                                &g,
+                                service,
+                                &PlanRequest::new().with_order(order),
+                                7,
+                            )
+                            .expect("engine")
+                            .with_max_batch(4),
                         )
                     },
                     BatchPolicy {
@@ -310,7 +309,7 @@ fn main() {
             let (og, applied) = apply_order(&g, order);
             let orecs = UsageRecords::from_graph(&og);
             let peak = service
-                .plan_records_ordered(&orecs, 4, Some("greedy-size"), order)
+                .plan(&orecs, &service.request().with_batch(4).with_order(order))
                 .expect("plan")
                 .total;
             let stats = ArenaStats::from_service(
@@ -347,11 +346,10 @@ fn main() {
                 move || {
                     let g = tensorarena::models::by_name("blazeface").unwrap();
                     Box::new(
-                        ExecutorEngine::with_dynamic(
+                        ExecutorEngine::for_request_dynamic(
                             &g,
                             service,
-                            "greedy-size",
-                            OrderStrategy::Natural,
+                            &PlanRequest::new(),
                             decode_from,
                             7,
                         )
@@ -419,7 +417,7 @@ fn main() {
         let cold = PlanService::new();
         let t = std::time::Instant::now();
         for &b in &batches {
-            cold.plan_records(&recs, b, None).expect("plan");
+            cold.plan(&recs, &cold.request().with_batch(b)).expect("plan");
         }
         let cold_time = t.elapsed();
         let persisted = cold.persist_dir(&dir).expect("persist");
@@ -431,9 +429,9 @@ fn main() {
 
         let warm = PlanService::new();
         let t = std::time::Instant::now();
-        let report = warm.warm_start(&dir, &recs).expect("warm start");
+        let report = warm.warm_start(&dir, &recs, &warm.request()).expect("warm start");
         for &b in &batches {
-            warm.plan_records(&recs, b, None).expect("plan");
+            warm.plan(&recs, &warm.request().with_batch(b)).expect("plan");
         }
         let warm_time = t.elapsed();
         println!(
@@ -454,6 +452,9 @@ fn main() {
         use tensorarena::runtime::{Runtime, VariantSet};
         println!("\nPJRT closed-loop storm (256 requests):");
         for max_batch in [1usize, 8] {
+            let engine_service = PlanService::shared();
+            let twin_recs =
+                UsageRecords::from_graph(&tensorarena::models::l2_cnn());
             let mut router = Router::new();
             router.register(
                 "cnn",
@@ -461,7 +462,15 @@ fn main() {
                     let rt = Runtime::cpu().expect("PJRT");
                     let vs = VariantSet::load(&rt, std::path::Path::new("artifacts"), "model", &[32, 32, 3], 10)
                         .expect("artifacts");
-                    Box::new(PjrtEngine::new(vs, ArenaStats::default()))
+                    Box::new(
+                        PjrtEngine::with_request(
+                            vs,
+                            engine_service,
+                            twin_recs,
+                            &PlanRequest::new().with_batch(max_batch),
+                        )
+                        .expect("twin plan"),
+                    )
                 },
                 BatchPolicy { max_batch, max_wait: Duration::from_millis(2), ..BatchPolicy::default() },
             );

@@ -4,7 +4,8 @@ use super::ArenaStats;
 use crate::exec::Executor;
 use crate::graph::Graph;
 use crate::planner::{
-    apply_order, registry, AppliedOrder, DynamicRecords, OrderStrategy, PlanService,
+    apply_order, AppliedOrder, DynamicMode, DynamicRecords, OrderStrategy, PlanRequest,
+    PlanService,
 };
 use crate::records::UsageRecords;
 #[cfg(feature = "pjrt")]
@@ -49,25 +50,95 @@ pub trait Engine {
 }
 
 /// PJRT-backed engine over AOT batch-size variants (the production path).
+///
+/// Since the `PlanRequest` redesign this engine shares the same
+/// [`PlanService`] as [`ExecutorEngine`]: construct it with
+/// [`PjrtEngine::with_request`] and its working-set accounting
+/// ([`Engine::planned_peak`] / [`Engine::max_servable_batch`] /
+/// [`Engine::arena_stats`]) resolves through the shared plan cache —
+/// live counters, budget admission, and warm starts all behave exactly
+/// like the pure-Rust path — instead of through a frozen [`ArenaStats`]
+/// snapshot taken at load time.
 #[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     variants: VariantSet,
     in_elems: usize,
     out_elems: usize,
+    /// The shared planning handle + typed request + batch-1 records of the
+    /// planner twin graph (the request-routed path); `None` on the
+    /// deprecated frozen-snapshot path.
+    planned: Option<(Arc<PlanService>, PlanRequest, UsageRecords)>,
+    /// Planned/naive footprint at the request's batch, resolved **once**
+    /// at construction: stats renders must not probe the shared cache (a
+    /// metrics poller would inflate the very hit counters the stats
+    /// report).
+    planned_bytes: usize,
+    naive_bytes: usize,
+    /// Frozen snapshot for the deprecated [`PjrtEngine::new`] path (and
+    /// the zeroed fallback when `planned` is set but a probe fails).
     stats: ArenaStats,
+    /// Reusable padding buffer for partial batches, shared across every
+    /// batch variant: PJRT donates input buffers on execute, so keeping
+    /// one donation-eligible scratch sized for the largest variant avoids
+    /// a fresh allocation per padded batch.
+    scratch: Vec<f32>,
 }
 
 #[cfg(feature = "pjrt")]
 impl PjrtEngine {
-    /// Wrap a loaded [`VariantSet`]; `stats` comes from planning the L2
-    /// graph (see `examples/serve_e2e.rs`).
+    /// Wrap a loaded [`VariantSet`] and route all working-set accounting
+    /// through the shared `service`: `records` are the batch-1 usage
+    /// records of the planner twin of the compiled model (the graph whose
+    /// arena the planner manages — e.g. `models::l2_cnn()` for the AOT CNN
+    /// artifacts), already reordered under `req.order()` if non-natural,
+    /// and `req` is the typed plan identity every peak/budget probe is
+    /// keyed by. The request's batch is pre-planned so the serving arena
+    /// number is resident before the first batch arrives.
+    pub fn with_request(
+        variants: VariantSet,
+        service: Arc<PlanService>,
+        records: UsageRecords,
+        req: &PlanRequest,
+    ) -> Result<Self> {
+        let in_elems = variants.variants[0].in_elems;
+        let out_elems = variants.variants[0].out_elems;
+        let req = req.with_dynamic(DynamicMode::Static);
+        // Pre-plan the request's own batch once: the construction-time
+        // planner invocation every later lookup amortizes, and the stats
+        // footprint every render reuses. A failure here must fail
+        // construction — degrading to a zero footprint would silently
+        // disable budget admission.
+        let planned_bytes = service.plan(&records, &req)?.total;
+        let naive_bytes = records.naive_total().saturating_mul(req.batch());
+        Ok(PjrtEngine {
+            in_elems,
+            out_elems,
+            variants,
+            planned: Some((service, req, records)),
+            planned_bytes,
+            naive_bytes,
+            stats: ArenaStats::default(),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Wrap a loaded [`VariantSet`] with a frozen accounting snapshot.
+    #[deprecated(
+        since = "0.3.0",
+        note = "construct with with_request(service, records, req) so accounting goes \
+                through the shared PlanService"
+    )]
     pub fn new(variants: VariantSet, stats: ArenaStats) -> Self {
         let v0 = &variants.variants[0];
         PjrtEngine {
             in_elems: v0.in_elems,
             out_elems: v0.out_elems,
             variants,
+            planned: None,
+            planned_bytes: 0,
+            naive_bytes: 0,
             stats,
+            scratch: Vec::new(),
         }
     }
 }
@@ -89,16 +160,56 @@ impl Engine for PjrtEngine {
         if var.batch == n {
             out = var.run(input)?;
         } else {
-            // Pad the partial batch up to the variant's batch.
-            let mut padded = vec![0f32; var.batch * self.in_elems];
-            padded[..n * self.in_elems].copy_from_slice(input);
-            out = var.run(&padded)?;
+            // Pad the partial batch up to the variant's batch, reusing one
+            // donation-eligible scratch across calls and batch variants.
+            let need = var.batch * self.in_elems;
+            if self.scratch.len() < need {
+                self.scratch.resize(need, 0.0);
+            }
+            self.scratch[..n * self.in_elems].copy_from_slice(input);
+            for v in &mut self.scratch[n * self.in_elems..need] {
+                *v = 0.0;
+            }
+            out = var.run(&self.scratch[..need])?;
             out.truncate(n * self.out_elems);
         }
         Ok(out)
     }
     fn arena_stats(&self) -> ArenaStats {
-        self.stats.clone()
+        match &self.planned {
+            Some((service, req, _)) => {
+                // The construction-time footprint plus *live* service
+                // counters, exactly like ExecutorEngine reading its
+                // resident executor state — rendering stats never probes
+                // the cache (that would inflate the hit counters being
+                // reported).
+                ArenaStats::from_service(
+                    self.planned_bytes,
+                    self.naive_bytes,
+                    req.strategy(),
+                    service.stats(),
+                )
+            }
+            None => self.stats.clone(),
+        }
+    }
+    fn planned_peak(&self, batch: usize) -> Option<usize> {
+        let (service, req, records) = self.planned.as_ref()?;
+        if batch == 0 {
+            return Some(0);
+        }
+        let naive = records.naive_total().max(1);
+        if batch > usize::MAX / naive {
+            return None;
+        }
+        service
+            .plan(records, &req.with_batch(batch))
+            .ok()
+            .map(|p| p.total)
+    }
+    fn max_servable_batch(&self, budget_bytes: usize) -> Option<usize> {
+        let (service, req, records) = self.planned.as_ref()?;
+        service.max_servable_batch(records, req, budget_bytes).ok()
     }
 }
 
@@ -116,14 +227,14 @@ pub struct ExecutorEngine {
     exec: Executor,
     in_elems: usize,
     out_elems: usize,
-    strategy: &'static str,
+    /// The typed plan identity (strategy + order, static mode) every
+    /// lookup this engine performs is keyed by.
+    req: PlanRequest,
     service: Arc<PlanService>,
     max_batch: usize,
     /// Batch-1 usage records of the *served* (order-applied) graph, the
     /// input to every budget query.
     records: UsageRecords,
-    /// Order-keyed cache dimension every plan lookup goes through.
-    order: OrderStrategy,
     /// Receipt of the applied order: canonical key + breadth movement,
     /// reported in [`ArenaStats`].
     applied: AppliedOrder,
@@ -137,34 +248,41 @@ pub struct ExecutorEngine {
 impl ExecutorEngine {
     /// Plan `graph` under `strategy` (any registry key or display name)
     /// through `service` and wrap the executor, serving the natural
-    /// execution order. Uses the first graph output as the response
-    /// payload.
+    /// execution order — shorthand for [`Self::for_request`] with a
+    /// default request at that strategy. Uses the first graph output as
+    /// the response payload.
     pub fn new(
         graph: &Graph,
         service: Arc<PlanService>,
         strategy: &str,
         seed: u64,
     ) -> Result<Self> {
-        Self::with_order(graph, service, strategy, OrderStrategy::Natural, seed)
+        let req = PlanRequest::new().with_strategy(strategy)?;
+        Self::for_request(graph, service, &req, seed)
     }
 
-    /// [`Self::new`] with an explicit execution-order strategy: the graph
-    /// is reordered under `order` *before* record extraction and planning,
-    /// so the executor runs ops in that order and every plan — including
-    /// the budget-admission envelope resolved at
-    /// [`super::ModelServer::spawn`] — comes from the order-keyed cache
-    /// slot.
-    pub fn with_order(
+    /// Build the engine a [`PlanRequest`] describes: the graph is
+    /// reordered under `req.order()` *before* record extraction and
+    /// planning, so the executor runs ops in that order and every plan —
+    /// including the budget-admission envelope resolved at
+    /// [`super::ModelServer::spawn`] — comes from the request-keyed cache
+    /// slot. The request must be static; for §7 wave-aware serving pass a
+    /// decode-tail start to [`Self::for_request_dynamic`].
+    pub fn for_request(
         graph: &Graph,
         service: Arc<PlanService>,
-        strategy: &str,
-        order: OrderStrategy,
+        req: &PlanRequest,
         seed: u64,
     ) -> Result<Self> {
-        Self::construct(graph, service, strategy, order, None, seed)
+        if !req.dynamic().is_static() {
+            anyhow::bail!(
+                "dynamic request '{req}' needs a decode profile; use for_request_dynamic"
+            );
+        }
+        Self::construct(graph, service, req, None, seed)
     }
 
-    /// [`Self::with_order`] in the §7 **wave-aware** mode: the served
+    /// [`Self::for_request`] in the §7 **wave-aware** mode: the served
     /// (order-applied) graph's records get the decode-tail dynamic profile
     /// starting at `decode_from` (see [`DynamicRecords::decode_tail`]), the
     /// executor sizes its pooled arena at the worst-wave multi-pass peak
@@ -173,7 +291,34 @@ impl ExecutorEngine {
     /// [`Engine::max_servable_batch`]) resolves under that worst-wave peak.
     /// Repeat inferences over the same resolved prefixes perform zero
     /// planner invocations — the decode-step amortization MAFAT-style
-    /// serving needs.
+    /// serving needs. The request's own [`DynamicMode`] is immaterial: the
+    /// engine derives each lookup's resolution state itself.
+    pub fn for_request_dynamic(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        req: &PlanRequest,
+        decode_from: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        Self::construct(graph, service, req, Some(decode_from), seed)
+    }
+
+    /// [`Self::for_request`] with untyped `(strategy, order)` arguments.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call for_request")]
+    pub fn with_order(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        strategy: &str,
+        order: OrderStrategy,
+        seed: u64,
+    ) -> Result<Self> {
+        let req = PlanRequest::new().with_strategy(strategy)?.with_order(order);
+        Self::for_request(graph, service, &req, seed)
+    }
+
+    /// [`Self::for_request_dynamic`] with untyped `(strategy, order)`
+    /// arguments.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call for_request_dynamic")]
     pub fn with_dynamic(
         graph: &Graph,
         service: Arc<PlanService>,
@@ -182,19 +327,18 @@ impl ExecutorEngine {
         decode_from: usize,
         seed: u64,
     ) -> Result<Self> {
-        Self::construct(graph, service, strategy, order, Some(decode_from), seed)
+        let req = PlanRequest::new().with_strategy(strategy)?.with_order(order);
+        Self::for_request_dynamic(graph, service, &req, decode_from, seed)
     }
 
     fn construct(
         graph: &Graph,
         service: Arc<PlanService>,
-        strategy: &str,
-        order: OrderStrategy,
+        req: &PlanRequest,
         decode_from: Option<usize>,
         seed: u64,
     ) -> Result<Self> {
-        let key = registry::offset_key(strategy)
-            .ok_or_else(|| anyhow::anyhow!("unknown offset strategy '{strategy}'"))?;
+        let req = req.with_dynamic(DynamicMode::Static);
         if graph.inputs.len() != 1 || graph.outputs.is_empty() {
             anyhow::bail!(
                 "ExecutorEngine serves single-input graphs with at least one output; \
@@ -204,25 +348,13 @@ impl ExecutorEngine {
                 graph.outputs.len()
             );
         }
-        let (ordered, applied) = apply_order(graph, order);
+        let (ordered, applied) = apply_order(graph, req.order());
         let dynamic = decode_from.map(|from| {
             DynamicRecords::decode_tail(&UsageRecords::from_graph(&ordered), from)
         });
-        let exec = match &dynamic {
-            Some(d) => Executor::with_service_dynamic(
-                &ordered,
-                Arc::clone(&service),
-                key,
-                order,
-                d.clone(),
-                seed,
-            )
-            .map_err(anyhow::Error::msg)?,
-            None => {
-                Executor::with_service_ordered(&ordered, Arc::clone(&service), key, order, seed)
-                    .map_err(anyhow::Error::msg)?
-            }
-        };
+        let exec =
+            Executor::with_request(&ordered, Arc::clone(&service), &req, dynamic.clone(), seed)
+                .map_err(anyhow::Error::msg)?;
         let in_elems = ordered.tensor(ordered.inputs[0]).num_elements();
         let out_elems = ordered.tensor(ordered.outputs[0]).num_elements();
         let records = exec.base_records().clone();
@@ -230,11 +362,10 @@ impl ExecutorEngine {
             exec,
             in_elems,
             out_elems,
-            strategy: key,
+            req,
             service,
             max_batch: DEFAULT_EXECUTOR_MAX_BATCH,
             records,
-            order,
             applied,
             dynamic,
         })
@@ -265,7 +396,7 @@ impl Engine for ExecutorEngine {
         let mut stats = ArenaStats::from_service(
             self.exec.arena_bytes(),
             self.exec.naive_bytes(),
-            self.strategy,
+            self.req.strategy(),
             self.service.stats(),
         );
         // Only wave-aware configurations report the dynamic segment, and
@@ -275,7 +406,7 @@ impl Engine for ExecutorEngine {
         if self.dynamic.is_some() {
             stats = stats.with_waves(self.exec.wave_passes(), self.exec.wave_resolutions());
         }
-        if self.order.is_natural() {
+        if self.req.order().is_natural() {
             return stats;
         }
         stats.with_order(
@@ -300,12 +431,15 @@ impl Engine for ExecutorEngine {
             // mid-inference waves only ever grow the arena.
             Some(d) => self
                 .service
-                .plan_dynamic(d, batch, Some(self.strategy), self.order)
+                .plan_dynamic(
+                    d,
+                    &self.req.with_batch(batch).with_dynamic(DynamicMode::FullyResolved),
+                )
                 .ok()
                 .map(|p| p.peak),
             None => self
                 .service
-                .plan_records_ordered(&self.records, batch, Some(self.strategy), self.order)
+                .plan(&self.records, &self.req.with_batch(batch))
                 .ok()
                 .map(|p| p.total),
         }
@@ -314,16 +448,11 @@ impl Engine for ExecutorEngine {
         match &self.dynamic {
             Some(d) => self
                 .service
-                .max_servable_batch_dynamic(d, budget_bytes, Some(self.strategy), self.order)
+                .max_servable_batch_dynamic(d, &self.req, budget_bytes)
                 .ok(),
             None => self
                 .service
-                .max_servable_batch_ordered(
-                    &self.records,
-                    budget_bytes,
-                    Some(self.strategy),
-                    self.order,
-                )
+                .max_servable_batch(&self.records, &self.req, budget_bytes)
                 .ok(),
         }
     }
@@ -433,9 +562,9 @@ mod tests {
         let g = crate::models::blazeface();
         let order = OrderStrategy::Annealed { seed: 5, budget: 20 };
         let mut nat = ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 3).unwrap();
+        let req = PlanRequest::new().with_order(order);
         let mut ann =
-            ExecutorEngine::with_order(&g, PlanService::shared(), "greedy-size", order, 3)
-                .unwrap();
+            ExecutorEngine::for_request(&g, PlanService::shared(), &req, 3).unwrap();
         assert_eq!((nat.in_elems(), nat.out_elems()), (ann.in_elems(), ann.out_elems()));
         let x = vec![0.1f32; 2 * nat.in_elems()];
         assert_eq!(nat.run_batch(&x, 2).unwrap(), ann.run_batch(&x, 2).unwrap());
@@ -458,11 +587,10 @@ mod tests {
         let decode_from = g.num_ops() / 2;
         let mut stat = ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 3).unwrap();
         let svc = PlanService::shared();
-        let mut dynr = ExecutorEngine::with_dynamic(
+        let mut dynr = ExecutorEngine::for_request_dynamic(
             &g,
             Arc::clone(&svc),
-            "greedy-size",
-            OrderStrategy::Natural,
+            &PlanRequest::new(),
             decode_from,
             3,
         )
@@ -494,11 +622,10 @@ mod tests {
         let g = crate::models::blazeface();
         let decode_from = g.num_ops() / 2;
         let svc = PlanService::shared();
-        let e = ExecutorEngine::with_dynamic(
+        let e = ExecutorEngine::for_request_dynamic(
             &g,
             Arc::clone(&svc),
-            "greedy-size",
-            OrderStrategy::Natural,
+            &PlanRequest::new(),
             decode_from,
             3,
         )

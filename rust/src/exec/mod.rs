@@ -19,8 +19,8 @@ pub mod ops;
 use crate::arena::{Arena, ArenaPool};
 use crate::graph::{Graph, OpKind, PoolKind, TensorKind};
 use crate::planner::{
-    registry, DynamicRecords, MultiPassPlan, OffsetPlan, OffsetPlanner, OrderStrategy, PlanError,
-    PlanService,
+    registry, DynamicMode, DynamicRecords, MultiPassPlan, OffsetPlan, OffsetPlanner,
+    OrderStrategy, PlanError, PlanRequest, PlanService,
 };
 use crate::records::UsageRecords;
 use crate::rng::SplitMix64;
@@ -106,13 +106,11 @@ pub struct Executor {
     poison_dead: bool,
     /// Batch-1 records, kept for batch-scaled re-planning.
     base_records: UsageRecords,
-    /// Registry name of the planning strategy (None for explicit plans —
-    /// such executors cannot change batch size).
-    strategy: Option<String>,
-    /// Execution-order strategy the graph was reordered under before this
-    /// executor was built — the order-keyed cache slot every batch re-plan
-    /// goes through.
-    order: OrderStrategy,
+    /// The typed plan identity every re-plan goes through: strategy and
+    /// execution order as one [`PlanRequest`] (its batch tracks the
+    /// resident batch; its dynamic mode is set per lookup). `None` for
+    /// explicit plans — such executors cannot change batch size.
+    request: Option<PlanRequest>,
     /// Shared plan cache, when constructed through one.
     service: Option<Arc<PlanService>>,
     /// Arena buffer pool (the service's, or a private one).
@@ -128,44 +126,103 @@ pub struct Executor {
 
 impl Executor {
     /// Plan `graph` with `planner`, validate, allocate the arena, and
-    /// synthesize deterministic weights from `seed`.
+    /// synthesize deterministic weights from `seed`. If the planner is a
+    /// registry strategy (by display name), batch re-plans stay possible;
+    /// a custom planner pins the executor to batch 1 like an explicit
+    /// plan.
     pub fn new(graph: &Graph, planner: &dyn OffsetPlanner, seed: u64) -> Result<Self, String> {
         let records = UsageRecords::from_graph(graph);
         let plan = planner.plan(&records);
         plan.validate(&records).map_err(|e| e.to_string())?;
+        let request =
+            registry::offset_key(planner.name()).map(|k| PlanRequest::new().with_strategy_key(k));
         Self::build(
             graph,
             records,
             &plan,
             seed,
-            Some(planner.name().to_string()),
-            OrderStrategy::Natural,
+            request,
             None,
             Arc::new(ArenaPool::new()),
+            1,
         )
         .map_err(|e| e.to_string())
     }
 
-    /// Plan `graph` through a shared [`PlanService`]: the plan comes from
-    /// the service's cache (one planner invocation per `(model, batch,
-    /// strategy)` across every executor sharing the handle) and the arena
-    /// buffer from its pool. `strategy` is any registry key or display
-    /// name.
+    /// The one typed construction path: plan `graph` through a shared
+    /// [`PlanService`] as the [`PlanRequest`] describes — the plan comes
+    /// from the service's cache (one planner invocation per `(model,
+    /// request)` across every executor sharing the handle) and the arena
+    /// buffer from its pool. `graph` must already be reordered under
+    /// `req.order()` (see [`crate::planner::apply_order`] — the
+    /// coordinator's engines do this before construction), so this
+    /// executor's steps run in that order and every plan lookup —
+    /// construction, batch growth, budget probes — lands in the
+    /// request-keyed cache slot. The arena is pre-sized for `req.batch()`.
+    ///
+    /// With a `dynamic` profile the executor serves **wave-aware** (§7):
+    /// the arena is sized at the worst-wave peak of the complete
+    /// multi-pass plan (so mid-inference growth is already hosted), and at
+    /// every wave boundary the executor re-resolves the newly-known
+    /// records' offsets through the service's resolved-prefix cache slot —
+    /// a planner invocation on the first inference, a cache hit on every
+    /// repeat (the decode-step amortization of §7). The request's own
+    /// [`DynamicMode`] is normalized away: the executor derives the
+    /// per-boundary `Resolved` modes itself. Without a profile the request
+    /// must be static.
+    pub fn with_request(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        req: &PlanRequest,
+        dynamic: Option<DynamicRecords>,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let base = req.with_dynamic(DynamicMode::Static);
+        match dynamic {
+            Some(profile) => Self::build_dynamic(graph, service, base, profile, seed),
+            None => {
+                if !req.dynamic().is_static() {
+                    return Err(format!(
+                        "dynamic request '{req}' needs a DynamicRecords profile"
+                    ));
+                }
+                // Plan directly at the requested batch — exactly one
+                // planner invocation and one arena acquisition at
+                // construction, with no never-served batch-1 plan left
+                // resident (or persisted) when the request asks for more.
+                let records = UsageRecords::from_graph(graph);
+                let plan = service.plan(&records, &base).map_err(|e| e.to_string())?;
+                let pool = Arc::clone(service.pool());
+                Self::build(
+                    graph,
+                    records,
+                    &plan,
+                    seed,
+                    Some(base),
+                    Some(service),
+                    pool,
+                    base.batch(),
+                )
+                .map_err(|e| e.to_string())
+            }
+        }
+    }
+
+    /// [`Self::with_request`] without an order or profile: plan `graph`
+    /// through a shared [`PlanService`] under `strategy` (any registry key
+    /// or display name), natural order, batch 1.
     pub fn with_service(
         graph: &Graph,
         service: Arc<PlanService>,
         strategy: &str,
         seed: u64,
     ) -> Result<Self, String> {
-        Self::with_service_ordered(graph, service, strategy, OrderStrategy::Natural, seed)
+        let req = PlanRequest::new().with_strategy(strategy).map_err(|e| e.to_string())?;
+        Self::with_request(graph, service, &req, None, seed)
     }
 
-    /// [`Self::with_service`] for an order-keyed serving configuration:
-    /// `graph` must already be reordered under `order` (see
-    /// [`crate::planner::apply_order`] — the coordinator's engines do this
-    /// before construction), so this executor's steps run in that order and
-    /// every plan lookup — construction, batch growth, budget probes —
-    /// lands in the `(model, batch, strategy, order)` cache slot.
+    /// [`Self::with_request`] with untyped `(strategy, order)` arguments.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call with_request")]
     pub fn with_service_ordered(
         graph: &Graph,
         service: Arc<PlanService>,
@@ -173,24 +230,11 @@ impl Executor {
         order: OrderStrategy,
         seed: u64,
     ) -> Result<Self, String> {
-        let key = registry::offset_key(strategy)
-            .ok_or_else(|| format!("unknown offset strategy '{strategy}'"))?;
-        let records = UsageRecords::from_graph(graph);
-        let plan = service
-            .plan_records_ordered(&records, 1, Some(key), order)
-            .map_err(|e| e.to_string())?;
-        let pool = Arc::clone(service.pool());
-        Self::build(
-            graph,
-            records,
-            &plan,
-            seed,
-            Some(key.to_string()),
-            order,
-            Some(service),
-            pool,
-        )
-        .map_err(|e| e.to_string())
+        let req = PlanRequest::new()
+            .with_strategy(strategy)
+            .map_err(|e| e.to_string())?
+            .with_order(order);
+        Self::with_request(graph, service, &req, None, seed)
     }
 
     /// Build with an explicit (already validated) plan. Such executors are
@@ -208,25 +252,28 @@ impl Executor {
             plan,
             seed,
             None,
-            OrderStrategy::Natural,
             None,
             Arc::new(ArenaPool::new()),
+            1,
         )
     }
 
+    /// `plan` must be the plan of `base_records.scaled(batch)`; the arena
+    /// is allocated at that batch, striped into `batch` lanes.
     #[allow(clippy::too_many_arguments)]
     fn build(
         graph: &Graph,
         base_records: UsageRecords,
         plan: &OffsetPlan,
         seed: u64,
-        strategy: Option<String>,
-        order: OrderStrategy,
+        request: Option<PlanRequest>,
         service: Option<Arc<PlanService>>,
         pool: Arc<ArenaPool>,
+        batch: usize,
     ) -> Result<Self, PlanError> {
         let records = &base_records;
-        plan.validate(records)?;
+        let scaled = records.scaled(batch);
+        plan.validate(&scaled)?;
         // tensor id -> record id
         let mut rec_of = vec![None; graph.tensors.len()];
         for r in &records.records {
@@ -359,8 +406,8 @@ impl Executor {
             })
             .collect();
 
-        let arena = Arena::from_pool(plan, records, 1, &pool);
-        let naive_total = records.naive_total();
+        let arena = Arena::from_pool(plan, &scaled, batch, &pool);
+        let naive_total = scaled.naive_total();
         Ok(Executor {
             steps,
             arena,
@@ -372,23 +419,17 @@ impl Executor {
             naive_total,
             poison_dead: false,
             base_records,
-            strategy,
-            order,
+            request,
             service,
             pool,
-            batch: 1,
+            batch,
             waves: None,
         })
     }
 
-    /// [`Self::with_service_ordered`] in the §7 **wave-aware** mode:
-    /// `dynamic` assigns each of the graph's records a `known_at` op (see
-    /// [`DynamicRecords`]), the arena is sized at the worst-wave peak of
-    /// the complete multi-pass plan (so mid-inference growth is already
-    /// hosted), and at every wave boundary the executor re-resolves the
-    /// newly-known records' offsets through the service's resolved-prefix
-    /// cache slot — a planner invocation on the first inference, a cache
-    /// hit on every repeat (the decode-step amortization of §7).
+    /// [`Self::with_request`] with untyped `(strategy, order)` arguments
+    /// and a dynamic profile.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call with_request")]
     pub fn with_service_dynamic(
         graph: &Graph,
         service: Arc<PlanService>,
@@ -397,8 +438,25 @@ impl Executor {
         dynamic: DynamicRecords,
         seed: u64,
     ) -> Result<Self, String> {
-        let key = registry::offset_key(strategy)
-            .ok_or_else(|| format!("unknown offset strategy '{strategy}'"))?;
+        let req = PlanRequest::new()
+            .with_strategy(strategy)
+            .map_err(|e| e.to_string())?
+            .with_order(order);
+        Self::with_request(graph, service, &req, Some(dynamic), seed)
+    }
+
+    /// The §7 wave-aware construction behind [`Self::with_request`]:
+    /// `dynamic` assigns each of the graph's records a `known_at` op (see
+    /// [`DynamicRecords`]); the request must already be normalized to
+    /// static mode (the caller strips the dynamic dimension — this path
+    /// derives its own resolution states).
+    fn build_dynamic(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        req: PlanRequest,
+        dynamic: DynamicRecords,
+        seed: u64,
+    ) -> Result<Self, String> {
         let records = UsageRecords::from_graph(graph);
         // The dynamic profile must describe exactly this graph's records —
         // the cache keys on it, so a drifted profile would be a silent
@@ -430,8 +488,11 @@ impl Executor {
                 ));
             }
         }
+        // Plan the complete multi-pass plan directly at the requested
+        // batch: one planner invocation, one arena sized at that batch's
+        // worst-wave peak, no never-served batch-1 plan.
         let full = service
-            .plan_dynamic(&dynamic, 1, Some(key), order)
+            .plan_dynamic(&dynamic, &req.with_dynamic(DynamicMode::FullyResolved))
             .map_err(|e| e.to_string())?;
         let plan = full
             .offset_plan()
@@ -442,10 +503,10 @@ impl Executor {
             records,
             &plan,
             seed,
-            Some(key.to_string()),
-            order,
+            Some(req),
             Some(service),
             pool,
+            req.batch(),
         )
         .map_err(|e| e.to_string())?;
         ex.waves = Some(WaveState {
@@ -455,8 +516,9 @@ impl Executor {
             full,
             resolutions: 0,
         });
-        // Pre-resolve the wave envelope for batch 1, so the very first
-        // inference's boundaries already have resident prefix plans.
+        // Pre-resolve the wave envelope for the resident batch, so the
+        // very first inference's boundaries already have resident prefix
+        // plans.
         ex.prewarm_waves()?;
         Ok(ex)
     }
@@ -469,17 +531,13 @@ impl Executor {
     fn prewarm_waves(&mut self) -> Result<(), String> {
         let Some(ws) = self.waves.as_mut() else { return Ok(()) };
         let Some(svc) = self.service.as_ref() else { return Ok(()) };
+        let Some(req) = self.request else { return Ok(()) };
+        let req = req.with_batch(self.batch);
         let mut plans = Vec::with_capacity(ws.boundaries.len());
         for &b in &ws.boundaries {
             plans.push(
-                svc.plan_dynamic_resolved(
-                    &ws.dynamic,
-                    b,
-                    self.batch,
-                    self.strategy.as_deref(),
-                    self.order,
-                )
-                .map_err(|e| e.to_string())?,
+                svc.plan_dynamic(&ws.dynamic, &req.with_dynamic(DynamicMode::Resolved(b)))
+                    .map_err(|e| e.to_string())?,
             );
         }
         ws.prefix_plans = plans;
@@ -530,15 +588,19 @@ impl Executor {
             return Ok(());
         }
         let scaled = self.base_records.scaled(batch);
-        let plan: Arc<OffsetPlan> = match (&self.service, &self.strategy) {
-            (Some(svc), _) => {
+        let plan: Arc<OffsetPlan> = match (&self.service, &self.request) {
+            (Some(svc), Some(req)) => {
+                let req = req.with_batch(batch);
                 if let Some(ws) = &mut self.waves {
                     // Wave-aware mode: the new batch's arena is sized at
                     // the (batch-scaled) worst-wave peak, and the resident
                     // full plan swaps with it so wave re-resolutions keep
                     // checking against the right placements.
                     let mp = svc
-                        .plan_dynamic(&ws.dynamic, batch, self.strategy.as_deref(), self.order)
+                        .plan_dynamic(
+                            &ws.dynamic,
+                            &req.with_dynamic(DynamicMode::FullyResolved),
+                        )
                         .map_err(|e| e.to_string())?;
                     let plan = Arc::new(
                         mp.offset_plan()
@@ -547,23 +609,19 @@ impl Executor {
                     ws.full = mp;
                     plan
                 } else {
-                    svc.plan_records_ordered(
-                        &self.base_records,
-                        batch,
-                        self.strategy.as_deref(),
-                        self.order,
-                    )
-                    .map_err(|e| e.to_string())?
+                    svc.plan(&self.base_records, &req).map_err(|e| e.to_string())?
                 }
             }
-            (None, Some(name)) => {
-                let planner = registry::offset_strategy(name)
-                    .ok_or_else(|| format!("unknown offset strategy '{name}'"))?;
+            (None, Some(req)) => {
+                // Typed key: the registry lookup cannot fail for a
+                // canonical strategy key.
+                let planner =
+                    registry::offset_strategy(req.strategy()).expect("canonical key resolves");
                 let p = planner.plan(&scaled);
                 p.validate(&scaled).map_err(|e| e.to_string())?;
                 Arc::new(p)
             }
-            (None, None) => {
+            (Some(_), None) | (None, None) => {
                 return Err(
                     "executor was built with an explicit plan; it cannot re-plan for a new batch"
                         .into(),
@@ -578,6 +636,8 @@ impl Executor {
         self.plan_total = plan.total;
         self.naive_total = scaled.naive_total();
         self.batch = batch;
+        // Keep the stored identity in step with the resident batch.
+        self.request = self.request.map(|r| r.with_batch(batch));
         // Wave-aware mode: pre-resolve the new batch's wave envelope so
         // the post-swap hot path stays planner-free.
         self.prewarm_waves()?;
@@ -972,12 +1032,11 @@ mod tests {
         let dynamic = DynamicRecords::decode_tail(&records, records.num_ops / 2);
         assert!(dynamic.num_dynamic() > 0, "the tail must actually be dynamic");
         let svc = PlanService::shared();
-        let mut dynamic_ex = Executor::with_service_dynamic(
+        let mut dynamic_ex = Executor::with_request(
             &g,
             Arc::clone(&svc),
-            "greedy-size",
-            OrderStrategy::Natural,
-            dynamic.clone(),
+            &PlanRequest::new(),
+            Some(dynamic.clone()),
             7,
         )
         .unwrap();
@@ -992,7 +1051,10 @@ mod tests {
         );
         // The arena hosts the worst-wave peak.
         let mp = svc
-            .plan_dynamic(&dynamic, 1, Some("greedy-size"), OrderStrategy::Natural)
+            .plan_dynamic(
+                &dynamic,
+                &PlanRequest::new().with_dynamic(DynamicMode::FullyResolved),
+            )
             .unwrap();
         assert_eq!(dynamic_ex.arena_bytes(), mp.peak);
     }
@@ -1004,12 +1066,11 @@ mod tests {
         let dynamic = DynamicRecords::decode_tail(&records, records.num_ops / 2);
         let boundaries = dynamic.boundaries().len() as u64;
         let svc = PlanService::shared();
-        let mut ex = Executor::with_service_dynamic(
+        let mut ex = Executor::with_request(
             &g,
             Arc::clone(&svc),
-            "greedy-size",
-            OrderStrategy::Natural,
-            dynamic,
+            &PlanRequest::new(),
+            Some(dynamic),
             7,
         )
         .unwrap();
@@ -1040,29 +1101,16 @@ mod tests {
         let svc = PlanService::shared();
         // Wrong record count.
         let short = DynamicRecords::new(Vec::new(), records.num_ops);
-        assert!(Executor::with_service_dynamic(
-            &g,
-            Arc::clone(&svc),
-            "greedy-size",
-            OrderStrategy::Natural,
-            short,
-            7
-        )
-        .is_err());
+        assert!(
+            Executor::with_request(&g, Arc::clone(&svc), &PlanRequest::new(), Some(short), 7)
+                .is_err()
+        );
         // A record resolving at (or after) its producer cannot be served.
         let mut bad = DynamicRecords::decode_tail(&records, 1);
         if let Some(d) = bad.records.iter_mut().find(|d| d.record.first_op > 0) {
             d.known_at = d.record.first_op;
         }
-        assert!(Executor::with_service_dynamic(
-            &g,
-            svc,
-            "greedy-size",
-            OrderStrategy::Natural,
-            bad,
-            7
-        )
-        .is_err());
+        assert!(Executor::with_request(&g, svc, &PlanRequest::new(), Some(bad), 7).is_err());
     }
 
     #[test]

@@ -36,9 +36,11 @@
 //! ```
 //!
 //! For serving, go through the [`planner::PlanService`] instead of a
-//! planner directly: plans are cached per `(model, batch, strategy)`,
-//! arena buffers are recycled through a pool, and strategies are addressed
-//! by their [`planner::registry`] names:
+//! planner directly: every plan is identified by one typed
+//! [`planner::PlanRequest`] — strategy, execution order, batch, and §7
+//! dynamic resolution state as a single builder-style value — which is
+//! simultaneously the cache key, the `.plan` file-name grammar, and the
+//! construction argument of every engine:
 //!
 //! ```no_run
 //! use tensorarena::models;
@@ -47,11 +49,12 @@
 //!
 //! let service = PlanService::shared();
 //! let records = UsageRecords::from_graph(&models::mobilenet_v1());
+//! let req = service.request().with_batch(8); // default strategy, natural order
 //! // Plan batch 8 once; every executor sharing the handle reuses it.
-//! let plan = service.plan_records(&records, 8, None).unwrap();
+//! let plan = service.plan(&records, &req).unwrap();
 //! println!("batch-8 arena: {} bytes", plan.total_size());
 //! // Largest batch whose *planned* footprint fits a 64 MiB budget.
-//! let max = service.max_servable_batch(&records, 64 << 20, None).unwrap();
+//! let max = service.max_servable_batch(&records, &req, 64 << 20).unwrap();
 //! println!("max servable batch in 64 MiB: {max}");
 //! println!("{:?}", service.stats());
 //! ```
@@ -69,10 +72,11 @@
 //! Dynamically-sized tensors (§7) serve through the same cache: a
 //! [`planner::DynamicRecords`] profile marks which sizes resolve
 //! mid-inference, the §7 [`planner::MultiPassPlanner`] plans them in
-//! frozen waves, and decode-step re-plans are keyed by the fingerprint of
-//! the *resolved-size prefix* — repeats cost zero planner invocations
-//! ([`planner::PlanService::plan_dynamic_resolved`]), and budget admission
-//! resolves under the worst-wave peak.
+//! frozen waves, and decode-step re-plans — requests carrying
+//! [`planner::DynamicMode::Resolved`] — are keyed by the fingerprint of
+//! the *resolved-size prefix*, so repeats cost zero planner invocations
+//! ([`planner::PlanService::plan_dynamic`]) and budget admission resolves
+//! under the worst-wave peak.
 //!
 //! The full architecture — layer dataflow, the plan-cache key, the
 //! arena-pool lifecycle, and the normative `.plan` v2 directory format —

@@ -57,8 +57,8 @@ use tensorarena::planner::order::{
     reorder_graph,
 };
 use tensorarena::planner::{
-    offset, registry, DynamicRecords, OffsetPlanner, OrderStrategy, PlanCache, PlanService,
-    SharedObjectPlanner,
+    offset, registry, DynamicMode, DynamicRecords, OffsetPlanner, OrderStrategy, PlanCache,
+    PlanRequest, PlanService, SharedObjectPlanner,
 };
 use tensorarena::records::UsageRecords;
 use tensorarena::report::{self, MIB};
@@ -301,9 +301,16 @@ fn cmd_plan(args: &[String]) -> i32 {
             if let Some(dir) = &spill_dir {
                 // Populate a plan directory `serve --plan-dir` can
                 // warm-start from: one file per requested batch.
+                let base = match PlanRequest::new().with_strategy(strategy) {
+                    Ok(req) => req.with_order(order),
+                    Err(e) => {
+                        eprintln!("building spill request: {e}");
+                        return 1;
+                    }
+                };
                 let cache = PlanCache::new();
                 for &b in &batches {
-                    if let Err(e) = cache.get_or_plan_ordered(&recs, b, strategy, order) {
+                    if let Err(e) = cache.get_or_plan(&recs, &base.with_batch(b)) {
                         eprintln!("planning batch {b} for spill: {e}");
                         return 1;
                     }
@@ -641,7 +648,7 @@ fn cmd_serve(args: &[String]) -> i32 {
                      wave-aware serving applies to the pure-Rust executor path only"
                 );
             }
-            return match serve_bench(&dir, requests, max_batch, wait_ms) {
+            return match serve_bench(&dir, &strategy, requests, max_batch, wait_ms, mem_budget) {
                 Ok(()) => 0,
                 Err(e) => {
                     eprintln!("serve failed: {e:#}");
@@ -706,6 +713,13 @@ fn serve_pure(
         return Err(format!("unknown model '{model}'"));
     };
     let service = PlanService::shared();
+    // One typed identity for the whole serving configuration: every warm
+    // start, budget query, engine construction, and stats line below keys
+    // off (re-batched / re-resolved copies of) this request.
+    let req = PlanRequest::new()
+        .with_strategy(strategy)
+        .map_err(|e| e.to_string())?
+        .with_order(order);
     // Apply the order up front: `recs` below are the *served* records, so
     // warm starts, budget resolution, and the final stats all agree with
     // what the engine (which re-derives the same deterministic order)
@@ -722,7 +736,7 @@ fn serve_pure(
     let recs = UsageRecords::from_graph(&g);
     if let Some(dir) = plan_dir {
         let report = service
-            .warm_start_ordered(Path::new(dir), &recs, order)
+            .warm_start(Path::new(dir), &recs, &req)
             .map_err(|e| format!("warm-starting from {dir}: {e}"))?;
         println!(
             "plan dir {dir}: warm-started {} plan(s), {} suspect skip(s), {} foreign, {} stale-order",
@@ -741,7 +755,7 @@ fn serve_pure(
     });
     if let Some((decode_from, dyn_recs)) = &decode {
         let mp = service
-            .plan_dynamic(dyn_recs, 1, Some(strategy), order)
+            .plan_dynamic(dyn_recs, &req.with_dynamic(DynamicMode::FullyResolved))
             .map_err(|e| e.to_string())?;
         let oracle = offset::GreedyBySize.plan(&recs).total_size();
         let overhead = if oracle == 0 { 1.0 } else { mp.peak as f64 / oracle as f64 };
@@ -760,9 +774,7 @@ fn serve_pure(
             );
         }
     } else {
-        let plan = service
-            .plan_records_ordered(&recs, 1, Some(strategy), order)
-            .map_err(|e| e.to_string())?;
+        let plan = service.plan(&recs, &req).map_err(|e| e.to_string())?;
         println!(
             "{model} arena: {:.1} KiB planned vs {:.1} KiB naive ({:.1}x)",
             plan.total_size() as f64 / 1024.0,
@@ -773,10 +785,10 @@ fn serve_pure(
     if let Some(budget) = mem_budget {
         let cap = match &decode {
             Some((_, dyn_recs)) => service
-                .max_servable_batch_dynamic(dyn_recs, budget, Some(strategy), order)
+                .max_servable_batch_dynamic(dyn_recs, &req, budget)
                 .map_err(|e| e.to_string())?,
             None => service
-                .max_servable_batch_ordered(&recs, budget, Some(strategy), order)
+                .max_servable_batch(&recs, &req, budget)
                 .map_err(|e| e.to_string())?,
         };
         println!(
@@ -791,7 +803,6 @@ fn serve_pure(
     {
         let service = Arc::clone(&service);
         let model_name = model.to_string();
-        let strategy = strategy.to_string();
         let decode_from = decode.as_ref().map(|(from, _)| *from);
         router.register(
             model,
@@ -799,9 +810,9 @@ fn serve_pure(
                 let g = models::by_name(&model_name).expect("model exists");
                 let engine = match decode_from {
                     Some(from) => {
-                        ExecutorEngine::with_dynamic(&g, service, &strategy, order, from, 42)
+                        ExecutorEngine::for_request_dynamic(&g, service, &req, from, 42)
                     }
-                    None => ExecutorEngine::with_order(&g, service, &strategy, order, 42),
+                    None => ExecutorEngine::for_request(&g, service, &req, 42),
                 };
                 Box::new(engine.expect("engine").with_max_batch(max_batch))
             },
@@ -863,25 +874,23 @@ fn serve_pure(
     // Report the arena at the engine's batch cap — what the serving box
     // actually hosts — not the batch-1 plan. For dynamic serving that is
     // the worst-wave multi-pass peak.
+    let at_max = req.with_batch(max_batch.max(1));
     let (planned_max, waves) = match &decode {
         Some((_, dyn_recs)) => {
             let mp = service
-                .plan_dynamic(dyn_recs, max_batch.max(1), Some(strategy), order)
+                .plan_dynamic(dyn_recs, &at_max.with_dynamic(DynamicMode::FullyResolved))
                 .map_err(|e| e.to_string())?;
             (mp.peak, mp.passes)
         }
         None => (
-            service
-                .plan_records_ordered(&recs, max_batch.max(1), Some(strategy), order)
-                .map_err(|e| e.to_string())?
-                .total_size(),
+            service.plan(&recs, &at_max).map_err(|e| e.to_string())?.total_size(),
             0,
         ),
     };
     let stats = ArenaStats::from_service(
         planned_max,
         recs.naive_total() * max_batch.max(1),
-        registry::offset_key(strategy).unwrap_or("?"),
+        req.strategy(),
         st,
     );
     let stats = if waves > 0 { stats.with_waves(waves, 0) } else { stats };
@@ -915,8 +924,19 @@ fn serve_pure(
 
 /// Load the AOT artifacts, spin up the coordinator, fire a closed-loop
 /// request storm, report latency/throughput and the planner's arena story.
+/// Since the `PlanRequest` redesign the PJRT engine takes the shared
+/// [`PlanService`] plus a typed request — its `planned_peak` /
+/// `max_servable_batch` resolve through the same cache as the pure-Rust
+/// path, so `--mem-budget` admission works here too.
 #[cfg(feature = "pjrt")]
-fn serve_bench(dir: &str, requests: usize, max_batch: usize, wait_ms: u64) -> anyhow::Result<()> {
+fn serve_bench(
+    dir: &str,
+    strategy: &str,
+    requests: usize,
+    max_batch: usize,
+    wait_ms: u64,
+    mem_budget: Option<usize>,
+) -> anyhow::Result<()> {
     use tensorarena::coordinator::engine::PjrtEngine;
     use tensorarena::runtime::{Runtime, VariantSet};
 
@@ -933,26 +953,37 @@ fn serve_bench(dir: &str, requests: usize, max_batch: usize, wait_ms: u64) -> an
             found.iter().map(|(b, _)| *b).collect::<Vec<_>>()
         );
     }
-    // Plan the L2 graph's rust twin for the arena story.
+    // One shared service + typed request: the L2 graph's rust twin is the
+    // planner-managed working set behind the compiled executables.
+    let service = PlanService::shared();
+    let req = PlanRequest::new()
+        .with_strategy(strategy)
+        .map_err(anyhow::Error::msg)?
+        .with_batch(max_batch.max(1));
     let twin = models::l2_cnn();
     let recs = UsageRecords::from_graph(&twin);
-    let plan = offset::GreedyBySize.plan(&recs);
-    let stats = ArenaStats {
-        planned_bytes: plan.total_size(),
-        naive_bytes: recs.naive_total(),
-        strategy: "Greedy by Size".into(),
-        ..ArenaStats::default()
-    };
+    let plan = service.plan(&recs, &req.with_batch(1)).map_err(anyhow::Error::msg)?;
     println!(
         "L2 twin arena: {:.1} KiB planned vs {:.1} KiB naive ({:.1}x)",
-        stats.planned_bytes as f64 / 1024.0,
-        stats.naive_bytes as f64 / 1024.0,
-        stats.reduction()
+        plan.total_size() as f64 / 1024.0,
+        recs.naive_total() as f64 / 1024.0,
+        recs.naive_total() as f64 / plan.total_size().max(1) as f64,
     );
+    if let Some(budget) = mem_budget {
+        let cap = service
+            .max_servable_batch(&recs, &req, budget)
+            .map_err(anyhow::Error::msg)?;
+        println!(
+            "mem budget {:.1} KiB: max servable batch {cap}{}",
+            budget as f64 / 1024.0,
+            if cap < max_batch { " (clamping the batcher)" } else { "" },
+        );
+    }
 
     let mut router = Router::new();
     let dir_owned = dir.to_string();
-    let stats_for_engine = stats.clone();
+    let service_for_engine = Arc::clone(&service);
+    let recs_for_engine = recs.clone();
     router.register(
         "cnn",
         move || {
@@ -960,12 +991,15 @@ fn serve_bench(dir: &str, requests: usize, max_batch: usize, wait_ms: u64) -> an
             let variants =
                 VariantSet::load(&rt, std::path::Path::new(&dir_owned), "model", &[32, 32, 3], 10)
                     .expect("load artifacts");
-            Box::new(PjrtEngine::new(variants, stats_for_engine))
+            Box::new(
+                PjrtEngine::with_request(variants, service_for_engine, recs_for_engine, &req)
+                    .expect("twin plan"),
+            )
         },
         BatchPolicy {
             max_batch,
             max_wait: std::time::Duration::from_millis(wait_ms),
-            ..BatchPolicy::default()
+            mem_budget,
         },
     );
 
@@ -1001,5 +1035,18 @@ fn serve_bench(dir: &str, requests: usize, max_batch: usize, wait_ms: u64) -> an
         snap.mean_queue_us as f64 / 1000.0,
     );
     router.shutdown();
+    // The shared-cache story the snapshot path could never tell: the AOT
+    // engine's budget probes and batch plans all landed in one PlanService.
+    let stats = ArenaStats::from_service(
+        service.plan(&recs, &req).map_err(anyhow::Error::msg)?.total_size(),
+        recs.naive_total() * max_batch.max(1),
+        req.strategy(),
+        service.stats(),
+    );
+    println!(
+        "at max batch {}: {}",
+        max_batch.max(1),
+        coordinator::render_arena_stats(&stats)
+    );
     Ok(())
 }

@@ -1,16 +1,16 @@
-//! Batch-aware plan cache: plan once per `(graph, batch, strategy, order)`,
-//! reuse forever.
+//! Batch-aware plan cache: plan once per `(records fingerprint,
+//! PlanRequest)`, reuse forever.
 //!
 //! The paper's arena is planned once and cheaply reused for every inference
 //! (§5); serving multiplies that by batch-size variants and engine
 //! replicas. The cache keys plans by the FNV-1a fingerprint of the usage
-//! records (the planner's entire input), the batch the records are scaled
-//! to, the registry strategy key, and the execution-order strategy the
-//! records were extracted under, so two executors serving the same model at
-//! the same batch share one `Arc<OffsetPlan>` and the planner runs exactly
-//! once. The order is a key dimension in its own right: two orders that
-//! happen to coincide (annealing found nothing) still occupy distinct
-//! slots, so order-keyed persistence stays unambiguous.
+//! records (the planner's entire input) and the typed
+//! [`PlanRequest`] — strategy, order, batch, dynamic mode in one value —
+//! so two executors serving the same model at the same batch share one
+//! `Arc<OffsetPlan>` and the planner runs exactly once. The order is a key
+//! dimension in its own right: two orders that happen to coincide
+//! (annealing found nothing) still occupy distinct slots, so order-keyed
+//! persistence stays unambiguous.
 //!
 //! Plans can be spilled to / loaded from the [`super::serialize`] text
 //! format (compute offline, ship with the model), and
@@ -22,12 +22,13 @@
 //! are keyed by the fingerprint of the **resolved-size prefix** — the
 //! static records plus the sizes known so far — so decode-step re-plans
 //! with an unchanged prefix are cache hits with zero planner invocations
-//! ([`PlanCache::get_or_plan_dynamic_resolved`]), and budget admission for
+//! ([`PlanCache::get_or_plan_dynamic`]), and budget admission for
 //! dynamic engines resolves under the worst-wave peak
 //! ([`PlanCache::max_servable_batch_dynamic`]).
 
 use super::dynamic::{DynamicRecords, MultiPassPlan, MultiPassPlanner};
 use super::registry::OrderStrategy;
+use super::request::{DynamicMode, ParseRequestError, PlanRequest};
 use super::serialize::{self, LoadError};
 use super::{registry, OffsetPlan, PlanError};
 use crate::records::UsageRecords;
@@ -41,6 +42,10 @@ use std::sync::{Arc, Mutex};
 pub enum PlanServiceError {
     /// The strategy name is not in the registry.
     UnknownStrategy(String),
+    /// The request's shape does not fit the entry point — e.g. a
+    /// [`DynamicMode`]-carrying request handed to a static lookup, or a
+    /// static request handed to a dynamic one.
+    InvalidRequest(String),
     /// The strategy produced an infeasible plan (a planner bug).
     Infeasible(PlanError),
     /// A spilled plan failed to load.
@@ -57,6 +62,7 @@ impl std::fmt::Display for PlanServiceError {
                     registry::OFFSET_KEYS.join(", ")
                 )
             }
+            PlanServiceError::InvalidRequest(s) => write!(f, "invalid plan request: {s}"),
             PlanServiceError::Infeasible(e) => write!(f, "strategy produced infeasible plan: {e}"),
             PlanServiceError::Load(e) => write!(f, "loading spilled plan: {e}"),
         }
@@ -65,9 +71,11 @@ impl std::fmt::Display for PlanServiceError {
 
 impl std::error::Error for PlanServiceError {}
 
-/// Cache key: records fingerprint × batch × canonical strategy key ×
-/// execution-order strategy.
-type Key = (u64, usize, &'static str, OrderStrategy);
+/// Static cache key: records fingerprint × [`PlanRequest`]. Only static
+/// requests (`req.dynamic() == DynamicMode::Static`) are ever stored, so
+/// the request half of the key is exactly what [`PlanRequest`]'s `Display`
+/// writes into a plan-directory file name.
+type Key = (u64, PlanRequest);
 
 /// Dynamic-plan cache key: **resolved-size-prefix fingerprint** × batch ×
 /// canonical strategy key × execution-order strategy. The fingerprint
@@ -75,7 +83,10 @@ type Key = (u64, usize, &'static str, OrderStrategy);
 /// record's interval and `known_at`, and the sizes resolved so far — so
 /// decode steps between wave boundaries, and any two sequences whose
 /// resolved sizes agree, share one slot regardless of their (still
-/// unknown) tails.
+/// unknown) tails. The request's [`DynamicMode`] participates through the
+/// fingerprint, never as a raw field: `Resolved(op)` values between the
+/// same wave boundaries (and `FullyResolved` past the last one) must share
+/// a slot — that sharing *is* the §7 amortization.
 type DynamicKey = (u64, usize, &'static str, OrderStrategy);
 
 /// Most dynamic (multi-pass) plans kept resident. Static cache keys are
@@ -141,23 +152,24 @@ pub struct PersistReport {
 }
 
 /// Thread-safe memoization of offset plans, keyed by
-/// `(records fingerprint, batch, strategy, order)` — plus the §7 dynamic
-/// slots keyed by the resolved-size prefix.
+/// `(records fingerprint, PlanRequest)` — plus the §7 dynamic slots keyed
+/// by the resolved-size prefix.
 ///
 /// Lock order: `plans` before `records`, everywhere both are held.
 ///
 /// # Example
 ///
 /// ```
-/// use tensorarena::planner::PlanCache;
+/// use tensorarena::planner::{PlanCache, PlanRequest};
 /// use tensorarena::records::UsageRecords;
 ///
 /// let records = UsageRecords::from_triples(&[(0, 1, 64), (1, 2, 128)]);
 /// let cache = PlanCache::new();
-/// let plan = cache.get_or_plan(&records, 4, "greedy-size").unwrap();
+/// let req = PlanRequest::new().with_batch(4); // greedy-size @ natural
+/// let plan = cache.get_or_plan(&records, &req).unwrap();
 /// assert!(plan.total_size() <= 4 * records.naive_total());
 /// assert_eq!((cache.misses(), cache.hits()), (1, 0));
-/// cache.get_or_plan(&records, 4, "greedy-size").unwrap(); // cache hit
+/// cache.get_or_plan(&records, &req).unwrap(); // cache hit
 /// assert_eq!((cache.misses(), cache.hits()), (1, 1));
 /// ```
 #[derive(Default)]
@@ -226,52 +238,36 @@ impl PlanCache {
         self.len() == 0
     }
 
-    fn key(
-        records: &UsageRecords,
-        batch: usize,
-        strategy: &str,
-        order: OrderStrategy,
-    ) -> Result<Key, PlanServiceError> {
-        let key = registry::offset_key(strategy)
-            .ok_or_else(|| PlanServiceError::UnknownStrategy(strategy.to_string()))?;
-        Ok((serialize::records_fingerprint(records), batch, key, order))
-    }
-
-    /// [`Self::get_or_plan_ordered`] for the natural execution order.
+    /// The plan `req` identifies for `records`, planning (and validating)
+    /// on first use. `records` are always the *batch-1* records — for a
+    /// non-natural order, the records of the graph *reordered under that
+    /// order* (the caller applies the order; the cache keys on it so
+    /// coinciding orders cannot cross-contaminate persistence). Scaling to
+    /// `req.batch()` is the cache's job so every caller agrees on the key.
+    /// Planning happens under the cache lock, which guarantees exactly one
+    /// planner invocation per key even under concurrent lookups. The
+    /// request must be static; dynamic modes go through
+    /// [`Self::get_or_plan_dynamic`] with a profile.
     pub fn get_or_plan(
         &self,
         records: &UsageRecords,
-        batch: usize,
-        strategy: &str,
+        req: &PlanRequest,
     ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
-        self.get_or_plan_ordered(records, batch, strategy, OrderStrategy::Natural)
-    }
-
-    /// The plan for `records` scaled to `batch` under `strategy`, planning
-    /// (and validating) on first use. `records` are always the *batch-1*
-    /// records — for a non-natural `order`, the records of the graph
-    /// *reordered under that order* (the caller applies the order; the
-    /// cache keys on it so coinciding orders cannot cross-contaminate
-    /// persistence). Scaling is the cache's job so every caller agrees on
-    /// the key. Planning happens under the cache lock, which guarantees
-    /// exactly one planner invocation per key even under concurrent
-    /// lookups.
-    pub fn get_or_plan_ordered(
-        &self,
-        records: &UsageRecords,
-        batch: usize,
-        strategy: &str,
-        order: OrderStrategy,
-    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
-        let key = Self::key(records, batch, strategy, order)?;
+        if !req.dynamic().is_static() {
+            return Err(PlanServiceError::InvalidRequest(format!(
+                "static lookup for dynamic request '{req}'; use get_or_plan_dynamic \
+                 with a DynamicRecords profile"
+            )));
+        }
+        let key: Key = (serialize::records_fingerprint(records), *req);
         let mut plans = self.plans.lock().unwrap();
         if let Some(plan) = plans.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(plan));
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let planner = registry::offset_strategy(key.2).expect("canonical key resolves");
-        let scaled = records.scaled(batch);
+        let planner = registry::offset_strategy(req.strategy()).expect("canonical key resolves");
+        let scaled = records.scaled(req.batch());
         let plan = planner.plan(&scaled);
         plan.validate(&scaled).map_err(PlanServiceError::Infeasible)?;
         let plan = Arc::new(plan);
@@ -280,25 +276,31 @@ impl PlanCache {
         Ok(plan)
     }
 
-    /// [`Self::get_or_plan_dynamic_resolved`] with every wave resolved: the
-    /// **complete** §7 multi-pass plan — what the wave-aware executor sizes
-    /// its arena from and what budget admission resolves against (the plan's
-    /// [`MultiPassPlan::peak`] is the worst-wave peak).
-    pub fn get_or_plan_dynamic(
+    /// [`Self::get_or_plan`] with an untyped `(batch, strategy, order)`
+    /// triple.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call get_or_plan")]
+    pub fn get_or_plan_ordered(
         &self,
-        dynamic: &DynamicRecords,
+        records: &UsageRecords,
         batch: usize,
         strategy: &str,
         order: OrderStrategy,
-    ) -> Result<Arc<MultiPassPlan>, PlanServiceError> {
-        self.get_or_plan_dynamic_resolved(dynamic, usize::MAX, batch, strategy, order)
+    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
+        let req = PlanRequest::new().with_strategy(strategy)?.with_batch(batch).with_order(order);
+        self.get_or_plan(records, &req)
     }
 
-    /// The §7 multi-pass plan of the waves resolved once op
-    /// `resolved_through` has executed, through the resolved-prefix-keyed
-    /// cache slot. `dynamic` are the *batch-1* records of the (order-applied)
-    /// graph; scaling to `batch` is the cache's job, exactly as for static
-    /// plans.
+    /// The §7 multi-pass plan `req` identifies for `dynamic`, through the
+    /// resolved-prefix-keyed cache slot. `dynamic` are the *batch-1*
+    /// records of the (order-applied) graph; scaling to `req.batch()` is
+    /// the cache's job, exactly as for static plans. The request's
+    /// [`DynamicMode`] selects the resolution state:
+    /// [`DynamicMode::FullyResolved`] yields the **complete** plan — what
+    /// the wave-aware executor sizes its arena from and what budget
+    /// admission resolves against ([`MultiPassPlan::peak`] is the
+    /// worst-wave peak) — and [`DynamicMode::Resolved`]`(op)` the prefix
+    /// plan of the waves resolved once `op` has executed (the decode-step
+    /// re-plan). A static request is an [`PlanServiceError::InvalidRequest`].
     ///
     /// The slot key is the [`serialize::resolved_prefix_fingerprint`] — so
     /// successive decode steps with an unchanged resolved prefix (no wave
@@ -313,30 +315,32 @@ impl PlanCache {
     /// Complete plans (every wave resolved) are validated against the final
     /// scaled records before being cached; prefix plans are covered by the
     /// freeze invariant (they are byte-identical prefixes of a validated
-    /// complete plan). `strategy` namespaces the slot like the static cache
-    /// key — within-wave placement itself is always Algorithm 3's
+    /// complete plan). The strategy namespaces the slot like the static
+    /// cache key — within-wave placement itself is always Algorithm 3's
     /// size-descending best-fit. Dynamic plans live in memory only; they are
     /// never spilled to a plan directory.
-    pub fn get_or_plan_dynamic_resolved(
+    pub fn get_or_plan_dynamic(
         &self,
         dynamic: &DynamicRecords,
-        resolved_through: usize,
-        batch: usize,
-        strategy: &str,
-        order: OrderStrategy,
+        req: &PlanRequest,
     ) -> Result<Arc<MultiPassPlan>, PlanServiceError> {
-        let strategy_key = registry::offset_key(strategy)
-            .ok_or_else(|| PlanServiceError::UnknownStrategy(strategy.to_string()))?;
-        let fp = serialize::resolved_prefix_fingerprint(dynamic, resolved_through);
-        let key: DynamicKey = (fp, batch, strategy_key, order);
+        let mode = req.dynamic();
+        if mode.is_static() {
+            return Err(PlanServiceError::InvalidRequest(format!(
+                "dynamic lookup for static request '{req}'; set a DynamicMode \
+                 (Resolved(op) or FullyResolved)"
+            )));
+        }
+        let fp = serialize::resolved_prefix_fingerprint(dynamic, mode);
+        let key: DynamicKey = (fp, req.batch(), req.strategy(), req.order());
         let mut slots = self.dynamic.lock().unwrap();
         if let Some(plan) = slots.plans.get(&key) {
             self.dynamic_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(plan));
         }
         self.dynamic_misses.fetch_add(1, Ordering::Relaxed);
-        let scaled = dynamic.scaled(batch);
-        let plan = MultiPassPlanner.plan_resolved(&scaled, resolved_through);
+        let scaled = dynamic.scaled(req.batch());
+        let plan = MultiPassPlanner.plan_resolved(&scaled, mode);
         if let Some(complete) = plan.offset_plan() {
             complete
                 .validate(&scaled.final_records())
@@ -353,26 +357,48 @@ impl PlanCache {
         Ok(plan)
     }
 
+    /// [`Self::get_or_plan_dynamic`] with an untyped `resolved_through`
+    /// op index (`usize::MAX` meaning fully resolved).
+    #[deprecated(
+        since = "0.3.0",
+        note = "build a PlanRequest with a DynamicMode and call get_or_plan_dynamic"
+    )]
+    pub fn get_or_plan_dynamic_resolved(
+        &self,
+        dynamic: &DynamicRecords,
+        resolved_through: usize,
+        batch: usize,
+        strategy: &str,
+        order: OrderStrategy,
+    ) -> Result<Arc<MultiPassPlan>, PlanServiceError> {
+        let req = PlanRequest::new()
+            .with_strategy(strategy)?
+            .with_batch(batch)
+            .with_order(order)
+            .with_dynamic(DynamicMode::from_resolved_through(resolved_through));
+        self.get_or_plan_dynamic(dynamic, &req)
+    }
+
     /// Largest batch whose **worst-wave** multi-pass peak fits
-    /// `budget_bytes` — the §7 analogue of
-    /// [`Self::max_servable_batch_ordered`]. Budget admission for a
-    /// dynamic-shape engine must resolve against this peak, not the static
-    /// plan, because mid-inference waves can only grow the arena.
+    /// `budget_bytes` — the §7 analogue of [`Self::max_servable_batch`].
+    /// Budget admission for a dynamic-shape engine must resolve against
+    /// this peak, not the static plan, because mid-inference waves can only
+    /// grow the arena; the request's batch and [`DynamicMode`] are
+    /// therefore immaterial — every probe plans the complete
+    /// ([`DynamicMode::FullyResolved`]) multi-pass plan at the probed
+    /// batch.
     pub fn max_servable_batch_dynamic(
         &self,
         dynamic: &DynamicRecords,
-        strategy: &str,
+        req: &PlanRequest,
         budget_bytes: usize,
-        order: OrderStrategy,
     ) -> Result<usize, PlanServiceError> {
-        if registry::offset_key(strategy).is_none() {
-            return Err(PlanServiceError::UnknownStrategy(strategy.to_string()));
-        }
+        let req = req.with_dynamic(DynamicMode::FullyResolved);
         let finals = dynamic.final_records();
         let max_size = finals.records.iter().map(|r| r.size).max().unwrap_or(0);
         max_batch_fitting(max_size, finals.naive_total(), budget_bytes, |b| {
             Ok(self
-                .get_or_plan_dynamic(dynamic, b, strategy, order)?
+                .get_or_plan_dynamic(dynamic, &req.with_batch(b))?
                 .peak
                 <= budget_bytes)
         })
@@ -389,58 +415,50 @@ impl PlanCache {
             .or_insert_with(|| records.clone());
     }
 
-    /// Serialize the plan for `(records, batch, strategy)` in the
-    /// [`super::serialize`] text format (natural order), planning it first
-    /// if not resident — ship the result next to the model and
-    /// [`Self::load`] it at serve time.
+    /// Serialize the plan `req` identifies for `records` in the
+    /// [`super::serialize`] text format, planning it first if not resident
+    /// — ship the result next to the model and [`Self::load`] it at serve
+    /// time.
     pub fn spill(
         &self,
         records: &UsageRecords,
-        batch: usize,
-        strategy: &str,
+        req: &PlanRequest,
     ) -> Result<String, PlanServiceError> {
-        let plan = self.get_or_plan(records, batch, strategy)?;
-        Ok(serialize::offset_plan_to_string(&plan, &records.scaled(batch)))
+        let plan = self.get_or_plan(records, req)?;
+        Ok(serialize::offset_plan_to_string(&plan, &records.scaled(req.batch()), req))
     }
 
-    /// [`Self::load_ordered`] for the natural execution order.
+    /// Seed the cache from a previously spilled plan, filing it under
+    /// `(records fingerprint, req)`. The caller-supplied key is never
+    /// trusted on its own: the record set embedded in the text is verified
+    /// field by field — count, full id coverage (no dropped or duplicated
+    /// lines), every `(size, first_op, last_op)` — against
+    /// `records.scaled(req.batch())`, which is exactly the fingerprint
+    /// input, plus checksum, feasibility, and (v2) the canonical order key
+    /// in the header, which must match `req.order()`. A plan spilled for
+    /// one model, another batch, or another execution order can therefore
+    /// never be filed under this key.
+    ///
+    /// The text format carries no strategy tag, so the request's strategy
+    /// names the slot the plan is filed under — loading a spill produced by
+    /// a different strategy is not detectable (it is still a *valid* plan,
+    /// just not that strategy's); keep spill files per strategy.
     pub fn load(
         &self,
         text: &str,
         records: &UsageRecords,
-        batch: usize,
-        strategy: &str,
+        req: &PlanRequest,
     ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
-        self.load_ordered(text, records, batch, strategy, OrderStrategy::Natural)
-    }
-
-    /// Seed the cache from a previously spilled plan. The caller-supplied
-    /// key is never trusted on its own: the record set embedded in the
-    /// text is verified field by field — count, full id coverage (no
-    /// dropped or duplicated lines), every `(size, first_op, last_op)` —
-    /// against `records.scaled(batch)`, which is exactly the fingerprint
-    /// input, plus checksum, feasibility, and (v2) the canonical order key
-    /// in the header, which must match `order`. A plan spilled for one
-    /// model, another batch, or another execution order can therefore
-    /// never be filed under this key.
-    ///
-    /// The text format carries no strategy tag, so the caller's `strategy`
-    /// names the slot the plan is filed under — loading a spill produced by
-    /// a different strategy is not detectable (it is still a *valid* plan,
-    /// just not that strategy's); keep spill files per strategy.
-    pub fn load_ordered(
-        &self,
-        text: &str,
-        records: &UsageRecords,
-        batch: usize,
-        strategy: &str,
-        order: OrderStrategy,
-    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
-        let key = Self::key(records, batch, strategy, order)?;
-        let scaled = records.scaled(batch);
+        if !req.dynamic().is_static() {
+            return Err(PlanServiceError::InvalidRequest(format!(
+                "dynamic request '{req}' cannot be loaded from a spill; \
+                 dynamic plans are in-memory only"
+            )));
+        }
+        let key: Key = (serialize::records_fingerprint(records), *req);
+        let scaled = records.scaled(req.batch());
         let plan = Arc::new(
-            serialize::offset_plan_from_str_ordered(text, &scaled, &order.key())
-                .map_err(PlanServiceError::Load)?,
+            serialize::offset_plan_from_str(text, &scaled, req).map_err(PlanServiceError::Load)?,
         );
         self.plans
             .lock()
@@ -450,12 +468,26 @@ impl PlanCache {
         Ok(plan)
     }
 
+    /// [`Self::load`] with an untyped `(batch, strategy, order)` triple.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call load")]
+    pub fn load_ordered(
+        &self,
+        text: &str,
+        records: &UsageRecords,
+        batch: usize,
+        strategy: &str,
+        order: OrderStrategy,
+    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
+        let req = PlanRequest::new().with_strategy(strategy)?.with_batch(batch).with_order(order);
+        self.load(text, records, &req)
+    }
+
     /// Persist every resident plan into `dir` in the plan-directory format
     /// (see [`super::serialize`]'s module docs): one
-    /// `<fingerprint>-b<batch>-<strategy>@<order>.plan` file per cache key,
-    /// each written to a `.tmp` sibling and atomically renamed into place,
-    /// so a concurrent [`Self::warm_start`] never observes a torn file.
-    /// Existing files for the same key are replaced.
+    /// `<fingerprint>-<request>.plan` file per cache key, each written to a
+    /// `.tmp` sibling and atomically renamed into place, so a concurrent
+    /// [`Self::warm_start`] never observes a torn file. Existing files for
+    /// the same key are replaced. Dynamic plans are never persisted.
     pub fn persist_dir(&self, dir: &Path) -> std::io::Result<PersistReport> {
         std::fs::create_dir_all(dir)?;
         let plans: Vec<(Key, Arc<OffsetPlan>)> = self
@@ -467,18 +499,13 @@ impl PlanCache {
             .collect();
         let records = self.records.lock().unwrap().clone();
         let mut report = PersistReport::default();
-        for ((fingerprint, batch, strategy, order), plan) in plans {
+        for ((fingerprint, req), plan) in plans {
             let Some(base) = records.get(&fingerprint) else {
                 report.skipped += 1;
                 continue;
             };
-            let order_key = order.key();
-            let text = serialize::offset_plan_to_string_ordered(
-                &plan,
-                &base.scaled(batch),
-                &order_key,
-            );
-            let name = serialize::plan_file_name(fingerprint, batch, strategy, &order_key);
+            let text = serialize::offset_plan_to_string(&plan, &base.scaled(req.batch()), &req);
+            let name = serialize::plan_file_name(fingerprint, &req);
             // Per-process tmp name: two servers persisting into a shared
             // fleet directory must not clobber each other's half-written
             // file before the atomic rename.
@@ -490,20 +517,15 @@ impl PlanCache {
         Ok(report)
     }
 
-    /// [`Self::warm_start_ordered`] for the natural execution order.
-    pub fn warm_start(
-        &self,
-        dir: &Path,
-        records: &UsageRecords,
-    ) -> std::io::Result<WarmStartReport> {
-        self.warm_start_ordered(dir, records, OrderStrategy::Natural)
-    }
-
     /// Seed the cache from a plan directory: every file whose name carries
-    /// `records`' fingerprint **and** `order`'s canonical key is loaded
-    /// through [`Self::load_ordered`] (full verification — checksum,
+    /// `records`' fingerprint **and** `req.order()`'s canonical key is
+    /// loaded through [`Self::load`] (full verification — checksum,
     /// field-by-field record match with exact id coverage, bounded header
-    /// fields, order match, feasibility). Files for other models are left
+    /// fields, order match, feasibility). Only the request's *order*
+    /// dimension gates loading: every `(batch, strategy)` combination in
+    /// the directory is seeded regardless of `req.batch()` /
+    /// `req.strategy()`, because a warm start exists to cover the whole
+    /// envelope a previous run planned. Files for other models are left
     /// alone; files written under a different execution order are skipped
     /// silently with their own counter, exactly like foreign files (their
     /// offsets are meaningless for this service's record lifetimes, but
@@ -515,14 +537,13 @@ impl PlanCache {
     /// After a warm start against the directory a previous run persisted,
     /// every previously-seen `(batch, strategy, order)` plan is a cache
     /// hit: zero planner invocations on the restart path.
-    pub fn warm_start_ordered(
+    pub fn warm_start(
         &self,
         dir: &Path,
         records: &UsageRecords,
-        order: OrderStrategy,
+        req: &PlanRequest,
     ) -> std::io::Result<WarmStartReport> {
         let fingerprint = serialize::records_fingerprint(records);
-        let order_key = order.key();
         let mut report = WarmStartReport::default();
         let entries = match std::fs::read_dir(dir) {
             Ok(entries) => entries,
@@ -536,37 +557,87 @@ impl PlanCache {
             if !name.ends_with(".plan") {
                 continue; // .tmp leftovers, READMEs, ...
             }
-            let Some((file_fp, batch, strategy, file_order)) =
-                serialize::parse_plan_file_name(name)
-            else {
-                report.skipped_corrupt += 1;
-                self.warm_skipped.fetch_add(1, Ordering::Relaxed);
-                eprintln!("warm-start: skipping '{name}': unparseable plan file name");
-                continue;
+            let file_req = match serialize::parse_plan_file_name(name) {
+                Ok((file_fp, file_req)) if file_req.dynamic().is_static() => {
+                    // The order check runs before the fingerprint check: a
+                    // different order of the *same* model yields different
+                    // records (and so a different fingerprint), which would
+                    // otherwise be indistinguishable from a foreign model's
+                    // file. Like foreign files, stale-order files belong to
+                    // another valid serving configuration sharing the
+                    // directory — counted in their own field, left intact,
+                    // no per-file warning.
+                    if file_req.order() != req.order() {
+                        report.skipped_stale_order += 1;
+                        continue;
+                    }
+                    if file_fp != fingerprint {
+                        report.skipped_foreign += 1;
+                        continue;
+                    }
+                    file_req
+                }
+                Ok(_) => {
+                    // A dynamic-mode request has no business on disk —
+                    // dynamic plans are in-memory only.
+                    report.skipped_corrupt += 1;
+                    self.warm_skipped.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("warm-start: skipping '{name}': dynamic plan file name");
+                    continue;
+                }
+                Err(ParseRequestError::UnknownOrder(_)) => {
+                    // Forward compatibility: an order strategy this build
+                    // does not know (a newer build's plans sharing the
+                    // directory) gates exactly like any other-order file —
+                    // silent, counted, left intact, never suspect.
+                    report.skipped_stale_order += 1;
+                    continue;
+                }
+                Err(ParseRequestError::UnknownStrategy(strategy)) => {
+                    // Keep the pre-redesign taxonomy: order and fingerprint
+                    // gate *before* the strategy check, so an unknown
+                    // strategy in another configuration's file (different
+                    // order, or another model's fingerprint) is not ours to
+                    // warn about. The typed parse rejects the whole name at
+                    // once, so re-derive those fields leniently here.
+                    let stem = name.strip_suffix(".plan").unwrap_or(name);
+                    // Any '+' in a name that parsed this far is a valid
+                    // dynamic tag (malformed tags never reach the
+                    // UnknownStrategy arm) — and dynamic plans must never
+                    // exist on disk, so that trumps the stale strategy.
+                    if stem.contains('+') {
+                        report.skipped_corrupt += 1;
+                        self.warm_skipped.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("warm-start: skipping '{name}': dynamic plan file name");
+                        continue;
+                    }
+                    let file_order = stem.rsplit_once('@').map(|(_, o)| o);
+                    if file_order != Some(req.order().key().as_str()) {
+                        report.skipped_stale_order += 1;
+                        continue;
+                    }
+                    let file_fp = stem
+                        .split_once('-')
+                        .and_then(|(h, _)| u64::from_str_radix(h, 16).ok());
+                    if file_fp != Some(fingerprint) {
+                        report.skipped_foreign += 1;
+                        continue;
+                    }
+                    report.skipped_stale_strategy += 1;
+                    self.warm_skipped.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "warm-start: skipping '{name}': strategy '{strategy}' is not a \
+                         registered key"
+                    );
+                    continue;
+                }
+                Err(ParseRequestError::Malformed(_)) => {
+                    report.skipped_corrupt += 1;
+                    self.warm_skipped.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("warm-start: skipping '{name}': unparseable plan file name");
+                    continue;
+                }
             };
-            // The order check runs before the fingerprint check: a
-            // different order of the *same* model yields different records
-            // (and so a different fingerprint), which would otherwise be
-            // indistinguishable from a foreign model's file. Like foreign
-            // files, stale-order files belong to another valid serving
-            // configuration sharing the directory — counted in their own
-            // field, left intact, no per-file warning.
-            if file_order != order_key {
-                report.skipped_stale_order += 1;
-                continue;
-            }
-            if file_fp != fingerprint {
-                report.skipped_foreign += 1;
-                continue;
-            }
-            if registry::offset_key(&strategy) != Some(strategy.as_str()) {
-                report.skipped_stale_strategy += 1;
-                self.warm_skipped.fetch_add(1, Ordering::Relaxed);
-                eprintln!(
-                    "warm-start: skipping '{name}': strategy '{strategy}' is not a registered key"
-                );
-                continue;
-            }
             let text = match std::fs::read_to_string(entry.path()) {
                 Ok(text) => text,
                 Err(e) => {
@@ -576,7 +647,7 @@ impl PlanCache {
                     continue;
                 }
             };
-            match self.load_ordered(&text, records, batch, &strategy, order) {
+            match self.load(&text, records, &file_req) {
                 Ok(_) => {
                     report.loaded += 1;
                     self.warm_loaded.fetch_add(1, Ordering::Relaxed);
@@ -591,22 +662,24 @@ impl PlanCache {
         Ok(report)
     }
 
-    /// [`Self::max_servable_batch_ordered`] for the natural execution
-    /// order.
-    pub fn max_servable_batch(
+    /// [`Self::warm_start`] with an untyped order.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call warm_start")]
+    pub fn warm_start_ordered(
         &self,
+        dir: &Path,
         records: &UsageRecords,
-        strategy: &str,
-        budget_bytes: usize,
-    ) -> Result<usize, PlanServiceError> {
-        self.max_servable_batch_ordered(records, strategy, budget_bytes, OrderStrategy::Natural)
+        order: OrderStrategy,
+    ) -> std::io::Result<WarmStartReport> {
+        self.warm_start(dir, records, &PlanRequest::new().with_order(order))
     }
 
-    /// Largest batch whose **planned** (not naive) footprint under
-    /// `strategy` fits in `budget_bytes`; 0 if even batch 1 does not fit.
-    /// `records` and `order` must agree (the caller passes the reordered
-    /// graph's records), so the answer — and every probe plan it caches —
-    /// is resolved under the same order the engine will serve.
+    /// Largest batch whose **planned** (not naive) footprint under the
+    /// request's strategy fits in `budget_bytes`; 0 if even batch 1 does
+    /// not fit. `records` and `req.order()` must agree (the caller passes
+    /// the reordered graph's records), so the answer — and every probe
+    /// plan it caches — is resolved under the same order the engine will
+    /// serve. The request's batch is immaterial: the query *searches over*
+    /// batches.
     ///
     /// Uses the bound `planned(b) >= b * max_tensor_size` to cap the search
     /// range, then binary-searches with real plans (each probe lands in the
@@ -614,6 +687,21 @@ impl PlanCache {
     /// footprints grow monotonically with batch for every registry strategy
     /// — uniform scaling preserves every size comparison the heuristics
     /// make.
+    pub fn max_servable_batch(
+        &self,
+        records: &UsageRecords,
+        req: &PlanRequest,
+        budget_bytes: usize,
+    ) -> Result<usize, PlanServiceError> {
+        let max_size = records.records.iter().map(|r| r.size).max().unwrap_or(0);
+        max_batch_fitting(max_size, records.naive_total(), budget_bytes, |b| {
+            Ok(self.get_or_plan(records, &req.with_batch(b))?.total <= budget_bytes)
+        })
+    }
+
+    /// [`Self::max_servable_batch`] with an untyped `(strategy, order)`
+    /// pair.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call max_servable_batch")]
     pub fn max_servable_batch_ordered(
         &self,
         records: &UsageRecords,
@@ -621,13 +709,8 @@ impl PlanCache {
         budget_bytes: usize,
         order: OrderStrategy,
     ) -> Result<usize, PlanServiceError> {
-        if registry::offset_key(strategy).is_none() {
-            return Err(PlanServiceError::UnknownStrategy(strategy.to_string()));
-        }
-        let max_size = records.records.iter().map(|r| r.size).max().unwrap_or(0);
-        max_batch_fitting(max_size, records.naive_total(), budget_bytes, |b| {
-            Ok(self.get_or_plan_ordered(records, b, strategy, order)?.total <= budget_bytes)
-        })
+        let req = PlanRequest::new().with_strategy(strategy)?.with_order(order);
+        self.max_servable_batch(records, &req, budget_bytes)
     }
 }
 
@@ -674,12 +757,17 @@ mod tests {
     use super::*;
     use crate::models::example_records;
 
+    /// Batch-1 greedy-size @ natural — the test workhorse.
+    fn req() -> PlanRequest {
+        PlanRequest::new()
+    }
+
     #[test]
     fn second_lookup_is_a_hit_and_shares_the_plan() {
         let recs = example_records();
         let cache = PlanCache::new();
-        let a = cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
-        let b = cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
+        let a = cache.get_or_plan(&recs, &req()).unwrap();
+        let b = cache.get_or_plan(&recs, &req()).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.hits(), 1);
@@ -689,8 +777,10 @@ mod tests {
     fn display_name_and_key_share_a_cache_slot() {
         let recs = example_records();
         let cache = PlanCache::new();
-        let a = cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
-        let b = cache.get_or_plan(&recs, 1, "Greedy by Size").unwrap();
+        let a = cache.get_or_plan(&recs, &req().with_strategy("greedy-size").unwrap()).unwrap();
+        let b = cache
+            .get_or_plan(&recs, &req().with_strategy("Greedy by Size").unwrap())
+            .unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(cache.misses(), 1);
     }
@@ -699,32 +789,50 @@ mod tests {
     fn distinct_batches_get_distinct_plans() {
         let recs = example_records();
         let cache = PlanCache::new();
-        let p1 = cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
-        let p4 = cache.get_or_plan(&recs, 4, "greedy-size").unwrap();
+        let p1 = cache.get_or_plan(&recs, &req()).unwrap();
+        let p4 = cache.get_or_plan(&recs, &req().with_batch(4)).unwrap();
         assert_eq!(cache.misses(), 2);
         assert!(p4.total > p1.total);
         p4.validate(&recs.scaled(4)).unwrap();
     }
 
     #[test]
-    fn unknown_strategy_is_an_error() {
+    fn unknown_strategy_is_rejected_at_request_construction() {
+        // The stringly lookup failure now happens where the request is
+        // built, before any cache traffic.
+        let err = req().with_strategy("belady").unwrap_err();
+        assert!(matches!(err, PlanServiceError::UnknownStrategy(_)));
+    }
+
+    #[test]
+    fn mode_mismatched_requests_are_invalid() {
         let recs = example_records();
         let cache = PlanCache::new();
-        let err = cache.get_or_plan(&recs, 1, "belady").unwrap_err();
-        assert!(matches!(err, PlanServiceError::UnknownStrategy(_)));
-        assert_eq!(cache.misses(), 0);
+        // Static entry point refuses a dynamic request...
+        assert!(matches!(
+            cache.get_or_plan(&recs, &req().with_dynamic(DynamicMode::FullyResolved)),
+            Err(PlanServiceError::InvalidRequest(_))
+        ));
+        // ...and the dynamic entry point refuses a static one.
+        let dynamic = decode_dynamic();
+        assert!(matches!(
+            cache.get_or_plan_dynamic(&dynamic, &req()),
+            Err(PlanServiceError::InvalidRequest(_))
+        ));
+        assert_eq!((cache.misses(), cache.dynamic_misses()), (0, 0));
     }
 
     #[test]
     fn spill_load_roundtrip_seeds_a_fresh_cache() {
         let recs = example_records();
+        let b2 = req().with_batch(2);
         let warm = PlanCache::new();
-        let text = warm.spill(&recs, 2, "greedy-size").unwrap();
+        let text = warm.spill(&recs, &b2).unwrap();
         let cold = PlanCache::new();
-        let loaded = cold.load(&text, &recs, 2, "greedy-size").unwrap();
-        assert_eq!(*loaded, *warm.get_or_plan(&recs, 2, "greedy-size").unwrap());
+        let loaded = cold.load(&text, &recs, &b2).unwrap();
+        assert_eq!(*loaded, *warm.get_or_plan(&recs, &b2).unwrap());
         // The load seeded the cache: the next lookup is a hit, no planning.
-        let again = cold.get_or_plan(&recs, 2, "greedy-size").unwrap();
+        let again = cold.get_or_plan(&recs, &b2).unwrap();
         assert!(Arc::ptr_eq(&loaded, &again));
         assert_eq!(cold.misses(), 0);
         assert_eq!(cold.hits(), 1);
@@ -734,11 +842,11 @@ mod tests {
     fn stale_spill_fails_to_load() {
         let recs = example_records();
         let cache = PlanCache::new();
-        let text = cache.spill(&recs, 1, "greedy-size").unwrap();
+        let text = cache.spill(&recs, &req()).unwrap();
         let mut changed = recs.clone();
         changed.records[0].size += 64;
         assert!(matches!(
-            PlanCache::new().load(&text, &changed, 1, "greedy-size"),
+            PlanCache::new().load(&text, &changed, &req()),
             Err(PlanServiceError::Load(_))
         ));
     }
@@ -757,21 +865,23 @@ mod tests {
         let warm = PlanCache::new();
         for strategy in ["greedy-size", "greedy-breadth"] {
             for batch in [1usize, 2, 4] {
-                warm.get_or_plan(&recs, batch, strategy).unwrap();
+                let r = req().with_strategy(strategy).unwrap().with_batch(batch);
+                warm.get_or_plan(&recs, &r).unwrap();
             }
         }
         let persisted = warm.persist_dir(&dir).unwrap();
         assert_eq!(persisted, PersistReport { written: 6, skipped: 0 });
 
         let cold = PlanCache::new();
-        let report = cold.warm_start(&dir, &recs).unwrap();
+        let report = cold.warm_start(&dir, &recs, &req()).unwrap();
         assert_eq!(report.loaded, 6, "{report:?}");
         assert_eq!(report.skipped(), 0, "{report:?}");
         assert_eq!(cold.warm_loaded(), 6);
         for strategy in ["greedy-size", "greedy-breadth"] {
             for batch in [1usize, 2, 4] {
-                let a = cold.get_or_plan(&recs, batch, strategy).unwrap();
-                let b = warm.get_or_plan(&recs, batch, strategy).unwrap();
+                let r = req().with_strategy(strategy).unwrap().with_batch(batch);
+                let a = cold.get_or_plan(&recs, &r).unwrap();
+                let b = warm.get_or_plan(&recs, &r).unwrap();
                 assert_eq!(*a, *b, "{strategy} batch {batch} diverged across restart");
             }
         }
@@ -784,7 +894,7 @@ mod tests {
     fn warm_start_on_missing_dir_is_an_ordinary_cold_start() {
         let dir = scratch_dir("missing");
         let cache = PlanCache::new();
-        let report = cache.warm_start(&dir, &example_records()).unwrap();
+        let report = cache.warm_start(&dir, &example_records(), &req()).unwrap();
         assert_eq!(report, WarmStartReport::default());
         assert!(cache.is_empty());
     }
@@ -796,11 +906,11 @@ mod tests {
         let dir = scratch_dir("repersist");
         let recs = example_records();
         let warm = PlanCache::new();
-        warm.get_or_plan(&recs, 2, "greedy-size").unwrap();
+        warm.get_or_plan(&recs, &req().with_batch(2)).unwrap();
         warm.persist_dir(&dir).unwrap();
 
         let cold = PlanCache::new();
-        assert_eq!(cold.warm_start(&dir, &recs).unwrap().loaded, 1);
+        assert_eq!(cold.warm_start(&dir, &recs, &req()).unwrap().loaded, 1);
         let again = cold.persist_dir(&dir).unwrap();
         assert_eq!(again, PersistReport { written: 1, skipped: 0 });
         std::fs::remove_dir_all(&dir).unwrap();
@@ -814,10 +924,8 @@ mod tests {
         let recs = example_records();
         let cache = PlanCache::new();
         let order = OrderStrategy::Annealed { seed: 1, budget: 5 };
-        let a = cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
-        let b = cache
-            .get_or_plan_ordered(&recs, 1, "greedy-size", order)
-            .unwrap();
+        let a = cache.get_or_plan(&recs, &req()).unwrap();
+        let b = cache.get_or_plan(&recs, &req().with_order(order)).unwrap();
         assert_eq!(*a, *b, "same records, same strategy: same plan content");
         assert_eq!(cache.misses(), 2, "but distinct cache slots");
         assert_eq!(cache.len(), 2);
@@ -828,13 +936,14 @@ mod tests {
         let dir = scratch_dir("ordered-roundtrip");
         let recs = example_records();
         let order = OrderStrategy::MemoryAware;
+        let ordered = req().with_order(order);
         let warm = PlanCache::new();
-        warm.get_or_plan_ordered(&recs, 2, "greedy-size", order).unwrap();
+        warm.get_or_plan(&recs, &ordered.with_batch(2)).unwrap();
         assert_eq!(warm.persist_dir(&dir).unwrap().written, 1);
 
         // A natural warm start skips the file with the stale-order counter…
         let cold = PlanCache::new();
-        let report = cold.warm_start(&dir, &recs).unwrap();
+        let report = cold.warm_start(&dir, &recs, &req()).unwrap();
         assert_eq!(
             (report.loaded, report.skipped_stale_order),
             (0, 1),
@@ -845,9 +954,9 @@ mod tests {
         assert!(cold.is_empty());
         // …the matching order loads it without planning.
         let cold = PlanCache::new();
-        let report = cold.warm_start_ordered(&dir, &recs, order).unwrap();
+        let report = cold.warm_start(&dir, &recs, &ordered).unwrap();
         assert_eq!(report.loaded, 1, "{report:?}");
-        cold.get_or_plan_ordered(&recs, 2, "greedy-size", order).unwrap();
+        cold.get_or_plan(&recs, &ordered.with_batch(2)).unwrap();
         assert_eq!(cold.misses(), 0, "ordered warm start must avoid the planner");
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -888,9 +997,8 @@ mod tests {
         // share a resolved prefix, so the first loop plans once per
         // distinct prefix (waves 0, 2, 4 -> 3 misses)...
         for step in 0..dynamic.num_ops {
-            let order = OrderStrategy::Natural;
             cache
-                .get_or_plan_dynamic_resolved(&dynamic, step, 1, "greedy-size", order)
+                .get_or_plan_dynamic(&dynamic, &req().with_dynamic(DynamicMode::Resolved(step)))
                 .unwrap();
         }
         assert_eq!(cache.dynamic_misses(), 3, "one planner invocation per distinct prefix");
@@ -898,9 +1006,8 @@ mod tests {
         // ...and a second pass over the same resolved prefixes performs
         // zero planner invocations.
         for step in 0..dynamic.num_ops {
-            let order = OrderStrategy::Natural;
             cache
-                .get_or_plan_dynamic_resolved(&dynamic, step, 1, "greedy-size", order)
+                .get_or_plan_dynamic(&dynamic, &req().with_dynamic(DynamicMode::Resolved(step)))
                 .unwrap();
         }
         assert_eq!(cache.dynamic_misses(), 3, "second decode pass must not re-plan");
@@ -910,11 +1017,27 @@ mod tests {
     }
 
     #[test]
+    fn fully_resolved_and_past_the_last_boundary_share_a_slot() {
+        // The typed FullyResolved mode and a Resolved(op) past the last
+        // wave fingerprint identically, so the old `usize::MAX` sentinel's
+        // slot-sharing survives the typed redesign.
+        let cache = PlanCache::new();
+        let dynamic = decode_dynamic();
+        let full = req().with_dynamic(DynamicMode::FullyResolved);
+        cache.get_or_plan_dynamic(&dynamic, &full).unwrap();
+        assert_eq!(cache.dynamic_misses(), 1);
+        let last = req().with_dynamic(DynamicMode::Resolved(dynamic.num_ops - 1));
+        cache.get_or_plan_dynamic(&dynamic, &last).unwrap();
+        assert_eq!(cache.dynamic_misses(), 1, "past-the-last-boundary must be a hit");
+        assert_eq!(cache.dynamic_hits(), 1);
+    }
+
+    #[test]
     fn dynamic_slots_are_fifo_bounded() {
         use super::super::dynamic::DynamicRecord;
         use crate::records::UsageRecord;
         let cache = PlanCache::new();
-        let order = OrderStrategy::Natural;
+        let full = req().with_dynamic(DynamicMode::FullyResolved);
         let mk = |size: usize| {
             DynamicRecords::new(
                 vec![DynamicRecord {
@@ -926,22 +1049,20 @@ mod tests {
         };
         // One more distinct resolved prefix than the cap fits.
         for i in 0..=DYNAMIC_PLAN_CAP {
-            cache
-                .get_or_plan_dynamic(&mk(64 * (i + 1)), 1, "greedy-size", order)
-                .unwrap();
+            cache.get_or_plan_dynamic(&mk(64 * (i + 1)), &full).unwrap();
         }
         let resident = cache.dynamic.lock().unwrap().plans.len();
         assert_eq!(resident, DYNAMIC_PLAN_CAP, "cap must bound the dynamic slots");
         // The newest entry is resident: re-requesting it is a pure hit…
         let misses = cache.dynamic_misses();
         cache
-            .get_or_plan_dynamic(&mk(64 * (DYNAMIC_PLAN_CAP + 1)), 1, "greedy-size", order)
+            .get_or_plan_dynamic(&mk(64 * (DYNAMIC_PLAN_CAP + 1)), &full)
             .unwrap();
         assert_eq!(cache.dynamic_misses(), misses);
         // …the oldest was evicted: recurring costs one re-plan, never a
         // wrong hit, and re-enters the window.
         let misses = cache.dynamic_misses();
-        cache.get_or_plan_dynamic(&mk(64), 1, "greedy-size", order).unwrap();
+        cache.get_or_plan_dynamic(&mk(64), &full).unwrap();
         assert_eq!(cache.dynamic_misses(), misses + 1);
     }
 
@@ -949,17 +1070,14 @@ mod tests {
     fn complete_dynamic_plan_is_validated_and_batch_scaled() {
         let cache = PlanCache::new();
         let dynamic = decode_dynamic();
-        let full = cache
-            .get_or_plan_dynamic(&dynamic, 1, "greedy-size", OrderStrategy::Natural)
-            .unwrap();
+        let fullr = req().with_dynamic(DynamicMode::FullyResolved);
+        let full = cache.get_or_plan_dynamic(&dynamic, &fullr).unwrap();
         assert!(full.is_complete());
         full.offset_plan()
             .unwrap()
             .validate(&dynamic.final_records())
             .unwrap();
-        let b4 = cache
-            .get_or_plan_dynamic(&dynamic, 4, "greedy-size", OrderStrategy::Natural)
-            .unwrap();
+        let b4 = cache.get_or_plan_dynamic(&dynamic, &fullr.with_batch(4)).unwrap();
         assert_eq!(b4.peak, 4 * full.peak, "uniform scaling scales the multi-pass peak");
         b4.offset_plan()
             .unwrap()
@@ -971,49 +1089,38 @@ mod tests {
     fn max_servable_batch_dynamic_resolves_under_the_worst_wave_peak() {
         let cache = PlanCache::new();
         let dynamic = decode_dynamic();
-        let peak1 = cache
-            .get_or_plan_dynamic(&dynamic, 1, "greedy-size", OrderStrategy::Natural)
-            .unwrap()
-            .peak;
+        let fullr = req().with_dynamic(DynamicMode::FullyResolved);
+        let peak1 = cache.get_or_plan_dynamic(&dynamic, &fullr).unwrap().peak;
         let budget = 3 * peak1;
-        let cap = cache
-            .max_servable_batch_dynamic(&dynamic, "greedy-size", budget, OrderStrategy::Natural)
-            .unwrap();
+        let cap = cache.max_servable_batch_dynamic(&dynamic, &req(), budget).unwrap();
         assert!(cap >= 1);
         let at_cap = cache
-            .get_or_plan_dynamic(&dynamic, cap, "greedy-size", OrderStrategy::Natural)
+            .get_or_plan_dynamic(&dynamic, &fullr.with_batch(cap))
             .unwrap()
             .peak;
         let above = cache
-            .get_or_plan_dynamic(&dynamic, cap + 1, "greedy-size", OrderStrategy::Natural)
+            .get_or_plan_dynamic(&dynamic, &fullr.with_batch(cap + 1))
             .unwrap()
             .peak;
         assert!(at_cap <= budget && above > budget);
-        let order = OrderStrategy::Natural;
         assert_eq!(
-            cache
-                .max_servable_batch_dynamic(&dynamic, "greedy-size", peak1 - 1, order)
-                .unwrap(),
+            cache.max_servable_batch_dynamic(&dynamic, &req(), peak1 - 1).unwrap(),
             0
         );
-        assert!(matches!(
-            cache.max_servable_batch_dynamic(&dynamic, "belady", budget, OrderStrategy::Natural),
-            Err(PlanServiceError::UnknownStrategy(_))
-        ));
     }
 
     #[test]
     fn max_servable_batch_boundaries() {
         let recs = example_records();
         let cache = PlanCache::new();
-        let t1 = cache.get_or_plan(&recs, 1, "greedy-size").unwrap().total;
+        let t1 = cache.get_or_plan(&recs, &req()).unwrap().total;
         // Exactly the batch-1 footprint: batch 1 fits, batch 2 cannot.
-        assert_eq!(cache.max_servable_batch(&recs, "greedy-size", t1).unwrap(), 1);
+        assert_eq!(cache.max_servable_batch(&recs, &req(), t1).unwrap(), 1);
         // Below the batch-1 footprint: nothing fits.
-        assert_eq!(cache.max_servable_batch(&recs, "greedy-size", t1 - 1).unwrap(), 0);
+        assert_eq!(cache.max_servable_batch(&recs, &req(), t1 - 1).unwrap(), 0);
         // A generous budget fits proportionally more.
-        let b = cache.max_servable_batch(&recs, "greedy-size", 10 * t1).unwrap();
+        let b = cache.max_servable_batch(&recs, &req(), 10 * t1).unwrap();
         assert!(b >= 10, "10x budget fits only batch {b}");
-        assert!(cache.get_or_plan(&recs, b, "greedy-size").unwrap().total <= 10 * t1);
+        assert!(cache.get_or_plan(&recs, &req().with_batch(b)).unwrap().total <= 10 * t1);
     }
 }

@@ -25,12 +25,13 @@
 //! property that lets the [`PlanCache`](super::cache::PlanCache) key
 //! decode-step re-plans by the fingerprint of the resolved-size prefix and
 //! answer repeats from cache with zero planner invocations (see
-//! [`PlanCache::get_or_plan_dynamic_resolved`]).
+//! [`PlanCache::get_or_plan_dynamic`]).
 //!
-//! [`PlanCache::get_or_plan_dynamic_resolved`]:
-//!   super::cache::PlanCache::get_or_plan_dynamic_resolved
+//! [`PlanCache::get_or_plan_dynamic`]:
+//!   super::cache::PlanCache::get_or_plan_dynamic
 
 use super::offset::GreedyBySize;
+use super::request::DynamicMode;
 use super::{OffsetPlan, OffsetPlanner};
 use crate::records::{UsageRecord, UsageRecords};
 
@@ -220,25 +221,23 @@ impl MultiPassPlanner {
     /// [`MultiPassPlan::offset_plan`] satisfies the usual §5 feasibility
     /// (validated against the *final* sizes by the plan cache).
     pub fn plan(&self, dynamic: &DynamicRecords) -> MultiPassPlan {
-        self.plan_resolved(dynamic, usize::MAX)
+        self.plan_resolved(dynamic, DynamicMode::FullyResolved)
     }
 
-    /// Plan only the waves with `known_at <= resolved_through` — the §7
-    /// protocol stopped mid-decode. By the freeze invariant (module docs)
-    /// the returned offsets are a byte-identical prefix of every fuller
-    /// plan of the same records, which is what makes caching prefix plans
-    /// per resolved-size fingerprint sound.
-    pub fn plan_resolved(
-        &self,
-        dynamic: &DynamicRecords,
-        resolved_through: usize,
-    ) -> MultiPassPlan {
+    /// Plan only the waves `mode` resolves — the §7 protocol stopped
+    /// mid-decode ([`DynamicMode::Resolved`]; the typed replacement for
+    /// the former `resolved_through: usize` with its `usize::MAX`
+    /// sentinel). By the freeze invariant (module docs) the returned
+    /// offsets are a byte-identical prefix of every fuller plan of the
+    /// same records, which is what makes caching prefix plans per
+    /// resolved-size fingerprint sound.
+    pub fn plan_resolved(&self, dynamic: &DynamicRecords, mode: DynamicMode) -> MultiPassPlan {
         let records = dynamic.final_records();
         let mut waves: Vec<usize> = dynamic
             .records
             .iter()
             .map(|d| d.known_at)
-            .filter(|&w| w <= resolved_through)
+            .filter(|&w| mode.resolves(w))
             .collect();
         waves.sort_unstable();
         waves.dedup();
@@ -359,7 +358,7 @@ mod tests {
         let full = MultiPassPlanner.plan(&dynamic);
         assert!(full.is_complete());
         for &w in &dynamic.waves() {
-            let prefix = MultiPassPlanner.plan_resolved(&dynamic, w);
+            let prefix = MultiPassPlanner.plan_resolved(&dynamic, DynamicMode::Resolved(w));
             assert_eq!(prefix.passes, dynamic.waves().iter().filter(|&&x| x <= w).count());
             for d in &dynamic.records {
                 let id = d.record.id;

@@ -21,8 +21,11 @@
 //! **execution order** ([`order`], §7.1 — which topological sort the
 //! records are extracted under) and **dynamic shapes** ([`dynamic`], §7 —
 //! multi-pass planning when sizes resolve mid-inference, cached per
-//! resolved-size prefix). Both are first-class key dimensions of the
-//! [`cache::PlanCache`] behind [`service::PlanService`].
+//! resolved-size prefix). All four dimensions — strategy, order, batch,
+//! dynamic resolution state — travel together as one typed
+//! [`request::PlanRequest`], which is simultaneously the
+//! [`cache::PlanCache`] key behind [`service::PlanService`], the `.plan`
+//! v2 file-name grammar, and the construction argument of every engine.
 
 pub mod cache;
 pub mod dynamic;
@@ -30,6 +33,7 @@ pub mod interval_tree;
 pub mod offset;
 pub mod order;
 pub mod registry;
+pub mod request;
 pub mod serialize;
 pub mod service;
 pub mod shared;
@@ -41,6 +45,7 @@ pub use cache::{PersistReport, PlanCache, PlanServiceError, WarmStartReport};
 pub use dynamic::{DynamicRecord, DynamicRecords, MultiPassPlan, MultiPassPlanner};
 pub use order::{apply_order, AppliedOrder};
 pub use registry::{order_strategy, OrderStrategy};
+pub use request::{DynamicMode, ParseRequestError, PlanRequest};
 pub use service::{PlanService, PlanServiceStats};
 pub use validate::PlanError;
 

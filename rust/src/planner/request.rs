@@ -1,0 +1,395 @@
+//! `PlanRequest`: the one typed plan identity.
+//!
+//! Every plan in this crate is identified by four dimensions — offset
+//! **strategy** (§5/§6), execution **order** (§7.1), **batch** (serving
+//! scales every record uniformly), and §7 **dynamic resolution state**
+//! ([`DynamicMode`]). Before this type each dimension arrived as another
+//! positional argument and another method suffix (`_ordered`, `_dynamic`,
+//! `_dynamic_resolved`); a [`PlanRequest`] bundles them into a single
+//! builder-style value that is simultaneously:
+//!
+//! * the **cache key** ([`PlanCache`](super::cache::PlanCache) memoizes one
+//!   plan per `(records fingerprint, PlanRequest)`),
+//! * the **`.plan` v2 file-name grammar** (the
+//!   [`Display`](std::fmt::Display)/[`FromStr`] roundtrip below *is* the
+//!   on-disk name format, prefixed by the records fingerprint — see
+//!   [`super::serialize::plan_file_name`]), and
+//! * the **construction argument** of every consumer
+//!   ([`PlanService`](super::service::PlanService) methods,
+//!   [`Executor::with_request`](crate::exec::Executor::with_request),
+//!   `ExecutorEngine::for_request`, `PjrtEngine::with_request`).
+//!
+//! # Grammar
+//!
+//! ```text
+//! request = "b" batch "-" strategy "@" order [ "+" dynamic ]
+//! batch    = positive decimal integer
+//! strategy = canonical registry key          ; e.g. "greedy-size"
+//! order    = canonical order key             ; "natural" | "memory-aware" |
+//!                                            ; "annealed-s<seed>-t<trials>"
+//! dynamic  = "r" op-index | "full"           ; absent = static
+//! ```
+//!
+//! `@` and `+` never appear in strategy or order keys, so the last `@` and
+//! the last `+` split unambiguously; batch is digits-only, so the first
+//! `-` after it ends the batch field even though strategy keys contain
+//! `-`. Static requests render exactly the pre-redesign
+//! `b<batch>-<strategy>@<order>` segment, so every `.plan` v2 directory
+//! written before this type existed still parses (and warm-starts) today.
+//!
+//! # Example
+//!
+//! ```
+//! use tensorarena::planner::{DynamicMode, OrderStrategy, PlanRequest};
+//!
+//! let req = PlanRequest::new()            // greedy-size @ natural, batch 1
+//!     .with_strategy("greedy-breadth").unwrap()
+//!     .with_order(OrderStrategy::MemoryAware)
+//!     .with_batch(4);
+//! assert_eq!(req.to_string(), "b4-greedy-breadth@memory-aware");
+//! assert_eq!(req.to_string().parse::<PlanRequest>().unwrap(), req);
+//!
+//! // The §7 resolution state is part of the identity (and the grammar):
+//! let step = req.with_dynamic(DynamicMode::Resolved(17));
+//! assert_eq!(step.to_string(), "b4-greedy-breadth@memory-aware+r17");
+//! assert!("b4-greedy-breadth@memory-aware+full".parse::<PlanRequest>().is_ok());
+//! assert!("b0-greedy-size@natural".parse::<PlanRequest>().is_err()); // batch 0
+//! ```
+
+use super::registry::{self, OrderStrategy};
+use std::fmt;
+use std::str::FromStr;
+
+/// How much of a §7 dynamic-shape profile the request is resolved against
+/// — the typed replacement for the old `resolved_through: usize` parameter
+/// and its `usize::MAX` "everything" sentinel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DynamicMode {
+    /// No dynamic dimension: an ordinary static offset plan.
+    #[default]
+    Static,
+    /// The waves resolved once the given op has executed — a decode-step
+    /// prefix plan (see
+    /// [`MultiPassPlanner`](super::dynamic::MultiPassPlanner)).
+    Resolved(usize),
+    /// Every wave resolved: the complete multi-pass plan, whose worst-wave
+    /// peak sizes arenas and answers budget admission.
+    FullyResolved,
+}
+
+impl DynamicMode {
+    /// True for [`DynamicMode::Static`].
+    pub fn is_static(&self) -> bool {
+        matches!(self, DynamicMode::Static)
+    }
+
+    /// Translate the retired `resolved_through: usize` convention —
+    /// `usize::MAX` meant "every wave" — into the typed mode. Exists for
+    /// the deprecated positional-argument shims; new code should name the
+    /// mode directly.
+    pub fn from_resolved_through(resolved_through: usize) -> Self {
+        if resolved_through == usize::MAX {
+            DynamicMode::FullyResolved
+        } else {
+            DynamicMode::Resolved(resolved_through)
+        }
+    }
+
+    /// Whether a record whose size becomes known after op `known_at` is
+    /// resolved under this mode. Statically-known records (`known_at ==
+    /// 0`) are resolved under every mode.
+    pub fn resolves(&self, known_at: usize) -> bool {
+        match self {
+            DynamicMode::Static => known_at == 0,
+            DynamicMode::Resolved(op) => known_at <= *op,
+            DynamicMode::FullyResolved => true,
+        }
+    }
+}
+
+/// A typed plan identity: strategy × order × batch × dynamic mode.
+///
+/// Construct with [`PlanRequest::new`] (or
+/// [`PlanService::request`](super::service::PlanService::request) to seed
+/// the service's default strategy) and refine with the `with_*` builders —
+/// each returns a new value, so a base request for a serving configuration
+/// can be re-batched or re-resolved per lookup without mutation. See the
+/// [module docs](crate::planner::request) for the grammar its
+/// [`Display`](std::fmt::Display)/[`FromStr`] pair speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanRequest {
+    /// Canonical registry key — typed at construction, so no lookup on the
+    /// hot path ever re-parses a strategy string.
+    strategy: &'static str,
+    order: OrderStrategy,
+    batch: usize,
+    dynamic: DynamicMode,
+}
+
+impl Default for PlanRequest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Why a string failed to parse as a [`PlanRequest`] (or as a `.plan` file
+/// name). The cases are distinguished because plan-directory readers count
+/// them differently: an unknown strategy or order key is a *stale* file
+/// (another build's plans sharing the directory — forward compatibility),
+/// anything structurally wrong is corrupt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParseRequestError {
+    /// The grammar parsed but the strategy key is not registered.
+    UnknownStrategy(String),
+    /// The grammar parsed but the order key is not recognized (e.g. a
+    /// newer build's order strategy sharing the directory).
+    UnknownOrder(String),
+    /// The text does not speak the request grammar at all (this includes
+    /// pre-v2 names without an `@<order>` segment and batch 0).
+    Malformed(String),
+}
+
+impl fmt::Display for ParseRequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParseRequestError::UnknownStrategy(s) => {
+                write!(f, "unknown offset strategy '{s}' in plan request")
+            }
+            ParseRequestError::UnknownOrder(o) => {
+                write!(f, "unknown order key '{o}' in plan request")
+            }
+            ParseRequestError::Malformed(s) => write!(f, "malformed plan request '{s}'"),
+        }
+    }
+}
+
+impl std::error::Error for ParseRequestError {}
+
+impl PlanRequest {
+    /// The §6-recommended default strategy every fresh request starts
+    /// from (also
+    /// [`PlanService::DEFAULT_STRATEGY`](super::service::PlanService::DEFAULT_STRATEGY)).
+    pub const DEFAULT_STRATEGY: &'static str = "greedy-size";
+
+    /// Batch-1 static request for the default strategy under the natural
+    /// order.
+    pub fn new() -> Self {
+        PlanRequest {
+            strategy: Self::DEFAULT_STRATEGY,
+            order: OrderStrategy::Natural,
+            batch: 1,
+            dynamic: DynamicMode::Static,
+        }
+    }
+
+    /// Replace the strategy (any registry key or Table-2 display name; the
+    /// canonical key is stored).
+    pub fn with_strategy(
+        self,
+        strategy: &str,
+    ) -> Result<Self, super::cache::PlanServiceError> {
+        let key = registry::offset_key(strategy).ok_or_else(|| {
+            super::cache::PlanServiceError::UnknownStrategy(strategy.to_string())
+        })?;
+        Ok(PlanRequest { strategy: key, ..self })
+    }
+
+    /// Replace the strategy with an already-canonical registry key.
+    pub(crate) fn with_strategy_key(self, key: &'static str) -> Self {
+        PlanRequest { strategy: key, ..self }
+    }
+
+    /// Replace the execution order.
+    pub fn with_order(self, order: OrderStrategy) -> Self {
+        PlanRequest { order, ..self }
+    }
+
+    /// Replace the batch (clamped to at least 1 — batch-0 plans do not
+    /// exist).
+    pub fn with_batch(self, batch: usize) -> Self {
+        PlanRequest { batch: batch.max(1), ..self }
+    }
+
+    /// Replace the §7 dynamic resolution state.
+    pub fn with_dynamic(self, dynamic: DynamicMode) -> Self {
+        PlanRequest { dynamic, ..self }
+    }
+
+    /// Canonical registry key of the offset strategy.
+    pub fn strategy(&self) -> &'static str {
+        self.strategy
+    }
+
+    /// Execution-order strategy.
+    pub fn order(&self) -> OrderStrategy {
+        self.order
+    }
+
+    /// Batch size the records are scaled to (≥ 1).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// §7 dynamic resolution state.
+    pub fn dynamic(&self) -> DynamicMode {
+        self.dynamic
+    }
+}
+
+impl fmt::Display for PlanRequest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "b{}-{}@{}", self.batch, self.strategy, self.order.key())?;
+        match self.dynamic {
+            DynamicMode::Static => Ok(()),
+            DynamicMode::Resolved(op) => write!(f, "+r{op}"),
+            DynamicMode::FullyResolved => write!(f, "+full"),
+        }
+    }
+}
+
+impl FromStr for PlanRequest {
+    type Err = ParseRequestError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let malformed = || ParseRequestError::Malformed(s.to_string());
+        // The last '+' (never part of a strategy or order key) splits off
+        // the optional dynamic segment.
+        let (core, dynamic) = match s.rsplit_once('+') {
+            None => (s, DynamicMode::Static),
+            Some((core, "full")) => (core, DynamicMode::FullyResolved),
+            Some((core, tail)) => {
+                let op = tail
+                    .strip_prefix('r')
+                    .filter(|d| !d.is_empty() && d.bytes().all(|b| b.is_ascii_digit()))
+                    .and_then(|d| d.parse().ok())
+                    .ok_or_else(malformed)?;
+                (core, DynamicMode::Resolved(op))
+            }
+        };
+        // The last '@' splits strategy from order.
+        let (rest, order_key) = core.rsplit_once('@').ok_or_else(malformed)?;
+        if order_key.is_empty() || order_key.contains(char::is_whitespace) {
+            return Err(malformed());
+        }
+        let order = registry::order_strategy(order_key)
+            .ok_or_else(|| ParseRequestError::UnknownOrder(order_key.to_string()))?;
+        // "b<batch>-<strategy>": batch is digits-only, so the first '-'
+        // ends it even though strategy keys contain '-'.
+        let rest = rest.strip_prefix('b').ok_or_else(malformed)?;
+        let (batch_str, strategy) = rest.split_once('-').ok_or_else(malformed)?;
+        if batch_str.is_empty() || !batch_str.bytes().all(|b| b.is_ascii_digit()) {
+            return Err(malformed());
+        }
+        let batch: usize = batch_str.parse().map_err(|_| malformed())?;
+        if batch == 0 || strategy.is_empty() {
+            return Err(malformed());
+        }
+        let strategy = registry::offset_key(strategy)
+            .ok_or_else(|| ParseRequestError::UnknownStrategy(strategy.to_string()))?;
+        Ok(PlanRequest { strategy, order, batch, dynamic })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_accessors() {
+        let req = PlanRequest::new();
+        assert_eq!(req.strategy(), "greedy-size");
+        assert_eq!(req.order(), OrderStrategy::Natural);
+        assert_eq!(req.batch(), 1);
+        assert!(req.dynamic().is_static());
+        // Display names canonicalize; unknown strategies are typed errors.
+        assert_eq!(req.with_strategy("Greedy by Breadth").unwrap().strategy(), "greedy-breadth");
+        assert!(req.with_strategy("belady").is_err());
+        // Batch 0 clamps rather than panicking.
+        assert_eq!(req.with_batch(0).batch(), 1);
+    }
+
+    #[test]
+    fn display_roundtrips_through_fromstr() {
+        for strategy in registry::OFFSET_KEYS {
+            for order in [
+                OrderStrategy::Natural,
+                OrderStrategy::MemoryAware,
+                OrderStrategy::Annealed { seed: 7, budget: 25 },
+            ] {
+                for batch in [1usize, 2, 64] {
+                    for dynamic in [
+                        DynamicMode::Static,
+                        DynamicMode::Resolved(0),
+                        DynamicMode::Resolved(123),
+                        DynamicMode::FullyResolved,
+                    ] {
+                        let req = PlanRequest::new()
+                            .with_strategy(strategy)
+                            .unwrap()
+                            .with_order(order)
+                            .with_batch(batch)
+                            .with_dynamic(dynamic);
+                        let text = req.to_string();
+                        assert_eq!(text.parse::<PlanRequest>(), Ok(req), "{text}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_display_matches_the_pre_redesign_grammar() {
+        // Backwards compatibility anchor: the static rendering is exactly
+        // the `b<batch>-<strategy>@<order>` segment of pre-PR-5 plan-file
+        // names, so old plan directories keep warm-starting.
+        let req = PlanRequest::new()
+            .with_strategy("greedy-breadth")
+            .unwrap()
+            .with_order(OrderStrategy::Annealed { seed: 42, budget: 100 })
+            .with_batch(8);
+        assert_eq!(req.to_string(), "b8-greedy-breadth@annealed-s42-t100");
+    }
+
+    #[test]
+    fn malformed_and_stale_requests_are_distinguished() {
+        // Stale: grammar fine, strategy or order unknown (forward
+        // compatibility — another build's plans sharing a directory).
+        assert_eq!(
+            "b1-belady@natural".parse::<PlanRequest>(),
+            Err(ParseRequestError::UnknownStrategy("belady".into()))
+        );
+        assert_eq!(
+            "b1-greedy-size@profile-guided".parse::<PlanRequest>(),
+            Err(ParseRequestError::UnknownOrder("profile-guided".into()))
+        );
+        // Malformed: everything else.
+        for bad in [
+            "",
+            "b1-greedy-size",              // v1-era: no order segment
+            "b0-greedy-size@natural",      // batch 0
+            "b-greedy-size@natural",       // empty batch
+            "bx-greedy-size@natural",      // non-numeric batch
+            "b+1-greedy-size@natural",     // signed batch
+            "b1-@natural",                 // empty strategy
+            "b1-greedy-size@",             // empty order
+            "1-greedy-size@natural",       // missing 'b'
+            "b1-greedy-size@natural+r",    // dynamic tag without an index
+            "b1-greedy-size@natural+rx",   // non-numeric index
+            "b1-greedy-size@natural+half", // unknown dynamic tag
+        ] {
+            assert!(
+                matches!(bad.parse::<PlanRequest>(), Err(ParseRequestError::Malformed(_))),
+                "{bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dynamic_mode_resolution_predicate() {
+        assert!(DynamicMode::Static.resolves(0));
+        assert!(!DynamicMode::Static.resolves(1));
+        assert!(DynamicMode::Resolved(3).resolves(3));
+        assert!(!DynamicMode::Resolved(3).resolves(4));
+        assert!(DynamicMode::FullyResolved.resolves(usize::MAX));
+    }
+}

@@ -38,20 +38,18 @@
 //!
 //! ```text
 //! <dir>/
-//!   <fingerprint>-b<batch>-<strategy>@<order>.plan
+//!   <fingerprint>-<request>.plan       ; e.g. <fp>-b4-greedy-size@natural.plan
 //! ```
 //!
 //! * `<fingerprint>` — 16 lowercase hex digits, [`records_fingerprint`] of
 //!   the **batch-1** records (the plan-cache key fingerprint); for a
 //!   non-natural order these are the records of the *reordered* graph;
-//! * `<batch>` — decimal batch size (≥ 1) the plan was scaled to;
-//! * `<strategy>` — the canonical registry key (kebab-case, may itself
-//!   contain `-`; the separators are unambiguous because hex digits and
-//!   decimals never contain `-`);
-//! * `<order>` — the canonical order key (`natural`, `memory-aware`,
-//!   `annealed-s<seed>-t<trials>`); `@` never appears in strategy or order
-//!   keys, so the last `@` splits the name unambiguously. v1-era file names
-//!   (no `@<order>` segment) fail to parse and are skipped.
+//! * `<request>` — the canonical [`PlanRequest`] rendering
+//!   (`b<batch>-<strategy>@<order>`, see [`super::request`] for the full
+//!   grammar). Only **static** requests appear on disk; for them the
+//!   rendering is byte-identical to the pre-redesign name format, so old
+//!   plan directories keep warm-starting. v1-era file names (no
+//!   `@<order>` segment) fail to parse and are skipped.
 //!
 //! Each file's *content* is the v2 text format above, serialized against
 //! the batch-scaled records. Writers create files atomically (write to a
@@ -63,6 +61,7 @@
 //! execution order, and count the skips.
 
 use super::dynamic::DynamicRecords;
+use super::request::{DynamicMode, ParseRequestError, PlanRequest};
 use super::{OffsetPlan, SharedObjectPlan};
 use crate::records::UsageRecords;
 
@@ -93,21 +92,25 @@ pub fn records_fingerprint(records: &UsageRecords) -> u64 {
 }
 
 /// FNV-1a fingerprint of the **resolved-size prefix** of a dynamic record
-/// set: everything known once op `resolved_through` has executed — the op
-/// count, every record's interval and `known_at`, and the *sizes of the
-/// records resolved so far* (statically-known records, `known_at == 0`,
-/// are always resolved). Unresolved sizes are replaced by a tag byte, so
-/// two decode steps see the same fingerprint exactly when the same sizes
-/// have resolved to the same values — the §7 plan-cache key dimension
-/// (see [`super::cache::PlanCache::get_or_plan_dynamic_resolved`]).
-pub fn resolved_prefix_fingerprint(dynamic: &DynamicRecords, resolved_through: usize) -> u64 {
+/// set: everything known under `mode` — the op count, every record's
+/// interval and `known_at`, and the *sizes of the records resolved so far*
+/// (statically-known records, `known_at == 0`, are resolved under every
+/// [`DynamicMode`]). Unresolved sizes are replaced by a tag byte, so two
+/// decode steps see the same fingerprint exactly when the same sizes have
+/// resolved to the same values — the §7 plan-cache key dimension (see
+/// [`super::cache::PlanCache::get_or_plan_dynamic`]). In particular,
+/// `Resolved(op)` modes between the same wave boundaries — and
+/// [`DynamicMode::FullyResolved`] versus a `Resolved(op)` past the last
+/// boundary — fingerprint identically, which is what makes them share one
+/// cache slot.
+pub fn resolved_prefix_fingerprint(dynamic: &DynamicRecords, mode: DynamicMode) -> u64 {
     let mut buf = Vec::with_capacity(8 + dynamic.len() * 33);
     buf.extend_from_slice(&(dynamic.num_ops as u64).to_le_bytes());
     for d in &dynamic.records {
         buf.extend_from_slice(&(d.record.first_op as u64).to_le_bytes());
         buf.extend_from_slice(&(d.record.last_op as u64).to_le_bytes());
         buf.extend_from_slice(&(d.known_at as u64).to_le_bytes());
-        if d.known_at <= resolved_through {
+        if mode.resolves(d.known_at) {
             buf.push(1);
             buf.extend_from_slice(&(d.record.size as u64).to_le_bytes());
         } else {
@@ -117,20 +120,30 @@ pub fn resolved_prefix_fingerprint(dynamic: &DynamicRecords, resolved_through: u
     fnv1a(&buf)
 }
 
-/// Serialize an offset plan together with the records it plans, for the
-/// natural execution order.
-pub fn offset_plan_to_string(plan: &OffsetPlan, records: &UsageRecords) -> String {
-    offset_plan_to_string_ordered(plan, records, "natural")
+/// Serialize an offset plan together with the records it plans, stamping
+/// the canonical key of `req`'s execution order into the v2 header.
+/// `records` must be the batch-scaled records the plan was produced for
+/// (`base.scaled(req.batch())`).
+pub fn offset_plan_to_string(
+    plan: &OffsetPlan,
+    records: &UsageRecords,
+    req: &PlanRequest,
+) -> String {
+    to_string_with_order(plan, records, &req.order().key())
 }
 
-/// Serialize an offset plan together with the records it plans, stamping
-/// the canonical key of the execution order the records were extracted
-/// under into the v2 header.
+/// [`offset_plan_to_string`] with a raw order key instead of a typed
+/// request.
+#[deprecated(since = "0.3.0", note = "build a PlanRequest and call offset_plan_to_string")]
 pub fn offset_plan_to_string_ordered(
     plan: &OffsetPlan,
     records: &UsageRecords,
     order_key: &str,
 ) -> String {
+    to_string_with_order(plan, records, order_key)
+}
+
+fn to_string_with_order(plan: &OffsetPlan, records: &UsageRecords, order_key: &str) -> String {
     debug_assert!(
         !order_key.is_empty() && !order_key.contains(char::is_whitespace),
         "order key must be a single token"
@@ -304,17 +317,31 @@ fn parse_offset_plan(
         .map(|rows| (total, order, rows))
 }
 
-/// Load and verify an offset plan against `records`, expecting the natural
-/// execution order.
-pub fn offset_plan_from_str(text: &str, records: &UsageRecords) -> Result<OffsetPlan, LoadError> {
-    offset_plan_from_str_ordered(text, records, "natural")
+/// Load and verify an offset plan against `records`, additionally checking
+/// that the plan was serialized under `req`'s execution order — a plan's
+/// offsets are only meaningful for the record lifetimes of the order that
+/// produced it. `records` must be the batch-scaled records
+/// (`base.scaled(req.batch())`).
+pub fn offset_plan_from_str(
+    text: &str,
+    records: &UsageRecords,
+    req: &PlanRequest,
+) -> Result<OffsetPlan, LoadError> {
+    from_str_with_order(text, records, &req.order().key())
 }
 
-/// Load and verify an offset plan against `records`, additionally checking
-/// that the plan was serialized under the execution order whose canonical
-/// key is `expected_order` — a plan's offsets are only meaningful for the
-/// record lifetimes of the order that produced it.
+/// [`offset_plan_from_str`] with a raw order key instead of a typed
+/// request.
+#[deprecated(since = "0.3.0", note = "build a PlanRequest and call offset_plan_from_str")]
 pub fn offset_plan_from_str_ordered(
+    text: &str,
+    records: &UsageRecords,
+    expected_order: &str,
+) -> Result<OffsetPlan, LoadError> {
+    from_str_with_order(text, records, expected_order)
+}
+
+fn from_str_with_order(
     text: &str,
     records: &UsageRecords,
     expected_order: &str,
@@ -360,35 +387,36 @@ pub fn offset_plan_from_str_ordered(
 }
 
 /// File name of one plan inside a plan directory (see the module docs):
-/// `<fingerprint>-b<batch>-<strategy>@<order>.plan`, with `fingerprint` the
-/// **batch-1** records fingerprint and `order` the canonical order key —
-/// exactly the plan-cache key.
-pub fn plan_file_name(fingerprint: u64, batch: usize, strategy: &str, order: &str) -> String {
-    format!("{fingerprint:016x}-b{batch}-{strategy}@{order}.plan")
+/// `<fingerprint>-<request>.plan`, with `fingerprint` the **batch-1**
+/// records fingerprint and `<request>` the [`PlanRequest`]'s canonical
+/// [`Display`](std::fmt::Display) rendering — exactly the plan-cache key.
+/// For static requests this is byte-identical to the pre-redesign
+/// `<fingerprint>-b<batch>-<strategy>@<order>.plan` grammar.
+pub fn plan_file_name(fingerprint: u64, req: &PlanRequest) -> String {
+    format!("{fingerprint:016x}-{req}.plan")
 }
 
-/// Parse a plan-directory file name back into `(fingerprint, batch,
-/// strategy, order)`; `None` for anything that is not a well-formed v2
-/// plan file name — including v1-era names without the `@<order>` segment
-/// (loaders skip such entries).
-pub fn parse_plan_file_name(name: &str) -> Option<(u64, usize, String, String)> {
-    let stem = name.strip_suffix(".plan")?;
-    // '@' never appears in strategy or order keys, so the last '@' splits
-    // the stem unambiguously.
-    let (rest, order) = stem.rsplit_once('@')?;
-    // Hex digits never contain '-', so the first "-b" is our separator
-    // even though strategy keys (e.g. "greedy-breadth") contain "-b".
-    let (fp_hex, rest) = rest.split_once("-b")?;
+/// Parse a plan-directory file name back into `(fingerprint,
+/// PlanRequest)` via the request's [`FromStr`](std::str::FromStr)
+/// grammar. Errors distinguish unregistered strategy / order keys
+/// ([`ParseRequestError::UnknownStrategy`] /
+/// [`ParseRequestError::UnknownOrder`] — *stale* files, another build's
+/// plans) from anything structurally wrong
+/// ([`ParseRequestError::Malformed`] — including v1-era names without the
+/// `@<order>` segment); loaders skip all of them, with different
+/// counters.
+pub fn parse_plan_file_name(name: &str) -> Result<(u64, PlanRequest), ParseRequestError> {
+    let malformed = || ParseRequestError::Malformed(name.to_string());
+    let stem = name.strip_suffix(".plan").ok_or_else(malformed)?;
+    // Hex digits never contain '-', so the first '-' ends the fingerprint
+    // and the remainder is exactly the request grammar.
+    let (fp_hex, request) = stem.split_once('-').ok_or_else(malformed)?;
     if fp_hex.len() != 16 || !fp_hex.bytes().all(|b| b.is_ascii_hexdigit()) {
-        return None;
+        return Err(malformed());
     }
-    let fingerprint = u64::from_str_radix(fp_hex, 16).ok()?;
-    let (batch_str, strategy) = rest.split_once('-')?;
-    let batch: usize = batch_str.parse().ok()?;
-    if batch == 0 || strategy.is_empty() || order.is_empty() {
-        return None;
-    }
-    Some((fingerprint, batch, strategy.to_string(), order.to_string()))
+    let fingerprint = u64::from_str_radix(fp_hex, 16).map_err(|_| malformed())?;
+    let req: PlanRequest = request.parse()?;
+    Ok((fingerprint, req))
 }
 
 #[cfg(test)]
@@ -403,8 +431,8 @@ mod tests {
     fn offset_roundtrip() {
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
-        let loaded = offset_plan_from_str(&text, &recs).unwrap();
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
+        let loaded = offset_plan_from_str(&text, &recs, &PlanRequest::new()).unwrap();
         assert_eq!(loaded, plan);
     }
 
@@ -412,10 +440,10 @@ mod tests {
     fn checksum_detects_tampering() {
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         let tampered = text.replacen("0 ", "1 ", 1);
         assert!(matches!(
-            offset_plan_from_str(&tampered, &recs),
+            offset_plan_from_str(&tampered, &recs, &PlanRequest::new()),
             Err(LoadError::BadChecksum) | Err(LoadError::Malformed(_))
         ));
     }
@@ -424,21 +452,21 @@ mod tests {
     fn truncation_detected() {
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         let cut = &text[..text.len() / 2];
-        assert!(offset_plan_from_str(cut, &recs).is_err());
+        assert!(offset_plan_from_str(cut, &recs, &PlanRequest::new()).is_err());
     }
 
     #[test]
     fn stale_plan_rejected_on_model_change() {
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         // "model changed": same count, different sizes
         let mut changed = recs.clone();
         changed.records[2].size += 64;
         assert_eq!(
-            offset_plan_from_str(&text, &changed),
+            offset_plan_from_str(&text, &changed, &PlanRequest::new()),
             Err(LoadError::RecordMismatch { record: 2, field: "size" })
         );
     }
@@ -447,23 +475,23 @@ mod tests {
     fn corrupted_checksum_line_rejected() {
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         // Flip one hex digit of the checksum itself (keep it valid hex).
         let pos = text.rfind("checksum ").unwrap() + "checksum ".len();
         let mut bytes = text.into_bytes();
         bytes[pos] = if bytes[pos] == b'0' { b'1' } else { b'0' };
         let corrupted = String::from_utf8(bytes).unwrap();
         assert_eq!(
-            offset_plan_from_str(&corrupted, &recs),
+            offset_plan_from_str(&corrupted, &recs, &PlanRequest::new()),
             Err(LoadError::BadChecksum)
         );
         // Non-hex garbage in the checksum is also a checksum error.
         let plan2 = GreedyBySize.plan(&recs);
-        let mut garbled = offset_plan_to_string(&plan2, &recs);
+        let mut garbled = offset_plan_to_string(&plan2, &recs, &PlanRequest::new());
         garbled.truncate(garbled.rfind("checksum ").unwrap());
         garbled.push_str("checksum zzzz\n");
         assert_eq!(
-            offset_plan_from_str(&garbled, &recs),
+            offset_plan_from_str(&garbled, &recs, &PlanRequest::new()),
             Err(LoadError::BadChecksum)
         );
     }
@@ -472,9 +500,9 @@ mod tests {
     fn missing_checksum_is_truncation() {
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         let cut = text.split("checksum").next().unwrap();
-        assert_eq!(offset_plan_from_str(cut, &recs), Err(LoadError::Truncated));
+        assert_eq!(offset_plan_from_str(cut, &recs, &PlanRequest::new()), Err(LoadError::Truncated));
     }
 
     #[test]
@@ -482,11 +510,11 @@ mod tests {
         // Same sizes, shifted liveness: the loader must still refuse.
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         let mut changed = recs.clone();
         changed.records[1].last_op += 1;
         assert_eq!(
-            offset_plan_from_str(&text, &changed),
+            offset_plan_from_str(&text, &changed, &PlanRequest::new()),
             Err(LoadError::RecordMismatch { record: 1, field: "last_op" })
         );
     }
@@ -514,7 +542,7 @@ mod tests {
     fn dropped_record_line_rejected_even_with_consistent_checksum() {
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         // Drop record 3's line and recompute the checksum: without the
         // coverage check this half-loads with record 3 at offset 0.
         let dropped: String = text
@@ -523,7 +551,7 @@ mod tests {
             .map(|l| format!("{l}\n"))
             .collect();
         assert_eq!(
-            offset_plan_from_str(&rechecksum(&dropped), &recs),
+            offset_plan_from_str(&rechecksum(&dropped), &recs, &PlanRequest::new()),
             Err(LoadError::RecordMismatch { record: 3, field: "missing" })
         );
     }
@@ -532,7 +560,7 @@ mod tests {
     fn duplicated_record_line_rejected_even_with_consistent_checksum() {
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         let line3 = text.lines().find(|l| l.starts_with("3 ")).unwrap().to_string();
         let duplicated: String = text
             .lines()
@@ -545,7 +573,7 @@ mod tests {
             })
             .collect();
         assert_eq!(
-            offset_plan_from_str(&rechecksum(&duplicated), &recs),
+            offset_plan_from_str(&rechecksum(&duplicated), &recs, &PlanRequest::new()),
             Err(LoadError::RecordMismatch { record: 3, field: "duplicate" })
         );
     }
@@ -556,14 +584,14 @@ mod tests {
         // error, not a capacity-overflow abort in `vec![None; n]`.
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         let bombed = text.replacen(
             &format!("offset {} ", recs.len()),
             &format!("offset {} ", usize::MAX),
             1,
         );
         assert_eq!(
-            offset_plan_from_str(&rechecksum(&bombed), &recs),
+            offset_plan_from_str(&rechecksum(&bombed), &recs, &PlanRequest::new()),
             Err(LoadError::RecordMismatch { record: usize::MAX, field: "count" })
         );
     }
@@ -574,7 +602,7 @@ mod tests {
         // inflating it (checksum recomputed) must not poison the cache.
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string(&plan, &recs);
+        let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         let inflated = text.replacen(
             &format!(" {} natural\n", plan.total),
             &format!(" {} natural\n", recs.naive_total() + 1),
@@ -582,13 +610,13 @@ mod tests {
         );
         assert_ne!(inflated, text, "tampering must have hit the header");
         assert!(matches!(
-            offset_plan_from_str(&rechecksum(&inflated), &recs),
+            offset_plan_from_str(&rechecksum(&inflated), &recs, &PlanRequest::new()),
             Err(LoadError::Infeasible(_))
         ));
         // The exact naive bound itself is still legal (the Naive strategy).
         let naive_plan = crate::planner::offset::NaiveOffset.plan(&recs);
-        let naive_text = offset_plan_to_string(&naive_plan, &recs);
-        assert!(offset_plan_from_str(&naive_text, &recs).is_ok());
+        let naive_text = offset_plan_to_string(&naive_plan, &recs, &PlanRequest::new());
+        assert!(offset_plan_from_str(&naive_text, &recs, &PlanRequest::new()).is_ok());
     }
 
     #[test]
@@ -622,50 +650,57 @@ mod tests {
         let a = base([64, 128, 256]);
         // Decode steps between wave boundaries share the fingerprint...
         assert_eq!(
-            resolved_prefix_fingerprint(&a, 1),
-            resolved_prefix_fingerprint(&a, 2),
+            resolved_prefix_fingerprint(&a, DynamicMode::Resolved(1)),
+            resolved_prefix_fingerprint(&a, DynamicMode::Resolved(2)),
             "no wave resolves between ops 1 and 2"
         );
         // ...a newly-resolved wave changes it...
         assert_ne!(
-            resolved_prefix_fingerprint(&a, 1),
-            resolved_prefix_fingerprint(&a, 3)
+            resolved_prefix_fingerprint(&a, DynamicMode::Resolved(1)),
+            resolved_prefix_fingerprint(&a, DynamicMode::Resolved(3))
         );
         // ...and so does a different *value* for an already-resolved size,
         // while an unresolved size does not participate at all.
         let b = base([64, 999, 256]);
         assert_ne!(
-            resolved_prefix_fingerprint(&a, 1),
-            resolved_prefix_fingerprint(&b, 1),
+            resolved_prefix_fingerprint(&a, DynamicMode::Resolved(1)),
+            resolved_prefix_fingerprint(&b, DynamicMode::Resolved(1)),
             "resolved size differs"
         );
         let c = base([64, 128, 999]);
         assert_eq!(
-            resolved_prefix_fingerprint(&a, 1),
-            resolved_prefix_fingerprint(&c, 1),
+            resolved_prefix_fingerprint(&a, DynamicMode::Resolved(1)),
+            resolved_prefix_fingerprint(&c, DynamicMode::Resolved(1)),
             "unresolved tail sizes must not leak into the prefix fingerprint"
         );
         // With every wave resolved, all sizes participate.
         assert_ne!(
-            resolved_prefix_fingerprint(&a, usize::MAX),
-            resolved_prefix_fingerprint(&c, usize::MAX)
+            resolved_prefix_fingerprint(&a, DynamicMode::FullyResolved),
+            resolved_prefix_fingerprint(&c, DynamicMode::FullyResolved)
         );
     }
 
     #[test]
     fn plan_file_name_roundtrips() {
+        use crate::planner::registry::OrderStrategy;
         for (fp, batch, strategy, order) in [
-            (0u64, 1usize, "naive", "natural"),
-            (0xdeadbeefcafef00d, 8, "greedy-size", "memory-aware"),
-            (u64::MAX, 64, "greedy-breadth", "annealed-s42-t100"),
-            (1, 123, "strip-packing", "natural"),
+            (0u64, 1usize, "naive", OrderStrategy::Natural),
+            (0xdeadbeefcafef00d, 8, "greedy-size", OrderStrategy::MemoryAware),
+            (
+                u64::MAX,
+                64,
+                "greedy-breadth",
+                OrderStrategy::Annealed { seed: 42, budget: 100 },
+            ),
+            (1, 123, "strip-packing", OrderStrategy::Natural),
         ] {
-            let name = plan_file_name(fp, batch, strategy, order);
-            assert_eq!(
-                parse_plan_file_name(&name),
-                Some((fp, batch, strategy.to_string(), order.to_string())),
-                "{name}"
-            );
+            let req = PlanRequest::new()
+                .with_strategy(strategy)
+                .unwrap()
+                .with_batch(batch)
+                .with_order(order);
+            let name = plan_file_name(fp, &req);
+            assert_eq!(parse_plan_file_name(&name), Ok((fp, req)), "{name}");
         }
         // Junk that must not parse: tmp files, truncated names, batch 0,
         // pre-bump v1 names without the @<order> segment, empty order.
@@ -679,30 +714,43 @@ mod tests {
             "xyz-b1-naive@natural.plan",
             "0000000000000000.plan",
         ] {
-            assert_eq!(parse_plan_file_name(bad), None, "{bad}");
+            assert!(
+                matches!(parse_plan_file_name(bad), Err(ParseRequestError::Malformed(_))),
+                "{bad}"
+            );
         }
+        // A registered grammar with an unregistered strategy is *stale*,
+        // not malformed — warm starts count the two differently.
+        assert_eq!(
+            parse_plan_file_name("0000000000000000-b1-belady@natural.plan"),
+            Err(ParseRequestError::UnknownStrategy("belady".into()))
+        );
     }
 
     #[test]
     fn order_mismatch_is_rejected() {
+        use crate::planner::registry::OrderStrategy;
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let text = offset_plan_to_string_ordered(&plan, &recs, "annealed-s42-t100");
+        let annealed = PlanRequest::new()
+            .with_order(OrderStrategy::Annealed { seed: 42, budget: 100 });
+        let text = offset_plan_to_string(&plan, &recs, &annealed);
         // The matching expectation loads...
-        assert_eq!(
-            offset_plan_from_str_ordered(&text, &recs, "annealed-s42-t100").unwrap(),
-            plan
-        );
+        assert_eq!(offset_plan_from_str(&text, &recs, &annealed).unwrap(), plan);
         // ...a different order (including the natural default) does not.
         assert_eq!(
-            offset_plan_from_str(&text, &recs),
+            offset_plan_from_str(&text, &recs, &PlanRequest::new()),
             Err(LoadError::OrderMismatch {
                 found: "annealed-s42-t100".into(),
                 expected: "natural".into(),
             })
         );
         assert!(matches!(
-            offset_plan_from_str_ordered(&text, &recs, "memory-aware"),
+            offset_plan_from_str(
+                &text,
+                &recs,
+                &PlanRequest::new().with_order(OrderStrategy::MemoryAware)
+            ),
             Err(LoadError::OrderMismatch { .. })
         ));
     }
@@ -714,13 +762,13 @@ mod tests {
         // at the field layout.
         let recs = example_records();
         let plan = GreedyBySize.plan(&recs);
-        let v2 = offset_plan_to_string(&plan, &recs);
+        let v2 = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
         let v1 = rechecksum(
             &v2.replacen("tensorarena-plan v2", "tensorarena-plan v1", 1)
                 .replacen(&format!(" {} natural\n", plan.total), &format!(" {}\n", plan.total), 1),
         );
         assert_eq!(
-            offset_plan_from_str(&v1, &recs),
+            offset_plan_from_str(&v1, &recs, &PlanRequest::new()),
             Err(LoadError::UnsupportedVersion("v1".into()))
         );
     }

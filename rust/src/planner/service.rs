@@ -2,32 +2,38 @@
 //!
 //! One shared handle bundles the three pieces every layer needs:
 //! the strategy [`registry`](super::registry) (which strategies exist), the
-//! batch-aware [`PlanCache`] (plan once per `(model, batch, strategy,
-//! order)`), and the [`ArenaPool`] (recycle arena buffers instead of
-//! reallocating them per executor). The coordinator's engines, the CPU
-//! executor, the `serve` CLI, and the benches all take an
+//! [`PlanCache`] (plan once per `(records fingerprint,
+//! [`PlanRequest`])`), and the [`ArenaPool`] (recycle arena buffers
+//! instead of reallocating them per executor). The coordinator's engines,
+//! the CPU executor, the `serve` CLI, and the benches all take an
 //! `Arc<PlanService>` so their plans and arenas — and the hit/reuse
 //! counters that prove the reuse — come from one place.
 //!
-//! Execution order is a first-class plan dimension here:
-//! [`PlanService::plan_graph`] applies the requested
-//! [`OrderStrategy`](super::registry::OrderStrategy) — reorder, validate,
-//! *then* extract records — so the annealed orders of
-//! [`order`](super::order) reach the serving hot path, and every ordered
-//! plan lands in an order-keyed cache slot.
+//! Every entry point takes a [`PlanRequest`]: strategy, execution order,
+//! batch, and §7 dynamic resolution state travel as one typed value
+//! instead of positional arguments and method suffixes. Start from
+//! [`PlanService::request`] (seeded with the service's default strategy)
+//! and refine with the builder:
 //!
-//! Dynamic shapes (§7) ride the same path:
-//! [`PlanService::plan_graph_dynamic`] overlays a decode-tail profile on
-//! the ordered records and plans the multi-pass plan through the
-//! resolved-prefix-keyed dynamic cache slots, so a wave-aware engine's
-//! decode-step re-plans ([`PlanService::plan_dynamic_resolved`]) and its
-//! budget admission ([`PlanService::max_servable_batch_dynamic`], resolved
-//! under the worst-wave peak) are amortized exactly like static plans.
+//! * [`PlanService::plan`] / [`PlanService::plan_graph`] — static plans
+//!   (the graph variant applies the request's order *before* record
+//!   extraction, so annealed orders reach the serving hot path and every
+//!   ordered plan lands in an order-keyed cache slot);
+//! * [`PlanService::plan_dynamic`] / [`PlanService::plan_graph_dynamic`] —
+//!   §7 multi-pass plans through the resolved-prefix-keyed dynamic slots,
+//!   so a wave-aware engine's decode-step re-plans
+//!   ([`DynamicMode::Resolved`]) are amortized exactly like static plans;
+//! * [`PlanService::max_servable_batch`] /
+//!   [`PlanService::max_servable_batch_dynamic`] — budget admission
+//!   (dynamic admission resolves under the worst-wave peak);
+//! * [`PlanService::warm_start`] / [`PlanService::persist_dir`] — the plan
+//!   directory, whose file names are the request's `Display` grammar.
 
 use super::cache::{PersistReport, PlanCache, PlanServiceError, WarmStartReport};
 use super::dynamic::{DynamicRecords, MultiPassPlan};
 use super::order::{self, AppliedOrder};
 use super::registry::OrderStrategy;
+use super::request::{DynamicMode, PlanRequest};
 use super::{registry, OffsetPlan};
 use crate::arena::ArenaPool;
 use crate::graph::Graph;
@@ -39,8 +45,8 @@ use std::sync::Arc;
 ///
 /// # Example
 ///
-/// Every engine sharing the handle plans each `(model, batch, strategy,
-/// order)` exactly once:
+/// Every engine sharing the handle plans each [`PlanRequest`] exactly
+/// once:
 ///
 /// ```
 /// use tensorarena::models;
@@ -49,8 +55,9 @@ use std::sync::Arc;
 ///
 /// let service = PlanService::shared();
 /// let records = UsageRecords::from_graph(&models::blazeface());
-/// let a = service.plan_records(&records, 2, None).unwrap();
-/// let b = service.plan_records(&records, 2, None).unwrap();
+/// let req = service.request().with_batch(2);
+/// let a = service.plan(&records, &req).unwrap();
+/// let b = service.plan(&records, &req).unwrap();
 /// assert!(std::sync::Arc::ptr_eq(&a, &b)); // planned once, shared
 /// assert_eq!(service.stats().cache_misses, 1);
 /// assert_eq!(service.stats().cache_hits, 1);
@@ -84,7 +91,7 @@ pub struct PlanServiceStats {
 }
 
 impl PlanServiceStats {
-    /// Cache hits / lookups, or 0.0 before the first lookup.
+    /// Cache hits / lookups, or 0.0 before the first lookup (never `NaN`).
     pub fn cache_hit_rate(&self) -> f64 {
         let total = self.cache_hits + self.cache_misses;
         if total == 0 {
@@ -102,8 +109,9 @@ impl Default for PlanService {
 }
 
 impl PlanService {
-    /// The §6-recommended default offset strategy.
-    pub const DEFAULT_STRATEGY: &'static str = "greedy-size";
+    /// The §6-recommended default offset strategy (=
+    /// [`PlanRequest::DEFAULT_STRATEGY`]).
+    pub const DEFAULT_STRATEGY: &'static str = PlanRequest::DEFAULT_STRATEGY;
 
     /// Service with the default strategy and a fresh cache/pool.
     pub fn new() -> Self {
@@ -131,6 +139,23 @@ impl PlanService {
         self.default_strategy
     }
 
+    /// A batch-1 static [`PlanRequest`] for the service's default strategy
+    /// under the natural order — the starting point for every builder
+    /// chain against this service.
+    pub fn request(&self) -> PlanRequest {
+        PlanRequest::new().with_strategy_key(self.default_strategy)
+    }
+
+    /// Build a request from an optional strategy name (`None` = the
+    /// service default) — what the deprecated positional-argument shims
+    /// funnel through.
+    fn request_for(&self, strategy: Option<&str>) -> Result<PlanRequest, PlanServiceError> {
+        match strategy {
+            None => Ok(self.request()),
+            Some(s) => self.request().with_strategy(s),
+        }
+    }
+
     /// The underlying plan cache.
     pub fn cache(&self) -> &PlanCache {
         &self.cache
@@ -141,20 +166,32 @@ impl PlanService {
         &self.pool
     }
 
-    /// Plan `records` (batch-1 form) scaled to `batch` under `strategy`
-    /// (`None` = the service default), through the cache, for the natural
-    /// execution order.
+    /// The static plan `req` identifies for `records` (batch-1 form; for a
+    /// non-natural order, the records of the graph reordered under that
+    /// order), through the cache. See [`PlanCache::get_or_plan`].
+    pub fn plan(
+        &self,
+        records: &UsageRecords,
+        req: &PlanRequest,
+    ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
+        self.cache.get_or_plan(records, req)
+    }
+
+    /// [`Self::plan`] with untyped `(batch, strategy)` arguments, for the
+    /// natural execution order.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call plan")]
     pub fn plan_records(
         &self,
         records: &UsageRecords,
         batch: usize,
         strategy: Option<&str>,
     ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
-        self.plan_records_ordered(records, batch, strategy, OrderStrategy::Natural)
+        let req = self.request_for(strategy)?.with_batch(batch);
+        self.plan(records, &req)
     }
 
-    /// Plan `records` (batch-1 form, extracted under `order`) scaled to
-    /// `batch` under `strategy`, through the order-keyed cache slot.
+    /// [`Self::plan`] with untyped `(batch, strategy, order)` arguments.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call plan")]
     pub fn plan_records_ordered(
         &self,
         records: &UsageRecords,
@@ -162,12 +199,8 @@ impl PlanService {
         strategy: Option<&str>,
         order: OrderStrategy,
     ) -> Result<Arc<OffsetPlan>, PlanServiceError> {
-        self.cache.get_or_plan_ordered(
-            records,
-            batch,
-            strategy.unwrap_or(self.default_strategy),
-            order,
-        )
+        let req = self.request_for(strategy)?.with_batch(batch).with_order(order);
+        self.plan(records, &req)
     }
 
     /// Apply `order` to `graph` — reorder ops, validate the order, report
@@ -177,49 +210,46 @@ impl PlanService {
         order::apply_order(graph, order)
     }
 
-    /// Apply `order` to `graph`, extract usage records from the reordered
-    /// graph, and plan them at `batch`. The returned records are the
-    /// *ordered* records — the ones every later cache lookup, budget query,
-    /// and warm start for this serving configuration must use — and the
-    /// [`AppliedOrder`] receipt carries the breadth delta `ArenaStats`
+    /// Apply the request's order to `graph`, extract usage records from
+    /// the reordered graph, and plan them. The returned records are the
+    /// *ordered* records — the ones every later cache lookup, budget
+    /// query, and warm start for this serving configuration must use — and
+    /// the [`AppliedOrder`] receipt carries the breadth delta `ArenaStats`
     /// reports.
     pub fn plan_graph(
         &self,
         graph: &Graph,
-        batch: usize,
-        strategy: Option<&str>,
-        order: OrderStrategy,
+        req: &PlanRequest,
     ) -> Result<(UsageRecords, Arc<OffsetPlan>, AppliedOrder), PlanServiceError> {
-        let (ordered, applied) = self.apply_order(graph, order);
+        let (ordered, applied) = self.apply_order(graph, req.order());
         let records = UsageRecords::from_graph(&ordered);
-        let plan = self.plan_records_ordered(&records, batch, strategy, order)?;
+        let plan = self.plan(&records, req)?;
         Ok((records, plan, applied))
     }
 
-    /// The complete §7 multi-pass plan for `dynamic` (batch-1 records of
-    /// the order-applied graph) scaled to `batch`, through the dynamic
-    /// cache slot; see [`PlanCache::get_or_plan_dynamic`]. The plan's
+    /// The §7 multi-pass plan `req` identifies for `dynamic` (batch-1
+    /// records of the order-applied graph), through the dynamic cache
+    /// slot; see [`PlanCache::get_or_plan_dynamic`]. With
+    /// [`DynamicMode::FullyResolved`] this is the complete plan whose
     /// [`MultiPassPlan::peak`] is the worst-wave peak the wave-aware
-    /// executor sizes its pooled arena from.
+    /// executor sizes its pooled arena from; with
+    /// [`DynamicMode::Resolved`]`(op)` it is the decode-step prefix plan —
+    /// repeats with an unchanged resolved prefix are cache hits with zero
+    /// planner invocations.
     pub fn plan_dynamic(
         &self,
         dynamic: &DynamicRecords,
-        batch: usize,
-        strategy: Option<&str>,
-        order: OrderStrategy,
+        req: &PlanRequest,
     ) -> Result<Arc<MultiPassPlan>, PlanServiceError> {
-        self.cache.get_or_plan_dynamic(
-            dynamic,
-            batch,
-            strategy.unwrap_or(self.default_strategy),
-            order,
-        )
+        self.cache.get_or_plan_dynamic(dynamic, req)
     }
 
-    /// The §7 prefix plan of the waves resolved once op `resolved_through`
-    /// has executed — the decode-step re-plan. Repeats with an unchanged
-    /// resolved prefix are cache hits with zero planner invocations; see
-    /// [`PlanCache::get_or_plan_dynamic_resolved`].
+    /// [`Self::plan_dynamic`] with an untyped `resolved_through` op index
+    /// (`usize::MAX` meaning fully resolved).
+    #[deprecated(
+        since = "0.3.0",
+        note = "build a PlanRequest with a DynamicMode and call plan_dynamic"
+    )]
     pub fn plan_dynamic_resolved(
         &self,
         dynamic: &DynamicRecords,
@@ -228,71 +258,70 @@ impl PlanService {
         strategy: Option<&str>,
         order: OrderStrategy,
     ) -> Result<Arc<MultiPassPlan>, PlanServiceError> {
-        self.cache.get_or_plan_dynamic_resolved(
-            dynamic,
-            resolved_through,
-            batch,
-            strategy.unwrap_or(self.default_strategy),
-            order,
-        )
+        let req = self
+            .request_for(strategy)?
+            .with_batch(batch)
+            .with_order(order)
+            .with_dynamic(DynamicMode::from_resolved_through(resolved_through));
+        self.plan_dynamic(dynamic, &req)
     }
 
-    /// Apply `order` to `graph`, extract its records, overlay the
-    /// decode-tail dynamic profile starting at `decode_from` (see
+    /// Apply the request's order to `graph`, extract its records, overlay
+    /// the decode-tail dynamic profile starting at `decode_from` (see
     /// [`DynamicRecords::decode_tail`]), and plan the complete multi-pass
-    /// plan at `batch` — the dynamic analogue of [`Self::plan_graph`].
-    /// This is the one-call *library* path; `serve --dynamic` and the
-    /// wave-aware engine perform the same sequence inline because they
-    /// also need the intermediate records/ordered graph, so any change to
-    /// the overlay here must be mirrored there (the cache keys must
-    /// agree).
+    /// plan — the dynamic analogue of [`Self::plan_graph`] (the request's
+    /// own [`DynamicMode`] is overridden with
+    /// [`DynamicMode::FullyResolved`]: this entry point exists to produce
+    /// the complete plan). This is the one-call *library* path; `serve
+    /// --dynamic` and the wave-aware engine perform the same sequence
+    /// inline because they also need the intermediate records/ordered
+    /// graph, so any change to the overlay here must be mirrored there
+    /// (the cache keys must agree).
     pub fn plan_graph_dynamic(
         &self,
         graph: &Graph,
-        batch: usize,
-        strategy: Option<&str>,
-        order: OrderStrategy,
+        req: &PlanRequest,
         decode_from: usize,
     ) -> Result<(DynamicRecords, Arc<MultiPassPlan>, AppliedOrder), PlanServiceError> {
-        let (ordered, applied) = self.apply_order(graph, order);
+        let (ordered, applied) = self.apply_order(graph, req.order());
         let records = UsageRecords::from_graph(&ordered);
         let dynamic = DynamicRecords::decode_tail(&records, decode_from);
-        let plan = self.plan_dynamic(&dynamic, batch, strategy, order)?;
+        let plan =
+            self.plan_dynamic(&dynamic, &req.with_dynamic(DynamicMode::FullyResolved))?;
         Ok((dynamic, plan, applied))
     }
 
     /// Largest batch whose **worst-wave** multi-pass peak fits
     /// `budget_bytes` — what budget admission for a dynamic-shape engine
-    /// resolves; see [`PlanCache::max_servable_batch_dynamic`].
+    /// resolves; see [`PlanCache::max_servable_batch_dynamic`]. The
+    /// request's batch and dynamic mode are immaterial (every probe plans
+    /// the complete plan at the probed batch).
     pub fn max_servable_batch_dynamic(
         &self,
         dynamic: &DynamicRecords,
+        req: &PlanRequest,
         budget_bytes: usize,
-        strategy: Option<&str>,
-        order: OrderStrategy,
     ) -> Result<usize, PlanServiceError> {
-        self.cache.max_servable_batch_dynamic(
-            dynamic,
-            strategy.unwrap_or(self.default_strategy),
-            budget_bytes,
-            order,
-        )
+        self.cache.max_servable_batch_dynamic(dynamic, req, budget_bytes)
     }
 
-    /// Largest batch whose planned footprint fits `budget_bytes`, for the
-    /// natural execution order; see [`PlanCache::max_servable_batch`].
+    /// Largest batch whose planned footprint under the request's strategy
+    /// and order fits `budget_bytes` (`records` must be the reordered
+    /// graph's records for a non-natural order); see
+    /// [`PlanCache::max_servable_batch`]. The request's batch is
+    /// immaterial — the query searches over batches.
     pub fn max_servable_batch(
         &self,
         records: &UsageRecords,
+        req: &PlanRequest,
         budget_bytes: usize,
-        strategy: Option<&str>,
     ) -> Result<usize, PlanServiceError> {
-        self.max_servable_batch_ordered(records, budget_bytes, strategy, OrderStrategy::Natural)
+        self.cache.max_servable_batch(records, req, budget_bytes)
     }
 
-    /// Largest batch whose planned footprint fits `budget_bytes`, resolved
-    /// under `order` (the records must be the reordered graph's); see
-    /// [`PlanCache::max_servable_batch_ordered`].
+    /// [`Self::max_servable_batch`] with untyped `(strategy, order)`
+    /// arguments.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call max_servable_batch")]
     pub fn max_servable_batch_ordered(
         &self,
         records: &UsageRecords,
@@ -300,36 +329,33 @@ impl PlanService {
         strategy: Option<&str>,
         order: OrderStrategy,
     ) -> Result<usize, PlanServiceError> {
-        self.cache.max_servable_batch_ordered(
-            records,
-            strategy.unwrap_or(self.default_strategy),
-            budget_bytes,
-            order,
-        )
+        let req = self.request_for(strategy)?.with_order(order);
+        self.max_servable_batch(records, &req, budget_bytes)
     }
 
     /// Seed the plan cache from a plan directory (see
-    /// [`PlanCache::warm_start`]), for the natural execution order: a
-    /// restarted server re-plans nothing it has already planned.
+    /// [`PlanCache::warm_start`]): only files written under the request's
+    /// execution order are loaded (stale-order files are skipped and
+    /// counted); every `(batch, strategy)` in the directory is seeded, so
+    /// a restarted server re-plans nothing it has already planned.
     pub fn warm_start(
         &self,
         dir: &Path,
         records: &UsageRecords,
+        req: &PlanRequest,
     ) -> std::io::Result<WarmStartReport> {
-        self.cache.warm_start(dir, records)
+        self.cache.warm_start(dir, records, req)
     }
 
-    /// Seed the plan cache from a plan directory for an order-keyed serving
-    /// configuration (see [`PlanCache::warm_start_ordered`]): only files
-    /// written under the same canonical order key are loaded; stale-order
-    /// files are skipped and counted.
+    /// [`Self::warm_start`] with an untyped order.
+    #[deprecated(since = "0.3.0", note = "build a PlanRequest and call warm_start")]
     pub fn warm_start_ordered(
         &self,
         dir: &Path,
         records: &UsageRecords,
         order: OrderStrategy,
     ) -> std::io::Result<WarmStartReport> {
-        self.cache.warm_start_ordered(dir, records, order)
+        self.warm_start(dir, records, &self.request().with_order(order))
     }
 
     /// Persist every resident plan into `dir` (see
@@ -359,12 +385,15 @@ mod tests {
     use crate::models::example_records;
 
     #[test]
-    fn default_strategy_is_registered_and_used() {
+    fn default_strategy_seeds_the_request_builder() {
         let svc = PlanService::new();
         assert_eq!(svc.default_strategy(), "greedy-size");
+        assert_eq!(svc.request().strategy(), "greedy-size");
         let recs = example_records();
-        let a = svc.plan_records(&recs, 1, None).unwrap();
-        let b = svc.plan_records(&recs, 1, Some("greedy-size")).unwrap();
+        let a = svc.plan(&recs, &svc.request()).unwrap();
+        let b = svc
+            .plan(&recs, &svc.request().with_strategy("greedy-size").unwrap())
+            .unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         let st = svc.stats();
         assert_eq!((st.cache_misses, st.cache_hits), (1, 1));
@@ -372,18 +401,28 @@ mod tests {
     }
 
     #[test]
+    fn cache_hit_rate_is_zero_before_any_lookup() {
+        // The no-lookup hit rate is a defined 0.0, never NaN — rendered
+        // stats must not poison dashboards on a fresh service.
+        let svc = PlanService::new();
+        let rate = svc.stats().cache_hit_rate();
+        assert_eq!(rate, 0.0);
+        assert!(!rate.is_nan());
+        assert_eq!(PlanServiceStats::default().cache_hit_rate(), 0.0);
+    }
+
+    #[test]
     fn unknown_default_strategy_rejected() {
         assert!(PlanService::with_default_strategy("belady").is_err());
-        assert!(PlanService::with_default_strategy("Greedy by Breadth").is_ok());
+        let svc = PlanService::with_default_strategy("Greedy by Breadth").unwrap();
+        assert_eq!(svc.request().strategy(), "greedy-breadth");
     }
 
     #[test]
     fn plan_graph_plans_the_extracted_records() {
         let svc = PlanService::new();
         let g = crate::models::example_net();
-        let (records, plan, applied) = svc
-            .plan_graph(&g, 1, None, OrderStrategy::Natural)
-            .unwrap();
+        let (records, plan, applied) = svc.plan_graph(&g, &svc.request()).unwrap();
         assert_eq!(plan.offsets.len(), records.len());
         assert_eq!(applied.breadth_delta(), 0);
         plan.validate(&records).unwrap();
@@ -395,7 +434,7 @@ mod tests {
         let g = crate::models::blazeface();
         let decode_from = g.num_ops() / 2;
         let (dynamic, plan, applied) = svc
-            .plan_graph_dynamic(&g, 1, None, OrderStrategy::Natural, decode_from)
+            .plan_graph_dynamic(&g, &svc.request(), decode_from)
             .unwrap();
         assert!(plan.is_complete());
         assert!(plan.passes >= 2, "a decode tail must produce multiple waves");
@@ -407,13 +446,13 @@ mod tests {
         // A decode loop over every op: the first sequence plans once per
         // distinct resolved prefix, the second plans nothing.
         for step in 0..dynamic.num_ops {
-            svc.plan_dynamic_resolved(&dynamic, step, 1, None, OrderStrategy::Natural)
-                .unwrap();
+            let req = svc.request().with_dynamic(DynamicMode::Resolved(step));
+            svc.plan_dynamic(&dynamic, &req).unwrap();
         }
         let misses = svc.stats().dynamic_misses;
         for step in 0..dynamic.num_ops {
-            svc.plan_dynamic_resolved(&dynamic, step, 1, None, OrderStrategy::Natural)
-                .unwrap();
+            let req = svc.request().with_dynamic(DynamicMode::Resolved(step));
+            svc.plan_dynamic(&dynamic, &req).unwrap();
         }
         assert_eq!(
             svc.stats().dynamic_misses,
@@ -427,31 +466,46 @@ mod tests {
         let svc = PlanService::new();
         let g = crate::models::blazeface();
         let order = OrderStrategy::Annealed { seed: 3, budget: 20 };
-        let (records, plan, applied) = svc.plan_graph(&g, 1, None, order).unwrap();
+        let req = svc.request().with_order(order);
+        let (records, plan, applied) = svc.plan_graph(&g, &req).unwrap();
         // The plan is feasible for the *ordered* records, and the reported
         // breadth never regresses the natural order (annealing invariant).
         plan.validate(&records).unwrap();
         assert!(applied.order_breadth <= applied.natural_breadth);
         assert_eq!(applied.key(), order.key());
         // Re-planning the same configuration is an order-keyed cache hit.
-        let _ = svc.plan_graph(&g, 1, None, order).unwrap();
+        let _ = svc.plan_graph(&g, &req).unwrap();
         let st = svc.stats();
         assert_eq!((st.cache_misses, st.cache_hits), (1, 1));
         // Budget queries resolve under the same order: the cap's plan fits,
         // the next batch's does not.
         let budget = 2 * plan.total;
-        let cap = svc
-            .max_servable_batch_ordered(&records, budget, None, order)
-            .unwrap();
+        let cap = svc.max_servable_batch(&records, &req, budget).unwrap();
         assert!(cap >= 1);
-        let at_cap = svc
-            .plan_records_ordered(&records, cap, None, order)
-            .unwrap()
-            .total;
-        let above = svc
-            .plan_records_ordered(&records, cap + 1, None, order)
-            .unwrap()
-            .total;
+        let at_cap = svc.plan(&records, &req.with_batch(cap)).unwrap().total;
+        let above = svc.plan(&records, &req.with_batch(cap + 1)).unwrap().total;
         assert!(at_cap <= budget && above > budget);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_reach_the_same_cache_slots() {
+        // The one-release compatibility promise: a positional-argument call
+        // and its request-shaped replacement must share a slot.
+        let svc = PlanService::new();
+        let recs = example_records();
+        let a = svc.plan_records(&recs, 2, None).unwrap();
+        let b = svc.plan(&recs, &svc.request().with_batch(2)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(svc.stats().cache_misses, 1);
+        let order = OrderStrategy::MemoryAware;
+        let c = svc.plan_records_ordered(&recs, 1, Some("greedy-size"), order).unwrap();
+        let d = svc.plan(&recs, &svc.request().with_order(order)).unwrap();
+        assert!(Arc::ptr_eq(&c, &d));
+        assert_eq!(
+            svc.max_servable_batch_ordered(&recs, 10 * a.total, None, order).unwrap(),
+            svc.max_servable_batch(&recs, &svc.request().with_order(order), 10 * a.total)
+                .unwrap()
+        );
     }
 }

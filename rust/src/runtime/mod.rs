@@ -10,6 +10,12 @@
 //! HLO text — not a serialized `HloModuleProto` — is the interchange format
 //! because jax ≥ 0.5 emits protos with 64-bit instruction ids that the
 //! pinned xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Working-set accounting does **not** live here: the serving engine over
+//! these executables (`coordinator::engine::PjrtEngine`) takes a shared
+//! `PlanService` handle plus a typed `PlanRequest` and resolves its
+//! planned peaks, budget admission, and stats through the same plan cache
+//! as the pure-Rust path — this module only compiles and runs batches.
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};

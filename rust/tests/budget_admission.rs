@@ -15,7 +15,9 @@ use std::time::Duration;
 use tensorarena::coordinator::engine::ExecutorEngine;
 use tensorarena::coordinator::{BatchPolicy, EchoEngine, Engine, ModelServer, ServeError};
 use tensorarena::models;
-use tensorarena::planner::{apply_order, registry, OrderStrategy, PlanCache, PlanService};
+use tensorarena::planner::{
+    apply_order, registry, OrderStrategy, PlanCache, PlanRequest, PlanService,
+};
 use tensorarena::records::UsageRecords;
 use tensorarena::rng::SplitMix64;
 
@@ -48,13 +50,14 @@ fn random_records(seed: u64) -> UsageRecords {
 /// 3. monotone in budget: more bytes never shrink the admitted batch.
 fn check_admission_properties(seed: u64, recs: &UsageRecords, strategy: &str, budgets: &[usize]) {
     let cache = PlanCache::new();
+    let req = PlanRequest::new().with_strategy(strategy).unwrap();
     let mut sorted: Vec<usize> = budgets.to_vec();
     sorted.sort_unstable();
     let mut last_cap = 0usize;
     let mut last_budget = 0usize;
     for &budget in &sorted {
         let cap = cache
-            .max_servable_batch(recs, strategy, budget)
+            .max_servable_batch(recs, &req, budget)
             .unwrap_or_else(|e| panic!("seed {seed}, {strategy}, budget {budget}: {e}"));
         // (3) monotone in budget.
         assert!(
@@ -68,14 +71,14 @@ fn check_admission_properties(seed: u64, recs: &UsageRecords, strategy: &str, bu
         }
         if cap >= 1 {
             // (1) the admitted batch's *planned* peak fits.
-            let planned = cache.get_or_plan(recs, cap, strategy).unwrap().total;
+            let planned = cache.get_or_plan(recs, &req.with_batch(cap)).unwrap().total;
             assert!(
                 planned <= budget,
                 "seed {seed}, {strategy}: admitted batch {cap} needs {planned} > budget {budget}"
             );
         }
         // (2) maximality: one more sample would not fit (direct planning).
-        let over = cache.get_or_plan(recs, cap + 1, strategy).unwrap().total;
+        let over = cache.get_or_plan(recs, &req.with_batch(cap + 1)).unwrap().total;
         assert!(
             over > budget,
             "seed {seed}, {strategy}: batch {} fits {over} <= {budget} but only {cap} admitted",
@@ -91,7 +94,10 @@ fn sweep_admission(seeds: std::ops::Range<u64>) {
         let recs = random_records(seed);
         let mut rng = SplitMix64::new(seed ^ 0x9e3779b97f4a7c15);
         for key in registry::OFFSET_KEYS {
-            let t1 = PlanCache::new().get_or_plan(&recs, 1, key).unwrap().total;
+            let t1 = PlanCache::new()
+                .get_or_plan(&recs, &PlanRequest::new().with_strategy(key).unwrap())
+                .unwrap()
+                .total;
             // Randomized budgets around the interesting region: below the
             // batch-1 arena up to ~9x it, plus exact boundaries.
             let mut budgets = vec![0, t1 - 1, t1, t1 + 1, 4 * t1];
@@ -122,11 +128,12 @@ fn admission_agrees_with_service_level_query_on_real_models() {
     for key in registry::OFFSET_KEYS {
         let svc = PlanService::with_default_strategy(key).unwrap();
         let cache = PlanCache::new();
-        let t1 = cache.get_or_plan(&recs, 1, key).unwrap().total;
+        let req = PlanRequest::new().with_strategy(key).unwrap();
+        let t1 = cache.get_or_plan(&recs, &req).unwrap().total;
         for budget in [0, t1, 2 * t1 + t1 / 2, 10 * t1] {
             assert_eq!(
-                svc.max_servable_batch(&recs, budget, None).unwrap(),
-                cache.max_servable_batch(&recs, key, budget).unwrap(),
+                svc.max_servable_batch(&recs, &svc.request(), budget).unwrap(),
+                cache.max_servable_batch(&recs, &req, budget).unwrap(),
                 "{key}, budget {budget}"
             );
         }
@@ -147,11 +154,11 @@ fn server_under_budget_clamps_batches_and_counts_refusals() {
     let g = models::blazeface();
     let in_elems = g.tensor(g.inputs[0]).num_elements();
     let recs = UsageRecords::from_graph(&g);
-    let t1 = service.plan_records(&recs, 1, None).unwrap().total;
+    let t1 = service.plan(&recs, &service.request()).unwrap().total;
     let budget = 3 * t1 + t1 / 2;
-    let peak8 = service.plan_records(&recs, 8, None).unwrap().total;
+    let peak8 = service.plan(&recs, &service.request().with_batch(8)).unwrap().total;
     assert!(budget < peak8, "budget must sit below the batch-8 peak for this test");
-    let cap = service.max_servable_batch(&recs, budget, None).unwrap();
+    let cap = service.max_servable_batch(&recs, &service.request(), budget).unwrap();
     assert!((1..8).contains(&cap), "unexpected budget cap {cap}");
 
     let server = {
@@ -202,7 +209,7 @@ fn server_under_budget_clamps_batches_and_counts_refusals() {
     // The served arena actually fit the budget: the resident plan at the
     // largest executed batch is within it.
     let peak_served = service
-        .plan_records(&recs, snap.max_batch_seen.max(1), None)
+        .plan(&recs, &service.request().with_batch(snap.max_batch_seen.max(1)))
         .unwrap()
         .total;
     assert!(peak_served <= budget);
@@ -233,10 +240,10 @@ fn annealed_order_serving_peak_and_admission_resolve_under_the_order() {
         let ordered_recs = UsageRecords::from_graph(&ordered);
         let natural_recs = UsageRecords::from_graph(&g);
         let annealed_peak = svc
-            .plan_records_ordered(&ordered_recs, 1, None, order)
+            .plan(&ordered_recs, &svc.request().with_order(order))
             .unwrap()
             .total;
-        let natural_peak = svc.plan_records(&natural_recs, 1, None).unwrap().total;
+        let natural_peak = svc.plan(&natural_recs, &svc.request()).unwrap().total;
         if annealed_peak <= natural_peak {
             improved_or_equal += 1;
         }
@@ -253,22 +260,15 @@ fn annealed_order_serving_peak_and_admission_resolve_under_the_order() {
     let svc = PlanService::shared();
     let (ordered, _) = apply_order(&g, order);
     let recs = UsageRecords::from_graph(&ordered);
-    let t1 = svc.plan_records_ordered(&recs, 1, None, order).unwrap().total;
+    let oreq = svc.request().with_order(order);
+    let t1 = svc.plan(&recs, &oreq).unwrap().total;
     let budget = 3 * t1 + t1 / 2;
-    let cap = svc
-        .max_servable_batch_ordered(&recs, budget, None, order)
-        .unwrap();
+    let cap = svc.max_servable_batch(&recs, &oreq, budget).unwrap();
     assert!(cap >= 1, "a 3.5x budget must admit at least batch 1");
-    let at_cap = svc
-        .plan_records_ordered(&recs, cap, None, order)
-        .unwrap()
-        .total;
-    let above = svc
-        .plan_records_ordered(&recs, cap + 1, None, order)
-        .unwrap()
-        .total;
+    let at_cap = svc.plan(&recs, &oreq.with_batch(cap)).unwrap().total;
+    let above = svc.plan(&recs, &oreq.with_batch(cap + 1)).unwrap().total;
     assert!(at_cap <= budget && above > budget, "cap {cap} not tight under the order");
-    let engine = ExecutorEngine::with_order(&g, Arc::clone(&svc), "greedy-size", order, 7).unwrap();
+    let engine = ExecutorEngine::for_request(&g, Arc::clone(&svc), &oreq, 7).unwrap();
     assert_eq!(
         engine.max_servable_batch(budget),
         Some(cap),
@@ -284,9 +284,14 @@ fn annealed_order_serving_peak_and_admission_resolve_under_the_order() {
             move || {
                 let g = models::blazeface();
                 Box::new(
-                    ExecutorEngine::with_order(&g, svc, "greedy-size", order, 7)
-                        .expect("engine")
-                        .with_max_batch(8),
+                    ExecutorEngine::for_request(
+                        &g,
+                        svc,
+                        &PlanRequest::new().with_order(order),
+                        7,
+                    )
+                    .expect("engine")
+                    .with_max_batch(8),
                 )
             },
             BatchPolicy {

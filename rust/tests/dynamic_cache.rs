@@ -10,7 +10,7 @@ use tensorarena::coordinator::engine::ExecutorEngine;
 use tensorarena::coordinator::{BatchPolicy, Engine, ModelServer};
 use tensorarena::models;
 use tensorarena::planner::{
-    DynamicRecord, DynamicRecords, MultiPassPlanner, OrderStrategy, PlanService,
+    DynamicMode, DynamicRecord, DynamicRecords, MultiPassPlanner, PlanRequest, PlanService,
 };
 use tensorarena::records::{UsageRecord, UsageRecords};
 use tensorarena::rng::SplitMix64;
@@ -35,7 +35,7 @@ fn second_decode_pass_over_the_same_prefix_plans_nothing() {
     let dynamic = synth_decode(3, 48, 24);
     assert!(dynamic.num_dynamic() > 0);
     for step in 0..dynamic.num_ops {
-        svc.plan_dynamic_resolved(&dynamic, step, 1, None, OrderStrategy::Natural)
+        svc.plan_dynamic(&dynamic, &svc.request().with_dynamic(DynamicMode::Resolved(step)))
             .unwrap();
     }
     let first_pass_misses = svc.stats().dynamic_misses;
@@ -44,7 +44,7 @@ fn second_decode_pass_over_the_same_prefix_plans_nothing() {
         "a decode tail must actually create multiple prefixes"
     );
     for step in 0..dynamic.num_ops {
-        svc.plan_dynamic_resolved(&dynamic, step, 1, None, OrderStrategy::Natural)
+        svc.plan_dynamic(&dynamic, &svc.request().with_dynamic(DynamicMode::Resolved(step)))
             .unwrap();
     }
     let st = svc.stats();
@@ -72,7 +72,7 @@ fn prefix_plans_are_frozen_prefixes_across_random_workloads() {
         assert!(full.growth.windows(2).all(|w| w[0] <= w[1]));
         assert_eq!(full.peak, *full.growth.last().unwrap());
         for &w in &dynamic.waves() {
-            let prefix = MultiPassPlanner.plan_resolved(&dynamic, w);
+            let prefix = MultiPassPlanner.plan_resolved(&dynamic, DynamicMode::Resolved(w));
             for d in &dynamic.records {
                 let id = d.record.id;
                 if d.known_at <= w {
@@ -105,11 +105,10 @@ fn wave_aware_serving_is_bit_identical_and_amortized() {
             move || {
                 let g = models::blazeface();
                 Box::new(
-                    ExecutorEngine::with_dynamic(
+                    ExecutorEngine::for_request_dynamic(
                         &g,
                         svc,
-                        "greedy-size",
-                        OrderStrategy::Natural,
+                        &PlanRequest::new(),
                         decode_from,
                         7,
                     )
@@ -162,13 +161,11 @@ fn dynamic_budget_admission_refuses_over_peak_bursts() {
     let decode_from = g.num_ops() / 2;
     let svc = PlanService::shared();
     let dyn_recs = DynamicRecords::decode_tail(&UsageRecords::from_graph(&g), decode_from);
-    let peak1 = svc
-        .plan_dynamic(&dyn_recs, 1, None, OrderStrategy::Natural)
-        .unwrap()
-        .peak;
+    let full = svc.request().with_dynamic(DynamicMode::FullyResolved);
+    let peak1 = svc.plan_dynamic(&dyn_recs, &full).unwrap().peak;
     let budget = 2 * peak1;
     let cap = svc
-        .max_servable_batch_dynamic(&dyn_recs, budget, None, OrderStrategy::Natural)
+        .max_servable_batch_dynamic(&dyn_recs, &svc.request(), budget)
         .unwrap();
     assert!(cap >= 1 && cap < 8, "budget must bind below the policy cap (cap {cap})");
     let server = {
@@ -177,11 +174,10 @@ fn dynamic_budget_admission_refuses_over_peak_bursts() {
             move || {
                 let g = models::blazeface();
                 Box::new(
-                    ExecutorEngine::with_dynamic(
+                    ExecutorEngine::for_request_dynamic(
                         &g,
                         svc,
-                        "greedy-size",
-                        OrderStrategy::Natural,
+                        &PlanRequest::new(),
                         decode_from,
                         7,
                     )
@@ -257,22 +253,16 @@ fn stale_resolved_sizes_miss_instead_of_serving_the_wrong_plan() {
     };
     let seq_a = base(64);
     let seq_b = base(256);
-    let a = svc
-        .plan_dynamic_resolved(&seq_a, 1, 1, None, OrderStrategy::Natural)
-        .unwrap();
-    let b = svc
-        .plan_dynamic_resolved(&seq_b, 1, 1, None, OrderStrategy::Natural)
-        .unwrap();
+    let step1 = svc.request().with_dynamic(DynamicMode::Resolved(1));
+    let a = svc.plan_dynamic(&seq_a, &step1).unwrap();
+    let b = svc.plan_dynamic(&seq_b, &step1).unwrap();
     assert_eq!(svc.stats().dynamic_misses, 2, "the stale prefix must be a miss");
     assert_ne!(a.peak, b.peak, "the two sequences need different arenas");
     // Before wave 1 resolves, the sequences are indistinguishable — and
     // share a slot (the unresolved size is not part of the prefix).
-    let pa = svc
-        .plan_dynamic_resolved(&seq_a, 0, 1, None, OrderStrategy::Natural)
-        .unwrap();
-    let pb = svc
-        .plan_dynamic_resolved(&seq_b, 0, 1, None, OrderStrategy::Natural)
-        .unwrap();
+    let step0 = svc.request().with_dynamic(DynamicMode::Resolved(0));
+    let pa = svc.plan_dynamic(&seq_a, &step0).unwrap();
+    let pb = svc.plan_dynamic(&seq_b, &step0).unwrap();
     assert_eq!(svc.stats().dynamic_misses, 3, "shared unresolved prefix plans once");
     assert!(Arc::ptr_eq(&pa, &pb));
 }
@@ -282,19 +272,18 @@ fn dynamic_plans_are_order_and_strategy_keyed() {
     // The full cache key is (resolved prefix, batch, strategy, order):
     // coinciding record sets under different orders or strategy namespaces
     // must not cross-contaminate.
+    use tensorarena::planner::OrderStrategy;
     let svc = PlanService::shared();
     let dynamic = synth_decode(9, 24, 12);
-    svc.plan_dynamic(&dynamic, 1, Some("greedy-size"), OrderStrategy::Natural)
+    let full = svc.request().with_dynamic(DynamicMode::FullyResolved);
+    svc.plan_dynamic(&dynamic, &full).unwrap();
+    svc.plan_dynamic(&dynamic, &full.with_order(OrderStrategy::MemoryAware))
         .unwrap();
-    svc.plan_dynamic(&dynamic, 1, Some("greedy-size"), OrderStrategy::MemoryAware)
+    svc.plan_dynamic(&dynamic, &full.with_strategy("greedy-breadth").unwrap())
         .unwrap();
-    svc.plan_dynamic(&dynamic, 1, Some("greedy-breadth"), OrderStrategy::Natural)
-        .unwrap();
-    svc.plan_dynamic(&dynamic, 2, Some("greedy-size"), OrderStrategy::Natural)
-        .unwrap();
+    svc.plan_dynamic(&dynamic, &full.with_batch(2)).unwrap();
     assert_eq!(svc.stats().dynamic_misses, 4, "four distinct keys, four slots");
-    svc.plan_dynamic(&dynamic, 1, Some("greedy-size"), OrderStrategy::Natural)
-        .unwrap();
+    svc.plan_dynamic(&dynamic, &full).unwrap();
     assert_eq!(svc.stats().dynamic_misses, 4);
 }
 
@@ -304,11 +293,10 @@ fn dynamic_engine_planned_peaks_drive_the_envelope() {
     // monotonically with batch, so ModelServer's spawn-time envelope
     // pre-resolution works unchanged for dynamic engines.
     let g = models::blazeface();
-    let e = ExecutorEngine::with_dynamic(
+    let e = ExecutorEngine::for_request_dynamic(
         &g,
         PlanService::shared(),
-        "greedy-size",
-        OrderStrategy::Natural,
+        &PlanRequest::new(),
         g.num_ops() / 2,
         3,
     )

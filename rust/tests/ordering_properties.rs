@@ -24,7 +24,7 @@ use tensorarena::planner::order::{
     order_max_breadth, reorder_graph,
 };
 use tensorarena::planner::serialize::records_fingerprint;
-use tensorarena::planner::{registry, OrderStrategy, PlanService};
+use tensorarena::planner::{registry, OrderStrategy, PlanRequest, PlanService};
 use tensorarena::records::UsageRecords;
 use tensorarena::rng::SplitMix64;
 
@@ -208,8 +208,9 @@ fn stable_fingerprints_give_order_keyed_cache_hits() {
     let g = models::blazeface();
     let svc = PlanService::shared();
     let order = OrderStrategy::Annealed { seed: 3, budget: 20 };
-    let _a = ExecutorEngine::with_order(&g, Arc::clone(&svc), "greedy-size", order, 1).unwrap();
-    let _b = ExecutorEngine::with_order(&g, Arc::clone(&svc), "greedy-size", order, 2).unwrap();
+    let req = PlanRequest::new().with_order(order);
+    let _a = ExecutorEngine::for_request(&g, Arc::clone(&svc), &req, 1).unwrap();
+    let _b = ExecutorEngine::for_request(&g, Arc::clone(&svc), &req, 2).unwrap();
     let st = svc.stats();
     assert_eq!(st.cache_misses, 1, "second ordered engine re-ran the planner");
     assert_eq!(st.cache_hits, 1);
@@ -238,8 +239,13 @@ fn ordered_execution_is_numerically_identical() {
     let g = random_dag(21);
     let order = OrderStrategy::Annealed { seed: 13, budget: 25 };
     let mut nat = ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 5).unwrap();
-    let mut ann =
-        ExecutorEngine::with_order(&g, PlanService::shared(), "greedy-size", order, 5).unwrap();
+    let mut ann = ExecutorEngine::for_request(
+        &g,
+        PlanService::shared(),
+        &PlanRequest::new().with_order(order),
+        5,
+    )
+    .unwrap();
     let mut rng = SplitMix64::new(1);
     let mut x = vec![0f32; 2 * nat.in_elems()];
     rng.fill_f32(&mut x, 1.0);

@@ -8,8 +8,12 @@
 #![cfg(feature = "pjrt")]
 
 use std::path::Path;
+use std::sync::Arc;
 use tensorarena::coordinator::engine::PjrtEngine;
-use tensorarena::coordinator::{ArenaStats, BatchPolicy, ModelServer};
+use tensorarena::coordinator::{BatchPolicy, Engine, ModelServer};
+use tensorarena::models;
+use tensorarena::planner::{PlanRequest, PlanService};
+use tensorarena::records::UsageRecords;
 use tensorarena::rng::SplitMix64;
 use tensorarena::runtime::{Runtime, VariantSet};
 
@@ -76,13 +80,19 @@ fn pick_selects_smallest_sufficient_variant() {
     assert_eq!(vs.pick(99).batch, vs.max_batch());
 }
 
+/// The PJRT engine's planner twin: the L2 CNN's batch-1 usage records.
+fn twin_records() -> UsageRecords {
+    UsageRecords::from_graph(&models::l2_cnn())
+}
+
 #[test]
 fn pjrt_engine_pads_partial_batches() {
     let Some(dir) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
     let vs = VariantSet::load(&rt, dir, "model", &DIMS, OUT).unwrap();
-    let mut engine = PjrtEngine::new(vs, ArenaStats::default());
-    use tensorarena::coordinator::Engine;
+    let mut engine =
+        PjrtEngine::with_request(vs, PlanService::shared(), twin_records(), &PlanRequest::new())
+            .unwrap();
     let mut rng = SplitMix64::new(3);
     let mut x = vec![0f32; 3 * IN_ELEMS];
     rng.fill_f32(&mut x, 1.0);
@@ -96,14 +106,68 @@ fn pjrt_engine_pads_partial_batches() {
 }
 
 #[test]
+fn pjrt_engine_accounting_resolves_through_the_shared_plan_cache() {
+    // The ROADMAP item this PR pays down: the AOT engine no longer carries
+    // a frozen ArenaStats snapshot — planned_peak and max_servable_batch
+    // go through the same PlanService as the pure-Rust path, so probes hit
+    // the shared cache and the reported stats carry live counters.
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let vs = VariantSet::load(&rt, dir, "model", &DIMS, OUT).unwrap();
+    let service = PlanService::shared();
+    let recs = twin_records();
+    let req = PlanRequest::new();
+    let engine =
+        PjrtEngine::with_request(vs, Arc::clone(&service), recs.clone(), &req).unwrap();
+    // Peaks come from real plans and grow with batch.
+    let p1 = engine.planned_peak(1).expect("planner-managed engine answers");
+    let p4 = engine.planned_peak(4).expect("planner-managed engine answers");
+    assert!(p1 > 0 && p4 > p1);
+    assert_eq!(p1, service.plan(&recs, &req).unwrap().total, "peak must be the cached plan");
+    // The budget query is tight and resolves through the same cache.
+    let cap = engine.max_servable_batch(2 * p1).expect("budget query answered");
+    assert!(cap >= 1);
+    assert!(engine.planned_peak(cap).unwrap() <= 2 * p1);
+    assert!(engine.planned_peak(cap + 1).unwrap() > 2 * p1);
+    // Every probe above landed in the shared cache: repeating the whole
+    // sequence performs zero further planner invocations.
+    let misses = service.stats().cache_misses;
+    let _ = engine.planned_peak(1);
+    let _ = engine.planned_peak(4);
+    let _ = engine.max_servable_batch(2 * p1);
+    assert_eq!(
+        service.stats().cache_misses,
+        misses,
+        "repeated probes must be pure cache hits"
+    );
+    // And the stats line reports live service counters, not a snapshot.
+    let stats = engine.arena_stats();
+    assert_eq!(stats.strategy, "greedy-size");
+    assert!(stats.cache_misses >= 1 && stats.cache_hits >= 1);
+    assert!(stats.planned_bytes > 0 && stats.naive_bytes >= stats.planned_bytes);
+}
+
+#[test]
 fn full_serving_path_through_coordinator() {
     let Some(_) = artifacts() else { return };
+    let service = PlanService::shared();
     let server = ModelServer::spawn(
-        || {
-            let rt = Runtime::cpu().expect("PJRT");
-            let vs = VariantSet::load(&rt, Path::new("artifacts"), "model", &DIMS, OUT)
-                .expect("artifacts");
-            Box::new(PjrtEngine::new(vs, ArenaStats::default()))
+        {
+            let service = Arc::clone(&service);
+            move || {
+                let rt = Runtime::cpu().expect("PJRT");
+                let vs = VariantSet::load(&rt, Path::new("artifacts"), "model", &DIMS, OUT)
+                    .expect("artifacts");
+                Box::new(
+                    PjrtEngine::with_request(
+                        vs,
+                        service,
+                        twin_records(),
+                        &PlanRequest::new().with_batch(4),
+                    )
+                    .expect("twin plan"),
+                )
+            }
         },
         BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2), ..BatchPolicy::default() },
     );

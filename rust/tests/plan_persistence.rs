@@ -15,7 +15,8 @@ use tensorarena::coordinator::{BatchPolicy, ModelServer};
 use tensorarena::models;
 use tensorarena::planner::serialize::{self, plan_file_name, LoadError};
 use tensorarena::planner::{
-    apply_order, DynamicRecords, OrderStrategy, PlanCache, PlanService, WarmStartReport,
+    apply_order, DynamicMode, DynamicRecords, OrderStrategy, PlanCache, PlanRequest, PlanService,
+    WarmStartReport,
 };
 use tensorarena::records::UsageRecords;
 
@@ -35,11 +36,22 @@ fn example() -> UsageRecords {
     UsageRecords::from_graph(&models::blazeface())
 }
 
+/// Batch-1 greedy-size @ natural — the test workhorse.
+fn req() -> PlanRequest {
+    PlanRequest::new()
+}
+
+/// The request a `(batch, strategy)` pair names under the natural order —
+/// what the golden file names are built from.
+fn named(batch: usize, strategy: &str) -> PlanRequest {
+    PlanRequest::new().with_strategy(strategy).unwrap().with_batch(batch)
+}
+
 /// Populate a directory with genuine plans for `recs`.
 fn populate(recs: &UsageRecords, dir: &std::path::Path, batches: &[usize]) -> usize {
     let cache = PlanCache::new();
     for &b in batches {
-        cache.get_or_plan(recs, b, "greedy-size").unwrap();
+        cache.get_or_plan(recs, &req().with_batch(b)).unwrap();
     }
     cache.persist_dir(dir).unwrap().written
 }
@@ -53,9 +65,9 @@ fn directory_roundtrip_golden() {
     let recs = example();
     let warm = PlanCache::new();
     for b in [1usize, 2, 8] {
-        warm.get_or_plan(&recs, b, "greedy-size").unwrap();
+        warm.get_or_plan(&recs, &req().with_batch(b)).unwrap();
     }
-    warm.get_or_plan(&recs, 1, "greedy-breadth").unwrap();
+    warm.get_or_plan(&recs, &named(1, "greedy-breadth")).unwrap();
     let report = warm.persist_dir(&dir).unwrap();
     assert_eq!(report.written, 4);
 
@@ -66,16 +78,16 @@ fn directory_roundtrip_golden() {
         .collect();
     names.sort();
     let mut expected = vec![
-        plan_file_name(fp, 1, "greedy-size", "natural"),
-        plan_file_name(fp, 2, "greedy-size", "natural"),
-        plan_file_name(fp, 8, "greedy-size", "natural"),
-        plan_file_name(fp, 1, "greedy-breadth", "natural"),
+        plan_file_name(fp, &named(1, "greedy-size")),
+        plan_file_name(fp, &named(2, "greedy-size")),
+        plan_file_name(fp, &named(8, "greedy-size")),
+        plan_file_name(fp, &named(1, "greedy-breadth")),
     ];
     expected.sort();
     assert_eq!(names, expected, "directory layout is the golden format");
 
     let cold = PlanCache::new();
-    let report = cold.warm_start(&dir, &recs).unwrap();
+    let report = cold.warm_start(&dir, &recs, &req()).unwrap();
     assert_eq!(
         report,
         WarmStartReport { loaded: 4, ..WarmStartReport::default() }
@@ -83,8 +95,8 @@ fn directory_roundtrip_golden() {
     let keys = [(1, "greedy-size"), (2, "greedy-size"), (8, "greedy-size"), (1, "greedy-breadth")];
     for (b, s) in keys {
         assert_eq!(
-            *cold.get_or_plan(&recs, b, s).unwrap(),
-            *warm.get_or_plan(&recs, b, s).unwrap(),
+            *cold.get_or_plan(&recs, &named(b, s)).unwrap(),
+            *warm.get_or_plan(&recs, &named(b, s)).unwrap(),
             "plan ({b}, {s}) diverged across the restart"
         );
     }
@@ -100,22 +112,20 @@ fn truncated_file_is_skipped_not_served() {
     // Truncate the batch-2 file mid-body.
     let victim = dir.join(plan_file_name(
         serialize::records_fingerprint(&recs),
-        2,
-        "greedy-size",
-        "natural",
+        &named(2, "greedy-size"),
     ));
     let text = std::fs::read_to_string(&victim).unwrap();
     std::fs::write(&victim, &text[..text.len() / 2]).unwrap();
 
     let cache = PlanCache::new();
-    let report = cache.warm_start(&dir, &recs).unwrap();
+    let report = cache.warm_start(&dir, &recs, &req()).unwrap();
     assert_eq!(report.loaded, 1, "{report:?}");
     assert_eq!(report.skipped_corrupt, 1, "{report:?}");
     assert_eq!(cache.warm_skipped(), 1, "skip must surface in the counters");
     // The undamaged plan serves from cache; the damaged one re-plans.
-    cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
+    cache.get_or_plan(&recs, &req()).unwrap();
     assert_eq!(cache.misses(), 0);
-    let replanned = cache.get_or_plan(&recs, 2, "greedy-size").unwrap();
+    let replanned = cache.get_or_plan(&recs, &req().with_batch(2)).unwrap();
     assert_eq!(cache.misses(), 1, "corrupt file must cost a re-plan, not a crash");
     replanned.validate(&recs.scaled(2)).unwrap();
     std::fs::remove_dir_all(&dir).unwrap();
@@ -127,14 +137,14 @@ fn flipped_fingerprint_byte_is_skipped_as_foreign() {
     let recs = example();
     assert_eq!(populate(&recs, &dir, &[1]), 1);
     let fp = serialize::records_fingerprint(&recs);
-    let original = dir.join(plan_file_name(fp, 1, "greedy-size", "natural"));
+    let original = dir.join(plan_file_name(fp, &req()));
     // Flip one hex digit of the file-name fingerprint (keep it well-formed):
     // the file now claims to belong to some other model.
-    let flipped = dir.join(plan_file_name(fp ^ 0xf, 1, "greedy-size", "natural"));
+    let flipped = dir.join(plan_file_name(fp ^ 0xf, &req()));
     std::fs::rename(&original, &flipped).unwrap();
 
     let cache = PlanCache::new();
-    let report = cache.warm_start(&dir, &recs).unwrap();
+    let report = cache.warm_start(&dir, &recs, &req()).unwrap();
     assert_eq!(report.loaded, 0, "{report:?}");
     assert_eq!(report.skipped_foreign, 1, "{report:?}");
     assert!(cache.is_empty(), "a mis-fingerprinted plan must never be served");
@@ -145,7 +155,7 @@ fn flipped_fingerprint_byte_is_skipped_as_foreign() {
     let mut other = recs.clone();
     other.records[0].size += 64;
     assert!(
-        cache.load(&text, &other, 1, "greedy-size").is_err(),
+        cache.load(&text, &other, &req()).is_err(),
         "PlanCache::load must re-validate the records, not trust the caller's key"
     );
     std::fs::remove_dir_all(&dir).unwrap();
@@ -159,12 +169,14 @@ fn stale_strategy_file_is_skipped_with_counter() {
     let fp = serialize::records_fingerprint(&recs);
     // A plan persisted by a build whose strategy has since been removed
     // from the registry ("belady" does not exist).
-    let genuine = dir.join(plan_file_name(fp, 1, "greedy-size", "natural"));
-    let stale = dir.join(plan_file_name(fp, 1, "belady", "natural"));
+    let genuine = dir.join(plan_file_name(fp, &req()));
+    // The typed name builder cannot spell an unregistered strategy, which
+    // is the point — the stale name is what an *older build* wrote.
+    let stale = dir.join(format!("{fp:016x}-b1-belady@natural.plan"));
     std::fs::copy(&genuine, &stale).unwrap();
 
     let cache = PlanCache::new();
-    let report = cache.warm_start(&dir, &recs).unwrap();
+    let report = cache.warm_start(&dir, &recs, &req()).unwrap();
     assert_eq!(report.loaded, 1, "{report:?}");
     assert_eq!(report.skipped_stale_strategy, 1, "{report:?}");
     assert_eq!(report.skipped(), 1);
@@ -180,18 +192,18 @@ fn checksum_corrupt_and_junk_files_are_skipped() {
     assert_eq!(populate(&recs, &dir, &[1, 4]), 2);
     let fp = serialize::records_fingerprint(&recs);
     // Corrupt the batch-4 file's body (checksum now mismatches).
-    let victim = dir.join(plan_file_name(fp, 4, "greedy-size", "natural"));
+    let victim = dir.join(plan_file_name(fp, &named(4, "greedy-size")));
     let mut text = std::fs::read_to_string(&victim).unwrap();
     text = text.replacen("offset", "OFFSET", 1);
     std::fs::write(&victim, text).unwrap();
     // Junk that merely *looks* like a plan file, plus ignorable noise.
     std::fs::write(dir.join("zz-not-a-key-b1-x@natural.plan"), "garbage").unwrap();
     std::fs::write(dir.join("README.txt"), "not a plan").unwrap();
-    let torn = dir.join(format!(".{}.tmp", plan_file_name(fp, 9, "greedy-size", "natural")));
+    let torn = dir.join(format!(".{}.tmp", plan_file_name(fp, &named(9, "greedy-size"))));
     std::fs::write(torn, "torn").unwrap();
 
     let cache = PlanCache::new();
-    let report = cache.warm_start(&dir, &recs).unwrap();
+    let report = cache.warm_start(&dir, &recs, &req()).unwrap();
     assert_eq!(report.loaded, 1, "{report:?}");
     // Corrupt body + unparseable name; README/tmp are silently ignored.
     assert_eq!(report.skipped_corrupt, 2, "{report:?}");
@@ -213,7 +225,7 @@ fn annealed_order_plan_is_skipped_when_warm_starting_natural() {
     let (ordered, _) = apply_order(&g, order);
     let ordered_recs = UsageRecords::from_graph(&ordered);
     let warm = PlanCache::new();
-    warm.get_or_plan_ordered(&ordered_recs, 1, "greedy-size", order).unwrap();
+    warm.get_or_plan(&ordered_recs, &req().with_order(order)).unwrap();
     assert_eq!(warm.persist_dir(&dir).unwrap().written, 1);
     let written: Vec<String> = std::fs::read_dir(&dir)
         .unwrap()
@@ -229,7 +241,7 @@ fn annealed_order_plan_is_skipped_when_warm_starting_natural() {
     // annealed configuration sharing the directory) — no warm_skipped.
     let natural_recs = UsageRecords::from_graph(&g);
     let cache = PlanCache::new();
-    let report = cache.warm_start(&dir, &natural_recs).unwrap();
+    let report = cache.warm_start(&dir, &natural_recs, &req()).unwrap();
     assert_eq!(report.loaded, 0, "{report:?}");
     assert_eq!(report.skipped_stale_order, 1, "{report:?}");
     assert_eq!(report.skipped(), 0);
@@ -237,9 +249,9 @@ fn annealed_order_plan_is_skipped_when_warm_starting_natural() {
     assert!(cache.is_empty(), "a stale-order plan must never be served");
     // The file is left intact for its own configuration.
     let cache = PlanCache::new();
-    let report = cache.warm_start_ordered(&dir, &ordered_recs, order).unwrap();
+    let report = cache.warm_start(&dir, &ordered_recs, &req().with_order(order)).unwrap();
     assert_eq!(report.loaded, 1, "{report:?}");
-    cache.get_or_plan_ordered(&ordered_recs, 1, "greedy-size", order).unwrap();
+    cache.get_or_plan(&ordered_recs, &req().with_order(order)).unwrap();
     assert_eq!(cache.misses(), 0, "order-keyed warm start must avoid the planner");
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -250,7 +262,7 @@ fn pre_bump_version_file_is_rejected_cleanly() {
     let recs = example();
     assert_eq!(populate(&recs, &dir, &[1]), 1);
     let fp = serialize::records_fingerprint(&recs);
-    let genuine = dir.join(plan_file_name(fp, 1, "greedy-size", "natural"));
+    let genuine = dir.join(plan_file_name(fp, &req()));
     let text = std::fs::read_to_string(&genuine).unwrap();
 
     // (a) A v1-era *file name* (no @<order> segment) does not parse:
@@ -266,19 +278,19 @@ fn pre_bump_version_file_is_rejected_cleanly() {
     let sum = serialize::fnv1a(body.as_bytes());
     let v1_text = format!("{body}checksum {sum:016x}\n");
     assert_eq!(
-        serialize::offset_plan_from_str(&v1_text, &recs),
+        serialize::offset_plan_from_str(&v1_text, &recs, &req()),
         Err(LoadError::UnsupportedVersion("v1".into())),
         "the loader must name the version"
     );
-    std::fs::write(dir.join(plan_file_name(fp, 4, "greedy-size", "natural")), &v1_text).unwrap();
+    std::fs::write(dir.join(plan_file_name(fp, &named(4, "greedy-size"))), &v1_text).unwrap();
 
     let cache = PlanCache::new();
-    let report = cache.warm_start(&dir, &recs).unwrap();
+    let report = cache.warm_start(&dir, &recs, &req()).unwrap();
     assert_eq!(report.loaded, 1, "{report:?}");
     assert_eq!(report.skipped_corrupt, 2, "{report:?}");
     assert_eq!(cache.len(), 1, "only the genuine v2 plan is resident");
     // The pre-bump keys cost a re-plan, not a crash.
-    cache.get_or_plan(&recs, 4, "greedy-size").unwrap();
+    cache.get_or_plan(&recs, &named(4, "greedy-size")).unwrap();
     assert_eq!(cache.misses(), 1);
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -294,10 +306,10 @@ fn warm_start_isolates_models_sharing_one_directory() {
     assert_eq!(populate(&mobile, &dir, &[1]), 1);
 
     let cache = PlanCache::new();
-    let report = cache.warm_start(&dir, &blaze).unwrap();
+    let report = cache.warm_start(&dir, &blaze, &req()).unwrap();
     assert_eq!((report.loaded, report.skipped_foreign), (2, 1), "{report:?}");
     let cache = PlanCache::new();
-    let report = cache.warm_start(&dir, &mobile).unwrap();
+    let report = cache.warm_start(&dir, &mobile, &req()).unwrap();
     assert_eq!((report.loaded, report.skipped_foreign), (1, 2), "{report:?}");
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -333,13 +345,13 @@ fn stale_resolved_prefix_is_a_miss_and_never_persists() {
     // nothing.
     for step in 0..recs.num_ops {
         cache
-            .get_or_plan_dynamic_resolved(&seq_a, step, 1, "greedy-size", OrderStrategy::Natural)
+            .get_or_plan_dynamic(&seq_a, &req().with_dynamic(DynamicMode::Resolved(step)))
             .unwrap();
     }
     let after_first = cache.dynamic_misses();
     for step in 0..recs.num_ops {
         cache
-            .get_or_plan_dynamic_resolved(&seq_a, step, 1, "greedy-size", OrderStrategy::Natural)
+            .get_or_plan_dynamic(&seq_a, &req().with_dynamic(DynamicMode::Resolved(step)))
             .unwrap();
     }
     assert_eq!(
@@ -349,7 +361,7 @@ fn stale_resolved_prefix_is_a_miss_and_never_persists() {
     );
     // Sequence B at the boundary where its resolved size differs: a miss.
     cache
-        .get_or_plan_dynamic_resolved(&seq_b, boundary, 1, "greedy-size", OrderStrategy::Natural)
+        .get_or_plan_dynamic(&seq_b, &req().with_dynamic(DynamicMode::Resolved(boundary)))
         .unwrap();
     assert_eq!(
         cache.dynamic_misses(),
@@ -361,7 +373,7 @@ fn stale_resolved_prefix_is_a_miss_and_never_persists() {
     assert_eq!(report.written, 0, "dynamic plans must not reach the plan directory");
     assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0);
     // Static plans still persist alongside untouched.
-    cache.get_or_plan(&recs, 1, "greedy-size").unwrap();
+    cache.get_or_plan(&recs, &req()).unwrap();
     assert_eq!(cache.persist_dir(&dir).unwrap().written, 1);
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -381,15 +393,16 @@ fn serve_once(dir: &std::path::Path, burst: usize, order: OrderStrategy) -> u64 
     let (ordered, _) = apply_order(&g, order);
     let recs = UsageRecords::from_graph(&ordered);
     let service = PlanService::shared();
-    service.warm_start_ordered(dir, &recs, order).unwrap();
-    let budget = 3 * service.plan_records_ordered(&recs, 1, None, order).unwrap().total;
+    let sreq = service.request().with_order(order);
+    service.warm_start(dir, &recs, &sreq).unwrap();
+    let budget = 3 * service.plan(&recs, &sreq).unwrap().total;
     let server = {
         let service = Arc::clone(&service);
         ModelServer::spawn(
             move || {
                 let g = models::blazeface();
                 Box::new(
-                    ExecutorEngine::with_order(&g, service, "greedy-size", order, 7)
+                    ExecutorEngine::for_request(&g, service, &sreq, 7)
                         .expect("engine")
                         .with_max_batch(8),
                 )

@@ -1,0 +1,263 @@
+//! The `PlanRequest` grammar tier: the typed plan identity must roundtrip
+//! through the `.plan` v2 file-name/header grammar for random
+//! strategy/order/batch/dynamic combinations, pre-redesign v2 directories
+//! must keep warm-starting byte-for-byte (zero planner invocations), and
+//! v1/stale names must still be rejected with the existing skip counters.
+//!
+//! Property tests use the same hand-rolled SplitMix64 generator as
+//! `planner_properties.rs` (the offline registry has no proptest); every
+//! failure prints its seed.
+
+use std::path::PathBuf;
+use tensorarena::models;
+use tensorarena::planner::serialize::{
+    self, offset_plan_from_str, offset_plan_to_string, parse_plan_file_name, plan_file_name,
+};
+use tensorarena::planner::{
+    registry, DynamicMode, OrderStrategy, ParseRequestError, PlanCache, PlanRequest, PlanService,
+};
+use tensorarena::records::UsageRecords;
+use tensorarena::rng::SplitMix64;
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "tensorarena-request-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A random request drawn from the full identity space.
+fn random_request(rng: &mut SplitMix64) -> PlanRequest {
+    let strategy = registry::OFFSET_KEYS[rng.next_below(registry::OFFSET_KEYS.len())];
+    let order = match rng.next_below(3) {
+        0 => OrderStrategy::Natural,
+        1 => OrderStrategy::MemoryAware,
+        _ => OrderStrategy::Annealed {
+            seed: rng.next_u64() % 1000,
+            budget: rng.next_range(1, 500),
+        },
+    };
+    let dynamic = match rng.next_below(3) {
+        0 => DynamicMode::Static,
+        1 => DynamicMode::Resolved(rng.next_below(10_000)),
+        _ => DynamicMode::FullyResolved,
+    };
+    PlanRequest::new()
+        .with_strategy(strategy)
+        .unwrap()
+        .with_order(order)
+        .with_batch(rng.next_range(1, 10_000))
+        .with_dynamic(dynamic)
+}
+
+#[test]
+fn request_grammar_roundtrips_for_random_combinations() {
+    // The acceptance property: Display ∘ FromStr is the identity over the
+    // whole request space, both bare and embedded in a plan file name.
+    let mut rng = SplitMix64::new(42);
+    for case in 0..500 {
+        let req = random_request(&mut rng);
+        let text = req.to_string();
+        assert_eq!(
+            text.parse::<PlanRequest>().as_ref(),
+            Ok(&req),
+            "case {case}: '{text}' did not roundtrip"
+        );
+        let fp = rng.next_u64();
+        let name = plan_file_name(fp, &req);
+        assert_eq!(
+            parse_plan_file_name(&name),
+            Ok((fp, req)),
+            "case {case}: file name '{name}' did not roundtrip"
+        );
+    }
+}
+
+#[test]
+fn request_header_grammar_roundtrips_through_serialized_plans() {
+    // The content half of the grammar: a plan serialized under a random
+    // (static) request loads back only under a request with the same
+    // order, for every strategy/order/batch combination.
+    let recs = UsageRecords::from_graph(&models::blazeface());
+    let cache = PlanCache::new();
+    let mut rng = SplitMix64::new(7);
+    for case in 0..40 {
+        let req = random_request(&mut rng)
+            .with_dynamic(DynamicMode::Static)
+            .with_batch(rng.next_range(1, 6));
+        let plan = cache.get_or_plan(&recs, &req).unwrap();
+        let scaled = recs.scaled(req.batch());
+        let text = offset_plan_to_string(&plan, &scaled, &req);
+        assert_eq!(
+            offset_plan_from_str(&text, &scaled, &req).unwrap(),
+            *plan,
+            "case {case}: serialized plan diverged for '{req}'"
+        );
+        // A different order in the expecting request rejects the text.
+        let other_order = if req.order().is_natural() {
+            OrderStrategy::MemoryAware
+        } else {
+            OrderStrategy::Natural
+        };
+        assert!(
+            offset_plan_from_str(&text, &scaled, &req.with_order(other_order)).is_err(),
+            "case {case}: order mismatch must reject"
+        );
+    }
+}
+
+#[test]
+fn pre_redesign_v2_directory_still_warm_starts_with_zero_planner_invocations() {
+    // The backwards-compatibility acceptance criterion: a plan directory
+    // whose file names were written by the pre-PlanRequest formatting
+    // (`format!("{fp:016x}-b{batch}-{strategy}@{order}.plan")`, spelled
+    // out here so a change to the typed Display breaks this test) must
+    // warm-start a fresh service with zero planner invocations.
+    let dir = scratch_dir("pre-redesign");
+    let recs = UsageRecords::from_graph(&models::blazeface());
+    let fp = serialize::records_fingerprint(&recs);
+    let warm = PlanCache::new();
+    for (batch, strategy) in [(1usize, "greedy-size"), (4, "greedy-size"), (1, "greedy-breadth")] {
+        let req = PlanRequest::new().with_strategy(strategy).unwrap().with_batch(batch);
+        let plan = warm.get_or_plan(&recs, &req).unwrap();
+        // Write name *and* header with the historical string formatting.
+        let old_name = format!("{fp:016x}-b{batch}-{strategy}@natural.plan");
+        let text = offset_plan_to_string(&plan, &recs.scaled(batch), &req);
+        assert!(
+            text.starts_with(&format!("tensorarena-plan v2 offset {} ", recs.len())),
+            "header layout drifted from the v2 grammar"
+        );
+        assert_eq!(
+            plan_file_name(fp, &req),
+            old_name,
+            "static file names must stay byte-identical to the pre-redesign grammar"
+        );
+        std::fs::write(dir.join(old_name), text).unwrap();
+    }
+
+    let service = PlanService::new();
+    let report = service.warm_start(&dir, &recs, &service.request()).unwrap();
+    assert_eq!(report.loaded, 3, "{report:?}");
+    assert_eq!(report.skipped(), 0, "{report:?}");
+    for (batch, strategy) in [(1usize, "greedy-size"), (4, "greedy-size"), (1, "greedy-breadth")] {
+        let req = service.request().with_strategy(strategy).unwrap().with_batch(batch);
+        service.plan(&recs, &req).unwrap();
+    }
+    assert_eq!(
+        service.stats().cache_misses,
+        0,
+        "a pre-redesign directory must warm-start without any planner invocation"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_start_via_request_is_order_gated() {
+    // The warm-start-via-request acceptance test: the request's order
+    // dimension decides which files seed the cache; batch and strategy do
+    // not gate (the whole envelope loads).
+    let dir = scratch_dir("order-gated");
+    let recs = UsageRecords::from_graph(&models::blazeface());
+    let writer = PlanService::new();
+    let ordered = writer.request().with_order(OrderStrategy::MemoryAware);
+    // NB: records for MemoryAware would differ on a real serving path; the
+    // key point here is the *gating*, so one record set suffices.
+    writer.plan(&recs, &ordered).unwrap();
+    writer.plan(&recs, &ordered.with_batch(2)).unwrap();
+    writer.plan(&recs, &writer.request()).unwrap(); // one natural plan
+    writer.persist_dir(&dir).unwrap();
+
+    // A natural-order request loads only the natural file...
+    let natural = PlanService::new();
+    let report = natural.warm_start(&dir, &recs, &natural.request()).unwrap();
+    assert_eq!((report.loaded, report.skipped_stale_order), (1, 2), "{report:?}");
+    // ...the ordered request loads both ordered batches, regardless of the
+    // request's own batch, and re-planning them costs nothing.
+    let svc = PlanService::new();
+    let report = svc.warm_start(&dir, &recs, &svc.request().with_order(OrderStrategy::MemoryAware)).unwrap();
+    assert_eq!((report.loaded, report.skipped_stale_order), (2, 1), "{report:?}");
+    svc.plan(&recs, &svc.request().with_order(OrderStrategy::MemoryAware)).unwrap();
+    svc.plan(&recs, &svc.request().with_order(OrderStrategy::MemoryAware).with_batch(2)).unwrap();
+    assert_eq!(svc.stats().cache_misses, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn v1_and_stale_names_keep_their_skip_counters() {
+    // The redesign must not reshuffle the skip taxonomy: v1-era names and
+    // unparseable junk stay `skipped_corrupt` (suspect, warm_skipped),
+    // unregistered strategies stay `skipped_stale_strategy` (suspect),
+    // other orders stay `skipped_stale_order` (not suspect), other models
+    // stay `skipped_foreign` (not suspect).
+    let dir = scratch_dir("skip-taxonomy");
+    let recs = UsageRecords::from_graph(&models::blazeface());
+    let fp = serialize::records_fingerprint(&recs);
+    let cache = PlanCache::new();
+    let plan = cache.get_or_plan(&recs, &PlanRequest::new()).unwrap();
+    let text = offset_plan_to_string(&plan, &recs, &PlanRequest::new());
+    // v1-era name (no @<order> segment).
+    std::fs::write(dir.join(format!("{fp:016x}-b1-greedy-size.plan")), &text).unwrap();
+    // Unparseable junk.
+    std::fs::write(dir.join("junk.plan"), "garbage").unwrap();
+    // Unregistered strategy under a well-formed grammar.
+    std::fs::write(dir.join(format!("{fp:016x}-b1-belady@natural.plan")), &text).unwrap();
+    // Unregistered strategy in a file that is not ours to warn about:
+    // order and fingerprint still gate before the strategy check, exactly
+    // as before the typed parse.
+    std::fs::write(dir.join(format!("{fp:016x}-b1-belady@memory-aware.plan")), &text).unwrap();
+    std::fs::write(
+        dir.join(format!("{:016x}-b1-belady@natural.plan", fp ^ 2)),
+        &text,
+    )
+    .unwrap();
+    // Another order (valid configuration sharing the directory).
+    std::fs::write(
+        dir.join(format!("{fp:016x}-b1-greedy-size@memory-aware.plan")),
+        &text,
+    )
+    .unwrap();
+    // An order key this build does not know (a newer build's plans):
+    // forward compatibility demands the same silent stale-order gate.
+    std::fs::write(
+        dir.join(format!("{fp:016x}-b1-greedy-size@profile-guided.plan")),
+        &text,
+    )
+    .unwrap();
+    // Another model's fingerprint.
+    std::fs::write(
+        dir.join(format!("{:016x}-b1-greedy-size@natural.plan", fp ^ 1)),
+        &text,
+    )
+    .unwrap();
+    // A dynamic-mode name, which must never exist on disk: corrupt.
+    std::fs::write(
+        dir.join(format!("{fp:016x}-b1-greedy-size@natural+full.plan")),
+        &text,
+    )
+    .unwrap();
+    // And one genuine file.
+    std::fs::write(dir.join(plan_file_name(fp, &PlanRequest::new())), &text).unwrap();
+
+    let cold = PlanCache::new();
+    let report = cold.warm_start(&dir, &recs, &PlanRequest::new()).unwrap();
+    assert_eq!(report.loaded, 1, "{report:?}");
+    assert_eq!(report.skipped_corrupt, 3, "{report:?}"); // v1 name, junk, dynamic name
+    assert_eq!(report.skipped_stale_strategy, 1, "{report:?}");
+    assert_eq!(report.skipped_stale_order, 3, "{report:?}"); // incl. other-order belady + unknown order
+    assert_eq!(report.skipped_foreign, 2, "{report:?}"); // incl. foreign belady
+    assert_eq!(report.skipped(), 4, "suspect = corrupt + stale-strategy");
+    assert_eq!(cold.warm_skipped(), 4);
+    // The parse layer agrees with the taxonomy.
+    assert!(matches!(
+        parse_plan_file_name(&format!("{fp:016x}-b1-greedy-size.plan")),
+        Err(ParseRequestError::Malformed(_))
+    ));
+    assert!(matches!(
+        parse_plan_file_name(&format!("{fp:016x}-b1-belady@natural.plan")),
+        Err(ParseRequestError::UnknownStrategy(_))
+    ));
+    std::fs::remove_dir_all(&dir).unwrap();
+}

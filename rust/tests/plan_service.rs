@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 use tensorarena::models;
-use tensorarena::planner::{registry, OffsetPlanner, PlanCache, PlanService};
+use tensorarena::planner::{registry, OffsetPlanner, PlanCache, PlanRequest, PlanService};
 use tensorarena::records::UsageRecords;
 use tensorarena::rng::SplitMix64;
 
@@ -41,14 +41,15 @@ fn cache_hit_plans_are_byte_identical_to_fresh_plans_for_every_strategy() {
         for key in registry::OFFSET_KEYS {
             let planner = registry::offset_strategy(key).unwrap();
             let fresh = planner.plan(&recs);
-            let warm = cache.get_or_plan(&recs, 1, key).unwrap();
-            let hit = cache.get_or_plan(&recs, 1, key).unwrap();
+            let req = PlanRequest::new().with_strategy(key).unwrap();
+            let warm = cache.get_or_plan(&recs, &req).unwrap();
+            let hit = cache.get_or_plan(&recs, &req).unwrap();
             assert!(Arc::ptr_eq(&warm, &hit), "seed {seed}, {key}: hit re-planned");
             assert_eq!(*hit, fresh, "seed {seed}, {key}: cached plan diverged");
             // Byte-identical through the wire format too.
             assert_eq!(
-                offset_plan_to_string(&hit, &recs),
-                offset_plan_to_string(&fresh, &recs),
+                offset_plan_to_string(&hit, &recs, &req),
+                offset_plan_to_string(&fresh, &recs, &req),
                 "seed {seed}, {key}: serialized plans differ"
             );
         }
@@ -64,7 +65,8 @@ fn scaled_plans_validate_against_scaled_records_for_every_strategy() {
         let cache = PlanCache::new();
         for key in registry::OFFSET_KEYS {
             for batch in [2usize, 3, 8] {
-                let plan = cache.get_or_plan(&recs, batch, key).unwrap();
+                let req = PlanRequest::new().with_strategy(key).unwrap().with_batch(batch);
+                let plan = cache.get_or_plan(&recs, &req).unwrap();
                 let scaled = recs.scaled(batch);
                 plan.validate(&scaled)
                     .unwrap_or_else(|e| panic!("seed {seed}, {key}, batch {batch}: {e}"));
@@ -86,8 +88,8 @@ fn fingerprint_isolates_different_models_in_one_cache() {
     let a = random_records(1);
     let b = random_records(2);
     let cache = PlanCache::new();
-    let pa = cache.get_or_plan(&a, 1, "greedy-size").unwrap();
-    let pb = cache.get_or_plan(&b, 1, "greedy-size").unwrap();
+    let pa = cache.get_or_plan(&a, &PlanRequest::new()).unwrap();
+    let pb = cache.get_or_plan(&b, &PlanRequest::new()).unwrap();
     assert_eq!(cache.misses(), 2, "distinct record sets shared a slot");
     pa.validate(&a).unwrap();
     pb.validate(&b).unwrap();
@@ -98,10 +100,11 @@ fn spill_load_roundtrips_across_caches_at_batch() {
     let recs = random_records(7);
     let warm = PlanCache::new();
     for batch in [1usize, 4] {
-        let text = warm.spill(&recs, batch, "greedy-size").unwrap();
+        let req = PlanRequest::new().with_batch(batch);
+        let text = warm.spill(&recs, &req).unwrap();
         let cold = PlanCache::new();
-        let loaded = cold.load(&text, &recs, batch, "greedy-size").unwrap();
-        assert_eq!(*loaded, *warm.get_or_plan(&recs, batch, "greedy-size").unwrap());
+        let loaded = cold.load(&text, &recs, &req).unwrap();
+        assert_eq!(*loaded, *warm.get_or_plan(&recs, &req).unwrap());
         assert_eq!(cold.misses(), 0, "load should seed, not plan");
     }
 }
@@ -112,15 +115,15 @@ fn max_servable_batch_fits_budget_on_mobilenet_v1() {
     // budget — planned, not naive, which is the whole point of planning.
     let recs = UsageRecords::from_graph(&models::mobilenet_v1());
     let cache = PlanCache::new();
-    let strategy = "greedy-size";
-    let t1 = cache.get_or_plan(&recs, 1, strategy).unwrap().total;
+    let req = PlanRequest::new(); // greedy-size @ natural
+    let t1 = cache.get_or_plan(&recs, &req).unwrap().total;
     let budget = t1 * 3 + t1 / 2; // ~3.5x the batch-1 arena
 
-    let b = cache.max_servable_batch(&recs, strategy, budget).unwrap();
+    let b = cache.max_servable_batch(&recs, &req, budget).unwrap();
     assert!(b >= 3, "3.5x budget only fits batch {b}");
     // Maximality: b fits, b+1 does not.
-    assert!(cache.get_or_plan(&recs, b, strategy).unwrap().total <= budget);
-    assert!(cache.get_or_plan(&recs, b + 1, strategy).unwrap().total > budget);
+    assert!(cache.get_or_plan(&recs, &req.with_batch(b)).unwrap().total <= budget);
+    assert!(cache.get_or_plan(&recs, &req.with_batch(b + 1)).unwrap().total > budget);
     // The naive layout could not serve batch b in this budget (MobileNet's
     // naive footprint is >2x its planned arena).
     assert!(
@@ -128,16 +131,16 @@ fn max_servable_batch_fits_budget_on_mobilenet_v1() {
         "naive would also fit batch {b} — budget not planner-bound"
     );
     // Degenerate budgets.
-    assert_eq!(cache.max_servable_batch(&recs, strategy, 0).unwrap(), 0);
-    assert_eq!(cache.max_servable_batch(&recs, strategy, t1 - 1).unwrap(), 0);
+    assert_eq!(cache.max_servable_batch(&recs, &req, 0).unwrap(), 0);
+    assert_eq!(cache.max_servable_batch(&recs, &req, t1 - 1).unwrap(), 0);
 }
 
 #[test]
 fn service_default_strategy_flows_through_max_servable_batch() {
     let svc = PlanService::new();
     let recs = UsageRecords::from_graph(&models::blazeface());
-    let t1 = svc.plan_records(&recs, 1, None).unwrap().total;
-    let b = svc.max_servable_batch(&recs, 8 * t1, None).unwrap();
+    let t1 = svc.plan(&recs, &svc.request()).unwrap().total;
+    let b = svc.max_servable_batch(&recs, &svc.request(), 8 * t1).unwrap();
     assert!(b >= 8, "8x budget only fits batch {b}");
     let st = svc.stats();
     assert!(st.cache_misses >= 1);
