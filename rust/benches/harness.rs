@@ -2,7 +2,11 @@
 //! criterion). Each bench binary includes this via `#[path]`.
 //!
 //! Reports median / min / mean over `iters` timed runs after `warmup`
-//! untimed ones, criterion-style enough for EXPERIMENTS.md.
+//! untimed ones, criterion-style enough for EXPERIMENTS.md. The [`json`]
+//! module is the hand-rolled emitter/parser behind the committed
+//! `BENCH_*.json` trajectory files: benches render their results as a
+//! [`json::Value`] tree, and CI re-parses the committed baseline to compare
+//! *schemas* (names and keys), never timings — see `docs/ARCHITECTURE.md`.
 
 #![allow(dead_code)]
 
@@ -16,8 +20,29 @@ pub struct Stats {
     pub mean: Duration,
 }
 
+impl Stats {
+    /// Median in microseconds — the unit the JSON trajectory records.
+    pub fn median_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+    /// Minimum in microseconds.
+    pub fn min_us(&self) -> f64 {
+        self.min.as_secs_f64() * 1e6
+    }
+    /// Mean in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
 /// Run `f` `iters` times (after `warmup` warmups) and report stats.
+///
+/// `iters` is clamped to at least one timed run: a smoke configuration that
+/// scales iteration counts down (e.g. `iters / 100`) must degrade to a
+/// 1-sample measurement, not a panic on an empty sample set.
 pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    debug_assert!(iters > 0, "bench called with iters == 0; clamping to 1");
+    let iters = iters.max(1);
     for _ in 0..warmup {
         f();
     }
@@ -48,4 +73,311 @@ pub fn report(name: &str, stats: Stats) {
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Hand-rolled JSON for the `BENCH_*.json` trajectory files (the offline
+/// vendored registry has no serde). Small by design: objects are ordered
+/// key/value vectors, numbers are `f64`, and the only consumer is the
+/// bench emitter plus the CI schema check.
+pub mod json {
+    /// One JSON value.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        /// Look up a key in an object (None for non-objects).
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            match self {
+                Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+
+        /// The string payload, if this is a string.
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        /// The numeric payload, if this is a number.
+        pub fn as_num(&self) -> Option<f64> {
+            match self {
+                Value::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+
+        /// The element list, if this is an array.
+        pub fn as_arr(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(a) => Some(a),
+                _ => None,
+            }
+        }
+
+        /// Render as compact JSON text (keys in insertion order).
+        pub fn render(&self) -> String {
+            let mut out = String::new();
+            self.render_into(&mut out, 0);
+            out
+        }
+
+        fn render_into(&self, out: &mut String, indent: usize) {
+            match self {
+                Value::Null => out.push_str("null"),
+                Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+                Value::Num(n) => out.push_str(&render_num(*n)),
+                Value::Str(s) => {
+                    out.push('"');
+                    out.push_str(&escape(s));
+                    out.push('"');
+                }
+                Value::Arr(items) => {
+                    out.push('[');
+                    for (i, v) in items.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        out.push('\n');
+                        out.push_str(&"  ".repeat(indent + 1));
+                        v.render_into(out, indent + 1);
+                    }
+                    if !items.is_empty() {
+                        out.push('\n');
+                        out.push_str(&"  ".repeat(indent));
+                    }
+                    out.push(']');
+                }
+                Value::Obj(kv) => {
+                    out.push('{');
+                    for (i, (k, v)) in kv.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        out.push('\n');
+                        out.push_str(&"  ".repeat(indent + 1));
+                        out.push('"');
+                        out.push_str(&escape(k));
+                        out.push_str("\": ");
+                        v.render_into(out, indent + 1);
+                    }
+                    if !kv.is_empty() {
+                        out.push('\n');
+                        out.push_str(&"  ".repeat(indent));
+                    }
+                    out.push('}');
+                }
+            }
+        }
+
+        /// Canonical *schema* string of this value: keys sorted, timings and
+        /// every other leaf collapsed to its type. Two bench runs drift in
+        /// numbers but must agree here — this is what CI compares.
+        pub fn schema(&self) -> String {
+            match self {
+                Value::Null => "null".into(),
+                Value::Bool(_) => "bool".into(),
+                Value::Num(_) => "num".into(),
+                Value::Str(_) => "str".into(),
+                Value::Arr(items) => {
+                    // Element schemas, deduplicated in sorted order: an
+                    // array of homogeneous cases collapses to one entry.
+                    let mut elems: Vec<String> = items.iter().map(|v| v.schema()).collect();
+                    elems.sort();
+                    elems.dedup();
+                    format!("[{}]", elems.join("|"))
+                }
+                Value::Obj(kv) => {
+                    let mut fields: Vec<String> =
+                        kv.iter().map(|(k, v)| format!("{}:{}", k, v.schema())).collect();
+                    fields.sort();
+                    format!("{{{}}}", fields.join(","))
+                }
+            }
+        }
+    }
+
+    fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    fn render_num(n: f64) -> String {
+        if n.fract() == 0.0 && n.abs() < 1e15 {
+            (n as i64).to_string()
+        } else {
+            n.to_string()
+        }
+    }
+
+    /// Parse JSON text. Supports the full value grammar the emitter
+    /// produces (no `\u` surrogate pairs beyond the BMP).
+    pub fn parse(s: &str) -> Result<Value, String> {
+        let b = s.as_bytes();
+        let mut i = 0;
+        let v = parse_value(b, &mut i)?;
+        skip_ws(b, &mut i);
+        if i != b.len() {
+            return Err(format!("trailing bytes at offset {i}"));
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], i: &mut usize) {
+        while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+            *i += 1;
+        }
+    }
+
+    fn parse_value(b: &[u8], i: &mut usize) -> Result<Value, String> {
+        skip_ws(b, i);
+        match b.get(*i) {
+            None => Err("unexpected end of input".into()),
+            Some(b'{') => parse_obj(b, i),
+            Some(b'[') => parse_arr(b, i),
+            Some(b'"') => Ok(Value::Str(parse_str(b, i)?)),
+            Some(b't') => parse_lit(b, i, "true", Value::Bool(true)),
+            Some(b'f') => parse_lit(b, i, "false", Value::Bool(false)),
+            Some(b'n') => parse_lit(b, i, "null", Value::Null),
+            Some(_) => parse_num(b, i),
+        }
+    }
+
+    fn parse_lit(b: &[u8], i: &mut usize, lit: &str, v: Value) -> Result<Value, String> {
+        if b[*i..].starts_with(lit.as_bytes()) {
+            *i += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("expected '{lit}' at offset {i}", i = *i))
+        }
+    }
+
+    fn parse_num(b: &[u8], i: &mut usize) -> Result<Value, String> {
+        let start = *i;
+        while *i < b.len() && matches!(b[*i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+            *i += 1;
+        }
+        std::str::from_utf8(&b[start..*i])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .map(Value::Num)
+            .ok_or_else(|| format!("bad number at offset {start}"))
+    }
+
+    fn parse_str(b: &[u8], i: &mut usize) -> Result<String, String> {
+        *i += 1; // opening quote
+        let mut out = String::new();
+        while *i < b.len() {
+            match b[*i] {
+                b'"' => {
+                    *i += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    *i += 1;
+                    match b.get(*i) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = b
+                                .get(*i + 1..*i + 5)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .and_then(char::from_u32)
+                                .ok_or_else(|| format!("bad \\u escape at offset {i}", i = *i))?;
+                            out.push(hex);
+                            *i += 4;
+                        }
+                        _ => return Err(format!("bad escape at offset {i}", i = *i)),
+                    }
+                    *i += 1;
+                }
+                _ => {
+                    // Consume one UTF-8 scalar (multi-byte sequences pass
+                    // through unmodified).
+                    let rest = std::str::from_utf8(&b[*i..])
+                        .map_err(|_| format!("invalid UTF-8 at offset {i}", i = *i))?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    *i += c.len_utf8();
+                }
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn parse_arr(b: &[u8], i: &mut usize) -> Result<Value, String> {
+        *i += 1; // '['
+        let mut items = Vec::new();
+        loop {
+            skip_ws(b, i);
+            if b.get(*i) == Some(&b']') {
+                *i += 1;
+                return Ok(Value::Arr(items));
+            }
+            if !items.is_empty() {
+                if b.get(*i) != Some(&b',') {
+                    return Err(format!("expected ',' in array at offset {i}", i = *i));
+                }
+                *i += 1;
+            }
+            items.push(parse_value(b, i)?);
+        }
+    }
+
+    fn parse_obj(b: &[u8], i: &mut usize) -> Result<Value, String> {
+        *i += 1; // '{'
+        let mut kv = Vec::new();
+        loop {
+            skip_ws(b, i);
+            if b.get(*i) == Some(&b'}') {
+                *i += 1;
+                return Ok(Value::Obj(kv));
+            }
+            if !kv.is_empty() {
+                if b.get(*i) != Some(&b',') {
+                    return Err(format!("expected ',' in object at offset {i}", i = *i));
+                }
+                *i += 1;
+                skip_ws(b, i);
+            }
+            if b.get(*i) != Some(&b'"') {
+                return Err(format!("expected key at offset {i}", i = *i));
+            }
+            let k = parse_str(b, i)?;
+            skip_ws(b, i);
+            if b.get(*i) != Some(&b':') {
+                return Err(format!("expected ':' at offset {i}", i = *i));
+            }
+            *i += 1;
+            let v = parse_value(b, i)?;
+            kv.push((k, v));
+        }
+    }
 }

@@ -21,11 +21,16 @@
 //!   prefix, the second runs entirely off the dynamic plan cache;
 //! * warm vs cold start: planner invocations and time-to-planned across a
 //!   plan-directory restart (`persist_dir` → `warm_start`);
+//! * kernel/thread trajectory: raw `Executor::run_batch` on mobilenet_v2
+//!   across kernels (scalar reference vs vectorized) × threads (1 vs 4) ×
+//!   batch — the recorded perf trajectory behind `BENCH_serving.json`;
 //! * macro (with the `pjrt` feature and `artifacts/`): PJRT closed-loop
 //!   storm, the same measurement as `tensorarena serve`.
 //!
 //! Pass `--smoke` (CI tier-2) to shrink every closed loop to a seconds-long
-//! correctness pass.
+//! correctness pass. `--json PATH` writes the trajectory as JSON;
+//! `--check PATH` re-parses a committed `BENCH_*.json` and fails on *schema*
+//! drift (case shape, identity fields) while letting timings float.
 
 #[path = "harness.rs"]
 mod harness;
@@ -63,8 +68,14 @@ impl Engine for FixedCostEngine {
 }
 
 fn main() {
+    let argv: Vec<String> = std::env::args().collect();
     // --smoke (CI tier-2): same code paths, seconds-long loops.
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let flag_value = |name: &str| {
+        argv.iter().position(|a| a == name).and_then(|i| argv.get(i + 1)).cloned()
+    };
+    let json_out = flag_value("--json");
+    let check_path = flag_value("--check");
 
     // --- micro: round-trip overhead ---
     {
@@ -86,6 +97,72 @@ fn main() {
         });
         harness::report("round-trip overhead (batch=1, echo engine)", st);
         router.shutdown();
+    }
+
+    // --- kernel/thread trajectory: raw run_batch sweep (BENCH_serving.json) ---
+    let mut cases: Vec<harness::json::Value> = Vec::new();
+    {
+        use harness::json::Value;
+        use tensorarena::exec::{Executor, KernelMode};
+        use tensorarena::planner::offset::GreedyBySize;
+        let model = "mobilenet_v2";
+        let g = tensorarena::models::by_name(model).unwrap();
+        let in_elems = g.tensor(g.inputs[0]).num_elements();
+        let batches: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+        let (warmup, iters) = if smoke { (0, 1) } else { (1, 5) };
+        let configs: &[(&str, KernelMode, usize)] = &[
+            ("reference", KernelMode::Reference, 1),
+            ("vectorized", KernelMode::Vectorized, 1),
+            ("vectorized", KernelMode::Vectorized, 4),
+        ];
+        println!("\nrun_batch trajectory ({model}, kernels x threads x batch):");
+        let mut rng = SplitMix64::new(13);
+        let mut meds: Vec<(&str, usize, usize, f64)> = Vec::new();
+        for &(kname, mode, threads) in configs {
+            let mut exec = Executor::new(&g, &GreedyBySize, 7).expect("executor");
+            exec.set_kernel_mode(mode);
+            exec.set_threads(threads);
+            for &b in batches {
+                let mut input = vec![0f32; in_elems * b];
+                rng.fill_f32(&mut input, 1.0);
+                let st = harness::bench(warmup, iters, || {
+                    harness::black_box(exec.run_batch(&input, b).expect("run_batch"));
+                });
+                harness::report(&format!("run_batch {kname} t{threads} b{b}"), st);
+                meds.push((kname, threads, b, st.median_us()));
+                cases.push(Value::Obj(vec![
+                    ("name".into(), Value::Str(format!("run_batch/{kname}/t{threads}/b{b}"))),
+                    ("kernels".into(), Value::Str(kname.into())),
+                    ("threads".into(), Value::Num(threads as f64)),
+                    ("batch".into(), Value::Num(b as f64)),
+                    ("median_us".into(), Value::Num(st.median_us())),
+                    ("min_us".into(), Value::Num(st.min_us())),
+                    ("mean_us".into(), Value::Num(st.mean_us())),
+                    ("samples_per_s".into(), Value::Num(b as f64 / (st.median_us() / 1e6))),
+                ]));
+            }
+        }
+        // The headline number the trajectory records: vectorized kernels on
+        // 4 workers vs the scalar single-thread baseline, median over the
+        // batch sweep.
+        let mut speedups: Vec<f64> = Vec::new();
+        for &b in batches {
+            let find = |k: &str, t: usize| {
+                meds.iter().find(|m| m.0 == k && m.1 == t && m.2 == b).map(|m| m.3)
+            };
+            if let (Some(base), Some(par)) = (find("reference", 1), find("vectorized", 4)) {
+                if par > 0.0 {
+                    speedups.push(base / par);
+                }
+            }
+        }
+        speedups.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if !speedups.is_empty() {
+            println!(
+                "  vectorized t4 vs reference t1: median speedup {:.2}x over the batch sweep",
+                speedups[speedups.len() / 2]
+            );
+        }
     }
 
     // --- batching win: fixed 1ms engine cost, varying max_batch ---
@@ -499,5 +576,50 @@ fn main() {
         }
     } else {
         println!("\n(artifacts/ missing: run `make artifacts` for the PJRT macro bench)");
+    }
+
+    // --- BENCH_*.json: emit and/or schema-check the recorded trajectory ---
+    {
+        use harness::json::Value;
+        let doc = Value::Obj(vec![
+            ("bench".into(), Value::Str("serving".into())),
+            ("schema_version".into(), Value::Num(1.0)),
+            ("model".into(), Value::Str("mobilenet_v2".into())),
+            ("smoke".into(), Value::Bool(smoke)),
+            ("cases".into(), Value::Arr(cases)),
+        ]);
+        if let Some(path) = &json_out {
+            std::fs::write(path, doc.render() + "\n")
+                .unwrap_or_else(|e| panic!("--json {path}: {e}"));
+            println!("\nwrote {path}");
+        }
+        if let Some(path) = &check_path {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("--check {path}: {e}"));
+            let committed = harness::json::parse(&text)
+                .unwrap_or_else(|e| panic!("--check {path}: {e}"));
+            let mut drift = Vec::new();
+            // Identity fields must match exactly; everything else — most of
+            // all the timings — is compared by *shape* only, so a slow CI
+            // box can never fail the check.
+            for key in ["bench", "schema_version", "model"] {
+                if doc.get(key) != committed.get(key) {
+                    drift.push(format!("identity field '{key}' differs"));
+                }
+            }
+            let (got, want) = (doc.schema(), committed.schema());
+            if got != want {
+                drift.push(format!("schema drift:\n    fresh:     {got}\n    committed: {want}"));
+            }
+            if drift.is_empty() {
+                println!("schema check vs {path}: OK");
+            } else {
+                eprintln!("schema check vs {path} FAILED:");
+                for d in &drift {
+                    eprintln!("  {d}");
+                }
+                std::process::exit(1);
+            }
+        }
     }
 }

@@ -324,6 +324,139 @@ impl Arena {
     pub fn guards_intact(&self) -> bool {
         self.buf[self.guard_from..].iter().all(|&g| g == GUARD)
     }
+
+    /// Byte range `[start, end)` of a record's whole (all-lane) region —
+    /// the offset-range half of the parallel executor's non-aliasing proof
+    /// (the other half is the planner's lifetime intervals).
+    pub fn record_span(&self, record: usize) -> (usize, usize) {
+        (self.offsets[record], self.offsets[record] + self.sizes[record])
+    }
+
+    /// A `Send + Sync` view of this arena for the parallel executor: worker
+    /// threads carve per-record, per-lane slices out of one shared buffer.
+    ///
+    /// The `&mut self` receiver makes the borrow checker prove the view has
+    /// *exclusive* access to the buffer for its whole lifetime (no safe
+    /// `&Arena`/`&mut Arena` method can race with it); splitting that
+    /// exclusive access into concurrently-used disjoint slices is the
+    /// caller's obligation, which is why every accessor on the view is
+    /// `unsafe` — see [`ParallelArena::split_io_lane`] for the contract the
+    /// executor's level schedule discharges.
+    pub fn parallel_view(&mut self) -> ParallelArena<'_> {
+        ParallelArena {
+            base: self.buf.as_mut_ptr(),
+            words: self.guard_from,
+            offsets: self.offsets.clone(),
+            sizes: self.sizes.clone(),
+            lanes: self.lanes,
+            _lock: std::marker::PhantomData,
+        }
+    }
+}
+
+/// Shared-buffer view used by the parallel executor (see
+/// [`Arena::parallel_view`]). Holds a raw base pointer plus a copy of the
+/// record layout; the phantom `&mut Arena` keeps the source arena
+/// exclusively borrowed for the view's lifetime.
+pub struct ParallelArena<'a> {
+    base: *mut f32,
+    /// Words before the guard region; every range below must end here.
+    words: usize,
+    offsets: Vec<usize>,
+    sizes: Vec<usize>,
+    lanes: usize,
+    _lock: std::marker::PhantomData<&'a mut Arena>,
+}
+
+// SAFETY: the view is only a (pointer, layout) pair. All dereferences go
+// through the `unsafe` accessors below, whose contracts require the caller
+// to hand disjoint ranges to concurrent threads; the borrow on the source
+// `Arena` prevents any non-view access for the view's lifetime.
+unsafe impl Send for ParallelArena<'_> {}
+unsafe impl Sync for ParallelArena<'_> {}
+
+impl ParallelArena<'_> {
+    /// Word range of one lane's stripe of a record (same arithmetic as
+    /// [`Arena::lane_range`], with the same hard bounds).
+    fn lane_range(&self, record: usize, lane: usize) -> std::ops::Range<usize> {
+        assert!(lane < self.lanes, "lane {lane} of a {}-lane arena", self.lanes);
+        let stripe = self.sizes[record] / self.lanes / 4;
+        let start = self.offsets[record] / 4 + lane * stripe;
+        let range = start..start + stripe;
+        assert!(range.end <= self.words, "record {record} exceeds the arena");
+        range
+    }
+
+    /// Read-only view of one lane's stripe of a record.
+    ///
+    /// # Safety
+    ///
+    /// No concurrently-running thread may hold a mutable slice overlapping
+    /// this stripe. The executor guarantees it two ways: in lockstep batch
+    /// mode all threads execute the same op (whose tensors are mutually
+    /// live, hence byte-disjoint by plan validation); in level mode the
+    /// schedule only groups ops whose offset ranges were proven disjoint.
+    pub unsafe fn tensor_lane(&self, record: usize, lane: usize) -> &[f32] {
+        let r = self.lane_range(record, lane);
+        std::slice::from_raw_parts(self.base.add(r.start) as *const f32, r.end - r.start)
+    }
+
+    /// Simultaneous access to one output stripe and several input stripes
+    /// of batch lane `lane` — the parallel twin of
+    /// [`Arena::split_io_lane`], including its output-vs-input overlap
+    /// assert.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`Self::tensor_lane`], plus: no concurrent thread
+    /// may hold *any* slice overlapping the output stripe. The executor's
+    /// schedule (lockstep same-op, or level groups with pairwise-disjoint
+    /// offset ranges) discharges this.
+    pub unsafe fn split_io_lane(
+        &self,
+        output: usize,
+        inputs: &[usize],
+        lane: usize,
+    ) -> (&mut [f32], Vec<&[f32]>) {
+        let out_range = self.lane_range(output, lane);
+        for &i in inputs {
+            let r = self.lane_range(i, lane);
+            assert!(
+                r.end <= out_range.start || out_range.end <= r.start,
+                "op I/O overlap in arena: record {i} ({r:?}) vs output {output} ({out_range:?}) — invalid plan"
+            );
+        }
+        let out = std::slice::from_raw_parts_mut(
+            self.base.add(out_range.start),
+            out_range.end - out_range.start,
+        );
+        let ins = inputs
+            .iter()
+            .map(|&i| {
+                let r = self.lane_range(i, lane);
+                std::slice::from_raw_parts(self.base.add(r.start) as *const f32, r.end - r.start)
+            })
+            .collect();
+        (out, ins)
+    }
+
+    /// Poison one lane's stripe of a dead record (the parallel twin of
+    /// [`Arena::poison_lane`]).
+    ///
+    /// # Safety
+    ///
+    /// Same exclusivity contract as [`Self::split_io_lane`]'s output: no
+    /// concurrent thread may hold any slice overlapping the stripe. A
+    /// record is only poisoned at its last use, where it is still live, so
+    /// plan validation keeps its range disjoint from every other tensor
+    /// touched at that op.
+    pub unsafe fn poison_lane(&self, record: usize, lane: usize) {
+        let r = self.lane_range(record, lane);
+        let s = std::slice::from_raw_parts_mut(self.base.add(r.start), r.end - r.start);
+        for v in s {
+            *v = POISON_F32;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -442,6 +575,56 @@ mod tests {
             pool.release(vec![0f32; 64]);
         }
         assert!(pool.idle_buffers() <= 20);
+    }
+
+    #[test]
+    fn parallel_view_matches_arena_layout_and_is_send() {
+        fn assert_sync<T: Send + Sync>(_: &T) {}
+        let base = UsageRecords::from_triples(&[(0, 1, 64), (1, 2, 128)]);
+        let scaled = base.scaled(2);
+        let plan = GreedyBySize.plan(&scaled);
+        plan.validate(&scaled).unwrap();
+        let pool = ArenaPool::new();
+        let mut arena = Arena::from_pool(&plan, &scaled, 2, &pool);
+        let spans: Vec<_> = (0..2).map(|r| arena.record_span(r)).collect();
+        assert!(spans.iter().all(|&(s, e)| e > s && e <= plan.total));
+        {
+            let view = arena.parallel_view();
+            assert_sync(&view);
+            // Writes through the view land exactly where Arena would put
+            // them, lane by lane.
+            std::thread::scope(|s| {
+                for lane in 0..2 {
+                    let view = &view;
+                    s.spawn(move || {
+                        // SAFETY: each thread touches its own lane of
+                        // record 0 only; stripes of one record are
+                        // disjoint across lanes.
+                        let (out, _) = unsafe { view.split_io_lane(0, &[], lane) };
+                        out.fill(lane as f32 + 1.0);
+                    });
+                }
+            });
+        }
+        for lane in 0..2 {
+            assert!(
+                arena.tensor_lane(0, lane).iter().all(|&v| v == lane as f32 + 1.0),
+                "lane {lane} clobbered through the view"
+            );
+        }
+        assert!(arena.guards_intact());
+    }
+
+    #[test]
+    #[should_panic(expected = "op I/O overlap")]
+    fn parallel_view_rejects_overlapping_plan() {
+        let recs = UsageRecords::from_triples(&[(0, 1, 64), (0, 1, 64)]);
+        let plan = OffsetPlan { offsets: vec![0, 0], total: 64 };
+        let mut arena = Arena::new(&plan, &recs);
+        let view = arena.parallel_view();
+        // SAFETY: single-threaded; the overlap assert fires before any
+        // slice is handed out.
+        let _ = unsafe { view.split_io_lane(1, &[0], 0) };
     }
 
     #[test]

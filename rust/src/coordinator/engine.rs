@@ -377,6 +377,15 @@ impl ExecutorEngine {
         self.max_batch = max_batch.max(1);
         self
     }
+
+    /// Run the executor with `threads` worker threads (clamped to at least
+    /// 1): batches execute in lockstep lane parallelism and single samples
+    /// through the level schedule — see [`Executor::set_threads`]. The
+    /// `serve --threads` flag lands here.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.exec.set_threads(threads);
+        self
+    }
 }
 
 impl Engine for ExecutorEngine {
@@ -405,6 +414,13 @@ impl Engine for ExecutorEngine {
         // unchanged.
         if self.dynamic.is_some() {
             stats = stats.with_waves(self.exec.wave_passes(), self.exec.wave_resolutions());
+        }
+        if self.exec.threads() > 1 {
+            stats = stats.with_threads(
+                self.exec.threads(),
+                self.exec.levels(),
+                self.exec.ops_parallel(),
+            );
         }
         if self.req.order().is_natural() {
             return stats;
@@ -532,6 +548,27 @@ mod tests {
         // identical samples give identical outputs
         assert_eq!(out[..e.out_elems()], out[e.out_elems()..]);
         assert!(e.arena_stats().reduction() > 2.0);
+    }
+
+    #[test]
+    fn threaded_engine_matches_sequential_and_reports_the_shape() {
+        let g = crate::models::blazeface();
+        let mut seq = ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 3).unwrap();
+        let mut par = ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 3)
+            .unwrap()
+            .with_threads(4);
+        let x = vec![0.1f32; 3 * seq.in_elems()];
+        assert_eq!(
+            seq.run_batch(&x, 3).unwrap(),
+            par.run_batch(&x, 3).unwrap(),
+            "threads changed the numbers"
+        );
+        let st = par.arena_stats();
+        assert_eq!(st.threads, 4);
+        assert!(st.levels > 0);
+        assert!(st.ops_parallel > 0);
+        // Sequential serving keeps the stats line thread-free.
+        assert_eq!(seq.arena_stats().threads, 0);
     }
 
     #[test]

@@ -47,6 +47,12 @@ pub fn render_arena_stats(s: &ArenaStats) -> String {
             line.push_str(&format!(", {} re-resolve(s)", s.wave_resolutions));
         }
     }
+    if s.threads > 1 {
+        line.push_str(&format!(
+            " | exec {} thread(s), {} level(s), {} op(s) parallel",
+            s.threads, s.levels, s.ops_parallel
+        ));
+    }
     line
 }
 
@@ -200,6 +206,7 @@ mod tests {
         assert!(!line.contains("warm start"), "{line}");
         assert!(!line.contains("order"), "{line}");
         assert!(!line.contains("dynamic"), "{line}");
+        assert!(!line.contains("thread(s)"), "{line}");
         let warmed = ArenaStats { warm_loaded: 4, warm_skipped: 1, ..s };
         let line = render_arena_stats(&warmed);
         assert!(line.contains("warm start 4 loaded / 1 skipped"), "{line}");
@@ -235,6 +242,22 @@ mod tests {
         let line = render_arena_stats(&s);
         assert!(line.contains("order annealed-s42-t100"), "{line}");
         assert!(line.contains("breadth 5.0 KiB vs natural 6.0 KiB (-1.0 KiB)"), "{line}");
+    }
+
+    #[test]
+    fn arena_stats_render_includes_the_parallel_shape() {
+        let s = ArenaStats {
+            planned_bytes: 8 * 1024,
+            naive_bytes: 32 * 1024,
+            strategy: "greedy-size".into(),
+            ..ArenaStats::default()
+        }
+        .with_threads(4, 17, 96);
+        let line = render_arena_stats(&s);
+        assert!(line.contains("exec 4 thread(s), 17 level(s), 96 op(s) parallel"), "{line}");
+        // A sequential engine keeps the line free of the segment.
+        let seq = ArenaStats::default().with_threads(1, 17, 0);
+        assert!(!render_arena_stats(&seq).contains("thread(s)"));
     }
 
     #[test]

@@ -161,6 +161,13 @@ pub struct ArenaStats {
     pub dynamic_hits: u64,
     /// Dynamic plan-cache misses (multi-pass planner invocations).
     pub dynamic_misses: u64,
+    /// Worker threads the engine's executor runs with (1 = sequential).
+    pub threads: usize,
+    /// Dataflow depth of the served graph (level sets in the parallel
+    /// schedule; 0 when the engine does not schedule levels).
+    pub levels: usize,
+    /// Op executions the executor dispatched to parallel workers.
+    pub ops_parallel: u64,
 }
 
 impl ArenaStats {
@@ -212,6 +219,15 @@ impl ArenaStats {
         self.order = order.into();
         self.natural_breadth = natural_breadth;
         self.order_breadth = order_breadth;
+        self
+    }
+
+    /// Record the parallel-execution shape of the serving engine: worker
+    /// threads, dataflow depth, and ops dispatched to workers so far.
+    pub fn with_threads(mut self, threads: usize, levels: usize, ops_parallel: u64) -> Self {
+        self.threads = threads;
+        self.levels = levels;
+        self.ops_parallel = ops_parallel;
         self
     }
 

@@ -1,0 +1,327 @@
+//! Level scheduling for the parallel executor: which compiled steps may run
+//! concurrently, proven from the planner's lifetime intervals plus the
+//! records' arena offset ranges.
+//!
+//! [`crate::graph::topo_levels`] gives dataflow-independent level sets, but
+//! dataflow independence is *not* enough over a planned arena: the planner
+//! deliberately aliases records with disjoint usage intervals, and both the
+//! concurrency inside a level and the reordering *between* levels (level
+//! order is a permutation of the sequential op order) could put a write on
+//! top of bytes another still-live record owns. The schedule is therefore
+//! built in two passes:
+//!
+//! 1. **Within a level**: steps are greedily packed into groups whose
+//!    members' arena byte ranges are pairwise non-conflicting — no write
+//!    range may intersect another member's write *or* read range (write
+//!    ranges are tracked in a [`DisjointIntervalSet`], the planner's own
+//!    interval structure; its insert assert doubles as a proof obligation).
+//!    For records whose usage intervals overlap, plan validation already
+//!    guarantees byte-disjointness, so a detected intersection can only
+//!    involve lifetime-disjoint (aliased) records — exactly the pairs that
+//!    must be serialized.
+//! 2. **Across the whole schedule**: a liveness replay walks the groups in
+//!    execution order, keeping the byte ranges of live records; if any
+//!    produced record's range intersects a concurrently-live record, the
+//!    level *order* itself would corrupt an aliased placement and the
+//!    schedule is marked unsafe — the executor then falls back to
+//!    sequential execution for that plan (outputs are unaffected either
+//!    way; this is purely a go/no-go for parallel dispatch).
+//!
+//! A safe schedule executes groups in order, members of one group
+//! concurrently, and yields outputs bit-identical to sequential execution:
+//! every read observes exactly the bytes its producer wrote, and the
+//! kernels themselves are deterministic.
+
+use super::{Loc, Step};
+use crate::planner::interval_tree::DisjointIntervalSet;
+
+/// One concurrency group: steps that run at the same time (singletons run
+/// inline on the coordinating thread).
+pub(super) struct Group {
+    /// Step indices; all members have arena outputs when `len() > 1`.
+    pub(super) members: Vec<usize>,
+    /// Records whose *schedule-order* death is this group — poisoned after
+    /// the group completes when poisoning is enabled. (The sequential
+    /// per-step `dies` table cannot be used here: level order may run a
+    /// record's highest-id consumer before a later-level lower-id one.)
+    pub(super) poison: Vec<usize>,
+}
+
+/// The parallel execution schedule of one (plan, batch) residency.
+pub(super) struct Schedule {
+    /// Groups in execution order.
+    pub(super) groups: Vec<Group>,
+    /// Depth of the dataflow DAG (number of level sets).
+    pub(super) levels: usize,
+    /// Largest group size — 1 means the schedule has no parallelism.
+    pub(super) width: usize,
+    /// False if the liveness replay found the level order would violate an
+    /// aliased placement; the executor must then run sequentially.
+    pub(super) safe: bool,
+}
+
+/// Half-open byte-range intersection.
+#[inline]
+fn intersects(a: (usize, usize), b: (usize, usize)) -> bool {
+    a.0 < b.1 && b.0 < a.1
+}
+
+/// In-progress group: members plus the byte ranges they touch. Writes live
+/// in a [`DisjointIntervalSet`] (closed intervals), whose insert-time
+/// assert re-proves pairwise write disjointness in debug builds.
+struct GroupAcc {
+    members: Vec<usize>,
+    writes: DisjointIntervalSet,
+    write_list: Vec<(usize, usize)>,
+    reads: Vec<(usize, usize)>,
+}
+
+impl GroupAcc {
+    fn new() -> Self {
+        GroupAcc {
+            members: Vec::new(),
+            writes: DisjointIntervalSet::new(),
+            write_list: Vec::new(),
+            reads: Vec::new(),
+        }
+    }
+
+    /// May a step writing `w` and reading `reads` join this group?
+    fn fits(&self, w: (usize, usize), reads: &[(usize, usize)]) -> bool {
+        debug_assert!(w.0 < w.1, "empty write range");
+        if self.writes.overlaps(w.0, w.1 - 1) {
+            return false;
+        }
+        if self.reads.iter().any(|&r| intersects(r, w)) {
+            return false;
+        }
+        reads
+            .iter()
+            .all(|&(s, e)| e == s || !self.writes.overlaps(s, e - 1))
+    }
+
+    fn push(&mut self, si: usize, w: (usize, usize), reads: Vec<(usize, usize)>) {
+        self.members.push(si);
+        self.writes.insert(w.0, w.1 - 1);
+        self.write_list.push(w);
+        self.reads.extend(reads);
+    }
+}
+
+/// Build the schedule for `steps` over the level sets of the graph, with
+/// `span_of` mapping a record id to its byte range in the resident arena
+/// (all lanes — conservative for any single lane).
+pub(super) fn build_schedule(
+    steps: &[Step],
+    level_sets: &[Vec<usize>],
+    num_records: usize,
+    span_of: &dyn Fn(usize) -> (usize, usize),
+) -> Schedule {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut width = 1usize;
+    for level in level_sets {
+        let mut accs: Vec<GroupAcc> = Vec::new();
+        let mut io_out: Vec<usize> = Vec::new();
+        for &si in level {
+            let step = &steps[si];
+            let Loc::Arena(orec) = step.out else {
+                // Io-output steps mutate executor-owned buffers; they run
+                // inline as singleton groups after the level's arena work.
+                io_out.push(si);
+                continue;
+            };
+            let w = span_of(orec);
+            let reads: Vec<(usize, usize)> = step
+                .ins
+                .iter()
+                .filter_map(|l| match l {
+                    Loc::Arena(r) => Some(span_of(*r)),
+                    _ => None,
+                })
+                .collect();
+            match accs.iter_mut().find(|acc| acc.fits(w, &reads)) {
+                Some(acc) => acc.push(si, w, reads),
+                None => {
+                    let mut acc = GroupAcc::new();
+                    acc.push(si, w, reads);
+                    accs.push(acc);
+                }
+            }
+        }
+        for acc in accs {
+            width = width.max(acc.members.len());
+            groups.push(acc.members);
+        }
+        for si in io_out {
+            groups.push(vec![si]);
+        }
+    }
+
+    // Positions, then per-record produce/death groups in schedule order.
+    let mut pos_of = vec![0usize; steps.len()];
+    for (g, members) in groups.iter().enumerate() {
+        for &si in members {
+            pos_of[si] = g;
+        }
+    }
+    let mut produced_at: Vec<Option<usize>> = vec![None; num_records];
+    let mut death_at: Vec<usize> = vec![0; num_records];
+    for (si, step) in steps.iter().enumerate() {
+        if let Loc::Arena(orec) = step.out {
+            produced_at[orec] = Some(pos_of[si]);
+            death_at[orec] = death_at[orec].max(pos_of[si]);
+        }
+        for l in &step.ins {
+            if let Loc::Arena(r) = l {
+                death_at[*r] = death_at[*r].max(pos_of[si]);
+            }
+        }
+    }
+
+    // Liveness replay: would this execution order write over a live
+    // (aliased) record?
+    let mut live: Vec<(usize, usize, usize)> = Vec::new();
+    let mut safe = true;
+    for (g, members) in groups.iter().enumerate() {
+        let mut produced_now: Vec<(usize, usize, usize)> = Vec::new();
+        for &si in members {
+            if let Loc::Arena(orec) = steps[si].out {
+                let (s, e) = span_of(orec);
+                if live
+                    .iter()
+                    .any(|&(r, ls, le)| r != orec && intersects((ls, le), (s, e)))
+                {
+                    safe = false;
+                }
+                produced_now.push((orec, s, e));
+            }
+        }
+        live.extend(produced_now);
+        live.retain(|&(r, _, _)| death_at[r] != g);
+    }
+
+    let poison_of = |g: usize| -> Vec<usize> {
+        (0..num_records)
+            .filter(|&r| produced_at[r].is_some() && death_at[r] == g)
+            .collect()
+    };
+    let groups = groups
+        .into_iter()
+        .enumerate()
+        .map(|(g, members)| Group { members, poison: poison_of(g) })
+        .collect();
+    Schedule { groups, levels: level_sets.len(), width, safe }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Instr;
+    use super::*;
+
+    fn step(ins: Vec<Loc>, out: Loc) -> Step {
+        Step { instr: Instr::CopyThrough, ins, out, dies: Vec::new() }
+    }
+
+    /// Spans from a table: record id -> (start, end).
+    fn spans(table: Vec<(usize, usize)>) -> impl Fn(usize) -> (usize, usize) {
+        move |r| table[r]
+    }
+
+    #[test]
+    fn chain_graph_is_all_singletons_and_safe() {
+        // in(io) -> r0 -> r1 -> out(io), one op per level.
+        let steps = vec![
+            step(vec![Loc::Io(0)], Loc::Arena(0)),
+            step(vec![Loc::Arena(0)], Loc::Arena(1)),
+            step(vec![Loc::Arena(1)], Loc::Io(1)),
+        ];
+        let levels = vec![vec![0], vec![1], vec![2]];
+        let span = spans(vec![(0, 64), (64, 128)]);
+        let sched = build_schedule(&steps, &levels, 2, &span);
+        assert!(sched.safe);
+        assert_eq!(sched.levels, 3);
+        assert_eq!(sched.width, 1);
+        assert_eq!(sched.groups.len(), 3);
+        // Record 0 dies at the group running step 1; record 1 at step 2's.
+        assert_eq!(sched.groups[1].poison, vec![0]);
+        assert_eq!(sched.groups[2].poison, vec![1]);
+    }
+
+    #[test]
+    fn independent_disjoint_ops_share_a_group() {
+        // Two towers off one input, disjoint spans, then a join.
+        let steps = vec![
+            step(vec![Loc::Io(0)], Loc::Arena(0)),
+            step(vec![Loc::Arena(0)], Loc::Arena(1)),
+            step(vec![Loc::Arena(0)], Loc::Arena(2)),
+            step(vec![Loc::Arena(1), Loc::Arena(2)], Loc::Arena(3)),
+        ];
+        let levels = vec![vec![0], vec![1, 2], vec![3]];
+        let span = spans(vec![(0, 64), (64, 128), (128, 192), (0, 64)]);
+        let sched = build_schedule(&steps, &levels, 4, &span);
+        assert!(sched.safe);
+        assert_eq!(sched.width, 2);
+        let wide: Vec<_> = sched.groups.iter().filter(|g| g.members.len() == 2).collect();
+        assert_eq!(wide.len(), 1);
+        assert_eq!(wide[0].members, vec![1, 2]);
+    }
+
+    #[test]
+    fn aliased_same_level_writes_are_serialized() {
+        // Steps 1 and 2 are dataflow-independent but their output byte
+        // ranges overlap: they must not share a group. Record 1 is never
+        // read afterwards (it dies at its producer), so the *serialized*
+        // order is still safe — the replay keeps the schedule usable.
+        let steps = vec![
+            step(vec![Loc::Io(0)], Loc::Arena(0)),
+            step(vec![Loc::Arena(0)], Loc::Arena(1)),
+            step(vec![Loc::Arena(0)], Loc::Arena(2)),
+        ];
+        let levels = vec![vec![0], vec![1, 2]];
+        // records 1 and 2 overlap in bytes
+        let span = spans(vec![(0, 64), (64, 128), (96, 160)]);
+        let sched = build_schedule(&steps, &levels, 3, &span);
+        assert!(sched.groups.iter().all(|g| g.members.len() == 1));
+        assert!(sched.safe, "serialized aliased writes with no later reader are safe");
+    }
+
+    #[test]
+    fn reader_of_aliased_bytes_is_serialized_after_the_writer() {
+        // Step 2 writes bytes that step 1 reads (record 0 aliases record
+        // 2): same level, must not run concurrently.
+        let steps = vec![
+            step(vec![Loc::Io(0)], Loc::Arena(0)),
+            step(vec![Loc::Arena(0)], Loc::Arena(1)),
+            step(vec![Loc::Io(0)], Loc::Arena(2)),
+        ];
+        let levels = vec![vec![0], vec![1, 2]];
+        let span = spans(vec![(0, 64), (64, 128), (0, 64)]);
+        let sched = build_schedule(&steps, &levels, 3, &span);
+        let wide = sched.groups.iter().find(|g| g.members.len() > 1);
+        assert!(wide.is_none(), "aliased reader/writer grouped together");
+    }
+
+    #[test]
+    fn cross_level_alias_marks_schedule_unsafe() {
+        // A plan that is valid *sequentially* but broken under level order:
+        // record 0 lives over ops [0, 2]; record 3 (same bytes) is written
+        // at op 3, strictly after — disjoint lifetimes, legal alias. But
+        // op 3 reads only the graph input, so its *level* is 0, and level
+        // order runs it before op 2 reads record 0. The replay must refuse
+        // this schedule.
+        let steps = vec![
+            step(vec![Loc::Io(0)], Loc::Arena(0)),
+            step(vec![Loc::Arena(0)], Loc::Arena(1)),
+            step(vec![Loc::Arena(0), Loc::Arena(1)], Loc::Arena(2)),
+            step(vec![Loc::Io(0)], Loc::Arena(3)),
+        ];
+        let levels = vec![vec![0, 3], vec![1], vec![2]];
+        let span = spans(vec![(0, 64), (64, 128), (128, 192), (0, 64)]);
+        let sched = build_schedule(&steps, &levels, 4, &span);
+        // Ops 0 and 3 were kept apart (overlapping writes) ...
+        assert!(sched.groups.iter().all(|g| g.members.len() == 1));
+        // ... but serialization cannot help: record 3's write still lands
+        // before record 0's last read.
+        assert!(!sched.safe, "live-range clobber not detected");
+    }
+}

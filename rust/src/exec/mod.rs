@@ -12,12 +12,25 @@
 //! The executor "compiles" the graph once into a flat instruction list with
 //! pre-resolved buffer locations, then `run` is a tight interpret loop with
 //! zero allocation besides the op kernels' work.
+//!
+//! **Parallel execution** (`set_threads` / `serve --threads`): with more
+//! than one thread the executor runs batches in *lockstep* — worker threads
+//! own contiguous lane chunks and synchronize per step, so at any instant
+//! every thread executes the same op, whose tensors are simultaneously live
+//! and therefore byte-disjoint by plan validation — and runs single-sample
+//! inferences through a level schedule ([`levels`]) that proves same-level
+//! ops non-aliasing from the planner's lifetime intervals plus their arena
+//! offset ranges. Both modes produce outputs bit-identical to sequential
+//! execution; both fall back to the sequential loop when the proof does not
+//! hold (or in §7 wave mode, whose per-op re-resolution is inherently
+//! sequential).
 
 pub mod cachesim;
+mod levels;
 pub mod ops;
 
-use crate::arena::{Arena, ArenaPool};
-use crate::graph::{Graph, OpKind, PoolKind, TensorKind};
+use crate::arena::{Arena, ArenaPool, ParallelArena};
+use crate::graph::{topo_levels, Graph, OpKind, PoolKind, TensorKind};
 use crate::planner::{
     registry, DynamicMode, DynamicRecords, MultiPassPlan, OffsetPlan, OffsetPlanner,
     OrderStrategy, PlanError, PlanRequest, PlanService,
@@ -25,6 +38,7 @@ use crate::planner::{
 use crate::records::UsageRecords;
 use crate::rng::SplitMix64;
 use ops::Geom;
+pub use ops::KernelMode;
 use std::sync::Arc;
 
 /// Where a tensor's storage lives at run time.
@@ -122,6 +136,18 @@ pub struct Executor {
     /// sized at the worst-wave multi-pass peak and offsets are re-resolved
     /// through the plan cache at every wave boundary.
     waves: Option<WaveState>,
+    /// Worker threads for `run`/`run_batch` (1 = sequential).
+    threads: usize,
+    /// Which kernel family `dispatch` routes hot ops to.
+    mode: KernelMode,
+    /// Step indices per dataflow level (batch-invariant; step index == op
+    /// id). Empty if the graph had no valid level decomposition.
+    level_sets: Vec<Vec<usize>>,
+    /// The parallel schedule of the *resident* plan — rebuilt on every
+    /// arena swap, since aliasing depends on the batch-scaled offsets.
+    schedule: levels::Schedule,
+    /// Op executions dispatched to parallel workers so far.
+    ops_parallel: u64,
 }
 
 impl Executor {
@@ -408,6 +434,19 @@ impl Executor {
 
         let arena = Arena::from_pool(plan, &scaled, batch, &pool);
         let naive_total = scaled.naive_total();
+        // Step index == op id (steps were built in graph order), so the
+        // graph's dataflow levels map directly onto step indices. The
+        // schedule additionally depends on the resident plan's offsets and
+        // is rebuilt on every arena swap.
+        let level_sets: Vec<Vec<usize>> = topo_levels(graph)
+            .map(|ls| {
+                ls.into_iter()
+                    .map(|lv| lv.into_iter().map(|o| o.0).collect())
+                    .collect()
+            })
+            .unwrap_or_default();
+        let span_of = |r: usize| arena.record_span(r);
+        let schedule = levels::build_schedule(&steps, &level_sets, base_records.len(), &span_of);
         Ok(Executor {
             steps,
             arena,
@@ -424,6 +463,11 @@ impl Executor {
             pool,
             batch,
             waves: None,
+            threads: 1,
+            mode: KernelMode::default(),
+            level_sets,
+            schedule,
+            ops_parallel: 0,
         })
     }
 
@@ -571,6 +615,51 @@ impl Executor {
         self.poison_dead = on;
     }
 
+    /// Set the worker-thread count (clamped to at least 1). With more than
+    /// one thread, `run_batch` runs lanes in lockstep across workers and
+    /// single-sample runs use the level schedule when its aliasing proof
+    /// holds; §7 wave mode always executes sequentially (its per-op offset
+    /// re-resolution is order-dependent).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// Worker-thread count for `run`/`run_batch`.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Route hot ops through the vectorized kernels (default) or the
+    /// retained scalar references (`KernelMode::Reference`) — the baseline
+    /// leg of the benchmark trajectory.
+    pub fn set_kernel_mode(&mut self, mode: KernelMode) {
+        self.mode = mode;
+    }
+
+    /// Which kernel family hot ops currently dispatch to.
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.mode
+    }
+
+    /// Dataflow depth of the graph: number of level sets in the parallel
+    /// schedule (0 if no level decomposition was possible).
+    pub fn levels(&self) -> usize {
+        self.schedule.levels
+    }
+
+    /// Whether the resident plan's level schedule passed its aliasing
+    /// proof — if false, threaded single-sample runs fall back to the
+    /// sequential loop.
+    pub fn schedule_safe(&self) -> bool {
+        self.schedule.safe
+    }
+
+    /// Op executions dispatched to parallel workers so far (monotonic,
+    /// like [`Self::wave_resolutions`]).
+    pub fn ops_parallel(&self) -> u64 {
+        self.ops_parallel
+    }
+
     /// Run one inference. `inputs` in graph-input order; returns outputs in
     /// graph-output order.
     pub fn run(&mut self, inputs: &[&[f32]]) -> Vec<Vec<f32>> {
@@ -638,6 +727,11 @@ impl Executor {
         self.batch = batch;
         // Keep the stored identity in step with the resident batch.
         self.request = self.request.map(|r| r.with_batch(batch));
+        // The parallel schedule proves non-aliasing against the resident
+        // offsets, which just changed.
+        let span_of = |r: usize| self.arena.record_span(r);
+        self.schedule =
+            levels::build_schedule(&self.steps, &self.level_sets, self.base_records.len(), &span_of);
         // Wave-aware mode: pre-resolve the new batch's wave envelope so
         // the post-swap hot path stays planner-free.
         self.prewarm_waves()?;
@@ -674,12 +768,99 @@ impl Executor {
         if n > self.batch {
             self.ensure_batch(n)?;
         }
+        if self.threads > 1 && n > 1 && self.waves.is_none() {
+            return self.run_batch_lockstep(input, n, in_elems, out_elems);
+        }
         let mut out = Vec::with_capacity(n * out_elems);
         for i in 0..n {
             let sample = &input[i * in_elems..(i + 1) * in_elems];
             let res = self.run_lane(&[sample], i);
             out.extend_from_slice(&res[0]);
         }
+        Ok(out)
+    }
+
+    /// Lockstep batch parallelism: workers own contiguous lane chunks and
+    /// march through the step list synchronized per step by a barrier, so
+    /// at any instant every thread executes the *same* op (on its own
+    /// lanes). That is the whole aliasing proof: every record an op touches
+    /// is live at that op, plan validation makes simultaneously-live
+    /// records byte-disjoint, and same-record lane stripes are disjoint by
+    /// the arena's striped layout — so no two threads can ever hold
+    /// overlapping bytes. Free-running workers would not have this
+    /// property: a thread at op `i` and another at op `j` can touch
+    /// records whose spans alias (they are never live together
+    /// *sequentially*). Each worker interprets its lanes against private
+    /// io-buffer copies; outputs land in disjoint chunks of one payload
+    /// vector, bit-identical to the sequential loop (same kernels, same
+    /// per-lane step order).
+    fn run_batch_lockstep(
+        &mut self,
+        input: &[f32],
+        n: usize,
+        in_elems: usize,
+        out_elems: usize,
+    ) -> Result<Vec<f32>, String> {
+        let workers = self.threads.min(n);
+        let poison = self.poison_dead;
+        let mode = self.mode;
+        let num_steps = self.steps.len();
+        let steps = &self.steps;
+        let weights = &self.weights;
+        let io_proto = &self.io;
+        let input_slot = self.input_io[0];
+        let out_slot = self.output_io[0];
+        let view = self.arena.parallel_view();
+        let barrier = std::sync::Barrier::new(workers);
+        let mut out = vec![0f32; n * out_elems];
+        std::thread::scope(|s| {
+            let mut rest: &mut [f32] = out.as_mut_slice();
+            let mut lo = 0usize;
+            for w in 0..workers {
+                let hi = ((w + 1) * n) / workers;
+                let (chunk, tail) = rest.split_at_mut((hi - lo) * out_elems);
+                rest = tail;
+                let barrier = &barrier;
+                let view = &view;
+                let lanes = lo..hi;
+                s.spawn(move || {
+                    // Private per-lane io buffers: io slots are scratch the
+                    // sequential loop reuses across lanes, so concurrent
+                    // lanes each need their own copy.
+                    let mut ios: Vec<Vec<Vec<f32>>> =
+                        lanes.clone().map(|_| io_proto.clone()).collect();
+                    for (k, lane) in lanes.clone().enumerate() {
+                        ios[k][input_slot]
+                            .copy_from_slice(&input[lane * in_elems..(lane + 1) * in_elems]);
+                    }
+                    for step in steps.iter() {
+                        for (k, lane) in lanes.clone().enumerate() {
+                            exec_step_in_worker(step, &mut ios[k], weights, view, lane, mode);
+                            if poison {
+                                for &r in &step.dies {
+                                    // SAFETY: `r` dies at this step, so it is
+                                    // live here — its span is disjoint from
+                                    // every other record concurrent workers
+                                    // touch at this same step, and its own
+                                    // stripes are per-lane disjoint.
+                                    unsafe { view.poison_lane(r, lane) };
+                                }
+                            }
+                        }
+                        barrier.wait();
+                    }
+                    for (k, ios_k) in ios.iter().enumerate() {
+                        chunk[k * out_elems..(k + 1) * out_elems].copy_from_slice(&ios_k[out_slot]);
+                    }
+                });
+                lo = hi;
+            }
+        });
+        drop(view);
+        if workers > 1 {
+            self.ops_parallel += (n * num_steps) as u64;
+        }
+        debug_assert!(self.arena.guards_intact(), "arena guard overwritten");
         Ok(out)
     }
 
@@ -690,10 +871,18 @@ impl Executor {
         for (&ioi, data) in self.input_io.iter().zip(inputs.iter()) {
             self.io[ioi].copy_from_slice(data);
         }
-        for si in 0..self.steps.len() {
-            self.exec_step(si, lane);
-            if self.waves.is_some() {
-                self.resolve_waves_after(si);
+        if self.threads > 1
+            && self.waves.is_none()
+            && self.schedule.safe
+            && self.schedule.width > 1
+        {
+            self.run_lane_scheduled(lane);
+        } else {
+            for si in 0..self.steps.len() {
+                self.exec_step(si, lane);
+                if self.waves.is_some() {
+                    self.resolve_waves_after(si);
+                }
             }
         }
         self.output_io
@@ -737,10 +926,66 @@ impl Executor {
         self.waves.as_ref().map_or(0, |w| w.resolutions)
     }
 
+    /// Run one lane through the level schedule: conflict-free groups of
+    /// same-level steps execute concurrently on a `thread::scope` worker
+    /// pool, each op writing its own validator-disjoint arena span through
+    /// a [`ParallelArena`] view. Only entered when the schedule's liveness
+    /// replay proved the group order safe ([`levels::build_schedule`]).
+    /// Tensor deaths are poisoned per *group* (the schedule's recomputed
+    /// death positions), not per step — within a group "after op i" has no
+    /// meaning.
+    fn run_lane_scheduled(&mut self, lane: usize) {
+        let threads = self.threads;
+        let mode = self.mode;
+        let poison = self.poison_dead;
+        for gi in 0..self.schedule.groups.len() {
+            let members = self.schedule.groups[gi].members.len();
+            if members == 1 {
+                let si = self.schedule.groups[gi].members[0];
+                self.exec_step_inner(si, lane, false);
+            } else {
+                let group = &self.schedule.groups[gi];
+                let steps = &self.steps;
+                let io = &self.io;
+                let weights = &self.weights;
+                let view = self.arena.parallel_view();
+                let workers = threads.min(members);
+                let chunk = members.div_ceil(workers);
+                std::thread::scope(|s| {
+                    for part in group.members.chunks(chunk) {
+                        let view = &view;
+                        s.spawn(move || {
+                            // The group was built so that all member writes
+                            // and reads are pairwise byte-disjoint, and the
+                            // liveness replay proved no member overlaps a
+                            // still-live earlier record.
+                            for &si in part {
+                                let step = &steps[si];
+                                exec_arena_step_parallel(step, io, weights, view, lane, mode);
+                            }
+                        });
+                    }
+                });
+                self.ops_parallel += members as u64;
+            }
+            if poison {
+                let dead = self.schedule.groups[gi].poison.clone();
+                for r in dead {
+                    self.arena.poison_lane(r, lane);
+                }
+            }
+            debug_assert!(self.arena.guards_intact(), "arena guard overwritten");
+        }
+    }
+
     fn exec_step(&mut self, si: usize, lane: usize) {
+        self.exec_step_inner(si, lane, self.poison_dead)
+    }
+
+    fn exec_step_inner(&mut self, si: usize, lane: usize, poison: bool) {
         // Split borrows: steps are read-only during execution.
         let step = &self.steps[si];
-        let poison = self.poison_dead;
+        let mode = self.mode;
 
         // Resolve the output buffer and input slices. Two cases by output
         // location; weights/io inputs never alias anything.
@@ -765,7 +1010,7 @@ impl Executor {
                         Loc::Weight(w) => self.weights[*w].as_slice(),
                     })
                     .collect();
-                dispatch(&step.instr, &ins, out);
+                dispatch(&step.instr, &ins, out, mode);
             }
             Loc::Io(oi) => {
                 let mut out = std::mem::take(&mut self.io[oi]);
@@ -779,7 +1024,7 @@ impl Executor {
                             Loc::Weight(w) => self.weights[*w].as_slice(),
                         })
                         .collect();
-                    dispatch(&step.instr, &ins, &mut out);
+                    dispatch(&step.instr, &ins, &mut out, mode);
                 }
                 self.io[oi] = out;
             }
@@ -805,9 +1050,96 @@ impl Drop for Executor {
     }
 }
 
+/// Execute one step through a [`ParallelArena`] view — the worker-thread
+/// body of both parallel modes. `io` is read-only here: lockstep workers
+/// pass their private per-lane copies (taking the output slot out first for
+/// io-output steps), and level-scheduled groups contain arena-output steps
+/// only.
+///
+/// # Safety contract (asserted by callers)
+/// The caller guarantees that, for the duration of this call, no concurrent
+/// thread holds bytes overlapping this step's output span in this lane:
+/// lockstep by simultaneous liveness of same-step records, the level
+/// schedule by its conflict grouping plus liveness replay.
+fn exec_arena_step_parallel(
+    step: &Step,
+    io: &[Vec<f32>],
+    weights: &[Vec<f32>],
+    view: &ParallelArena<'_>,
+    lane: usize,
+    mode: KernelMode,
+) {
+    let Loc::Arena(orec) = step.out else {
+        unreachable!("parallel groups contain arena-output steps only")
+    };
+    let arena_in: Vec<usize> = step
+        .ins
+        .iter()
+        .filter_map(|l| match l {
+            Loc::Arena(r) => Some(*r),
+            _ => None,
+        })
+        .collect();
+    // SAFETY: per the contract above; within the step itself, the view's
+    // split re-checks that output and input spans do not overlap.
+    let (out, arena_slices) = unsafe { view.split_io_lane(orec, &arena_in, lane) };
+    let mut it = arena_slices.into_iter();
+    let ins: Vec<&[f32]> = step
+        .ins
+        .iter()
+        .map(|l| match l {
+            Loc::Arena(_) => it.next().unwrap(),
+            Loc::Io(i) => io[*i].as_slice(),
+            Loc::Weight(w) => weights[*w].as_slice(),
+        })
+        .collect();
+    dispatch(&step.instr, &ins, out, mode);
+}
+
+/// Lockstep worker body: one step, one lane, against the worker's private
+/// io buffers. Io-output steps (graph outputs) write the private buffer;
+/// arena-output steps go through [`exec_arena_step_parallel`].
+fn exec_step_in_worker(
+    step: &Step,
+    io: &mut [Vec<f32>],
+    weights: &[Vec<f32>],
+    view: &ParallelArena<'_>,
+    lane: usize,
+    mode: KernelMode,
+) {
+    match step.out {
+        Loc::Arena(_) => exec_arena_step_parallel(step, io, weights, view, lane, mode),
+        Loc::Io(oi) => {
+            let mut out = std::mem::take(&mut io[oi]);
+            {
+                let ins: Vec<&[f32]> = step
+                    .ins
+                    .iter()
+                    .map(|l| match l {
+                        // SAFETY: reads only — the record is live (this op
+                        // consumes it), so no concurrent same-step writer
+                        // overlaps it, and the lane stripe is this thread's.
+                        Loc::Arena(r) => unsafe { view.tensor_lane(*r, lane) },
+                        Loc::Io(i) => io[*i].as_slice(),
+                        Loc::Weight(w) => weights[*w].as_slice(),
+                    })
+                    .collect();
+                dispatch(&step.instr, &ins, &mut out, mode);
+            }
+            io[oi] = out;
+        }
+        Loc::Weight(_) => unreachable!("op writes to a weight"),
+    }
+}
+
 /// Execute one instruction. `ins` are in op-input order (activations first,
-/// then weights, per GraphBuilder convention).
-fn dispatch(instr: &Instr, ins: &[&[f32]], out: &mut [f32]) {
+/// then weights, per GraphBuilder convention). Hot ops dispatch by
+/// [`KernelMode`]; structural ops (concat, softmax, resize, pad, copies)
+/// have a single implementation.
+fn dispatch(instr: &Instr, ins: &[&[f32]], out: &mut [f32], mode: KernelMode) {
+    if mode == KernelMode::Reference {
+        return dispatch_reference(instr, ins, out);
+    }
     match instr {
         Instr::Conv { ic, oc, geom, act } => ops::conv2d(ins[0], ins[1], ins[2], out, *ic, *oc, geom, *act),
         Instr::Dw { c, geom, act } => ops::dwconv2d(ins[0], ins[1], ins[2], out, *c, geom, *act),
@@ -827,6 +1159,30 @@ fn dispatch(instr: &Instr, ins: &[&[f32]], out: &mut [f32]) {
         Instr::Resize { h, w, oh, ow, c } => ops::resize_bilinear(ins[0], out, *h, *w, *oh, *ow, *c),
         Instr::CopyThrough => out.copy_from_slice(&ins[0][..out.len()]),
         Instr::Pad { h, w, c, before, after } => ops::pad_spatial(ins[0], out, *h, *w, *c, *before, *after),
+    }
+}
+
+/// Reference-mode dispatch: hot ops route to the retained scalar kernels
+/// ([`ops::scalar`]); structural ops share the default implementations.
+fn dispatch_reference(instr: &Instr, ins: &[&[f32]], out: &mut [f32]) {
+    match instr {
+        Instr::Conv { ic, oc, geom, act } => {
+            ops::scalar::conv2d(ins[0], ins[1], ins[2], out, *ic, *oc, geom, *act)
+        }
+        Instr::Dw { c, geom, act } => {
+            ops::scalar::dwconv2d(ins[0], ins[1], ins[2], out, *c, geom, *act)
+        }
+        Instr::MaxPool { c, geom } => ops::scalar::maxpool2d(ins[0], out, *c, geom),
+        Instr::AvgPool { c, geom } => ops::scalar::avgpool2d(ins[0], out, *c, geom),
+        Instr::Gap { hw, c } => ops::scalar::global_avg_pool(ins[0], out, *hw, *c),
+        Instr::Add { act } => ops::scalar::add(ins[0], ins[1], out, *act),
+        Instr::Mul => ops::scalar::mul(ins[0], ins[1], out),
+        Instr::Fc { ind, outd, act } => {
+            ops::scalar::fully_connected(ins[0], ins[1], ins[2], out, *ind, *outd, *act)
+        }
+        Instr::Relu { max } => ops::scalar::relu(ins[0], out, *max),
+        Instr::Sigmoid => ops::scalar::sigmoid(ins[0], out),
+        other => dispatch(other, ins, out, KernelMode::Vectorized),
     }
 }
 
@@ -1121,5 +1477,99 @@ mod tests {
         let mut ex = Executor::with_plan(&g, &records, &plan, 7).unwrap();
         assert!(ex.ensure_batch(2).is_err());
         assert!(ex.ensure_batch(1).is_ok()); // resident batch is fine
+    }
+
+    #[test]
+    fn lockstep_batch_is_bit_identical_to_sequential() {
+        let g = tiny_net();
+        let n_in = g.tensor(g.inputs[0]).num_elements();
+        let n = 5usize;
+        let mut rng = SplitMix64::new(33);
+        let mut flat = vec![0f32; n * n_in];
+        rng.fill_f32(&mut flat, 1.0);
+
+        let mut seq = Executor::new(&g, &GreedyBySize, 7).unwrap();
+        let mut par = Executor::new(&g, &GreedyBySize, 7).unwrap();
+        par.set_threads(4);
+        par.set_poison_dead(true);
+        assert_eq!(par.threads(), 4);
+        let a = seq.run_batch(&flat, n).unwrap();
+        let b = par.run_batch(&flat, n).unwrap();
+        assert_eq!(a, b, "lockstep parallel batch diverged from sequential");
+        assert!(par.ops_parallel() > 0, "no work was dispatched to workers");
+        // Workers outnumbering lanes degrade gracefully.
+        par.set_threads(16);
+        assert_eq!(par.run_batch(&flat, n).unwrap(), a);
+    }
+
+    #[test]
+    fn scheduled_single_sample_matches_sequential_on_branchy_net() {
+        // BlazeFace has wide levels (parallel residual towers, two output
+        // heads) — the level schedule actually engages.
+        let g = crate::models::blazeface();
+        let x = input_for(&g, 5);
+        let mut seq = Executor::new(&g, &GreedyBySize, 1).unwrap();
+        let mut par = Executor::new(&g, &GreedyBySize, 1).unwrap();
+        par.set_threads(4);
+        par.set_poison_dead(true);
+        assert!(par.levels() > 0, "no level decomposition for a DAG");
+        let a = seq.run(&[&x]);
+        let b = par.run(&[&x]);
+        assert_eq!(a, b, "level-scheduled run diverged from sequential");
+    }
+
+    #[test]
+    fn kernel_mode_reference_agrees_with_vectorized() {
+        // Exact agreement is the kernel_diff suite's job (1-ulp bound);
+        // end-to-end through softmax a loose tolerance suffices here.
+        let g = tiny_net();
+        let x = input_for(&g, 41);
+        let mut vec_ex = Executor::new(&g, &GreedyBySize, 7).unwrap();
+        let mut ref_ex = Executor::new(&g, &GreedyBySize, 7).unwrap();
+        assert_eq!(vec_ex.kernel_mode(), ops::KernelMode::Vectorized);
+        ref_ex.set_kernel_mode(ops::KernelMode::Reference);
+        let a = vec_ex.run(&[&x]);
+        let b = ref_ex.run(&[&x]);
+        for (va, vb) in a[0].iter().zip(&b[0]) {
+            assert!((va - vb).abs() <= 1e-5, "kernel modes disagree: {va} vs {vb}");
+        }
+    }
+
+    #[test]
+    fn threaded_wave_mode_falls_back_to_sequential() {
+        // §7 wave mode re-resolves offsets per op — inherently sequential.
+        // Threads must not change its numbers (or deadlock).
+        let g = tiny_net();
+        let x = input_for(&g, 23);
+        let records = UsageRecords::from_graph(&g);
+        let dynamic = DynamicRecords::decode_tail(&records, records.num_ops / 2);
+        let svc = PlanService::shared();
+        let mut ex = Executor::with_request(
+            &g,
+            Arc::clone(&svc),
+            &PlanRequest::new(),
+            Some(dynamic),
+            7,
+        )
+        .unwrap();
+        let before = ex.run(&[&x]);
+        ex.set_threads(4);
+        assert_eq!(ex.run(&[&x]), before);
+        assert_eq!(ex.ops_parallel(), 0, "wave mode must never dispatch workers");
+    }
+
+    #[test]
+    fn batch_growth_rebuilds_the_schedule() {
+        let g = crate::models::blazeface();
+        let svc = PlanService::shared();
+        let mut ex = Executor::with_service(&g, svc, "greedy-size", 7).unwrap();
+        ex.set_threads(2);
+        let depth = ex.levels();
+        let n_in = g.tensor(g.inputs[0]).num_elements();
+        let x = vec![0.5f32; 3 * n_in];
+        ex.run_batch(&x, 3).unwrap();
+        // Levels are a graph property: the rebuilt (batch-3) schedule keeps
+        // the same depth even though every span moved.
+        assert_eq!(ex.levels(), depth);
     }
 }

@@ -1,27 +1,65 @@
-//! Reference CPU kernels for the graph op set.
+//! CPU kernels for the graph op set: a vectorized default family plus a
+//! retained scalar reference family.
 //!
-//! These are deliberately simple NHWC loops: the executor's job in this
-//! repo is *behavioural validation of memory plans* (and the locality
-//! measurements of `benches/locality.rs`), not peak FLOPs — the optimized
-//! compute path is the AOT-compiled XLA module run by `crate::runtime`.
-//! The conv kernels still hoist bounds checks and iterate cache-friendly
-//! (channels innermost) so whole-network runs stay in the tens of
-//! milliseconds.
+//! The default kernels are written for auto-vectorization on stable Rust
+//! (no intrinsics, no new deps): fixed-width `f32` micro-tiles over the
+//! channel dimension keep accumulators in registers, and `conv2d` /
+//! [`fully_connected`] share the register-blocked [`matmul_bias`] core
+//! (1×1 stride-1 convolutions lower to it directly — im2col-free, the
+//! pixel matrix *is* the left operand). Every kernel accumulates each
+//! output element in the same order as its scalar reference (bias first,
+//! then taps ascending in `(ky, kx, c)`), so the two families agree to
+//! the last ulp and the parallel executor can assert bit-identity against
+//! sequential runs.
+//!
+//! The original straight-loop kernels are retained under [`scalar`] as the
+//! differential-test oracle and the recorded-baseline path of
+//! `benches/serving.rs` (`BENCH_serving.json` keeps both numbers).
 
 use crate::graph::{Activation, Padding};
 
-/// Apply a fused activation in place.
+/// Micro-tile width over the output-channel dimension: 8 `f32` lanes is one
+/// AVX2 register / two NEON registers, and small enough that the compiler
+/// keeps a [`MR`]×`NR` accumulator block resident.
+pub const NR: usize = 8;
+/// Register-block height (rows of the left matmul operand per block).
+pub const MR: usize = 4;
+
+/// Which kernel family the executor dispatches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// The retained straight-loop kernels in [`scalar`] — the
+    /// differential-test oracle and the recorded perf baseline.
+    Reference,
+    /// Register-blocked, lane-chunked kernels (the default).
+    #[default]
+    Vectorized,
+}
+
+/// Apply a fused activation in place (lane-chunked).
 #[inline]
 pub fn activate(buf: &mut [f32], act: Activation) {
     match act {
         Activation::None => {}
         Activation::Relu => {
-            for v in buf.iter_mut() {
+            let mut it = buf.chunks_exact_mut(NR);
+            for chunk in &mut it {
+                for v in chunk.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            for v in it.into_remainder() {
                 *v = v.max(0.0);
             }
         }
         Activation::Relu6 => {
-            for v in buf.iter_mut() {
+            let mut it = buf.chunks_exact_mut(NR);
+            for chunk in &mut it {
+                for v in chunk.iter_mut() {
+                    *v = v.clamp(0.0, 6.0);
+                }
+            }
+            for v in it.into_remainder() {
                 *v = v.clamp(0.0, 6.0);
             }
         }
@@ -91,9 +129,117 @@ impl Geom {
             pw,
         }
     }
+
+    /// True if this geometry is a stride-1 unpadded 1×1 convolution — the
+    /// case that lowers to one [`matmul_bias`] call over the pixel matrix.
+    #[inline]
+    pub fn is_pointwise(&self) -> bool {
+        self.kh == 1 && self.kw == 1 && self.sh == 1 && self.sw == 1 && self.ph == 0 && self.pw == 0
+    }
+}
+
+/// Register-blocked matmul with bias: `out[m×n] = a[m×k] · w[k×n] + bias[n]`.
+///
+/// `a` rows are `lda` elements apart (so a strided pixel matrix can feed it
+/// without packing); `out` rows are `ldc` apart. Full blocks run as
+/// [`MR`]×[`NR`] accumulator tiles held in registers; remainders fall back
+/// to narrower tiles. Every output element accumulates `k`-ascending, so
+/// the result is bit-identical across block shapes and to a straight
+/// triple loop.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias(
+    a: &[f32],
+    lda: usize,
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    ldc: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert!(a.len() >= m.saturating_sub(1) * lda + k || m == 0);
+    debug_assert!(w.len() >= k * n);
+    debug_assert!(bias.len() >= n);
+    let mut r = 0;
+    while r + MR <= m {
+        let mut c0 = 0;
+        while c0 + NR <= n {
+            let mut acc = [[0f32; NR]; MR];
+            for row in acc.iter_mut() {
+                row.copy_from_slice(&bias[c0..c0 + NR]);
+            }
+            for kk in 0..k {
+                let wrow = &w[kk * n + c0..kk * n + c0 + NR];
+                for (ri, row) in acc.iter_mut().enumerate() {
+                    let av = a[(r + ri) * lda + kk];
+                    for (ci, &wv) in wrow.iter().enumerate() {
+                        row[ci] += av * wv;
+                    }
+                }
+            }
+            for (ri, row) in acc.iter().enumerate() {
+                let o = (r + ri) * ldc + c0;
+                out[o..o + NR].copy_from_slice(row);
+            }
+            c0 += NR;
+        }
+        for ri in 0..MR {
+            matmul_row_tail(a, (r + ri) * lda, w, bias, out, (r + ri) * ldc, c0, k, n);
+        }
+        r += MR;
+    }
+    while r < m {
+        let a_off = r * lda;
+        let o_off = r * ldc;
+        let mut c0 = 0;
+        while c0 + NR <= n {
+            let mut acc = [0f32; NR];
+            acc.copy_from_slice(&bias[c0..c0 + NR]);
+            for kk in 0..k {
+                let av = a[a_off + kk];
+                let wrow = &w[kk * n + c0..kk * n + c0 + NR];
+                for (ci, &wv) in wrow.iter().enumerate() {
+                    acc[ci] += av * wv;
+                }
+            }
+            out[o_off + c0..o_off + c0 + NR].copy_from_slice(&acc);
+            c0 += NR;
+        }
+        matmul_row_tail(a, a_off, w, bias, out, o_off, c0, k, n);
+        r += 1;
+    }
+}
+
+/// Scalar tail of [`matmul_bias`]: columns `c0..n` of one output row,
+/// still `k`-ascending per element.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn matmul_row_tail(
+    a: &[f32],
+    a_off: usize,
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    o_off: usize,
+    c0: usize,
+    k: usize,
+    n: usize,
+) {
+    for ci in c0..n {
+        let mut acc = bias[ci];
+        for kk in 0..k {
+            acc += a[a_off + kk] * w[kk * n + ci];
+        }
+        out[o_off + ci] = acc;
+    }
 }
 
 /// Standard convolution, NHWC × [kh,kw,ic,oc] → NHWC. Batch 1.
+///
+/// Stride-1 unpadded 1×1 kernels lower to [`matmul_bias`] over the pixel
+/// matrix; the general path register-blocks the output channels ([`NR`]
+/// lanes per tile) and keeps the tile in registers across all kernel taps.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d(
     x: &[f32],
@@ -105,157 +251,246 @@ pub fn conv2d(
     g: &Geom,
     act: Activation,
 ) {
-    debug_assert_eq!(x.len() >= g.h * g.w * ic, true);
+    debug_assert!(x.len() >= g.h * g.w * ic);
+    if g.is_pointwise() {
+        matmul_bias(x, ic, w, b, out, oc, g.oh * g.ow, ic, oc);
+        activate(&mut out[..g.oh * g.ow * oc], act);
+        return;
+    }
     for oy in 0..g.oh {
         for ox in 0..g.ow {
             let o_base = (oy * g.ow + ox) * oc;
-            out[o_base..o_base + oc].copy_from_slice(&b[..oc]);
-            for ky in 0..g.kh {
-                let iy = oy as isize * g.sh as isize + ky as isize * g.dh as isize - g.ph;
-                if iy < 0 || iy >= g.h as isize {
-                    continue;
-                }
-                for kx in 0..g.kw {
-                    let ix = ox as isize * g.sw as isize + kx as isize * g.dw as isize - g.pw;
-                    if ix < 0 || ix >= g.w as isize {
-                        continue;
-                    }
-                    let i_base = (iy as usize * g.w + ix as usize) * ic;
-                    let w_base = (ky * g.kw + kx) * ic * oc;
-                    for c in 0..ic {
-                        let xv = x[i_base + c];
-                        if xv == 0.0 {
-                            continue;
-                        }
-                        let wrow = &w[w_base + c * oc..w_base + (c + 1) * oc];
-                        let orow = &mut out[o_base..o_base + oc];
-                        for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                            *o += xv * wv;
-                        }
-                    }
-                }
+            let mut c0 = 0;
+            while c0 + NR <= oc {
+                let mut acc = [0f32; NR];
+                acc.copy_from_slice(&b[c0..c0 + NR]);
+                conv_taps(x, w, &mut acc, NR, ic, oc, g, oy, ox, c0);
+                out[o_base + c0..o_base + c0 + NR].copy_from_slice(&acc);
+                c0 += NR;
+            }
+            if c0 < oc {
+                let wn = oc - c0;
+                let mut acc = [0f32; NR];
+                acc[..wn].copy_from_slice(&b[c0..c0 + wn]);
+                conv_taps(x, w, &mut acc, wn, ic, oc, g, oy, ox, c0);
+                out[o_base + c0..o_base + oc].copy_from_slice(&acc[..wn]);
             }
         }
     }
     activate(out, act);
 }
 
+/// Accumulate all valid kernel taps of one output pixel into an `NR`-wide
+/// output-channel tile starting at channel `c0` (`wn` live lanes). Taps
+/// run `(ky, kx, c)`-ascending — the scalar reference order.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn conv_taps(
+    x: &[f32],
+    w: &[f32],
+    acc: &mut [f32; NR],
+    wn: usize,
+    ic: usize,
+    oc: usize,
+    g: &Geom,
+    oy: usize,
+    ox: usize,
+    c0: usize,
+) {
+    for ky in 0..g.kh {
+        let iy = oy as isize * g.sh as isize + ky as isize * g.dh as isize - g.ph;
+        if iy < 0 || iy >= g.h as isize {
+            continue;
+        }
+        for kx in 0..g.kw {
+            let ix = ox as isize * g.sw as isize + kx as isize * g.dw as isize - g.pw;
+            if ix < 0 || ix >= g.w as isize {
+                continue;
+            }
+            let i_base = (iy as usize * g.w + ix as usize) * ic;
+            let w_base = (ky * g.kw + kx) * ic * oc;
+            if wn == NR {
+                for c in 0..ic {
+                    let xv = x[i_base + c];
+                    let wrow = &w[w_base + c * oc + c0..w_base + c * oc + c0 + NR];
+                    for (l, &wv) in wrow.iter().enumerate() {
+                        acc[l] += xv * wv;
+                    }
+                }
+            } else {
+                for c in 0..ic {
+                    let xv = x[i_base + c];
+                    let wrow = &w[w_base + c * oc + c0..w_base + c * oc + c0 + wn];
+                    for (l, &wv) in wrow.iter().enumerate() {
+                        acc[l] += xv * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Depthwise convolution (multiplier 1), weights [kh,kw,c,1].
+///
+/// Channels are independent, so the kernel tiles them [`NR`] at a time and
+/// keeps each tile in registers across all taps.
 pub fn dwconv2d(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], c: usize, g: &Geom, act: Activation) {
     for oy in 0..g.oh {
         for ox in 0..g.ow {
             let o_base = (oy * g.ow + ox) * c;
-            out[o_base..o_base + c].copy_from_slice(&b[..c]);
-            for ky in 0..g.kh {
-                let iy = oy as isize * g.sh as isize + ky as isize * g.dh as isize - g.ph;
-                if iy < 0 || iy >= g.h as isize {
-                    continue;
-                }
-                for kx in 0..g.kw {
-                    let ix = ox as isize * g.sw as isize + kx as isize * g.dw as isize - g.pw;
-                    if ix < 0 || ix >= g.w as isize {
+            let mut c0 = 0;
+            while c0 < c {
+                let wn = NR.min(c - c0);
+                let mut acc = [0f32; NR];
+                acc[..wn].copy_from_slice(&b[c0..c0 + wn]);
+                for ky in 0..g.kh {
+                    let iy = oy as isize * g.sh as isize + ky as isize * g.dh as isize - g.ph;
+                    if iy < 0 || iy >= g.h as isize {
                         continue;
                     }
-                    let i_base = (iy as usize * g.w + ix as usize) * c;
-                    let w_base = (ky * g.kw + kx) * c;
-                    for ch in 0..c {
-                        out[o_base + ch] += x[i_base + ch] * w[w_base + ch];
+                    for kx in 0..g.kw {
+                        let ix = ox as isize * g.sw as isize + kx as isize * g.dw as isize - g.pw;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let i_base = (iy as usize * g.w + ix as usize) * c + c0;
+                        let w_base = (ky * g.kw + kx) * c + c0;
+                        for l in 0..wn {
+                            acc[l] += x[i_base + l] * w[w_base + l];
+                        }
                     }
                 }
+                out[o_base + c0..o_base + c0 + wn].copy_from_slice(&acc[..wn]);
+                c0 += wn;
             }
         }
     }
     activate(out, act);
 }
 
-/// Max pooling.
+/// Max pooling (channel-tiled).
 pub fn maxpool2d(x: &[f32], out: &mut [f32], c: usize, g: &Geom) {
     for oy in 0..g.oh {
         for ox in 0..g.ow {
             let o_base = (oy * g.ow + ox) * c;
-            out[o_base..o_base + c].fill(f32::NEG_INFINITY);
-            for ky in 0..g.kh {
-                let iy = oy as isize * g.sh as isize + ky as isize - g.ph;
-                if iy < 0 || iy >= g.h as isize {
-                    continue;
-                }
-                for kx in 0..g.kw {
-                    let ix = ox as isize * g.sw as isize + kx as isize - g.pw;
-                    if ix < 0 || ix >= g.w as isize {
+            let mut c0 = 0;
+            while c0 < c {
+                let wn = NR.min(c - c0);
+                let mut acc = [f32::NEG_INFINITY; NR];
+                for ky in 0..g.kh {
+                    let iy = oy as isize * g.sh as isize + ky as isize - g.ph;
+                    if iy < 0 || iy >= g.h as isize {
                         continue;
                     }
-                    let i_base = (iy as usize * g.w + ix as usize) * c;
-                    for ch in 0..c {
-                        let v = x[i_base + ch];
-                        if v > out[o_base + ch] {
-                            out[o_base + ch] = v;
+                    for kx in 0..g.kw {
+                        let ix = ox as isize * g.sw as isize + kx as isize - g.pw;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let i_base = (iy as usize * g.w + ix as usize) * c + c0;
+                        for l in 0..wn {
+                            acc[l] = acc[l].max(x[i_base + l]);
                         }
                     }
                 }
+                out[o_base + c0..o_base + c0 + wn].copy_from_slice(&acc[..wn]);
+                c0 += wn;
             }
         }
     }
 }
 
-/// Average pooling (TFLite semantics: average over *valid* taps only).
+/// Average pooling (TFLite semantics: average over *valid* taps only),
+/// channel-tiled.
 pub fn avgpool2d(x: &[f32], out: &mut [f32], c: usize, g: &Geom) {
     for oy in 0..g.oh {
         for ox in 0..g.ow {
             let o_base = (oy * g.ow + ox) * c;
-            out[o_base..o_base + c].fill(0.0);
-            let mut count = 0f32;
-            for ky in 0..g.kh {
-                let iy = oy as isize * g.sh as isize + ky as isize - g.ph;
-                if iy < 0 || iy >= g.h as isize {
-                    continue;
-                }
-                for kx in 0..g.kw {
-                    let ix = ox as isize * g.sw as isize + kx as isize - g.pw;
-                    if ix < 0 || ix >= g.w as isize {
+            let mut c0 = 0;
+            while c0 < c {
+                let wn = NR.min(c - c0);
+                let mut acc = [0f32; NR];
+                let mut count = 0f32;
+                for ky in 0..g.kh {
+                    let iy = oy as isize * g.sh as isize + ky as isize - g.ph;
+                    if iy < 0 || iy >= g.h as isize {
                         continue;
                     }
-                    count += 1.0;
-                    let i_base = (iy as usize * g.w + ix as usize) * c;
-                    for ch in 0..c {
-                        out[o_base + ch] += x[i_base + ch];
+                    for kx in 0..g.kw {
+                        let ix = ox as isize * g.sw as isize + kx as isize - g.pw;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        count += 1.0;
+                        let i_base = (iy as usize * g.w + ix as usize) * c + c0;
+                        for l in 0..wn {
+                            acc[l] += x[i_base + l];
+                        }
                     }
                 }
-            }
-            let inv = 1.0 / count.max(1.0);
-            for ch in 0..c {
-                out[o_base + ch] *= inv;
+                let inv = 1.0 / count.max(1.0);
+                for l in 0..wn {
+                    out[o_base + c0 + l] = acc[l] * inv;
+                }
+                c0 += wn;
             }
         }
     }
 }
 
-/// Global average pool: [h*w*c] -> [c].
+/// Global average pool: [h*w*c] -> [c], channel-tiled with pixel-ascending
+/// accumulation (the scalar reference order).
 pub fn global_avg_pool(x: &[f32], out: &mut [f32], hw: usize, c: usize) {
-    out[..c].fill(0.0);
-    for i in 0..hw {
-        let base = i * c;
-        for ch in 0..c {
-            out[ch] += x[base + ch];
+    let inv = 1.0 / hw as f32;
+    let mut c0 = 0;
+    while c0 < c {
+        let wn = NR.min(c - c0);
+        let mut acc = [0f32; NR];
+        for i in 0..hw {
+            let base = i * c + c0;
+            for l in 0..wn {
+                acc[l] += x[base + l];
+            }
+        }
+        for l in 0..wn {
+            out[c0 + l] = acc[l] * inv;
+        }
+        c0 += wn;
+    }
+}
+
+/// Elementwise add with fused activation (lane-chunked).
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32], act: Activation) {
+    let n = out.len().min(a.len()).min(b.len());
+    let (oc, orem) = out[..n].split_at_mut(n - n % NR);
+    for (i, chunk) in oc.chunks_exact_mut(NR).enumerate() {
+        let av = &a[i * NR..i * NR + NR];
+        let bv = &b[i * NR..i * NR + NR];
+        for l in 0..NR {
+            chunk[l] = av[l] + bv[l];
         }
     }
-    let inv = 1.0 / hw as f32;
-    for ch in out[..c].iter_mut() {
-        *ch *= inv;
+    let base = n - n % NR;
+    for (l, o) in orem.iter_mut().enumerate() {
+        *o = a[base + l] + b[base + l];
     }
+    activate(&mut out[..n], act);
 }
 
-/// Elementwise add with fused activation.
-pub fn add(a: &[f32], b: &[f32], out: &mut [f32], act: Activation) {
-    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
-        *o = x + y;
-    }
-    activate(out, act);
-}
-
-/// Elementwise multiply.
+/// Elementwise multiply (lane-chunked).
 pub fn mul(a: &[f32], b: &[f32], out: &mut [f32]) {
-    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
-        *o = x * y;
+    let n = out.len().min(a.len()).min(b.len());
+    let (oc, orem) = out[..n].split_at_mut(n - n % NR);
+    for (i, chunk) in oc.chunks_exact_mut(NR).enumerate() {
+        let av = &a[i * NR..i * NR + NR];
+        let bv = &b[i * NR..i * NR + NR];
+        for l in 0..NR {
+            chunk[l] = av[l] * bv[l];
+        }
+    }
+    let base = n - n % NR;
+    for (l, o) in orem.iter_mut().enumerate() {
+        *o = a[base + l] * b[base + l];
     }
 }
 
@@ -271,18 +506,9 @@ pub fn concat_channels(parts: &[(&[f32], usize)], out: &mut [f32], pixels: usize
     }
 }
 
-/// Fully connected: [in] × [in,out] + [out].
+/// Fully connected: [in] × [in,out] + [out] — a 1-row [`matmul_bias`].
 pub fn fully_connected(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], ind: usize, outd: usize, act: Activation) {
-    out[..outd].copy_from_slice(&b[..outd]);
-    for (i, &xv) in x[..ind].iter().enumerate() {
-        if xv == 0.0 {
-            continue;
-        }
-        let wrow = &w[i * outd..(i + 1) * outd];
-        for (o, &wv) in out[..outd].iter_mut().zip(wrow.iter()) {
-            *o += xv * wv;
-        }
-    }
+    matmul_bias(x, ind, w, b, out, outd, 1, ind, outd);
     activate(&mut out[..outd], act);
 }
 
@@ -341,16 +567,17 @@ pub fn pad_spatial(x: &[f32], out: &mut [f32], h: usize, w: usize, c: usize, bef
     }
 }
 
-/// Standalone ReLU with optional clamp.
+/// Standalone ReLU with optional clamp (lane-chunked).
 pub fn relu(x: &[f32], out: &mut [f32], max: Option<f32>) {
+    let n = out.len().min(x.len());
     match max {
         Some(m) => {
-            for (o, &v) in out.iter_mut().zip(x.iter()) {
+            for (o, &v) in out[..n].iter_mut().zip(x.iter()) {
                 *o = v.clamp(0.0, m);
             }
         }
         None => {
-            for (o, &v) in out.iter_mut().zip(x.iter()) {
+            for (o, &v) in out[..n].iter_mut().zip(x.iter()) {
                 *o = v.max(0.0);
             }
         }
@@ -361,6 +588,226 @@ pub fn relu(x: &[f32], out: &mut [f32], max: Option<f32>) {
 pub fn sigmoid(x: &[f32], out: &mut [f32]) {
     for (o, &v) in out.iter_mut().zip(x.iter()) {
         *o = 1.0 / (1.0 + (-v).exp());
+    }
+}
+
+pub mod scalar {
+    //! The retained straight-loop reference kernels — the pre-vectorization
+    //! executor path, kept verbatim as (a) the oracle for the differential
+    //! kernel tests in `tests/kernel_diff.rs` and (b) the recorded scalar
+    //! baseline that `benches/serving.rs` measures into `BENCH_serving.json`.
+    //!
+    //! Per output element these accumulate bias first, then kernel taps
+    //! ascending in `(ky, kx, c)` — the same order as the vectorized
+    //! family, which is what keeps the two within 1 ulp (the only
+    //! divergence is the `x == 0.0` skip below, which changes no finite
+    //! value). Do not "improve" these: their job is to stay simple.
+
+    use super::{activate, Geom};
+    use crate::graph::Activation;
+
+    /// Reference standard convolution, NHWC × [kh,kw,ic,oc] → NHWC.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        ic: usize,
+        oc: usize,
+        g: &Geom,
+        act: Activation,
+    ) {
+        debug_assert!(x.len() >= g.h * g.w * ic);
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let o_base = (oy * g.ow + ox) * oc;
+                out[o_base..o_base + oc].copy_from_slice(&b[..oc]);
+                for ky in 0..g.kh {
+                    let iy = oy as isize * g.sh as isize + ky as isize * g.dh as isize - g.ph;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.kw {
+                        let ix = ox as isize * g.sw as isize + kx as isize * g.dw as isize - g.pw;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let i_base = (iy as usize * g.w + ix as usize) * ic;
+                        let w_base = (ky * g.kw + kx) * ic * oc;
+                        for c in 0..ic {
+                            let xv = x[i_base + c];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = &w[w_base + c * oc..w_base + (c + 1) * oc];
+                            let orow = &mut out[o_base..o_base + oc];
+                            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        activate(out, act);
+    }
+
+    /// Reference depthwise convolution (multiplier 1), weights [kh,kw,c,1].
+    pub fn dwconv2d(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], c: usize, g: &Geom, act: Activation) {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let o_base = (oy * g.ow + ox) * c;
+                out[o_base..o_base + c].copy_from_slice(&b[..c]);
+                for ky in 0..g.kh {
+                    let iy = oy as isize * g.sh as isize + ky as isize * g.dh as isize - g.ph;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.kw {
+                        let ix = ox as isize * g.sw as isize + kx as isize * g.dw as isize - g.pw;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let i_base = (iy as usize * g.w + ix as usize) * c;
+                        let w_base = (ky * g.kw + kx) * c;
+                        for ch in 0..c {
+                            out[o_base + ch] += x[i_base + ch] * w[w_base + ch];
+                        }
+                    }
+                }
+            }
+        }
+        activate(out, act);
+    }
+
+    /// Reference max pooling.
+    pub fn maxpool2d(x: &[f32], out: &mut [f32], c: usize, g: &Geom) {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let o_base = (oy * g.ow + ox) * c;
+                out[o_base..o_base + c].fill(f32::NEG_INFINITY);
+                for ky in 0..g.kh {
+                    let iy = oy as isize * g.sh as isize + ky as isize - g.ph;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.kw {
+                        let ix = ox as isize * g.sw as isize + kx as isize - g.pw;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let i_base = (iy as usize * g.w + ix as usize) * c;
+                        for ch in 0..c {
+                            let v = x[i_base + ch];
+                            if v > out[o_base + ch] {
+                                out[o_base + ch] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Reference average pooling (average over *valid* taps only).
+    pub fn avgpool2d(x: &[f32], out: &mut [f32], c: usize, g: &Geom) {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let o_base = (oy * g.ow + ox) * c;
+                out[o_base..o_base + c].fill(0.0);
+                let mut count = 0f32;
+                for ky in 0..g.kh {
+                    let iy = oy as isize * g.sh as isize + ky as isize - g.ph;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.kw {
+                        let ix = ox as isize * g.sw as isize + kx as isize - g.pw;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        count += 1.0;
+                        let i_base = (iy as usize * g.w + ix as usize) * c;
+                        for ch in 0..c {
+                            out[o_base + ch] += x[i_base + ch];
+                        }
+                    }
+                }
+                let inv = 1.0 / count.max(1.0);
+                for ch in 0..c {
+                    out[o_base + ch] *= inv;
+                }
+            }
+        }
+    }
+
+    /// Reference global average pool: [h*w*c] -> [c].
+    pub fn global_avg_pool(x: &[f32], out: &mut [f32], hw: usize, c: usize) {
+        out[..c].fill(0.0);
+        for i in 0..hw {
+            let base = i * c;
+            for ch in 0..c {
+                out[ch] += x[base + ch];
+            }
+        }
+        let inv = 1.0 / hw as f32;
+        for ch in out[..c].iter_mut() {
+            *ch *= inv;
+        }
+    }
+
+    /// Reference elementwise add with fused activation.
+    pub fn add(a: &[f32], b: &[f32], out: &mut [f32], act: Activation) {
+        for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+            *o = x + y;
+        }
+        activate(out, act);
+    }
+
+    /// Reference elementwise multiply.
+    pub fn mul(a: &[f32], b: &[f32], out: &mut [f32]) {
+        for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+            *o = x * y;
+        }
+    }
+
+    /// Reference fully connected: [in] × [in,out] + [out].
+    pub fn fully_connected(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], ind: usize, outd: usize, act: Activation) {
+        out[..outd].copy_from_slice(&b[..outd]);
+        for (i, &xv) in x[..ind].iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * outd..(i + 1) * outd];
+            for (o, &wv) in out[..outd].iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+        activate(&mut out[..outd], act);
+    }
+
+    /// Reference standalone ReLU with optional clamp.
+    pub fn relu(x: &[f32], out: &mut [f32], max: Option<f32>) {
+        match max {
+            Some(m) => {
+                for (o, &v) in out.iter_mut().zip(x.iter()) {
+                    *o = v.clamp(0.0, m);
+                }
+            }
+            None => {
+                for (o, &v) in out.iter_mut().zip(x.iter()) {
+                    *o = v.max(0.0);
+                }
+            }
+        }
+    }
+
+    /// Reference sigmoid.
+    pub fn sigmoid(x: &[f32], out: &mut [f32]) {
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            *o = 1.0 / (1.0 + (-v).exp());
+        }
     }
 }
 
@@ -511,5 +958,54 @@ mod tests {
         assert_eq!(out, vec![0.0, 0.5, 6.0]);
         sigmoid(&[0.0, 100.0, -100.0], &mut out);
         assert!((out[0] - 0.5).abs() < 1e-6 && out[1] > 0.999 && out[2] < 0.001);
+    }
+
+    #[test]
+    fn matmul_matches_triple_loop_at_awkward_shapes() {
+        use crate::rng::SplitMix64;
+        let mut rng = SplitMix64::new(0x5eed);
+        // Shapes chosen to hit every block path: full MR×NR tiles, row
+        // remainders, column remainders, and both at once.
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (4, 8, 8), (5, 3, 9), (7, 16, 17), (12, 5, 24), (3, 7, 6)] {
+            let mut a = vec![0f32; m * k];
+            let mut w = vec![0f32; k * n];
+            let mut bias = vec![0f32; n];
+            rng.fill_f32(&mut a, 1.0);
+            rng.fill_f32(&mut w, 1.0);
+            rng.fill_f32(&mut bias, 1.0);
+            let mut got = vec![0f32; m * n];
+            matmul_bias(&a, k, &w, &bias, &mut got, n, m, k, n);
+            for r in 0..m {
+                for c in 0..n {
+                    let mut want = bias[c];
+                    for kk in 0..k {
+                        want += a[r * k + kk] * w[kk * n + c];
+                    }
+                    assert_eq!(got[r * n + c], want, "({m},{k},{n}) at [{r},{c}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pointwise_fast_path_matches_scalar_reference() {
+        use crate::rng::SplitMix64;
+        let mut rng = SplitMix64::new(42);
+        let (h, w_, ic, oc) = (6, 5, 7, 11);
+        let mut x = vec![0f32; h * w_ * ic];
+        let mut wt = vec![0f32; ic * oc];
+        let mut b = vec![0f32; oc];
+        rng.fill_f32(&mut x, 1.0);
+        rng.fill_f32(&mut wt, 1.0);
+        rng.fill_f32(&mut b, 1.0);
+        let g = Geom::new(h, w_, h, w_, (1, 1), (1, 1), (1, 1), Padding::Valid);
+        assert!(g.is_pointwise());
+        let mut fast = vec![0f32; h * w_ * oc];
+        let mut reference = vec![0f32; h * w_ * oc];
+        conv2d(&x, &wt, &b, &mut fast, ic, oc, &g, Activation::Relu);
+        scalar::conv2d(&x, &wt, &b, &mut reference, ic, oc, &g, Activation::Relu);
+        for (i, (&a, &r)) in fast.iter().zip(reference.iter()).enumerate() {
+            assert!((a - r).abs() <= r.abs() * 1e-6 + 1e-6, "elem {i}: {a} vs {r}");
+        }
     }
 }

@@ -20,7 +20,7 @@ mod topo;
 pub use builder::GraphBuilder;
 pub use node::{Activation, Op, OpId, OpKind, PoolKind};
 pub use shape::{conv_out_dim, same_padding, same_padding_pair, Padding};
-pub use topo::{is_valid_execution_order, topo_sort};
+pub use topo::{is_valid_execution_order, topo_levels, topo_sort};
 
 use crate::align;
 

@@ -58,6 +58,52 @@ pub fn topo_sort(graph: &Graph) -> Option<Vec<OpId>> {
     (order.len() == n).then_some(order)
 }
 
+/// Partition the ops into **level sets**: `level(op)` is the length of the
+/// longest producer chain feeding it, so every op in level *k* depends only
+/// on ops in levels `< k`. Ops within one level are mutually independent in
+/// the dataflow sense and are the candidates the parallel executor
+/// ([`crate::exec::Executor`]) dispatches across worker threads — after an
+/// additional arena-aliasing check, since dataflow independence alone does
+/// not rule out two ops writing overlapping planned offsets.
+///
+/// The returned vector is indexed by level; within a level, op ids ascend
+/// (deterministic). Returns `None` if the graph has a cycle. For a graph
+/// stored in topological order, concatenating the levels yields a valid
+/// execution order.
+pub fn topo_levels(graph: &Graph) -> Option<Vec<Vec<OpId>>> {
+    let order = topo_sort(graph)?;
+    let mut producer = vec![usize::MAX; graph.tensors.len()];
+    for op in &graph.ops {
+        for &o in &op.outputs {
+            producer[o.0] = op.id.0;
+        }
+    }
+    let mut level = vec![0usize; graph.ops.len()];
+    let mut depth = 0usize;
+    for &id in &order {
+        let op = graph.op(id);
+        let mut lv = 0usize;
+        for &inp in &op.inputs {
+            let t = graph.tensor(inp);
+            if matches!(t.kind, TensorKind::Input | TensorKind::Weight) {
+                continue;
+            }
+            let p = producer[inp.0];
+            if p != usize::MAX {
+                lv = lv.max(level[p] + 1);
+            }
+        }
+        level[id.0] = lv;
+        depth = depth.max(lv + 1);
+    }
+    let mut levels: Vec<Vec<OpId>> = vec![Vec::new(); depth];
+    // Iterate by ascending op id so each level lists ids in order.
+    for (i, &lv) in level.iter().enumerate() {
+        levels[lv].push(OpId(i));
+    }
+    Some(levels)
+}
+
 /// True if the graph's stored op order (ids 0..n) is a valid topological
 /// order: every op's inputs are produced strictly earlier.
 pub fn is_valid_execution_order(graph: &Graph) -> bool {
@@ -96,5 +142,66 @@ mod tests {
         // order, so the sort must be the identity.
         let ids: Vec<usize> = order.iter().map(|o| o.0).collect();
         assert_eq!(ids, (0..g.ops.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn levels_partition_ops_and_respect_dependencies() {
+        for g in crate::models::all_zoo() {
+            let levels = topo_levels(&g).expect("acyclic");
+            // Partition: every op appears exactly once.
+            let mut seen = vec![false; g.ops.len()];
+            for lv in &levels {
+                assert!(!lv.is_empty(), "{}: empty level", g.name);
+                for &id in lv {
+                    assert!(!seen[id.0], "{}: op {} in two levels", g.name, id.0);
+                    seen[id.0] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{}: op missing from levels", g.name);
+            // Dependencies: every activation input of a level-k op is
+            // produced at a strictly earlier level.
+            let mut level_of = vec![usize::MAX; g.ops.len()];
+            for (k, lv) in levels.iter().enumerate() {
+                for &id in lv {
+                    level_of[id.0] = k;
+                }
+            }
+            let mut producer = vec![usize::MAX; g.tensors.len()];
+            for op in &g.ops {
+                for &o in &op.outputs {
+                    producer[o.0] = op.id.0;
+                }
+            }
+            for op in &g.ops {
+                for &inp in &op.inputs {
+                    let t = g.tensor(inp);
+                    if matches!(t.kind, TensorKind::Input | TensorKind::Weight) {
+                        continue;
+                    }
+                    let p = producer[inp.0];
+                    if p != usize::MAX {
+                        assert!(
+                            level_of[p] < level_of[op.id.0],
+                            "{}: op {} not after its producer {}",
+                            g.name,
+                            op.id.0,
+                            p
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inception_has_wide_levels() {
+        // Inception's parallel towers must surface as levels with >1 op —
+        // otherwise the parallel executor has nothing to run concurrently.
+        let g = crate::models::inception_v3();
+        let levels = topo_levels(&g).expect("acyclic");
+        assert!(
+            levels.iter().any(|lv| lv.len() > 1),
+            "inception_v3 levels are all singletons"
+        );
     }
 }

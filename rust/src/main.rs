@@ -12,7 +12,7 @@
 //! tensorarena serve [--model M] [--strategy S] [--order O] [--requests N]
 //!                   [--max-batch B] [--wait-ms W] [--artifacts DIR]
 //!                   [--mem-budget BYTES] [--plan-dir DIR]
-//!                   [--dynamic [FRAC]]                       # E2E serving
+//!                   [--threads T] [--dynamic [FRAC]]         # E2E serving
 //! tensorarena order-ablation [model] [--seed S] [--trials N] # §7.1 order table
 //! tensorarena dynamic-ablation [model] [--frac F1,F2,...]    # §7 overhead table
 //! tensorarena models                                # list zoo models
@@ -550,6 +550,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut mem_budget: Option<usize> = None;
     let mut plan_dir: Option<String> = None;
     let mut dynamic: Option<f64> = None;
+    let mut threads = 1usize;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -624,6 +625,14 @@ fn cmd_serve(args: &[String]) -> i32 {
                 plan_dir = Some(d.clone());
                 i += 2;
             }
+            "--threads" => {
+                let Some(t) = args.get(i + 1).and_then(|v| v.parse::<usize>().ok()) else {
+                    eprintln!("--threads wants a positive worker count");
+                    return 2;
+                };
+                threads = t.max(1);
+                i += 2;
+            }
             other => {
                 eprintln!("unknown flag {other}");
                 return 2;
@@ -646,6 +655,12 @@ fn cmd_serve(args: &[String]) -> i32 {
                 eprintln!(
                     "--dynamic ignored: the PJRT AOT path compiles static shapes; \
                      wave-aware serving applies to the pure-Rust executor path only"
+                );
+            }
+            if threads > 1 {
+                eprintln!(
+                    "--threads ignored: the PJRT AOT path runs the compiled executable; \
+                     multicore execution applies to the pure-Rust executor path only"
                 );
             }
             return match serve_bench(&dir, &strategy, requests, max_batch, wait_ms, mem_budget) {
@@ -674,6 +689,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         mem_budget,
         plan_dir.as_deref(),
         dynamic,
+        threads,
     ) {
         Ok(()) => 0,
         Err(e) => {
@@ -694,7 +710,9 @@ fn cmd_serve(args: &[String]) -> i32 {
 /// the served order. With `dynamic`, the last `frac` of the tensors
 /// resolve late (§7): the engine serves wave-aware, the arena and budget
 /// resolve under the worst-wave multi-pass peak, and decode-step re-plans
-/// are amortized through the resolved-prefix plan cache.
+/// are amortized through the resolved-prefix plan cache. With `threads > 1`
+/// the engine's executor runs batch lanes and independent ops on a worker
+/// pool (bit-identical outputs — see `docs/ARCHITECTURE.md`).
 #[allow(clippy::too_many_arguments)]
 fn serve_pure(
     model: &str,
@@ -706,6 +724,7 @@ fn serve_pure(
     mem_budget: Option<usize>,
     plan_dir: Option<&str>,
     dynamic: Option<f64>,
+    threads: usize,
 ) -> Result<(), String> {
     use tensorarena::coordinator::engine::ExecutorEngine;
 
@@ -814,7 +833,7 @@ fn serve_pure(
                     }
                     None => ExecutorEngine::for_request(&g, service, &req, 42),
                 };
-                Box::new(engine.expect("engine").with_max_batch(max_batch))
+                Box::new(engine.expect("engine").with_max_batch(max_batch).with_threads(threads))
             },
             BatchPolicy {
                 max_batch,
@@ -904,6 +923,16 @@ fn serve_pure(
             applied.natural_breadth,
             applied.order_breadth,
         )
+    };
+    // The exec segment reports the configured worker count and the graph's
+    // dataflow depth; the live ops-parallel counter stays inside the worker
+    // thread's engine (see `ExecutorEngine::arena_stats`), so the CLI line
+    // reports the shape, not the counter.
+    let stats = if threads > 1 {
+        let levels = tensorarena::graph::topo_levels(&g).map_or(0, |ls| ls.len());
+        stats.with_threads(threads, levels, 0)
+    } else {
+        stats
     };
     println!(
         "at max batch {}: {}",

@@ -1,0 +1,130 @@
+//! Tier-1 coverage for the shared bench harness (`benches/harness.rs`),
+//! which bench binaries include via `#[path]` and which therefore never
+//! runs under `cargo test` on its own: the `iters == 0` clamp and the
+//! hand-rolled JSON emitter/parser behind the `BENCH_*.json` trajectory.
+
+#[path = "../benches/harness.rs"]
+mod harness;
+
+use harness::json::{parse, Value};
+use std::time::Duration;
+
+#[test]
+#[cfg_attr(debug_assertions, should_panic(expected = "iters == 0"))]
+fn bench_with_zero_iters_degrades_instead_of_panicking() {
+    // A smoke config that scales a count down (e.g. `iters / 100`) can
+    // reach zero. Debug builds flag the bug loudly; release builds (the
+    // bench profile) clamp to one timed sample and keep going — the old
+    // code died on `samples[0]` of an empty vector.
+    let mut runs = 0u32;
+    let st = harness::bench(0, 0, || runs += 1);
+    assert_eq!(runs, 1, "clamped bench should time exactly one run");
+    assert_eq!(st.median, st.min);
+    assert_eq!(st.median, st.mean);
+}
+
+#[test]
+fn bench_counts_warmup_and_timed_runs() {
+    let mut runs = 0u32;
+    let st = harness::bench(2, 5, || runs += 1);
+    assert_eq!(runs, 7, "2 warmup + 5 timed");
+    assert!(st.min <= st.median && st.median >= Duration::ZERO);
+    assert!(st.median_us() >= st.min_us());
+    assert!(st.mean_us() >= 0.0);
+}
+
+#[test]
+fn json_render_parse_roundtrip() {
+    let doc = Value::Obj(vec![
+        ("bench".into(), Value::Str("serving".into())),
+        ("schema_version".into(), Value::Num(1.0)),
+        ("ok".into(), Value::Bool(true)),
+        ("nothing".into(), Value::Null),
+        (
+            "cases".into(),
+            Value::Arr(vec![
+                Value::Obj(vec![
+                    ("name".into(), Value::Str("run_batch/t4/b8 \"quoted\"\n".into())),
+                    ("median_us".into(), Value::Num(219284.6)),
+                ]),
+                Value::Obj(vec![
+                    ("name".into(), Value::Str("x".into())),
+                    ("median_us".into(), Value::Num(3.0)),
+                ]),
+            ]),
+        ),
+    ]);
+    let text = doc.render();
+    let back = parse(&text).expect("emitter output parses");
+    assert_eq!(back, doc, "render → parse is not the identity");
+    // Accessors the bench's --check mode relies on.
+    assert_eq!(back.get("bench").and_then(|v| v.as_str()), Some("serving"));
+    assert_eq!(back.get("schema_version").and_then(|v| v.as_num()), Some(1.0));
+    assert_eq!(back.get("cases").and_then(|v| v.as_arr()).map(|a| a.len()), Some(2));
+}
+
+#[test]
+fn json_schema_ignores_timings_but_not_shape() {
+    let case = |median: f64, extra: bool| {
+        let mut kv = vec![
+            ("name".into(), Value::Str("a".into())),
+            ("median_us".into(), Value::Num(median)),
+        ];
+        if extra {
+            kv.push(("p99_us".into(), Value::Num(1.0)));
+        }
+        Value::Obj(kv)
+    };
+    let doc = |median: f64, extra: bool| {
+        Value::Obj(vec![
+            ("bench".into(), Value::Str("serving".into())),
+            ("cases".into(), Value::Arr(vec![case(median, extra)])),
+        ])
+    };
+    // Timing drift: same schema.
+    assert_eq!(doc(100.0, false).schema(), doc(9999.9, false).schema());
+    // A renamed/added field: different schema.
+    assert_ne!(doc(100.0, false).schema(), doc(100.0, true).schema());
+    // Key order does not matter — schemas sort keys.
+    let reordered = Value::Obj(vec![
+        ("cases".into(), Value::Arr(vec![case(1.0, false)])),
+        ("bench".into(), Value::Str("serving".into())),
+    ]);
+    assert_eq!(reordered.schema(), doc(2.0, false).schema());
+    // Homogeneous case arrays collapse, so smoke runs (fewer cases) keep
+    // the committed schema.
+    let two = Value::Arr(vec![case(1.0, false), case(2.0, false)]);
+    let one = Value::Arr(vec![case(3.0, false)]);
+    assert_eq!(two.schema(), one.schema());
+}
+
+#[test]
+fn json_parse_rejects_garbage() {
+    assert!(parse("").is_err());
+    assert!(parse("{").is_err());
+    assert!(parse("{\"a\": 1,}").is_err());
+    assert!(parse("[1 2]").is_err());
+    assert!(parse("\"unterminated").is_err());
+    assert!(parse("{\"a\": 1} trailing").is_err());
+    assert!(parse("truthy").is_err());
+}
+
+#[test]
+fn json_parses_the_committed_trajectory_file() {
+    // The committed baseline must stay parseable by the checker that
+    // guards it.
+    let text = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serving.json"),
+    )
+    .expect("BENCH_serving.json exists at the repo root");
+    let doc = parse(&text).expect("committed trajectory parses");
+    assert_eq!(doc.get("bench").and_then(|v| v.as_str()), Some("serving"));
+    let cases = doc.get("cases").and_then(|v| v.as_arr()).expect("cases array");
+    assert!(!cases.is_empty());
+    // Every case shares one shape — the property the CI schema check
+    // leans on.
+    let first = cases[0].schema();
+    for c in cases {
+        assert_eq!(c.schema(), first, "heterogeneous case shape in committed file");
+    }
+}

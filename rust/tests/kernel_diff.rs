@@ -1,0 +1,243 @@
+//! Differential kernel tests: the vectorized kernel family in
+//! `exec::ops` against the retained straight-loop references in
+//! `exec::ops::scalar`, over randomized geometries (stride / dilation /
+//! padding / channel sweeps).
+//!
+//! Both families accumulate each output element bias-first, then kernel
+//! taps ascending in `(ky, kx, c)`, so the tolerance here is *1 ulp*, not
+//! an epsilon: the only admissible divergences are sign-of-zero artifacts
+//! (the reference's `x == 0.0` skip). A real reassociation shows up as a
+//! many-ulp gap and fails loudly with its seed.
+//!
+//! Property tests use the same hand-rolled SplitMix64 generator as
+//! `planner_properties.rs` (the offline registry has no proptest); every
+//! failure prints its seed and geometry.
+
+use tensorarena::exec::ops::{self, scalar, Geom};
+use tensorarena::graph::{Activation, Padding};
+use tensorarena::rng::SplitMix64;
+
+/// Map f32 bits onto a monotone integer line, so ulp distance is integer
+/// distance. `-0.0` and `+0.0` land 1 apart, which the 1-ulp budget admits.
+fn ordered(x: f32) -> i64 {
+    let b = x.to_bits();
+    (if b & 0x8000_0000 != 0 { !b } else { b | 0x8000_0000 }) as i64
+}
+
+fn ulp_dist(a: f32, b: f32) -> u64 {
+    assert!(!a.is_nan() && !b.is_nan(), "NaN in kernel output: {a} vs {b}");
+    (ordered(a) - ordered(b)).unsigned_abs()
+}
+
+fn assert_ulp(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+        let d = ulp_dist(g, w);
+        assert!(d <= 1, "{ctx}: elem {i}: vectorized {g} vs scalar {w} ({d} ulp)");
+    }
+}
+
+fn pick_act(rng: &mut SplitMix64) -> Activation {
+    match rng.next_below(3) {
+        0 => Activation::None,
+        1 => Activation::Relu,
+        _ => Activation::Relu6,
+    }
+}
+
+/// Random conv/pool geometry: dims, kernel, stride, dilation, padding.
+/// `dilated` enables dilation > 1 (pools don't dilate).
+fn pick_geom(rng: &mut SplitMix64, dilated: bool) -> Geom {
+    loop {
+        let kh = rng.next_range(1, 4);
+        let kw = rng.next_range(1, 4);
+        let sh = rng.next_range(1, 3);
+        let sw = rng.next_range(1, 3);
+        let dh = if dilated { rng.next_range(1, 3) } else { 1 };
+        let dw = if dilated { rng.next_range(1, 3) } else { 1 };
+        let h = rng.next_range(3, 11);
+        let w = rng.next_range(3, 11);
+        let (eff_kh, eff_kw) = ((kh - 1) * dh + 1, (kw - 1) * dw + 1);
+        let padding = if rng.next_below(2) == 0 { Padding::Same } else { Padding::Valid };
+        let (oh, ow) = match padding {
+            Padding::Same => (h.div_ceil(sh), w.div_ceil(sw)),
+            Padding::Valid => {
+                if h < eff_kh || w < eff_kw {
+                    continue; // kernel doesn't fit; redraw
+                }
+                ((h - eff_kh) / sh + 1, (w - eff_kw) / sw + 1)
+            }
+        };
+        return Geom::new(h, w, oh, ow, (kh, kw), (sh, sw), (dh, dw), padding);
+    }
+}
+
+fn fill(rng: &mut SplitMix64, n: usize) -> Vec<f32> {
+    let mut v = vec![0f32; n];
+    rng.fill_f32(&mut v, 1.0);
+    v
+}
+
+#[test]
+fn conv2d_matches_scalar_across_random_geometries() {
+    for seed in 0..120u64 {
+        let mut rng = SplitMix64::new(seed);
+        let g = pick_geom(&mut rng, true);
+        let ic = rng.next_range(1, 10);
+        let oc = rng.next_range(1, 20);
+        let act = pick_act(&mut rng);
+        let x = fill(&mut rng, g.h * g.w * ic);
+        let w = fill(&mut rng, g.kh * g.kw * ic * oc);
+        let b = fill(&mut rng, oc);
+        let mut vec_out = vec![0f32; g.oh * g.ow * oc];
+        let mut ref_out = vec![0f32; g.oh * g.ow * oc];
+        ops::conv2d(&x, &w, &b, &mut vec_out, ic, oc, &g, act);
+        scalar::conv2d(&x, &w, &b, &mut ref_out, ic, oc, &g, act);
+        let ctx = format!(
+            "conv2d seed {seed}: {}x{}x{ic} -> {}x{}x{oc}, k{}x{} s{}x{} d{}x{} p{},{}",
+            g.h, g.w, g.oh, g.ow, g.kh, g.kw, g.sh, g.sw, g.dh, g.dw, g.ph, g.pw
+        );
+        assert_ulp(&vec_out, &ref_out, &ctx);
+    }
+}
+
+#[test]
+fn pointwise_conv_lowering_matches_scalar() {
+    // The 1x1 stride-1 unpadded case lowers to the register-blocked
+    // matmul — sweep it specifically, including ragged m/n tails.
+    for seed in 0..60u64 {
+        let mut rng = SplitMix64::new(0x1000 + seed);
+        let h = rng.next_range(1, 9);
+        let w = rng.next_range(1, 9);
+        let g = Geom::new(h, w, h, w, (1, 1), (1, 1), (1, 1), Padding::Valid);
+        let ic = rng.next_range(1, 24);
+        let oc = rng.next_range(1, 24);
+        let act = pick_act(&mut rng);
+        let x = fill(&mut rng, h * w * ic);
+        let wt = fill(&mut rng, ic * oc);
+        let b = fill(&mut rng, oc);
+        let mut vec_out = vec![0f32; h * w * oc];
+        let mut ref_out = vec![0f32; h * w * oc];
+        ops::conv2d(&x, &wt, &b, &mut vec_out, ic, oc, &g, act);
+        scalar::conv2d(&x, &wt, &b, &mut ref_out, ic, oc, &g, act);
+        assert_ulp(&vec_out, &ref_out, &format!("pointwise seed {seed}: {h}x{w} {ic}->{oc}"));
+    }
+}
+
+#[test]
+fn dwconv2d_matches_scalar_across_random_geometries() {
+    for seed in 0..120u64 {
+        let mut rng = SplitMix64::new(0x2000 + seed);
+        let g = pick_geom(&mut rng, true);
+        let c = rng.next_range(1, 16);
+        let act = pick_act(&mut rng);
+        let x = fill(&mut rng, g.h * g.w * c);
+        let w = fill(&mut rng, g.kh * g.kw * c);
+        let b = fill(&mut rng, c);
+        let mut vec_out = vec![0f32; g.oh * g.ow * c];
+        let mut ref_out = vec![0f32; g.oh * g.ow * c];
+        ops::dwconv2d(&x, &w, &b, &mut vec_out, c, &g, act);
+        scalar::dwconv2d(&x, &w, &b, &mut ref_out, c, &g, act);
+        let ctx = format!(
+            "dwconv2d seed {seed}: {}x{}x{c}, k{}x{} s{}x{} d{}x{}",
+            g.h, g.w, g.kh, g.kw, g.sh, g.sw, g.dh, g.dw
+        );
+        assert_ulp(&vec_out, &ref_out, &ctx);
+    }
+}
+
+#[test]
+fn pools_match_scalar_across_random_geometries() {
+    for seed in 0..120u64 {
+        let mut rng = SplitMix64::new(0x3000 + seed);
+        let g = pick_geom(&mut rng, false);
+        let c = rng.next_range(1, 16);
+        let x = fill(&mut rng, g.h * g.w * c);
+        let mut vec_out = vec![0f32; g.oh * g.ow * c];
+        let mut ref_out = vec![0f32; g.oh * g.ow * c];
+        ops::maxpool2d(&x, &mut vec_out, c, &g);
+        scalar::maxpool2d(&x, &mut ref_out, c, &g);
+        assert_ulp(&vec_out, &ref_out, &format!("maxpool2d seed {seed}"));
+        ops::avgpool2d(&x, &mut vec_out, c, &g);
+        scalar::avgpool2d(&x, &mut ref_out, c, &g);
+        assert_ulp(&vec_out, &ref_out, &format!("avgpool2d seed {seed}"));
+    }
+}
+
+#[test]
+fn fully_connected_matches_scalar_across_random_shapes() {
+    for seed in 0..120u64 {
+        let mut rng = SplitMix64::new(0x4000 + seed);
+        let ind = rng.next_range(1, 48);
+        let outd = rng.next_range(1, 48);
+        let act = pick_act(&mut rng);
+        let x = fill(&mut rng, ind);
+        let w = fill(&mut rng, ind * outd);
+        let b = fill(&mut rng, outd);
+        let mut vec_out = vec![0f32; outd];
+        let mut ref_out = vec![0f32; outd];
+        ops::fully_connected(&x, &w, &b, &mut vec_out, ind, outd, act);
+        scalar::fully_connected(&x, &w, &b, &mut ref_out, ind, outd, act);
+        assert_ulp(&vec_out, &ref_out, &format!("fc seed {seed}: {ind}->{outd}"));
+    }
+}
+
+#[test]
+fn elementwise_and_reductions_match_scalar() {
+    for seed in 0..60u64 {
+        let mut rng = SplitMix64::new(0x5000 + seed);
+        let n = rng.next_range(1, 200);
+        let a = fill(&mut rng, n);
+        let b = fill(&mut rng, n);
+        let act = pick_act(&mut rng);
+        let mut vec_out = vec![0f32; n];
+        let mut ref_out = vec![0f32; n];
+        ops::add(&a, &b, &mut vec_out, act);
+        scalar::add(&a, &b, &mut ref_out, act);
+        assert_ulp(&vec_out, &ref_out, &format!("add seed {seed}"));
+        ops::mul(&a, &b, &mut vec_out);
+        scalar::mul(&a, &b, &mut ref_out);
+        assert_ulp(&vec_out, &ref_out, &format!("mul seed {seed}"));
+        ops::relu(&a, &mut vec_out, if seed % 2 == 0 { None } else { Some(6.0) });
+        scalar::relu(&a, &mut ref_out, if seed % 2 == 0 { None } else { Some(6.0) });
+        assert_ulp(&vec_out, &ref_out, &format!("relu seed {seed}"));
+        ops::sigmoid(&a, &mut vec_out);
+        scalar::sigmoid(&a, &mut ref_out);
+        assert_ulp(&vec_out, &ref_out, &format!("sigmoid seed {seed}"));
+
+        let hw = rng.next_range(1, 20);
+        let c = rng.next_range(1, 16);
+        let x = fill(&mut rng, hw * c);
+        let mut vec_g = vec![0f32; c];
+        let mut ref_g = vec![0f32; c];
+        ops::global_avg_pool(&x, &mut vec_g, hw, c);
+        scalar::global_avg_pool(&x, &mut ref_g, hw, c);
+        assert_ulp(&vec_g, &ref_g, &format!("gap seed {seed}"));
+    }
+}
+
+#[test]
+fn matmul_bias_matches_a_straight_triple_loop() {
+    for seed in 0..60u64 {
+        let mut rng = SplitMix64::new(0x6000 + seed);
+        // Cover full MRxNR tiles, ragged tails, and degenerate edges.
+        let m = rng.next_range(1, 20);
+        let k = rng.next_range(1, 20);
+        let n = rng.next_range(1, 40);
+        let a = fill(&mut rng, m * k);
+        let w = fill(&mut rng, k * n);
+        let b = fill(&mut rng, n);
+        let mut got = vec![0f32; m * n];
+        ops::matmul_bias(&a, k, &w, &b, &mut got, n, m, k, n);
+        for r in 0..m {
+            for c in 0..n {
+                let mut acc = b[c];
+                for kk in 0..k {
+                    acc += a[r * k + kk] * w[kk * n + c];
+                }
+                let d = ulp_dist(got[r * n + c], acc);
+                assert!(d <= 1, "matmul seed {seed} ({m}x{k}x{n}) at ({r},{c}): {d} ulp");
+            }
+        }
+    }
+}
