@@ -19,6 +19,11 @@
 //! * decode loop: the same model served wave-aware (`serve --dynamic`) —
 //!   the first burst pays one multi-pass planner invocation per resolved
 //!   prefix, the second runs entirely off the dynamic plan cache;
+//! * paged decode loop: the same model with the decode tail paged through
+//!   the shared block pool (`serve --paged`) — resident bytes strictly
+//!   below the worst-wave preallocation, block high-water mark and
+//!   fragmentation reported, outputs asserted bit-identical on the
+//!   sequential and 4-thread paths;
 //! * warm vs cold start: planner invocations and time-to-planned across a
 //!   plan-directory restart (`persist_dir` → `warm_start`);
 //! * kernel/thread trajectory: raw `Executor::run_batch` on mobilenet_v2
@@ -476,6 +481,124 @@ fn main() {
              costs zero planner invocations)",
             st.dynamic_misses
         );
+    }
+
+    // --- paged decode loop: prefix-resident arena + shared block pool ---
+    {
+        use harness::json::Value;
+        use tensorarena::arena::paged::BLOCK_WORDS;
+        use tensorarena::planner::{DynamicMode, DynamicRecords};
+        let model = "blazeface";
+        let g = tensorarena::models::by_name(model).unwrap();
+        let in_elems = g.tensor(g.inputs[0]).num_elements();
+        let recs = UsageRecords::from_graph(&g);
+        // Pick the first decode split whose tail strictly grows the
+        // worst-wave peak above the static prefix — the regime where paging
+        // the tail pays (early-dominated splits keep the two peaks equal
+        // and are skipped).
+        let probe = PlanService::shared();
+        let mut pick = None;
+        for from in 2..g.num_ops() {
+            let d = DynamicRecords::decode_tail(&recs, from);
+            if d.num_dynamic() == 0 {
+                continue;
+            }
+            let full = probe
+                .plan_dynamic(&d, &PlanRequest::new().with_dynamic(DynamicMode::FullyResolved))
+                .expect("plan")
+                .peak;
+            let prefix = probe
+                .plan_dynamic(&d, &PlanRequest::new().with_dynamic(DynamicMode::Resolved(0)))
+                .expect("plan")
+                .peak;
+            if full > prefix {
+                pick = Some((from, d));
+                break;
+            }
+        }
+        let (decode_from, dyn_recs) =
+            pick.expect("a decode split whose tail grows the worst-wave peak");
+        println!(
+            "\npaged decode loop ({model}, tail resolves from op {decode_from}, \
+             {} B blocks, batch sweep 1/2/4):",
+            BLOCK_WORDS * 4
+        );
+        let res_svc = PlanService::shared();
+        let paged_svc = PlanService::shared();
+        let mut resident = ExecutorEngine::for_request_dynamic(
+            &g,
+            Arc::clone(&res_svc),
+            &PlanRequest::new(),
+            decode_from,
+            7,
+        )
+        .expect("engine")
+        .with_max_batch(4);
+        let mut paged = ExecutorEngine::for_request_paged(
+            &g,
+            Arc::clone(&paged_svc),
+            &PlanRequest::new(),
+            decode_from,
+            7,
+        )
+        .expect("engine")
+        .with_max_batch(4);
+        let mut threaded = ExecutorEngine::for_request_paged(
+            &g,
+            PlanService::shared(),
+            &PlanRequest::new(),
+            decode_from,
+            7,
+        )
+        .expect("engine")
+        .with_max_batch(4)
+        .with_threads(4);
+        let reps = if smoke { 1 } else { 4 };
+        let mut rng = SplitMix64::new(17);
+        for &b in &[1usize, 2, 4] {
+            let mut identical = true;
+            let mut input = vec![0f32; in_elems * b];
+            for _ in 0..reps {
+                rng.fill_f32(&mut input, 1.0);
+                let want = resident.run_batch(&input, b).expect("resident");
+                identical &= paged.run_batch(&input, b).expect("paged") == want;
+                identical &= threaded.run_batch(&input, b).expect("threaded") == want;
+            }
+            assert!(identical, "paging the decode tail changed the numbers at batch {b}");
+            let req_b = PlanRequest::new().with_batch(b);
+            let resident_bytes = paged_svc
+                .plan_dynamic(&dyn_recs, &req_b.with_dynamic(DynamicMode::Resolved(0)))
+                .expect("plan")
+                .peak;
+            let full_bytes = paged_svc
+                .plan_dynamic(&dyn_recs, &req_b.with_dynamic(DynamicMode::FullyResolved))
+                .expect("plan")
+                .peak;
+            assert!(
+                resident_bytes < full_bytes,
+                "paged mode must keep strictly fewer bytes resident at batch {b}"
+            );
+            let blocks = paged_svc.pool().blocks();
+            println!(
+                "  batch {b}: resident {:.1} KiB vs {:.1} KiB worst-wave | paged {} block(s) \
+                 peak, {:.0}% fragmentation | outputs identical (seq + 4 threads)",
+                resident_bytes as f64 / 1024.0,
+                full_bytes as f64 / 1024.0,
+                blocks.peak_blocks(),
+                blocks.fragmentation() * 100.0,
+            );
+            cases.push(Value::Obj(vec![
+                ("name".into(), Value::Str(format!("paged_decode/b{b}"))),
+                ("batch".into(), Value::Num(b as f64)),
+                ("resident_kib".into(), Value::Num(resident_bytes as f64 / 1024.0)),
+                ("peak_kib".into(), Value::Num(full_bytes as f64 / 1024.0)),
+                ("blocks_peak".into(), Value::Num(blocks.peak_blocks() as f64)),
+                ("fragmentation".into(), Value::Num(blocks.fragmentation())),
+                ("identical".into(), Value::Bool(identical)),
+            ]));
+        }
+        // Between bursts every tail block is back in the shared pool.
+        assert_eq!(paged_svc.pool().blocks().blocks_in_use(), 0);
     }
 
     // --- warm vs cold start: a plan-directory restart ---

@@ -20,8 +20,11 @@
 //! prove that planner bugs (overlapping live tensors) corrupt data and are
 //! caught.
 
+pub mod paged;
+
 use crate::planner::OffsetPlan;
 use crate::records::UsageRecords;
+use paged::BlockPool;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -49,6 +52,11 @@ pub struct ArenaPool {
     shelves: Mutex<Vec<Vec<Vec<f32>>>>,
     reused: AtomicU64,
     allocated: AtomicU64,
+    dropped: AtomicU64,
+    /// Fixed-size block pool for paged decode-tail storage
+    /// ([`paged::PagedArena`]); sharing the `ArenaPool` handle shares the
+    /// blocks.
+    blocks: BlockPool,
 }
 
 impl ArenaPool {
@@ -74,7 +82,16 @@ impl ArenaPool {
             let mut shelves = self.shelves.lock().unwrap();
             for c in [class, class + 1] {
                 if let Some(shelf) = shelves.get_mut(c) {
-                    if let Some(i) = shelf.iter().position(|b| b.len() >= words) {
+                    // Best fit, not first fit: take the *smallest* shelved
+                    // buffer that covers the request, so a small request
+                    // never strands the shelf's largest buffer.
+                    let fit = shelf
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, b)| b.len() >= words)
+                        .min_by_key(|&(_, b)| b.len())
+                        .map(|(i, _)| i);
+                    if let Some(i) = fit {
                         self.reused.fetch_add(1, Ordering::Relaxed);
                         let mut buf = shelf.swap_remove(i);
                         drop(shelves);
@@ -91,6 +108,8 @@ impl ArenaPool {
     }
 
     /// Shelve a buffer for reuse; buffers of any length are accepted.
+    /// Buffers past the per-class retention cap are dropped and counted
+    /// ([`Self::dropped`]) so pool churn is visible in serving metrics.
     pub fn release(&self, buf: Vec<f32>) {
         if buf.is_empty() {
             return;
@@ -103,6 +122,8 @@ impl ArenaPool {
         let shelf = &mut shelves[class];
         if shelf.len() < POOL_SHELF_CAP {
             shelf.push(buf);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -114,6 +135,19 @@ impl ArenaPool {
     /// Buffers freshly allocated so far.
     pub fn allocated(&self) -> u64 {
         self.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Buffers dropped at release because their size class was at the
+    /// retention cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The shared fixed-size block pool backing paged decode-tail arenas
+    /// ([`paged::PagedArena`]). Every executor holding a clone of this
+    /// pool's `Arc` draws tail blocks from the same freelist.
+    pub fn blocks(&self) -> &BlockPool {
+        &self.blocks
     }
 
     /// Buffers currently shelved (for tests and pool introspection).
@@ -575,6 +609,39 @@ mod tests {
             pool.release(vec![0f32; 64]);
         }
         assert!(pool.idle_buffers() <= 20);
+    }
+
+    #[test]
+    fn pool_acquire_is_best_fit_within_a_class() {
+        // Regression: first-fit used to hand out whichever fitting buffer
+        // was shelved first, stranding the class's largest buffer on a
+        // small request. 2000 and 1700 words share class 10; shelving the
+        // larger first makes first-fit pick it for a 1600-word request.
+        let pool = ArenaPool::new();
+        pool.release(vec![0f32; 2000]);
+        pool.release(vec![0f32; 1700]);
+        let got = pool.acquire(1600);
+        assert_eq!(got.len(), 1700, "best fit must pick the smallest fitting buffer");
+        assert_eq!(pool.idle_buffers(), 1, "the 2000-word buffer stays shelved");
+        // The remaining large buffer still serves the next large request.
+        let big = pool.acquire(1900);
+        assert_eq!(big.len(), 2000);
+        assert_eq!((pool.allocated(), pool.reused()), (0, 2));
+        pool.release(got);
+        pool.release(big);
+    }
+
+    #[test]
+    fn pool_release_counts_dropped_buffers_past_the_cap() {
+        let pool = ArenaPool::new();
+        for _ in 0..POOL_SHELF_CAP + 3 {
+            pool.release(vec![0f32; 64]);
+        }
+        assert_eq!(pool.idle_buffers(), POOL_SHELF_CAP);
+        assert_eq!(pool.dropped(), 3);
+        // Empty buffers are ignored, not dropped.
+        pool.release(Vec::new());
+        assert_eq!(pool.dropped(), 3);
     }
 
     #[test]

@@ -1,0 +1,335 @@
+//! Block-granular (paged) arena storage for decode tails.
+//!
+//! The resident arena sizes dynamic serving at the **worst-wave peak**
+//! (`planner::dynamic`): static preallocation, with exactly the waste the
+//! shared-object taxonomy warns about — a short decode tail strands memory
+//! other in-flight requests could use. This module applies the
+//! PagedAttention idea (OS-style virtual memory for tensors): decode-tail
+//! records map their regions onto lists of fixed-size blocks drawn from a
+//! [`BlockPool`] shared across executors through the [`ArenaPool`] handle,
+//! so tail tensors allocate incrementally at wave boundaries and freed
+//! blocks are *immediately* servable to other requests.
+//!
+//! Two layers:
+//!
+//! - [`BlockPool`] — the shared freelist of fixed [`BLOCK_WORDS`]-word
+//!   blocks, with reuse/allocation/drop counters mirroring [`ArenaPool`]
+//!   plus live/peak gauges that make block-level [`fragmentation`]
+//!   observable in serving metrics.
+//! - [`PagedArena`] — a per-executor mapping from record ids to block
+//!   lists, with `gather`/`scatter` copies in and out of a contiguous
+//!   scratch stripe so kernels run unchanged (and bit-identically) on
+//!   paged tensors.
+//!
+//! [`fragmentation`]: BlockPool::fragmentation
+
+use super::ArenaPool;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Words per block: 128 `f32` words = 512 bytes, a multiple of the crate's
+/// 64-byte alignment quantum, so every block boundary is itself 64-byte
+/// aligned.
+pub const BLOCK_WORDS: usize = 128;
+
+/// Most free blocks the pool retains; beyond this, released blocks are
+/// dropped (and counted) to bound pool memory under churn.
+const BLOCK_SHELF_CAP: usize = 1024;
+
+/// Gauges guarded by the pool mutex: the freelist plus the live/peak
+/// accounting that fragmentation is computed from.
+#[derive(Default)]
+struct PoolInner {
+    /// Free blocks, each exactly [`BLOCK_WORDS`] long.
+    free: Vec<Vec<f32>>,
+    /// Blocks currently mapped by some [`PagedArena`].
+    in_use: usize,
+    /// Payload words currently mapped (requested sizes, not block-rounded).
+    live_words: usize,
+    /// High-water mark of `in_use`.
+    peak_blocks: usize,
+    /// `live_words` snapshot taken when `peak_blocks` was last raised.
+    words_at_peak: usize,
+}
+
+/// Shared freelist of fixed 64-byte-aligned blocks for paged decode-tail
+/// storage. One `BlockPool` lives inside every [`ArenaPool`]
+/// ([`ArenaPool::blocks`]), so executors sharing an arena pool — the
+/// serving coordinator's normal state — automatically share tail blocks:
+/// a block freed by one request's dying tail tensor is immediately
+/// servable to any other request on the same pool.
+#[derive(Default)]
+pub struct BlockPool {
+    inner: Mutex<PoolInner>,
+    reused: AtomicU64,
+    allocated: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl BlockPool {
+    /// Empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Acquire enough blocks to back `words` payload words
+    /// (`ceil(words / BLOCK_WORDS)` blocks), each zeroed, recycling free
+    /// blocks before allocating. Returns an empty list for `words == 0`.
+    pub fn acquire_region(&self, words: usize) -> Vec<Vec<f32>> {
+        if words == 0 {
+            return Vec::new();
+        }
+        let n = words.div_ceil(BLOCK_WORDS);
+        let mut blocks = Vec::with_capacity(n);
+        let mut inner = self.inner.lock().unwrap();
+        for _ in 0..n {
+            if let Some(mut b) = inner.free.pop() {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                b.fill(0.0);
+                blocks.push(b);
+            } else {
+                self.allocated.fetch_add(1, Ordering::Relaxed);
+                blocks.push(vec![0f32; BLOCK_WORDS]);
+            }
+        }
+        inner.in_use += n;
+        inner.live_words += words;
+        if inner.in_use > inner.peak_blocks {
+            inner.peak_blocks = inner.in_use;
+            inner.words_at_peak = inner.live_words;
+        }
+        blocks
+    }
+
+    /// Return a region's blocks to the freelist. `words` must be the
+    /// payload size the region was acquired for (the gauges are kept in
+    /// the same units as [`Self::acquire_region`]). Blocks past the
+    /// retention cap are dropped and counted.
+    pub fn release_region(&self, blocks: Vec<Vec<f32>>, words: usize) {
+        if blocks.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.in_use = inner.in_use.saturating_sub(blocks.len());
+        inner.live_words = inner.live_words.saturating_sub(words);
+        for b in blocks {
+            if inner.free.len() < BLOCK_SHELF_CAP {
+                inner.free.push(b);
+            } else {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Blocks currently mapped across every arena sharing this pool.
+    pub fn blocks_in_use(&self) -> usize {
+        self.inner.lock().unwrap().in_use
+    }
+
+    /// High-water mark of mapped blocks — the paged analogue of the
+    /// resident arena's planned peak; `blocks × BLOCK_WORDS × 4` bytes is
+    /// what budget admission charges the decode tail.
+    pub fn peak_blocks(&self) -> usize {
+        self.inner.lock().unwrap().peak_blocks
+    }
+
+    /// Internal fragmentation at the block high-water mark: the fraction
+    /// of peak block capacity that held no payload
+    /// (`1 − live_words / (peak_blocks × BLOCK_WORDS)`, 0.0 when nothing
+    /// was ever mapped). Only the last partial block of each region can
+    /// waste words, so this is bounded by `regions / peak_blocks`.
+    pub fn fragmentation(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        if inner.peak_blocks == 0 {
+            return 0.0;
+        }
+        let capacity = (inner.peak_blocks * BLOCK_WORDS) as f64;
+        (1.0 - inner.words_at_peak as f64 / capacity).max(0.0)
+    }
+
+    /// Blocks recycled from the freelist so far.
+    pub fn reused(&self) -> u64 {
+        self.reused.load(Ordering::Relaxed)
+    }
+
+    /// Blocks freshly allocated so far.
+    pub fn allocated(&self) -> u64 {
+        self.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Blocks dropped at release because the freelist was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Free blocks currently shelved (tests and introspection).
+    pub fn idle_blocks(&self) -> usize {
+        self.inner.lock().unwrap().free.len()
+    }
+}
+
+/// Per-executor mapping of record ids onto block lists from the shared
+/// [`BlockPool`]. A record is *mapped* between its producing wave boundary
+/// and its death; [`Self::unmap`] returns its blocks to the pool at once,
+/// which is what makes a decode tail's memory servable to other requests
+/// the moment each tail tensor dies instead of at end of batch.
+pub struct PagedArena {
+    pool: Arc<ArenaPool>,
+    /// `maps[record]` — the record's block list while mapped.
+    maps: Vec<Option<Vec<Vec<f32>>>>,
+    /// Payload words per mapped record (requested, not block-rounded).
+    words: Vec<usize>,
+}
+
+impl PagedArena {
+    /// A paged arena over `num_records` record ids, drawing blocks from
+    /// `pool`'s shared [`BlockPool`].
+    pub fn new(pool: Arc<ArenaPool>, num_records: usize) -> Self {
+        PagedArena {
+            pool,
+            maps: (0..num_records).map(|_| None).collect(),
+            words: vec![0; num_records],
+        }
+    }
+
+    /// True while `record` holds blocks.
+    pub fn is_mapped(&self, record: usize) -> bool {
+        self.maps[record].is_some()
+    }
+
+    /// Payload words of a mapped record (0 while unmapped).
+    pub fn words_of(&self, record: usize) -> usize {
+        self.words[record]
+    }
+
+    /// Map `record` onto freshly-acquired (zeroed) blocks backing `words`
+    /// payload words. Panics if already mapped — a record maps exactly
+    /// once per pass, at its producing wave boundary.
+    pub fn map(&mut self, record: usize, words: usize) {
+        assert!(self.maps[record].is_none(), "record {record} is already mapped");
+        self.maps[record] = Some(self.pool.blocks().acquire_region(words));
+        self.words[record] = words;
+    }
+
+    /// Unmap `record`, returning its blocks to the shared pool
+    /// immediately. No-op if not mapped (a zero-word region maps to an
+    /// empty block list, which releases trivially).
+    pub fn unmap(&mut self, record: usize) {
+        if let Some(blocks) = self.maps[record].take() {
+            self.pool.blocks().release_region(blocks, self.words[record]);
+            self.words[record] = 0;
+        }
+    }
+
+    /// Copy a mapped record's payload into `dst` (`dst.len()` must equal
+    /// the mapped word count). The contiguous copy is what lets kernels
+    /// run unchanged — and bit-identically — on paged tensors.
+    pub fn gather(&self, record: usize, dst: &mut [f32]) {
+        let blocks = self.maps[record].as_ref().expect("gather of an unmapped record");
+        assert_eq!(dst.len(), self.words[record], "gather size mismatch for record {record}");
+        for (i, chunk) in dst.chunks_mut(BLOCK_WORDS).enumerate() {
+            chunk.copy_from_slice(&blocks[i][..chunk.len()]);
+        }
+    }
+
+    /// Copy `src` into a mapped record's blocks (`src.len()` must equal
+    /// the mapped word count).
+    pub fn scatter(&mut self, record: usize, src: &[f32]) {
+        assert_eq!(src.len(), self.words[record], "scatter size mismatch for record {record}");
+        let blocks = self.maps[record].as_mut().expect("scatter to an unmapped record");
+        for (i, chunk) in src.chunks(BLOCK_WORDS).enumerate() {
+            blocks[i][..chunk.len()].copy_from_slice(chunk);
+        }
+    }
+
+    /// Unmap every record (defensive sweep; the per-step death hooks
+    /// normally leave nothing behind).
+    pub fn release_all(&mut self) {
+        for r in 0..self.maps.len() {
+            self.unmap(r);
+        }
+    }
+}
+
+impl Drop for PagedArena {
+    fn drop(&mut self) {
+        self.release_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_pool_rounds_up_and_recycles() {
+        let pool = BlockPool::new();
+        let region = pool.acquire_region(BLOCK_WORDS + 1);
+        assert_eq!(region.len(), 2);
+        assert!(region.iter().all(|b| b.len() == BLOCK_WORDS));
+        assert_eq!((pool.allocated(), pool.reused()), (2, 0));
+        assert_eq!(pool.blocks_in_use(), 2);
+        pool.release_region(region, BLOCK_WORDS + 1);
+        assert_eq!(pool.blocks_in_use(), 0);
+        assert_eq!(pool.idle_blocks(), 2);
+        // Freed blocks are immediately servable: the next region reuses
+        // them, zeroed.
+        let again = pool.acquire_region(2 * BLOCK_WORDS);
+        assert_eq!((pool.allocated(), pool.reused()), (2, 2));
+        assert!(again.iter().all(|b| b.iter().all(|&v| v == 0.0)));
+        pool.release_region(again, 2 * BLOCK_WORDS);
+    }
+
+    #[test]
+    fn fragmentation_is_measured_at_the_block_peak() {
+        let pool = BlockPool::new();
+        // One word in a whole block: (BLOCK_WORDS - 1) wasted at peak.
+        let region = pool.acquire_region(1);
+        assert_eq!(pool.peak_blocks(), 1);
+        let expect = 1.0 - 1.0 / BLOCK_WORDS as f64;
+        assert!((pool.fragmentation() - expect).abs() < 1e-12);
+        pool.release_region(region, 1);
+        // Peak (and its fragmentation snapshot) survive the release.
+        assert_eq!(pool.peak_blocks(), 1);
+        assert!((pool.fragmentation() - expect).abs() < 1e-12);
+        // A full-block region raises the peak and clears the waste.
+        let full = pool.acquire_region(2 * BLOCK_WORDS);
+        assert_eq!(pool.peak_blocks(), 2);
+        assert_eq!(pool.fragmentation(), 0.0);
+        pool.release_region(full, 2 * BLOCK_WORDS);
+    }
+
+    #[test]
+    fn empty_pool_reports_zero_fragmentation() {
+        let pool = BlockPool::new();
+        assert_eq!(pool.fragmentation(), 0.0);
+        assert_eq!(pool.peak_blocks(), 0);
+        assert!(pool.acquire_region(0).is_empty());
+        assert_eq!(pool.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn paged_arena_roundtrips_and_releases_on_drop() {
+        let pool = Arc::new(ArenaPool::new());
+        let words = BLOCK_WORDS + 7;
+        {
+            let mut arena = PagedArena::new(Arc::clone(&pool), 3);
+            assert!(!arena.is_mapped(1));
+            arena.map(1, words);
+            assert!(arena.is_mapped(1));
+            assert_eq!(arena.words_of(1), words);
+            let src: Vec<f32> = (0..words).map(|i| i as f32).collect();
+            arena.scatter(1, &src);
+            let mut dst = vec![0f32; words];
+            arena.gather(1, &mut dst);
+            assert_eq!(src, dst);
+            arena.unmap(1);
+            assert!(!arena.is_mapped(1));
+            assert_eq!(pool.blocks().blocks_in_use(), 0);
+            arena.map(2, 5);
+            // Dropped while record 2 is still mapped.
+        }
+        assert_eq!(pool.blocks().blocks_in_use(), 0, "drop must release all blocks");
+        assert!(pool.blocks().idle_blocks() >= 1);
+    }
+}

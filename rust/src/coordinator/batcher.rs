@@ -302,12 +302,15 @@ fn worker_loop(
         let result = engine.run_batch(&batch_buf, samples);
         let done = Instant::now();
 
-        let waits: Vec<Duration> = batch.iter().map(|r| exec_start - r.enqueued).collect();
-        let lats: Vec<Duration> = batch.iter().map(|r| done - r.enqueued).collect();
-        metrics.record_batch(samples, &waits, &lats);
-
+        // Only a successful batch feeds the latency / batch-size metrics: a
+        // failed batch completed nothing, and counting it would both inflate
+        // `completed` and skew the distributions with garbage timings.
         match result {
             Ok(out) => {
+                let waits: Vec<Duration> =
+                    batch.iter().map(|r| exec_start - r.enqueued).collect();
+                let lats: Vec<Duration> = batch.iter().map(|r| done - r.enqueued).collect();
+                metrics.record_batch(samples, &waits, &lats);
                 let mut off = 0;
                 for r in &batch {
                     let k = r.input.len() / in_elems;
@@ -318,6 +321,7 @@ fn worker_loop(
                 }
             }
             Err(e) => {
+                metrics.record_engine_error();
                 for r in &batch {
                     let _ = r.resp.send(Err(ServeError::Engine(e.to_string())));
                 }
@@ -471,6 +475,38 @@ mod tests {
         let resp = server.submit(vec![0.0f32; 5]).recv().unwrap();
         assert!(matches!(resp, Err(ServeError::BatchTooLarge { batch: 5, cap: 4 })));
         assert_eq!(server.metrics().snapshot().rejected, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn failing_engine_counts_errors_and_skips_the_batch_metrics() {
+        struct FailEngine;
+        impl Engine for FailEngine {
+            fn in_elems(&self) -> usize {
+                1
+            }
+            fn out_elems(&self) -> usize {
+                1
+            }
+            fn max_batch(&self) -> usize {
+                4
+            }
+            fn run_batch(&mut self, _input: &[f32], _n: usize) -> anyhow::Result<Vec<f32>> {
+                anyhow::bail!("injected failure")
+            }
+        }
+        let server = ModelServer::spawn(|| Box::new(FailEngine), BatchPolicy::default());
+        for _ in 0..2 {
+            match server.submit(vec![1.0]).recv().unwrap() {
+                Err(ServeError::Engine(e)) => assert!(e.contains("injected failure"), "{e}"),
+                other => panic!("expected an engine error, got {other:?}"),
+            }
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.engine_errors, 2);
+        assert_eq!(snap.completed, 0, "failed batches must not count as completed");
+        assert_eq!(snap.max_batch_seen, 0, "failed batches must not feed the distributions");
+        assert_eq!(snap.p99_us, 0, "failed batches must not feed the latency percentiles");
         server.shutdown();
     }
 

@@ -1,6 +1,7 @@
 //! Engines: what actually computes a batch.
 
 use super::ArenaStats;
+use crate::arena::paged::BLOCK_WORDS;
 use crate::exec::Executor;
 use crate::graph::Graph;
 use crate::planner::{
@@ -243,6 +244,10 @@ pub struct ExecutorEngine {
     /// query (`planned_peak` / `max_servable_batch` resolve against the
     /// worst-wave peak, not a static plan).
     dynamic: Option<DynamicRecords>,
+    /// Serve the decode tail from the shared block pool instead of the
+    /// resident arena: the arena holds only the static prefix, and budget
+    /// admission charges prefix peak + tail block demand.
+    paged: bool,
 }
 
 impl ExecutorEngine {
@@ -279,7 +284,7 @@ impl ExecutorEngine {
                 "dynamic request '{req}' needs a decode profile; use for_request_dynamic"
             );
         }
-        Self::construct(graph, service, req, None, seed)
+        Self::construct(graph, service, req, None, false, seed)
     }
 
     /// [`Self::for_request`] in the §7 **wave-aware** mode: the served
@@ -300,7 +305,28 @@ impl ExecutorEngine {
         decode_from: usize,
         seed: u64,
     ) -> Result<Self> {
-        Self::construct(graph, service, req, Some(decode_from), seed)
+        Self::construct(graph, service, req, Some(decode_from), false, seed)
+    }
+
+    /// [`Self::for_request_dynamic`] in **paged** mode: the resident arena
+    /// is sized at the *static-prefix* peak only, and every decode-tail
+    /// tensor lives in fixed-size blocks acquired from the shared
+    /// [`BlockPool`] at the wave boundary that materializes it and released
+    /// the step it dies (see [`Executor::with_request_paged`]). Steady-state
+    /// resident bytes are strictly below the worst-wave preallocation
+    /// whenever the tail grows the peak, at the cost of gather/scatter
+    /// copies on tail-touching ops; outputs stay bit-identical. Budget
+    /// admission charges `prefix peak + tail block demand × block bytes`.
+    ///
+    /// [`BlockPool`]: crate::arena::paged::BlockPool
+    pub fn for_request_paged(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        req: &PlanRequest,
+        decode_from: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        Self::construct(graph, service, req, Some(decode_from), true, seed)
     }
 
     /// [`Self::for_request`] with untyped `(strategy, order)` arguments.
@@ -336,6 +362,7 @@ impl ExecutorEngine {
         service: Arc<PlanService>,
         req: &PlanRequest,
         decode_from: Option<usize>,
+        paged: bool,
         seed: u64,
     ) -> Result<Self> {
         let req = req.with_dynamic(DynamicMode::Static);
@@ -352,9 +379,14 @@ impl ExecutorEngine {
         let dynamic = decode_from.map(|from| {
             DynamicRecords::decode_tail(&UsageRecords::from_graph(&ordered), from)
         });
-        let exec =
+        let exec = if paged {
+            let d = dynamic.clone().expect("paged construction always has a decode profile");
+            Executor::with_request_paged(&ordered, Arc::clone(&service), &req, d, seed)
+                .map_err(anyhow::Error::msg)?
+        } else {
             Executor::with_request(&ordered, Arc::clone(&service), &req, dynamic.clone(), seed)
-                .map_err(anyhow::Error::msg)?;
+                .map_err(anyhow::Error::msg)?
+        };
         let in_elems = ordered.tensor(ordered.inputs[0]).num_elements();
         let out_elems = ordered.tensor(ordered.outputs[0]).num_elements();
         let records = exec.base_records().clone();
@@ -368,6 +400,7 @@ impl ExecutorEngine {
             records,
             applied,
             dynamic,
+            paged,
         })
     }
 
@@ -415,6 +448,10 @@ impl Engine for ExecutorEngine {
         if self.dynamic.is_some() {
             stats = stats.with_waves(self.exec.wave_passes(), self.exec.wave_resolutions());
         }
+        if self.paged {
+            let blocks = self.service.pool().blocks();
+            stats = stats.with_paged(blocks.peak_blocks() as u64, blocks.fragmentation());
+        }
         if self.exec.threads() > 1 {
             stats = stats.with_threads(
                 self.exec.threads(),
@@ -443,6 +480,21 @@ impl Engine for ExecutorEngine {
             return None;
         }
         match &self.dynamic {
+            // Paged serving admits against what it actually holds resident:
+            // the static-prefix plan plus the decode tail's peak block
+            // demand (batch-invariant — lanes page their tails one at a
+            // time, so the tail term never scales with the batch).
+            Some(d) if self.paged => {
+                let prefix = self
+                    .service
+                    .plan_dynamic(
+                        d,
+                        &self.req.with_batch(batch).with_dynamic(DynamicMode::Resolved(0)),
+                    )
+                    .ok()?;
+                let tail = d.tail_block_demand(BLOCK_WORDS).checked_mul(BLOCK_WORDS * 4)?;
+                prefix.peak.checked_add(tail)
+            }
             // Wave-aware serving must admit against the worst-wave peak:
             // mid-inference waves only ever grow the arena.
             Some(d) => self
@@ -461,6 +513,20 @@ impl Engine for ExecutorEngine {
         }
     }
     fn max_servable_batch(&self, budget_bytes: usize) -> Option<usize> {
+        if self.paged {
+            // The paged footprint (prefix peak + flat tail term) is
+            // monotone in the batch, so a bounded linear walk finds the
+            // largest admissible size; the engine's own cap bounds the
+            // walk, and a probe failure ends it conservatively.
+            let mut best = 0;
+            for b in 1..=self.max_batch {
+                match self.planned_peak(b) {
+                    Some(p) if p <= budget_bytes => best = b,
+                    _ => break,
+                }
+            }
+            return Some(best);
+        }
         match &self.dynamic {
             Some(d) => self
                 .service
@@ -677,6 +743,76 @@ mod tests {
         // The admitted peak is the multi-pass worst-wave peak — exactly
         // what the wave-aware executor sized its resident arena to.
         assert_eq!(p1, e.arena_stats().planned_bytes);
+    }
+
+    #[test]
+    fn paged_engine_matches_dynamic_outputs_and_reports_blocks() {
+        let g = crate::models::blazeface();
+        let decode_from = g.num_ops() / 2;
+        let mut dynr = ExecutorEngine::for_request_dynamic(
+            &g,
+            PlanService::shared(),
+            &PlanRequest::new(),
+            decode_from,
+            3,
+        )
+        .unwrap();
+        let svc = PlanService::shared();
+        let mut paged = ExecutorEngine::for_request_paged(
+            &g,
+            Arc::clone(&svc),
+            &PlanRequest::new(),
+            decode_from,
+            3,
+        )
+        .unwrap();
+        let x = vec![0.1f32; 2 * dynr.in_elems()];
+        assert_eq!(
+            dynr.run_batch(&x, 2).unwrap(),
+            paged.run_batch(&x, 2).unwrap(),
+            "paging the decode tail changed the numbers"
+        );
+        let st = paged.arena_stats();
+        // The resident arena holds only the static prefix, never more than
+        // the worst-wave preallocation the resident engine sized itself to.
+        assert!(st.planned_bytes <= dynr.arena_stats().planned_bytes);
+        assert!(st.blocks_in_use > 0, "the decode tail must have paged: {st:?}");
+        assert!((0.0..1.0).contains(&st.fragmentation), "{st:?}");
+        assert!(st.waves >= 2, "paged serving still reports the wave shape: {st:?}");
+        // Between bursts every tail block is back in the shared pool.
+        assert_eq!(svc.pool().blocks().blocks_in_use(), 0);
+        // The resident engine keeps its stats line block-free.
+        assert_eq!(dynr.arena_stats().blocks_in_use, 0);
+    }
+
+    #[test]
+    fn paged_engine_budget_charges_prefix_plus_tail_blocks() {
+        let g = crate::models::blazeface();
+        let decode_from = g.num_ops() / 2;
+        let svc = PlanService::shared();
+        let e = ExecutorEngine::for_request_paged(
+            &g,
+            Arc::clone(&svc),
+            &PlanRequest::new(),
+            decode_from,
+            3,
+        )
+        .unwrap();
+        let d = DynamicRecords::decode_tail(&UsageRecords::from_graph(&g), decode_from);
+        let prefix = svc
+            .plan_dynamic(&d, &PlanRequest::new().with_dynamic(DynamicMode::Resolved(0)))
+            .unwrap()
+            .peak;
+        let tail = d.tail_block_demand(BLOCK_WORDS) * BLOCK_WORDS * 4;
+        assert!(tail > 0, "the decode tail must demand blocks");
+        assert_eq!(e.planned_peak(1), Some(prefix + tail));
+        // The admission walk is monotone and budget-exact.
+        let p1 = prefix + tail;
+        let cap = e.max_servable_batch(3 * p1).unwrap();
+        assert!(cap >= 1);
+        assert!(e.planned_peak(cap).unwrap() <= 3 * p1);
+        assert!(e.planned_peak(cap + 1).unwrap() > 3 * p1);
+        assert_eq!(e.max_servable_batch(p1 - 1), Some(0));
     }
 
     #[test]

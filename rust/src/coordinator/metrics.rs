@@ -22,6 +22,9 @@ pub fn render_arena_stats(s: &ArenaStats) -> String {
         s.pool_reused,
         s.pool_allocated,
     );
+    if s.pool_dropped > 0 {
+        line.push_str(&format!(" / {} dropped", s.pool_dropped));
+    }
     if s.warm_loaded > 0 || s.warm_skipped > 0 {
         line.push_str(&format!(
             " | warm start {} loaded / {} skipped",
@@ -46,6 +49,13 @@ pub fn render_arena_stats(s: &ArenaStats) -> String {
         if s.wave_resolutions > 0 {
             line.push_str(&format!(", {} re-resolve(s)", s.wave_resolutions));
         }
+    }
+    if s.blocks_in_use > 0 {
+        line.push_str(&format!(
+            " | paged {} block(s) peak, {:.0}% fragmentation",
+            s.blocks_in_use,
+            s.fragmentation * 100.0
+        ));
     }
     if s.threads > 1 {
         line.push_str(&format!(
@@ -74,6 +84,8 @@ struct Inner {
     completed: u64,
     /// Requests refused by budget-driven admission (never executed).
     rejected: u64,
+    /// Batches the engine failed to execute (no requests completed).
+    engine_errors: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -87,6 +99,10 @@ pub struct MetricsSnapshot {
     /// / [`crate::coordinator::ServeError::BatchTooLarge`]) — the count the
     /// paper's edge box reports instead of OOMing.
     pub rejected: u64,
+    /// Batches the engine failed on ([`crate::coordinator::ServeError::Engine`]).
+    /// Failed batches complete no requests and never skew the latency or
+    /// batch-size distributions.
+    pub engine_errors: u64,
     /// Median end-to-end latency, microseconds.
     pub p50_us: u64,
     /// 95th-percentile end-to-end latency, microseconds.
@@ -123,6 +139,11 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += requests as u64;
     }
 
+    /// Count one batch the engine failed to execute.
+    pub fn record_engine_error(&self) {
+        self.inner.lock().unwrap().engine_errors += 1;
+    }
+
     /// Summarize everything recorded so far.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
@@ -142,6 +163,7 @@ impl Metrics {
         MetricsSnapshot {
             completed: m.completed,
             rejected: m.rejected,
+            engine_errors: m.engine_errors,
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
@@ -179,8 +201,15 @@ mod tests {
         assert_eq!(s.mean_batch, 4.0);
         assert_eq!(s.max_batch_seen, 4);
         assert_eq!(s.rejected, 0);
+        assert_eq!(s.engine_errors, 0);
         m.record_rejected(3);
         assert_eq!(m.snapshot().rejected, 3);
+        m.record_engine_error();
+        m.record_engine_error();
+        let s = m.snapshot();
+        assert_eq!(s.engine_errors, 2);
+        // Failed batches never feed the completion or latency counters.
+        assert_eq!(s.completed, 100);
     }
 
     #[test]
@@ -210,6 +239,27 @@ mod tests {
         let warmed = ArenaStats { warm_loaded: 4, warm_skipped: 1, ..s };
         let line = render_arena_stats(&warmed);
         assert!(line.contains("warm start 4 loaded / 1 skipped"), "{line}");
+    }
+
+    #[test]
+    fn arena_stats_render_includes_the_paged_segment() {
+        let s = ArenaStats {
+            planned_bytes: 8 * 1024,
+            naive_bytes: 32 * 1024,
+            strategy: "greedy-size".into(),
+            pool_reused: 2,
+            pool_allocated: 2,
+            pool_dropped: 3,
+            ..ArenaStats::default()
+        }
+        .with_paged(5, 0.25);
+        let line = render_arena_stats(&s);
+        assert!(line.contains("2 reused / 2 allocated / 3 dropped"), "{line}");
+        assert!(line.contains("paged 5 block(s) peak, 25% fragmentation"), "{line}");
+        // Engines that never paged or dropped keep the line clean.
+        let clean = render_arena_stats(&ArenaStats::default());
+        assert!(!clean.contains("dropped"), "{clean}");
+        assert!(!clean.contains("paged"), "{clean}");
     }
 
     #[test]

@@ -168,6 +168,18 @@ pub struct ArenaStats {
     pub levels: usize,
     /// Op executions the executor dispatched to parallel workers.
     pub ops_parallel: u64,
+    /// Peak decode-tail blocks the shared [`BlockPool`] served at once
+    /// (0 = the engine does not page its decode tail).
+    ///
+    /// [`BlockPool`]: crate::arena::paged::BlockPool
+    pub blocks_in_use: u64,
+    /// Internal fragmentation at the block peak: the fraction of the
+    /// paged footprint that was round-up slack rather than live tensor
+    /// words (0.0 when nothing was paged).
+    pub fragmentation: f64,
+    /// Arena buffers the pool refused to keep at release time because the
+    /// size-class shelf was full (dropped on the floor, not leaked).
+    pub pool_dropped: u64,
 }
 
 impl ArenaStats {
@@ -194,6 +206,7 @@ impl ArenaStats {
             warm_skipped: service.warm_skipped,
             dynamic_hits: service.dynamic_hits,
             dynamic_misses: service.dynamic_misses,
+            pool_dropped: service.pool_dropped,
             ..ArenaStats::default()
         }
     }
@@ -204,6 +217,16 @@ impl ArenaStats {
     pub fn with_waves(mut self, waves: usize, wave_resolutions: u64) -> Self {
         self.waves = waves;
         self.wave_resolutions = wave_resolutions;
+        self
+    }
+
+    /// Record that the engine pages its decode tail through the shared
+    /// block pool: the peak number of blocks in use at once and the
+    /// internal fragmentation measured at that peak. `planned_bytes` is
+    /// then read as prefix peak + tail block demand.
+    pub fn with_paged(mut self, blocks_in_use: u64, fragmentation: f64) -> Self {
+        self.blocks_in_use = blocks_in_use;
+        self.fragmentation = fragmentation;
         self
     }
 

@@ -29,6 +29,7 @@ pub mod cachesim;
 mod levels;
 pub mod ops;
 
+use crate::arena::paged::PagedArena;
 use crate::arena::{Arena, ArenaPool, ParallelArena};
 use crate::graph::{topo_levels, Graph, OpKind, PoolKind, TensorKind};
 use crate::planner::{
@@ -106,6 +107,35 @@ struct WaveState {
     resolutions: u64,
 }
 
+/// State of the paged decode-tail execution mode: the resident arena
+/// hosts only the *static prefix* of the §7 multi-pass plan, and every
+/// dynamic-tail record maps its region onto fixed-size blocks from the
+/// shared [`BlockPool`](crate::arena::paged::BlockPool) for exactly its
+/// usage interval — acquired at its wave boundary, released (and
+/// immediately servable to other executors on the pool) at its death.
+struct PagedState {
+    /// Batch-1 dynamic records of the served graph.
+    dynamic: DynamicRecords,
+    /// Per-record single-lane payload words for tail records (`Some` iff
+    /// `known_at > 0`); resident-prefix records are `None`.
+    tail_words: Vec<Option<usize>>,
+    /// The block mapping. At most one lane's tail stripes are mapped at
+    /// any instant (lanes run sequentially), so the tail's block demand
+    /// is batch-invariant.
+    arena: PagedArena,
+    /// Contiguous gather/scatter scratch, reused across paged steps.
+    scratch: Vec<f32>,
+    /// Pass count of the complete multi-pass plan (for stats parity with
+    /// the resident wave mode).
+    passes: usize,
+    /// Tail block mappings performed so far — the paged analogue of wave
+    /// offset re-resolutions.
+    resolutions: u64,
+    /// Per-sample naive total of the *real* records (the doctored
+    /// resident records zero every tail size).
+    naive1: usize,
+}
+
 /// Graph executor over a planned arena.
 pub struct Executor {
     steps: Vec<Step>,
@@ -136,6 +166,10 @@ pub struct Executor {
     /// sized at the worst-wave multi-pass peak and offsets are re-resolved
     /// through the plan cache at every wave boundary.
     waves: Option<WaveState>,
+    /// Paged decode-tail mode (None = resident serving; mutually
+    /// exclusive with `waves`): the arena hosts only the static prefix,
+    /// tail records live on pooled blocks.
+    paged: Option<PagedState>,
     /// Worker threads for `run`/`run_batch` (1 = sequential).
     threads: usize,
     /// Which kernel family `dispatch` routes hot ops to.
@@ -463,6 +497,7 @@ impl Executor {
             pool,
             batch,
             waves: None,
+            paged: None,
             threads: 1,
             mode: KernelMode::default(),
             level_sets,
@@ -502,36 +537,7 @@ impl Executor {
         seed: u64,
     ) -> Result<Self, String> {
         let records = UsageRecords::from_graph(graph);
-        // The dynamic profile must describe exactly this graph's records —
-        // the cache keys on it, so a drifted profile would be a silent
-        // cross-model cache pollution.
-        if dynamic.len() != records.len() || dynamic.num_ops != records.num_ops {
-            return Err(format!(
-                "dynamic profile describes {} records over {} ops; the graph has {} over {}",
-                dynamic.len(),
-                dynamic.num_ops,
-                records.len(),
-                records.num_ops
-            ));
-        }
-        for (d, r) in dynamic.records.iter().zip(&records.records) {
-            if d.record.first_op != r.first_op
-                || d.record.last_op != r.last_op
-                || d.record.size != r.size
-            {
-                return Err(format!(
-                    "dynamic record {} does not match the graph's usage record",
-                    r.id
-                ));
-            }
-            if d.known_at > 0 && d.known_at >= d.record.first_op {
-                return Err(format!(
-                    "record {} resolves after op {} but is produced at op {}: \
-                     its offset would not exist in time",
-                    r.id, d.known_at, d.record.first_op
-                ));
-            }
-        }
+        validate_dynamic_profile(&records, &dynamic)?;
         // Plan the complete multi-pass plan directly at the requested
         // batch: one planner invocation, one arena sized at that batch's
         // worst-wave peak, no never-served batch-1 plan.
@@ -564,6 +570,87 @@ impl Executor {
         // very first inference's boundaries already have resident prefix
         // plans.
         ex.prewarm_waves()?;
+        Ok(ex)
+    }
+
+    /// Paged decode-tail construction: like [`Self::with_request`] with a
+    /// dynamic profile, but instead of sizing the resident arena at the
+    /// worst-wave peak, the arena hosts only the **static prefix** (the
+    /// `Resolved(0)` wave of the multi-pass plan) and every dynamic-tail
+    /// record maps onto fixed 64-byte-aligned blocks from the service
+    /// pool's shared [`BlockPool`] for exactly its usage interval —
+    /// acquired at its wave boundary, released the moment it dies, so its
+    /// memory is immediately servable to other requests on the pool.
+    /// Paged steps gather their operands into contiguous scratch, run
+    /// the *same* kernels, and scatter back: outputs are bit-identical to
+    /// the resident wave-aware path (and to static execution).
+    ///
+    /// [`BlockPool`]: crate::arena::paged::BlockPool
+    pub fn with_request_paged(
+        graph: &Graph,
+        service: Arc<PlanService>,
+        req: &PlanRequest,
+        dynamic: DynamicRecords,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let base = req.with_dynamic(DynamicMode::Static);
+        let records = UsageRecords::from_graph(graph);
+        validate_dynamic_profile(&records, &dynamic)?;
+        // The complete plan is still consulted — its pass count feeds the
+        // serving stats and its feasibility catches degenerate profiles —
+        // but only the static-prefix plan sizes the resident arena.
+        let full = service
+            .plan_dynamic(&dynamic, &base.with_dynamic(DynamicMode::FullyResolved))
+            .map_err(|e| e.to_string())?;
+        let prefix = service
+            .plan_dynamic(&dynamic, &base.with_dynamic(DynamicMode::Resolved(0)))
+            .map_err(|e| e.to_string())?;
+        // Doctor the resident records: tail records live on blocks, so
+        // they occupy zero resident bytes (any offset is valid for a
+        // zero-byte range — unresolved prefix offsets default to 0).
+        let naive1 = records.naive_total();
+        let tail_words: Vec<Option<usize>> = dynamic
+            .records
+            .iter()
+            .map(|d| (d.known_at > 0).then_some(d.record.size / 4))
+            .collect();
+        let mut doctored = records;
+        for (r, tw) in doctored.records.iter_mut().zip(&tail_words) {
+            if tw.is_some() {
+                r.size = 0;
+            }
+        }
+        let plan = OffsetPlan {
+            offsets: (0..doctored.len())
+                .map(|id| prefix.offset_of(id).unwrap_or(0))
+                .collect(),
+            total: prefix.peak,
+        };
+        let pool = Arc::clone(service.pool());
+        let num_records = doctored.len();
+        let mut ex = Self::build(
+            graph,
+            doctored,
+            &plan,
+            seed,
+            Some(base),
+            Some(service),
+            Arc::clone(&pool),
+            base.batch(),
+        )
+        .map_err(|e| e.to_string())?;
+        // The doctored records zeroed the tail; report the real naive
+        // footprint.
+        ex.naive_total = naive1 * base.batch();
+        ex.paged = Some(PagedState {
+            dynamic,
+            tail_words,
+            arena: PagedArena::new(pool, num_records),
+            scratch: Vec::new(),
+            passes: full.passes,
+            resolutions: 0,
+            naive1,
+        });
         Ok(ex)
     }
 
@@ -680,7 +767,24 @@ impl Executor {
         let plan: Arc<OffsetPlan> = match (&self.service, &self.request) {
             (Some(svc), Some(req)) => {
                 let req = req.with_batch(batch);
-                if let Some(ws) = &mut self.waves {
+                if let Some(ps) = &self.paged {
+                    // Paged mode: the resident arena hosts only the
+                    // static prefix; re-plan that prefix at the new batch
+                    // and keep the tail on blocks (whose per-lane demand
+                    // is batch-invariant).
+                    let mp = svc
+                        .plan_dynamic(
+                            &ps.dynamic,
+                            &req.with_dynamic(DynamicMode::Resolved(0)),
+                        )
+                        .map_err(|e| e.to_string())?;
+                    Arc::new(OffsetPlan {
+                        offsets: (0..self.base_records.len())
+                            .map(|id| mp.offset_of(id).unwrap_or(0))
+                            .collect(),
+                        total: mp.peak,
+                    })
+                } else if let Some(ws) = &mut self.waves {
                     // Wave-aware mode: the new batch's arena is sized at
                     // the (batch-scaled) worst-wave peak, and the resident
                     // full plan swaps with it so wave re-resolutions keep
@@ -732,6 +836,13 @@ impl Executor {
         let span_of = |r: usize| self.arena.record_span(r);
         self.schedule =
             levels::build_schedule(&self.steps, &self.level_sets, self.base_records.len(), &span_of);
+        if let Some(ps) = &mut self.paged {
+            // The doctored records zero the tail; the naive total must
+            // come from the real per-sample records. Between batches no
+            // tail mapping should survive — sweep defensively.
+            self.naive_total = ps.naive1 * batch;
+            ps.arena.release_all();
+        }
         // Wave-aware mode: pre-resolve the new batch's wave envelope so
         // the post-swap hot path stays planner-free.
         self.prewarm_waves()?;
@@ -768,7 +879,7 @@ impl Executor {
         if n > self.batch {
             self.ensure_batch(n)?;
         }
-        if self.threads > 1 && n > 1 && self.waves.is_none() {
+        if self.threads > 1 && n > 1 && self.waves.is_none() && self.paged.is_none() {
             return self.run_batch_lockstep(input, n, in_elems, out_elems);
         }
         let mut out = Vec::with_capacity(n * out_elems);
@@ -873,10 +984,15 @@ impl Executor {
         }
         if self.threads > 1
             && self.waves.is_none()
+            && self.paged.is_none()
             && self.schedule.safe
             && self.schedule.width > 1
         {
             self.run_lane_scheduled(lane);
+        } else if self.paged.is_some() {
+            for si in 0..self.steps.len() {
+                self.exec_step_paged(si, lane);
+            }
         } else {
             for si in 0..self.steps.len() {
                 self.exec_step(si, lane);
@@ -915,15 +1031,32 @@ impl Executor {
         );
     }
 
-    /// Planner passes of the resident §7 multi-pass plan (0 = static mode).
+    /// Planner passes of the resident §7 multi-pass plan (0 = static
+    /// mode; in paged mode, the pass count of the complete plan the
+    /// prefix was frozen from).
     pub fn wave_passes(&self) -> usize {
-        self.waves.as_ref().map_or(0, |w| w.full.passes)
+        self.waves
+            .as_ref()
+            .map(|w| w.full.passes)
+            .or_else(|| self.paged.as_ref().map(|p| p.passes))
+            .unwrap_or(0)
     }
 
     /// Wave-boundary offset re-resolutions performed so far (0 = static
-    /// mode); each was a decode-step plan-cache lookup.
+    /// mode); each was a decode-step plan-cache lookup. In paged mode:
+    /// tail block mappings performed at wave boundaries.
     pub fn wave_resolutions(&self) -> u64 {
-        self.waves.as_ref().map_or(0, |w| w.resolutions)
+        self.waves
+            .as_ref()
+            .map(|w| w.resolutions)
+            .or_else(|| self.paged.as_ref().map(|p| p.resolutions))
+            .unwrap_or(0)
+    }
+
+    /// True when this executor serves its decode tail from pooled blocks
+    /// ([`Self::with_request_paged`]).
+    pub fn is_paged(&self) -> bool {
+        self.paged.is_some()
     }
 
     /// Run one lane through the level schedule: conflict-free groups of
@@ -980,6 +1113,141 @@ impl Executor {
 
     fn exec_step(&mut self, si: usize, lane: usize) {
         self.exec_step_inner(si, lane, self.poison_dead)
+    }
+
+    /// One step of the paged sequential loop. Steps touching no tail
+    /// record run the ordinary resident path; a step touching the tail
+    /// maps its output's blocks (first touch — by profile validation the
+    /// record's wave boundary has already passed), gathers paged operands
+    /// into contiguous scratch, dispatches the *same* kernel the resident
+    /// path uses (bit-identity), scatters a paged output back, and
+    /// releases every record dying at this step — tail blocks return to
+    /// the shared pool immediately.
+    fn exec_step_paged(&mut self, si: usize, lane: usize) {
+        let poison = self.poison_dead;
+        let mode = self.mode;
+        let touches_tail = {
+            let ps = self.paged.as_ref().expect("paged step outside paged mode");
+            let step = &self.steps[si];
+            let is_tail = |l: &Loc| matches!(l, Loc::Arena(r) if ps.tail_words[*r].is_some());
+            step.ins.iter().any(is_tail) || is_tail(&step.out)
+        };
+        if !touches_tail {
+            self.exec_step(si, lane);
+            return;
+        }
+        let Executor { steps, arena, weights, io, paged, .. } = self;
+        let ps = paged.as_mut().expect("paged step outside paged mode");
+        let PagedState { tail_words, arena: parena, scratch, resolutions, .. } = ps;
+        let step = &steps[si];
+        let tail_of = |l: &Loc| match l {
+            Loc::Arena(r) => tail_words[*r].map(|w| (*r, w)),
+            _ => None,
+        };
+
+        // Map the output's blocks at its producing step: the record's
+        // wave boundary has passed (`known_at < first_op`), so this is
+        // the "tail tensors allocate incrementally at wave boundaries"
+        // step of the paged protocol.
+        if let Some((orec, w)) = tail_of(&step.out) {
+            if !parena.is_mapped(orec) {
+                parena.map(orec, w);
+                *resolutions += 1;
+            }
+        }
+
+        // Carve one contiguous scratch run per paged operand:
+        // [out | in …], pairwise disjoint by construction.
+        let out_words = tail_of(&step.out).map_or(0, |(_, w)| w);
+        let in_words: usize = step.ins.iter().filter_map(|l| tail_of(l).map(|(_, w)| w)).sum();
+        if scratch.len() < out_words + in_words {
+            scratch.resize(out_words + in_words, 0.0);
+        }
+        let (out_scr, mut rest) = scratch.split_at_mut(out_words);
+        let mut gathered: Vec<&[f32]> = Vec::new();
+        for l in &step.ins {
+            if let Some((r, w)) = tail_of(l) {
+                let (chunk, r2) = rest.split_at_mut(w);
+                parena.gather(r, chunk);
+                gathered.push(&*chunk);
+                rest = r2;
+            }
+        }
+        let mut git = gathered.into_iter();
+
+        match step.out {
+            Loc::Arena(orec) if tail_words[orec].is_some() => {
+                // Paged output: every other operand is read-only.
+                let ins: Vec<&[f32]> = step
+                    .ins
+                    .iter()
+                    .map(|l| match l {
+                        Loc::Arena(r) if tail_words[*r].is_some() => git.next().unwrap(),
+                        Loc::Arena(r) => arena.tensor_lane(*r, lane),
+                        Loc::Io(i) => io[*i].as_slice(),
+                        Loc::Weight(w) => weights[*w].as_slice(),
+                    })
+                    .collect();
+                dispatch(&step.instr, &ins, out_scr, mode);
+                parena.scatter(orec, out_scr);
+            }
+            Loc::Arena(orec) => {
+                // Resident output with paged inputs: split the resident
+                // operands as usual, weave the gathered stripes back in
+                // op-input order.
+                let resident_in: Vec<usize> = step
+                    .ins
+                    .iter()
+                    .filter_map(|l| match l {
+                        Loc::Arena(r) if tail_words[*r].is_none() => Some(*r),
+                        _ => None,
+                    })
+                    .collect();
+                let (out, resident_slices) = arena.split_io_lane(orec, &resident_in, lane);
+                let mut rit = resident_slices.into_iter();
+                let ins: Vec<&[f32]> = step
+                    .ins
+                    .iter()
+                    .map(|l| match l {
+                        Loc::Arena(r) if tail_words[*r].is_some() => git.next().unwrap(),
+                        Loc::Arena(_) => rit.next().unwrap(),
+                        Loc::Io(i) => io[*i].as_slice(),
+                        Loc::Weight(w) => weights[*w].as_slice(),
+                    })
+                    .collect();
+                dispatch(&step.instr, &ins, out, mode);
+            }
+            Loc::Io(oi) => {
+                let mut out = std::mem::take(&mut io[oi]);
+                {
+                    let ins: Vec<&[f32]> = step
+                        .ins
+                        .iter()
+                        .map(|l| match l {
+                            Loc::Arena(r) if tail_words[*r].is_some() => git.next().unwrap(),
+                            Loc::Arena(r) => arena.tensor_lane(*r, lane),
+                            Loc::Io(i) => io[*i].as_slice(),
+                            Loc::Weight(w) => weights[*w].as_slice(),
+                        })
+                        .collect();
+                    dispatch(&step.instr, &ins, &mut out, mode);
+                }
+                io[oi] = out;
+            }
+            Loc::Weight(_) => unreachable!("op writes to a weight"),
+        }
+
+        // Deaths: a tail record's blocks return to the shared pool at
+        // once; resident records poison as usual (a tail record's last op
+        // always consumes it, so tail deaths only ever occur here).
+        for r in steps[si].dies.clone() {
+            if tail_words[r].is_some() {
+                parena.unmap(r);
+            } else if poison {
+                arena.poison_lane(r, lane);
+            }
+        }
+        debug_assert!(arena.guards_intact(), "arena guard overwritten");
     }
 
     fn exec_step_inner(&mut self, si: usize, lane: usize, poison: bool) {
@@ -1048,6 +1316,44 @@ impl Drop for Executor {
     fn drop(&mut self) {
         std::mem::replace(&mut self.arena, Arena::empty()).recycle(&self.pool);
     }
+}
+
+/// Check a dynamic profile against the graph's own records: the cache
+/// keys on the profile, so a drifted one would be a silent cross-model
+/// cache pollution; and every dynamic record must resolve before its
+/// producer runs.
+fn validate_dynamic_profile(
+    records: &UsageRecords,
+    dynamic: &DynamicRecords,
+) -> Result<(), String> {
+    if dynamic.len() != records.len() || dynamic.num_ops != records.num_ops {
+        return Err(format!(
+            "dynamic profile describes {} records over {} ops; the graph has {} over {}",
+            dynamic.len(),
+            dynamic.num_ops,
+            records.len(),
+            records.num_ops
+        ));
+    }
+    for (d, r) in dynamic.records.iter().zip(&records.records) {
+        if d.record.first_op != r.first_op
+            || d.record.last_op != r.last_op
+            || d.record.size != r.size
+        {
+            return Err(format!(
+                "dynamic record {} does not match the graph's usage record",
+                r.id
+            ));
+        }
+        if d.known_at > 0 && d.known_at >= d.record.first_op {
+            return Err(format!(
+                "record {} resolves after op {} but is produced at op {}: \
+                 its offset would not exist in time",
+                r.id, d.known_at, d.record.first_op
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// Execute one step through a [`ParallelArena`] view — the worker-thread
@@ -1571,5 +1877,116 @@ mod tests {
         // Levels are a graph property: the rebuilt (batch-3) schedule keeps
         // the same depth even though every span moved.
         assert_eq!(ex.levels(), depth);
+    }
+
+    #[test]
+    fn paged_execution_matches_static_numbers_below_the_worst_wave_peak() {
+        // decode_tail from op 2 puts tensors big enough in the tail that
+        // worst-wave preallocation strictly exceeds the static prefix —
+        // exactly the regime paging targets. Outputs must not move.
+        let g = tiny_net();
+        let x = input_for(&g, 29);
+        let records = UsageRecords::from_graph(&g);
+        let dynamic = DynamicRecords::decode_tail(&records, 2);
+        assert!(dynamic.num_dynamic() > 0, "the tail must actually be dynamic");
+        let svc = PlanService::shared();
+        let mut paged = Executor::with_request_paged(
+            &g,
+            Arc::clone(&svc),
+            &PlanRequest::new(),
+            dynamic.clone(),
+            7,
+        )
+        .unwrap();
+        assert!(paged.is_paged());
+        paged.set_poison_dead(true);
+        let mut static_ex = Executor::new(&g, &GreedyBySize, 7).unwrap();
+        assert_eq!(paged.run(&[&x]), static_ex.run(&[&x]), "paging changed the numbers");
+        // The resident arena hosts only the static prefix — strictly
+        // below the worst-wave peak the resident dynamic mode allocates.
+        let req = PlanRequest::new();
+        let full = svc
+            .plan_dynamic(&dynamic, &req.with_dynamic(DynamicMode::FullyResolved))
+            .unwrap();
+        let prefix = svc
+            .plan_dynamic(&dynamic, &req.with_dynamic(DynamicMode::Resolved(0)))
+            .unwrap();
+        assert_eq!(paged.arena_bytes(), prefix.peak);
+        assert!(
+            paged.arena_bytes() < full.peak,
+            "prefix arena ({}) must sit below the worst-wave peak ({})",
+            paged.arena_bytes(),
+            full.peak
+        );
+        // Every tail tensor mapped once and returned its blocks at death.
+        assert_eq!(paged.wave_resolutions(), dynamic.num_dynamic() as u64);
+        assert_eq!(svc.pool().blocks().blocks_in_use(), 0, "blocks leaked past the run");
+        assert!(svc.pool().blocks().peak_blocks() > 0);
+        assert!(paged.wave_passes() >= 2);
+        // The doctored resident records must not distort the naive total.
+        assert_eq!(paged.naive_bytes(), records.naive_total());
+    }
+
+    #[test]
+    fn paged_run_batch_matches_resident_dynamic_and_stays_sequential() {
+        let g = tiny_net();
+        let n_in = g.tensor(g.inputs[0]).num_elements();
+        let n = 4usize;
+        let mut rng = SplitMix64::new(51);
+        let mut flat = vec![0f32; n * n_in];
+        rng.fill_f32(&mut flat, 1.0);
+        let records = UsageRecords::from_graph(&g);
+        let dynamic = DynamicRecords::decode_tail(&records, 2);
+        let svc = PlanService::shared();
+        let mut resident = Executor::with_request(
+            &g,
+            Arc::clone(&svc),
+            &PlanRequest::new(),
+            Some(dynamic.clone()),
+            7,
+        )
+        .unwrap();
+        let mut paged = Executor::with_request_paged(
+            &g,
+            Arc::clone(&svc),
+            &PlanRequest::new(),
+            dynamic,
+            7,
+        )
+        .unwrap();
+        paged.set_poison_dead(true);
+        let a = resident.run_batch(&flat, n).unwrap();
+        let b = paged.run_batch(&flat, n).unwrap();
+        assert_eq!(a, b, "paged batch diverged from the resident dynamic path");
+        assert_eq!(paged.batch(), n);
+        assert!(paged.arena_bytes() < resident.arena_bytes());
+        assert_eq!(paged.naive_bytes(), resident.naive_bytes());
+        // Threads must not change the numbers: paged execution (like wave
+        // mode) is inherently sequential and falls back.
+        paged.set_threads(4);
+        assert_eq!(paged.run_batch(&flat, n).unwrap(), a);
+        assert_eq!(paged.ops_parallel(), 0, "paged mode must never dispatch workers");
+        assert_eq!(svc.pool().blocks().blocks_in_use(), 0, "blocks leaked past the batch");
+    }
+
+    #[test]
+    fn paged_profile_must_match_the_graph() {
+        let g = tiny_net();
+        let records = UsageRecords::from_graph(&g);
+        let svc = PlanService::shared();
+        let short = DynamicRecords::new(Vec::new(), records.num_ops);
+        assert!(Executor::with_request_paged(
+            &g,
+            Arc::clone(&svc),
+            &PlanRequest::new(),
+            short,
+            7
+        )
+        .is_err());
+        let mut bad = DynamicRecords::decode_tail(&records, 1);
+        if let Some(d) = bad.records.iter_mut().find(|d| d.record.first_op > 0) {
+            d.known_at = d.record.first_op;
+        }
+        assert!(Executor::with_request_paged(&g, svc, &PlanRequest::new(), bad, 7).is_err());
     }
 }

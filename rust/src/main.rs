@@ -12,7 +12,7 @@
 //! tensorarena serve [--model M] [--strategy S] [--order O] [--requests N]
 //!                   [--max-batch B] [--wait-ms W] [--artifacts DIR]
 //!                   [--mem-budget BYTES] [--plan-dir DIR]
-//!                   [--threads T] [--dynamic [FRAC]]         # E2E serving
+//!                   [--threads T] [--dynamic [FRAC]] [--paged] # E2E serving
 //! tensorarena order-ablation [model] [--seed S] [--trials N] # §7.1 order table
 //! tensorarena dynamic-ablation [model] [--frac F1,F2,...]    # §7 overhead table
 //! tensorarena models                                # list zoo models
@@ -43,6 +43,14 @@
 //! prints the §7 overhead-vs-oracle table (multi-pass arena vs the
 //! size-omniscient oracle) per model and dynamic fraction. Dynamic plans
 //! are cached in memory only — `--plan-dir` persists static plans.
+//!
+//! `--paged` (implies `--dynamic` at its default fraction when not given)
+//! serves the decode tail from the shared block pool instead of the
+//! worst-wave preallocation: the resident arena holds only the static
+//! prefix, tail tensors map into fixed-size blocks at the wave boundary
+//! that materializes them and release the step they die, and budget
+//! admission charges prefix peak + tail block demand. Outputs stay
+//! bit-identical to the resident path.
 //!
 //! Strategy names come from `planner::registry` — the single list the
 //! tables, the plan cache, and this CLI all share.
@@ -550,10 +558,15 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut mem_budget: Option<usize> = None;
     let mut plan_dir: Option<String> = None;
     let mut dynamic: Option<f64> = None;
+    let mut paged = false;
     let mut threads = 1usize;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            "--paged" => {
+                paged = true;
+                i += 1;
+            }
             "--dynamic" => {
                 // Optional fraction operand: `--dynamic 0.25`. A following
                 // flag (or nothing) means the default tail fraction.
@@ -657,6 +670,12 @@ fn cmd_serve(args: &[String]) -> i32 {
                      wave-aware serving applies to the pure-Rust executor path only"
                 );
             }
+            if paged {
+                eprintln!(
+                    "--paged ignored: the PJRT AOT path compiles static shapes; \
+                     paged decode tails apply to the pure-Rust executor path only"
+                );
+            }
             if threads > 1 {
                 eprintln!(
                     "--threads ignored: the PJRT AOT path runs the compiled executable; \
@@ -689,6 +708,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         mem_budget,
         plan_dir.as_deref(),
         dynamic,
+        paged,
         threads,
     ) {
         Ok(()) => 0,
@@ -712,7 +732,10 @@ fn cmd_serve(args: &[String]) -> i32 {
 /// resolve under the worst-wave multi-pass peak, and decode-step re-plans
 /// are amortized through the resolved-prefix plan cache. With `threads > 1`
 /// the engine's executor runs batch lanes and independent ops on a worker
-/// pool (bit-identical outputs — see `docs/ARCHITECTURE.md`).
+/// pool (bit-identical outputs — see `docs/ARCHITECTURE.md`). With `paged`
+/// (which implies `dynamic` at its default fraction), the decode tail is
+/// served from the shared block pool: only the static prefix stays
+/// resident, and admission charges prefix peak + tail block demand.
 #[allow(clippy::too_many_arguments)]
 fn serve_pure(
     model: &str,
@@ -724,9 +747,15 @@ fn serve_pure(
     mem_budget: Option<usize>,
     plan_dir: Option<&str>,
     dynamic: Option<f64>,
+    paged: bool,
     threads: usize,
 ) -> Result<(), String> {
+    use tensorarena::arena::paged::BLOCK_WORDS;
     use tensorarena::coordinator::engine::ExecutorEngine;
+
+    // Paged serving is a mode of wave-aware serving: without an explicit
+    // fraction, the default decode tail pages.
+    let dynamic = if paged { dynamic.or(Some(0.5)) } else { dynamic };
 
     let Some(g) = load_model(model) else {
         return Err(format!("unknown model '{model}'"));
@@ -787,6 +816,19 @@ fn serve_pure(
             mp.peak as f64 / 1024.0,
             overhead,
         );
+        if paged {
+            let prefix = service
+                .plan_dynamic(dyn_recs, &req.with_dynamic(DynamicMode::Resolved(0)))
+                .map_err(|e| e.to_string())?;
+            let demand = dyn_recs.tail_block_demand(BLOCK_WORDS);
+            println!(
+                "paged: resident prefix {:.1} KiB + {demand} tail block(s) of {} B from the \
+                 shared pool (vs {:.1} KiB worst-wave preallocation)",
+                prefix.peak as f64 / 1024.0,
+                BLOCK_WORDS * 4,
+                mp.peak as f64 / 1024.0,
+            );
+        }
         if plan_dir.is_some() {
             println!(
                 "note: dynamic plans are cached in memory only; --plan-dir persists static plans"
@@ -803,6 +845,27 @@ fn serve_pure(
     }
     if let Some(budget) = mem_budget {
         let cap = match &decode {
+            // Paged admission mirrors the engine's walk: the footprint is
+            // prefix peak (scales with batch) plus a flat tail block term.
+            Some((_, dyn_recs)) if paged => {
+                let tail = dyn_recs.tail_block_demand(BLOCK_WORDS) * BLOCK_WORDS * 4;
+                let mut best = 0;
+                for b in 1..=max_batch.max(1) {
+                    let p = service
+                        .plan_dynamic(
+                            dyn_recs,
+                            &req.with_batch(b).with_dynamic(DynamicMode::Resolved(0)),
+                        )
+                        .map_err(|e| e.to_string())?
+                        .peak;
+                    if p + tail <= budget {
+                        best = b;
+                    } else {
+                        break;
+                    }
+                }
+                best
+            }
             Some((_, dyn_recs)) => service
                 .max_servable_batch_dynamic(dyn_recs, &req, budget)
                 .map_err(|e| e.to_string())?,
@@ -828,6 +891,9 @@ fn serve_pure(
             move || {
                 let g = models::by_name(&model_name).expect("model exists");
                 let engine = match decode_from {
+                    Some(from) if paged => {
+                        ExecutorEngine::for_request_paged(&g, service, &req, from, 42)
+                    }
                     Some(from) => {
                         ExecutorEngine::for_request_dynamic(&g, service, &req, from, 42)
                     }
@@ -895,6 +961,18 @@ fn serve_pure(
     // the worst-wave multi-pass peak.
     let at_max = req.with_batch(max_batch.max(1));
     let (planned_max, waves) = match &decode {
+        // Paged serving hosts the prefix plan plus the tail's block
+        // footprint — what the box actually keeps resident.
+        Some((_, dyn_recs)) if paged => {
+            let prefix = service
+                .plan_dynamic(dyn_recs, &at_max.with_dynamic(DynamicMode::Resolved(0)))
+                .map_err(|e| e.to_string())?;
+            let full = service
+                .plan_dynamic(dyn_recs, &at_max.with_dynamic(DynamicMode::FullyResolved))
+                .map_err(|e| e.to_string())?;
+            let tail = dyn_recs.tail_block_demand(BLOCK_WORDS) * BLOCK_WORDS * 4;
+            (prefix.peak + tail, full.passes)
+        }
         Some((_, dyn_recs)) => {
             let mp = service
                 .plan_dynamic(dyn_recs, &at_max.with_dynamic(DynamicMode::FullyResolved))
@@ -913,6 +991,14 @@ fn serve_pure(
         st,
     );
     let stats = if waves > 0 { stats.with_waves(waves, 0) } else { stats };
+    // The paged segment reports the shared block pool's high-water mark —
+    // live counters from the pool the worker's engine paged through.
+    let stats = if paged {
+        let blocks = service.pool().blocks();
+        stats.with_paged(blocks.peak_blocks() as u64, blocks.fragmentation())
+    } else {
+        stats
+    };
     // The order segment is reported only when an order was actually
     // applied — plain serving keeps the PR-2 stats line unchanged.
     let stats = if order.is_natural() {

@@ -156,6 +156,32 @@ impl DynamicRecords {
         self.records.iter().filter(|d| d.known_at > 0).count()
     }
 
+    /// Peak simultaneous block demand of the decode tail under paged
+    /// execution with `block_words`-word blocks: the maximum over ops of
+    /// the summed block counts (`ceil(size / 4 / block_words)`) of every
+    /// *dynamic* record (`known_at > 0`) live at that op. Under paging a
+    /// tail record holds blocks exactly over its usage interval — mapped
+    /// at its producing wave boundary, freed at its last use — so this,
+    /// not the worst-wave arena peak, is what budget admission charges
+    /// the tail. Computed on these records' sizes as-is; per-lane paged
+    /// execution maps one lane's stripes at a time, so per-sample records
+    /// give the demand for any batch.
+    pub fn tail_block_demand(&self, block_words: usize) -> usize {
+        assert!(block_words > 0, "block size must be positive");
+        (0..self.num_ops)
+            .map(|op| {
+                self.records
+                    .iter()
+                    .filter(|d| {
+                        d.known_at > 0 && d.record.first_op <= op && op <= d.record.last_op
+                    })
+                    .map(|d| (d.record.size / 4).div_ceil(block_words))
+                    .sum()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Number of records.
     pub fn len(&self) -> usize {
         self.records.len()
@@ -391,6 +417,28 @@ mod tests {
         assert_eq!(MultiPassPlanner.overhead_vs_oracle(&zero), 1.0);
         let empty = DynamicRecords::new(Vec::new(), 0);
         assert_eq!(MultiPassPlanner.overhead_vs_oracle(&empty), 1.0);
+    }
+
+    #[test]
+    fn tail_block_demand_is_the_peak_over_live_dynamic_records() {
+        // 64-byte blocks = 16 words. Sizes in bytes: 64 B = 1 block,
+        // 256 B = 4 blocks, 100 B = 2 blocks (ceil).
+        let dynamic = dyn_set(
+            &[
+                (0, 5, 4096, 0), // static: never charged to the tail
+                (2, 3, 64, 1),   // 1 block, live at ops 2–3
+                (3, 4, 256, 2),  // 4 blocks, live at ops 3–4
+                (5, 6, 100, 4),  // 2 blocks, live at ops 5–6
+            ],
+            7,
+        );
+        // Peak is op 3: records 1 and 2 overlap (1 + 4 blocks).
+        assert_eq!(dynamic.tail_block_demand(16), 5);
+        // Bigger blocks: every region rounds to one block; peak is 2.
+        assert_eq!(dynamic.tail_block_demand(4096), 2);
+        // All-static sets have no tail demand.
+        let static_set = dyn_set(&[(0, 2, 128, 0), (1, 3, 128, 0)], 4);
+        assert_eq!(static_set.tail_block_demand(16), 0);
     }
 
     #[test]

@@ -88,6 +88,9 @@ pub struct PlanServiceStats {
     pub dynamic_hits: u64,
     /// Dynamic plan-cache misses (multi-pass planner invocations).
     pub dynamic_misses: u64,
+    /// Arena buffers dropped at release because their size class was at
+    /// the pool's retention cap (pool churn, invisible before this).
+    pub pool_dropped: u64,
 }
 
 impl PlanServiceStats {
@@ -375,6 +378,7 @@ impl PlanService {
             warm_skipped: self.cache.warm_skipped(),
             dynamic_hits: self.cache.dynamic_hits(),
             dynamic_misses: self.cache.dynamic_misses(),
+            pool_dropped: self.pool.dropped(),
         }
     }
 }

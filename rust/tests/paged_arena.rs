@@ -1,0 +1,248 @@
+//! Tier-1 acceptance tests for paged decode-tail arenas: exact size-class
+//! boundary behaviour of the shared [`ArenaPool`], block-pool round-trip
+//! properties under randomized churn, and — the headline invariant — bit
+//! identity of paged execution against the resident wave-aware executor
+//! over randomized decode-tail workloads, on the sequential and
+//! `--threads` paths alike.
+//!
+//! [`ArenaPool`]: tensorarena::arena::ArenaPool
+
+use std::sync::Arc;
+use tensorarena::arena::paged::{BLOCK_WORDS, PagedArena};
+use tensorarena::arena::ArenaPool;
+use tensorarena::exec::Executor;
+use tensorarena::models;
+use tensorarena::planner::{DynamicRecords, PlanRequest, PlanService};
+use tensorarena::records::UsageRecords;
+use tensorarena::rng::SplitMix64;
+
+#[test]
+fn pool_class_boundaries_are_exact() {
+    let pool = ArenaPool::new();
+    // 1024 and 1025 words share class 10, but a shelved 1024-word buffer
+    // cannot cover the larger request — the pool must allocate fresh,
+    // never hand back a short buffer.
+    pool.release(vec![0f32; 1024]);
+    let over = pool.acquire(1025);
+    assert_eq!(over.len(), 1025);
+    assert_eq!((pool.allocated(), pool.reused()), (1, 0));
+    // The exact length is served from the shelf.
+    let exact = pool.acquire(1024);
+    assert_eq!(exact.len(), 1024);
+    assert_eq!((pool.allocated(), pool.reused()), (1, 1));
+    // 2047 words still sit in class 10, so a 1024-word request may take
+    // that buffer...
+    pool.release(vec![0f32; 2047]);
+    assert_eq!(pool.acquire(1024).len(), 2047);
+    // ...and 2048 starts class 11, one class up, which acquire probes too.
+    pool.release(vec![0f32; 2048]);
+    assert_eq!(pool.acquire(1024).len(), 2048, "acquire must probe one class up");
+    // Two classes up is out of reach: a shelved 4096-word buffer (class
+    // 12) must not serve a 512-word request (class 9).
+    pool.release(vec![0f32; 4096]);
+    assert_eq!(pool.acquire(512).len(), 512, "probing must stop one class above");
+    assert_eq!((pool.allocated(), pool.reused()), (2, 3));
+}
+
+#[test]
+fn randomized_pool_churn_covers_zeroes_and_conserves_buffers() {
+    // Random acquire/release interleavings: every handed-out buffer covers
+    // the request with its payload zeroed, and the counters conserve flow
+    // (acquires split into reuses + fresh allocations; releases split into
+    // shelved-now + reused-later + dropped-at-cap).
+    for seed in 0..8u64 {
+        let pool = ArenaPool::new();
+        let mut rng = SplitMix64::new(0xBADB10C + seed);
+        let mut held: Vec<Vec<f32>> = Vec::new();
+        let mut acquires = 0u64;
+        let mut releases = 0u64;
+        for _ in 0..300 {
+            if held.is_empty() || rng.next_below(2) == 0 {
+                let words = rng.next_range(1, 6000);
+                let mut buf = pool.acquire(words);
+                assert!(buf.len() >= words, "seed {seed}: asked {words}, got {}", buf.len());
+                assert!(
+                    buf[..words].iter().all(|&v| v == 0.0),
+                    "seed {seed}: dirty payload for {words}-word request"
+                );
+                // Dirty the buffer so the zeroing assertion above is
+                // meaningful when this one comes back around.
+                buf.fill(f32::NAN);
+                held.push(buf);
+                acquires += 1;
+            } else {
+                let i = rng.next_below(held.len());
+                pool.release(held.swap_remove(i));
+                releases += 1;
+            }
+        }
+        assert_eq!(pool.reused() + pool.allocated(), acquires, "seed {seed}: acquire flow");
+        // Every reuse pops one shelf entry, and every shelf entry comes
+        // from a release (the pool starts empty): each release is dropped
+        // at the cap, still shelved, or was consumed by a later reuse.
+        assert_eq!(
+            pool.idle_buffers() as u64 + pool.reused() + pool.dropped(),
+            releases,
+            "seed {seed}: release flow"
+        );
+    }
+}
+
+#[test]
+fn paged_arenas_share_blocks_through_one_pool() {
+    // The coordinator's normal state: several executors on one ArenaPool.
+    // Blocks freed by one arena's dying tail tensor are immediately
+    // servable to another arena on the same pool.
+    let pool = Arc::new(ArenaPool::new());
+    let mut a = PagedArena::new(Arc::clone(&pool), 2);
+    let mut b = PagedArena::new(Arc::clone(&pool), 2);
+    a.map(0, 3 * BLOCK_WORDS);
+    assert_eq!(pool.blocks().blocks_in_use(), 3);
+    a.unmap(0);
+    b.map(1, 3 * BLOCK_WORDS);
+    assert_eq!(pool.blocks().reused(), 3, "freed blocks must recycle across arenas");
+    assert_eq!(pool.blocks().allocated(), 3);
+    b.unmap(1);
+    assert_eq!(pool.blocks().blocks_in_use(), 0);
+    // Whole-block regions at the peak leave no internal fragmentation.
+    assert_eq!(pool.blocks().fragmentation(), 0.0);
+}
+
+#[test]
+fn randomized_block_regions_round_trip_cleanly() {
+    let pool = ArenaPool::new();
+    let blocks = pool.blocks();
+    let mut rng = SplitMix64::new(0x9A6ED);
+    let mut held: Vec<(Vec<Vec<f32>>, usize)> = Vec::new();
+    for _ in 0..200 {
+        if held.is_empty() || rng.next_below(2) == 0 {
+            let words = rng.next_range(1, 5 * BLOCK_WORDS);
+            let region = blocks.acquire_region(words);
+            assert_eq!(region.len(), words.div_ceil(BLOCK_WORDS));
+            assert!(region.iter().all(|b| b.len() == BLOCK_WORDS));
+            held.push((region, words));
+        } else {
+            let i = rng.next_below(held.len());
+            let (region, words) = held.swap_remove(i);
+            blocks.release_region(region, words);
+        }
+    }
+    let outstanding: usize = held.iter().map(|(r, _)| r.len()).sum();
+    assert_eq!(blocks.blocks_in_use(), outstanding, "gauge must track live regions exactly");
+    for (region, words) in held {
+        blocks.release_region(region, words);
+    }
+    assert_eq!(blocks.blocks_in_use(), 0);
+    assert!(blocks.reused() > 0, "churn must recycle blocks through the freelist");
+    let frag = blocks.fragmentation();
+    assert!((0.0..1.0).contains(&frag), "fragmentation {frag} out of [0, 1)");
+}
+
+/// Splits of `g` whose decode tail actually holds dynamic records.
+fn dynamic_splits(g: &tensorarena::graph::Graph, recs: &UsageRecords) -> Vec<usize> {
+    (2..g.num_ops())
+        .filter(|&f| DynamicRecords::decode_tail(recs, f).num_dynamic() > 0)
+        .collect()
+}
+
+#[test]
+fn paged_execution_is_bit_identical_to_resident_over_random_decode_tails() {
+    let g = models::blazeface();
+    let in_elems = g.tensor(g.inputs[0]).num_elements();
+    let recs = UsageRecords::from_graph(&g);
+    let candidates = dynamic_splits(&g, &recs);
+    assert!(!candidates.is_empty(), "blazeface must offer non-trivial decode splits");
+    let mut rng = SplitMix64::new(0xDEC0DE);
+    for trial in 0..4 {
+        let from = candidates[rng.next_below(candidates.len())];
+        let d = DynamicRecords::decode_tail(&recs, from);
+        let batch = rng.next_range(1, 4);
+        let req = PlanRequest::new();
+        let mut resident =
+            Executor::with_request(&g, PlanService::shared(), &req, Some(d.clone()), 7).unwrap();
+        let svc = PlanService::shared();
+        let mut paged = Executor::with_request_paged(&g, Arc::clone(&svc), &req, d, 7).unwrap();
+        assert!(paged.is_paged());
+        let mut input = vec![0f32; batch * in_elems];
+        rng.fill_f32(&mut input, 1.0);
+        let want = resident.run_batch(&input, batch).unwrap();
+        let got = paged.run_batch(&input, batch).unwrap();
+        assert_eq!(want, got, "trial {trial}: paged diverged (from {from}, batch {batch})");
+        // The paged executor's resident arena hosts only the static
+        // prefix — never more than the worst-wave resident arena.
+        assert!(
+            paged.arena_bytes() <= resident.arena_bytes(),
+            "trial {trial}: paged arena {} > resident {}",
+            paged.arena_bytes(),
+            resident.arena_bytes()
+        );
+        // Steady state: every tail block went back to the shared pool.
+        assert_eq!(
+            svc.pool().blocks().blocks_in_use(),
+            0,
+            "trial {trial}: leaked blocks after run (from {from})"
+        );
+    }
+}
+
+#[test]
+fn threaded_paged_execution_matches_sequential_paged_and_resident() {
+    let g = models::blazeface();
+    let in_elems = g.tensor(g.inputs[0]).num_elements();
+    let from = g.num_ops() / 2;
+    let d = DynamicRecords::decode_tail(&UsageRecords::from_graph(&g), from);
+    assert!(d.num_dynamic() > 0);
+    let req = PlanRequest::new();
+    let mut resident =
+        Executor::with_request(&g, PlanService::shared(), &req, Some(d.clone()), 11).unwrap();
+    let svc = PlanService::shared();
+    let mut paged = Executor::with_request_paged(&g, Arc::clone(&svc), &req, d, 11).unwrap();
+    paged.set_threads(4);
+    assert_eq!(paged.threads(), 4);
+    let mut rng = SplitMix64::new(5);
+    for round in 0..2 {
+        for batch in [1usize, 3] {
+            let mut input = vec![0f32; batch * in_elems];
+            rng.fill_f32(&mut input, 1.0);
+            let want = resident.run_batch(&input, batch).unwrap();
+            let got = paged.run_batch(&input, batch).unwrap();
+            assert_eq!(want, got, "round {round} batch {batch}: threaded paged diverged");
+        }
+    }
+    assert_eq!(svc.pool().blocks().blocks_in_use(), 0, "leaked blocks after threaded runs");
+    assert!(svc.pool().blocks().reused() > 0, "later rounds must recycle tail blocks");
+}
+
+#[test]
+#[ignore = "tier-2: broad randomized identity sweep across zoo models (slow)"]
+fn paged_identity_sweep_across_zoo_models() {
+    for name in ["blazeface", "mobilenet_v1"] {
+        let g = models::by_name(name).unwrap();
+        let in_elems = g.tensor(g.inputs[0]).num_elements();
+        let recs = UsageRecords::from_graph(&g);
+        let candidates = dynamic_splits(&g, &recs);
+        assert!(!candidates.is_empty(), "{name}: no dynamic splits");
+        let mut rng = SplitMix64::new(0xC0FFEE);
+        for trial in 0..3 {
+            let from = candidates[rng.next_below(candidates.len())];
+            let d = DynamicRecords::decode_tail(&recs, from);
+            let batch = rng.next_range(1, 2);
+            let req = PlanRequest::new();
+            let mut resident =
+                Executor::with_request(&g, PlanService::shared(), &req, Some(d.clone()), 13)
+                    .unwrap();
+            let svc = PlanService::shared();
+            let mut paged =
+                Executor::with_request_paged(&g, Arc::clone(&svc), &req, d, 13).unwrap();
+            if trial % 2 == 1 {
+                paged.set_threads(4);
+            }
+            let mut input = vec![0f32; batch * in_elems];
+            rng.fill_f32(&mut input, 1.0);
+            let want = resident.run_batch(&input, batch).unwrap();
+            let got = paged.run_batch(&input, batch).unwrap();
+            assert_eq!(want, got, "{name} trial {trial}: paged diverged (from {from})");
+            assert_eq!(svc.pool().blocks().blocks_in_use(), 0, "{name}: leaked blocks");
+        }
+    }
+}
