@@ -24,6 +24,12 @@
 //!   below the worst-wave preallocation, block high-water mark and
 //!   fragmentation reported, outputs asserted bit-identical on the
 //!   sequential and 4-thread paths;
+//! * continuous vs drain: the same paged decode loop served by the
+//!   batch-and-drain scheduler and by the continuous scheduler
+//!   (`serve --continuous`) under one Poisson closed-loop storm —
+//!   p50/p95 latency, throughput, and the count of requests admitted
+//!   into in-flight decode loops, outputs asserted bit-identical to the
+//!   sequential resident path;
 //! * warm vs cold start: planner invocations and time-to-planned across a
 //!   plan-directory restart (`persist_dir` → `warm_start`);
 //! * kernel/thread trajectory: raw `Executor::run_batch` on mobilenet_v2
@@ -93,7 +99,8 @@ fn main() {
                 max_wait: Duration::from_micros(1),
                 ..BatchPolicy::default()
             },
-        );
+        )
+        .expect("register");
         let input = vec![1.0f32; 8];
         let (warmup, iters) = if smoke { (10, 100) } else { (100, 2000) };
         let st = harness::bench(warmup, iters, || {
@@ -184,7 +191,8 @@ fn main() {
                 max_wait: Duration::from_micros(200),
                 ..BatchPolicy::default()
             },
-        );
+        )
+        .expect("register");
         let mut rng = SplitMix64::new(1);
         let mut input = vec![0f32; 4];
         let t = std::time::Instant::now();
@@ -236,7 +244,8 @@ fn main() {
                         max_wait: Duration::from_millis(1),
                         ..BatchPolicy::default()
                     },
-                );
+                )
+                .expect("register");
             }
             for burst in [1usize, 2, 4, 2, 1] {
                 for i in 0..3 {
@@ -300,8 +309,10 @@ fn main() {
                     max_batch: 8,
                     max_wait: Duration::from_millis(1),
                     mem_budget: Some(budget),
+                    ..BatchPolicy::default()
                 },
-            );
+            )
+            .expect("register");
         }
         let burst = if smoke { 16 } else { 64 };
         let mut rng = SplitMix64::new(5);
@@ -369,7 +380,8 @@ fn main() {
                         max_wait: Duration::from_millis(1),
                         ..BatchPolicy::default()
                     },
-                );
+                )
+                .expect("register");
             }
             let mut rng = SplitMix64::new(9);
             let mut input = vec![0f32; in_elems];
@@ -444,7 +456,8 @@ fn main() {
                     max_wait: Duration::from_millis(1),
                     ..BatchPolicy::default()
                 },
-            );
+            )
+            .expect("register");
         }
         let mut rng = SplitMix64::new(11);
         let mut input = vec![0f32; in_elems];
@@ -601,6 +614,118 @@ fn main() {
         assert_eq!(paged_svc.pool().blocks().blocks_in_use(), 0);
     }
 
+    // --- continuous vs drain: admissions into in-flight decode loops ---
+    {
+        use harness::json::Value;
+        use std::collections::VecDeque;
+        use tensorarena::coordinator::ModelServer;
+        let model = "blazeface";
+        let g = tensorarena::models::by_name(model).unwrap();
+        let in_elems = g.tensor(g.inputs[0]).num_elements();
+        let decode_from = g.num_ops() / 2;
+        let total = if smoke { 24 } else { 96 };
+        let window = if smoke { 4 } else { 8 };
+        let mean_us = 250.0f64;
+        // One deterministic request stream and its reference outputs from a
+        // sequential resident engine: identity must hold under either
+        // scheduler, whatever interleaving the arrival jitter produces.
+        let mut rng = SplitMix64::new(23);
+        let mut reference =
+            ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 7).expect("engine");
+        let mut inputs = Vec::with_capacity(total);
+        let mut wants = Vec::with_capacity(total);
+        for _ in 0..total {
+            let mut input = vec![0f32; in_elems];
+            rng.fill_f32(&mut input, 1.0);
+            wants.push(reference.run_batch(&input, 1).expect("reference"));
+            inputs.push(input);
+        }
+        println!(
+            "\ncontinuous vs drain ({model}, paged tail from op {decode_from}, {total} Poisson \
+             arrivals, {window} closed-loop clients):"
+        );
+        for (mode, continuous) in [("drain", false), ("continuous", true)] {
+            let svc = PlanService::shared();
+            let server = {
+                let svc = Arc::clone(&svc);
+                ModelServer::spawn(
+                    move || {
+                        let g = tensorarena::models::by_name("blazeface").unwrap();
+                        let engine = ExecutorEngine::for_request_paged(
+                            &g,
+                            svc,
+                            &PlanRequest::new(),
+                            decode_from,
+                            7,
+                        )
+                        .expect("engine")
+                        .with_max_batch(4);
+                        if continuous {
+                            Box::new(engine.with_continuous())
+                        } else {
+                            Box::new(engine)
+                        }
+                    },
+                    BatchPolicy {
+                        max_batch: 4,
+                        max_wait: Duration::from_micros(200),
+                        continuous,
+                        queue_depth: 64,
+                        ..BatchPolicy::default()
+                    },
+                )
+                .expect("spawn")
+            };
+            let mut arrive = SplitMix64::new(29);
+            let mut lat_us: Vec<f64> = Vec::with_capacity(total);
+            let mut identical = true;
+            let mut pending = VecDeque::new();
+            let t = std::time::Instant::now();
+            for (i, input) in inputs.iter().enumerate() {
+                if pending.len() >= window {
+                    let (j, sent, rx): (usize, std::time::Instant, _) =
+                        pending.pop_front().expect("window is non-empty");
+                    let got = rx.recv().expect("worker alive").expect("served");
+                    lat_us.push(sent.elapsed().as_secs_f64() * 1e6);
+                    identical &= got == wants[j];
+                }
+                pending.push_back((i, std::time::Instant::now(), server.submit(input.clone())));
+                // Exponential inter-arrival gaps make the storm Poisson.
+                let u = (arrive.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+                std::thread::sleep(Duration::from_micros((-(1.0 - u).ln() * mean_us) as u64));
+            }
+            while let Some((j, sent, rx)) = pending.pop_front() {
+                let got = rx.recv().expect("worker alive").expect("served");
+                lat_us.push(sent.elapsed().as_secs_f64() * 1e6);
+                identical &= got == wants[j];
+            }
+            let wall = t.elapsed();
+            assert!(identical, "{mode} scheduling changed the numbers");
+            lat_us.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+            let p50 = lat_us[lat_us.len() / 2];
+            let p95 = lat_us[(lat_us.len() - 1) * 95 / 100];
+            let snap = server.metrics().snapshot();
+            let rps = total as f64 / wall.as_secs_f64();
+            println!(
+                "  {mode:>10}: p50 {p50:>7.0} us, p95 {p95:>7.0} us, {rps:>6.0} req/s, \
+                 {} mid-flight admission(s), outputs identical",
+                snap.continuous_admissions
+            );
+            cases.push(Value::Obj(vec![
+                ("name".into(), Value::Str(format!("continuous_decode/{mode}"))),
+                ("mode".into(), Value::Str(mode.into())),
+                ("clients".into(), Value::Num(window as f64)),
+                ("requests".into(), Value::Num(total as f64)),
+                ("p50_us".into(), Value::Num(p50)),
+                ("p95_us".into(), Value::Num(p95)),
+                ("throughput_rps".into(), Value::Num(rps)),
+                ("continuous_admissions".into(), Value::Num(snap.continuous_admissions as f64)),
+                ("identical".into(), Value::Bool(identical)),
+            ]));
+            server.shutdown();
+        }
+    }
+
     // --- warm vs cold start: a plan-directory restart ---
     {
         let model = if smoke { "blazeface" } else { "mobilenet_v1" };
@@ -673,7 +798,8 @@ fn main() {
                     )
                 },
                 BatchPolicy { max_batch, max_wait: Duration::from_millis(2), ..BatchPolicy::default() },
-            );
+            )
+            .expect("register");
             let mut rng = SplitMix64::new(2);
             let mut input = vec![0f32; 32 * 32 * 3];
             let t = std::time::Instant::now();

@@ -8,9 +8,23 @@
 //! box never forms a batch it cannot host. A pre-batched request larger
 //! than the cap is refused with a typed [`ServeError`] instead of OOMing,
 //! and every refusal is counted in [`Metrics`].
+//!
+//! With [`BatchPolicy::continuous`] the worker runs the vLLM scheduling
+//! model instead: it owns an in-flight set of decode *lanes* and, at each
+//! §7 wave boundary, retires finished lanes (their tail blocks return to
+//! the shared [`BlockPool`]) and admits queued requests into the vacated
+//! slots — no request waits for the whole batch to drain. The lane cap is
+//! the same budget-resolved number (the continuous engine charges
+//! `prefix peak + tail_block_demand × live lanes`, see
+//! [`Engine::planned_peak`]), so `live ≤ cap` *is* the budget invariant at
+//! every wave boundary. A bounded queue ([`BatchPolicy::queue_depth`])
+//! exerts backpressure with a typed [`ServeError::QueueFull`] refusal.
+//!
+//! [`BlockPool`]: crate::arena::paged::BlockPool
 
 use super::{engine::Engine, Metrics, Request, Response, ServeError};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -19,6 +33,12 @@ use std::time::{Duration, Instant};
 /// when the oldest queued request has waited `max_wait`. With `mem_budget`
 /// set, the effective cap is further clamped to the largest batch whose
 /// planned arena peak fits the budget (see [`Engine::max_servable_batch`]).
+/// An explicit `max_batch: 0` (or an engine cap of 0) is honored as
+/// refuse-all, consistent with a budget below the batch-1 peak.
+///
+/// With `continuous` set the cap bounds *live decode lanes* instead of
+/// batch samples, `max_wait` is unused (admission happens at wave
+/// boundaries, not deadlines), and `queue_depth` bounds the backlog.
 ///
 /// # Example
 ///
@@ -28,8 +48,9 @@ use std::time::{Duration, Instant};
 ///
 /// let server = ModelServer::spawn(
 ///     || Box::new(EchoEngine::new(2, 8)),
-///     BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), mem_budget: None },
-/// );
+///     BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), ..BatchPolicy::default() },
+/// )
+/// .expect("spawn");
 /// let out = server.submit(vec![1.0, 2.0]).recv().unwrap().unwrap();
 /// assert_eq!(out, vec![2.0, 4.0]);
 /// server.shutdown();
@@ -37,14 +58,24 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     /// Most samples a batch may hold (further clamped by the engine's own
-    /// cap and, when set, the budget).
+    /// cap and, when set, the budget). In continuous mode: most decode
+    /// lanes live at once. `0` means refuse every request.
     pub max_batch: usize,
     /// Longest the oldest queued request may wait before a partial batch
-    /// is flushed.
+    /// is flushed. Unused in continuous mode.
     pub max_wait: Duration,
     /// Byte budget for the engine's planned working memory; `None` means
     /// unbounded. Enforced only for engines that can report planned peaks.
     pub mem_budget: Option<usize>,
+    /// Run the continuous (lane-granular) scheduler instead of
+    /// batch-and-drain. Requires an engine with
+    /// [`Engine::supports_lanes`]`() == true`; [`ModelServer::spawn`]
+    /// refuses the policy otherwise.
+    pub continuous: bool,
+    /// Most requests the continuous scheduler will hold queued beyond the
+    /// live lanes before refusing with [`ServeError::QueueFull`]. Unused
+    /// by the drain worker (its queue is drained into batches instead).
+    pub queue_depth: usize,
 }
 
 impl Default for BatchPolicy {
@@ -53,6 +84,8 @@ impl Default for BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             mem_budget: None,
+            continuous: false,
+            queue_depth: 64,
         }
     }
 }
@@ -69,24 +102,46 @@ impl ModelServer {
     /// Spawn a worker under `policy`. `factory` runs *on the worker thread*
     /// and builds the engine there — this is what lets `!Send` engines
     /// (PJRT executables hold `Rc`s) live behind a threaded server.
-    pub fn spawn<F>(factory: F, policy: BatchPolicy) -> Self
+    ///
+    /// Construction is fallible: a panicking factory, or a `continuous`
+    /// policy over an engine without lane support, surfaces as
+    /// [`ServeError::Spawn`] instead of poisoning the caller. By the time
+    /// `spawn` returns `Ok`, the budget admission envelope is resolved and
+    /// (in continuous mode) the lanes are prepared.
+    pub fn spawn<F>(factory: F, policy: BatchPolicy) -> Result<Self, ServeError>
     where
         F: FnOnce() -> Box<dyn Engine> + Send + 'static,
     {
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Metrics::default());
         let m = Arc::clone(&metrics);
-        let (meta_tx, meta_rx) = channel::<usize>();
+        let (meta_tx, meta_rx) = channel::<Result<usize, ServeError>>();
         let worker = std::thread::Builder::new()
             .name("model-server".into())
             .spawn(move || {
-                let mut engine = factory();
-                let _ = meta_tx.send(engine.in_elems());
+                // A factory panic must fail `spawn`, not unwind the worker
+                // and leave the caller to `.expect()` a dead channel.
+                let mut engine =
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(factory)) {
+                        Ok(e) => e,
+                        Err(p) => {
+                            let msg = p
+                                .downcast_ref::<&str>()
+                                .map(|s| (*s).to_string())
+                                .or_else(|| p.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "opaque panic payload".into());
+                            let _ = meta_tx
+                                .send(Err(ServeError::Spawn(format!("engine factory panicked: {msg}"))));
+                            return;
+                        }
+                    };
                 // Resolve the admission cap once: policy bound, engine
                 // bound, then the budget bound (the largest batch whose
-                // planned peak fits). A budget below the batch-1 peak
-                // yields cap 0: every batch is refused, none is OOMed.
-                let mut cap = policy.max_batch.min(engine.max_batch()).max(1);
+                // planned peak fits). Cap 0 — an explicit `max_batch: 0`,
+                // an engine cap of 0, or a budget below the batch-1 peak —
+                // means every request is refused, none is OOMed and none is
+                // silently served at batch 1.
+                let mut cap = policy.max_batch.min(engine.max_batch());
                 if let Some(budget) = policy.mem_budget {
                     if let Some(fit) = engine.max_servable_batch(budget) {
                         cap = cap.min(fit);
@@ -102,15 +157,55 @@ impl ModelServer {
                         let _ = engine.planned_peak(b);
                     }
                 }
-                worker_loop(&mut *engine, &rx, cap, policy.mem_budget, policy.max_wait, &m)
+                if policy.continuous {
+                    if !engine.supports_lanes() {
+                        let _ = meta_tx.send(Err(ServeError::Spawn(
+                            "engine does not support continuous lane serving \
+                             (paged decode mode required)"
+                                .into(),
+                        )));
+                        return;
+                    }
+                    if cap > 0 {
+                        if let Err(e) = engine.lane_prepare(cap) {
+                            let _ = meta_tx.send(Err(ServeError::Spawn(format!(
+                                "preparing {cap} decode lane(s) failed: {e}"
+                            ))));
+                            return;
+                        }
+                    }
+                    let _ = meta_tx.send(Ok(engine.in_elems()));
+                    worker_continuous(
+                        &mut *engine,
+                        &rx,
+                        cap,
+                        policy.mem_budget,
+                        policy.queue_depth,
+                        &m,
+                    )
+                } else {
+                    let _ = meta_tx.send(Ok(engine.in_elems()));
+                    worker_loop(&mut *engine, &rx, cap, policy.mem_budget, policy.max_wait, &m)
+                }
             })
             .expect("spawn model server");
-        let in_elems = meta_rx.recv().expect("engine factory panicked");
-        ModelServer {
-            tx: Some(tx),
-            worker: Some(worker),
-            metrics,
-            in_elems,
+        match meta_rx.recv() {
+            Ok(Ok(in_elems)) => Ok(ModelServer {
+                tx: Some(tx),
+                worker: Some(worker),
+                metrics,
+                in_elems,
+            }),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => {
+                // The worker died without reporting — e.g. a panic payload
+                // that itself panicked on drop. Still a typed failure.
+                let _ = worker.join();
+                Err(ServeError::Spawn("engine worker exited before reporting readiness".into()))
+            }
         }
     }
 
@@ -330,6 +425,151 @@ fn worker_loop(
     }
 }
 
+/// The continuous-batching loop (vLLM scheduling model): `cap` decode
+/// lanes run in-flight; each iteration advances every live lane by one §7
+/// wave, retires the lanes that finished (tail blocks return to the shared
+/// pool), and admits queued requests into the vacated slots — a request
+/// never waits for the whole batch to drain.
+///
+/// Budget correctness is structural, not re-checked per wave: `cap` was
+/// resolved against [`Engine::planned_peak`], which for a continuous
+/// engine charges `prefix peak + tail_block_demand × lanes`, so holding
+/// `live ≤ cap` keeps every wave boundary inside the budget.
+fn worker_continuous(
+    engine: &mut dyn Engine,
+    rx: &Receiver<Request>,
+    cap: usize,
+    budget: Option<usize>,
+    queue_depth: usize,
+    metrics: &Metrics,
+) {
+    let in_elems = engine.in_elems();
+    // Cap 0 (explicit refuse-all policy, engine cap 0, or a budget below
+    // the one-lane peak): refuse everything, typed, forever.
+    if cap == 0 {
+        while let Ok(r) = rx.recv() {
+            let s = r.input.len() / in_elems;
+            refuse(&*engine, metrics, r, s, 0, budget);
+        }
+        return;
+    }
+    struct Lane {
+        req: Request,
+        admitted: Instant,
+    }
+    let mut lanes: Vec<Option<Lane>> = Vec::new();
+    lanes.resize_with(cap, || None);
+    let mut queue: VecDeque<Request> = VecDeque::new();
+    let mut live = 0usize;
+    let mut open = true;
+    loop {
+        // Idle: nothing in flight, nothing queued — block until work
+        // arrives or the queue closes.
+        if open && live == 0 && queue.is_empty() {
+            match rx.recv() {
+                Ok(r) => queue.push_back(r),
+                Err(_) => open = false,
+            }
+        }
+        // Drain new arrivals without blocking the decode loop. The queue
+        // is bounded: beyond `queue_depth` the refusal is immediate and
+        // typed, instead of the backlog growing without limit.
+        while open {
+            match rx.try_recv() {
+                Ok(r) => {
+                    if queue.len() >= queue_depth {
+                        metrics.record_rejected(1);
+                        let _ = r.resp.send(Err(ServeError::QueueFull { depth: queue_depth }));
+                    } else {
+                        queue.push_back(r);
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+        if !open && live == 0 && queue.is_empty() {
+            return; // queue closed and fully drained
+        }
+        // Wave-boundary admission: fill vacated lanes from the queue.
+        while live < cap {
+            let Some(r) = queue.pop_front() else { break };
+            let samples = r.input.len() / in_elems;
+            if samples != 1 {
+                // A lane holds exactly one sample; a pre-batched burst
+                // cannot join a decode loop mid-flight. Clients that want
+                // bursts use the drain worker.
+                metrics.record_rejected(1);
+                let _ = r.resp.send(Err(ServeError::BatchTooLarge { batch: samples, cap: 1 }));
+                continue;
+            }
+            let lane = lanes
+                .iter()
+                .position(Option::is_none)
+                .expect("live < cap implies a vacant lane");
+            match engine.lane_begin(lane, &r.input) {
+                Ok(()) => {
+                    if live > 0 {
+                        // The observable continuous-batching event: this
+                        // request joined while other lanes were mid-decode.
+                        metrics.record_continuous_admission();
+                    }
+                    lanes[lane] = Some(Lane { req: r, admitted: Instant::now() });
+                    live += 1;
+                }
+                Err(e) => {
+                    metrics.record_engine_error();
+                    let _ = r.resp.send(Err(ServeError::Engine(e.to_string())));
+                }
+            }
+        }
+        // Advance every live lane one wave; retire the finished ones. The
+        // retired lanes' tail blocks are already back in the pool (the
+        // executor unmaps a tail record when its last consumer runs), so
+        // the vacated slots are admissible on the next iteration.
+        for li in 0..lanes.len() {
+            if lanes[li].is_none() {
+                continue;
+            }
+            let done = match engine.lane_advance(li) {
+                Ok(done) => done,
+                Err(e) => {
+                    let lane = lanes[li].take().expect("checked live");
+                    live -= 1;
+                    metrics.record_engine_error();
+                    let _ = lane.req.resp.send(Err(ServeError::Engine(e.to_string())));
+                    engine.lane_abort(li);
+                    continue;
+                }
+            };
+            if !done {
+                continue;
+            }
+            let lane = lanes[li].take().expect("checked live");
+            live -= 1;
+            match engine.lane_finish(li) {
+                Ok(out) => {
+                    let now = Instant::now();
+                    // Per retired lane: "batch" is the in-flight lane count
+                    // at retirement, so mean_batch reads as average decode
+                    // concurrency.
+                    metrics.record_batch(
+                        live + 1,
+                        &[lane.admitted - lane.req.enqueued],
+                        &[now - lane.req.enqueued],
+                    );
+                    let _ = lane.req.resp.send(Ok(out));
+                }
+                Err(e) => {
+                    metrics.record_engine_error();
+                    let _ = lane.req.resp.send(Err(ServeError::Engine(e.to_string())));
+                    engine.lane_abort(li);
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -344,7 +584,8 @@ mod tests {
                 max_wait: Duration::from_millis(20),
                 ..BatchPolicy::default()
             },
-        );
+        )
+        .expect("spawn");
         let rxs: Vec<_> = (0..6)
             .map(|i| server.submit(vec![i as f32, i as f32 + 0.5]))
             .collect();
@@ -360,7 +601,8 @@ mod tests {
 
     #[test]
     fn rejects_wrong_arity_without_touching_engine() {
-        let server = ModelServer::spawn(|| Box::new(EchoEngine::new(3, 8)), BatchPolicy::default());
+        let server = ModelServer::spawn(|| Box::new(EchoEngine::new(3, 8)), BatchPolicy::default())
+            .expect("spawn");
         let rx = server.submit(vec![1.0]); // not a multiple of 3
         let resp = rx.recv().unwrap();
         assert!(matches!(resp, Err(ServeError::BadInput { got: 1, expect: 3 })));
@@ -376,7 +618,8 @@ mod tests {
                 max_wait: Duration::from_millis(5),
                 ..BatchPolicy::default()
             },
-        );
+        )
+        .expect("spawn");
         let rx = server.submit(vec![7.0]);
         // only one request: the deadline, not the size cap, must flush it
         let out = rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
@@ -386,7 +629,8 @@ mod tests {
 
     #[test]
     fn shutdown_drains_gracefully() {
-        let server = ModelServer::spawn(|| Box::new(EchoEngine::new(1, 4)), BatchPolicy::default());
+        let server = ModelServer::spawn(|| Box::new(EchoEngine::new(1, 4)), BatchPolicy::default())
+            .expect("spawn");
         let rx = server.submit(vec![1.0]);
         server.shutdown();
         assert_eq!(rx.recv().unwrap().unwrap(), vec![2.0]);
@@ -397,7 +641,8 @@ mod tests {
         let server = ModelServer::spawn(
             || Box::new(EchoEngine::new(2, 8)),
             BatchPolicy { max_batch: 8, ..BatchPolicy::default() },
-        );
+        )
+        .expect("spawn");
         // 3 samples of 2 elements in one request.
         let rx = server.submit(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let out = rx.recv().unwrap().unwrap();
@@ -419,8 +664,10 @@ mod tests {
                 max_batch: 8,
                 max_wait: Duration::from_millis(5),
                 mem_budget: Some(350),
+                ..BatchPolicy::default()
             },
-        );
+        )
+        .expect("spawn");
         let rxs: Vec<_> = (0..64).map(|i| server.submit(vec![i as f32])).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
             assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32 * 2.0]);
@@ -452,7 +699,8 @@ mod tests {
         let server = ModelServer::spawn(
             || Box::new(EchoEngine::new(1, 8).with_peak_per_sample(1000)),
             BatchPolicy { mem_budget: Some(999), ..BatchPolicy::default() },
-        );
+        )
+        .expect("spawn");
         for i in 0..4 {
             let resp = server.submit(vec![i as f32]).recv().unwrap();
             assert!(
@@ -471,7 +719,8 @@ mod tests {
         let server = ModelServer::spawn(
             || Box::new(EchoEngine::new(1, 4)),
             BatchPolicy { max_batch: 4, ..BatchPolicy::default() },
-        );
+        )
+        .expect("spawn");
         let resp = server.submit(vec![0.0f32; 5]).recv().unwrap();
         assert!(matches!(resp, Err(ServeError::BatchTooLarge { batch: 5, cap: 4 })));
         assert_eq!(server.metrics().snapshot().rejected, 1);
@@ -495,7 +744,8 @@ mod tests {
                 anyhow::bail!("injected failure")
             }
         }
-        let server = ModelServer::spawn(|| Box::new(FailEngine), BatchPolicy::default());
+        let server =
+            ModelServer::spawn(|| Box::new(FailEngine), BatchPolicy::default()).expect("spawn");
         for _ in 0..2 {
             match server.submit(vec![1.0]).recv().unwrap() {
                 Err(ServeError::Engine(e)) => assert!(e.contains("injected failure"), "{e}"),
@@ -516,8 +766,65 @@ mod tests {
         let server = ModelServer::spawn(
             || Box::new(EchoEngine::new(1, 8)),
             BatchPolicy { mem_budget: Some(1), ..BatchPolicy::default() },
-        );
+        )
+        .expect("spawn");
         assert_eq!(server.submit(vec![4.0]).recv().unwrap().unwrap(), vec![8.0]);
         server.shutdown();
+    }
+
+    #[test]
+    fn panicking_factory_fails_spawn_with_a_typed_error() {
+        // Regression: a panicking factory used to take the caller down via
+        // `meta_rx.recv().expect(...)`. It must surface as ServeError::Spawn.
+        let r = ModelServer::spawn(
+            || -> Box<dyn Engine> { panic!("flaky model load") },
+            BatchPolicy::default(),
+        );
+        match r {
+            Err(ServeError::Spawn(msg)) => {
+                assert!(msg.contains("factory panicked"), "{msg}");
+                assert!(msg.contains("flaky model load"), "{msg}");
+            }
+            other => panic!("expected Spawn error, got {:?}", other.map(|_| "a live server")),
+        }
+    }
+
+    #[test]
+    fn explicit_zero_cap_refuses_instead_of_serving() {
+        // Regression: `max_batch: 0` used to be clamped to 1 and served
+        // anyway. It must be honored as refuse-all, consistent with the
+        // budget-below-batch-1 semantics.
+        let server = ModelServer::spawn(
+            || Box::new(EchoEngine::new(1, 4)),
+            BatchPolicy { max_batch: 0, ..BatchPolicy::default() },
+        )
+        .expect("spawn");
+        for i in 0..3 {
+            let resp = server.submit(vec![i as f32]).recv().unwrap();
+            assert!(
+                matches!(resp, Err(ServeError::BatchTooLarge { batch: 1, cap: 0 })),
+                "request {i} was served under an explicit zero cap: {resp:?}"
+            );
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.rejected, 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn continuous_policy_requires_a_lane_capable_engine() {
+        // EchoEngine cannot decode lane-granularly; the policy must be
+        // refused at spawn, not discovered as a panic mid-serve.
+        let r = ModelServer::spawn(
+            || Box::new(EchoEngine::new(1, 4)),
+            BatchPolicy { continuous: true, ..BatchPolicy::default() },
+        );
+        match r {
+            Err(ServeError::Spawn(msg)) => {
+                assert!(msg.contains("continuous lane serving"), "{msg}")
+            }
+            other => panic!("expected Spawn error, got {:?}", other.map(|_| "a live server")),
+        }
     }
 }

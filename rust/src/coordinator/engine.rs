@@ -48,6 +48,46 @@ pub trait Engine {
         let _ = budget_bytes;
         None
     }
+    /// True when this engine serves requests as independently-advancing
+    /// decode lanes ([`Self::lane_begin`] / [`Self::lane_advance`] /
+    /// [`Self::lane_finish`]) — what the continuous-batching scheduler
+    /// ([`super::BatchPolicy::continuous`]) requires. Engines answering
+    /// `true` must also account per live lane in
+    /// [`Self::planned_peak`], since the scheduler admits up to the
+    /// budget-resolved cap *simultaneously*.
+    fn supports_lanes(&self) -> bool {
+        false
+    }
+    /// Size the engine for `lanes` concurrent decode lanes (e.g. stripe
+    /// the resident arena) — called once at spawn, before any admission,
+    /// so the hot path never re-plans.
+    fn lane_prepare(&mut self, lanes: usize) -> Result<()> {
+        let _ = lanes;
+        Ok(())
+    }
+    /// Admit one single-sample request (`in_elems` elements) into the
+    /// idle lane `lane`.
+    fn lane_begin(&mut self, lane: usize, input: &[f32]) -> Result<()> {
+        let _ = (lane, input);
+        anyhow::bail!("engine does not support lane-granular serving")
+    }
+    /// Advance an open lane through its next decode wave; `Ok(true)` once
+    /// the lane has executed every step and is ready to finish.
+    fn lane_advance(&mut self, lane: usize) -> Result<bool> {
+        let _ = lane;
+        anyhow::bail!("engine does not support lane-granular serving")
+    }
+    /// Collect a finished lane's output (`out_elems` elements) and
+    /// release the lane (tail memory returns to its pool).
+    fn lane_finish(&mut self, lane: usize) -> Result<Vec<f32>> {
+        let _ = lane;
+        anyhow::bail!("engine does not support lane-granular serving")
+    }
+    /// Drop an open lane without collecting output (scheduler error
+    /// recovery); must leave the lane admissible again.
+    fn lane_abort(&mut self, lane: usize) {
+        let _ = lane;
+    }
 }
 
 /// PJRT-backed engine over AOT batch-size variants (the production path).
@@ -248,6 +288,10 @@ pub struct ExecutorEngine {
     /// resident arena: the arena holds only the static prefix, and budget
     /// admission charges prefix peak + tail block demand.
     paged: bool,
+    /// Expose the paged executor's lane API to the continuous-batching
+    /// scheduler, and charge the tail's block demand per live lane
+    /// (simultaneously-open lanes each hold a private mapping).
+    continuous: bool,
 }
 
 impl ExecutorEngine {
@@ -401,6 +445,7 @@ impl ExecutorEngine {
             applied,
             dynamic,
             paged,
+            continuous: false,
         })
     }
 
@@ -417,6 +462,21 @@ impl ExecutorEngine {
     /// `serve --threads` flag lands here.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.exec.set_threads(threads);
+        self
+    }
+
+    /// Serve **continuously**: expose the paged executor's lane API
+    /// ([`Engine::supports_lanes`]) so the coordinator can admit requests
+    /// into in-flight decode loops at wave boundaries instead of draining
+    /// the batch ([`super::BatchPolicy::continuous`]), and switch budget
+    /// admission from the drain-mode tail charge (one lane — lanes page
+    /// sequentially) to the continuous charge (`batch ×` the tail — every
+    /// live lane keeps its own blocks mapped across wave boundaries).
+    /// Only meaningful on a paged engine ([`Self::for_request_paged`]);
+    /// otherwise lanes stay unsupported and the flag is inert. The `serve
+    /// --continuous` flag lands here.
+    pub fn with_continuous(mut self) -> Self {
+        self.continuous = true;
         self
     }
 }
@@ -482,8 +542,12 @@ impl Engine for ExecutorEngine {
         match &self.dynamic {
             // Paged serving admits against what it actually holds resident:
             // the static-prefix plan plus the decode tail's peak block
-            // demand (batch-invariant — lanes page their tails one at a
-            // time, so the tail term never scales with the batch).
+            // demand. In drain mode the tail term is batch-invariant —
+            // lanes page their tails one at a time — while continuous mode
+            // keeps every live lane's tail mapped across wave boundaries,
+            // so each of the `batch` admissible lanes is charged its own
+            // tail. Either way the charge is what wave-boundary state can
+            // actually reach, so admission under a budget never exceeds it.
             Some(d) if self.paged => {
                 let prefix = self
                     .service
@@ -492,7 +556,9 @@ impl Engine for ExecutorEngine {
                         &self.req.with_batch(batch).with_dynamic(DynamicMode::Resolved(0)),
                     )
                     .ok()?;
-                let tail = d.tail_block_demand(BLOCK_WORDS).checked_mul(BLOCK_WORDS * 4)?;
+                let lanes = if self.continuous { batch } else { 1 };
+                let tail =
+                    d.tail_block_demand_lanes(BLOCK_WORDS, lanes).checked_mul(BLOCK_WORDS * 4)?;
                 prefix.peak.checked_add(tail)
             }
             // Wave-aware serving must admit against the worst-wave peak:
@@ -514,10 +580,14 @@ impl Engine for ExecutorEngine {
     }
     fn max_servable_batch(&self, budget_bytes: usize) -> Option<usize> {
         if self.paged {
-            // The paged footprint (prefix peak + flat tail term) is
+            // The paged footprint (prefix peak plus a tail term that is
+            // flat in drain mode and linear in continuous mode) is
             // monotone in the batch, so a bounded linear walk finds the
             // largest admissible size; the engine's own cap bounds the
-            // walk, and a probe failure ends it conservatively.
+            // walk, and a probe failure ends it conservatively. In
+            // continuous mode the result doubles as the *lane cap*: with
+            // at most that many lanes live, wave-boundary memory is
+            // bounded by this walk's admitted peak, hence by the budget.
             let mut best = 0;
             for b in 1..=self.max_batch {
                 match self.planned_peak(b) {
@@ -537,6 +607,27 @@ impl Engine for ExecutorEngine {
                 .max_servable_batch(&self.records, &self.req, budget_bytes)
                 .ok(),
         }
+    }
+    fn supports_lanes(&self) -> bool {
+        // The lane API lives on the paged executor, and only a
+        // continuous-constructed engine charges its budget per live lane
+        // — both must hold before the scheduler may interleave lanes.
+        self.paged && self.continuous
+    }
+    fn lane_prepare(&mut self, lanes: usize) -> Result<()> {
+        self.exec.ensure_batch(lanes).map_err(anyhow::Error::msg)
+    }
+    fn lane_begin(&mut self, lane: usize, input: &[f32]) -> Result<()> {
+        self.exec.lane_open(lane, input).map_err(anyhow::Error::msg)
+    }
+    fn lane_advance(&mut self, lane: usize) -> Result<bool> {
+        self.exec.lane_advance(lane).map_err(anyhow::Error::msg)
+    }
+    fn lane_finish(&mut self, lane: usize) -> Result<Vec<f32>> {
+        self.exec.lane_finish(lane).map_err(anyhow::Error::msg)
+    }
+    fn lane_abort(&mut self, lane: usize) {
+        self.exec.lane_abort(lane);
     }
 }
 
@@ -813,6 +904,91 @@ mod tests {
         assert!(e.planned_peak(cap).unwrap() <= 3 * p1);
         assert!(e.planned_peak(cap + 1).unwrap() > 3 * p1);
         assert_eq!(e.max_servable_batch(p1 - 1), Some(0));
+    }
+
+    #[test]
+    fn continuous_engine_charges_tail_per_live_lane_and_serves_lanes() {
+        let g = crate::models::blazeface();
+        let decode_from = g.num_ops() / 2;
+        let svc = PlanService::shared();
+        let mut e = ExecutorEngine::for_request_paged(
+            &g,
+            Arc::clone(&svc),
+            &PlanRequest::new(),
+            decode_from,
+            3,
+        )
+        .unwrap()
+        .with_continuous();
+        assert!(e.supports_lanes());
+        // Drain-mode paged engines and non-paged engines never advertise
+        // lanes: the scheduler must not interleave what is not charged
+        // (or striped) per live lane.
+        let mut drain = ExecutorEngine::for_request_paged(
+            &g,
+            Arc::clone(&svc),
+            &PlanRequest::new(),
+            decode_from,
+            3,
+        )
+        .unwrap();
+        assert!(!drain.supports_lanes());
+        let resident = ExecutorEngine::new(&g, Arc::clone(&svc), "greedy-size", 3)
+            .unwrap()
+            .with_continuous();
+        assert!(!resident.supports_lanes());
+        // Budget charge: prefix(b) + b × tail for continuous mode, versus
+        // the drain-mode prefix(b) + tail.
+        let d = DynamicRecords::decode_tail(&UsageRecords::from_graph(&g), decode_from);
+        let tail = d.tail_block_demand(BLOCK_WORDS) * BLOCK_WORDS * 4;
+        assert!(tail > 0, "the decode tail must demand blocks");
+        let prefix2 = svc
+            .plan_dynamic(
+                &d,
+                &PlanRequest::new().with_batch(2).with_dynamic(DynamicMode::Resolved(0)),
+            )
+            .unwrap()
+            .peak;
+        assert_eq!(e.planned_peak(2), Some(prefix2 + 2 * tail));
+        assert_eq!(drain.planned_peak(2), Some(prefix2 + tail));
+        // End-to-end: two interleaved lanes, admitted mid-stream, match
+        // the batch-and-drain outputs bit for bit.
+        let n_in = e.in_elems();
+        let out_elems = e.out_elems();
+        let a = vec![0.1f32; n_in];
+        let b = vec![0.2f32; n_in];
+        let flat: Vec<f32> = a.iter().chain(b.iter()).copied().collect();
+        let want = drain.run_batch(&flat, 2).unwrap();
+        e.lane_prepare(2).unwrap();
+        e.lane_begin(0, &a).unwrap();
+        let mut f0 = e.lane_advance(0).unwrap();
+        assert!(!f0, "blazeface must hit a wave boundary before the end");
+        e.lane_begin(1, &b).unwrap();
+        let mut f1 = false;
+        for _ in 0..256 {
+            if !f1 {
+                f1 = e.lane_advance(1).unwrap();
+            }
+            if !f0 {
+                f0 = e.lane_advance(0).unwrap();
+            }
+            if f0 && f1 {
+                break;
+            }
+        }
+        assert!(f0 && f1, "lanes did not finish within the step budget");
+        assert_eq!(e.lane_finish(0).unwrap().as_slice(), &want[..out_elems]);
+        assert_eq!(e.lane_finish(1).unwrap().as_slice(), &want[out_elems..]);
+        assert_eq!(svc.pool().blocks().blocks_in_use(), 0, "lane blocks leaked");
+        // Engines without lane support refuse the lane API with a typed
+        // error instead of panicking, and abort is a safe no-op.
+        let mut echo = EchoEngine::new(1, 4);
+        assert!(!echo.supports_lanes());
+        assert!(echo.lane_prepare(2).is_ok());
+        assert!(echo.lane_begin(0, &[1.0]).is_err());
+        assert!(echo.lane_advance(0).is_err());
+        assert!(echo.lane_finish(0).is_err());
+        echo.lane_abort(0);
     }
 
     #[test]

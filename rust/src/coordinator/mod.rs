@@ -1,11 +1,23 @@
-//! Serving coordinator: request routing, dynamic batching, metrics.
+//! Serving coordinator: request routing, dynamic and continuous batching,
+//! metrics.
 //!
 //! The L3 layer of the stack. Inference requests enter through a
-//! [`Router`], are queued per model, gathered into batches by the
-//! [`batcher`] policy (size- and deadline-bound, vLLM-style), executed on
-//! an [`engine::Engine`] (the PJRT executable for the AOT path, or the
-//! arena [`crate::exec::Executor`] for the pure-Rust path), and answered
-//! over per-request channels. Python never appears here.
+//! [`Router`], are queued per model, and answered over per-request
+//! channels; Python never appears here. Per model one of two schedulers
+//! runs on the worker thread:
+//!
+//! * **batch-and-drain** (the default): requests are gathered into batches
+//!   bounded by size, deadline, and — under a `--mem-budget` — the planned
+//!   arena peak, then executed whole on an [`engine::Engine`] (the PJRT
+//!   executable for the AOT path, or the arena [`crate::exec::Executor`]
+//!   for the pure-Rust path);
+//! * **continuous** ([`BatchPolicy::continuous`], vLLM scheduling model):
+//!   the worker owns an in-flight set of decode *lanes*, advances them
+//!   wave by wave (§7), retires finished lanes at wave boundaries — their
+//!   tail blocks return to the shared block pool — and admits queued
+//!   requests into the vacated slots, so no request waits for a batch to
+//!   drain. A bounded queue refuses overload with a typed
+//!   [`ServeError::QueueFull`].
 //!
 //! The paper's planner shows up twice:
 //! * the engine's working memory is a planned arena, reported per model in
@@ -47,7 +59,8 @@ use std::time::Instant;
 /// let server = ModelServer::spawn(
 ///     || Box::new(EchoEngine::new(1, 8).with_peak_per_sample(100)),
 ///     BatchPolicy { mem_budget: Some(250), ..BatchPolicy::default() },
-/// );
+/// )
+/// .expect("spawn");
 /// match server.submit(vec![0.0; 4]).recv().unwrap() {
 ///     Err(ServeError::BudgetExceeded { batch, budget_bytes, .. }) => {
 ///         assert_eq!((batch, budget_bytes), (4, 250));
@@ -88,6 +101,24 @@ pub enum ServeError {
         /// Largest admissible batch.
         cap: usize,
     },
+    /// The continuous scheduler's bounded queue is full — the backpressure
+    /// refusal that replaces unbounded backlog growth. A client seeing
+    /// this retries later (or against a replica); the drain worker never
+    /// produces it.
+    QueueFull {
+        /// Configured queue depth ([`BatchPolicy::queue_depth`]) that the
+        /// backlog had already reached.
+        depth: usize,
+    },
+    /// The server could not be constructed: the engine factory panicked,
+    /// or the policy is incompatible with the engine (e.g. `continuous`
+    /// over an engine without lane support). Returned by
+    /// [`ModelServer::spawn`] / [`Router::register`], never by `submit`.
+    Spawn(String),
+    /// A model is already registered under this name. Replacing a live
+    /// server (and its in-flight requests) must be explicit — see
+    /// [`Router::replace`].
+    AlreadyRegistered(String),
     /// The engine failed while executing the batch.
     Engine(String),
 }
@@ -105,6 +136,13 @@ impl std::fmt::Display for ServeError {
             ),
             ServeError::BatchTooLarge { batch, cap } => {
                 write!(f, "batch {batch} exceeds the server's cap of {cap}")
+            }
+            ServeError::QueueFull { depth } => {
+                write!(f, "server queue is full ({depth} requests already waiting)")
+            }
+            ServeError::Spawn(e) => write!(f, "server spawn failed: {e}"),
+            ServeError::AlreadyRegistered(m) => {
+                write!(f, "model '{m}' is already registered; replacement must be explicit")
             }
             ServeError::Engine(e) => write!(f, "engine error: {e}"),
         }
@@ -323,5 +361,10 @@ mod tests {
         assert!(s.contains("4096"), "{s}");
         assert!(s.contains("1024-byte budget"), "{s}");
         assert!(ServeError::UnknownModel("x".into()).to_string().contains("unknown model 'x'"));
+        let q = ServeError::QueueFull { depth: 64 }.to_string();
+        assert!(q.contains("64 requests already waiting"), "{q}");
+        assert!(ServeError::Spawn("boom".into()).to_string().contains("spawn failed: boom"));
+        let a = ServeError::AlreadyRegistered("m".into()).to_string();
+        assert!(a.contains("'m' is already registered"), "{a}");
     }
 }

@@ -18,11 +18,48 @@ impl Router {
 
     /// Register a model under `name`, spawning its worker. The factory runs
     /// on the worker thread (see [`ModelServer::spawn`]).
-    pub fn register<F>(&mut self, name: impl Into<String>, factory: F, policy: BatchPolicy)
+    ///
+    /// Refuses a `name` that is already registered with
+    /// [`ServeError::AlreadyRegistered`]: the old behavior Drop-joined the
+    /// live server mid-registration, stranding its in-flight requests.
+    /// Deliberate swaps go through [`Router::replace`]. Spawn failures
+    /// (panicking factory, incompatible policy) pass through as
+    /// [`ServeError::Spawn`].
+    pub fn register<F>(
+        &mut self,
+        name: impl Into<String>,
+        factory: F,
+        policy: BatchPolicy,
+    ) -> Result<(), ServeError>
     where
         F: FnOnce() -> Box<dyn Engine> + Send + 'static,
     {
-        self.servers.insert(name.into(), ModelServer::spawn(factory, policy));
+        let name = name.into();
+        if self.servers.contains_key(&name) {
+            return Err(ServeError::AlreadyRegistered(name));
+        }
+        let server = ModelServer::spawn(factory, policy)?;
+        self.servers.insert(name, server);
+        Ok(())
+    }
+
+    /// Replace the server under `name`, returning the previous one (still
+    /// live) for the caller to drain on its own schedule — typically
+    /// [`ModelServer::shutdown`] after the cut-over. The new server spawns
+    /// *before* the old one is unhooked, so a spawn failure leaves the old
+    /// registration serving untouched. `Ok(None)` means nothing was
+    /// registered under `name` (a plain registration).
+    pub fn replace<F>(
+        &mut self,
+        name: impl Into<String>,
+        factory: F,
+        policy: BatchPolicy,
+    ) -> Result<Option<ModelServer>, ServeError>
+    where
+        F: FnOnce() -> Box<dyn Engine> + Send + 'static,
+    {
+        let server = ModelServer::spawn(factory, policy)?;
+        Ok(self.servers.insert(name.into(), server))
     }
 
     /// Route one request. Unknown models answer immediately with an error.
@@ -65,8 +102,10 @@ mod tests {
     #[test]
     fn routes_by_name() {
         let mut r = Router::new();
-        r.register("a", || Box::new(EchoEngine::new(1, 4)), BatchPolicy::default());
-        r.register("b", || Box::new(EchoEngine::new(2, 4)), BatchPolicy::default());
+        r.register("a", || Box::new(EchoEngine::new(1, 4)), BatchPolicy::default())
+            .expect("register a");
+        r.register("b", || Box::new(EchoEngine::new(2, 4)), BatchPolicy::default())
+            .expect("register b");
         assert_eq!(r.models(), vec!["a", "b"]);
         assert_eq!(r.submit("a", vec![3.0]).recv().unwrap().unwrap(), vec![6.0]);
         assert_eq!(
@@ -81,6 +120,36 @@ mod tests {
         let r = Router::new();
         let resp = r.submit("ghost", vec![1.0]).recv().unwrap();
         assert_eq!(resp.unwrap_err(), ServeError::UnknownModel("ghost".into()));
+    }
+
+    #[test]
+    fn duplicate_registration_is_refused_and_replacement_is_explicit() {
+        // Regression: register used to silently Drop-join the live server
+        // under the same name, stranding its in-flight requests.
+        let mut r = Router::new();
+        r.register("m", || Box::new(EchoEngine::new(1, 4)), BatchPolicy::default())
+            .expect("register");
+        let dup = r.register("m", || Box::new(EchoEngine::new(1, 4)), BatchPolicy::default());
+        assert_eq!(dup.unwrap_err(), ServeError::AlreadyRegistered("m".into()));
+        // The original server is untouched by the refused registration.
+        assert_eq!(r.submit("m", vec![3.0]).recv().unwrap().unwrap(), vec![6.0]);
+
+        // Explicit replacement hands the old server back, still able to
+        // answer; the name now routes to the replacement (arity 2).
+        let old = r
+            .replace("m", || Box::new(EchoEngine::new(2, 4)), BatchPolicy::default())
+            .expect("replace")
+            .expect("an old server was registered");
+        assert_eq!(old.submit(vec![5.0]).recv().unwrap().unwrap(), vec![10.0]);
+        old.shutdown();
+        assert_eq!(r.submit("m", vec![1.0, 2.0]).recv().unwrap().unwrap(), vec![2.0, 4.0]);
+
+        // Replacing an unregistered name is a plain registration.
+        let none = r
+            .replace("fresh", || Box::new(EchoEngine::new(1, 4)), BatchPolicy::default())
+            .expect("replace fresh");
+        assert!(none.is_none());
+        r.shutdown();
     }
 
     #[test]
@@ -106,7 +175,8 @@ mod tests {
                     max_wait: std::time::Duration::from_micros(10),
                     ..BatchPolicy::default()
                 },
-            );
+            )
+            .expect("register");
         }
         let in_elems = crate::models::blazeface()
             .tensor(crate::models::blazeface().inputs[0])

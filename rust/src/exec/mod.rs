@@ -119,9 +119,13 @@ struct PagedState {
     /// Per-record single-lane payload words for tail records (`Some` iff
     /// `known_at > 0`); resident-prefix records are `None`.
     tail_words: Vec<Option<usize>>,
-    /// The block mapping. At most one lane's tail stripes are mapped at
-    /// any instant (lanes run sequentially), so the tail's block demand
-    /// is batch-invariant.
+    /// The block mapping of the sequential `run_batch` path, where lanes
+    /// run one after another so at most one lane's tail stripes are
+    /// mapped at any instant and the tail's block demand is
+    /// batch-invariant. Continuous lanes ([`Executor::lane_open`]) do
+    /// *not* share this mapping — each open lane carries a private
+    /// [`PagedArena`] in its [`LaneRun`], so simultaneously-live lanes
+    /// each contribute their own tail block demand.
     arena: PagedArena,
     /// Contiguous gather/scatter scratch, reused across paged steps.
     scratch: Vec<f32>,
@@ -134,6 +138,30 @@ struct PagedState {
     /// Per-sample naive total of the *real* records (the doctored
     /// resident records zero every tail size).
     naive1: usize,
+}
+
+/// One in-flight continuous-decode lane: a request admitted into the
+/// paged executor mid-stream ([`Executor::lane_open`]), advancing one
+/// wave at a time ([`Executor::lane_advance`]) interleaved with other
+/// lanes. Everything a lane mutates is private — io buffers (the shared
+/// slots are scratch the sequential loop reuses across lanes), the tail
+/// block mapping (a [`PagedArena`] keys mappings by record id, so
+/// simultaneously-live lanes need one each), and gather/scatter scratch
+/// — while resident-prefix tensors use the lane's own byte-disjoint
+/// arena stripes. Interleaving therefore cannot change any lane's
+/// values: outputs are bit-identical to running the lane alone.
+struct LaneRun {
+    /// Private io buffers, cloned from the executor's prototype with the
+    /// lane's input loaded (the lockstep path's per-lane rule).
+    io: Vec<Vec<f32>>,
+    /// Private tail-block mapping; dropped (blocks released to the
+    /// shared pool) when the lane finishes or aborts.
+    parena: PagedArena,
+    /// Private contiguous gather/scatter scratch.
+    scratch: Vec<f32>,
+    /// Next step to execute; the lane is finished when this reaches the
+    /// step count.
+    next_step: usize,
 }
 
 /// Graph executor over a planned arena.
@@ -182,6 +210,9 @@ pub struct Executor {
     schedule: levels::Schedule,
     /// Op executions dispatched to parallel workers so far.
     ops_parallel: u64,
+    /// Continuous-decode lanes in flight (paged mode only), indexed by
+    /// arena lane. `Some` slots are open lanes; sized lazily to `batch`.
+    lane_runs: Vec<Option<LaneRun>>,
 }
 
 impl Executor {
@@ -503,6 +534,7 @@ impl Executor {
             level_sets,
             schedule,
             ops_parallel: 0,
+            lane_runs: Vec::new(),
         })
     }
 
@@ -763,6 +795,11 @@ impl Executor {
         if batch == self.batch {
             return Ok(());
         }
+        if self.lanes_live() > 0 {
+            // A re-plan swaps the resident arena out from under every
+            // open lane's prefix stripes.
+            return Err("cannot re-plan for a new batch while continuous lanes are open".into());
+        }
         let scaled = self.base_records.scaled(batch);
         let plan: Arc<OffsetPlan> = match (&self.service, &self.request) {
             (Some(svc), Some(req)) => {
@@ -861,6 +898,11 @@ impl Executor {
     pub fn run_batch(&mut self, input: &[f32], n: usize) -> Result<Vec<f32>, String> {
         if n == 0 {
             return Err("batch must be positive".into());
+        }
+        if self.lanes_live() > 0 {
+            // The sequential loop reuses the shared io scratch and lane
+            // stripes continuous lanes may occupy.
+            return Err("cannot run_batch while continuous lanes are open".into());
         }
         if self.input_io.len() != 1 {
             return Err(format!(
@@ -1059,6 +1101,141 @@ impl Executor {
         self.paged.is_some()
     }
 
+    /// Lanes the resident arena can host concurrently — the continuous
+    /// scheduler's admission cap (equal to [`Self::batch`]).
+    pub fn lane_capacity(&self) -> usize {
+        self.batch
+    }
+
+    /// Continuous-decode lanes currently open.
+    pub fn lanes_live(&self) -> usize {
+        self.lane_runs.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Admit one request into arena lane `lane` mid-stream: load `input`
+    /// and set up the lane's private state (io buffers, tail block
+    /// mapping, scratch — see [`LaneRun`]). Paged mode only; the lane
+    /// must be idle and within [`Self::lane_capacity`]. The lane then
+    /// advances one wave at a time through [`Self::lane_advance`],
+    /// interleaved freely with other open lanes, and surrenders its
+    /// output (and its tail blocks) at [`Self::lane_finish`].
+    pub fn lane_open(&mut self, lane: usize, input: &[f32]) -> Result<(), String> {
+        if self.paged.is_none() {
+            return Err("continuous lanes require paged decode mode".into());
+        }
+        if self.input_io.len() != 1 {
+            return Err(format!(
+                "continuous lanes support single-input graphs; this graph has {} inputs",
+                self.input_io.len()
+            ));
+        }
+        if lane >= self.batch {
+            return Err(format!("lane {lane} out of range (capacity {})", self.batch));
+        }
+        let in_elems = self.io[self.input_io[0]].len();
+        if input.len() != in_elems {
+            return Err(format!("lane input has {} elems, expected {in_elems}", input.len()));
+        }
+        if self.lane_runs.len() < self.batch {
+            self.lane_runs.resize_with(self.batch, || None);
+        }
+        if self.lane_runs[lane].is_some() {
+            return Err(format!("lane {lane} is already open"));
+        }
+        // Private io buffers: the shared slots are scratch the sequential
+        // loop reuses across lanes (the lockstep path's per-lane rule).
+        let mut io = self.io.clone();
+        io[self.input_io[0]].copy_from_slice(input);
+        self.lane_runs[lane] = Some(LaneRun {
+            io,
+            parena: PagedArena::new(Arc::clone(&self.pool), self.base_records.len()),
+            scratch: Vec::new(),
+            next_step: 0,
+        });
+        Ok(())
+    }
+
+    /// Advance an open lane through its next wave: execute steps up to
+    /// and including the next §7 wave boundary (or to the end of the
+    /// graph), per-lane step order identical to the sequential paged
+    /// loop. Returns `Ok(true)` when the lane has executed every step
+    /// and is ready for [`Self::lane_finish`]. This is the scheduler's
+    /// preemption point — between two calls the executor is free to
+    /// advance other lanes, admit new ones, or retire finished ones.
+    pub fn lane_advance(&mut self, lane: usize) -> Result<bool, String> {
+        let poison = self.poison_dead;
+        let mode = self.mode;
+        let mut lr = self
+            .lane_runs
+            .get_mut(lane)
+            .and_then(Option::take)
+            .ok_or_else(|| format!("lane {lane} is not open"))?;
+        let done;
+        {
+            let Executor { steps, arena, weights, paged, .. } = self;
+            let ps = paged.as_mut().expect("open lane outside paged mode");
+            let end = steps.len();
+            // Boundary `b` means "after executing op `b`, a wave of sizes
+            // resolves" — and step index == op id — so this wave's chunk
+            // is `next_step..=b`.
+            let stop = ps
+                .dynamic
+                .boundaries()
+                .into_iter()
+                .find(|&b| b >= lr.next_step)
+                .map_or(end, |b| (b + 1).min(end));
+            for si in lr.next_step..stop {
+                exec_paged_step_ctx(
+                    steps,
+                    arena,
+                    weights,
+                    &mut lr.io,
+                    &ps.tail_words,
+                    &mut lr.parena,
+                    &mut lr.scratch,
+                    &mut ps.resolutions,
+                    si,
+                    lane,
+                    poison,
+                    mode,
+                );
+            }
+            lr.next_step = stop;
+            done = stop >= end;
+        }
+        self.lane_runs[lane] = Some(lr);
+        Ok(done)
+    }
+
+    /// Retire a finished lane: return its first graph output (the
+    /// serving payload, matching [`Self::run_batch`]) and drop the
+    /// lane's private state — any still-mapped tail blocks return to the
+    /// shared pool, and the lane is immediately admissible again.
+    pub fn lane_finish(&mut self, lane: usize) -> Result<Vec<f32>, String> {
+        match self.lane_runs.get(lane).and_then(|s| s.as_ref()) {
+            None => return Err(format!("lane {lane} is not open")),
+            Some(lr) if lr.next_step < self.steps.len() => {
+                return Err(format!(
+                    "lane {lane} has not finished (step {} of {})",
+                    lr.next_step,
+                    self.steps.len()
+                ))
+            }
+            Some(_) => {}
+        }
+        let mut lr = self.lane_runs[lane].take().expect("checked open above");
+        Ok(std::mem::take(&mut lr.io[self.output_io[0]]))
+    }
+
+    /// Abandon an open lane without collecting output (admission error
+    /// recovery): its private state is dropped and its tail blocks
+    /// return to the shared pool. No-op on an idle lane.
+    pub fn lane_abort(&mut self, lane: usize) {
+        if let Some(slot) = self.lane_runs.get_mut(lane) {
+            *slot = None;
+        }
+    }
+
     /// Run one lane through the level schedule: conflict-free groups of
     /// same-level steps execute concurrently on a `thread::scope` worker
     /// pool, each op writing its own validator-disjoint arena span through
@@ -1115,197 +1292,34 @@ impl Executor {
         self.exec_step_inner(si, lane, self.poison_dead)
     }
 
-    /// One step of the paged sequential loop. Steps touching no tail
-    /// record run the ordinary resident path; a step touching the tail
-    /// maps its output's blocks (first touch — by profile validation the
-    /// record's wave boundary has already passed), gathers paged operands
-    /// into contiguous scratch, dispatches the *same* kernel the resident
-    /// path uses (bit-identity), scatters a paged output back, and
-    /// releases every record dying at this step — tail blocks return to
-    /// the shared pool immediately.
+    /// One step of the paged sequential loop, against the executor-owned
+    /// [`PagedState`] (see [`exec_paged_step_ctx`], which continuous
+    /// lanes share verbatim).
     fn exec_step_paged(&mut self, si: usize, lane: usize) {
         let poison = self.poison_dead;
         let mode = self.mode;
-        let touches_tail = {
-            let ps = self.paged.as_ref().expect("paged step outside paged mode");
-            let step = &self.steps[si];
-            let is_tail = |l: &Loc| matches!(l, Loc::Arena(r) if ps.tail_words[*r].is_some());
-            step.ins.iter().any(is_tail) || is_tail(&step.out)
-        };
-        if !touches_tail {
-            self.exec_step(si, lane);
-            return;
-        }
         let Executor { steps, arena, weights, io, paged, .. } = self;
         let ps = paged.as_mut().expect("paged step outside paged mode");
-        let PagedState { tail_words, arena: parena, scratch, resolutions, .. } = ps;
-        let step = &steps[si];
-        let tail_of = |l: &Loc| match l {
-            Loc::Arena(r) => tail_words[*r].map(|w| (*r, w)),
-            _ => None,
-        };
-
-        // Map the output's blocks at its producing step: the record's
-        // wave boundary has passed (`known_at < first_op`), so this is
-        // the "tail tensors allocate incrementally at wave boundaries"
-        // step of the paged protocol.
-        if let Some((orec, w)) = tail_of(&step.out) {
-            if !parena.is_mapped(orec) {
-                parena.map(orec, w);
-                *resolutions += 1;
-            }
-        }
-
-        // Carve one contiguous scratch run per paged operand:
-        // [out | in …], pairwise disjoint by construction.
-        let out_words = tail_of(&step.out).map_or(0, |(_, w)| w);
-        let in_words: usize = step.ins.iter().filter_map(|l| tail_of(l).map(|(_, w)| w)).sum();
-        if scratch.len() < out_words + in_words {
-            scratch.resize(out_words + in_words, 0.0);
-        }
-        let (out_scr, mut rest) = scratch.split_at_mut(out_words);
-        let mut gathered: Vec<&[f32]> = Vec::new();
-        for l in &step.ins {
-            if let Some((r, w)) = tail_of(l) {
-                let (chunk, r2) = rest.split_at_mut(w);
-                parena.gather(r, chunk);
-                gathered.push(&*chunk);
-                rest = r2;
-            }
-        }
-        let mut git = gathered.into_iter();
-
-        match step.out {
-            Loc::Arena(orec) if tail_words[orec].is_some() => {
-                // Paged output: every other operand is read-only.
-                let ins: Vec<&[f32]> = step
-                    .ins
-                    .iter()
-                    .map(|l| match l {
-                        Loc::Arena(r) if tail_words[*r].is_some() => git.next().unwrap(),
-                        Loc::Arena(r) => arena.tensor_lane(*r, lane),
-                        Loc::Io(i) => io[*i].as_slice(),
-                        Loc::Weight(w) => weights[*w].as_slice(),
-                    })
-                    .collect();
-                dispatch(&step.instr, &ins, out_scr, mode);
-                parena.scatter(orec, out_scr);
-            }
-            Loc::Arena(orec) => {
-                // Resident output with paged inputs: split the resident
-                // operands as usual, weave the gathered stripes back in
-                // op-input order.
-                let resident_in: Vec<usize> = step
-                    .ins
-                    .iter()
-                    .filter_map(|l| match l {
-                        Loc::Arena(r) if tail_words[*r].is_none() => Some(*r),
-                        _ => None,
-                    })
-                    .collect();
-                let (out, resident_slices) = arena.split_io_lane(orec, &resident_in, lane);
-                let mut rit = resident_slices.into_iter();
-                let ins: Vec<&[f32]> = step
-                    .ins
-                    .iter()
-                    .map(|l| match l {
-                        Loc::Arena(r) if tail_words[*r].is_some() => git.next().unwrap(),
-                        Loc::Arena(_) => rit.next().unwrap(),
-                        Loc::Io(i) => io[*i].as_slice(),
-                        Loc::Weight(w) => weights[*w].as_slice(),
-                    })
-                    .collect();
-                dispatch(&step.instr, &ins, out, mode);
-            }
-            Loc::Io(oi) => {
-                let mut out = std::mem::take(&mut io[oi]);
-                {
-                    let ins: Vec<&[f32]> = step
-                        .ins
-                        .iter()
-                        .map(|l| match l {
-                            Loc::Arena(r) if tail_words[*r].is_some() => git.next().unwrap(),
-                            Loc::Arena(r) => arena.tensor_lane(*r, lane),
-                            Loc::Io(i) => io[*i].as_slice(),
-                            Loc::Weight(w) => weights[*w].as_slice(),
-                        })
-                        .collect();
-                    dispatch(&step.instr, &ins, &mut out, mode);
-                }
-                io[oi] = out;
-            }
-            Loc::Weight(_) => unreachable!("op writes to a weight"),
-        }
-
-        // Deaths: a tail record's blocks return to the shared pool at
-        // once; resident records poison as usual (a tail record's last op
-        // always consumes it, so tail deaths only ever occur here).
-        for r in steps[si].dies.clone() {
-            if tail_words[r].is_some() {
-                parena.unmap(r);
-            } else if poison {
-                arena.poison_lane(r, lane);
-            }
-        }
-        debug_assert!(arena.guards_intact(), "arena guard overwritten");
+        exec_paged_step_ctx(
+            steps,
+            arena,
+            weights,
+            io,
+            &ps.tail_words,
+            &mut ps.arena,
+            &mut ps.scratch,
+            &mut ps.resolutions,
+            si,
+            lane,
+            poison,
+            mode,
+        );
     }
 
     fn exec_step_inner(&mut self, si: usize, lane: usize, poison: bool) {
-        // Split borrows: steps are read-only during execution.
-        let step = &self.steps[si];
         let mode = self.mode;
-
-        // Resolve the output buffer and input slices. Two cases by output
-        // location; weights/io inputs never alias anything.
-        match step.out {
-            Loc::Arena(orec) => {
-                let arena_in: Vec<usize> = step
-                    .ins
-                    .iter()
-                    .filter_map(|l| match l {
-                        Loc::Arena(r) => Some(*r),
-                        _ => None,
-                    })
-                    .collect();
-                let (out, arena_slices) = self.arena.split_io_lane(orec, &arena_in, lane);
-                let mut it = arena_slices.into_iter();
-                let ins: Vec<&[f32]> = step
-                    .ins
-                    .iter()
-                    .map(|l| match l {
-                        Loc::Arena(_) => it.next().unwrap(),
-                        Loc::Io(i) => self.io[*i].as_slice(),
-                        Loc::Weight(w) => self.weights[*w].as_slice(),
-                    })
-                    .collect();
-                dispatch(&step.instr, &ins, out, mode);
-            }
-            Loc::Io(oi) => {
-                let mut out = std::mem::take(&mut self.io[oi]);
-                {
-                    let ins: Vec<&[f32]> = step
-                        .ins
-                        .iter()
-                        .map(|l| match l {
-                            Loc::Arena(r) => self.arena.tensor_lane(*r, lane),
-                            Loc::Io(i) => self.io[*i].as_slice(),
-                            Loc::Weight(w) => self.weights[*w].as_slice(),
-                        })
-                        .collect();
-                    dispatch(&step.instr, &ins, &mut out, mode);
-                }
-                self.io[oi] = out;
-            }
-            Loc::Weight(_) => unreachable!("op writes to a weight"),
-        }
-
-        if poison {
-            let dies = self.steps[si].dies.clone();
-            for r in dies {
-                self.arena.poison_lane(r, lane);
-            }
-        }
-        debug_assert!(self.arena.guards_intact(), "arena guard overwritten");
+        let Executor { steps, arena, weights, io, .. } = self;
+        exec_resident_step_ctx(steps, arena, weights, io, si, lane, poison, mode);
     }
 }
 
@@ -1354,6 +1368,216 @@ fn validate_dynamic_profile(
         }
     }
     Ok(())
+}
+
+/// One resident (non-paged) sequential step, parameterized over the io
+/// buffers so the classic per-lane loop (`Executor::exec_step_inner`,
+/// executor-owned io) and continuous lanes ([`LaneRun`]-private io) run
+/// the *same* code — bit-identity between the paths follows from sharing
+/// one implementation, not from keeping two in sync.
+fn exec_resident_step_ctx(
+    steps: &[Step],
+    arena: &mut Arena,
+    weights: &[Vec<f32>],
+    io: &mut [Vec<f32>],
+    si: usize,
+    lane: usize,
+    poison: bool,
+    mode: KernelMode,
+) {
+    let step = &steps[si];
+
+    // Resolve the output buffer and input slices. Two cases by output
+    // location; weights/io inputs never alias anything.
+    match step.out {
+        Loc::Arena(orec) => {
+            let arena_in: Vec<usize> = step
+                .ins
+                .iter()
+                .filter_map(|l| match l {
+                    Loc::Arena(r) => Some(*r),
+                    _ => None,
+                })
+                .collect();
+            let (out, arena_slices) = arena.split_io_lane(orec, &arena_in, lane);
+            let mut it = arena_slices.into_iter();
+            let ins: Vec<&[f32]> = step
+                .ins
+                .iter()
+                .map(|l| match l {
+                    Loc::Arena(_) => it.next().unwrap(),
+                    Loc::Io(i) => io[*i].as_slice(),
+                    Loc::Weight(w) => weights[*w].as_slice(),
+                })
+                .collect();
+            dispatch(&step.instr, &ins, out, mode);
+        }
+        Loc::Io(oi) => {
+            let mut out = std::mem::take(&mut io[oi]);
+            {
+                let ins: Vec<&[f32]> = step
+                    .ins
+                    .iter()
+                    .map(|l| match l {
+                        Loc::Arena(r) => arena.tensor_lane(*r, lane),
+                        Loc::Io(i) => io[*i].as_slice(),
+                        Loc::Weight(w) => weights[*w].as_slice(),
+                    })
+                    .collect();
+                dispatch(&step.instr, &ins, &mut out, mode);
+            }
+            io[oi] = out;
+        }
+        Loc::Weight(_) => unreachable!("op writes to a weight"),
+    }
+
+    if poison {
+        for r in steps[si].dies.clone() {
+            arena.poison_lane(r, lane);
+        }
+    }
+    debug_assert!(arena.guards_intact(), "arena guard overwritten");
+}
+
+/// One step of the paged loop, parameterized over the lane's io buffers
+/// and tail mapping — shared verbatim by the sequential paged path
+/// (`Executor::exec_step_paged`, executor-owned [`PagedState`]) and
+/// continuous lanes (`Executor::lane_advance`, [`LaneRun`]-private
+/// mapping). Steps touching no tail record run the ordinary resident
+/// path; a step touching the tail maps its output's blocks (first touch
+/// — by profile validation the record's wave boundary has already
+/// passed), gathers paged operands into contiguous scratch, dispatches
+/// the *same* kernel the resident path uses (bit-identity), scatters a
+/// paged output back, and releases every record dying at this step —
+/// tail blocks return to the shared pool immediately.
+#[allow(clippy::too_many_arguments)]
+fn exec_paged_step_ctx(
+    steps: &[Step],
+    arena: &mut Arena,
+    weights: &[Vec<f32>],
+    io: &mut [Vec<f32>],
+    tail_words: &[Option<usize>],
+    parena: &mut PagedArena,
+    scratch: &mut Vec<f32>,
+    resolutions: &mut u64,
+    si: usize,
+    lane: usize,
+    poison: bool,
+    mode: KernelMode,
+) {
+    let step = &steps[si];
+    let is_tail = |l: &Loc| matches!(l, Loc::Arena(r) if tail_words[*r].is_some());
+    if !step.ins.iter().any(is_tail) && !is_tail(&step.out) {
+        return exec_resident_step_ctx(steps, arena, weights, io, si, lane, poison, mode);
+    }
+    let tail_of = |l: &Loc| match l {
+        Loc::Arena(r) => tail_words[*r].map(|w| (*r, w)),
+        _ => None,
+    };
+
+    // Map the output's blocks at its producing step: the record's
+    // wave boundary has passed (`known_at < first_op`), so this is
+    // the "tail tensors allocate incrementally at wave boundaries"
+    // step of the paged protocol.
+    if let Some((orec, w)) = tail_of(&step.out) {
+        if !parena.is_mapped(orec) {
+            parena.map(orec, w);
+            *resolutions += 1;
+        }
+    }
+
+    // Carve one contiguous scratch run per paged operand:
+    // [out | in …], pairwise disjoint by construction.
+    let out_words = tail_of(&step.out).map_or(0, |(_, w)| w);
+    let in_words: usize = step.ins.iter().filter_map(|l| tail_of(l).map(|(_, w)| w)).sum();
+    if scratch.len() < out_words + in_words {
+        scratch.resize(out_words + in_words, 0.0);
+    }
+    let (out_scr, mut rest) = scratch.split_at_mut(out_words);
+    let mut gathered: Vec<&[f32]> = Vec::new();
+    for l in &step.ins {
+        if let Some((r, w)) = tail_of(l) {
+            let (chunk, r2) = rest.split_at_mut(w);
+            parena.gather(r, chunk);
+            gathered.push(&*chunk);
+            rest = r2;
+        }
+    }
+    let mut git = gathered.into_iter();
+
+    match step.out {
+        Loc::Arena(orec) if tail_words[orec].is_some() => {
+            // Paged output: every other operand is read-only.
+            let ins: Vec<&[f32]> = step
+                .ins
+                .iter()
+                .map(|l| match l {
+                    Loc::Arena(r) if tail_words[*r].is_some() => git.next().unwrap(),
+                    Loc::Arena(r) => arena.tensor_lane(*r, lane),
+                    Loc::Io(i) => io[*i].as_slice(),
+                    Loc::Weight(w) => weights[*w].as_slice(),
+                })
+                .collect();
+            dispatch(&step.instr, &ins, out_scr, mode);
+            parena.scatter(orec, out_scr);
+        }
+        Loc::Arena(orec) => {
+            // Resident output with paged inputs: split the resident
+            // operands as usual, weave the gathered stripes back in
+            // op-input order.
+            let resident_in: Vec<usize> = step
+                .ins
+                .iter()
+                .filter_map(|l| match l {
+                    Loc::Arena(r) if tail_words[*r].is_none() => Some(*r),
+                    _ => None,
+                })
+                .collect();
+            let (out, resident_slices) = arena.split_io_lane(orec, &resident_in, lane);
+            let mut rit = resident_slices.into_iter();
+            let ins: Vec<&[f32]> = step
+                .ins
+                .iter()
+                .map(|l| match l {
+                    Loc::Arena(r) if tail_words[*r].is_some() => git.next().unwrap(),
+                    Loc::Arena(_) => rit.next().unwrap(),
+                    Loc::Io(i) => io[*i].as_slice(),
+                    Loc::Weight(w) => weights[*w].as_slice(),
+                })
+                .collect();
+            dispatch(&step.instr, &ins, out, mode);
+        }
+        Loc::Io(oi) => {
+            let mut out = std::mem::take(&mut io[oi]);
+            {
+                let ins: Vec<&[f32]> = step
+                    .ins
+                    .iter()
+                    .map(|l| match l {
+                        Loc::Arena(r) if tail_words[*r].is_some() => git.next().unwrap(),
+                        Loc::Arena(r) => arena.tensor_lane(*r, lane),
+                        Loc::Io(i) => io[*i].as_slice(),
+                        Loc::Weight(w) => weights[*w].as_slice(),
+                    })
+                    .collect();
+                dispatch(&step.instr, &ins, &mut out, mode);
+            }
+            io[oi] = out;
+        }
+        Loc::Weight(_) => unreachable!("op writes to a weight"),
+    }
+
+    // Deaths: a tail record's blocks return to the shared pool at
+    // once; resident records poison as usual (a tail record's last op
+    // always consumes it, so tail deaths only ever occur here).
+    for r in steps[si].dies.clone() {
+        if tail_words[r].is_some() {
+            parena.unmap(r);
+        } else if poison {
+            arena.poison_lane(r, lane);
+        }
+    }
+    debug_assert!(arena.guards_intact(), "arena guard overwritten");
 }
 
 /// Execute one step through a [`ParallelArena`] view — the worker-thread
@@ -1967,6 +2191,91 @@ mod tests {
         assert_eq!(paged.run_batch(&flat, n).unwrap(), a);
         assert_eq!(paged.ops_parallel(), 0, "paged mode must never dispatch workers");
         assert_eq!(svc.pool().blocks().blocks_in_use(), 0, "blocks leaked past the batch");
+    }
+
+    #[test]
+    fn continuous_lanes_interleave_bit_identically() {
+        let g = tiny_net();
+        let n_in = g.tensor(g.inputs[0]).num_elements();
+        let mut rng = SplitMix64::new(77);
+        let mut flat = vec![0f32; 2 * n_in];
+        rng.fill_f32(&mut flat, 1.0);
+        let records = UsageRecords::from_graph(&g);
+        let dynamic = DynamicRecords::decode_tail(&records, 2);
+        let svc = PlanService::shared();
+        let req = PlanRequest::new().with_batch(2);
+        let mut resident =
+            Executor::with_request(&g, Arc::clone(&svc), &req, Some(dynamic.clone()), 7).unwrap();
+        let want = resident.run_batch(&flat, 2).unwrap();
+        let out_elems = want.len() / 2;
+        let mut ex =
+            Executor::with_request_paged(&g, Arc::clone(&svc), &req, dynamic, 7).unwrap();
+        ex.set_poison_dead(true);
+        assert_eq!(ex.lane_capacity(), 2);
+        // Open lane 0, run it one wave, then admit lane 1 mid-stream —
+        // the wave-boundary admission the continuous scheduler performs.
+        ex.lane_open(0, &flat[..n_in]).unwrap();
+        let mut f0 = ex.lane_advance(0).unwrap();
+        assert!(!f0, "tiny_net must have a wave boundary before the end");
+        ex.lane_open(1, &flat[n_in..]).unwrap();
+        assert_eq!(ex.lanes_live(), 2);
+        // The shared io/arena paths are fenced off while lanes are open.
+        assert!(ex.run_batch(&flat, 2).is_err());
+        assert!(ex.ensure_batch(4).is_err());
+        // Interleave both lanes to completion, the younger lane first.
+        let mut f1 = false;
+        for _ in 0..64 {
+            if !f1 {
+                f1 = ex.lane_advance(1).unwrap();
+            }
+            if !f0 {
+                f0 = ex.lane_advance(0).unwrap();
+            }
+            if f0 && f1 {
+                break;
+            }
+        }
+        assert!(f0 && f1, "lanes did not finish within the step budget");
+        let o1 = ex.lane_finish(1).unwrap();
+        let o0 = ex.lane_finish(0).unwrap();
+        assert_eq!(o0.as_slice(), &want[..out_elems], "lane 0 diverged from batch-and-drain");
+        assert_eq!(o1.as_slice(), &want[out_elems..], "lane 1 diverged from batch-and-drain");
+        assert_eq!(ex.lanes_live(), 0);
+        assert_eq!(svc.pool().blocks().blocks_in_use(), 0, "lane blocks leaked");
+        // A retired lane is immediately admissible again, and the shared
+        // sequential path is usable once every lane has drained.
+        ex.lane_open(0, &flat[n_in..]).unwrap();
+        while !ex.lane_advance(0).unwrap() {}
+        assert_eq!(ex.lane_finish(0).unwrap().as_slice(), &want[out_elems..]);
+        assert_eq!(ex.run_batch(&flat, 2).unwrap(), want);
+    }
+
+    #[test]
+    fn continuous_lane_misuse_is_refused() {
+        let g = tiny_net();
+        let x = input_for(&g, 3);
+        let svc = PlanService::shared();
+        // Lanes require paged mode.
+        let mut resident = Executor::with_service(&g, Arc::clone(&svc), "greedy-size", 7).unwrap();
+        assert!(resident.lane_open(0, &x).is_err());
+        let records = UsageRecords::from_graph(&g);
+        let dynamic = DynamicRecords::decode_tail(&records, 2);
+        let mut ex =
+            Executor::with_request_paged(&g, svc, &PlanRequest::new(), dynamic, 7).unwrap();
+        // Out-of-range lane, wrong input width, double-open, idle-lane ops.
+        assert!(ex.lane_open(1, &x).is_err(), "capacity is 1");
+        assert!(ex.lane_open(0, &x[..x.len() - 1]).is_err());
+        assert!(ex.lane_advance(0).is_err());
+        assert!(ex.lane_finish(0).is_err());
+        ex.lane_open(0, &x).unwrap();
+        assert!(ex.lane_open(0, &x).is_err(), "lane is already open");
+        assert!(ex.lane_finish(0).is_err(), "lane has not finished");
+        // Abort releases the lane without output.
+        ex.lane_abort(0);
+        assert_eq!(ex.lanes_live(), 0);
+        ex.lane_open(0, &x).unwrap();
+        while !ex.lane_advance(0).unwrap() {}
+        assert!(ex.lane_finish(0).is_ok());
     }
 
     #[test]

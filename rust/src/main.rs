@@ -11,8 +11,8 @@
 //! tensorarena cachesim <model> [kib]                # §1 locality claim
 //! tensorarena serve [--model M] [--strategy S] [--order O] [--requests N]
 //!                   [--max-batch B] [--wait-ms W] [--artifacts DIR]
-//!                   [--mem-budget BYTES] [--plan-dir DIR]
-//!                   [--threads T] [--dynamic [FRAC]] [--paged] # E2E serving
+//!                   [--mem-budget BYTES] [--plan-dir DIR] [--threads T]
+//!                   [--dynamic [FRAC]] [--paged] [--continuous] # E2E serving
 //! tensorarena order-ablation [model] [--seed S] [--trials N] # §7.1 order table
 //! tensorarena dynamic-ablation [model] [--frac F1,F2,...]    # §7 overhead table
 //! tensorarena models                                # list zoo models
@@ -51,6 +51,15 @@
 //! that materializes them and release the step they die, and budget
 //! admission charges prefix peak + tail block demand. Outputs stay
 //! bit-identical to the resident path.
+//!
+//! `--continuous` (implies `--paged`) replaces batch-and-drain with the
+//! continuous-batching scheduler: up to `--max-batch` decode lanes run in
+//! flight, finished lanes retire at §7 wave boundaries (their tail blocks
+//! return to the shared pool) and queued requests are admitted into the
+//! vacated slots immediately — no request waits for a batch to drain.
+//! Budget admission charges the tail block demand *per live lane*, so the
+//! resolved lane cap keeps every wave boundary under `--mem-budget`; the
+//! bounded queue refuses overload with a typed `QueueFull`.
 //!
 //! Strategy names come from `planner::registry` — the single list the
 //! tables, the plan cache, and this CLI all share.
@@ -559,11 +568,19 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut plan_dir: Option<String> = None;
     let mut dynamic: Option<f64> = None;
     let mut paged = false;
+    let mut continuous = false;
     let mut threads = 1usize;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--paged" => {
+                paged = true;
+                i += 1;
+            }
+            "--continuous" => {
+                // Continuous batching is lane-granular paged serving,
+                // which in turn is a mode of wave-aware serving.
+                continuous = true;
                 paged = true;
                 i += 1;
             }
@@ -676,6 +693,13 @@ fn cmd_serve(args: &[String]) -> i32 {
                      paged decode tails apply to the pure-Rust executor path only"
                 );
             }
+            if continuous {
+                eprintln!(
+                    "--continuous ignored: the PJRT AOT path executes whole compiled \
+                     batches; lane-granular serving applies to the pure-Rust executor \
+                     path only"
+                );
+            }
             if threads > 1 {
                 eprintln!(
                     "--threads ignored: the PJRT AOT path runs the compiled executable; \
@@ -709,6 +733,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         plan_dir.as_deref(),
         dynamic,
         paged,
+        continuous,
         threads,
     ) {
         Ok(()) => 0,
@@ -735,7 +760,13 @@ fn cmd_serve(args: &[String]) -> i32 {
 /// pool (bit-identical outputs — see `docs/ARCHITECTURE.md`). With `paged`
 /// (which implies `dynamic` at its default fraction), the decode tail is
 /// served from the shared block pool: only the static prefix stays
-/// resident, and admission charges prefix peak + tail block demand.
+/// resident, and admission charges prefix peak + tail block demand. With
+/// `continuous` (which implies `paged`), the worker runs the
+/// continuous-batching scheduler — up to the cap decode lanes in flight,
+/// wave-boundary admission, bounded-queue backpressure — and admission
+/// charges the tail demand per live lane; the storm below then keeps a
+/// sliding window of outstanding requests so admissions actually overlap
+/// in-flight decode loops instead of flooding the bounded queue.
 #[allow(clippy::too_many_arguments)]
 fn serve_pure(
     model: &str,
@@ -748,6 +779,7 @@ fn serve_pure(
     plan_dir: Option<&str>,
     dynamic: Option<f64>,
     paged: bool,
+    continuous: bool,
     threads: usize,
 ) -> Result<(), String> {
     use tensorarena::arena::paged::BLOCK_WORDS;
@@ -846,11 +878,16 @@ fn serve_pure(
     if let Some(budget) = mem_budget {
         let cap = match &decode {
             // Paged admission mirrors the engine's walk: the footprint is
-            // prefix peak (scales with batch) plus a flat tail block term.
+            // prefix peak (scales with batch) plus the tail block term —
+            // flat for drain serving (one lane's stripes map at a time),
+            // per live lane for continuous serving (every lane keeps its
+            // own tail mapped across wave boundaries).
             Some((_, dyn_recs)) if paged => {
-                let tail = dyn_recs.tail_block_demand(BLOCK_WORDS) * BLOCK_WORDS * 4;
                 let mut best = 0;
                 for b in 1..=max_batch.max(1) {
+                    let lanes = if continuous { b } else { 1 };
+                    let tail =
+                        dyn_recs.tail_block_demand_lanes(BLOCK_WORDS, lanes) * BLOCK_WORDS * 4;
                     let p = service
                         .plan_dynamic(
                             dyn_recs,
@@ -899,30 +936,60 @@ fn serve_pure(
                     }
                     None => ExecutorEngine::for_request(&g, service, &req, 42),
                 };
-                Box::new(engine.expect("engine").with_max_batch(max_batch).with_threads(threads))
+                let engine =
+                    engine.expect("engine").with_max_batch(max_batch).with_threads(threads);
+                let engine = if continuous { engine.with_continuous() } else { engine };
+                Box::new(engine)
             },
             BatchPolicy {
                 max_batch,
                 max_wait: std::time::Duration::from_millis(wait_ms),
                 mem_budget,
+                continuous,
+                ..BatchPolicy::default()
             },
-        );
+        )
+        .map_err(|e| e.to_string())?;
     }
 
     let mut rng = SplitMix64::new(42);
     let mut input = vec![0f32; in_elems];
     let t0 = std::time::Instant::now();
-    let mut pending = Vec::with_capacity(requests);
-    for _ in 0..requests {
-        rng.fill_f32(&mut input, 1.0);
-        pending.push(router.submit(model, input.clone()));
-    }
-    let mut ok = 0;
-    for rx in pending {
+    // The continuous storm keeps a bounded window of outstanding requests:
+    // enough to keep every lane busy and new admissions overlapping
+    // in-flight decode loops, but below the server's queue depth so the
+    // closed-loop driver never trips its own backpressure. The drain storm
+    // submits everything up front, as before.
+    let window = if continuous {
+        (max_batch.max(1) + BatchPolicy::default().queue_depth / 2).min(requests.max(1))
+    } else {
+        requests.max(1)
+    };
+    let mut recv_one = |rx: std::sync::mpsc::Receiver<tensorarena::coordinator::Response>| {
         match rx.recv() {
-            Ok(Ok(_)) => ok += 1,
-            Ok(Err(e)) => eprintln!("request error: {e}"),
-            Err(_) => eprintln!("worker died"),
+            Ok(Ok(_)) => true,
+            Ok(Err(e)) => {
+                eprintln!("request error: {e}");
+                false
+            }
+            Err(_) => {
+                eprintln!("worker died");
+                false
+            }
+        }
+    };
+    let mut pending = std::collections::VecDeque::with_capacity(window);
+    let mut ok = 0usize;
+    for _ in 0..requests {
+        if pending.len() >= window && recv_one(pending.pop_front().expect("window is non-empty")) {
+            ok += 1;
+        }
+        rng.fill_f32(&mut input, 1.0);
+        pending.push_back(router.submit(model, input.clone()));
+    }
+    for rx in pending {
+        if recv_one(rx) {
+            ok += 1;
         }
     }
     let wall = t0.elapsed();
@@ -954,6 +1021,13 @@ fn serve_pure(
         snap.mean_queue_us as f64 / 1000.0,
         rejected,
     );
+    if continuous {
+        println!(
+            "continuous: {} request(s) admitted into in-flight decode loops \
+             (mean {:.2} lane(s) live at retirement, max {})",
+            snap.continuous_admissions, snap.mean_batch, snap.max_batch_seen,
+        );
+    }
     router.shutdown();
     let st = service.stats();
     // Report the arena at the engine's batch cap — what the serving box
@@ -1115,8 +1189,9 @@ fn serve_bench(
             max_batch,
             max_wait: std::time::Duration::from_millis(wait_ms),
             mem_budget,
+            ..BatchPolicy::default()
         },
-    );
+    )?;
 
     let mut rng = SplitMix64::new(42);
     let mut input = vec![0f32; 32 * 32 * 3];

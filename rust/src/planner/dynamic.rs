@@ -163,9 +163,11 @@ impl DynamicRecords {
     /// tail record holds blocks exactly over its usage interval — mapped
     /// at its producing wave boundary, freed at its last use — so this,
     /// not the worst-wave arena peak, is what budget admission charges
-    /// the tail. Computed on these records' sizes as-is; per-lane paged
-    /// execution maps one lane's stripes at a time, so per-sample records
-    /// give the demand for any batch.
+    /// the tail. Computed on these records' sizes as-is. This is the
+    /// demand of **one** lane: the sequential batch loop maps one lane's
+    /// stripes at a time, so per-sample records give its demand for any
+    /// batch, while continuous serving keeps several lanes' tails mapped
+    /// at once — charge [`Self::tail_block_demand_lanes`] there.
     pub fn tail_block_demand(&self, block_words: usize) -> usize {
         assert!(block_words > 0, "block size must be positive");
         (0..self.num_ops)
@@ -180,6 +182,17 @@ impl DynamicRecords {
             })
             .max()
             .unwrap_or(0)
+    }
+
+    /// Peak simultaneous block demand of `lanes` concurrently-decoding
+    /// requests: continuous serving admits each request into its own lane
+    /// with a private tail block mapping, so at a wave boundary up to
+    /// `lanes` tails hold their worst-op block sets at once. Each lane
+    /// maps the same per-sample records onto disjoint block regions, so
+    /// the bound is exactly `lanes ×` the single-lane demand (saturating;
+    /// the budget walk treats overflow as unservable).
+    pub fn tail_block_demand_lanes(&self, block_words: usize, lanes: usize) -> usize {
+        self.tail_block_demand(block_words).saturating_mul(lanes)
     }
 
     /// Number of records.
@@ -439,6 +452,14 @@ mod tests {
         // All-static sets have no tail demand.
         let static_set = dyn_set(&[(0, 2, 128, 0), (1, 3, 128, 0)], 4);
         assert_eq!(static_set.tail_block_demand(16), 0);
+        // Continuous lanes each hold a private mapping: the multi-lane
+        // demand scales linearly, and overflow saturates instead of
+        // wrapping into a fake small budget.
+        assert_eq!(dynamic.tail_block_demand_lanes(16, 1), 5);
+        assert_eq!(dynamic.tail_block_demand_lanes(16, 3), 15);
+        assert_eq!(dynamic.tail_block_demand_lanes(16, 0), 0);
+        assert_eq!(static_set.tail_block_demand_lanes(16, 8), 0);
+        assert_eq!(dynamic.tail_block_demand_lanes(16, usize::MAX), usize::MAX);
     }
 
     #[test]

@@ -176,8 +176,10 @@ fn server_under_budget_clamps_batches_and_counts_refusals() {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
                 mem_budget: Some(budget),
+                ..BatchPolicy::default()
             },
         )
+        .expect("spawn")
     };
     let pending: Vec<_> = (0..64)
         .map(|i| server.submit(vec![(i as f32) / 64.0; in_elems]))
@@ -298,8 +300,10 @@ fn annealed_order_serving_peak_and_admission_resolve_under_the_order() {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
                 mem_budget: Some(budget),
+                ..BatchPolicy::default()
             },
         )
+        .expect("spawn")
     };
     let pending: Vec<_> = (0..32)
         .map(|i| server.submit(vec![(i as f32) / 32.0; in_elems]))
@@ -327,8 +331,10 @@ fn echo_server_budget_cap_is_exact() {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             mem_budget: Some(350),
+            ..BatchPolicy::default()
         },
-    );
+    )
+    .expect("spawn");
     let pending: Vec<_> = (0..32).map(|i| server.submit(vec![i as f32])).collect();
     for rx in pending {
         rx.recv().unwrap().unwrap();

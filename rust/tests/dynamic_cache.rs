@@ -120,8 +120,10 @@ fn wave_aware_serving_is_bit_identical_and_amortized() {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
                 mem_budget: None,
+                ..BatchPolicy::default()
             },
         )
+        .expect("spawn")
     };
     // Reference outputs from a static engine with the same weights seed.
     let mut reference = ExecutorEngine::new(&g, PlanService::shared(), "greedy-size", 7).unwrap();
@@ -189,8 +191,10 @@ fn dynamic_budget_admission_refuses_over_peak_bursts() {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
                 mem_budget: Some(budget),
+                ..BatchPolicy::default()
             },
         )
+        .expect("spawn")
     };
     // An oversized pre-batched burst is refused with the typed error.
     let refusal = server.submit(vec![0.1f32; 8 * in_elems]).recv().unwrap();

@@ -170,7 +170,8 @@ fn full_serving_path_through_coordinator() {
             }
         },
         BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2), ..BatchPolicy::default() },
-    );
+    )
+    .expect("spawn");
     let mut rng = SplitMix64::new(4);
     let mut input = vec![0f32; IN_ELEMS];
     let pending: Vec<_> = (0..16)

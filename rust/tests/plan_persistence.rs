@@ -411,8 +411,10 @@ fn serve_once(dir: &std::path::Path, burst: usize, order: OrderStrategy) -> u64 
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
                 mem_budget: Some(budget),
+                ..BatchPolicy::default()
             },
         )
+        .expect("spawn")
     };
     let pending: Vec<_> = (0..burst)
         .map(|i| server.submit(vec![(i % 7) as f32 * 0.1; in_elems]))
