@@ -30,6 +30,10 @@
 //!   p50/p95 latency, throughput, and the count of requests admitted
 //!   into in-flight decode loops, outputs asserted bit-identical to the
 //!   sequential resident path;
+//! * quantized size classes: the same model planned and run at the i8/f16
+//!   `PlanRequest` dtype (`serve --dtype`) — planned footprint shrink vs
+//!   f32, end-to-end output drift, and the admission cap a fixed byte
+//!   budget resolves under each size class;
 //! * warm vs cold start: planner invocations and time-to-planned across a
 //!   plan-directory restart (`persist_dir` → `warm_start`);
 //! * kernel/thread trajectory: raw `Executor::run_batch` on mobilenet_v2
@@ -724,6 +728,80 @@ fn main() {
             ]));
             server.shutdown();
         }
+    }
+
+    // --- quantized size classes: i8/f16 footprint + admission ---
+    {
+        use harness::json::Value;
+        use tensorarena::exec::Executor;
+        use tensorarena::planner::Dtype;
+        let model = "mobilenet_v2";
+        let g = tensorarena::models::by_name(model).unwrap();
+        let in_elems = g.tensor(g.inputs[0]).num_elements();
+        let recs = UsageRecords::from_graph(&g);
+        let svc = PlanService::shared();
+        let batches: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+        println!("\nquantized size classes ({model}, i8/f16 vs f32, batch sweep {batches:?}):");
+        let f32_req = PlanRequest::new();
+        let mut f32_exec =
+            Executor::with_request(&g, Arc::clone(&svc), &f32_req, None, 7).expect("executor");
+        for (dtype, drift) in [(Dtype::I8, 0.25f32), (Dtype::F16, 0.05f32)] {
+            let req = PlanRequest::new().with_dtype(dtype);
+            let mut q_exec =
+                Executor::with_request(&g, Arc::clone(&svc), &req, None, 7).expect("executor");
+            let mut rng = SplitMix64::new(31);
+            for &b in batches {
+                let planned = svc.plan(&recs, &req.with_batch(b)).expect("plan").total;
+                let f32_planned = svc.plan(&recs, &f32_req.with_batch(b)).expect("plan").total;
+                let shrink = f32_planned as f64 / planned.max(1) as f64;
+                let mut input = vec![0f32; in_elems * b];
+                rng.fill_f32(&mut input, 1.0);
+                let want = f32_exec.run_batch(&input, b).expect("f32 run");
+                let got = q_exec.run_batch(&input, b).expect("quantized run");
+                let max_abs_err =
+                    want.iter().zip(&got).map(|(a, c)| (a - c).abs()).fold(0f32, f32::max);
+                let within_drift = max_abs_err <= drift;
+                assert!(
+                    within_drift,
+                    "{dtype} outputs drifted {max_abs_err} (> {drift}) at batch {b}"
+                );
+                println!(
+                    "  {dtype} b{b}: planned {:.1} KiB vs f32 {:.1} KiB ({shrink:.2}x), \
+                     max |err| {max_abs_err:.4}",
+                    planned as f64 / 1024.0,
+                    f32_planned as f64 / 1024.0,
+                );
+                cases.push(Value::Obj(vec![
+                    ("name".into(), Value::Str(format!("quantized/{dtype}/b{b}"))),
+                    ("dtype".into(), Value::Str(dtype.key().into())),
+                    ("batch".into(), Value::Num(b as f64)),
+                    ("planned_kib".into(), Value::Num(planned as f64 / 1024.0)),
+                    ("f32_planned_kib".into(), Value::Num(f32_planned as f64 / 1024.0)),
+                    ("shrink".into(), Value::Num(shrink)),
+                    ("max_abs_err".into(), Value::Num(f64::from(max_abs_err))),
+                    ("within_drift".into(), Value::Bool(within_drift)),
+                ]));
+            }
+        }
+        // Admission: the same byte budget must resolve a strictly larger
+        // i8 cap — the `serve --dtype i8 --mem-budget` acceptance property.
+        let budget = svc.plan(&recs, &f32_req.with_batch(2)).expect("plan").total;
+        let cap_f32 = svc.max_servable_batch(&recs, &f32_req, budget).expect("cap");
+        let cap_i8 = svc
+            .max_servable_batch(&recs, &PlanRequest::new().with_dtype(Dtype::I8), budget)
+            .expect("cap");
+        assert!(cap_i8 > cap_f32, "i8 must admit a larger batch under the same budget");
+        println!(
+            "  admission under {:.1} KiB: f32 cap {cap_f32} vs i8 cap {cap_i8}",
+            budget as f64 / 1024.0
+        );
+        cases.push(Value::Obj(vec![
+            ("name".into(), Value::Str("quantized/admission".into())),
+            ("budget_kib".into(), Value::Num(budget as f64 / 1024.0)),
+            ("cap_f32".into(), Value::Num(cap_f32 as f64)),
+            ("cap_i8".into(), Value::Num(cap_i8 as f64)),
+            ("larger".into(), Value::Bool(cap_i8 > cap_f32)),
+        ]));
     }
 
     // --- warm vs cold start: a plan-directory restart ---

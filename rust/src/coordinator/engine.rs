@@ -5,7 +5,7 @@ use crate::arena::paged::BLOCK_WORDS;
 use crate::exec::Executor;
 use crate::graph::Graph;
 use crate::planner::{
-    apply_order, AppliedOrder, DynamicMode, DynamicRecords, OrderStrategy, PlanRequest,
+    apply_order, AppliedOrder, Dtype, DynamicMode, DynamicRecords, OrderStrategy, PlanRequest,
     PlanService,
 };
 use crate::records::UsageRecords;
@@ -341,7 +341,9 @@ impl ExecutorEngine {
     /// Repeat inferences over the same resolved prefixes perform zero
     /// planner invocations — the decode-step amortization MAFAT-style
     /// serving needs. The request's own [`DynamicMode`] is immaterial: the
-    /// engine derives each lookup's resolution state itself.
+    /// engine derives each lookup's resolution state itself. Quantized
+    /// requests ([`PlanRequest::with_dtype`]) are rejected: i8/f16 size
+    /// classes serve statically only.
     pub fn for_request_dynamic(
         graph: &Graph,
         service: Arc<PlanService>,
@@ -349,6 +351,12 @@ impl ExecutorEngine {
         decode_from: usize,
         seed: u64,
     ) -> Result<Self> {
+        if req.dtype() != Dtype::F32 {
+            anyhow::bail!(
+                "quantized request '{req}' cannot serve wave-aware: i8/f16 size classes are \
+                 static-mode only"
+            );
+        }
         Self::construct(graph, service, req, Some(decode_from), false, seed)
     }
 
@@ -361,6 +369,8 @@ impl ExecutorEngine {
     /// whenever the tail grows the peak, at the cost of gather/scatter
     /// copies on tail-touching ops; outputs stay bit-identical. Budget
     /// admission charges `prefix peak + tail block demand × block bytes`.
+    /// Quantized requests ([`PlanRequest::with_dtype`]) are rejected: i8/f16
+    /// size classes serve statically only.
     ///
     /// [`BlockPool`]: crate::arena::paged::BlockPool
     pub fn for_request_paged(
@@ -370,6 +380,12 @@ impl ExecutorEngine {
         decode_from: usize,
         seed: u64,
     ) -> Result<Self> {
+        if req.dtype() != Dtype::F32 {
+            anyhow::bail!(
+                "quantized request '{req}' cannot serve paged: i8/f16 size classes are \
+                 static-mode only"
+            );
+        }
         Self::construct(graph, service, req, Some(decode_from), true, seed)
     }
 
@@ -501,10 +517,10 @@ impl Engine for ExecutorEngine {
             self.req.strategy(),
             self.service.stats(),
         );
-        // Only wave-aware configurations report the dynamic segment, and
-        // only order-planning configurations the order segment:
-        // plain natural-order static serving keeps the rendered stats line
-        // unchanged.
+        // Only wave-aware configurations report the dynamic segment, only
+        // order-planning configurations the order segment, and only
+        // quantized configurations the dtype segment: plain natural-order
+        // static f32 serving keeps the rendered stats line unchanged.
         if self.dynamic.is_some() {
             stats = stats.with_waves(self.exec.wave_passes(), self.exec.wave_resolutions());
         }
@@ -519,6 +535,7 @@ impl Engine for ExecutorEngine {
                 self.exec.ops_parallel(),
             );
         }
+        stats = stats.with_dtype(self.req.dtype());
         if self.req.order().is_natural() {
             return stats;
         }
@@ -989,6 +1006,51 @@ mod tests {
         assert!(echo.lane_advance(0).is_err());
         assert!(echo.lane_finish(0).is_err());
         echo.lane_abort(0);
+    }
+
+    #[test]
+    fn quantized_engine_shrinks_the_peak_and_raises_the_admission_cap() {
+        let g = crate::models::blazeface();
+        let svc = PlanService::shared();
+        let base = PlanRequest::new().with_strategy("greedy-size").unwrap();
+        let f = ExecutorEngine::for_request(&g, Arc::clone(&svc), &base, 3).unwrap();
+        let mut q = ExecutorEngine::for_request(
+            &g,
+            Arc::clone(&svc),
+            &base.with_dtype(Dtype::I8),
+            3,
+        )
+        .unwrap();
+        // i8 plans a strictly smaller peak at the same batch...
+        let pf = f.planned_peak(2).unwrap();
+        let pq = q.planned_peak(2).unwrap();
+        assert!(pq * 3 <= pf, "i8 peak {pq} must shrink the f32 peak {pf} by >=3x");
+        // ...so the same budget admits a strictly larger batch — the
+        // `serve --dtype i8 --mem-budget` acceptance property.
+        let budget = f.planned_peak(3).unwrap();
+        let cap_f = f.max_servable_batch(budget).unwrap();
+        let cap_q = q.max_servable_batch(budget).unwrap();
+        assert!(cap_f >= 3);
+        assert!(cap_q > cap_f, "i8 cap {cap_q} must beat the f32 cap {cap_f} under {budget} B");
+        // The stats line reports the size class; f32 serving stays clean.
+        assert_eq!(q.arena_stats().dtype, "i8");
+        assert!(f.arena_stats().dtype.is_empty());
+        // The quantized engine still serves finite outputs.
+        let x = vec![0.1f32; q.in_elems()];
+        let out = q.run_batch(&x, 1).unwrap();
+        assert_eq!(out.len(), q.out_elems());
+        assert!(out.iter().all(|v| v.is_finite()));
+        // Wave-aware and paged construction refuse quantized requests.
+        let dec = g.num_ops() / 2;
+        let qreq = base.with_dtype(Dtype::F16);
+        let e = ExecutorEngine::for_request_dynamic(&g, Arc::clone(&svc), &qreq, dec, 3)
+            .err()
+            .expect("dynamic quantized construction must fail");
+        assert!(e.to_string().contains("static-mode only"), "{e}");
+        let e = ExecutorEngine::for_request_paged(&g, Arc::clone(&svc), &qreq, dec, 3)
+            .err()
+            .expect("paged quantized construction must fail");
+        assert!(e.to_string().contains("static-mode only"), "{e}");
     }
 
     #[test]

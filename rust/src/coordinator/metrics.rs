@@ -63,6 +63,14 @@ pub fn render_arena_stats(s: &ArenaStats) -> String {
             s.threads, s.levels, s.ops_parallel
         ));
     }
+    if !s.dtype.is_empty() {
+        let elem_bytes = match s.dtype.as_str() {
+            "i8" => 1,
+            "f16" => 2,
+            _ => 4,
+        };
+        line.push_str(&format!(" | dtype {} ({elem_bytes} B/elem vs 4 B f32)", s.dtype));
+    }
     line
 }
 
@@ -348,6 +356,7 @@ mod tests {
         assert!(!line.contains("order"), "{line}");
         assert!(!line.contains("dynamic"), "{line}");
         assert!(!line.contains("thread(s)"), "{line}");
+        assert!(!line.contains("dtype"), "{line}");
         let warmed = ArenaStats { warm_loaded: 4, warm_skipped: 1, ..s };
         let line = render_arena_stats(&warmed);
         assert!(line.contains("warm start 4 loaded / 1 skipped"), "{line}");
@@ -420,6 +429,25 @@ mod tests {
         // A sequential engine keeps the line free of the segment.
         let seq = ArenaStats::default().with_threads(1, 17, 0);
         assert!(!render_arena_stats(&seq).contains("thread(s)"));
+    }
+
+    #[test]
+    fn arena_stats_render_includes_the_dtype_segment() {
+        use crate::planner::Dtype;
+        let s = ArenaStats {
+            planned_bytes: 2 * 1024,
+            naive_bytes: 32 * 1024,
+            strategy: "greedy-size".into(),
+            ..ArenaStats::default()
+        }
+        .with_dtype(Dtype::I8);
+        let line = render_arena_stats(&s);
+        assert!(line.contains("dtype i8 (1 B/elem vs 4 B f32)"), "{line}");
+        let f16 = render_arena_stats(&ArenaStats::default().with_dtype(Dtype::F16));
+        assert!(f16.contains("dtype f16 (2 B/elem vs 4 B f32)"), "{f16}");
+        // f32 serving clears the field and renders no segment.
+        let f32_line = render_arena_stats(&ArenaStats::default().with_dtype(Dtype::F32));
+        assert!(!f32_line.contains("dtype"), "{f32_line}");
     }
 
     #[test]

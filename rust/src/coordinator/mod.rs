@@ -218,6 +218,11 @@ pub struct ArenaStats {
     /// Arena buffers the pool refused to keep at release time because the
     /// size-class shelf was full (dropped on the floor, not leaked).
     pub pool_dropped: u64,
+    /// Canonical key of the quantized element size class the model serves
+    /// under (`"i8"` / `"f16"`; empty = ordinary f32 serving). The
+    /// `planned_bytes` of a quantized engine already reflect the shrunk
+    /// records — see [`crate::records::UsageRecords::scaled_for`].
+    pub dtype: String,
 }
 
 impl ArenaStats {
@@ -289,6 +294,19 @@ impl ArenaStats {
         self.threads = threads;
         self.levels = levels;
         self.ops_parallel = ops_parallel;
+        self
+    }
+
+    /// Record the quantized element size class the model serves under
+    /// ([`Dtype::F32`] clears the field — f32 serving renders no segment).
+    ///
+    /// [`Dtype::F32`]: crate::planner::Dtype::F32
+    pub fn with_dtype(mut self, dtype: crate::planner::Dtype) -> Self {
+        self.dtype = if dtype == crate::planner::Dtype::F32 {
+            String::new()
+        } else {
+            dtype.key().to_string()
+        };
         self
     }
 

@@ -24,6 +24,13 @@
 //! execution; both fall back to the sequential loop when the proof does not
 //! hold (or in §7 wave mode, whose per-op re-resolution is inherently
 //! sequential).
+//!
+//! **Quantized serving** (`PlanRequest::with_dtype`): arena payloads are
+//! stored packed at the request's i8/f16 size class — the arena shrinks by
+//! the element width — and every step runs the `f32` kernels on
+//! dequantized scratch, re-quantizing arena outputs at their producing
+//! step (see [`ops::quant`]). Quantized mode always executes sequentially
+//! and serves statically (no wave, paged, or continuous modes).
 
 pub mod cachesim;
 mod levels;
@@ -33,7 +40,7 @@ use crate::arena::paged::PagedArena;
 use crate::arena::{Arena, ArenaPool, ParallelArena};
 use crate::graph::{topo_levels, Graph, OpKind, PoolKind, TensorKind};
 use crate::planner::{
-    registry, DynamicMode, DynamicRecords, MultiPassPlan, OffsetPlan, OffsetPlanner,
+    registry, Dtype, DynamicMode, DynamicRecords, MultiPassPlan, OffsetPlan, OffsetPlanner,
     OrderStrategy, PlanError, PlanRequest, PlanService,
 };
 use crate::records::UsageRecords;
@@ -164,6 +171,26 @@ struct LaneRun {
     next_step: usize,
 }
 
+/// State of the quantized size-class execution mode: arena stripes hold
+/// activations packed at the request's dtype (4 `i8` codes or 2 `f16`
+/// halves per `f32` word — see [`ops::quant`]), with per-record affine
+/// parameters rewritten at each record's producing step from the values
+/// just produced. Kernels still run in `f32`: every step dequantizes its
+/// arena operands into contiguous scratch, dispatches the ordinary
+/// kernel, and re-quantizes an arena output back into its element-width
+/// shrunk stripe. Serving is sequential per lane, like wave mode.
+struct QuantState {
+    /// The size class (never [`Dtype::F32`] — f32 requests carry no state).
+    dtype: Dtype,
+    /// Per-record affine parameters, rewritten at the record's producer.
+    qparams: Vec<ops::quant::QParams>,
+    /// Per-record payload element counts — exact, excluding alignment
+    /// padding (padding is never quantized).
+    n_vals: Vec<usize>,
+    /// Contiguous dequantize/requantize scratch, reused across steps.
+    scratch: Vec<f32>,
+}
+
 /// Graph executor over a planned arena.
 pub struct Executor {
     steps: Vec<Step>,
@@ -198,6 +225,10 @@ pub struct Executor {
     /// exclusive with `waves`): the arena hosts only the static prefix,
     /// tail records live on pooled blocks.
     paged: Option<PagedState>,
+    /// Quantized size-class mode (None = f32 serving; mutually exclusive
+    /// with `waves` and `paged`): arena payloads are packed at the
+    /// request's dtype and steps run on dequantized scratch.
+    quant: Option<QuantState>,
     /// Worker threads for `run`/`run_batch` (1 = sequential).
     threads: usize,
     /// Which kernel family `dispatch` routes hot ops to.
@@ -270,7 +301,15 @@ impl Executor {
     ) -> Result<Self, String> {
         let base = req.with_dynamic(DynamicMode::Static);
         match dynamic {
-            Some(profile) => Self::build_dynamic(graph, service, base, profile, seed),
+            Some(profile) => {
+                if req.dtype() != Dtype::F32 {
+                    return Err(format!(
+                        "quantized request '{req}' cannot serve a dynamic profile: \
+                         i8/f16 size classes are static-mode only"
+                    ));
+                }
+                Self::build_dynamic(graph, service, base, profile, seed)
+            }
             None => {
                 if !req.dynamic().is_static() {
                     return Err(format!(
@@ -363,7 +402,8 @@ impl Executor {
         batch: usize,
     ) -> Result<Self, PlanError> {
         let records = &base_records;
-        let scaled = records.scaled(batch);
+        let dtype = request.map_or(Dtype::F32, |r| r.dtype());
+        let scaled = records.scaled_for(batch, dtype);
         plan.validate(&scaled)?;
         // tensor id -> record id
         let mut rec_of = vec![None; graph.tensors.len()];
@@ -512,6 +552,22 @@ impl Executor {
             .unwrap_or_default();
         let span_of = |r: usize| arena.record_span(r);
         let schedule = levels::build_schedule(&steps, &level_sets, base_records.len(), &span_of);
+        // Quantized size classes store arena payloads packed; per-record
+        // parameters start at identity and are rewritten at each record's
+        // producing step.
+        let quant = (dtype != Dtype::F32).then(|| QuantState {
+            dtype,
+            qparams: vec![ops::quant::QParams::IDENTITY; records.len()],
+            n_vals: records
+                .records
+                .iter()
+                .map(|r| {
+                    let t = r.tensor.expect("quantized requests need graph-derived records");
+                    graph.tensor(t).num_elements()
+                })
+                .collect(),
+            scratch: Vec::new(),
+        });
         Ok(Executor {
             steps,
             arena,
@@ -529,6 +585,7 @@ impl Executor {
             batch,
             waves: None,
             paged: None,
+            quant,
             threads: 1,
             mode: KernelMode::default(),
             level_sets,
@@ -625,6 +682,12 @@ impl Executor {
         dynamic: DynamicRecords,
         seed: u64,
     ) -> Result<Self, String> {
+        if req.dtype() != Dtype::F32 {
+            return Err(format!(
+                "quantized request '{req}' cannot serve paged: \
+                 i8/f16 size classes are static-mode only"
+            ));
+        }
         let base = req.with_dynamic(DynamicMode::Static);
         let records = UsageRecords::from_graph(graph);
         validate_dynamic_profile(&records, &dynamic)?;
@@ -722,6 +785,12 @@ impl Executor {
         self.batch
     }
 
+    /// The quantized element size class this executor serves under
+    /// ([`Dtype::F32`] on the ordinary f32 path).
+    pub fn dtype(&self) -> Dtype {
+        self.quant.as_ref().map_or(Dtype::F32, |q| q.dtype)
+    }
+
     /// The batch-1 usage records this executor was planned from — the
     /// input to budget queries ([`PlanService::max_servable_batch`]) and
     /// plan-directory warm starts.
@@ -737,8 +806,9 @@ impl Executor {
     /// Set the worker-thread count (clamped to at least 1). With more than
     /// one thread, `run_batch` runs lanes in lockstep across workers and
     /// single-sample runs use the level schedule when its aliasing proof
-    /// holds; §7 wave mode always executes sequentially (its per-op offset
-    /// re-resolution is order-dependent).
+    /// holds; §7 wave mode and quantized mode always execute sequentially
+    /// (per-op offset re-resolution and per-record re-quantization are
+    /// order-dependent).
     pub fn set_threads(&mut self, threads: usize) {
         self.threads = threads.max(1);
     }
@@ -800,7 +870,9 @@ impl Executor {
             // open lane's prefix stripes.
             return Err("cannot re-plan for a new batch while continuous lanes are open".into());
         }
-        let scaled = self.base_records.scaled(batch);
+        let scaled = self
+            .base_records
+            .scaled_for(batch, self.request.map_or(Dtype::F32, |r| r.dtype()));
         let plan: Arc<OffsetPlan> = match (&self.service, &self.request) {
             (Some(svc), Some(req)) => {
                 let req = req.with_batch(batch);
@@ -921,7 +993,12 @@ impl Executor {
         if n > self.batch {
             self.ensure_batch(n)?;
         }
-        if self.threads > 1 && n > 1 && self.waves.is_none() && self.paged.is_none() {
+        if self.threads > 1
+            && n > 1
+            && self.waves.is_none()
+            && self.paged.is_none()
+            && self.quant.is_none()
+        {
             return self.run_batch_lockstep(input, n, in_elems, out_elems);
         }
         let mut out = Vec::with_capacity(n * out_elems);
@@ -1027,10 +1104,15 @@ impl Executor {
         if self.threads > 1
             && self.waves.is_none()
             && self.paged.is_none()
+            && self.quant.is_none()
             && self.schedule.safe
             && self.schedule.width > 1
         {
             self.run_lane_scheduled(lane);
+        } else if self.quant.is_some() {
+            for si in 0..self.steps.len() {
+                self.exec_step_quant(si, lane);
+            }
         } else if self.paged.is_some() {
             for si in 0..self.steps.len() {
                 self.exec_step_paged(si, lane);
@@ -1321,6 +1403,16 @@ impl Executor {
         let Executor { steps, arena, weights, io, .. } = self;
         exec_resident_step_ctx(steps, arena, weights, io, si, lane, poison, mode);
     }
+
+    /// One step of the quantized sequential loop, against the
+    /// executor-owned [`QuantState`] (see [`exec_quant_step_ctx`]).
+    fn exec_step_quant(&mut self, si: usize, lane: usize) {
+        let poison = self.poison_dead;
+        let mode = self.mode;
+        let Executor { steps, arena, weights, io, quant, .. } = self;
+        let qs = quant.as_mut().expect("quantized step outside quantized mode");
+        exec_quant_step_ctx(steps, arena, weights, io, qs, si, lane, poison, mode);
+    }
 }
 
 impl Drop for Executor {
@@ -1574,6 +1666,108 @@ fn exec_paged_step_ctx(
         if tail_words[r].is_some() {
             parena.unmap(r);
         } else if poison {
+            arena.poison_lane(r, lane);
+        }
+    }
+    debug_assert!(arena.guards_intact(), "arena guard overwritten");
+}
+
+/// One step of the quantized sequential loop: arena-resident operands are
+/// stored packed at the request's [`Dtype`] (see [`ops::quant`]), so the
+/// step dequantizes its arena inputs into contiguous scratch under their
+/// producers' parameters, dispatches the ordinary `f32` kernel, and
+/// re-quantizes an arena output back into its element-width shrunk stripe
+/// with parameters chosen from the freshly produced values — the
+/// per-record wave boundary of the quantized path. Io outputs (graph
+/// outputs) stay `f32`, so the serving payload representation never
+/// changes. Scratch runs carve as `[out | in …]`, pairwise disjoint by
+/// construction, exactly like the paged gather path.
+#[allow(clippy::too_many_arguments)]
+fn exec_quant_step_ctx(
+    steps: &[Step],
+    arena: &mut Arena,
+    weights: &[Vec<f32>],
+    io: &mut [Vec<f32>],
+    qs: &mut QuantState,
+    si: usize,
+    lane: usize,
+    poison: bool,
+    mode: KernelMode,
+) {
+    let step = &steps[si];
+    let QuantState { dtype, qparams, n_vals, scratch } = qs;
+    let dtype = *dtype;
+    let out_vals = match step.out {
+        Loc::Arena(orec) => n_vals[orec],
+        _ => 0,
+    };
+    let in_vals: usize = step
+        .ins
+        .iter()
+        .map(|l| match l {
+            Loc::Arena(r) => n_vals[*r],
+            _ => 0,
+        })
+        .sum();
+    if scratch.len() < out_vals + in_vals {
+        scratch.resize(out_vals + in_vals, 0.0);
+    }
+    let (out_scr, mut rest) = scratch.split_at_mut(out_vals);
+    let mut gathered: Vec<&[f32]> = Vec::new();
+    for l in &step.ins {
+        if let Loc::Arena(r) = l {
+            let (chunk, tail) = rest.split_at_mut(n_vals[*r]);
+            ops::quant::dequantize_from(dtype, qparams[*r], arena.tensor_lane(*r, lane), chunk);
+            gathered.push(&*chunk);
+            rest = tail;
+        }
+    }
+    let mut git = gathered.into_iter();
+
+    match step.out {
+        Loc::Arena(orec) => {
+            {
+                let ins: Vec<&[f32]> = step
+                    .ins
+                    .iter()
+                    .map(|l| match l {
+                        Loc::Arena(_) => git.next().unwrap(),
+                        Loc::Io(i) => io[*i].as_slice(),
+                        Loc::Weight(w) => weights[*w].as_slice(),
+                    })
+                    .collect();
+                dispatch(&step.instr, &ins, out_scr, mode);
+            }
+            // Re-quantize at the producing step: parameters come from the
+            // values just produced, and only the exact payload (never the
+            // stripe's alignment padding) enters the range.
+            let (lo, hi) = ops::quant::min_max(out_scr);
+            let qp = ops::quant::choose_qparams(dtype, lo, hi);
+            let (stripe, _) = arena.split_io_lane(orec, &[], lane);
+            ops::quant::quantize_into(dtype, qp, out_scr, stripe);
+            qparams[orec] = qp;
+        }
+        Loc::Io(oi) => {
+            let mut out = std::mem::take(&mut io[oi]);
+            {
+                let ins: Vec<&[f32]> = step
+                    .ins
+                    .iter()
+                    .map(|l| match l {
+                        Loc::Arena(_) => git.next().unwrap(),
+                        Loc::Io(i) => io[*i].as_slice(),
+                        Loc::Weight(w) => weights[*w].as_slice(),
+                    })
+                    .collect();
+                dispatch(&step.instr, &ins, &mut out, mode);
+            }
+            io[oi] = out;
+        }
+        Loc::Weight(_) => unreachable!("op writes to a weight"),
+    }
+
+    if poison {
+        for r in steps[si].dies.clone() {
             arena.poison_lane(r, lane);
         }
     }
@@ -2297,5 +2491,92 @@ mod tests {
             d.known_at = d.record.first_op;
         }
         assert!(Executor::with_request_paged(&g, svc, &PlanRequest::new(), bad, 7).is_err());
+    }
+
+    #[test]
+    fn quantized_requests_shrink_the_arena_and_track_f32_outputs() {
+        let g = tiny_net();
+        let x = input_for(&g, 61);
+        let svc = PlanService::shared();
+        let mut f32_ex =
+            Executor::with_request(&g, Arc::clone(&svc), &PlanRequest::new(), None, 7).unwrap();
+        let want = f32_ex.run(&[&x]);
+        // (dtype, minimum integral shrink factor, softmax drift bound)
+        for (dtype, min_shrink, tol) in [(Dtype::I8, 3, 0.1f32), (Dtype::F16, 1, 1e-2)] {
+            let req = PlanRequest::new().with_dtype(dtype);
+            let mut q = Executor::with_request(&g, Arc::clone(&svc), &req, None, 7).unwrap();
+            q.set_poison_dead(true);
+            assert_eq!(q.dtype(), dtype);
+            assert!(
+                q.arena_bytes() * min_shrink <= f32_ex.arena_bytes()
+                    && q.arena_bytes() < f32_ex.arena_bytes(),
+                "{dtype:?} arena {} vs f32 {}",
+                q.arena_bytes(),
+                f32_ex.arena_bytes()
+            );
+            let got = q.run(&[&x]);
+            let sum: f32 = got[0].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "{dtype:?} softmax sum {sum}");
+            for (i, (&a, &b)) in got[0].iter().zip(want[0].iter()).enumerate() {
+                assert!(a.is_finite(), "{dtype:?} elem {i} not finite");
+                assert!((a - b).abs() <= tol, "{dtype:?} elem {i}: {a} vs f32 {b}");
+            }
+            // Same request, same seed: quantized serving is deterministic.
+            let again = q.run(&[&x]);
+            assert_eq!(got, again, "{dtype:?} repeat run changed bits");
+            let mut q2 = Executor::with_request(&g, Arc::clone(&svc), &req, None, 7).unwrap();
+            assert_eq!(got, q2.run(&[&x]), "{dtype:?} fresh executor changed bits");
+        }
+    }
+
+    #[test]
+    fn quantized_batches_stay_sequential_and_bit_stable() {
+        let g = tiny_net();
+        let n = 3;
+        let in_elems = g.tensor(g.inputs[0]).num_elements();
+        let mut rng = SplitMix64::new(77);
+        let mut flat = vec![0f32; n * in_elems];
+        rng.fill_f32(&mut flat, 1.0);
+        let svc = PlanService::shared();
+        let req = PlanRequest::new().with_dtype(Dtype::I8);
+        let mut a = Executor::with_request(&g, Arc::clone(&svc), &req, None, 7).unwrap();
+        let mut b = Executor::with_request(&g, Arc::clone(&svc), &req, None, 7).unwrap();
+        b.set_threads(4);
+        b.set_poison_dead(true);
+        let oa = a.run_batch(&flat, n).unwrap();
+        let ob = b.run_batch(&flat, n).unwrap();
+        assert_eq!(oa, ob, "threads changed quantized numbers");
+        assert_eq!(b.ops_parallel(), 0, "quantized mode must never dispatch workers");
+        // Sample 0 of the batch is bit-identical to the single-sample path
+        // (quantization depends on values, not on stripe layout or batch).
+        let single = a.run(&[&flat[..in_elems]]);
+        let out_elems = oa.len() / n;
+        assert_eq!(&oa[..out_elems], single[0].as_slice());
+        // Growing the batch keeps the quantized arena quantized-sized.
+        let f32_b = {
+            let mut e =
+                Executor::with_request(&g, Arc::clone(&svc), &PlanRequest::new(), None, 7)
+                    .unwrap();
+            e.ensure_batch(n).unwrap();
+            e.arena_bytes()
+        };
+        assert!(a.arena_bytes() * 3 <= f32_b, "batched i8 arena lost its shrink");
+    }
+
+    #[test]
+    fn quantized_requests_reject_dynamic_and_paged_serving() {
+        let g = tiny_net();
+        let records = UsageRecords::from_graph(&g);
+        let dynamic = DynamicRecords::decode_tail(&records, records.num_ops / 2);
+        let svc = PlanService::shared();
+        let req = PlanRequest::new().with_dtype(Dtype::I8);
+        let err = Executor::with_request(&g, Arc::clone(&svc), &req, Some(dynamic.clone()), 7)
+            .err()
+            .expect("dynamic profile must be rejected under i8");
+        assert!(err.contains("static-mode only"), "unexpected error: {err}");
+        let err = Executor::with_request_paged(&g, svc, &req, dynamic, 7)
+            .err()
+            .expect("paged serving must be rejected under i8");
+        assert!(err.contains("static-mode only"), "unexpected error: {err}");
     }
 }

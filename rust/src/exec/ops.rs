@@ -811,6 +811,351 @@ pub mod scalar {
     }
 }
 
+pub mod quant {
+    //! Quantized activation kernels: the i8/f16 size-class execution path.
+    //!
+    //! Quantization here is **activation-only**: weights, io buffers, and
+    //! all kernel arithmetic stay `f32`; only the arena-resident
+    //! intermediate tensors are stored packed ([`quantize_into`] /
+    //! [`dequantize_from`]) at the element width of the request's
+    //! [`Dtype`], with per-record affine parameters ([`QParams`]) chosen
+    //! from the produced values' own range at the producing step — the
+    //! per-record wave boundary of the quantized path. The kernel family
+    //! below wraps the vectorized `f32` kernels in exactly that
+    //! round-trip, so the retained scalar family stays the accuracy
+    //! oracle: every quantized kernel output must sit within one
+    //! quantization [`step`] of the oracle run on the same dequantized
+    //! operands (`tests/quant_diff.rs`).
+    //!
+    //! `f16` needs no parameters — it is a bit-level narrowing with
+    //! round-to-nearest-even, hand-rolled below (the crate takes no
+    //! `half` dependency). `i8` uses a 255-step affine grid whose zero
+    //! point is exactly representable, TFLite-style, so ReLU floors and
+    //! zero padding round-trip bit-exactly.
+
+    use super::Geom;
+    use crate::graph::Activation;
+    use crate::planner::Dtype;
+
+    /// Per-record affine quantization parameters:
+    /// `real = (code - zero_point) * scale`.
+    #[derive(Debug, Clone, Copy, PartialEq)]
+    pub struct QParams {
+        /// Grid spacing — one quantization step — in real units.
+        pub scale: f32,
+        /// Grid point representing real zero (always integral, in range).
+        pub zero_point: f32,
+    }
+
+    impl QParams {
+        /// The do-nothing parameters used by the non-affine dtypes
+        /// ([`Dtype::F32`] identity and the [`Dtype::F16`] bit narrowing).
+        pub const IDENTITY: QParams = QParams { scale: 1.0, zero_point: 0.0 };
+    }
+
+    /// Affine parameters covering `[min, max]` on the dtype's grid. The
+    /// range is widened to contain zero so real 0.0 is exactly
+    /// representable. Only [`Dtype::I8`] is affine; the other dtypes
+    /// return [`QParams::IDENTITY`].
+    pub fn choose_qparams(dtype: Dtype, min: f32, max: f32) -> QParams {
+        if dtype != Dtype::I8 {
+            return QParams::IDENTITY;
+        }
+        let min = min.min(0.0);
+        let max = max.max(0.0);
+        let scale = ((max - min) / 255.0).max(f32::MIN_POSITIVE);
+        let zero_point = (-128.0 - min / scale).round().clamp(-128.0, 127.0);
+        QParams { scale, zero_point }
+    }
+
+    /// The quantization-step width at value `at` — the error-budget unit
+    /// of the differential suite. `i8` grids are uniform (the step is the
+    /// scale); `f16` steps are the ulp of the value's binade; `f32` is
+    /// the identity path and has no step.
+    pub fn step(dtype: Dtype, qp: QParams, at: f32) -> f32 {
+        match dtype {
+            Dtype::F32 => 0.0,
+            Dtype::I8 => qp.scale,
+            Dtype::F16 => {
+                let e = (f32_to_f16_bits(at.abs()) >> 10) & 0x1f;
+                if e >= 0x1e {
+                    // Top binade (or overflow to inf): the largest finite
+                    // step, 2^5.
+                    32.0
+                } else {
+                    // Subnormals (e == 0) share the fixed 2^-24 spacing of
+                    // the e == 1 binade.
+                    2f32.powi(i32::from(e.max(1)) - 25)
+                }
+            }
+        }
+    }
+
+    /// Narrow an `f32` to IEEE 754 binary16 bits, round-to-nearest-even.
+    pub fn f32_to_f16_bits(v: f32) -> u16 {
+        let bits = v.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xff) as i32;
+        let man = bits & 0x007f_ffff;
+        if exp == 0xff {
+            // Inf and NaN (payload truncated, kept quiet).
+            return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+        }
+        let e = exp - 127 + 15;
+        if e >= 0x1f {
+            return sign | 0x7c00; // overflow -> inf
+        }
+        if e <= 0 {
+            if e < -10 {
+                return sign; // underflow -> signed zero
+            }
+            // Subnormal: shift the full 24-bit significand into place.
+            let full = man | 0x0080_0000;
+            let shift = (14 - e) as u32;
+            let m = full >> shift;
+            let rem = full & ((1u32 << shift) - 1);
+            let half = 1u32 << (shift - 1);
+            let mut h = sign | m as u16;
+            if rem > half || (rem == half && (m & 1) == 1) {
+                h += 1; // a carry lands on the smallest normal exactly
+            }
+            return h;
+        }
+        // Normal: drop 13 mantissa bits with round-to-nearest-even; a
+        // mantissa carry walks into the exponent (and, at the top binade,
+        // into inf) by bit layout.
+        let m = man >> 13;
+        let rem = man & 0x1fff;
+        let mut h = sign | ((e as u16) << 10) | m as u16;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            h += 1;
+        }
+        h
+    }
+
+    /// Widen IEEE 754 binary16 bits back to `f32` (exact).
+    pub fn f16_bits_to_f32(h: u16) -> f32 {
+        let sign = (u32::from(h) & 0x8000) << 16;
+        let exp = u32::from(h >> 10) & 0x1f;
+        let man = u32::from(h) & 0x03ff;
+        if exp == 0x1f {
+            return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+        }
+        if exp == 0 {
+            // Subnormal (or zero): exact as man * 2^-24.
+            let mag = man as f32 * 2f32.powi(-24);
+            return if sign != 0 { -mag } else { mag };
+        }
+        f32::from_bits(sign | ((exp + 127 - 15) << 23) | (man << 13))
+    }
+
+    /// Packed `f32`-word footprint of `n` values of `dtype` (4 `i8` codes
+    /// or 2 `f16` halves per word).
+    pub fn packed_words(dtype: Dtype, n: usize) -> usize {
+        match dtype {
+            Dtype::F32 => n,
+            Dtype::F16 => n.div_ceil(2),
+            Dtype::I8 => n.div_ceil(4),
+        }
+    }
+
+    /// Quantize `src` onto the dtype's grid and pack it into `dst`'s
+    /// leading [`packed_words`] words. The arena stripe is
+    /// `f32`-addressed, so codes ride in word bit patterns — 4 `i8` codes
+    /// or 2 `f16` halves per word, little end first.
+    pub fn quantize_into(dtype: Dtype, qp: QParams, src: &[f32], dst: &mut [f32]) {
+        debug_assert!(dst.len() >= packed_words(dtype, src.len()));
+        match dtype {
+            Dtype::F32 => dst[..src.len()].copy_from_slice(src),
+            Dtype::F16 => {
+                for (word, pair) in dst.iter_mut().zip(src.chunks(2)) {
+                    let lo = u32::from(f32_to_f16_bits(pair[0]));
+                    let hi = pair.get(1).map_or(0, |&v| u32::from(f32_to_f16_bits(v)));
+                    *word = f32::from_bits(lo | (hi << 16));
+                }
+            }
+            Dtype::I8 => {
+                for (word, quad) in dst.iter_mut().zip(src.chunks(4)) {
+                    let mut bits = 0u32;
+                    for (j, &v) in quad.iter().enumerate() {
+                        let q =
+                            (v / qp.scale + qp.zero_point).round().clamp(-128.0, 127.0) as i8;
+                        bits |= u32::from(q as u8) << (8 * j);
+                    }
+                    *word = f32::from_bits(bits);
+                }
+            }
+        }
+    }
+
+    /// Unpack `dst.len()` values of `dtype` from `src`'s packed words and
+    /// dequantize them to `f32` — the inverse of [`quantize_into`].
+    pub fn dequantize_from(dtype: Dtype, qp: QParams, src: &[f32], dst: &mut [f32]) {
+        debug_assert!(src.len() >= packed_words(dtype, dst.len()));
+        match dtype {
+            Dtype::F32 => dst.copy_from_slice(&src[..dst.len()]),
+            Dtype::F16 => {
+                for (i, v) in dst.iter_mut().enumerate() {
+                    let bits = src[i / 2].to_bits() >> (16 * (i % 2));
+                    *v = f16_bits_to_f32((bits & 0xffff) as u16);
+                }
+            }
+            Dtype::I8 => {
+                for (i, v) in dst.iter_mut().enumerate() {
+                    let code = (src[i / 4].to_bits() >> (8 * (i % 4))) as u8 as i8;
+                    *v = (f32::from(code) - qp.zero_point) * qp.scale;
+                }
+            }
+        }
+    }
+
+    /// Minimum and maximum of a slice (`(inf, -inf)` when empty;
+    /// [`choose_qparams`] widens any range to contain zero).
+    pub fn min_max(buf: &[f32]) -> (f32, f32) {
+        buf.iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &v| (lo.min(v), hi.max(v)))
+    }
+
+    /// Quantize-dequantize `buf` in place at `dtype` — the round-trip
+    /// every arena-resident value undergoes — and return the parameters
+    /// used, chosen from the slice's own range.
+    pub fn round_trip(dtype: Dtype, buf: &mut [f32]) -> QParams {
+        if dtype == Dtype::F32 {
+            return QParams::IDENTITY;
+        }
+        let (lo, hi) = min_max(buf);
+        let qp = choose_qparams(dtype, lo, hi);
+        let mut packed = vec![0f32; packed_words(dtype, buf.len())];
+        quantize_into(dtype, qp, buf, &mut packed);
+        dequantize_from(dtype, qp, &packed, buf);
+        qp
+    }
+
+    /// Quantized standard convolution: the activation input round-trips
+    /// through the dtype's grid, the vectorized `f32` kernel runs on the
+    /// dequantized values, and the output round-trips back. Weights and
+    /// bias stay `f32`. Returns the output's parameters — the step unit
+    /// of the differential budget.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        ic: usize,
+        oc: usize,
+        g: &Geom,
+        act: Activation,
+        dtype: Dtype,
+    ) -> QParams {
+        let mut xq = x.to_vec();
+        round_trip(dtype, &mut xq);
+        super::conv2d(&xq, w, b, out, ic, oc, g, act);
+        round_trip(dtype, out)
+    }
+
+    /// Quantized depthwise convolution (see [`conv2d`] for the protocol).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dwconv2d(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        c: usize,
+        g: &Geom,
+        act: Activation,
+        dtype: Dtype,
+    ) -> QParams {
+        let mut xq = x.to_vec();
+        round_trip(dtype, &mut xq);
+        super::dwconv2d(&xq, w, b, out, c, g, act);
+        round_trip(dtype, out)
+    }
+
+    /// Quantized max pooling (see [`conv2d`] for the protocol).
+    pub fn maxpool2d(x: &[f32], out: &mut [f32], c: usize, g: &Geom, dtype: Dtype) -> QParams {
+        let mut xq = x.to_vec();
+        round_trip(dtype, &mut xq);
+        super::maxpool2d(&xq, out, c, g);
+        round_trip(dtype, out)
+    }
+
+    /// Quantized average pooling (see [`conv2d`] for the protocol).
+    pub fn avgpool2d(x: &[f32], out: &mut [f32], c: usize, g: &Geom, dtype: Dtype) -> QParams {
+        let mut xq = x.to_vec();
+        round_trip(dtype, &mut xq);
+        super::avgpool2d(&xq, out, c, g);
+        round_trip(dtype, out)
+    }
+
+    /// Quantized global average pool (see [`conv2d`] for the protocol).
+    pub fn global_avg_pool(
+        x: &[f32],
+        out: &mut [f32],
+        hw: usize,
+        c: usize,
+        dtype: Dtype,
+    ) -> QParams {
+        let mut xq = x.to_vec();
+        round_trip(dtype, &mut xq);
+        super::global_avg_pool(&xq, out, hw, c);
+        round_trip(dtype, out)
+    }
+
+    /// Quantized elementwise add: each operand round-trips under its own
+    /// parameters (per-record, like the executor's arena stripes).
+    pub fn add(a: &[f32], b: &[f32], out: &mut [f32], act: Activation, dtype: Dtype) -> QParams {
+        let (mut aq, mut bq) = (a.to_vec(), b.to_vec());
+        round_trip(dtype, &mut aq);
+        round_trip(dtype, &mut bq);
+        super::add(&aq, &bq, out, act);
+        round_trip(dtype, out)
+    }
+
+    /// Quantized elementwise multiply (see [`add`] for the protocol).
+    pub fn mul(a: &[f32], b: &[f32], out: &mut [f32], dtype: Dtype) -> QParams {
+        let (mut aq, mut bq) = (a.to_vec(), b.to_vec());
+        round_trip(dtype, &mut aq);
+        round_trip(dtype, &mut bq);
+        super::mul(&aq, &bq, out);
+        round_trip(dtype, out)
+    }
+
+    /// Quantized fully connected layer (see [`conv2d`] for the protocol).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fully_connected(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        ind: usize,
+        outd: usize,
+        act: Activation,
+        dtype: Dtype,
+    ) -> QParams {
+        let mut xq = x.to_vec();
+        round_trip(dtype, &mut xq);
+        super::fully_connected(&xq, w, b, out, ind, outd, act);
+        round_trip(dtype, out)
+    }
+
+    /// Quantized standalone ReLU (see [`conv2d`] for the protocol).
+    pub fn relu(x: &[f32], out: &mut [f32], max: Option<f32>, dtype: Dtype) -> QParams {
+        let mut xq = x.to_vec();
+        round_trip(dtype, &mut xq);
+        super::relu(&xq, out, max);
+        round_trip(dtype, out)
+    }
+
+    /// Quantized sigmoid (see [`conv2d`] for the protocol).
+    pub fn sigmoid(x: &[f32], out: &mut [f32], dtype: Dtype) -> QParams {
+        let mut xq = x.to_vec();
+        round_trip(dtype, &mut xq);
+        super::sigmoid(&xq, out);
+        round_trip(dtype, out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1007,5 +1352,61 @@ mod tests {
         for (i, (&a, &r)) in fast.iter().zip(reference.iter()).enumerate() {
             assert!((a - r).abs() <= r.abs() * 1e-6 + 1e-6, "elem {i}: {a} vs {r}");
         }
+    }
+
+    #[test]
+    fn f16_narrowing_matches_reference_encodings() {
+        use quant::{f16_bits_to_f32, f32_to_f16_bits};
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // max finite
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00); // RNE tie carries to inf
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00); // overflow -> inf
+        assert_eq!(f32_to_f16_bits(2f32.powi(-24)), 0x0001); // least subnormal
+        assert_eq!(f32_to_f16_bits(2f32.powi(-25)), 0x0000); // tie-to-even -> 0
+        // Round-to-nearest-even at the dropped-mantissa boundary.
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), 0x3c00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2f32.powi(-11)), 0x3c02);
+        // Widening is exact, so narrow(widen(bits)) is the identity.
+        for bits in [0x0000u16, 0x0001, 0x03ff, 0x0400, 0x3c00, 0x7bff, 0x8001, 0xc000] {
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(bits)), bits);
+        }
+        assert!(f16_bits_to_f32(0x7c00).is_infinite());
+        assert!(f16_bits_to_f32(0x7e00).is_nan());
+    }
+
+    #[test]
+    fn i8_packing_roundtrips_codes_exactly() {
+        use crate::planner::Dtype;
+        use quant::{choose_qparams, dequantize_from, packed_words, quantize_into, QParams};
+        let qp = choose_qparams(Dtype::I8, -1.0, 3.0);
+        // Zero is a grid point and the 255-step grid spans the range.
+        assert_eq!((0.0f32 / qp.scale + qp.zero_point).round(), qp.zero_point);
+        assert!((qp.scale - 4.0 / 255.0).abs() < 1e-7);
+        let src: Vec<f32> = (0..13).map(|i| -1.0 + i as f32 * 4.0 / 12.0).collect();
+        let mut packed = vec![0f32; packed_words(Dtype::I8, src.len())];
+        assert_eq!(packed.len(), 4);
+        quantize_into(Dtype::I8, qp, &src, &mut packed);
+        let mut back = vec![0f32; src.len()];
+        dequantize_from(Dtype::I8, qp, &packed, &mut back);
+        for (&a, &b) in src.iter().zip(&back) {
+            assert!((a - b).abs() <= 0.5 * qp.scale + 1e-6, "{a} vs {b}");
+        }
+        // Re-quantizing the dequantized values is a bit-exact fixed point.
+        let mut again = vec![0f32; packed.len()];
+        quantize_into(Dtype::I8, qp, &back, &mut again);
+        assert_eq!(
+            packed.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            again.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // f16 packs two halves per word and is value-exact on halves.
+        let mut p16 = vec![0f32; packed_words(Dtype::F16, 3)];
+        assert_eq!(p16.len(), 2);
+        quantize_into(Dtype::F16, QParams::IDENTITY, &[0.5, -2.0, 0.25], &mut p16);
+        let mut b16 = vec![0f32; 3];
+        dequantize_from(Dtype::F16, QParams::IDENTITY, &p16, &mut b16);
+        assert_eq!(b16, vec![0.5, -2.0, 0.25]);
     }
 }

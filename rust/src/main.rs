@@ -12,7 +12,8 @@
 //! tensorarena serve [--model M] [--strategy S] [--order O] [--requests N]
 //!                   [--max-batch B] [--wait-ms W] [--artifacts DIR]
 //!                   [--mem-budget BYTES] [--plan-dir DIR] [--threads T]
-//!                   [--dynamic [FRAC]] [--paged] [--continuous] # E2E serving
+//!                   [--dtype f32|f16|i8] [--dynamic [FRAC]] [--paged]
+//!                   [--continuous]                  # E2E serving
 //! tensorarena order-ablation [model] [--seed S] [--trials N] # §7.1 order table
 //! tensorarena dynamic-ablation [model] [--frac F1,F2,...]    # §7 overhead table
 //! tensorarena models                                # list zoo models
@@ -61,6 +62,15 @@
 //! resolved lane cap keeps every wave boundary under `--mem-budget`; the
 //! bounded queue refuses overload with a typed `QueueFull`.
 //!
+//! `--dtype` picks the arena's element size class (`f32` default, `f16`,
+//! `i8`): intermediate payloads are stored packed at the quantized element
+//! size (per-record scale/zero-point chosen at each op's output), plans
+//! and `--mem-budget` admission resolve under the shrunken footprint — i8
+//! admits roughly 4× the f32 batch under the same budget — and served
+//! outputs dequantize back to f32. Quantized serving is static-only:
+//! `--dtype` refuses to combine with `--dynamic`, `--paged`, or
+//! `--continuous`.
+//!
 //! Strategy names come from `planner::registry` — the single list the
 //! tables, the plan cache, and this CLI all share.
 //!
@@ -74,8 +84,8 @@ use tensorarena::planner::order::{
     reorder_graph,
 };
 use tensorarena::planner::{
-    offset, registry, DynamicMode, DynamicRecords, OffsetPlanner, OrderStrategy, PlanCache,
-    PlanRequest, PlanService, SharedObjectPlanner,
+    offset, registry, Dtype, DynamicMode, DynamicRecords, OffsetPlanner, OrderStrategy,
+    PlanCache, PlanRequest, PlanService, SharedObjectPlanner,
 };
 use tensorarena::records::UsageRecords;
 use tensorarena::report::{self, MIB};
@@ -570,6 +580,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut paged = false;
     let mut continuous = false;
     let mut threads = 1usize;
+    let mut dtype = Dtype::F32;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -663,11 +674,26 @@ fn cmd_serve(args: &[String]) -> i32 {
                 threads = t.max(1);
                 i += 2;
             }
+            "--dtype" => {
+                let Some(d) = args.get(i + 1).and_then(|v| v.parse::<Dtype>().ok()) else {
+                    eprintln!("--dtype wants one of: f32, f16, i8");
+                    return 2;
+                };
+                dtype = d;
+                i += 2;
+            }
             other => {
                 eprintln!("unknown flag {other}");
                 return 2;
             }
         }
+    }
+    if dtype != Dtype::F32 && (dynamic.is_some() || paged || continuous) {
+        eprintln!(
+            "--dtype {dtype} cannot combine with --dynamic/--paged/--continuous: i8/f16 size \
+             classes are static-mode only"
+        );
+        return 2;
     }
     #[cfg(feature = "pjrt")]
     {
@@ -706,6 +732,12 @@ fn cmd_serve(args: &[String]) -> i32 {
                      multicore execution applies to the pure-Rust executor path only"
                 );
             }
+            if dtype != Dtype::F32 {
+                eprintln!(
+                    "--dtype {dtype} ignored: the PJRT AOT path executes compiled f32 \
+                     kernels; quantized size classes apply to the pure-Rust executor path only"
+                );
+            }
             return match serve_bench(&dir, &strategy, requests, max_batch, wait_ms, mem_budget) {
                 Ok(()) => 0,
                 Err(e) => {
@@ -726,6 +758,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         &model,
         &strategy,
         order,
+        dtype,
         requests,
         max_batch,
         wait_ms,
@@ -766,12 +799,18 @@ fn cmd_serve(args: &[String]) -> i32 {
 /// wave-boundary admission, bounded-queue backpressure — and admission
 /// charges the tail demand per live lane; the storm below then keeps a
 /// sliding window of outstanding requests so admissions actually overlap
-/// in-flight decode loops instead of flooding the bounded queue.
+/// in-flight decode loops instead of flooding the bounded queue. With a
+/// non-f32 `dtype`, arena payloads are stored packed at the i8/f16 size
+/// class (per-record scale/zero-point, outputs dequantized back to f32)
+/// and the plans plus the admission envelope resolve under the shrunken
+/// footprint; quantized serving is static-only, so the caller has already
+/// refused the dynamic/paged/continuous combinations.
 #[allow(clippy::too_many_arguments)]
 fn serve_pure(
     model: &str,
     strategy: &str,
     order: OrderStrategy,
+    dtype: Dtype,
     requests: usize,
     max_batch: usize,
     wait_ms: u64,
@@ -799,7 +838,14 @@ fn serve_pure(
     let req = PlanRequest::new()
         .with_strategy(strategy)
         .map_err(|e| e.to_string())?
-        .with_order(order);
+        .with_order(order)
+        .with_dtype(dtype);
+    if dtype != Dtype::F32 {
+        println!(
+            "quantized serving: {dtype} size class ({} B/elem vs 4 B f32)",
+            dtype.element_bytes(),
+        );
+    }
     // Apply the order up front: `recs` below are the *served* records, so
     // warm starts, budget resolution, and the final stats all agree with
     // what the engine (which re-derives the same deterministic order)
@@ -1094,6 +1140,9 @@ fn serve_pure(
     } else {
         stats
     };
+    // The dtype segment is reported only for quantized serving — f32
+    // clears the field, keeping the plain stats line unchanged.
+    let stats = stats.with_dtype(dtype);
     println!(
         "at max batch {}: {}",
         max_batch.max(1),

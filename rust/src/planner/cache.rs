@@ -5,8 +5,9 @@
 //! (§5); serving multiplies that by batch-size variants and engine
 //! replicas. The cache keys plans by the FNV-1a fingerprint of the usage
 //! records (the planner's entire input) and the typed
-//! [`PlanRequest`] — strategy, order, batch, dynamic mode in one value —
-//! so two executors serving the same model at the same batch share one
+//! [`PlanRequest`] — strategy, order, batch, dtype, dynamic mode in one
+//! value — so two executors serving the same model at the same batch share
+//! one
 //! `Arc<OffsetPlan>` and the planner runs exactly once. The order is a key
 //! dimension in its own right: two orders that happen to coincide
 //! (annealing found nothing) still occupy distinct slots, so order-keyed
@@ -28,7 +29,7 @@
 
 use super::dynamic::{DynamicRecords, MultiPassPlan, MultiPassPlanner};
 use super::registry::OrderStrategy;
-use super::request::{DynamicMode, ParseRequestError, PlanRequest};
+use super::request::{Dtype, DynamicMode, ParseRequestError, PlanRequest};
 use super::serialize::{self, LoadError};
 use super::{registry, OffsetPlan, PlanError};
 use crate::records::UsageRecords;
@@ -78,7 +79,8 @@ impl std::error::Error for PlanServiceError {}
 type Key = (u64, PlanRequest);
 
 /// Dynamic-plan cache key: **resolved-size-prefix fingerprint** × batch ×
-/// canonical strategy key × execution-order strategy. The fingerprint
+/// canonical strategy key × execution-order strategy × element dtype. The
+/// fingerprint
 /// ([`serialize::resolved_prefix_fingerprint`]) covers the op count, every
 /// record's interval and `known_at`, and the sizes resolved so far — so
 /// decode steps between wave boundaries, and any two sequences whose
@@ -87,7 +89,7 @@ type Key = (u64, PlanRequest);
 /// fingerprint, never as a raw field: `Resolved(op)` values between the
 /// same wave boundaries (and `FullyResolved` past the last one) must share
 /// a slot — that sharing *is* the §7 amortization.
-type DynamicKey = (u64, usize, &'static str, OrderStrategy);
+type DynamicKey = (u64, usize, &'static str, OrderStrategy, Dtype);
 
 /// Most dynamic (multi-pass) plans kept resident. Static cache keys are
 /// bounded by the served model/batch/strategy set, but resolved-size
@@ -127,14 +129,20 @@ pub struct WarmStartReport {
     /// foreign files, these belong to another valid serving configuration
     /// (fleets share directories), so they are not "suspect".
     pub skipped_stale_order: usize,
+    /// Files written under a quantized size class ([`Dtype`] key) this
+    /// build does not recognize — a newer build's plans sharing the
+    /// directory. Forward compatibility exactly like stale-order files:
+    /// counted, left intact, never suspect.
+    pub skipped_stale_dtype: usize,
     /// Files that failed to parse or verify (truncated, checksum-corrupt,
     /// record-mismatched, unparseable or pre-bump-version name).
     pub skipped_corrupt: usize,
 }
 
 impl WarmStartReport {
-    /// Everything skipped for a *suspect* reason (foreign and stale-order
-    /// files belong to other valid configurations and are not suspect).
+    /// Everything skipped for a *suspect* reason (foreign, stale-order,
+    /// and stale-dtype files belong to other valid configurations and are
+    /// not suspect).
     pub fn skipped(&self) -> usize {
         self.skipped_stale_strategy + self.skipped_corrupt
     }
@@ -267,7 +275,7 @@ impl PlanCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let planner = registry::offset_strategy(req.strategy()).expect("canonical key resolves");
-        let scaled = records.scaled(req.batch());
+        let scaled = records.scaled_for(req.batch(), req.dtype());
         let plan = planner.plan(&scaled);
         plan.validate(&scaled).map_err(PlanServiceError::Infeasible)?;
         let plan = Arc::new(plan);
@@ -332,14 +340,14 @@ impl PlanCache {
             )));
         }
         let fp = serialize::resolved_prefix_fingerprint(dynamic, mode);
-        let key: DynamicKey = (fp, req.batch(), req.strategy(), req.order());
+        let key: DynamicKey = (fp, req.batch(), req.strategy(), req.order(), req.dtype());
         let mut slots = self.dynamic.lock().unwrap();
         if let Some(plan) = slots.plans.get(&key) {
             self.dynamic_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(plan));
         }
         self.dynamic_misses.fetch_add(1, Ordering::Relaxed);
-        let scaled = dynamic.scaled(req.batch());
+        let scaled = dynamic.scaled_for(req.batch(), req.dtype());
         let plan = MultiPassPlanner.plan_resolved(&scaled, mode);
         if let Some(complete) = plan.offset_plan() {
             complete
@@ -425,7 +433,11 @@ impl PlanCache {
         req: &PlanRequest,
     ) -> Result<String, PlanServiceError> {
         let plan = self.get_or_plan(records, req)?;
-        Ok(serialize::offset_plan_to_string(&plan, &records.scaled(req.batch()), req))
+        Ok(serialize::offset_plan_to_string(
+            &plan,
+            &records.scaled_for(req.batch(), req.dtype()),
+            req,
+        ))
     }
 
     /// Seed the cache from a previously spilled plan, filing it under
@@ -433,8 +445,8 @@ impl PlanCache {
     /// trusted on its own: the record set embedded in the text is verified
     /// field by field — count, full id coverage (no dropped or duplicated
     /// lines), every `(size, first_op, last_op)` — against
-    /// `records.scaled(req.batch())`, which is exactly the fingerprint
-    /// input, plus checksum, feasibility, and (v2) the canonical order key
+    /// `records.scaled_for(req.batch(), req.dtype())`, plus checksum,
+    /// feasibility, and (v2) the canonical order key
     /// in the header, which must match `req.order()`. A plan spilled for
     /// one model, another batch, or another execution order can therefore
     /// never be filed under this key.
@@ -456,7 +468,7 @@ impl PlanCache {
             )));
         }
         let key: Key = (serialize::records_fingerprint(records), *req);
-        let scaled = records.scaled(req.batch());
+        let scaled = records.scaled_for(req.batch(), req.dtype());
         let plan = Arc::new(
             serialize::offset_plan_from_str(text, &scaled, req).map_err(PlanServiceError::Load)?,
         );
@@ -504,7 +516,11 @@ impl PlanCache {
                 report.skipped += 1;
                 continue;
             };
-            let text = serialize::offset_plan_to_string(&plan, &base.scaled(req.batch()), &req);
+            let text = serialize::offset_plan_to_string(
+                &plan,
+                &base.scaled_for(req.batch(), req.dtype()),
+                &req,
+            );
             let name = serialize::plan_file_name(fingerprint, &req);
             // Per-process tmp name: two servers persisting into a shared
             // fleet directory must not clobber each other's half-written
@@ -591,6 +607,15 @@ impl PlanCache {
                     // directory) gates exactly like any other-order file —
                     // silent, counted, left intact, never suspect.
                     report.skipped_stale_order += 1;
+                    continue;
+                }
+                Err(ParseRequestError::UnknownDtype(_)) => {
+                    // Forward compatibility again: a quantized size class
+                    // this build does not know. Counted in its own field,
+                    // left intact, never suspect — pre-dtype names carry no
+                    // `~` segment at all and parse as f32, so they never
+                    // reach this arm.
+                    report.skipped_stale_dtype += 1;
                     continue;
                 }
                 Err(ParseRequestError::UnknownStrategy(strategy)) => {
@@ -1107,6 +1132,48 @@ mod tests {
             cache.max_servable_batch_dynamic(&dynamic, &req(), peak1 - 1).unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn dtype_is_a_cache_dimension_with_a_proportionally_smaller_plan() {
+        // Sizes divisible by 4 with 64-aligned quotients, so the i8
+        // shrink is exactly 4x (no alignment slack) and the greedy-size
+        // heuristic sees the same comparisons at both widths.
+        let recs = UsageRecords::from_triples(&[(0, 2, 4096), (1, 3, 2048), (2, 5, 1024)]);
+        let cache = PlanCache::new();
+        let f32p = cache.get_or_plan(&recs, &req().with_batch(2)).unwrap();
+        let i8p = cache
+            .get_or_plan(&recs, &req().with_batch(2).with_dtype(Dtype::I8))
+            .unwrap();
+        assert_eq!(cache.misses(), 2, "each dtype occupies its own slot");
+        assert_eq!(4 * i8p.total, f32p.total, "i8 arena is exactly 4x smaller");
+        i8p.validate(&recs.scaled_for(2, Dtype::I8)).unwrap();
+        // Budget admission resolves a strictly larger cap under i8.
+        let budget = f32p.total;
+        let cap_f32 = cache.max_servable_batch(&recs, &req(), budget).unwrap();
+        let cap_i8 = cache
+            .max_servable_batch(&recs, &req().with_dtype(Dtype::I8), budget)
+            .unwrap();
+        assert!(cap_f32 >= 1);
+        assert!(cap_i8 >= 4 * cap_f32, "i8 cap {cap_i8} vs f32 cap {cap_f32}");
+    }
+
+    #[test]
+    fn quantized_plans_persist_and_warm_start() {
+        let dir = scratch_dir("dtype-roundtrip");
+        let recs = example_records();
+        let warm = PlanCache::new();
+        let quant = req().with_dtype(Dtype::I8).with_batch(2);
+        warm.get_or_plan(&recs, &quant).unwrap();
+        assert_eq!(warm.persist_dir(&dir).unwrap().written, 1);
+        // The warm-start request's dtype does not gate loading (only the
+        // order does): the i8 plan seeds an f32-request warm start too.
+        let cold = PlanCache::new();
+        let report = cold.warm_start(&dir, &recs, &req()).unwrap();
+        assert_eq!(report.loaded, 1, "{report:?}");
+        cold.get_or_plan(&recs, &quant).unwrap();
+        assert_eq!(cold.misses(), 0, "quantized warm start must avoid the planner");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -129,6 +129,35 @@ impl DynamicRecords {
         }
     }
 
+    /// The same records scaled for `batch` lanes of `dtype` elements —
+    /// mirrors [`UsageRecords::scaled_for`]: per-sample sizes first shrink
+    /// by the dtype's element width (re-aligned to the 64-byte grid), then
+    /// multiply by `batch`. Liveness and `known_at` are untouched;
+    /// [`super::Dtype::F32`] is the identity with [`DynamicRecords::scaled`].
+    pub fn scaled_for(&self, batch: usize, dtype: super::Dtype) -> DynamicRecords {
+        if dtype == super::Dtype::F32 {
+            return self.scaled(batch);
+        }
+        assert!(batch > 0, "batch must be positive");
+        let divisor = 4 / dtype.element_bytes();
+        DynamicRecords {
+            records: self
+                .records
+                .iter()
+                .map(|d| DynamicRecord {
+                    record: UsageRecord {
+                        size: (d.record.size.div_ceil(divisor).div_ceil(64) * 64)
+                            .checked_mul(batch)
+                            .expect("batch-scaled size overflows"),
+                        ..d.record
+                    },
+                    known_at: d.known_at,
+                })
+                .collect(),
+            num_ops: self.num_ops,
+        }
+    }
+
     /// Distinct `known_at` values, ascending — one planner wave per entry.
     pub fn waves(&self) -> Vec<usize> {
         let mut w: Vec<usize> = self.records.iter().map(|d| d.known_at).collect();

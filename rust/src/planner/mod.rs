@@ -21,7 +21,9 @@
 //! **execution order** ([`order`], §7.1 — which topological sort the
 //! records are extracted under) and **dynamic shapes** ([`dynamic`], §7 —
 //! multi-pass planning when sizes resolve mid-inference, cached per
-//! resolved-size prefix). All four dimensions — strategy, order, batch,
+//! resolved-size prefix). A fifth dimension, the quantized element size
+//! class ([`request::Dtype`]), divides every record footprint before
+//! planning. All five dimensions — strategy, order, batch, dtype,
 //! dynamic resolution state — travel together as one typed
 //! [`request::PlanRequest`], which is simultaneously the
 //! [`cache::PlanCache`] key behind [`service::PlanService`], the `.plan`
@@ -45,7 +47,7 @@ pub use cache::{PersistReport, PlanCache, PlanServiceError, WarmStartReport};
 pub use dynamic::{DynamicRecord, DynamicRecords, MultiPassPlan, MultiPassPlanner};
 pub use order::{apply_order, AppliedOrder};
 pub use registry::{order_strategy, OrderStrategy};
-pub use request::{DynamicMode, ParseRequestError, PlanRequest};
+pub use request::{Dtype, DynamicMode, ParseRequestError, PlanRequest};
 pub use service::{PlanService, PlanServiceStats};
 pub use validate::PlanError;
 

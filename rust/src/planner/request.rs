@@ -1,8 +1,10 @@
 //! `PlanRequest`: the one typed plan identity.
 //!
-//! Every plan in this crate is identified by four dimensions — offset
+//! Every plan in this crate is identified by five dimensions — offset
 //! **strategy** (§5/§6), execution **order** (§7.1), **batch** (serving
-//! scales every record uniformly), and §7 **dynamic resolution state**
+//! scales every record uniformly), element **dtype** ([`Dtype`] — the
+//! quantized size class every record footprint is divided by), and §7
+//! **dynamic resolution state**
 //! ([`DynamicMode`]). Before this type each dimension arrived as another
 //! positional argument and another method suffix (`_ordered`, `_dynamic`,
 //! `_dynamic_resolved`); a [`PlanRequest`] bundles them into a single
@@ -22,20 +24,23 @@
 //! # Grammar
 //!
 //! ```text
-//! request = "b" batch "-" strategy "@" order [ "+" dynamic ]
+//! request = "b" batch "-" strategy "@" order [ "~" dtype ] [ "+" dynamic ]
 //! batch    = positive decimal integer
 //! strategy = canonical registry key          ; e.g. "greedy-size"
 //! order    = canonical order key             ; "natural" | "memory-aware" |
 //!                                            ; "annealed-s<seed>-t<trials>"
+//! dtype    = "f32" | "f16" | "i8"            ; absent = f32
 //! dynamic  = "r" op-index | "full"           ; absent = static
 //! ```
 //!
-//! `@` and `+` never appear in strategy or order keys, so the last `@` and
-//! the last `+` split unambiguously; batch is digits-only, so the first
-//! `-` after it ends the batch field even though strategy keys contain
-//! `-`. Static requests render exactly the pre-redesign
-//! `b<batch>-<strategy>@<order>` segment, so every `.plan` v2 directory
-//! written before this type existed still parses (and warm-starts) today.
+//! `@`, `~`, and `+` never appear in strategy, order, or dtype keys, so the
+//! last `@`, `~`, and `+` split unambiguously; batch is digits-only, so the
+//! first `-` after it ends the batch field even though strategy keys
+//! contain `-`. [`Dtype::F32`] requests render *no* dtype segment, so f32
+//! requests (and static f32 requests in particular) render exactly the
+//! pre-redesign `b<batch>-<strategy>@<order>` segment — every `.plan` v2
+//! directory written before this type (or before the dtype dimension)
+//! existed still parses as f32 and warm-starts today.
 //!
 //! # Example
 //!
@@ -54,6 +59,12 @@
 //! assert_eq!(step.to_string(), "b4-greedy-breadth@memory-aware+r17");
 //! assert!("b4-greedy-breadth@memory-aware+full".parse::<PlanRequest>().is_ok());
 //! assert!("b0-greedy-size@natural".parse::<PlanRequest>().is_err()); // batch 0
+//!
+//! // So is the quantized size class; f32 renders no segment at all:
+//! use tensorarena::planner::Dtype;
+//! let quant = req.with_dtype(Dtype::I8);
+//! assert_eq!(quant.to_string(), "b4-greedy-breadth@memory-aware~i8");
+//! assert_eq!(req.with_dtype(Dtype::F32), req);
 //! ```
 
 use super::registry::{self, OrderStrategy};
@@ -107,7 +118,72 @@ impl DynamicMode {
     }
 }
 
-/// A typed plan identity: strategy × order × batch × dynamic mode.
+/// Element size class a plan is sized and executed under — the quantized
+/// tensor dimension of a [`PlanRequest`].
+///
+/// The planner never touches element values: the dtype only divides every
+/// [`UsageRecords`](crate::records::UsageRecords) byte footprint
+/// (re-aligned to the 64-byte grid) before planning, so arenas shrink ~4×
+/// under [`Dtype::I8`] and ~2× under [`Dtype::F16`] and `--mem-budget`
+/// admits proportionally larger batches. The executor quantizes
+/// per-record at wave boundaries (`exec::ops::quant`) with the f32 scalar
+/// kernels kept as the accuracy oracle (`tests/quant_diff.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Dtype {
+    /// 32-bit float — exact, the default, and byte-identical to the
+    /// pre-dtype grammar (renders no `~` segment).
+    #[default]
+    F32,
+    /// 16-bit IEEE 754 half-precision float: ~2× smaller arenas.
+    F16,
+    /// 8-bit signed integer with per-record scale/zero-point: ~4× smaller
+    /// arenas.
+    I8,
+}
+
+impl Dtype {
+    /// Every size class, in grammar order — for sweeps and tests.
+    pub const ALL: [Dtype; 3] = [Dtype::F32, Dtype::F16, Dtype::I8];
+
+    /// Canonical grammar key (`"f32"` | `"f16"` | `"i8"`).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F16 => "f16",
+            Dtype::I8 => "i8",
+        }
+    }
+
+    /// Bytes per element (4, 2, or 1) — what divides the f32 record sizes.
+    pub fn element_bytes(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F16 => 2,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+impl FromStr for Dtype {
+    type Err = ParseRequestError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "f16" => Ok(Dtype::F16),
+            "i8" => Ok(Dtype::I8),
+            other => Err(ParseRequestError::UnknownDtype(other.to_string())),
+        }
+    }
+}
+
+/// A typed plan identity: strategy × order × batch × dtype × dynamic mode.
 ///
 /// Construct with [`PlanRequest::new`] (or
 /// [`PlanService::request`](super::service::PlanService::request) to seed
@@ -123,6 +199,7 @@ pub struct PlanRequest {
     strategy: &'static str,
     order: OrderStrategy,
     batch: usize,
+    dtype: Dtype,
     dynamic: DynamicMode,
 }
 
@@ -144,6 +221,10 @@ pub enum ParseRequestError {
     /// The grammar parsed but the order key is not recognized (e.g. a
     /// newer build's order strategy sharing the directory).
     UnknownOrder(String),
+    /// The grammar parsed but the dtype key after `~` is not a known size
+    /// class (a newer build's quantization sharing the directory — a
+    /// forward-compatibility *skip*, not corruption).
+    UnknownDtype(String),
     /// The text does not speak the request grammar at all (this includes
     /// pre-v2 names without an `@<order>` segment and batch 0).
     Malformed(String),
@@ -157,6 +238,9 @@ impl fmt::Display for ParseRequestError {
             }
             ParseRequestError::UnknownOrder(o) => {
                 write!(f, "unknown order key '{o}' in plan request")
+            }
+            ParseRequestError::UnknownDtype(d) => {
+                write!(f, "unknown dtype key '{d}' in plan request")
             }
             ParseRequestError::Malformed(s) => write!(f, "malformed plan request '{s}'"),
         }
@@ -178,6 +262,7 @@ impl PlanRequest {
             strategy: Self::DEFAULT_STRATEGY,
             order: OrderStrategy::Natural,
             batch: 1,
+            dtype: Dtype::F32,
             dynamic: DynamicMode::Static,
         }
     }
@@ -215,6 +300,11 @@ impl PlanRequest {
         PlanRequest { dynamic, ..self }
     }
 
+    /// Replace the quantized element size class.
+    pub fn with_dtype(self, dtype: Dtype) -> Self {
+        PlanRequest { dtype, ..self }
+    }
+
     /// Canonical registry key of the offset strategy.
     pub fn strategy(&self) -> &'static str {
         self.strategy
@@ -234,11 +324,19 @@ impl PlanRequest {
     pub fn dynamic(&self) -> DynamicMode {
         self.dynamic
     }
+
+    /// Quantized element size class ([`Dtype::F32`] unless set).
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
 }
 
 impl fmt::Display for PlanRequest {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "b{}-{}@{}", self.batch, self.strategy, self.order.key())?;
+        if self.dtype != Dtype::F32 {
+            write!(f, "~{}", self.dtype.key())?;
+        }
         match self.dynamic {
             DynamicMode::Static => Ok(()),
             DynamicMode::Resolved(op) => write!(f, "+r{op}"),
@@ -266,6 +364,16 @@ impl FromStr for PlanRequest {
                 (core, DynamicMode::Resolved(op))
             }
         };
+        // The last '~' (never part of a strategy or order key) splits off
+        // the optional dtype segment; an unknown key is a typed
+        // forward-compatibility skip, not corruption.
+        let (core, dtype) = match core.rsplit_once('~') {
+            None => (core, Dtype::F32),
+            Some((_, key)) if key.is_empty() || key.contains(char::is_whitespace) => {
+                return Err(malformed());
+            }
+            Some((head, key)) => (head, key.parse::<Dtype>()?),
+        };
         // The last '@' splits strategy from order.
         let (rest, order_key) = core.rsplit_once('@').ok_or_else(malformed)?;
         if order_key.is_empty() || order_key.contains(char::is_whitespace) {
@@ -286,7 +394,7 @@ impl FromStr for PlanRequest {
         }
         let strategy = registry::offset_key(strategy)
             .ok_or_else(|| ParseRequestError::UnknownStrategy(strategy.to_string()))?;
-        Ok(PlanRequest { strategy, order, batch, dynamic })
+        Ok(PlanRequest { strategy, order, batch, dtype, dynamic })
     }
 }
 
@@ -317,20 +425,23 @@ mod tests {
                 OrderStrategy::Annealed { seed: 7, budget: 25 },
             ] {
                 for batch in [1usize, 2, 64] {
-                    for dynamic in [
-                        DynamicMode::Static,
-                        DynamicMode::Resolved(0),
-                        DynamicMode::Resolved(123),
-                        DynamicMode::FullyResolved,
-                    ] {
-                        let req = PlanRequest::new()
-                            .with_strategy(strategy)
-                            .unwrap()
-                            .with_order(order)
-                            .with_batch(batch)
-                            .with_dynamic(dynamic);
-                        let text = req.to_string();
-                        assert_eq!(text.parse::<PlanRequest>(), Ok(req), "{text}");
+                    for dtype in Dtype::ALL {
+                        for dynamic in [
+                            DynamicMode::Static,
+                            DynamicMode::Resolved(0),
+                            DynamicMode::Resolved(123),
+                            DynamicMode::FullyResolved,
+                        ] {
+                            let req = PlanRequest::new()
+                                .with_strategy(strategy)
+                                .unwrap()
+                                .with_order(order)
+                                .with_batch(batch)
+                                .with_dtype(dtype)
+                                .with_dynamic(dynamic);
+                            let text = req.to_string();
+                            assert_eq!(text.parse::<PlanRequest>(), Ok(req), "{text}");
+                        }
                     }
                 }
             }
@@ -376,12 +487,41 @@ mod tests {
             "b1-greedy-size@natural+r",    // dynamic tag without an index
             "b1-greedy-size@natural+rx",   // non-numeric index
             "b1-greedy-size@natural+half", // unknown dynamic tag
+            "b1-greedy-size@natural~",     // empty dtype segment
         ] {
             assert!(
                 matches!(bad.parse::<PlanRequest>(), Err(ParseRequestError::Malformed(_))),
                 "{bad:?}"
             );
         }
+    }
+
+    #[test]
+    fn dtype_segment_grammar() {
+        // f32 is the default and renders no segment — byte-identical to
+        // the pre-dtype grammar — but an explicit `~f32` still parses.
+        let base = PlanRequest::new().with_batch(2);
+        assert_eq!(base.dtype(), Dtype::F32);
+        assert_eq!(base.to_string(), "b2-greedy-size@natural");
+        assert_eq!("b2-greedy-size@natural~f32".parse::<PlanRequest>(), Ok(base));
+        // Non-f32 dtypes render before the dynamic segment and roundtrip.
+        let quant = base.with_dtype(Dtype::I8).with_dynamic(DynamicMode::FullyResolved);
+        assert_eq!(quant.to_string(), "b2-greedy-size@natural~i8+full");
+        assert_eq!(quant.to_string().parse::<PlanRequest>(), Ok(quant));
+        assert_eq!(
+            base.with_dtype(Dtype::F16).to_string(),
+            "b2-greedy-size@natural~f16"
+        );
+        // Unknown dtype keys are a typed forward-compatibility skip.
+        assert_eq!(
+            "b2-greedy-size@natural~i4".parse::<PlanRequest>(),
+            Err(ParseRequestError::UnknownDtype("i4".into()))
+        );
+        // Element widths divide the f32 baseline.
+        assert_eq!(
+            Dtype::ALL.map(|d| d.element_bytes()),
+            [4, 2, 1]
+        );
     }
 
     #[test]

@@ -45,11 +45,14 @@
 //!   the **batch-1** records (the plan-cache key fingerprint); for a
 //!   non-natural order these are the records of the *reordered* graph;
 //! * `<request>` — the canonical [`PlanRequest`] rendering
-//!   (`b<batch>-<strategy>@<order>`, see [`super::request`] for the full
-//!   grammar). Only **static** requests appear on disk; for them the
-//!   rendering is byte-identical to the pre-redesign name format, so old
-//!   plan directories keep warm-starting. v1-era file names (no
-//!   `@<order>` segment) fail to parse and are skipped.
+//!   (`b<batch>-<strategy>@<order>[~<dtype>]`, see [`super::request`] for
+//!   the full grammar). Only **static** requests appear on disk; the
+//!   `~<dtype>` segment appears only for non-f32 size classes (e.g.
+//!   `…@natural~i8.plan`), so f32 names are byte-identical to the
+//!   pre-redesign format and every pre-dtype directory parses as f32 and
+//!   keeps warm-starting. v1-era file names (no `@<order>` segment) fail
+//!   to parse and are skipped; an unrecognized dtype key is a typed
+//!   forward-compatibility skip ([`ParseRequestError::UnknownDtype`]).
 //!
 //! Each file's *content* is the v2 text format above, serialized against
 //! the batch-scaled records. Writers create files atomically (write to a
@@ -122,8 +125,8 @@ pub fn resolved_prefix_fingerprint(dynamic: &DynamicRecords, mode: DynamicMode) 
 
 /// Serialize an offset plan together with the records it plans, stamping
 /// the canonical key of `req`'s execution order into the v2 header.
-/// `records` must be the batch-scaled records the plan was produced for
-/// (`base.scaled(req.batch())`).
+/// `records` must be the batch- and dtype-scaled records the plan was
+/// produced for (`base.scaled_for(req.batch(), req.dtype())`).
 pub fn offset_plan_to_string(
     plan: &OffsetPlan,
     records: &UsageRecords,
@@ -320,8 +323,8 @@ fn parse_offset_plan(
 /// Load and verify an offset plan against `records`, additionally checking
 /// that the plan was serialized under `req`'s execution order — a plan's
 /// offsets are only meaningful for the record lifetimes of the order that
-/// produced it. `records` must be the batch-scaled records
-/// (`base.scaled(req.batch())`).
+/// produced it. `records` must be the batch- and dtype-scaled records
+/// (`base.scaled_for(req.batch(), req.dtype())`).
 pub fn offset_plan_from_str(
     text: &str,
     records: &UsageRecords,
@@ -390,8 +393,9 @@ fn from_str_with_order(
 /// `<fingerprint>-<request>.plan`, with `fingerprint` the **batch-1**
 /// records fingerprint and `<request>` the [`PlanRequest`]'s canonical
 /// [`Display`](std::fmt::Display) rendering — exactly the plan-cache key.
-/// For static requests this is byte-identical to the pre-redesign
-/// `<fingerprint>-b<batch>-<strategy>@<order>.plan` grammar.
+/// For static f32 requests this is byte-identical to the pre-redesign
+/// `<fingerprint>-b<batch>-<strategy>@<order>.plan` grammar; non-f32 size
+/// classes append their `~<dtype>` segment.
 pub fn plan_file_name(fingerprint: u64, req: &PlanRequest) -> String {
     format!("{fingerprint:016x}-{req}.plan")
 }
@@ -701,7 +705,22 @@ mod tests {
                 .with_order(order);
             let name = plan_file_name(fp, &req);
             assert_eq!(parse_plan_file_name(&name), Ok((fp, req)), "{name}");
+            // Every quantized size class roundtrips too; f32 adds nothing.
+            for dtype in crate::planner::Dtype::ALL {
+                let qreq = req.with_dtype(dtype);
+                let qname = plan_file_name(fp, &qreq);
+                assert_eq!(parse_plan_file_name(&qname), Ok((fp, qreq)), "{qname}");
+                if dtype == crate::planner::Dtype::F32 {
+                    assert_eq!(qname, name, "f32 names stay byte-identical");
+                }
+            }
         }
+        // An unknown dtype key in an otherwise-valid name is stale, not
+        // malformed — forward compatibility for a newer build's plans.
+        assert_eq!(
+            parse_plan_file_name("0000000000000000-b1-naive@natural~i4.plan"),
+            Err(ParseRequestError::UnknownDtype("i4".into()))
+        );
         // Junk that must not parse: tmp files, truncated names, batch 0,
         // pre-bump v1 names without the @<order> segment, empty order.
         for bad in [

@@ -18,6 +18,13 @@ pub mod profile;
 pub use profile::OperatorProfiles;
 
 use crate::graph::{Graph, TensorId, TensorKind};
+use crate::planner::Dtype;
+
+/// Align `bytes` up to the 64-byte grid every record size lives on.
+#[inline]
+fn align64(bytes: usize) -> usize {
+    bytes.div_ceil(64) * 64
+}
 
 
 /// One tensor usage record (§3). `id` is a dense index into the records
@@ -149,6 +156,33 @@ impl UsageRecords {
         }
     }
 
+    /// The records scaled for `batch` lanes of `dtype` elements. The base
+    /// (per-sample, f32) size first shrinks by the dtype's element width —
+    /// re-aligned up to the 64-byte grid [`UsageRecords::from_graph`]
+    /// sizes live on — and the quantized per-sample size then multiplies
+    /// by `batch` exactly like [`UsageRecords::scaled`].
+    /// [`Dtype::F32`] is the identity: `scaled_for(b, F32) == scaled(b)`.
+    pub fn scaled_for(&self, batch: usize, dtype: Dtype) -> UsageRecords {
+        if dtype == Dtype::F32 {
+            return self.scaled(batch);
+        }
+        assert!(batch > 0, "batch must be positive");
+        let divisor = 4 / dtype.element_bytes();
+        UsageRecords {
+            records: self
+                .records
+                .iter()
+                .map(|r| UsageRecord {
+                    size: align64(r.size.div_ceil(divisor))
+                        .checked_mul(batch)
+                        .expect("batch-scaled size overflows"),
+                    ..*r
+                })
+                .collect(),
+            num_ops: self.num_ops,
+        }
+    }
+
     /// Number of records.
     pub fn len(&self) -> usize {
         self.records.len()
@@ -241,5 +275,48 @@ mod tests {
     #[should_panic(expected = "batch must be positive")]
     fn scaled_rejects_zero_batch() {
         UsageRecords::from_triples(&[(0, 1, 32)]).scaled(0);
+    }
+
+    #[test]
+    fn scaled_for_shrinks_by_element_width_and_keeps_alignment() {
+        let r = UsageRecords::from_triples(&[(0, 1, 256), (1, 2, 64), (2, 5, 192)]);
+        // i8: /4, re-aligned to 64, then ×batch.
+        let i8x2 = r.scaled_for(2, Dtype::I8);
+        assert_eq!(
+            i8x2.records.iter().map(|r| r.size).collect::<Vec<_>>(),
+            vec![128, 128, 128] // (64, 16→64, 48→64) × 2
+        );
+        // f16: /2, re-aligned to 64.
+        let f16x1 = r.scaled_for(1, Dtype::F16);
+        assert_eq!(
+            f16x1.records.iter().map(|r| r.size).collect::<Vec<_>>(),
+            vec![128, 64, 128] // 128, 32→64, 96→128
+        );
+        // Liveness and identity fields never change.
+        for (a, b) in r.records.iter().zip(i8x2.records.iter()) {
+            assert_eq!(
+                (a.id, a.tensor, a.first_op, a.last_op),
+                (b.id, b.tensor, b.first_op, b.last_op)
+            );
+        }
+        // Every quantized size stays on the 64-byte grid.
+        for rec in i8x2.records.iter().chain(f16x1.records.iter()) {
+            assert_eq!(rec.size % 64, 0);
+        }
+        // F32 is exactly scaled().
+        for batch in [1, 3] {
+            let a = r.scaled_for(batch, Dtype::F32);
+            let b = r.scaled(batch);
+            assert_eq!(
+                a.records.iter().map(|r| r.size).collect::<Vec<_>>(),
+                b.records.iter().map(|r| r.size).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batch must be positive")]
+    fn scaled_for_rejects_zero_batch() {
+        UsageRecords::from_triples(&[(0, 1, 32)]).scaled_for(0, Dtype::I8);
     }
 }

@@ -1,8 +1,9 @@
 //! The `PlanRequest` grammar tier: the typed plan identity must roundtrip
 //! through the `.plan` v2 file-name/header grammar for random
-//! strategy/order/batch/dynamic combinations, pre-redesign v2 directories
-//! must keep warm-starting byte-for-byte (zero planner invocations), and
-//! v1/stale names must still be rejected with the existing skip counters.
+//! strategy/order/batch/dynamic/dtype combinations, pre-redesign v2
+//! directories must keep warm-starting byte-for-byte (zero planner
+//! invocations — f32 renders no dtype segment at all), and v1/stale names
+//! must still be rejected with the existing skip counters.
 //!
 //! Property tests use the same hand-rolled SplitMix64 generator as
 //! `planner_properties.rs` (the offline registry has no proptest); every
@@ -14,7 +15,8 @@ use tensorarena::planner::serialize::{
     self, offset_plan_from_str, offset_plan_to_string, parse_plan_file_name, plan_file_name,
 };
 use tensorarena::planner::{
-    registry, DynamicMode, OrderStrategy, ParseRequestError, PlanCache, PlanRequest, PlanService,
+    registry, Dtype, DynamicMode, OrderStrategy, ParseRequestError, PlanCache, PlanRequest,
+    PlanService,
 };
 use tensorarena::records::UsageRecords;
 use tensorarena::rng::SplitMix64;
@@ -45,12 +47,14 @@ fn random_request(rng: &mut SplitMix64) -> PlanRequest {
         1 => DynamicMode::Resolved(rng.next_below(10_000)),
         _ => DynamicMode::FullyResolved,
     };
+    let dtype = Dtype::ALL[rng.next_below(Dtype::ALL.len())];
     PlanRequest::new()
         .with_strategy(strategy)
         .unwrap()
         .with_order(order)
         .with_batch(rng.next_range(1, 10_000))
         .with_dynamic(dynamic)
+        .with_dtype(dtype)
 }
 
 #[test]
@@ -89,7 +93,7 @@ fn request_header_grammar_roundtrips_through_serialized_plans() {
             .with_dynamic(DynamicMode::Static)
             .with_batch(rng.next_range(1, 6));
         let plan = cache.get_or_plan(&recs, &req).unwrap();
-        let scaled = recs.scaled(req.batch());
+        let scaled = recs.scaled_for(req.batch(), req.dtype());
         let text = offset_plan_to_string(&plan, &scaled, &req);
         assert_eq!(
             offset_plan_from_str(&text, &scaled, &req).unwrap(),
@@ -258,6 +262,57 @@ fn v1_and_stale_names_keep_their_skip_counters() {
     assert!(matches!(
         parse_plan_file_name(&format!("{fp:016x}-b1-belady@natural.plan")),
         Err(ParseRequestError::UnknownStrategy(_))
+    ));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn quantized_names_warm_start_and_unknown_dtype_keys_gate_silently() {
+    // The dtype dimension joins the name grammar as `~<key>` after the
+    // order; f32 renders no segment at all (the pre-redesign test above
+    // pins that byte-identity). Known quantized classes load under any
+    // request of the same order — they plan the same lifetimes, just
+    // narrower — and an unknown key (a newer build's size class sharing
+    // the directory) gates silently in its own counter, never suspect.
+    let dir = scratch_dir("dtype");
+    let recs = UsageRecords::from_graph(&models::blazeface());
+    let fp = serialize::records_fingerprint(&recs);
+    let cache = PlanCache::new();
+    for (dtype, key) in [(Dtype::I8, "i8"), (Dtype::F16, "f16")] {
+        let req = PlanRequest::new().with_dtype(dtype).with_batch(2);
+        let plan = cache.get_or_plan(&recs, &req).unwrap();
+        // Spell the quantized name out so a Display drift breaks loudly.
+        let name = plan_file_name(fp, &req);
+        assert_eq!(name, format!("{fp:016x}-b2-greedy-size@natural~{key}.plan"));
+        let text = offset_plan_to_string(&plan, &recs.scaled_for(2, dtype), &req);
+        std::fs::write(dir.join(name), text).unwrap();
+    }
+    // A dtype key this build does not know: skipped at the name parse,
+    // before the file is ever read, so the content is irrelevant.
+    std::fs::write(
+        dir.join(format!("{fp:016x}-b1-greedy-size@natural~i4.plan")),
+        "a newer build's plan",
+    )
+    .unwrap();
+
+    let svc = PlanService::new();
+    let report = svc.warm_start(&dir, &recs, &svc.request()).unwrap();
+    assert_eq!(report.loaded, 2, "{report:?}");
+    assert_eq!(report.skipped_stale_dtype, 1, "{report:?}");
+    assert_eq!(report.skipped(), 0, "an unknown size class is never suspect");
+    // Re-planning the warm-started quantized requests costs nothing.
+    for dtype in [Dtype::I8, Dtype::F16] {
+        svc.plan(&recs, &svc.request().with_dtype(dtype).with_batch(2)).unwrap();
+    }
+    assert_eq!(
+        svc.stats().cache_misses,
+        0,
+        "quantized plans must warm-start without any planner invocation"
+    );
+    // The parse layer names the unknown key in its typed error.
+    assert!(matches!(
+        parse_plan_file_name(&format!("{fp:016x}-b1-greedy-size@natural~i4.plan")),
+        Err(ParseRequestError::UnknownDtype(key)) if key == "i4"
     ));
     std::fs::remove_dir_all(&dir).unwrap();
 }

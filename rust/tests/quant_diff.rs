@@ -1,0 +1,367 @@
+//! Differential quantization tests: the i8/f16 kernel family in
+//! `exec::ops::quant` against the straight-loop `f32` references in
+//! `exec::ops::scalar`, over the same randomized geometries as
+//! `kernel_diff.rs`.
+//!
+//! The budget here is *one quantization step*, not an ulp: every
+//! quantized kernel round-trips its activations through the dtype's grid
+//! ([`quant::round_trip`]) and runs the vectorized `f32` kernel on the
+//! dequantized values, so the only admissible divergence from the scalar
+//! oracle — run on the *same* round-tripped operands — is the output's
+//! own re-quantization. Both sides are therefore compared on the grid of
+//! the wrapper's returned [`QParams`]: the oracle's raw output is
+//! re-quantized under those exact parameters, and each element must land
+//! on the same grid point or, when the raw value straddles a
+//! round-to-nearest boundary and the families' 1-ulp divergence tips it
+//! the other way, the adjacent one. That is `quant::step(dtype, qp, raw)`
+//! exactly; the 1% headroom only absorbs the `f32` arithmetic of the
+//! comparison itself.
+//!
+//! `Dtype::F32` requests take the identity path: the wrappers must return
+//! [`QParams::IDENTITY`] and match the oracle within the 1-ulp budget of
+//! `kernel_diff.rs` — quantization must cost f32 callers nothing.
+//!
+//! Property tests use the same hand-rolled SplitMix64 generator as
+//! `kernel_diff.rs`; every failure prints its seed, dtype, and geometry.
+
+use tensorarena::exec::ops::quant::{self, QParams};
+use tensorarena::exec::ops::{scalar, Geom};
+use tensorarena::graph::{Activation, Padding};
+use tensorarena::planner::Dtype;
+use tensorarena::rng::SplitMix64;
+
+/// The quantized size classes under differential test. `Dtype::F32` is
+/// covered separately by the identity-path test.
+const QUANTIZED: [Dtype; 2] = [Dtype::I8, Dtype::F16];
+
+/// Map f32 bits onto a monotone integer line, so ulp distance is integer
+/// distance (same encoding as `kernel_diff.rs`).
+fn ordered(x: f32) -> i64 {
+    let b = x.to_bits();
+    (if b & 0x8000_0000 != 0 { !b } else { b | 0x8000_0000 }) as i64
+}
+
+fn ulp_dist(a: f32, b: f32) -> u64 {
+    assert!(!a.is_nan() && !b.is_nan(), "NaN in kernel output: {a} vs {b}");
+    (ordered(a) - ordered(b)).unsigned_abs()
+}
+
+fn assert_ulp(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+        let d = ulp_dist(g, w);
+        assert!(d <= 1, "{ctx}: elem {i}: quant-f32 {g} vs scalar {w} ({d} ulp)");
+    }
+}
+
+/// Re-quantize `raw` under `qp` — the grid the wrapper's output lives on.
+fn on_grid(dtype: Dtype, qp: QParams, raw: &[f32]) -> Vec<f32> {
+    let mut packed = vec![0f32; quant::packed_words(dtype, raw.len())];
+    quant::quantize_into(dtype, qp, raw, &mut packed);
+    let mut grid = vec![0f32; raw.len()];
+    quant::dequantize_from(dtype, qp, &packed, &mut grid);
+    grid
+}
+
+/// Assert every element of `got` is within one quantization step of the
+/// oracle's raw output re-quantized under the wrapper's own parameters.
+fn assert_step(dtype: Dtype, qp: QParams, got: &[f32], oracle_raw: &[f32], ctx: &str) {
+    assert_eq!(got.len(), oracle_raw.len(), "{ctx}: length mismatch");
+    let grid = on_grid(dtype, qp, oracle_raw);
+    for (i, (&g, (&o, &raw))) in got.iter().zip(grid.iter().zip(oracle_raw.iter())).enumerate() {
+        assert!(!g.is_nan() && !o.is_nan(), "{ctx}: elem {i}: NaN ({g} vs {o})");
+        let budget = quant::step(dtype, qp, raw) * 1.01;
+        let err = (g - o).abs();
+        assert!(
+            err <= budget,
+            "{ctx}: elem {i}: quantized {g} vs oracle-on-grid {o} (raw {raw}): \
+             err {err} > step budget {budget}"
+        );
+    }
+}
+
+fn pick_act(rng: &mut SplitMix64) -> Activation {
+    match rng.next_below(3) {
+        0 => Activation::None,
+        1 => Activation::Relu,
+        _ => Activation::Relu6,
+    }
+}
+
+/// Random conv/pool geometry (same sweep as `kernel_diff.rs`): dims,
+/// kernel, stride, dilation, padding. `dilated` enables dilation > 1.
+fn pick_geom(rng: &mut SplitMix64, dilated: bool) -> Geom {
+    loop {
+        let kh = rng.next_range(1, 4);
+        let kw = rng.next_range(1, 4);
+        let sh = rng.next_range(1, 3);
+        let sw = rng.next_range(1, 3);
+        let dh = if dilated { rng.next_range(1, 3) } else { 1 };
+        let dw = if dilated { rng.next_range(1, 3) } else { 1 };
+        let h = rng.next_range(3, 11);
+        let w = rng.next_range(3, 11);
+        let (eff_kh, eff_kw) = ((kh - 1) * dh + 1, (kw - 1) * dw + 1);
+        let padding = if rng.next_below(2) == 0 { Padding::Same } else { Padding::Valid };
+        let (oh, ow) = match padding {
+            Padding::Same => (h.div_ceil(sh), w.div_ceil(sw)),
+            Padding::Valid => {
+                if h < eff_kh || w < eff_kw {
+                    continue; // kernel doesn't fit; redraw
+                }
+                ((h - eff_kh) / sh + 1, (w - eff_kw) / sw + 1)
+            }
+        };
+        return Geom::new(h, w, oh, ow, (kh, kw), (sh, sw), (dh, dw), padding);
+    }
+}
+
+/// Signed fill in [-1, 1): exercises the i8 affine zero point away from
+/// the range edge and gives ReLU clamps real work.
+fn fill(rng: &mut SplitMix64, n: usize) -> Vec<f32> {
+    let mut v = vec![0f32; n];
+    rng.fill_f32(&mut v, 1.0);
+    v
+}
+
+/// The wrapper's input protocol, replayed for the oracle: round-trip the
+/// activation through the dtype's grid (weights and bias stay f32).
+fn quantized_input(dtype: Dtype, x: &[f32]) -> Vec<f32> {
+    let mut xq = x.to_vec();
+    quant::round_trip(dtype, &mut xq);
+    xq
+}
+
+#[test]
+fn quant_conv2d_stays_within_one_step_of_the_scalar_oracle() {
+    for seed in 0..60u64 {
+        let mut rng = SplitMix64::new(seed);
+        let g = pick_geom(&mut rng, true);
+        let ic = rng.next_range(1, 8);
+        let oc = rng.next_range(1, 12);
+        let act = pick_act(&mut rng);
+        let x = fill(&mut rng, g.h * g.w * ic);
+        let w = fill(&mut rng, g.kh * g.kw * ic * oc);
+        let b = fill(&mut rng, oc);
+        for dtype in QUANTIZED {
+            let mut got = vec![0f32; g.oh * g.ow * oc];
+            let qp = quant::conv2d(&x, &w, &b, &mut got, ic, oc, &g, act, dtype);
+            let xq = quantized_input(dtype, &x);
+            let mut oracle = vec![0f32; got.len()];
+            scalar::conv2d(&xq, &w, &b, &mut oracle, ic, oc, &g, act);
+            let ctx = format!(
+                "conv2d seed {seed} {dtype}: {}x{}x{ic} -> {}x{}x{oc}, k{}x{} s{}x{} d{}x{}",
+                g.h, g.w, g.oh, g.ow, g.kh, g.kw, g.sh, g.sw, g.dh, g.dw
+            );
+            assert_step(dtype, qp, &got, &oracle, &ctx);
+        }
+    }
+}
+
+#[test]
+fn quant_dwconv2d_stays_within_one_step_of_the_scalar_oracle() {
+    for seed in 0..60u64 {
+        let mut rng = SplitMix64::new(0x1000 + seed);
+        let g = pick_geom(&mut rng, true);
+        let c = rng.next_range(1, 12);
+        let act = pick_act(&mut rng);
+        let x = fill(&mut rng, g.h * g.w * c);
+        let w = fill(&mut rng, g.kh * g.kw * c);
+        let b = fill(&mut rng, c);
+        for dtype in QUANTIZED {
+            let mut got = vec![0f32; g.oh * g.ow * c];
+            let qp = quant::dwconv2d(&x, &w, &b, &mut got, c, &g, act, dtype);
+            let xq = quantized_input(dtype, &x);
+            let mut oracle = vec![0f32; got.len()];
+            scalar::dwconv2d(&xq, &w, &b, &mut oracle, c, &g, act);
+            let ctx = format!(
+                "dwconv2d seed {seed} {dtype}: {}x{}x{c}, k{}x{} s{}x{} d{}x{}",
+                g.h, g.w, g.kh, g.kw, g.sh, g.sw, g.dh, g.dw
+            );
+            assert_step(dtype, qp, &got, &oracle, &ctx);
+        }
+    }
+}
+
+#[test]
+fn quant_pools_stay_within_one_step_of_the_scalar_oracle() {
+    for seed in 0..60u64 {
+        let mut rng = SplitMix64::new(0x2000 + seed);
+        let g = pick_geom(&mut rng, false);
+        let c = rng.next_range(1, 12);
+        let x = fill(&mut rng, g.h * g.w * c);
+        for dtype in QUANTIZED {
+            let xq = quantized_input(dtype, &x);
+            let mut got = vec![0f32; g.oh * g.ow * c];
+            let mut oracle = vec![0f32; got.len()];
+
+            let qp = quant::maxpool2d(&x, &mut got, c, &g, dtype);
+            scalar::maxpool2d(&xq, &mut oracle, c, &g);
+            assert_step(dtype, qp, &got, &oracle, &format!("maxpool2d seed {seed} {dtype}"));
+
+            let qp = quant::avgpool2d(&x, &mut got, c, &g, dtype);
+            scalar::avgpool2d(&xq, &mut oracle, c, &g);
+            assert_step(dtype, qp, &got, &oracle, &format!("avgpool2d seed {seed} {dtype}"));
+
+            let hw = g.h * g.w;
+            let mut got_g = vec![0f32; c];
+            let mut oracle_g = vec![0f32; c];
+            let qp = quant::global_avg_pool(&x, &mut got_g, hw, c, dtype);
+            scalar::global_avg_pool(&xq, &mut oracle_g, hw, c);
+            assert_step(dtype, qp, &got_g, &oracle_g, &format!("gap seed {seed} {dtype}"));
+        }
+    }
+}
+
+#[test]
+fn quant_fully_connected_stays_within_one_step_of_the_scalar_oracle() {
+    for seed in 0..60u64 {
+        let mut rng = SplitMix64::new(0x3000 + seed);
+        let ind = rng.next_range(1, 48);
+        let outd = rng.next_range(1, 48);
+        let act = pick_act(&mut rng);
+        let x = fill(&mut rng, ind);
+        let w = fill(&mut rng, ind * outd);
+        let b = fill(&mut rng, outd);
+        for dtype in QUANTIZED {
+            let mut got = vec![0f32; outd];
+            let qp = quant::fully_connected(&x, &w, &b, &mut got, ind, outd, act, dtype);
+            let xq = quantized_input(dtype, &x);
+            let mut oracle = vec![0f32; outd];
+            scalar::fully_connected(&xq, &w, &b, &mut oracle, ind, outd, act);
+            let ctx = format!("fc seed {seed} {dtype}: {ind}->{outd}");
+            assert_step(dtype, qp, &got, &oracle, &ctx);
+        }
+    }
+}
+
+#[test]
+fn quant_elementwise_stays_within_one_step_of_the_scalar_oracle() {
+    for seed in 0..40u64 {
+        let mut rng = SplitMix64::new(0x4000 + seed);
+        let n = rng.next_range(1, 200);
+        let a = fill(&mut rng, n);
+        let b = fill(&mut rng, n);
+        let act = pick_act(&mut rng);
+        let max = if seed % 2 == 0 { None } else { Some(6.0) };
+        for dtype in QUANTIZED {
+            let aq = quantized_input(dtype, &a);
+            let bq = quantized_input(dtype, &b);
+            let mut got = vec![0f32; n];
+            let mut oracle = vec![0f32; n];
+
+            let qp = quant::add(&a, &b, &mut got, act, dtype);
+            scalar::add(&aq, &bq, &mut oracle, act);
+            assert_step(dtype, qp, &got, &oracle, &format!("add seed {seed} {dtype}"));
+
+            let qp = quant::mul(&a, &b, &mut got, dtype);
+            scalar::mul(&aq, &bq, &mut oracle);
+            assert_step(dtype, qp, &got, &oracle, &format!("mul seed {seed} {dtype}"));
+
+            let qp = quant::relu(&a, &mut got, max, dtype);
+            scalar::relu(&aq, &mut oracle, max);
+            assert_step(dtype, qp, &got, &oracle, &format!("relu seed {seed} {dtype}"));
+
+            let qp = quant::sigmoid(&a, &mut got, dtype);
+            scalar::sigmoid(&aq, &mut oracle);
+            assert_step(dtype, qp, &got, &oracle, &format!("sigmoid seed {seed} {dtype}"));
+        }
+    }
+}
+
+#[test]
+fn round_trip_error_is_bounded_by_one_quantization_step() {
+    for seed in 0..60u64 {
+        let mut rng = SplitMix64::new(0x5000 + seed);
+        let n = rng.next_range(1, 300);
+        let scale = [0.01f32, 1.0, 100.0][rng.next_below(3)];
+        let mut x = vec![0f32; n];
+        rng.fill_f32(&mut x, scale);
+        for dtype in QUANTIZED {
+            let mut q = x.clone();
+            let qp = quant::round_trip(dtype, &mut q);
+            for (i, (&orig, &rt)) in x.iter().zip(q.iter()).enumerate() {
+                let budget = quant::step(dtype, qp, orig) * 1.01;
+                let err = (rt - orig).abs();
+                assert!(
+                    err <= budget,
+                    "round_trip seed {seed} {dtype} elem {i}: {orig} -> {rt}, \
+                     err {err} > step budget {budget}"
+                );
+            }
+        }
+        // f16 narrowing is idempotent: a second trip is bit-exact (i8 is
+        // not — its grid is re-derived from the round-tripped range).
+        let mut once = x.clone();
+        quant::round_trip(Dtype::F16, &mut once);
+        let mut twice = once.clone();
+        quant::round_trip(Dtype::F16, &mut twice);
+        let same = once.iter().zip(twice.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "f16 round_trip not idempotent at seed {seed}");
+    }
+}
+
+#[test]
+fn quantized_kernels_are_deterministic_across_invocations() {
+    for dtype in QUANTIZED {
+        let mut rng = SplitMix64::new(0x6000);
+        let g = pick_geom(&mut rng, true);
+        let ic = rng.next_range(1, 8);
+        let oc = rng.next_range(1, 12);
+        let x = fill(&mut rng, g.h * g.w * ic);
+        let w = fill(&mut rng, g.kh * g.kw * ic * oc);
+        let b = fill(&mut rng, oc);
+        let mut out1 = vec![0f32; g.oh * g.ow * oc];
+        let mut out2 = vec![0f32; g.oh * g.ow * oc];
+        let qp1 = quant::conv2d(&x, &w, &b, &mut out1, ic, oc, &g, Activation::Relu, dtype);
+        let qp2 = quant::conv2d(&x, &w, &b, &mut out2, ic, oc, &g, Activation::Relu, dtype);
+        assert_eq!(qp1, qp2, "{dtype}: conv2d QParams drifted between invocations");
+        let same = out1.iter().zip(out2.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "{dtype}: conv2d output not bit-identical between invocations");
+
+        let n = 64;
+        let a = fill(&mut rng, n);
+        let c = fill(&mut rng, n);
+        let mut e1 = vec![0f32; n];
+        let mut e2 = vec![0f32; n];
+        let qa = quant::add(&a, &c, &mut e1, Activation::None, dtype);
+        let qb = quant::add(&a, &c, &mut e2, Activation::None, dtype);
+        assert_eq!(qa, qb, "{dtype}: add QParams drifted between invocations");
+        let same = e1.iter().zip(e2.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "{dtype}: add output not bit-identical between invocations");
+    }
+}
+
+#[test]
+fn f32_requests_pass_through_the_quantized_family_unchanged() {
+    for seed in 0..40u64 {
+        let mut rng = SplitMix64::new(0x7000 + seed);
+        let g = pick_geom(&mut rng, true);
+        let ic = rng.next_range(1, 8);
+        let oc = rng.next_range(1, 12);
+        let act = pick_act(&mut rng);
+        let x = fill(&mut rng, g.h * g.w * ic);
+        let w = fill(&mut rng, g.kh * g.kw * ic * oc);
+        let b = fill(&mut rng, oc);
+        let mut got = vec![0f32; g.oh * g.ow * oc];
+        let mut oracle = vec![0f32; got.len()];
+        let qp = quant::conv2d(&x, &w, &b, &mut got, ic, oc, &g, act, Dtype::F32);
+        scalar::conv2d(&x, &w, &b, &mut oracle, ic, oc, &g, act);
+        assert_eq!(qp, QParams::IDENTITY, "f32 conv2d must take the identity path");
+        assert_ulp(&got, &oracle, &format!("f32 conv2d seed {seed}"));
+
+        let n = rng.next_range(1, 100);
+        let a = fill(&mut rng, n);
+        let c = fill(&mut rng, n);
+        let mut e_got = vec![0f32; n];
+        let mut e_oracle = vec![0f32; n];
+        let qp = quant::add(&a, &c, &mut e_got, act, Dtype::F32);
+        scalar::add(&a, &c, &mut e_oracle, act);
+        assert_eq!(qp, QParams::IDENTITY, "f32 add must take the identity path");
+        assert_ulp(&e_got, &e_oracle, &format!("f32 add seed {seed}"));
+
+        let qp = quant::sigmoid(&a, &mut e_got, Dtype::F32);
+        scalar::sigmoid(&a, &mut e_oracle);
+        assert_eq!(qp, QParams::IDENTITY, "f32 sigmoid must take the identity path");
+        assert_ulp(&e_got, &e_oracle, &format!("f32 sigmoid seed {seed}"));
+    }
+}

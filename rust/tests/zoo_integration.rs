@@ -201,6 +201,73 @@ fn shared_object_count_is_small_like_the_paper_says() {
 }
 
 #[test]
+#[ignore = "tier-2: plans and runs every zoo network at three size classes; run with --ignored"]
+fn quantized_size_classes_shrink_every_zoo_network_within_drift() {
+    // The dtype dimension across the whole zoo: an i8 request must plan a
+    // ≥3.5x smaller peak than f32 on every network (f16 ≥1.9x) — the
+    // element width survives alignment on real tensor populations, not
+    // just on mobilenet_v2 — and the end-to-end quantized outputs must
+    // stay within a drift bound scaled to each model's own output range.
+    use std::sync::Arc;
+    use tensorarena::planner::{Dtype, PlanRequest, PlanService};
+
+    for name in models::ZOO {
+        let g = models::by_name(name).unwrap();
+        let recs = recs_of(name);
+        let svc = PlanService::shared();
+        let f32_req = PlanRequest::new();
+        let f32_peak = svc.plan(&recs, &f32_req).unwrap().total;
+
+        let mut rng = SplitMix64::new(29);
+        let inputs: Vec<Vec<f32>> = g
+            .inputs
+            .iter()
+            .map(|&t| {
+                let mut v = vec![0f32; g.tensor(t).num_elements()];
+                rng.fill_f32(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let input_refs: Vec<&[f32]> = inputs.iter().map(Vec::as_slice).collect();
+        let mut f32_exec =
+            Executor::with_request(&g, Arc::clone(&svc), &f32_req, None, 41).unwrap();
+        let reference = f32_exec.run(&input_refs);
+        let out_scale = reference
+            .iter()
+            .flat_map(|out| out.iter())
+            .fold(1f32, |m, &v| m.max(v.abs()));
+
+        for (dtype, floor, drift_frac) in
+            [(Dtype::I8, 3.5f64, 0.25f32), (Dtype::F16, 1.9f64, 0.05f32)]
+        {
+            let req = f32_req.with_dtype(dtype);
+            let peak = svc.plan(&recs, &req).unwrap().total;
+            let shrink = f32_peak as f64 / peak.max(1) as f64;
+            assert!(
+                shrink >= floor,
+                "{name}: {dtype} planned peak shrank only {shrink:.2}x (< {floor}x)"
+            );
+
+            let mut q_exec = Executor::with_request(&g, Arc::clone(&svc), &req, None, 41).unwrap();
+            let got = q_exec.run(&input_refs);
+            assert_eq!(got.len(), reference.len(), "{name}: {dtype} output arity changed");
+            let drift = drift_frac * out_scale;
+            for (o, (q, f)) in got.iter().zip(reference.iter()).enumerate() {
+                assert_eq!(q.len(), f.len(), "{name}: {dtype} output {o} length changed");
+                for (i, (&qv, &fv)) in q.iter().zip(f.iter()).enumerate() {
+                    assert!(qv.is_finite(), "{name}: {dtype} output {o} elem {i} not finite");
+                    assert!(
+                        (qv - fv).abs() <= drift,
+                        "{name}: {dtype} output {o} elem {i} drifted {} (> {drift})",
+                        (qv - fv).abs()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn cachesim_planned_wins_on_every_zoo_network() {
     use tensorarena::exec::cachesim::simulate;
     for g in models::all_zoo() {
