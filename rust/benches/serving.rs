@@ -13,6 +13,11 @@
 //! * budgeted admission: a byte budget below the batch-8 planned peak —
 //!   the server clamps batches and refuses an oversized burst instead of
 //!   OOMing;
+//! * spilled admission: the same starved budget served under both spill
+//!   policies (`serve --spill-policy`) — the refuse policy rejects the
+//!   over-budget burst, the spill policy serves it through the compressed
+//!   tier, with evictions / reloads / compression ratio / reload-stall p99
+//!   recorded per policy;
 //! * order ablation: the same model served under the natural vs the
 //!   annealed execution order — peak arena, breadth delta, and throughput
 //!   side by side (the `serve --order` path);
@@ -348,6 +353,104 @@ fn main() {
             Ok(_) => println!("  oversized burst of 8: UNEXPECTEDLY admitted"),
         }
         router.shutdown();
+    }
+
+    // --- spilled admission: serve past the resident budget via the tier ---
+    {
+        use harness::json::Value;
+        use tensorarena::arena::spill::SpillTier;
+        use tensorarena::coordinator::{ModelServer, SpillPolicy};
+        let model = "blazeface";
+        let g = tensorarena::models::by_name(model).unwrap();
+        let in_elems = g.tensor(g.inputs[0]).num_elements();
+        let recs = UsageRecords::from_graph(&g);
+        let singles = if smoke { 8 } else { 32 };
+        println!(
+            "\nspilled admission ({model}, budget ~1.5x batch-1 arena, {singles} singles then a \
+             burst of 3):"
+        );
+        // The same storm under both policies: the refuse policy rejects the
+        // burst (today's behavior), the spill policy serves it through the
+        // compressed tier — the `serve --spill-policy spill` acceptance
+        // contrast, with the tier counters recorded per policy.
+        for (mode, policy) in [("refuse", SpillPolicy::Refuse), ("spill", SpillPolicy::Spill)] {
+            let service = PlanService::shared();
+            let tier = Arc::new(SpillTier::new());
+            service.pool().configure_spill(Arc::clone(&tier), 0);
+            let budget = service.plan(&recs, &service.request()).expect("plan").total * 3 / 2;
+            let server = {
+                let service = Arc::clone(&service);
+                ModelServer::spawn(
+                    move || {
+                        let g = tensorarena::models::by_name("blazeface").unwrap();
+                        Box::new(
+                            ExecutorEngine::new(&g, service, "greedy-size", 7)
+                                .expect("engine")
+                                .with_max_batch(4),
+                        )
+                    },
+                    BatchPolicy {
+                        max_batch: 4,
+                        max_wait: Duration::from_millis(1),
+                        mem_budget: Some(budget),
+                        spill: policy,
+                        ..BatchPolicy::default()
+                    },
+                )
+                .expect("spawn")
+            };
+            let mut rng = SplitMix64::new(37);
+            let mut input = vec![0f32; in_elems];
+            let t = std::time::Instant::now();
+            let pending: Vec<_> = (0..singles)
+                .map(|_| {
+                    rng.fill_f32(&mut input, 1.0);
+                    server.submit(input.clone())
+                })
+                .collect();
+            let ok = pending
+                .into_iter()
+                .filter(|rx| matches!(rx.recv(), Ok(Ok(_))))
+                .count();
+            let mut burst = vec![0f32; 3 * in_elems];
+            rng.fill_f32(&mut burst, 1.0);
+            let burst_admitted =
+                matches!(server.submit(burst).recv().expect("worker alive"), Ok(_));
+            // One more single after the burst: the batch shrink re-acquires
+            // a small buffer, which under the spill policy reloads the one
+            // evicted at the burst's resize — the stall the p99 records.
+            rng.fill_f32(&mut input, 1.0);
+            let tail_ok =
+                matches!(server.submit(input.clone()).recv().expect("worker alive"), Ok(_));
+            assert!(tail_ok, "post-burst single must serve under either policy");
+            let wall = t.elapsed();
+            let snap = server.metrics().snapshot();
+            server.shutdown();
+            let stats = tier.stats();
+            println!(
+                "  policy {mode:>6}: {ok}/{singles} singles ok, burst of 3 {} | {} spill \
+                 admission(s), {} eviction(s) / {} reload(s), {:.2}x compressed, reload p99 {} us",
+                if burst_admitted { "ADMITTED" } else { "refused" },
+                snap.spill_admissions,
+                stats.evictions,
+                stats.reloads,
+                tier.compression_ratio(),
+                stats.stall_p99_us,
+            );
+            cases.push(Value::Obj(vec![
+                ("name".into(), Value::Str(format!("spilled_admission/{mode}"))),
+                ("policy".into(), Value::Str(mode.into())),
+                ("budget_kib".into(), Value::Num(budget as f64 / 1024.0)),
+                ("singles_ok".into(), Value::Num(ok as f64)),
+                ("burst_admitted".into(), Value::Bool(burst_admitted)),
+                ("spill_admissions".into(), Value::Num(snap.spill_admissions as f64)),
+                ("evictions".into(), Value::Num(stats.evictions as f64)),
+                ("reloads".into(), Value::Num(stats.reloads as f64)),
+                ("compression_ratio".into(), Value::Num(tier.compression_ratio())),
+                ("reload_stall_p99_us".into(), Value::Num(stats.stall_p99_us as f64)),
+                ("throughput_rps".into(), Value::Num(ok as f64 / wall.as_secs_f64())),
+            ]));
+        }
     }
 
     // --- order ablation: the same model served under two orders ---

@@ -21,12 +21,14 @@
 //! caught.
 
 pub mod paged;
+pub mod spill;
 
 use crate::planner::OffsetPlan;
 use crate::records::UsageRecords;
 use paged::BlockPool;
+use spill::SpillTier;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Value written over a tensor's region when it dies (debug feature): reads
 /// of stale data then produce NaNs that propagate to the output checksum.
@@ -57,6 +59,19 @@ pub struct ArenaPool {
     /// ([`paged::PagedArena`]); sharing the `ArenaPool` handle shares the
     /// blocks.
     blocks: BlockPool,
+    /// Spill tier plus the residency watermark, once configured
+    /// ([`Self::configure_spill`]). `None` — the default — keeps today's
+    /// hold-everything-hot shelf behavior bit-for-bit.
+    spill: Mutex<Option<SpillConfig>>,
+}
+
+/// The pool's view of its spill tier: where evicted buffers go and how
+/// many idle resident bytes trigger eviction.
+struct SpillConfig {
+    tier: Arc<SpillTier>,
+    /// Idle shelf bytes above which cold buffers are evicted into the
+    /// tier, largest size class first, oldest buffer first.
+    watermark_bytes: usize,
 }
 
 impl ArenaPool {
@@ -103,6 +118,16 @@ impl ArenaPool {
                 }
             }
         }
+        // Resident miss: before paying a fresh allocation, ask the spill
+        // tier for an evicted buffer covering the request. The reload is
+        // counted by the tier (not as a shelf reuse), so spill traffic
+        // stays distinguishable in the metrics line.
+        if let Some(tier) = self.spill_tier() {
+            if let Some(mut buf) = tier.reload(words) {
+                buf[..words].fill(0.0);
+                return buf;
+            }
+        }
         self.allocated.fetch_add(1, Ordering::Relaxed);
         vec![0f32; words]
     }
@@ -124,6 +149,60 @@ impl ArenaPool {
             shelf.push(buf);
         } else {
             self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        drop(shelves);
+        self.enforce_spill_watermark();
+    }
+
+    /// Attach a spill tier: idle shelf bytes above `watermark_bytes` are
+    /// evicted (compressed) into `tier` instead of staying hot, and
+    /// [`Self::acquire`] misses demand-reload from it before allocating
+    /// fresh. The watermark is enforced immediately over whatever is
+    /// already shelved.
+    pub fn configure_spill(&self, tier: Arc<SpillTier>, watermark_bytes: usize) {
+        *self.spill.lock().unwrap() = Some(SpillConfig { tier, watermark_bytes });
+        self.enforce_spill_watermark();
+    }
+
+    /// The attached spill tier, if any.
+    pub fn spill_tier(&self) -> Option<Arc<SpillTier>> {
+        self.spill.lock().unwrap().as_ref().map(|c| Arc::clone(&c.tier))
+    }
+
+    /// The configured residency watermark in bytes, if a tier is attached.
+    pub fn spill_watermark_bytes(&self) -> Option<usize> {
+        self.spill.lock().unwrap().as_ref().map(|c| c.watermark_bytes)
+    }
+
+    /// Evict cold idle shelf buffers into the spill tier until resident
+    /// idle bytes are back under the watermark: largest size class first
+    /// (the residency that costs the most), oldest buffer within the class
+    /// first (the coldest). A no-op with no tier configured.
+    fn enforce_spill_watermark(&self) {
+        let (tier, watermark) = {
+            let cfg = self.spill.lock().unwrap();
+            match cfg.as_ref() {
+                Some(c) => (Arc::clone(&c.tier), c.watermark_bytes),
+                None => return,
+            }
+        };
+        let mut evicted = Vec::new();
+        {
+            let mut shelves = self.shelves.lock().unwrap();
+            let mut idle: usize = shelves.iter().flatten().map(|b| b.len() * 4).sum();
+            while idle > watermark {
+                let Some(shelf) = shelves.iter_mut().rev().find(|s| !s.is_empty()) else {
+                    break;
+                };
+                let buf = shelf.remove(0);
+                idle -= buf.len() * 4;
+                evicted.push(buf);
+            }
+        }
+        // Compress outside the shelf lock so eviction never stalls a
+        // concurrent acquire.
+        for buf in evicted {
+            tier.spill(buf);
         }
     }
 
@@ -642,6 +721,53 @@ mod tests {
         // Empty buffers are ignored, not dropped.
         pool.release(Vec::new());
         assert_eq!(pool.dropped(), 3);
+    }
+
+    #[test]
+    fn pool_evicts_past_the_watermark_and_reloads_on_demand() {
+        let pool = ArenaPool::new();
+        let tier = Arc::new(SpillTier::new());
+        // 4 KiB watermark: two 1000-word (4000-byte) buffers exceed it.
+        pool.configure_spill(Arc::clone(&tier), 4096);
+        pool.release(vec![0f32; 1000]);
+        assert_eq!((pool.idle_buffers(), tier.entries()), (1, 0));
+        pool.release(vec![0f32; 1000]);
+        // 8000 idle bytes > 4096: the oldest buffer spills.
+        assert_eq!((pool.idle_buffers(), tier.entries()), (1, 1));
+        assert_eq!(tier.evictions(), 1);
+        // First acquire drains the shelf, second demand-reloads the
+        // spilled buffer instead of allocating fresh.
+        let a = pool.acquire(1000);
+        let b = pool.acquire(1000);
+        assert_eq!((a.len(), b.len()), (1000, 1000));
+        assert!(b.iter().all(|&v| v == 0.0), "reloaded buffers are zeroed");
+        assert_eq!(tier.reloads(), 1);
+        assert_eq!(pool.allocated(), 0, "the reload must beat a fresh allocation");
+        // A third acquire misses both tiers and allocates.
+        let c = pool.acquire(1000);
+        assert_eq!(pool.allocated(), 1);
+        drop((a, b, c));
+    }
+
+    #[test]
+    fn pool_configure_spill_evicts_existing_idle_buffers() {
+        let pool = ArenaPool::new();
+        pool.release(vec![1.5f32; 2048]);
+        pool.release(vec![2.5f32; 512]);
+        let tier = Arc::new(SpillTier::new());
+        // Watermark 0: everything idle evicts the moment the tier attaches,
+        // largest class first.
+        pool.configure_spill(Arc::clone(&tier), 0);
+        assert_eq!(pool.idle_buffers(), 0);
+        assert_eq!(tier.entries(), 2);
+        // Reloads are bit-exact through the codec.
+        let big = pool.acquire(2048);
+        assert_eq!(big.len(), 2048);
+        assert_eq!(tier.reloads(), 1);
+        // An unconfigured pool keeps today's behavior.
+        let plain = ArenaPool::new();
+        assert!(plain.spill_tier().is_none());
+        assert!(plain.spill_watermark_bytes().is_none());
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! [`fragmentation`]: BlockPool::fragmentation
 
 use super::ArenaPool;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Words per block: 128 `f32` words = 512 bytes, a multiple of the crate's
@@ -32,9 +32,12 @@ use std::sync::{Arc, Mutex};
 /// aligned.
 pub const BLOCK_WORDS: usize = 128;
 
-/// Most free blocks the pool retains; beyond this, released blocks are
-/// dropped (and counted) to bound pool memory under churn.
-const BLOCK_SHELF_CAP: usize = 1024;
+/// Default for the most free blocks the pool retains; beyond the cap,
+/// released blocks are dropped (and counted) to bound pool memory under
+/// churn. Tunable per pool with [`BlockPool::set_shelf_cap`] (CLI:
+/// `serve --block-cap`) so the freelist bound and the spill watermark can
+/// be tuned together.
+pub const DEFAULT_BLOCK_SHELF_CAP: usize = 1024;
 
 /// Gauges guarded by the pool mutex: the freelist plus the live/peak
 /// accounting that fragmentation is computed from.
@@ -58,18 +61,42 @@ struct PoolInner {
 /// serving coordinator's normal state — automatically share tail blocks:
 /// a block freed by one request's dying tail tensor is immediately
 /// servable to any other request on the same pool.
-#[derive(Default)]
 pub struct BlockPool {
     inner: Mutex<PoolInner>,
     reused: AtomicU64,
     allocated: AtomicU64,
     dropped: AtomicU64,
+    /// Freelist retention cap ([`DEFAULT_BLOCK_SHELF_CAP`] unless tuned).
+    shelf_cap: AtomicUsize,
+}
+
+impl Default for BlockPool {
+    fn default() -> Self {
+        BlockPool {
+            inner: Mutex::default(),
+            reused: AtomicU64::new(0),
+            allocated: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            shelf_cap: AtomicUsize::new(DEFAULT_BLOCK_SHELF_CAP),
+        }
+    }
 }
 
 impl BlockPool {
     /// Empty pool.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// The current freelist retention cap.
+    pub fn shelf_cap(&self) -> usize {
+        self.shelf_cap.load(Ordering::Relaxed)
+    }
+
+    /// Tune the freelist retention cap. Applies to future releases only;
+    /// blocks already shelved are not trimmed, and drops keep counting.
+    pub fn set_shelf_cap(&self, cap: usize) {
+        self.shelf_cap.store(cap, Ordering::Relaxed);
     }
 
     /// Acquire enough blocks to back `words` payload words
@@ -112,8 +139,9 @@ impl BlockPool {
         let mut inner = self.inner.lock().unwrap();
         inner.in_use = inner.in_use.saturating_sub(blocks.len());
         inner.live_words = inner.live_words.saturating_sub(words);
+        let cap = self.shelf_cap();
         for b in blocks {
-            if inner.free.len() < BLOCK_SHELF_CAP {
+            if inner.free.len() < cap {
                 inner.free.push(b);
             } else {
                 self.dropped.fetch_add(1, Ordering::Relaxed);
@@ -297,6 +325,23 @@ mod tests {
         assert_eq!(pool.peak_blocks(), 2);
         assert_eq!(pool.fragmentation(), 0.0);
         pool.release_region(full, 2 * BLOCK_WORDS);
+    }
+
+    #[test]
+    fn block_shelf_cap_is_tunable_and_drops_keep_counting() {
+        let pool = BlockPool::new();
+        assert_eq!(pool.shelf_cap(), DEFAULT_BLOCK_SHELF_CAP);
+        pool.set_shelf_cap(2);
+        let region = pool.acquire_region(4 * BLOCK_WORDS);
+        pool.release_region(region, 4 * BLOCK_WORDS);
+        assert_eq!(pool.idle_blocks(), 2, "the tuned cap bounds the freelist");
+        assert_eq!(pool.dropped(), 2, "blocks past the cap are dropped and counted");
+        // Raising the cap takes effect on the next release.
+        pool.set_shelf_cap(DEFAULT_BLOCK_SHELF_CAP);
+        let region = pool.acquire_region(4 * BLOCK_WORDS);
+        pool.release_region(region, 4 * BLOCK_WORDS);
+        assert_eq!(pool.idle_blocks(), 4);
+        assert_eq!(pool.dropped(), 2);
     }
 
     #[test]

@@ -1,0 +1,633 @@
+//! The spill tier: evicted arena buffers, compressed in memory, optionally
+//! backed by a disk directory — the elastic layer between "resident" and
+//! "refused".
+//!
+//! The paper plans offsets assuming every live tensor fits one physical
+//! arena; production systems treat memory as a hierarchy and move cold
+//! bytes down it. [`SpillTier`] is that hierarchy's middle and bottom:
+//! [`crate::arena::ArenaPool`] evicts cold idle shelf buffers into the
+//! tier when residency exceeds a configured watermark, and reloads them on
+//! demand when an acquisition misses the resident shelves. Admission
+//! (`coordinator::batcher`) can then treat the budget boundary as elastic:
+//! a request that exceeds the resident budget but fits
+//! `resident + spill capacity` is served by demand-reloading instead of
+//! being refused ([`crate::coordinator::AdmissionOutcome::Spill`]).
+//!
+//! # The codec
+//!
+//! Dependency-free and byte-oriented over the f32 word stream (every
+//! arena buffer is a `Vec<f32>` of 64-byte-aligned regions): each word's
+//! bit pattern is XOR-delta'd against its predecessor, then the delta
+//! stream is zero-run encoded as `(zero_run, literal_run)` LEB128 varint
+//! token pairs followed by the literal words' little-endian bytes. Runs of
+//! equal words (zeroed regions, constant fills) collapse to a few bytes;
+//! incompressible streams fall back to a stored-raw encoding, so the
+//! output is **never larger than `1 + 4 × words` bytes** (one tag byte
+//! plus the raw stream) — the invariant the codec property tests pin. The
+//! transform is bit-exact: NaN payloads and signed zeros round-trip
+//! unchanged.
+//!
+//! # The disk directory
+//!
+//! With a directory attached ([`SpillTier::with_dir`], `serve
+//! --spill-dir`), every spilled entry is also persisted as a
+//! checksummed, self-describing file, written atomically (dot-prefixed
+//! per-process `.tmp` sibling + rename, like the plan directory) with the
+//! `.tmp` removed on every error path. [`SpillTier::load_dir`] re-adopts a
+//! directory's entries on restart, *skipping* — never serving, never
+//! crashing on — anything truncated, bit-flipped, wrong-length, or written
+//! by a different format version, with one typed counter per failure class
+//! ([`SpillDirReport`]).
+
+use crate::coordinator::metrics::Reservoir;
+use crate::planner::serialize::fnv1a;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// First byte of a stored-raw codec stream (compression didn't pay).
+const TAG_RAW: u8 = 0;
+/// First byte of a zero-run + XOR-delta coded stream.
+const TAG_CODED: u8 = 1;
+
+/// Decoder bound on the word count a coded stream may claim: a corrupt
+/// varint must fail the decode, not balloon into an allocation. 2^28 words
+/// is a 1 GiB buffer — far beyond any arena this crate plans.
+const MAX_SPILL_WORDS: usize = 1 << 28;
+
+/// First line of every spill-tier disk entry; bump on format changes so
+/// old readers skip new files (and vice versa) as `stale_format`.
+const SPILL_MAGIC: &str = "tensorarena-spill v1";
+
+/// Compress an f32 word stream: XOR-delta over the bit patterns, zero-run
+/// encoded, with a stored-raw fallback when the coded form would be larger.
+/// The result is never longer than `1 + 4 * words.len()` bytes and
+/// round-trips bit-exactly through [`decompress`].
+pub fn compress(words: &[f32]) -> Vec<u8> {
+    let raw_len = 1 + words.len() * 4;
+    let mut out = Vec::with_capacity(raw_len.min(256));
+    out.push(TAG_CODED);
+    let mut deltas = Vec::with_capacity(words.len());
+    let mut prev = 0u32;
+    for w in words {
+        let bits = w.to_bits();
+        deltas.push(bits ^ prev);
+        prev = bits;
+    }
+    let mut i = 0;
+    while i < deltas.len() {
+        let zero_start = i;
+        while i < deltas.len() && deltas[i] == 0 {
+            i += 1;
+        }
+        let lit_start = i;
+        while i < deltas.len() && deltas[i] != 0 {
+            i += 1;
+        }
+        push_varint(&mut out, zero_start.abs_diff(lit_start));
+        push_varint(&mut out, lit_start.abs_diff(i));
+        for d in &deltas[lit_start..i] {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        // Early out: already at least raw-sized, the fallback will win.
+        if out.len() >= raw_len {
+            break;
+        }
+    }
+    if out.len() >= raw_len {
+        out.clear();
+        out.push(TAG_RAW);
+        for w in words {
+            out.extend_from_slice(&w.to_bits().to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decompress a [`compress`]-produced stream back into f32 words. Returns
+/// `None` — never panics, never a partial buffer — on any malformation:
+/// unknown tag, truncated literals, trailing garbage, non-word-aligned raw
+/// payload, or a varint claiming an absurd length.
+pub fn decompress(bytes: &[u8]) -> Option<Vec<f32>> {
+    let (&tag, rest) = bytes.split_first()?;
+    match tag {
+        TAG_RAW => {
+            if rest.len() % 4 != 0 {
+                return None;
+            }
+            Some(
+                rest.chunks_exact(4)
+                    .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+                    .collect(),
+            )
+        }
+        TAG_CODED => {
+            let mut deltas: Vec<u32> = Vec::new();
+            let mut i = 0;
+            while i < rest.len() {
+                let zeros = read_varint(rest, &mut i)?;
+                let lits = read_varint(rest, &mut i)?;
+                let total = deltas.len().checked_add(zeros)?.checked_add(lits)?;
+                if total > MAX_SPILL_WORDS {
+                    return None;
+                }
+                deltas.resize(deltas.len() + zeros, 0);
+                for _ in 0..lits {
+                    let chunk = rest.get(i..i + 4)?;
+                    deltas.push(u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+                    i += 4;
+                }
+            }
+            let mut prev = 0u32;
+            Some(
+                deltas
+                    .into_iter()
+                    .map(|d| {
+                        prev ^= d;
+                        f32::from_bits(prev)
+                    })
+                    .collect(),
+            )
+        }
+        _ => None,
+    }
+}
+
+fn push_varint(out: &mut Vec<u8>, mut v: usize) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn read_varint(bytes: &[u8], i: &mut usize) -> Option<usize> {
+    let mut v: usize = 0;
+    let mut shift = 0u32;
+    loop {
+        let &byte = bytes.get(*i)?;
+        *i += 1;
+        if shift >= usize::BITS {
+            return None;
+        }
+        v |= ((byte & 0x7f) as usize).checked_shl(shift)?;
+        if byte & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+    }
+}
+
+/// One compressed evicted buffer.
+struct SpillEntry {
+    id: u64,
+    /// Original (uncompressed) word count.
+    words: usize,
+    /// Codec output ([`compress`]).
+    bytes: Vec<u8>,
+}
+
+struct TierInner {
+    /// Oldest first; eviction appends, reload removes its best fit.
+    entries: Vec<SpillEntry>,
+    next_id: u64,
+}
+
+/// Point-in-time spill counters, the shape `PlanService::stats()` folds
+/// into `ArenaStats` for the serving metrics line.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Buffers evicted into the tier.
+    pub evictions: u64,
+    /// Buffers reloaded (decompressed) out of the tier.
+    pub reloads: u64,
+    /// Raw bytes of everything evicted so far (before compression).
+    pub bytes_before: u64,
+    /// Stored bytes of everything evicted so far (after compression).
+    pub bytes_after: u64,
+    /// 99th-percentile reload stall, microseconds (reservoir-sampled).
+    pub stall_p99_us: u64,
+}
+
+/// Typed per-failure-class counters from [`SpillTier::load_dir`]: damaged
+/// disk entries are skipped and counted, mirroring the plan directory's
+/// warm-start report, and can never corrupt a reload.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillDirReport {
+    /// Entries adopted into the tier.
+    pub loaded: usize,
+    /// Files cut short of their declared payload (or of the header).
+    pub skipped_truncated: usize,
+    /// Files whose first line is not this build's format version.
+    pub skipped_stale_format: usize,
+    /// Files whose payload or decoded stream disagrees with the declared
+    /// lengths (e.g. trailing bytes, a word count that doesn't decode).
+    pub skipped_wrong_length: usize,
+    /// Checksum mismatches, unparseable headers, undecodable payloads.
+    pub skipped_corrupt: usize,
+}
+
+impl SpillDirReport {
+    /// Total entries skipped, over every failure class.
+    pub fn skipped(&self) -> usize {
+        self.skipped_truncated
+            + self.skipped_stale_format
+            + self.skipped_wrong_length
+            + self.skipped_corrupt
+    }
+}
+
+/// The compressed spill store behind [`crate::arena::ArenaPool`], with an
+/// optional disk directory behind *it* — the three-tier lifecycle is
+/// resident shelf → compressed entry → disk file (see
+/// `docs/ARCHITECTURE.md` §3).
+///
+/// All methods take `&self`: the tier is shared (`Arc`) between the pool,
+/// the serving engines, and the stats path.
+pub struct SpillTier {
+    inner: Mutex<TierInner>,
+    dir: Option<PathBuf>,
+    /// Elastic capacity admission charges against (`resident + spillable`);
+    /// effectively unbounded by default.
+    capacity_bytes: AtomicUsize,
+    evictions: AtomicU64,
+    reloads: AtomicU64,
+    bytes_before: AtomicU64,
+    bytes_after: AtomicU64,
+    disk_write_errors: AtomicU64,
+    /// Reload-stall samples, microseconds — the same bounded reservoir the
+    /// serving metrics keep latencies in.
+    stalls: Mutex<Reservoir>,
+}
+
+impl Default for SpillTier {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpillTier {
+    /// An in-memory-only tier (no disk directory).
+    pub fn new() -> Self {
+        SpillTier {
+            inner: Mutex::new(TierInner { entries: Vec::new(), next_id: 0 }),
+            dir: None,
+            capacity_bytes: AtomicUsize::new(usize::MAX),
+            evictions: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            bytes_before: AtomicU64::new(0),
+            bytes_after: AtomicU64::new(0),
+            disk_write_errors: AtomicU64::new(0),
+            stalls: Mutex::new(Reservoir::default()),
+        }
+    }
+
+    /// A tier persisting every spilled entry into `dir` (created if
+    /// absent). Call [`Self::load_dir`] to adopt entries a previous
+    /// process left there.
+    pub fn with_dir(dir: impl Into<PathBuf>) -> std::io::Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(SpillTier { dir: Some(dir), ..Self::new() })
+    }
+
+    /// The attached disk directory, if any.
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// The elastic capacity admission may charge against (bytes).
+    /// Unbounded (`usize::MAX`) unless [`Self::set_capacity_bytes`] was
+    /// called.
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Bound the capacity admission charges against. Does not evict: the
+    /// bound only changes future `AdmissionOutcome::Spill` decisions.
+    pub fn set_capacity_bytes(&self, bytes: usize) {
+        self.capacity_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    /// Evict a buffer into the tier: compress, count, persist (when a
+    /// directory is attached), and store. Disk failures are counted
+    /// ([`Self::disk_write_errors`]) and never lose the entry — the
+    /// in-memory compressed copy stays authoritative.
+    pub fn spill(&self, buf: Vec<f32>) {
+        let words = buf.len();
+        let bytes = compress(&buf);
+        drop(buf);
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        self.bytes_before.fetch_add(words as u64 * 4, Ordering::Relaxed);
+        self.bytes_after.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        if let Some(dir) = &self.dir {
+            if persist_entry(dir, id, words, &bytes).is_err() {
+                self.disk_write_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.entries.push(SpillEntry { id, words, bytes });
+    }
+
+    /// Reload the smallest entry covering `words`, probing the request's
+    /// size class and the one above (the same fit policy as the resident
+    /// shelves). Returns the decompressed buffer (length ≥ `words`) and
+    /// removes the entry — and its disk file — from the tier. The stall
+    /// (search + decompress) is reservoir-sampled for the metrics line.
+    pub fn reload(&self, words: usize) -> Option<Vec<f32>> {
+        let t0 = Instant::now();
+        let class = class_of(words.max(1));
+        let (id, bytes, entry_words) = {
+            let mut inner = self.inner.lock().unwrap();
+            let fit = inner
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| {
+                    let c = class_of(e.words.max(1));
+                    e.words >= words && (c == class || c == class + 1)
+                })
+                .min_by_key(|&(_, e)| e.words)
+                .map(|(i, _)| i)?;
+            let e = inner.entries.swap_remove(fit);
+            (e.id, e.bytes, e.words)
+        };
+        // The in-memory copy came out of `compress`, so this cannot fail;
+        // `expect` (not unwrap) documents the invariant.
+        let buf = decompress(&bytes).expect("in-memory spill entries round-trip");
+        debug_assert_eq!(buf.len(), entry_words);
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+        if let Some(dir) = &self.dir {
+            let _ = std::fs::remove_file(dir.join(entry_file_name(id, entry_words)));
+        }
+        let stall = t0.elapsed().as_micros() as u64;
+        self.stalls.lock().unwrap().record(stall);
+        Some(buf)
+    }
+
+    /// Adopt the entries a previous process persisted into the attached
+    /// directory, skipping damage with one typed counter per failure
+    /// class. A no-op `Ok` with an all-zero report when no directory is
+    /// attached.
+    pub fn load_dir(&self) -> std::io::Result<SpillDirReport> {
+        let mut report = SpillDirReport::default();
+        let Some(dir) = &self.dir else {
+            return Ok(report);
+        };
+        let mut names: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "spill"))
+            .collect();
+        names.sort();
+        for path in names {
+            match parse_entry_file(&path) {
+                Ok((words, bytes)) => {
+                    let mut inner = self.inner.lock().unwrap();
+                    let id = inner.next_id;
+                    inner.next_id += 1;
+                    // Re-key the adopted entry under this process's id
+                    // space; the stale file name is removed so a reload
+                    // never leaves an orphan behind.
+                    let persisted = persist_entry(dir, id, words, &bytes).is_ok();
+                    if persisted && path != dir.join(entry_file_name(id, words)) {
+                        let _ = std::fs::remove_file(&path);
+                    }
+                    inner.entries.push(SpillEntry { id, words, bytes });
+                    report.loaded += 1;
+                }
+                Err(EntryDamage::Truncated) => report.skipped_truncated += 1,
+                Err(EntryDamage::StaleFormat) => report.skipped_stale_format += 1,
+                Err(EntryDamage::WrongLength) => report.skipped_wrong_length += 1,
+                Err(EntryDamage::Corrupt) => report.skipped_corrupt += 1,
+            }
+        }
+        Ok(report)
+    }
+
+    /// Entries currently held.
+    pub fn entries(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// Raw (uncompressed) bytes of the entries currently held — what the
+    /// tier could hand back to the resident shelves on demand.
+    pub fn resident_raw_bytes(&self) -> usize {
+        self.inner.lock().unwrap().entries.iter().map(|e| e.words * 4).sum()
+    }
+
+    /// Stored (compressed) bytes of the entries currently held.
+    pub fn stored_bytes(&self) -> usize {
+        self.inner.lock().unwrap().entries.iter().map(|e| e.bytes.len()).sum()
+    }
+
+    /// Buffers evicted into the tier so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Buffers reloaded out of the tier so far.
+    pub fn reloads(&self) -> u64 {
+        self.reloads.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative raw bytes evicted (before compression).
+    pub fn bytes_before(&self) -> u64 {
+        self.bytes_before.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative stored bytes evicted (after compression).
+    pub fn bytes_after(&self) -> u64 {
+        self.bytes_after.load(Ordering::Relaxed)
+    }
+
+    /// Failed disk writes (the in-memory entry survives each one).
+    pub fn disk_write_errors(&self) -> u64 {
+        self.disk_write_errors.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative compression ratio (raw / stored); 1.0 with no traffic.
+    pub fn compression_ratio(&self) -> f64 {
+        let after = self.bytes_after();
+        if after == 0 {
+            1.0
+        } else {
+            self.bytes_before() as f64 / after as f64
+        }
+    }
+
+    /// 99th-percentile reload stall, microseconds.
+    pub fn stall_p99_us(&self) -> u64 {
+        self.stalls.lock().unwrap().percentile(0.99)
+    }
+
+    /// Everything the serving metrics line needs, in one snapshot.
+    pub fn stats(&self) -> SpillStats {
+        SpillStats {
+            evictions: self.evictions(),
+            reloads: self.reloads(),
+            bytes_before: self.bytes_before(),
+            bytes_after: self.bytes_after(),
+            stall_p99_us: self.stall_p99_us(),
+        }
+    }
+}
+
+/// Size class of a word count: floor of log2 (the `ArenaPool` classing).
+fn class_of(words: usize) -> usize {
+    (usize::BITS - 1 - words.max(1).leading_zeros()) as usize
+}
+
+fn entry_file_name(id: u64, words: usize) -> String {
+    format!("spill-{id:016x}-w{words}.spill")
+}
+
+/// Write one entry atomically: dot-prefixed per-process `.tmp` sibling,
+/// then rename — and remove the `.tmp` on *every* error path, so a failed
+/// write never leaves a partial file for [`SpillTier::load_dir`] to trip
+/// on.
+fn persist_entry(dir: &Path, id: u64, words: usize, bytes: &[u8]) -> std::io::Result<()> {
+    let name = entry_file_name(id, words);
+    let tmp = dir.join(format!(".{name}.{}.tmp", std::process::id()));
+    let mut payload = Vec::with_capacity(SPILL_MAGIC.len() + 64 + bytes.len());
+    payload.extend_from_slice(SPILL_MAGIC.as_bytes());
+    payload.push(b'\n');
+    payload.extend_from_slice(
+        format!("words {words} bytes {} checksum {:016x}\n", bytes.len(), fnv1a(bytes)).as_bytes(),
+    );
+    payload.extend_from_slice(bytes);
+    let written = std::fs::write(&tmp, &payload)
+        .and_then(|()| std::fs::rename(&tmp, dir.join(&name)));
+    if written.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    written
+}
+
+enum EntryDamage {
+    Truncated,
+    StaleFormat,
+    WrongLength,
+    Corrupt,
+}
+
+/// Parse and verify one on-disk entry into `(words, codec bytes)`.
+fn parse_entry_file(path: &Path) -> Result<(usize, Vec<u8>), EntryDamage> {
+    let data = std::fs::read(path).map_err(|_| EntryDamage::Corrupt)?;
+    let magic_end = data.iter().position(|&b| b == b'\n').ok_or(EntryDamage::Truncated)?;
+    if &data[..magic_end] != SPILL_MAGIC.as_bytes() {
+        return Err(EntryDamage::StaleFormat);
+    }
+    let rest = &data[magic_end + 1..];
+    let header_end = rest.iter().position(|&b| b == b'\n').ok_or(EntryDamage::Truncated)?;
+    let header = std::str::from_utf8(&rest[..header_end]).map_err(|_| EntryDamage::Corrupt)?;
+    let tok: Vec<&str> = header.split_whitespace().collect();
+    let (words, declared, sum) = match tok.as_slice() {
+        ["words", w, "bytes", b, "checksum", c] => (
+            w.parse::<usize>().map_err(|_| EntryDamage::Corrupt)?,
+            b.parse::<usize>().map_err(|_| EntryDamage::Corrupt)?,
+            u64::from_str_radix(c, 16).map_err(|_| EntryDamage::Corrupt)?,
+        ),
+        _ => return Err(EntryDamage::Corrupt),
+    };
+    let payload = &rest[header_end + 1..];
+    if payload.len() < declared {
+        return Err(EntryDamage::Truncated);
+    }
+    if payload.len() > declared {
+        return Err(EntryDamage::WrongLength);
+    }
+    if fnv1a(payload) != sum {
+        return Err(EntryDamage::Corrupt);
+    }
+    let decoded = decompress(payload).ok_or(EntryDamage::Corrupt)?;
+    if decoded.len() != words {
+        return Err(EntryDamage::WrongLength);
+    }
+    Ok((words, payload.to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(words: &[f32]) {
+        let c = compress(words);
+        assert!(
+            c.len() <= 1 + words.len() * 4,
+            "compressed {} > stored-raw {} for {} words",
+            c.len(),
+            1 + words.len() * 4,
+            words.len()
+        );
+        let back = decompress(&c).expect("well-formed stream");
+        assert_eq!(back.len(), words.len());
+        for (a, b) in words.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "codec must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn codec_roundtrips_representative_streams() {
+        roundtrip(&[]);
+        roundtrip(&[0.0; 1000]);
+        roundtrip(&[3.25; 577]);
+        roundtrip(&[f32::NAN, -0.0, f32::INFINITY, f32::MIN_POSITIVE, 1.5e-40]);
+        let ramp: Vec<f32> = (0..300).map(|i| i as f32 * 0.37).collect();
+        roundtrip(&ramp);
+        let mut mixed = vec![0.0f32; 64];
+        mixed.extend((0..17).map(|i| (i * 2654435761u32 % 977) as f32));
+        mixed.extend(vec![7.0f32; 200]);
+        roundtrip(&mixed);
+    }
+
+    #[test]
+    fn zero_heavy_streams_actually_shrink() {
+        let c = compress(&[0.0f32; 4096]);
+        assert!(c.len() < 16, "an all-zero buffer must collapse, got {} bytes", c.len());
+        let c = compress(&[1.25f32; 4096]);
+        assert!(c.len() < 32, "a constant buffer must collapse, got {} bytes", c.len());
+    }
+
+    #[test]
+    fn decompress_rejects_malformed_streams() {
+        assert_eq!(decompress(&[]), None, "empty stream has no tag");
+        assert_eq!(decompress(&[9, 1, 2, 3]), None, "unknown tag");
+        assert_eq!(decompress(&[TAG_RAW, 1, 2, 3]), None, "raw payload not word-aligned");
+        // Truncated literal run: claims one literal, carries two bytes.
+        assert_eq!(decompress(&[TAG_CODED, 0, 1, 0xaa, 0xbb]), None);
+        // A varint claiming an absurd zero run must fail, not allocate.
+        let mut huge = vec![TAG_CODED];
+        push_varint(&mut huge, usize::MAX / 2);
+        push_varint(&mut huge, 0);
+        assert_eq!(decompress(&huge), None);
+    }
+
+    #[test]
+    fn tier_spills_and_reloads_best_fit() {
+        let tier = SpillTier::new();
+        tier.spill(vec![1.0; 300]);
+        tier.spill(vec![2.0; 280]);
+        tier.spill(vec![3.0; 600]);
+        assert_eq!(tier.evictions(), 3);
+        assert_eq!(tier.entries(), 3);
+        // Best fit within the class: 280 covers a 270-word request even
+        // though 300 was spilled first.
+        let got = tier.reload(270).expect("a fitting entry");
+        assert_eq!(got.len(), 280);
+        assert!(got.iter().all(|&v| v == 2.0), "reload must be bit-exact");
+        assert_eq!(tier.reloads(), 1);
+        // Nothing in class 9..=10 covers 700 words; the 600-word entry is
+        // class 9 but too small, so the miss is a None, not a panic.
+        assert!(tier.reload(700).is_none());
+        assert_eq!(tier.entries(), 2);
+        assert!(tier.bytes_before() >= tier.bytes_after(), "codec never inflates");
+    }
+}

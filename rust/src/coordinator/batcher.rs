@@ -20,9 +20,18 @@
 //! every wave boundary. A bounded queue ([`BatchPolicy::queue_depth`])
 //! exerts backpressure with a typed [`ServeError::QueueFull`] refusal.
 //!
+//! With [`BatchPolicy::spill`] set to [`SpillPolicy::Spill`] the refusal
+//! boundary becomes elastic: a request whose planned peak exceeds the
+//! resident budget but fits `budget + spill-tier capacity` (see
+//! [`Engine::spill_capacity_bytes`]) is admitted and served solo, with
+//! the arena demand-reloading evicted buffers from the compressed tier.
+//! Every such admission is counted in [`Metrics`]. The default
+//! ([`SpillPolicy::Refuse`]) preserves the strict-refusal behavior
+//! bit-for-bit.
+//!
 //! [`BlockPool`]: crate::arena::paged::BlockPool
 
-use super::{engine::Engine, Metrics, Request, Response, ServeError};
+use super::{engine::Engine, AdmissionOutcome, Metrics, Request, Response, ServeError, SpillPolicy};
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
@@ -76,6 +85,16 @@ pub struct BatchPolicy {
     /// live lanes before refusing with [`ServeError::QueueFull`]. Unused
     /// by the drain worker (its queue is drained into batches instead).
     pub queue_depth: usize,
+    /// What to do with a request whose planned peak exceeds `mem_budget`
+    /// but fits `budget + spill-tier capacity`: [`SpillPolicy::Refuse`]
+    /// (default) refuses it exactly as before; [`SpillPolicy::Spill`]
+    /// admits and serves it by demand-reloading evicted arena buffers.
+    pub spill: SpillPolicy,
+    /// Cap on the shared [`BlockPool`](crate::arena::paged::BlockPool)
+    /// freelist the engine shelves decode-tail blocks on. Defaults to
+    /// [`DEFAULT_BLOCK_SHELF_CAP`](crate::arena::paged::DEFAULT_BLOCK_SHELF_CAP);
+    /// ignored by engines without a block pool.
+    pub block_shelf_cap: usize,
 }
 
 impl Default for BatchPolicy {
@@ -86,6 +105,8 @@ impl Default for BatchPolicy {
             mem_budget: None,
             continuous: false,
             queue_depth: 64,
+            spill: SpillPolicy::Refuse,
+            block_shelf_cap: crate::arena::paged::DEFAULT_BLOCK_SHELF_CAP,
         }
     }
 }
@@ -141,19 +162,38 @@ impl ModelServer {
                 // an engine cap of 0, or a budget below the batch-1 peak —
                 // means every request is refused, none is OOMed and none is
                 // silently served at batch 1.
+                engine.set_block_shelf_cap(policy.block_shelf_cap);
                 let mut cap = policy.max_batch.min(engine.max_batch());
                 if let Some(budget) = policy.mem_budget {
                     if let Some(fit) = engine.max_servable_batch(budget) {
                         cap = cap.min(fit);
                     }
+                }
+                // Under the spill policy the admission envelope is elastic:
+                // sizes past the resident cap stay admissible while their
+                // planned peak fits `budget + spill-tier capacity` (served
+                // by demand-reloading evicted buffers). Walk the extension
+                // so the envelope covers it; under Refuse (the default)
+                // `spill_cap == cap` and nothing changes.
+                let mut spill_cap = cap;
+                if policy.spill == SpillPolicy::Spill && policy.mem_budget.is_some() {
+                    let hard = policy.max_batch.min(engine.max_batch());
+                    while spill_cap < hard
+                        && engine.admission(spill_cap + 1, policy.mem_budget, SpillPolicy::Spill)
+                            != AdmissionOutcome::Refuse
+                    {
+                        spill_cap += 1;
+                    }
+                }
+                if policy.mem_budget.is_some() {
                     // Pre-resolve the whole admission envelope: plan every
-                    // admissible batch size — plus cap+1, the only size the
-                    // refusal path ever probes — now (each lands in the
-                    // shared plan cache, and so in any plan directory
-                    // persisted later), so the budgeted hot path never
-                    // invokes the planner — and a warm-started restart
-                    // never re-plans.
-                    for b in 1..=cap.saturating_add(1) {
+                    // admissible batch size — plus spill_cap+1, the only
+                    // size the refusal path ever probes — now (each lands
+                    // in the shared plan cache, and so in any plan
+                    // directory persisted later), so the budgeted hot path
+                    // never invokes the planner — and a warm-started
+                    // restart never re-plans.
+                    for b in 1..=spill_cap.saturating_add(1) {
                         let _ = engine.planned_peak(b);
                     }
                 }
@@ -166,10 +206,13 @@ impl ModelServer {
                         )));
                         return;
                     }
-                    if cap > 0 {
-                        if let Err(e) = engine.lane_prepare(cap) {
+                    // The lane cap is the elastic bound: under Refuse it
+                    // equals `cap`; under Spill the extra lanes are hosted
+                    // by demand-reloading from the compressed tier.
+                    if spill_cap > 0 {
+                        if let Err(e) = engine.lane_prepare(spill_cap) {
                             let _ = meta_tx.send(Err(ServeError::Spawn(format!(
-                                "preparing {cap} decode lane(s) failed: {e}"
+                                "preparing {spill_cap} decode lane(s) failed: {e}"
                             ))));
                             return;
                         }
@@ -178,14 +221,14 @@ impl ModelServer {
                     worker_continuous(
                         &mut *engine,
                         &rx,
-                        cap,
+                        spill_cap,
                         policy.mem_budget,
                         policy.queue_depth,
                         &m,
                     )
                 } else {
                     let _ = meta_tx.send(Ok(engine.in_elems()));
-                    worker_loop(&mut *engine, &rx, cap, policy.mem_budget, policy.max_wait, &m)
+                    worker_loop(&mut *engine, &rx, cap, spill_cap, policy, &m)
                 }
             })
             .expect("spawn model server");
@@ -293,17 +336,22 @@ fn refuse(
     let _ = req.resp.send(Err(err));
 }
 
-/// The batching loop. `cap` is the resolved sample cap (0 = nothing fits
-/// the budget); `budget` is re-checked per formed batch as defense in
-/// depth.
+/// The batching loop. `cap` is the resolved resident sample cap (0 =
+/// nothing fits the budget); `spill_cap >= cap` is the elastic bound under
+/// [`SpillPolicy::Spill`] (equal to `cap` under Refuse). A request in
+/// `(cap, spill_cap]` is served solo — it never joins a formed batch —
+/// and counted as a spill admission. The budget is re-checked per formed
+/// batch as defense in depth.
 fn worker_loop(
     engine: &mut dyn Engine,
     rx: &Receiver<Request>,
     cap: usize,
-    budget: Option<usize>,
-    max_wait: Duration,
+    spill_cap: usize,
+    policy: BatchPolicy,
     metrics: &Metrics,
 ) {
+    let budget = policy.mem_budget;
+    let max_wait = policy.max_wait;
     let in_elems = engine.in_elems();
     let out_elems = engine.out_elems();
     let mut batch_buf: Vec<f32> = Vec::with_capacity(cap.max(1) * in_elems);
@@ -318,11 +366,13 @@ fn worker_loop(
                 Err(_) => return, // queue closed and drained
             },
         };
-        // Admission: refuse a burst that can never fit (budget- or
-        // cap-bound) before it occupies the batch.
+        // Admission: refuse a burst that can never fit — even the elastic
+        // spill bound — before it occupies the batch. A burst in
+        // `(cap, spill_cap]` passes through and runs solo: the gathering
+        // loops below are guarded by `samples < cap`, so nothing joins it.
         let first_samples = first.input.len() / in_elems;
-        if first_samples > cap {
-            refuse(&*engine, metrics, first, first_samples, cap, budget);
+        if first_samples > spill_cap {
+            refuse(&*engine, metrics, first, first_samples, spill_cap, budget);
             continue;
         }
         let deadline = first.enqueued + max_wait;
@@ -336,9 +386,11 @@ fn worker_loop(
                           carry: &mut Option<Request>,
                           engine: &dyn Engine| {
             let s = r.input.len() / in_elems;
-            if s > cap {
-                refuse(engine, metrics, r, s, cap, budget);
+            if s > spill_cap {
+                refuse(engine, metrics, r, s, spill_cap, budget);
             } else if *samples + s > cap {
+                // Includes spill-sized requests (`cap < s <= spill_cap`):
+                // carried, they open the next round as `first` and run solo.
                 *carry = Some(r);
             } else {
                 *samples += s;
@@ -370,11 +422,17 @@ fn worker_loop(
 
         // Defense in depth: the cap already encodes the budget, but a
         // planner-managed engine gets the final say before any memory is
-        // committed. (Skipped entirely when no budget is set, so the
-        // planner is never consulted on the unbudgeted hot path.)
+        // committed. Under [`SpillPolicy::Spill`] the same typed decision
+        // admits over-budget batches that fit the elastic bound — and
+        // that Spill outcome is the spill-admission event the metrics
+        // count. (Skipped entirely when no budget is set, so the planner
+        // is never consulted on the unbudgeted hot path.)
         if let Some(b) = budget {
-            if let Some(peak) = engine.planned_peak(samples) {
-                if peak > b {
+            match engine.admission(samples, budget, policy.spill) {
+                AdmissionOutcome::Admit => {}
+                AdmissionOutcome::Spill => metrics.record_spill_admission(),
+                AdmissionOutcome::Refuse => {
+                    let peak = engine.planned_peak(samples).unwrap_or(0);
                     metrics.record_rejected(batch.len());
                     for r in &batch {
                         let _ = r.resp.send(Err(ServeError::BudgetExceeded {
@@ -810,6 +868,81 @@ mod tests {
         assert_eq!(snap.completed, 0);
         assert_eq!(snap.rejected, 3);
         server.shutdown();
+    }
+
+    #[test]
+    fn spill_policy_admits_past_the_resident_budget() {
+        // Budget fits 1 sample (100 B/sample, budget 150 B); the spill
+        // tier adds 250 B, so the elastic bound is 400 B = 4 samples. A
+        // 3-sample burst must be served solo as a spill admission; a
+        // 5-sample burst exceeds even the elastic bound and is refused.
+        let server = ModelServer::spawn(
+            || {
+                Box::new(
+                    EchoEngine::new(1, 64).with_peak_per_sample(100).with_spill_capacity(250),
+                )
+            },
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+                mem_budget: Some(150),
+                spill: SpillPolicy::Spill,
+                ..BatchPolicy::default()
+            },
+        )
+        .expect("spawn");
+        let out = server.submit(vec![1.0, 2.0, 3.0]).recv().unwrap().unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0], "spill-admitted burst must serve bit-exactly");
+        match server.submit(vec![0.5f32; 5]).recv().unwrap() {
+            Err(ServeError::BudgetExceeded { batch, planned_bytes, budget_bytes }) => {
+                assert_eq!(batch, 5);
+                assert_eq!(planned_bytes, 500);
+                assert_eq!(budget_bytes, 150);
+            }
+            other => panic!("expected BudgetExceeded past the elastic bound, got {other:?}"),
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.spill_admissions, 1, "the over-budget serve must be counted");
+        assert_eq!(snap.rejected, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn refuse_policy_ignores_the_spill_tier() {
+        // Same engine and budget, default policy: the spill capacity must
+        // not widen admission — a 3-sample burst is refused exactly as if
+        // no tier existed.
+        let server = ModelServer::spawn(
+            || {
+                Box::new(
+                    EchoEngine::new(1, 64).with_peak_per_sample(100).with_spill_capacity(250),
+                )
+            },
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+                mem_budget: Some(150),
+                ..BatchPolicy::default()
+            },
+        )
+        .expect("spawn");
+        let resp = server.submit(vec![1.0, 2.0, 3.0]).recv().unwrap();
+        assert!(
+            matches!(resp, Err(ServeError::BudgetExceeded { batch: 3, .. })),
+            "refuse policy must keep refusing: {resp:?}"
+        );
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.spill_admissions, 0);
+        assert_eq!(snap.rejected, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn policy_defaults_preserve_existing_behavior() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.spill, SpillPolicy::Refuse);
+        assert_eq!(p.block_shelf_cap, crate::arena::paged::DEFAULT_BLOCK_SHELF_CAP);
     }
 
     #[test]

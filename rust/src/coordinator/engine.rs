@@ -1,6 +1,6 @@
 //! Engines: what actually computes a batch.
 
-use super::ArenaStats;
+use super::{AdmissionOutcome, ArenaStats, SpillPolicy};
 use crate::arena::paged::BLOCK_WORDS;
 use crate::exec::Executor;
 use crate::graph::Graph;
@@ -47,6 +47,50 @@ pub trait Engine {
     fn max_servable_batch(&self, budget_bytes: usize) -> Option<usize> {
         let _ = budget_bytes;
         None
+    }
+    /// Bytes the engine's spill tier could absorb
+    /// ([`crate::arena::spill::SpillTier::capacity_bytes`]); 0 for engines
+    /// without a tier. This is the *elastic* half of the admission bound:
+    /// under [`SpillPolicy::Spill`] a batch fits if its planned peak is at
+    /// most `budget + spill_capacity_bytes()`.
+    fn spill_capacity_bytes(&self) -> usize {
+        0
+    }
+    /// Bound the shared block-pool freelist backing this engine's paged
+    /// decode tails ([`super::BatchPolicy::block_shelf_cap`], CLI
+    /// `--block-cap`). A no-op for engines without a block pool.
+    fn set_block_shelf_cap(&mut self, cap: usize) {
+        let _ = cap;
+    }
+    /// Typed admission decision for a batch of `batch` samples under
+    /// `budget_bytes` and `policy`. The default implementation is the one
+    /// decision table every engine shares (see `docs/ARCHITECTURE.md` §3):
+    /// no budget, or an engine that cannot predict its footprint, admits
+    /// (a budget cannot bind what cannot be planned — exactly the
+    /// pre-spill behavior); a planned peak within the budget admits; over
+    /// the budget, [`SpillPolicy::Spill`] serves through the tier when the
+    /// peak fits `budget + spill capacity`, and everything else refuses.
+    fn admission(
+        &self,
+        batch: usize,
+        budget_bytes: Option<usize>,
+        policy: SpillPolicy,
+    ) -> AdmissionOutcome {
+        let Some(budget) = budget_bytes else {
+            return AdmissionOutcome::Admit;
+        };
+        let Some(peak) = self.planned_peak(batch) else {
+            return AdmissionOutcome::Admit;
+        };
+        if peak <= budget {
+            return AdmissionOutcome::Admit;
+        }
+        if policy == SpillPolicy::Spill
+            && peak <= budget.saturating_add(self.spill_capacity_bytes())
+        {
+            return AdmissionOutcome::Spill;
+        }
+        AdmissionOutcome::Refuse
     }
     /// True when this engine serves requests as independently-advancing
     /// decode lanes ([`Self::lane_begin`] / [`Self::lane_advance`] /
@@ -625,6 +669,12 @@ impl Engine for ExecutorEngine {
                 .ok(),
         }
     }
+    fn spill_capacity_bytes(&self) -> usize {
+        self.service.pool().spill_tier().map(|t| t.capacity_bytes()).unwrap_or(0)
+    }
+    fn set_block_shelf_cap(&mut self, cap: usize) {
+        self.service.pool().blocks().set_shelf_cap(cap);
+    }
     fn supports_lanes(&self) -> bool {
         // The lane API lives on the paged executor, and only a
         // continuous-constructed engine charges its budget per live lane
@@ -659,17 +709,33 @@ pub struct EchoEngine {
     /// Pretend planned peak per sample, so budget-admission tests get a
     /// linear, fully predictable footprint without a real model.
     pub peak_per_sample: Option<usize>,
+    /// Pretend spill-tier capacity (bytes), so spill-admission tests get
+    /// a predictable elastic bound without a real pool.
+    pub spill_capacity: usize,
 }
 
 impl EchoEngine {
     /// Engine of `elems` elements per sample, accepting up to `max_batch`.
     pub fn new(elems: usize, max_batch: usize) -> Self {
-        EchoEngine { elems, max_batch, seen_batches: Vec::new(), peak_per_sample: None }
+        EchoEngine {
+            elems,
+            max_batch,
+            seen_batches: Vec::new(),
+            peak_per_sample: None,
+            spill_capacity: 0,
+        }
     }
 
     /// Report a linear planned peak of `bytes` per sample.
     pub fn with_peak_per_sample(mut self, bytes: usize) -> Self {
         self.peak_per_sample = Some(bytes);
+        self
+    }
+
+    /// Report a spill-tier capacity of `bytes` (the elastic admission
+    /// bound under [`SpillPolicy::Spill`]).
+    pub fn with_spill_capacity(mut self, bytes: usize) -> Self {
+        self.spill_capacity = bytes;
         self
     }
 }
@@ -693,6 +759,9 @@ impl Engine for EchoEngine {
     }
     fn max_servable_batch(&self, budget_bytes: usize) -> Option<usize> {
         self.peak_per_sample.map(|p| if p == 0 { usize::MAX } else { budget_bytes / p })
+    }
+    fn spill_capacity_bytes(&self) -> usize {
+        self.spill_capacity
     }
 }
 
@@ -1051,6 +1120,45 @@ mod tests {
             .err()
             .expect("paged quantized construction must fail");
         assert!(e.to_string().contains("static-mode only"), "{e}");
+    }
+
+    #[test]
+    fn admission_decision_table_is_typed_and_policy_gated() {
+        // 100 B/sample, 150 B resident budget, 250 B spill capacity:
+        // batch 1 fits resident, batches 2..=4 fit resident + spillable,
+        // batch 5 fits nothing.
+        let e = EchoEngine::new(1, 8).with_peak_per_sample(100).with_spill_capacity(250);
+        let b = Some(150);
+        assert_eq!(e.admission(1, b, SpillPolicy::Refuse), AdmissionOutcome::Admit);
+        assert_eq!(e.admission(1, b, SpillPolicy::Spill), AdmissionOutcome::Admit);
+        // The default policy keeps today's refusal cliff bit-for-bit.
+        assert_eq!(e.admission(2, b, SpillPolicy::Refuse), AdmissionOutcome::Refuse);
+        assert_eq!(e.admission(2, b, SpillPolicy::Spill), AdmissionOutcome::Spill);
+        assert_eq!(e.admission(4, b, SpillPolicy::Spill), AdmissionOutcome::Spill);
+        assert_eq!(e.admission(5, b, SpillPolicy::Spill), AdmissionOutcome::Refuse);
+        // No budget, or no footprint prediction: always admit (a budget
+        // cannot bind what cannot be planned).
+        assert_eq!(e.admission(8, None, SpillPolicy::Refuse), AdmissionOutcome::Admit);
+        let blind = EchoEngine::new(1, 8);
+        assert_eq!(blind.admission(8, b, SpillPolicy::Refuse), AdmissionOutcome::Admit);
+        // An engine without a tier never spills, whatever the policy asks.
+        let tierless = EchoEngine::new(1, 8).with_peak_per_sample(100);
+        assert_eq!(tierless.admission(2, b, SpillPolicy::Spill), AdmissionOutcome::Refuse);
+    }
+
+    #[test]
+    fn executor_engine_exposes_the_pool_spill_tier_and_block_cap() {
+        use crate::arena::spill::SpillTier;
+        let g = crate::models::blazeface();
+        let svc = PlanService::shared();
+        let mut e = ExecutorEngine::new(&g, Arc::clone(&svc), "greedy-size", 3).unwrap();
+        assert_eq!(e.spill_capacity_bytes(), 0, "no tier configured yet");
+        svc.pool().configure_spill(Arc::new(SpillTier::new()), 1 << 20);
+        assert_eq!(e.spill_capacity_bytes(), usize::MAX, "tier capacity defaults unbounded");
+        svc.pool().spill_tier().unwrap().set_capacity_bytes(4096);
+        assert_eq!(e.spill_capacity_bytes(), 4096);
+        e.set_block_shelf_cap(7);
+        assert_eq!(svc.pool().blocks().shelf_cap(), 7);
     }
 
     #[test]

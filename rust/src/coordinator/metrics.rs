@@ -57,6 +57,17 @@ pub fn render_arena_stats(s: &ArenaStats) -> String {
             s.fragmentation * 100.0
         ));
     }
+    if s.spill_evictions > 0 || s.spill_reloads > 0 {
+        let ratio = if s.spill_bytes_after == 0 {
+            1.0
+        } else {
+            s.spill_bytes_before as f64 / s.spill_bytes_after as f64
+        };
+        line.push_str(&format!(
+            " | spill {} evicted / {} reloaded, {:.1}x compressed, reload p99 {} us",
+            s.spill_evictions, s.spill_reloads, ratio, s.spill_stall_p99_us
+        ));
+    }
     if s.threads > 1 {
         line.push_str(&format!(
             " | exec {} thread(s), {} level(s), {} op(s) parallel",
@@ -92,7 +103,9 @@ const LATENCY_RESERVOIR_CAP: usize = 4096;
 /// slot with probability `cap / seen`, keeping a uniform sample of the
 /// whole stream in O(cap) memory. The RNG is an inline SplitMix64 so the
 /// coordinator needs no external crate and stays deterministic per sink.
-struct Reservoir {
+/// Crate-visible because the spill tier samples reload stalls into the
+/// same bounded structure (`arena::spill::SpillTier`).
+pub(crate) struct Reservoir {
     samples: Vec<u64>,
     seen: u64,
     rng: u64,
@@ -105,7 +118,7 @@ impl Default for Reservoir {
 }
 
 impl Reservoir {
-    fn record(&mut self, v: u64) {
+    pub(crate) fn record(&mut self, v: u64) {
         self.seen += 1;
         if self.samples.len() < LATENCY_RESERVOIR_CAP {
             self.samples.push(v);
@@ -121,6 +134,16 @@ impl Reservoir {
         if j < LATENCY_RESERVOIR_CAP {
             self.samples[j] = v;
         }
+    }
+
+    /// Percentile `p` (0.0..=1.0) of the retained samples; 0 when empty.
+    pub(crate) fn percentile(&self, p: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        sorted[((sorted.len() as f64 - 1.0) * p) as usize]
     }
 }
 
@@ -152,6 +175,9 @@ struct Inner {
     /// Requests admitted into an already-running decode loop (continuous
     /// scheduler only; the drain worker never increments this).
     continuous_admissions: u64,
+    /// Requests served through the spill tier: over the resident budget,
+    /// admitted anyway under `SpillPolicy::Spill` by demand-reloading.
+    spill_admissions: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -188,6 +214,10 @@ pub struct MetricsSnapshot {
     /// rather than waiting for the batch to drain. Zero for the
     /// batch-and-drain worker; the continuous scheduler's whole point.
     pub continuous_admissions: u64,
+    /// Requests that exceeded the resident budget but were admitted under
+    /// [`crate::coordinator::SpillPolicy::Spill`] and served through the
+    /// spill tier. Zero under the default refuse policy.
+    pub spill_admissions: u64,
 }
 
 impl Metrics {
@@ -224,6 +254,11 @@ impl Metrics {
     /// Count one request admitted into an already-running decode loop.
     pub fn record_continuous_admission(&self) {
         self.inner.lock().unwrap().continuous_admissions += 1;
+    }
+
+    /// Count one over-budget request served through the spill tier.
+    pub fn record_spill_admission(&self) {
+        self.inner.lock().unwrap().spill_admissions += 1;
     }
 
     /// Latency samples currently held — bounded by the reservoir cap no
@@ -268,6 +303,7 @@ impl Metrics {
             max_batch_seen: m.max_batch_seen,
             throughput_rps: if wall > 0.0 { m.completed as f64 / wall } else { 0.0 },
             continuous_admissions: m.continuous_admissions,
+            spill_admissions: m.spill_admissions,
         }
     }
 }
@@ -302,6 +338,9 @@ mod tests {
         assert_eq!(s.continuous_admissions, 0);
         m.record_continuous_admission();
         assert_eq!(m.snapshot().continuous_admissions, 1);
+        assert_eq!(m.snapshot().spill_admissions, 0);
+        m.record_spill_admission();
+        assert_eq!(m.snapshot().spill_admissions, 1);
     }
 
     #[test]
@@ -381,6 +420,30 @@ mod tests {
         let clean = render_arena_stats(&ArenaStats::default());
         assert!(!clean.contains("dropped"), "{clean}");
         assert!(!clean.contains("paged"), "{clean}");
+    }
+
+    #[test]
+    fn arena_stats_render_includes_the_spill_segment() {
+        let s = ArenaStats {
+            planned_bytes: 8 * 1024,
+            naive_bytes: 32 * 1024,
+            strategy: "greedy-size".into(),
+            spill_evictions: 6,
+            spill_reloads: 4,
+            spill_bytes_before: 48_000,
+            spill_bytes_after: 6_000,
+            spill_stall_p99_us: 37,
+            ..ArenaStats::default()
+        };
+        let line = render_arena_stats(&s);
+        assert!(
+            line.contains("spill 6 evicted / 4 reloaded, 8.0x compressed, reload p99 37 us"),
+            "{line}"
+        );
+        // The byte-identity mechanism for the default refuse policy: no
+        // spill traffic, no segment.
+        let clean = render_arena_stats(&ArenaStats::default());
+        assert!(!clean.contains("spill"), "{clean}");
     }
 
     #[test]

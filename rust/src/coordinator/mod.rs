@@ -42,6 +42,49 @@ pub use router::Router;
 
 use std::time::Instant;
 
+/// What admission does with a request whose planned peak exceeds the
+/// resident budget (`serve --spill-policy`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum SpillPolicy {
+    /// Refuse over-budget work with a typed [`ServeError::BudgetExceeded`]
+    /// — today's behavior, bit-for-bit (the default).
+    #[default]
+    Refuse,
+    /// Admit work that fits `resident + spill capacity`: cold pool buffers
+    /// are evicted into the compressed spill tier and demand-reloaded, so
+    /// the budget boundary degrades into reload stalls instead of a
+    /// refusal cliff.
+    Spill,
+}
+
+impl SpillPolicy {
+    /// Parse a `--spill-policy` argument (`"refuse"` / `"spill"`).
+    pub fn parse(s: &str) -> Option<SpillPolicy> {
+        match s {
+            "refuse" => Some(SpillPolicy::Refuse),
+            "spill" => Some(SpillPolicy::Spill),
+            _ => None,
+        }
+    }
+}
+
+/// Typed admission decision for one batch size under a memory budget —
+/// what [`engine::Engine::admission`] resolves a `(batch, budget, policy)`
+/// triple into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionOutcome {
+    /// The planned peak fits the resident budget: serve from the resident
+    /// arena as always.
+    Admit,
+    /// Over the resident budget but within `resident + spill capacity`
+    /// under [`SpillPolicy::Spill`]: serve by demand-reloading through the
+    /// spill tier.
+    Spill,
+    /// Does not fit even the elastic bound (or the policy is
+    /// [`SpillPolicy::Refuse`]): refuse typed.
+    Refuse,
+}
+
 /// Typed serving failure — what a [`Request`] can be refused with.
 ///
 /// Budget-driven admission (MAFAT-style) depends on the refusal being
@@ -223,6 +266,19 @@ pub struct ArenaStats {
     /// `planned_bytes` of a quantized engine already reflect the shrunk
     /// records — see [`crate::records::UsageRecords::scaled_for`].
     pub dtype: String,
+    /// Pool buffers evicted into the compressed spill tier (0 with no
+    /// tier configured — the segment renders only with spill traffic).
+    pub spill_evictions: u64,
+    /// Pool buffers demand-reloaded out of the spill tier.
+    pub spill_reloads: u64,
+    /// Raw bytes of everything evicted so far (before compression).
+    pub spill_bytes_before: u64,
+    /// Stored bytes of everything evicted so far (after compression) —
+    /// `before / after` is the compression ratio the metrics line prints.
+    pub spill_bytes_after: u64,
+    /// 99th-percentile spill reload stall, microseconds (sampled into the
+    /// same bounded reservoir as serving latencies).
+    pub spill_stall_p99_us: u64,
 }
 
 impl ArenaStats {
@@ -250,6 +306,11 @@ impl ArenaStats {
             dynamic_hits: service.dynamic_hits,
             dynamic_misses: service.dynamic_misses,
             pool_dropped: service.pool_dropped,
+            spill_evictions: service.spill_evictions,
+            spill_reloads: service.spill_reloads,
+            spill_bytes_before: service.spill_bytes_before,
+            spill_bytes_after: service.spill_bytes_after,
+            spill_stall_p99_us: service.spill_stall_p99_us,
             ..ArenaStats::default()
         }
     }

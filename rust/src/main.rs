@@ -13,7 +13,9 @@
 //!                   [--max-batch B] [--wait-ms W] [--artifacts DIR]
 //!                   [--mem-budget BYTES] [--plan-dir DIR] [--threads T]
 //!                   [--dtype f32|f16|i8] [--dynamic [FRAC]] [--paged]
-//!                   [--continuous]                  # E2E serving
+//!                   [--continuous] [--spill-policy refuse|spill]
+//!                   [--spill-dir DIR] [--spill-watermark BYTES]
+//!                   [--block-cap N]                 # E2E serving
 //! tensorarena order-ablation [model] [--seed S] [--trials N] # §7.1 order table
 //! tensorarena dynamic-ablation [model] [--frac F1,F2,...]    # §7 overhead table
 //! tensorarena models                                # list zoo models
@@ -62,6 +64,18 @@
 //! resolved lane cap keeps every wave boundary under `--mem-budget`; the
 //! bounded queue refuses overload with a typed `QueueFull`.
 //!
+//! `--spill-policy spill` turns the refusal boundary elastic (§tiered
+//! memory): idle arena buffers past `--spill-watermark` (default 0 —
+//! evict every idle buffer) are compressed into an in-memory spill tier,
+//! and a request whose planned peak exceeds `--mem-budget` but fits
+//! `budget + tier capacity` is admitted and served by demand-reloading —
+//! bit-identically, at a reload-stall cost the stats line reports. The
+//! default `refuse` keeps strict refusal byte-for-byte. `serve
+//! --spill-dir` additionally mirrors evicted buffers to disk files
+//! (atomic tmp+rename, adversarially validated at adoption) so a
+//! restarted server re-adopts them; `--block-cap` tunes the shared block
+//! pool's freelist cap (default 1024).
+//!
 //! `--dtype` picks the arena's element size class (`f32` default, `f16`,
 //! `i8`): intermediate payloads are stored packed at the quantized element
 //! size (per-record scale/zero-point chosen at each op's output), plans
@@ -76,7 +90,7 @@
 //!
 //! (Hand-rolled argument parsing: the offline registry has no clap.)
 
-use tensorarena::coordinator::{self, ArenaStats, BatchPolicy, Router};
+use tensorarena::coordinator::{self, ArenaStats, BatchPolicy, Router, SpillPolicy};
 use tensorarena::exec::cachesim;
 use tensorarena::models;
 use tensorarena::planner::order::{
@@ -581,6 +595,10 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut continuous = false;
     let mut threads = 1usize;
     let mut dtype = Dtype::F32;
+    let mut spill_policy = SpillPolicy::Refuse;
+    let mut spill_dir: Option<String> = None;
+    let mut spill_watermark = 0usize;
+    let mut block_cap = tensorarena::arena::paged::DEFAULT_BLOCK_SHELF_CAP;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -682,6 +700,38 @@ fn cmd_serve(args: &[String]) -> i32 {
                 dtype = d;
                 i += 2;
             }
+            "--spill-policy" => {
+                let Some(p) = args.get(i + 1).and_then(|v| SpillPolicy::parse(v)) else {
+                    eprintln!("--spill-policy wants 'refuse' or 'spill'");
+                    return 2;
+                };
+                spill_policy = p;
+                i += 2;
+            }
+            "--spill-dir" => {
+                let Some(d) = args.get(i + 1) else {
+                    eprintln!("--spill-dir wants a directory");
+                    return 2;
+                };
+                spill_dir = Some(d.clone());
+                i += 2;
+            }
+            "--spill-watermark" => {
+                let Some(w) = args.get(i + 1).and_then(|v| parse_bytes(v)) else {
+                    eprintln!("--spill-watermark wants a byte count (suffixes k/m/g allowed)");
+                    return 2;
+                };
+                spill_watermark = w;
+                i += 2;
+            }
+            "--block-cap" => {
+                let Some(c) = args.get(i + 1).and_then(|v| v.parse::<usize>().ok()) else {
+                    eprintln!("--block-cap wants a shelf capacity (block count)");
+                    return 2;
+                };
+                block_cap = c;
+                i += 2;
+            }
             other => {
                 eprintln!("unknown flag {other}");
                 return 2;
@@ -738,6 +788,13 @@ fn cmd_serve(args: &[String]) -> i32 {
                      kernels; quantized size classes apply to the pure-Rust executor path only"
                 );
             }
+            if spill_policy != SpillPolicy::Refuse || spill_dir.is_some() {
+                eprintln!(
+                    "--spill-policy/--spill-dir ignored: the PJRT AOT path has no arena \
+                     pool to evict from; the spill tier applies to the pure-Rust executor \
+                     path only"
+                );
+            }
             return match serve_bench(&dir, &strategy, requests, max_batch, wait_ms, mem_budget) {
                 Ok(()) => 0,
                 Err(e) => {
@@ -768,6 +825,10 @@ fn cmd_serve(args: &[String]) -> i32 {
         paged,
         continuous,
         threads,
+        spill_policy,
+        spill_dir.as_deref(),
+        spill_watermark,
+        block_cap,
     ) {
         Ok(()) => 0,
         Err(e) => {
@@ -804,7 +865,13 @@ fn cmd_serve(args: &[String]) -> i32 {
 /// class (per-record scale/zero-point, outputs dequantized back to f32)
 /// and the plans plus the admission envelope resolve under the shrunken
 /// footprint; quantized serving is static-only, so the caller has already
-/// refused the dynamic/paged/continuous combinations.
+/// refused the dynamic/paged/continuous combinations. With
+/// `spill_policy == Spill` (or a `spill_dir`), the pool evicts idle
+/// buffers past `spill_watermark` into the compressed spill tier — disk-
+/// mirrored when a directory is given, re-adopted at boot — and admission
+/// turns elastic: over-budget requests that fit `budget + tier capacity`
+/// serve by demand-reloading, bit-identically, with the eviction/reload
+/// counters reported next to the latency numbers.
 #[allow(clippy::too_many_arguments)]
 fn serve_pure(
     model: &str,
@@ -820,8 +887,13 @@ fn serve_pure(
     paged: bool,
     continuous: bool,
     threads: usize,
+    spill_policy: SpillPolicy,
+    spill_dir: Option<&str>,
+    spill_watermark: usize,
+    block_cap: usize,
 ) -> Result<(), String> {
     use tensorarena::arena::paged::BLOCK_WORDS;
+    use tensorarena::arena::spill::SpillTier;
     use tensorarena::coordinator::engine::ExecutorEngine;
 
     // Paged serving is a mode of wave-aware serving: without an explicit
@@ -860,6 +932,34 @@ fn serve_pure(
         );
     }
     let recs = UsageRecords::from_graph(&g);
+    // The spill tier exists when the policy (or a directory) asks for it;
+    // under the default refuse policy with no directory, nothing below
+    // changes — the pool has no tier and every line prints as before.
+    let spilling = spill_policy == SpillPolicy::Spill || spill_dir.is_some();
+    if spilling {
+        let tier = match spill_dir {
+            Some(d) => {
+                let tier = SpillTier::with_dir(Path::new(d))
+                    .map_err(|e| format!("opening spill dir {d}: {e}"))?;
+                let report =
+                    tier.load_dir().map_err(|e| format!("adopting spill dir {d}: {e}"))?;
+                println!(
+                    "spill dir {d}: adopted {} buffer(s), {} suspect skip(s)",
+                    report.loaded,
+                    report.skipped(),
+                );
+                tier
+            }
+            None => SpillTier::new(),
+        };
+        service.pool().configure_spill(Arc::new(tier), spill_watermark);
+        println!(
+            "spill tier: policy {}, watermark {:.1} KiB{}",
+            if spill_policy == SpillPolicy::Spill { "spill" } else { "refuse" },
+            spill_watermark as f64 / 1024.0,
+            spill_dir.map(|d| format!(", mirrored to {d}")).unwrap_or_default(),
+        );
+    }
     if let Some(dir) = plan_dir {
         let report = service
             .warm_start(Path::new(dir), &recs, &req)
@@ -992,6 +1092,8 @@ fn serve_pure(
                 max_wait: std::time::Duration::from_millis(wait_ms),
                 mem_budget,
                 continuous,
+                spill: spill_policy,
+                block_shelf_cap: block_cap,
                 ..BatchPolicy::default()
             },
         )
@@ -1072,6 +1174,28 @@ fn serve_pure(
             "continuous: {} request(s) admitted into in-flight decode loops \
              (mean {:.2} lane(s) live at retirement, max {})",
             snap.continuous_admissions, snap.mean_batch, snap.max_batch_seen,
+        );
+    }
+    // The spill story, only when a tier exists: how often the elastic
+    // admission fired, what eviction bought (compressed footprint) and
+    // what reloads cost (stall tail). Refuse-default runs print nothing.
+    if spilling {
+        let tier = service.pool().spill_tier().expect("spill tier configured above");
+        let s = tier.stats();
+        let admissions = router.server(model).unwrap().metrics().snapshot().spill_admissions;
+        let ratio = if s.bytes_after == 0 {
+            1.0
+        } else {
+            s.bytes_before as f64 / s.bytes_after as f64
+        };
+        println!(
+            "spill: {admissions} over-budget admission(s); {} eviction(s) / {} reload(s), \
+             {ratio:.2}x compressed ({:.1} -> {:.1} KiB), reload stall p99 {} us",
+            s.evictions,
+            s.reloads,
+            s.bytes_before as f64 / 1024.0,
+            s.bytes_after as f64 / 1024.0,
+            s.stall_p99_us,
         );
     }
     router.shutdown();

@@ -526,8 +526,15 @@ impl PlanCache {
             // fleet directory must not clobber each other's half-written
             // file before the atomic rename.
             let tmp = dir.join(format!(".{name}.{}.tmp", std::process::id()));
-            std::fs::write(&tmp, text.as_bytes())?;
-            std::fs::rename(&tmp, dir.join(&name))?;
+            // Remove the tmp on every error path: a failed write or rename
+            // must not leave a partial `.tmp` file in the directory for a
+            // later warm start (or a directory listing) to trip on.
+            let written = std::fs::write(&tmp, text.as_bytes())
+                .and_then(|()| std::fs::rename(&tmp, dir.join(&name)));
+            if let Err(e) = written {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(e);
+            }
             report.written += 1;
         }
         Ok(report)

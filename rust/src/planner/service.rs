@@ -91,6 +91,17 @@ pub struct PlanServiceStats {
     /// Arena buffers dropped at release because their size class was at
     /// the pool's retention cap (pool churn, invisible before this).
     pub pool_dropped: u64,
+    /// Buffers evicted from the pool's resident shelves into the spill
+    /// tier (zero with no tier configured).
+    pub spill_evictions: u64,
+    /// Buffers demand-reloaded out of the spill tier on acquire misses.
+    pub spill_reloads: u64,
+    /// Raw bytes of everything evicted so far (before compression).
+    pub spill_bytes_before: u64,
+    /// Stored bytes of everything evicted so far (after compression).
+    pub spill_bytes_after: u64,
+    /// 99th-percentile spill reload stall, microseconds.
+    pub spill_stall_p99_us: u64,
 }
 
 impl PlanServiceStats {
@@ -369,6 +380,7 @@ impl PlanService {
 
     /// Current reuse counters.
     pub fn stats(&self) -> PlanServiceStats {
+        let spill = self.pool.spill_tier().map(|t| t.stats()).unwrap_or_default();
         PlanServiceStats {
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
@@ -379,6 +391,11 @@ impl PlanService {
             dynamic_hits: self.cache.dynamic_hits(),
             dynamic_misses: self.cache.dynamic_misses(),
             pool_dropped: self.pool.dropped(),
+            spill_evictions: spill.evictions,
+            spill_reloads: spill.reloads,
+            spill_bytes_before: spill.bytes_before,
+            spill_bytes_after: spill.bytes_after,
+            spill_stall_p99_us: spill.stall_p99_us,
         }
     }
 }

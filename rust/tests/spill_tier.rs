@@ -1,0 +1,412 @@
+//! Adversarial and acceptance tests for the spill tier: the codec must
+//! round-trip arbitrary word streams bit-exactly without ever beating the
+//! stored-raw bound, a spill directory must survive truncation, bit flips,
+//! wrong lengths, and stale formats by *skipping* (counted, typed) — never
+//! by corrupting a reload — and the serve-level acceptance: a request the
+//! refuse policy rejects is admitted under `--spill-policy spill` and
+//! served bit-identically, with nonzero eviction/reload counters.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+use tensorarena::arena::spill::{compress, decompress, SpillTier};
+use tensorarena::coordinator::engine::ExecutorEngine;
+use tensorarena::coordinator::{BatchPolicy, ModelServer, ServeError, SpillPolicy};
+use tensorarena::models;
+use tensorarena::planner::PlanService;
+use tensorarena::records::UsageRecords;
+use tensorarena::rng::SplitMix64;
+
+/// Fresh scratch directory under the system temp dir (no tempfile crate in
+/// the offline registry); each test uses its own tag.
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("tensorarena-spill-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tmp_leftovers(dir: &std::path::Path) -> Vec<String> {
+    std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".tmp"))
+        .collect()
+}
+
+#[test]
+fn codec_property_random_streams_roundtrip_within_the_raw_bound() {
+    // Seeded pseudo-random streams across lengths and sparsity profiles:
+    // every one must round-trip bit-exactly and never exceed the
+    // stored-raw bound of 1 + 4·words bytes.
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    for len in [0usize, 1, 2, 7, 64, 255, 1024, 4097] {
+        for sparsity in [0usize, 2, 7, 100] {
+            let mut words = vec![0f32; len];
+            rng.fill_f32(&mut words, 1.0);
+            if sparsity > 0 {
+                for (i, w) in words.iter_mut().enumerate() {
+                    if i % sparsity != 0 {
+                        *w = 0.0;
+                    }
+                }
+            }
+            let c = compress(&words);
+            assert!(
+                c.len() <= 1 + 4 * len,
+                "len {len} sparsity {sparsity}: compressed {} > raw bound {}",
+                c.len(),
+                1 + 4 * len
+            );
+            let back = decompress(&c).expect("own output must decode");
+            assert_eq!(back.len(), words.len(), "len {len} sparsity {sparsity}");
+            for (a, b) in words.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "len {len} sparsity {sparsity}");
+            }
+        }
+    }
+    // The bit patterns f32 equality would mangle: NaN payloads and -0.0.
+    let odd = [f32::from_bits(0x7fc0_dead), -0.0, f32::from_bits(0xff80_0001), 0.0];
+    let back = decompress(&compress(&odd)).unwrap();
+    for (a, b) in odd.iter().zip(&back) {
+        assert_eq!(a.to_bits(), b.to_bits(), "NaN payloads / signed zeros must survive");
+    }
+}
+
+#[test]
+fn codec_rejects_adversarial_byte_streams_without_panicking() {
+    // Deterministic garbage of many lengths under both tags (and no tag):
+    // decompress must return None or a valid buffer — never panic. Bytes
+    // stay below 0x80 so garbage run lengths decode as single-byte varints
+    // and a "valid" accidental stream stays small.
+    for len in [0usize, 1, 3, 5, 17, 255, 1000] {
+        for tag in [0u8, 1, 2, 0xff] {
+            let mut bytes = vec![tag];
+            bytes.extend((0..len).map(|i| (i as u32 * 2654435761 % 120) as u8));
+            if let Some(decoded) = decompress(&bytes) {
+                // Accepting is fine (raw payloads of aligned garbage are
+                // valid) — but then re-encoding must round-trip it.
+                let back = decompress(&compress(&decoded)).unwrap();
+                assert_eq!(decoded.len(), back.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn disk_entries_survive_a_process_handoff_bit_exactly() {
+    // Tier A persists; a fresh tier B (a "restarted process") adopts and
+    // reloads the same bytes. The reloaded buffer must be bit-identical,
+    // and the reload must remove the disk file.
+    let dir = scratch_dir("handoff");
+    let ramp: Vec<f32> = (0..500).map(|i| (i as f32).sin()).collect();
+    {
+        let a = SpillTier::with_dir(&dir).unwrap();
+        a.spill(ramp.clone());
+        a.spill(vec![0.0; 2000]);
+        assert_eq!(a.disk_write_errors(), 0);
+    }
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 2, "two persisted entries");
+
+    let b = SpillTier::with_dir(&dir).unwrap();
+    let report = b.load_dir().unwrap();
+    assert_eq!(report.loaded, 2, "{report:?}");
+    assert_eq!(report.skipped(), 0, "{report:?}");
+    let got = b.reload(500).expect("adopted entry must reload");
+    assert_eq!(got.len(), 500);
+    for (x, y) in ramp.iter().zip(&got) {
+        assert_eq!(x.to_bits(), y.to_bits(), "handoff must be bit-exact");
+    }
+    assert_eq!(
+        std::fs::read_dir(&dir).unwrap().count(),
+        1,
+        "a reload must remove its disk file"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn damaged_spill_files_are_skipped_with_typed_counters() {
+    // One undamaged entry plus one file per damage class. The adoption
+    // must load exactly the undamaged one, count each damage class in its
+    // own counter, and the single reload must return the undamaged bytes.
+    let dir = scratch_dir("damage");
+    {
+        let a = SpillTier::with_dir(&dir).unwrap();
+        for len in [100usize, 200, 300, 400, 500, 600] {
+            a.spill((0..len).map(|i| i as f32 * 0.5).collect());
+        }
+    }
+    let mut names: Vec<PathBuf> = std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+    names.sort();
+    assert_eq!(names.len(), 6);
+    // names[0] (w100): keep undamaged.
+    // names[1] (w200): truncate mid-payload (short of the declared bytes).
+    let data = std::fs::read(&names[1]).unwrap();
+    std::fs::write(&names[1], &data[..data.len() - 3]).unwrap();
+    // names[2] (w300): flip one payload bit — checksum must catch it.
+    let mut data = std::fs::read(&names[2]).unwrap();
+    let last = data.len() - 1;
+    data[last] ^= 0x40;
+    std::fs::write(&names[2], data).unwrap();
+    // names[3] (w400): append a byte past the declared length.
+    let mut data = std::fs::read(&names[3]).unwrap();
+    data.push(0);
+    std::fs::write(&names[3], data).unwrap();
+    // names[4] (w500): a header word count the payload does not decode to.
+    let mut data = std::fs::read(&names[4]).unwrap();
+    let forged = data
+        .windows("words 500 ".len())
+        .position(|w| w == b"words 500 ")
+        .expect("fixture drifted: header must declare 'words 500'");
+    data[forged + 6..forged + 9].copy_from_slice(b"501");
+    std::fs::write(&names[4], data).unwrap();
+    // names[5] (w600): a future format version.
+    let data = std::fs::read(&names[5]).unwrap();
+    let mut forged = b"tensorarena-spill v9".to_vec();
+    forged.extend_from_slice(&data["tensorarena-spill v1".len()..]);
+    std::fs::write(&names[5], forged).unwrap();
+    // Plus pure noise the listing must ignore entirely.
+    std::fs::write(dir.join("README.txt"), "not a spill entry").unwrap();
+    std::fs::write(dir.join(".spill-junk.tmp"), "torn").unwrap();
+
+    let b = SpillTier::with_dir(&dir).unwrap();
+    let report = b.load_dir().unwrap();
+    assert_eq!(report.loaded, 1, "{report:?}");
+    assert_eq!(report.skipped_truncated, 1, "{report:?}");
+    assert_eq!(report.skipped_corrupt, 1, "{report:?}");
+    assert_eq!(report.skipped_wrong_length, 2, "{report:?}");
+    assert_eq!(report.skipped_stale_format, 1, "{report:?}");
+    assert_eq!(report.skipped(), 5);
+    let got = b.reload(100).expect("the undamaged entry");
+    assert_eq!(got.len(), 100);
+    for (i, v) in got.iter().enumerate() {
+        assert_eq!(v.to_bits(), (i as f32 * 0.5).to_bits(), "reload corrupted word {i}");
+    }
+    assert!(b.reload(450).is_none(), "damaged entries must not be servable");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn failed_spill_persist_leaves_no_tmp_and_keeps_the_entry() {
+    // Force the atomic rename to fail by planting a *directory* at the
+    // entry's final path (tests run as root, so permission tricks cannot
+    // force a write failure). The spill must count the disk error, leave
+    // no `.tmp` behind, and keep serving the in-memory copy.
+    let dir = scratch_dir("no-tmp");
+    let tier = SpillTier::with_dir(&dir).unwrap();
+    std::fs::create_dir(dir.join("spill-0000000000000000-w64.spill")).unwrap();
+    tier.spill(vec![4.5f32; 64]);
+    assert_eq!(tier.disk_write_errors(), 1, "the failed write must be counted");
+    assert_eq!(tmp_leftovers(&dir), Vec::<String>::new(), "no .tmp may survive a failure");
+    let got = tier.reload(64).expect("the in-memory copy stays authoritative");
+    assert!(got.iter().all(|&v| v == 4.5));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn failed_plan_persist_leaves_no_tmp() {
+    // The same hygiene for the plan directory: plant a directory at the
+    // plan's final file name; persist_dir must fail *and* clean its tmp.
+    use tensorarena::planner::serialize::{self, plan_file_name};
+    use tensorarena::planner::{PlanCache, PlanRequest};
+    let dir = scratch_dir("plan-no-tmp");
+    let recs = UsageRecords::from_graph(&models::blazeface());
+    let cache = PlanCache::new();
+    cache.get_or_plan(&recs, &PlanRequest::new()).unwrap();
+    let name = plan_file_name(serialize::records_fingerprint(&recs), &PlanRequest::new());
+    std::fs::create_dir(dir.join(&name)).unwrap();
+    assert!(cache.persist_dir(&dir).is_err(), "rename onto a directory must fail");
+    assert_eq!(tmp_leftovers(&dir), Vec::<String>::new(), "no .tmp may survive a failure");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Build a blazeface server over `service` with the given policy knobs.
+fn spawn_blaze(
+    service: &Arc<PlanService>,
+    mem_budget: Option<usize>,
+    spill: SpillPolicy,
+) -> ModelServer {
+    let service = Arc::clone(service);
+    let req = service.request();
+    ModelServer::spawn(
+        move || {
+            let g = models::blazeface();
+            Box::new(
+                ExecutorEngine::for_request(&g, service, &req, 7)
+                    .expect("engine")
+                    .with_max_batch(4),
+            )
+        },
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            mem_budget,
+            spill,
+            ..BatchPolicy::default()
+        },
+    )
+    .expect("spawn")
+}
+
+#[test]
+fn spill_policy_turns_a_refusal_into_a_bit_identical_serve() {
+    // The PR's acceptance scenario. A budget that fits batch 1 but not
+    // batch 3: under the default refuse policy the 3-sample burst gets the
+    // typed refusal; under `--spill-policy spill` (same service, same
+    // budget, tier attached) it is admitted, served, and every output is
+    // bit-identical to an unbudgeted reference server — while the pool's
+    // eviction/reload counters prove the arena actually cycled through
+    // the compressed tier.
+    let g = models::blazeface();
+    let in_elems = g.tensor(g.inputs[0]).num_elements();
+    let recs = UsageRecords::from_graph(&g);
+    let mut rng = SplitMix64::new(42);
+    let mut single = vec![0f32; in_elems];
+    rng.fill_f32(&mut single, 1.0);
+    let mut burst = vec![0f32; in_elems * 3];
+    rng.fill_f32(&mut burst, 1.0);
+
+    // Reference: unbudgeted, tierless.
+    let ref_service = PlanService::shared();
+    let reference = spawn_blaze(&ref_service, None, SpillPolicy::Refuse);
+    let ref_single = reference.submit(single.clone()).recv().unwrap().unwrap();
+    let ref_burst = reference.submit(burst.clone()).recv().unwrap().unwrap();
+    reference.shutdown();
+
+    // The budgeted service, spill tier attached with an aggressive (zero)
+    // watermark: every idle release compresses into the tier.
+    let service = PlanService::shared();
+    let tier = Arc::new(SpillTier::new());
+    service.pool().configure_spill(Arc::clone(&tier), 0);
+    let budget = service.plan(&recs, &service.request()).unwrap().total * 3 / 2;
+
+    // Refuse policy: the burst is the typed refusal — the tier's presence
+    // alone must not widen admission.
+    let refuse = spawn_blaze(&service, Some(budget), SpillPolicy::Refuse);
+    assert_eq!(refuse.submit(single.clone()).recv().unwrap().unwrap(), ref_single);
+    match refuse.submit(burst.clone()).recv().unwrap() {
+        Err(ServeError::BudgetExceeded { batch: 3, .. }) => {}
+        other => panic!("expected the typed refusal, got {other:?}"),
+    }
+    refuse.shutdown();
+
+    // Spill policy: the same burst is admitted and bit-identical, and the
+    // batch churn (1 → 3 → 1) cycles arena buffers through the tier.
+    let spill = spawn_blaze(&service, Some(budget), SpillPolicy::Spill);
+    assert_eq!(spill.submit(single.clone()).recv().unwrap().unwrap(), ref_single);
+    assert_eq!(
+        spill.submit(burst.clone()).recv().unwrap().unwrap(),
+        ref_burst,
+        "a spill-admitted burst must serve bit-identically"
+    );
+    assert_eq!(spill.submit(single.clone()).recv().unwrap().unwrap(), ref_single);
+    let snap = spill.metrics().snapshot();
+    assert!(snap.spill_admissions >= 1, "the over-budget serve must be counted: {snap:?}");
+    assert_eq!(snap.rejected, 0, "nothing may be refused under the elastic bound");
+    spill.shutdown();
+    let stats = tier.stats();
+    assert!(stats.evictions >= 2, "batch churn must evict idle buffers: {stats:?}");
+    assert!(stats.reloads >= 1, "re-acquiring an evicted class must reload: {stats:?}");
+    assert!(stats.bytes_after <= stats.bytes_before, "the codec never inflates: {stats:?}");
+    // And the serving stats surface the same counters.
+    let svc_stats = service.stats();
+    assert_eq!(svc_stats.spill_evictions, stats.evictions);
+    assert_eq!(svc_stats.spill_reloads, stats.reloads);
+}
+
+#[test]
+#[ignore = "tier-2: serves every zoo network under a starved budget with the spill policy; run with --ignored"]
+fn spill_soak_zoo_bit_identical_under_starved_budget() {
+    // The tier-2 soak: for every zoo model, a budget *below* the batch-1
+    // f32 admission floor — the refuse policy would serve nothing at all —
+    // must still serve everything under `--spill-policy spill`, with
+    // outputs bit-identical to an unbudgeted reference and the eviction
+    // counter proving tier traffic.
+    for name in models::ZOO {
+        let g = models::by_name(name).unwrap();
+        let in_elems = g.tensor(g.inputs[0]).num_elements();
+        let recs = UsageRecords::from_graph(&g);
+        let mut rng = SplitMix64::new(31);
+        let mut single = vec![0f32; in_elems];
+        rng.fill_f32(&mut single, 1.0);
+        let mut burst = vec![0f32; in_elems * 2];
+        rng.fill_f32(&mut burst, 1.0);
+
+        let ref_service = PlanService::shared();
+        let reference = {
+            let service = Arc::clone(&ref_service);
+            let req = service.request();
+            let model = name.to_string();
+            ModelServer::spawn(
+                move || {
+                    let g = models::by_name(&model).unwrap();
+                    Box::new(
+                        ExecutorEngine::for_request(&g, service, &req, 7)
+                            .expect("engine")
+                            .with_max_batch(2),
+                    )
+                },
+                BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(1),
+                    ..BatchPolicy::default()
+                },
+            )
+            .expect("spawn")
+        };
+        let ref_single = reference.submit(single.clone()).recv().unwrap().unwrap();
+        let ref_burst = reference.submit(burst.clone()).recv().unwrap().unwrap();
+        reference.shutdown();
+
+        let service = PlanService::shared();
+        let tier = Arc::new(SpillTier::new());
+        service.pool().configure_spill(Arc::clone(&tier), 0);
+        let floor = service.plan(&recs, &service.request()).unwrap().total;
+        let budget = floor.saturating_sub(1);
+        let server = {
+            let service = Arc::clone(&service);
+            let req = service.request();
+            let model = name.to_string();
+            ModelServer::spawn(
+                move || {
+                    let g = models::by_name(&model).unwrap();
+                    Box::new(
+                        ExecutorEngine::for_request(&g, service, &req, 7)
+                            .expect("engine")
+                            .with_max_batch(2),
+                    )
+                },
+                BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(1),
+                    mem_budget: Some(budget),
+                    spill: SpillPolicy::Spill,
+                    ..BatchPolicy::default()
+                },
+            )
+            .expect("spawn")
+        };
+        assert_eq!(
+            server.submit(single.clone()).recv().unwrap().unwrap(),
+            ref_single,
+            "{name}: starved-budget single diverged"
+        );
+        assert_eq!(
+            server.submit(burst.clone()).recv().unwrap().unwrap(),
+            ref_burst,
+            "{name}: starved-budget burst diverged"
+        );
+        assert_eq!(
+            server.submit(single.clone()).recv().unwrap().unwrap(),
+            ref_single,
+            "{name}: post-churn single diverged"
+        );
+        let snap = server.metrics().snapshot();
+        assert!(snap.spill_admissions >= 3, "{name}: every serve is over-budget: {snap:?}");
+        assert_eq!(snap.rejected, 0, "{name}: nothing may be refused: {snap:?}");
+        server.shutdown();
+        assert!(tier.evictions() >= 1, "{name}: batch churn must reach the tier");
+    }
+}
